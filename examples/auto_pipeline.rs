@@ -1,0 +1,55 @@
+//! auto_pipeline — tendency-informed clustering (paper §5.2 "Pipeline
+//! Integration").
+//!
+//!   cargo run --release --example auto_pipeline
+//!
+//! Runs the full decision pipeline over contrasting workloads: Hopkins
+//! gates unclusterable data, the iVAT image picks k, and VAT-image
+//! agreement routes between K-Means and DBSCAN. Reports the decision and
+//! its quality against ground truth where available.
+
+use std::sync::Arc;
+
+use fast_vat::coordinator::pipeline::{auto_cluster, Choice, PipelineConfig};
+use fast_vat::data::generators::{blobs, circles, gmm, moons, spotify_like, uniform};
+use fast_vat::metrics::{ari, to_isize};
+use fast_vat::runtime::{BlockedEngine, DistanceEngine};
+
+fn main() -> fast_vat::Result<()> {
+    let engine: Arc<dyn DistanceEngine> = Arc::new(BlockedEngine);
+    let cfg = PipelineConfig::default();
+
+    let workloads = vec![
+        blobs(400, 2, 4, 0.3, 1),
+        moons(400, 0.06, 2),
+        circles(400, 0.05, 0.45, 3),
+        gmm(400, 2, 3, 4),
+        uniform(400, 2, 5),
+        spotify_like(400, 6),
+    ];
+
+    println!(
+        "{:<18} {:>7} {:>5}  {:<18} {:>9}",
+        "dataset", "hopkins", "k", "decision", "ARI"
+    );
+    println!("{}", "-".repeat(64));
+    for ds in workloads {
+        let report = auto_cluster(&engine, &ds.points, &cfg)?;
+        let decision = match &report.choice {
+            Choice::NoStructure => "skip (no structure)".to_string(),
+            Choice::KMeans { k } => format!("K-Means (k={k})"),
+            Choice::Dbscan { eps } => format!("DBSCAN (eps={eps:.2})"),
+        };
+        let quality = match (&ds.labels, report.labels.is_empty()) {
+            (Some(truth), false) => {
+                format!("{:.3}", ari(&to_isize(truth), &report.labels))
+            }
+            _ => "-".to_string(),
+        };
+        println!(
+            "{:<18} {:>7.3} {:>5}  {:<18} {:>9}",
+            ds.name, report.hopkins, report.k_estimate, decision, quality
+        );
+    }
+    Ok(())
+}

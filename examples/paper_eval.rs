@@ -1,0 +1,228 @@
+//! paper_eval — the end-to-end evaluation driver.
+//!
+//!   cargo run --release --example paper_eval [-- --no-python]
+//!
+//! Regenerates every table and figure of the paper's evaluation section on
+//! this machine (DESIGN.md §Experiment index):
+//!
+//!   Table 1  — VAT runtime per dataset across the three tiers, + speedups
+//!              (also times the REAL pure-Python baseline via
+//!              python/baseline/pure_vat.py when a Python runtime is
+//!              available; skip with --no-python)
+//!   Table 2  — Hopkins statistic per dataset
+//!   Table 3  — VAT insight vs K-Means vs DBSCAN (ARI/NMI where ground
+//!              truth exists)
+//!   Figures 1–3 — VAT images for Iris, Spotify-like, Blobs as PGM files
+//!              plus ASCII previews
+//!
+//! Outputs land in artifacts/eval/; EXPERIMENTS.md records a pinned run.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fast_vat::bench_util::Table;
+use fast_vat::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
+use fast_vat::data::generators::paper_datasets;
+use fast_vat::data::scale::Scaler;
+use fast_vat::data::Dataset;
+use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
+use fast_vat::metrics::{ari, nmi, to_isize};
+use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::vat;
+use fast_vat::viz::{ascii::to_ascii, downsample, pgm::write_pgm, render};
+
+const SEED: u64 = 42;
+
+fn time_vat(engine: &dyn DistanceEngine, z: &fast_vat::data::Points, reps: usize) -> f64 {
+    // best-of-reps of the FULL pipeline (distances + reorder), matching
+    // python/baseline/pure_vat.py::vat_timed
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let d = engine.pdist(z).expect("pdist");
+        let v = vat(&d);
+        std::hint::black_box(&v.order);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn python_baseline_times(no_python: bool) -> Option<Vec<(String, f64)>> {
+    if no_python {
+        return None;
+    }
+    let out = std::process::Command::new("python")
+        .args(["-m", "baseline.pure_vat"])
+        .current_dir(format!("{}/python", env!("CARGO_MANIFEST_DIR")))
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        eprintln!("(python baseline failed; falling back to naive-rust column)");
+        return None;
+    }
+    let text = String::from_utf8_lossy(&out.stdout);
+    let mut rows = Vec::new();
+    for line in text.lines().skip(1) {
+        // "<name padded to 20>  <seconds>"
+        if line.len() > 20 {
+            let (name, secs) = line.split_at(20);
+            if let Ok(s) = secs.trim().parse::<f64>() {
+                rows.push((name.trim().to_string(), s));
+            }
+        }
+    }
+    (!rows.is_empty()).then_some(rows)
+}
+
+fn main() -> fast_vat::Result<()> {
+    let no_python = std::env::args().any(|a| a == "--no-python");
+    let out_dir = format!("{}/artifacts/eval", env!("CARGO_MANIFEST_DIR"));
+    std::fs::create_dir_all(&out_dir)?;
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+
+    let datasets = paper_datasets(SEED);
+    let naive = NaiveEngine;
+    let blocked = BlockedEngine;
+    let xla = XlaHandle::new(&artifacts)?;
+    xla.warmup()?;
+
+    let mut report = String::new();
+
+    // ------------------------------------------------------------ Table 1
+    println!("== Table 1: execution time (s) and speedup ==");
+    let py_times = python_baseline_times(no_python);
+    if py_times.is_none() {
+        println!("(python column: naive-rust stand-in — see DESIGN.md §Substitutions)");
+    }
+    let mut t1 = Table::new(&[
+        "Dataset",
+        "Python VAT",
+        "Naive (rust)",
+        "Numba-tier (blocked)",
+        "Cython-tier (xla)",
+        "Speedup (xla vs py)",
+    ]);
+    for ds in &datasets {
+        let z = Scaler::standardized(&ds.points);
+        let reps = if ds.points.n() <= 200 { 5 } else { 3 };
+        let t_naive = time_vat(&naive, &z, reps);
+        let t_blocked = time_vat(&blocked, &z, reps);
+        let t_xla = time_vat(&xla, &z, reps);
+        let t_python = py_times
+            .as_ref()
+            .and_then(|rows| {
+                rows.iter()
+                    .find(|(n, _)| n == &ds.name)
+                    .map(|(_, s)| *s)
+            })
+            .unwrap_or(t_naive);
+        t1.row(&[
+            ds.name.clone(),
+            format!("{t_python:.4}"),
+            format!("{t_naive:.4}"),
+            format!("{t_blocked:.4}"),
+            format!("{t_xla:.4}"),
+            format!("{:.2}x", t_python / t_xla.max(1e-12)),
+        ]);
+    }
+    let rendered = t1.render();
+    println!("{rendered}");
+    let _ = writeln!(report, "== Table 1 ==\n{rendered}");
+
+    // ------------------------------------------------------------ Table 2
+    println!("== Table 2: Hopkins scores ==");
+    let mut t2 = Table::new(&["Dataset", "Hopkins Score"]);
+    for ds in &datasets {
+        let z = Scaler::standardized(&ds.points);
+        let h = hopkins_mean(
+            &z,
+            &HopkinsParams {
+                seed: SEED,
+                ..Default::default()
+            },
+            10,
+        )?;
+        t2.row(&[ds.name.clone(), format!("{h:.4}")]);
+    }
+    let rendered = t2.render();
+    println!("{rendered}");
+    let _ = writeln!(report, "== Table 2 ==\n{rendered}");
+
+    // ------------------------------------------------------------ Table 3
+    println!("== Table 3: VAT insight vs K-Means vs DBSCAN ==");
+    let mut t3 = Table::new(&[
+        "Dataset",
+        "VAT Insight",
+        "k est",
+        "KMeans ARI/NMI",
+        "DBSCAN ARI/NMI",
+    ]);
+    let det = BlockDetector::default();
+    let engine: Arc<dyn DistanceEngine> = Arc::new(BlockedEngine);
+    for ds in &datasets {
+        let z = Scaler::standardized(&ds.points);
+        let d = engine.pdist(&z)?;
+        let v = vat(&d);
+        let insight = det.insight(&v);
+        // k read off the iVAT image, as a human analyst would (module docs)
+        let k_est = det.estimate_k(&fast_vat::vat::ivat::ivat(&v).transformed);
+        let k_run = ds.k_true().max(2).min(8);
+        let km = kmeans(
+            &z,
+            &KMeansParams {
+                k: if ds.k_true() > 0 { k_run } else { k_est.max(2) },
+                seed: SEED,
+                ..Default::default()
+            },
+        )?;
+        let eps = suggest_eps(&z, 5, 0.98);
+        let db = dbscan(&z, &DbscanParams { eps, min_pts: 5 })?;
+        let (km_s, db_s) = match &ds.labels {
+            Some(truth) => {
+                let t = to_isize(truth);
+                let kml = to_isize(&km.labels);
+                (
+                    format!("{:.2}/{:.2}", ari(&t, &kml), nmi(&t, &kml)),
+                    format!("{:.2}/{:.2}", ari(&t, &db.labels), nmi(&t, &db.labels)),
+                )
+            }
+            None => ("n/a (unlabeled)".into(), format!("{} clusters", db.clusters)),
+        };
+        t3.row(&[
+            ds.name.clone(),
+            insight,
+            k_est.to_string(),
+            km_s,
+            db_s,
+        ]);
+    }
+    let rendered = t3.render();
+    println!("{rendered}");
+    let _ = writeln!(report, "== Table 3 ==\n{rendered}");
+
+    // --------------------------------------------------------- Figures 1-3
+    println!("== Figures 1-3: VAT images ==");
+    let figures: [(&str, &str); 3] = [
+        ("Iris", "fig1_iris"),
+        ("Spotify (500x500)", "fig2_spotify"),
+        ("Blobs", "fig3_blobs"),
+    ];
+    for (name, stem) in figures {
+        let ds: &Dataset = datasets.iter().find(|d| d.name == name).unwrap();
+        let z = Scaler::standardized(&ds.points);
+        let d = xla.pdist(&z)?; // figures go through the full XLA path
+        let v = vat(&d);
+        let img = render(&v.reordered);
+        let path = format!("{out_dir}/{stem}.pgm");
+        write_pgm(&img, &path)?;
+        println!("{name} -> {path}");
+        println!("{}", to_ascii(&downsample(&img, 96), 30));
+        let _ = writeln!(report, "figure {stem}: {path}");
+    }
+
+    std::fs::write(format!("{out_dir}/report.txt"), &report)?;
+    println!("full report: {out_dir}/report.txt");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: the 60-second tour of the fast-vat API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Generates a small clustered dataset, assesses its tendency three ways
+//! (VAT image, Hopkins statistic, block detection), and prints an ASCII
+//! heatmap you can eyeball — the same artifact the paper's Figure 1 shows
+//! for Iris.
+
+use fast_vat::data::generators::blobs;
+use fast_vat::data::scale::Scaler;
+use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::{ivat::ivat, vat};
+use fast_vat::viz::{ascii::to_ascii, render};
+
+fn main() -> fast_vat::Result<()> {
+    // 1. data: 300 points, 3 Gaussian blobs
+    let ds = blobs(300, 2, 3, 0.35, 7);
+    let z = Scaler::standardized(&ds.points);
+
+    // 2. is it clusterable at all? (paper Table 2)
+    let h = hopkins_mean(&z, &HopkinsParams::default(), 5)?;
+    println!("Hopkins statistic: {h:.3} (>0.75 = significant structure)\n");
+
+    // 3. the VAT image (paper Figures 1-3)
+    let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
+    let v = vat(&d);
+    println!("VAT image ({} points, raw):", z.n());
+    println!("{}", to_ascii(&render(&v.reordered), 32));
+
+    // 4. iVAT sharpening + block detection -> k estimate
+    let iv = ivat(&v);
+    let det = BlockDetector::default();
+    let blocks = det.detect(&iv.transformed);
+    println!("iVAT image (path-max sharpened):");
+    println!("{}", to_ascii(&render(&iv.transformed), 32));
+    println!("detected blocks: {} -> k estimate = {}", blocks.len(), blocks.len());
+    println!("insight: {}", det.insight(&v));
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! scaling_study — the O(n²) complexity claims, measured (paper §3.1/§5.1).
+//!
+//!   cargo run --release --example scaling_study
+//!
+//! Sweeps n and times each pipeline stage per engine, demonstrating:
+//!   * distance stage dominates and scales ~n²·d,
+//!   * the optimized tiers shift the constant, not the exponent (the
+//!     paper's own §5.1 admission),
+//!   * sVAT breaks the n² wall by sampling (paper §5.2), at bounded
+//!     structural error.
+
+use std::time::Instant;
+
+use fast_vat::bench_util::Table;
+use fast_vat::data::generators::separated_blobs;
+use fast_vat::data::scale::Scaler;
+use fast_vat::dissimilarity::Metric;
+use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::vat::svat::svat;
+use fast_vat::vat::vat;
+
+fn main() -> fast_vat::Result<()> {
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let xla = XlaHandle::new(&artifacts)?;
+    xla.warmup()?;
+    let naive = NaiveEngine;
+    let blocked = BlockedEngine;
+
+    let mut table = Table::new(&[
+        "n",
+        "naive dist(s)",
+        "blocked dist(s)",
+        "xla dist(s)",
+        "prim(s)",
+        "svat s=64(s)",
+    ]);
+    for n in [128usize, 256, 512, 1024, 2048] {
+        let ds = separated_blobs(n, 4, 0.4, 10.0, n as u64);
+        let z = Scaler::standardized(&ds.points);
+
+        let time = |f: &mut dyn FnMut()| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        };
+
+        let t_naive = time(&mut || {
+            std::hint::black_box(naive.pdist(&z).unwrap());
+        });
+        let mut d_keep = None;
+        let t_blocked = time(&mut || {
+            d_keep = Some(blocked.pdist(&z).unwrap());
+        });
+        let t_xla = time(&mut || {
+            std::hint::black_box(xla.pdist(&z).unwrap());
+        });
+        let d = d_keep.unwrap();
+        let t_prim = time(&mut || {
+            std::hint::black_box(vat(&d));
+        });
+        let t_svat = time(&mut || {
+            std::hint::black_box(svat(&z, 64, Metric::Euclidean, 1));
+        });
+
+        table.row(&[
+            n.to_string(),
+            format!("{t_naive:.4}"),
+            format!("{t_blocked:.4}"),
+            format!("{t_xla:.4}"),
+            format!("{t_prim:.4}"),
+            format!("{t_svat:.4}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("note: distance columns scale ~n^2*d; prim ~n^2; svat ~n*s.");
+    Ok(())
+}

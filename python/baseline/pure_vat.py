@@ -1,0 +1,165 @@
+"""The paper's pure-Python VAT baseline — the "Python VAT" column of Table 1.
+
+This is a faithful re-creation of the baseline the paper benchmarks against:
+interpreted CPython, per-element loops, Python-object arithmetic, no numpy in
+the hot loops.  It exists so the Table-1 harness can time the *real*
+interpreted baseline rather than inferring it (DESIGN.md §Substitutions row 1).
+
+Algorithm (Bezdek & Hathaway 2002, paper §3.1):
+  1. R[i][j] = ||x_i - x_j||_2 for all pairs           (O(n^2 d))
+  2. Prim-based MST ordering of indices               (O(n^2))
+  3. R*[a][b] = R[P[a]][P[b]]                          (O(n^2))
+
+`vat(X)` returns (R_star, order) exactly as the optimized engines do, so the
+cross-implementation identity tests can diff permutations directly.
+
+Run as a module to produce Table-1 baseline timings:
+  python -m baseline.pure_vat            # all 7 paper datasets
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+
+def pairwise_distances(x: list[list[float]]) -> list[list[float]]:
+    """Full Euclidean distance matrix with pure-Python loops."""
+    n = len(x)
+    d = len(x[0]) if n else 0
+    r = [[0.0] * n for _ in range(n)]
+    for i in range(n):
+        xi = x[i]
+        for j in range(i + 1, n):
+            xj = x[j]
+            s = 0.0
+            for k in range(d):
+                t = xi[k] - xj[k]
+                s += t * t
+            v = math.sqrt(s)
+            r[i][j] = v
+            r[j][i] = v
+    return r
+
+
+def vat_order(r: list[list[float]]) -> list[int]:
+    """Prim-based VAT index ordering.
+
+    Seed: the row containing the global maximum dissimilarity (the original
+    VAT heuristic).  Then repeatedly append the unselected point closest to
+    the selected set.  Ties break toward the lower index — this matches the
+    Rust engines (`rust/src/vat/`), keeping permutations comparable.
+    """
+    n = len(r)
+    if n == 0:
+        return []
+    # argmax over the matrix -> seed row
+    best_i, best_v = 0, -1.0
+    for i in range(n):
+        ri = r[i]
+        for j in range(n):
+            if ri[j] > best_v:
+                best_v = ri[j]
+                best_i = i
+    order = [best_i]
+    selected = [False] * n
+    selected[best_i] = True
+    # dmin[j] = min distance from j to the selected set
+    dmin = list(r[best_i])
+    for _ in range(n - 1):
+        best_j, best_d = -1, math.inf
+        for j in range(n):
+            if not selected[j] and dmin[j] < best_d:
+                best_d = dmin[j]
+                best_j = j
+        order.append(best_j)
+        selected[best_j] = True
+        rj = r[best_j]
+        for j in range(n):
+            if not selected[j] and rj[j] < dmin[j]:
+                dmin[j] = rj[j]
+    return order
+
+
+def reorder(r: list[list[float]], order: list[int]) -> list[list[float]]:
+    """R*[a][b] = R[order[a]][order[b]]."""
+    return [[r[a][b] for b in order] for a in order]
+
+
+def vat(x: list[list[float]]):
+    """Full pure-Python VAT: returns (R_star, order)."""
+    r = pairwise_distances(x)
+    order = vat_order(r)
+    return reorder(r, order), order
+
+
+def vat_timed(x: list[list[float]], repeats: int = 1) -> tuple[float, list[int]]:
+    """Best-of-`repeats` wall time of the full VAT pipeline, plus the order."""
+    best = math.inf
+    order: list[int] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = pairwise_distances(x)
+        order = vat_order(r)
+        reorder(r, order)
+        best = min(best, time.perf_counter() - t0)
+    return best, order
+
+
+def _paper_datasets():
+    """The 7 Table-1 workloads, generated to the paper's (n, d) spec.
+
+    Mirrors rust/src/data/ generators (same shapes; seeds differ — Table 1
+    depends only on (n, d), see DESIGN.md §Substitutions).
+    """
+    import random
+
+    rng = random.Random(42)
+
+    def randn():
+        return rng.gauss(0.0, 1.0)
+
+    def blobs(n, d, k, spread=0.4):
+        centers = [[rng.uniform(-4, 4) for _ in range(d)] for _ in range(k)]
+        return [
+            [c + spread * randn() for c in centers[i % k]] for i in range(n)
+        ]
+
+    def moons(n, noise=0.08):
+        pts = []
+        for i in range(n):
+            t = math.pi * rng.random()
+            if i % 2 == 0:
+                pts.append([math.cos(t) + noise * randn(), math.sin(t) + noise * randn()])
+            else:
+                pts.append([1 - math.cos(t) + noise * randn(), 0.5 - math.sin(t) + noise * randn()])
+        return pts
+
+    def circles(n, noise=0.06):
+        pts = []
+        for i in range(n):
+            t = 2 * math.pi * rng.random()
+            rr = 1.0 if i % 2 == 0 else 0.45
+            pts.append([rr * math.cos(t) + noise * randn(), rr * math.sin(t) + noise * randn()])
+        return pts
+
+    return [
+        ("Iris", blobs(150, 4, 3)),
+        ("Spotify (500x500)", blobs(500, 13, 1, spread=2.0)),
+        ("Blobs", blobs(500, 2, 4)),
+        ("Circles", circles(500)),
+        ("GMM", blobs(500, 2, 3, spread=1.0)),
+        ("Mall Customers", blobs(200, 3, 5, spread=0.8)),
+        ("Moons", moons(500)),
+    ]
+
+
+def main() -> None:
+    print(f"{'Dataset':<20} {'Python VAT (s)':>14}")
+    for name, x in _paper_datasets():
+        t, _ = vat_timed(x)
+        print(f"{name:<20} {t:>14.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""AOT pipeline: lower every L2 graph at every size bucket to HLO text.
+
+Run once at build time (`make artifacts`); Python is never on the request
+path.  Interchange format is HLO *text*, NOT `.serialize()` — jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs:
+  artifacts/<graph>_<bucket>.hlo.txt   one per (graph, bucket)
+  artifacts/manifest.txt               one line per artifact, key=value
+                                       tokens parsed by rust/src/runtime/
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--quick]
+
+--quick builds only the smallest bucket of each graph (fast test cycles).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Size buckets shared with rust/src/runtime/bucket.rs (keep in sync).
+# d is the padded feature width; m the Hopkins probe count; k the max
+# centroid count. Rust pads any request up to the smallest bucket that fits.
+FEATURE_DIM = 16
+KMEANS_K = 16
+N_BUCKETS = (64, 256, 512, 1024, 2048)
+HOPKINS_M = {64: 32, 256: 32, 512: 64, 1024: 128, 2048: 256}
+
+
+def buckets(quick: bool = False):
+    ns = N_BUCKETS[:1] if quick else N_BUCKETS
+    for n in ns:
+        yield {"n": n, "d": FEATURE_DIM, "m": HOPKINS_M[n], "k": KMEANS_K}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Which bucket keys parameterize each graph (also the manifest fields).
+GRAPH_KEYS = {
+    "pdist": ("n", "d"),
+    "pdist_mm": ("n", "d"),
+    "hopkins": ("n", "m", "d"),
+    "kmeans_assign": ("n", "k", "d"),
+}
+
+
+def artifact_name(graph: str, bucket: dict) -> str:
+    """File stem for a (graph, bucket) pair; mirrored in Rust."""
+    suffix = "_".join(f"{k}{bucket[k]}" for k in GRAPH_KEYS[graph])
+    return f"{graph}_{suffix}"
+
+
+def lower_one(graph: str, bucket: dict, out_dir: str) -> str:
+    """Lower one graph at one bucket; write HLO text; return manifest line."""
+    fn, argspec = model.GRAPHS[graph]
+    args = [
+        jax.ShapeDtypeStruct(shape, dtype) for _, shape, dtype in argspec(bucket)
+    ]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    stem = artifact_name(graph, bucket)
+    path = os.path.join(out_dir, f"{stem}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    kv = " ".join(f"{k}={bucket[k]}" for k in GRAPH_KEYS[graph])
+    line = f"{graph} {kv} file={stem}.hlo.txt"
+    print(
+        f"  {stem}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s"
+    )
+    return line
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="smallest bucket only")
+    ap.add_argument(
+        "--graphs",
+        default=",".join(model.GRAPHS),
+        help="comma-separated subset of graphs to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    graphs = [g.strip() for g in args.graphs.split(",") if g.strip()]
+    unknown = set(graphs) - set(model.GRAPHS)
+    if unknown:
+        raise SystemExit(f"unknown graphs: {sorted(unknown)}")
+
+    lines = []
+    for graph in graphs:
+        print(f"{graph}:")
+        for bucket in buckets(args.quick):
+            lines.append(lower_one(graph, bucket, args.out_dir))
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# graph key=value... file=<hlo text>; built by compile/aot.py\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {manifest} ({len(lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

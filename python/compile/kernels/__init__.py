@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for Fast-VAT's compute hot spots.
+
+  pdist     — tiled pairwise Euclidean distance matrix (the VAT hot spot)
+  mindist   — chunked nearest-neighbour distance (Hopkins u/w statistics)
+  assign    — point-to-centroid distances (K-Means assignment)
+  ref       — pure-jnp oracles the kernels are validated against
+"""
+
+from . import ref  # noqa: F401
+from .assign import assign_dist  # noqa: F401
+from .mindist import mindist, mindist_excl  # noqa: F401
+from .pdist import pdist  # noqa: F401

@@ -1,0 +1,132 @@
+"""Pallas chunked min-distance kernel — the Hopkins-statistic inner loop.
+
+The Hopkins statistic (paper §4.2) needs, for each probe point, the distance
+to its nearest neighbour in the dataset.  The kernel runs a 2-D grid: probes
+are tiled along the first grid axis, dataset rows along the second; the
+second axis is a *reduction* axis — each (i, j) step folds the block minimum
+of tile j into the running per-probe minimum for probe tile i.  o_ref is
+revisited across j (same index_map output for all j), which Pallas executes
+sequentially over the reduction dimension.
+
+Two variants are exported:
+  * mindist       — plain nearest-neighbour distance (u-statistic, synthetic
+                    probes that are never dataset rows);
+  * mindist_excl  — probes are rows of x; each probe's own column (its global
+                    row index, passed as an int32 vector) is masked to a
+                    large sentinel before the min (w-statistic).  Index
+                    masking is exact even though the f32 dot-trick makes the
+                    self-distance slightly nonzero.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_PROBE_BLOCK = 32
+DEFAULT_DATA_BLOCK = 256
+
+# Large finite sentinel (f32-safe). A masked column must never win a min;
+# keeping it finite avoids inf constants that some passes fold poorly.
+_BIG = 3.0e38
+
+
+def _block_dist(u, x):
+    """(BM, BN) Euclidean distances via the MXU dot-trick decomposition."""
+    cross = jnp.dot(u, x.T, preferred_element_type=jnp.float32)
+    un = jnp.sum(u * u, axis=1, keepdims=True)
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    return jnp.sqrt(jnp.maximum(un + xn.T - 2.0 * cross, 0.0))
+
+
+def _fold(o_ref, j, blk_min):
+    """Fold a block minimum into the running per-probe minimum."""
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = blk_min
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], blk_min)
+
+
+def _mindist_kernel(u_ref, x_ref, o_ref):
+    d = _block_dist(u_ref[...], x_ref[...])
+    _fold(o_ref, pl.program_id(1), jnp.min(d, axis=1))
+
+
+def _mindist_excl_kernel(bn: int, u_ref, idx_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+    d = _block_dist(u_ref[...], x_ref[...])  # (BM, BN)
+    # Global column indices of this data tile; mask each probe's own row.
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(cols == idx_ref[...][:, None], _BIG, d)
+    _fold(o_ref, j, jnp.min(d, axis=1))
+
+
+def _grid(m, n, bm, bn):
+    bm = min(bm, m)
+    bn = min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"shapes ({m},{n}) not multiples of blocks ({bm},{bn})")
+    return bm, bn, (m // bm, n // bn)
+
+
+@functools.partial(jax.jit, static_argnames=("probe_block", "data_block"))
+def mindist(
+    u: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    probe_block: int = DEFAULT_PROBE_BLOCK,
+    data_block: int = DEFAULT_DATA_BLOCK,
+) -> jnp.ndarray:
+    """Min Euclidean distance from each probe u[i] to any row of x. [m]."""
+    (m, d), (n, _) = u.shape, x.shape
+    bm, bn, grid = _grid(m, n, probe_block, data_block)
+    return pl.pallas_call(
+        _mindist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(u, x)
+
+
+@functools.partial(jax.jit, static_argnames=("probe_block", "data_block"))
+def mindist_excl(
+    u: jnp.ndarray,
+    idx: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    probe_block: int = DEFAULT_PROBE_BLOCK,
+    data_block: int = DEFAULT_DATA_BLOCK,
+) -> jnp.ndarray:
+    """Min distance from probe u[i] (= x[idx[i]]) to any OTHER row of x. [m].
+
+    Args:
+      u: [m, d] probe points (rows of x).
+      idx: [m] int32 global row index of each probe within x.
+      x: [n, d] dataset.
+    """
+    (m, d), (n, _) = u.shape, x.shape
+    bm, bn, grid = _grid(m, n, probe_block, data_block)
+    return pl.pallas_call(
+        functools.partial(_mindist_excl_kernel, bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(u, idx, x)

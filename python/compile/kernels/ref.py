@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written with
+plain jax.numpy broadcasting — no Pallas, no tiling, no tricks. The pytest
+suite asserts `kernels.<name> ≈ ref.<name>` across a hypothesis-driven sweep of
+shapes and dtypes; these functions are therefore the single source of truth for
+the kernels' mathematical behaviour (paper §3.1: R_ij = ||x_i - x_j||_2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pdist(x: jnp.ndarray) -> jnp.ndarray:
+    """Full pairwise Euclidean distance matrix.
+
+    Args:
+      x: [n, d] points.
+    Returns:
+      [n, n] matrix with D[i, j] = ||x[i] - x[j]||_2, zero diagonal.
+    """
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def pdist_sq(x: jnp.ndarray) -> jnp.ndarray:
+    """Squared pairwise Euclidean distances (no sqrt)."""
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+
+
+def cross_dist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Rectangular distance matrix between two point sets.
+
+    Args:
+      a: [m, d] points.
+      b: [n, d] points.
+    Returns:
+      [m, n] matrix with D[i, j] = ||a[i] - b[j]||_2.
+    """
+    diff = a[:, None, :] - b[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def mindist(u: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Min distance from each probe in u to any point in x. Shape [m]."""
+    return jnp.min(cross_dist(u, x), axis=1)
+
+
+def mindist_excl(
+    u: jnp.ndarray, idx: jnp.ndarray, x: jnp.ndarray
+) -> jnp.ndarray:
+    """Min distance from each probe to x, excluding the probe's own row.
+
+    Used for the Hopkins w-statistic where the probes are themselves rows of
+    x: probe i is row idx[i] of x and column idx[i] is masked to +inf before
+    the min.  Index masking (rather than an epsilon on the distance) is exact
+    under f32 dot-trick cancellation and keeps true near-duplicates intact.
+    """
+    d = cross_dist(u, x)
+    cols = jnp.arange(x.shape[0])[None, :]
+    d = jnp.where(cols == idx[:, None], jnp.inf, d)
+    return jnp.min(d, axis=1)
+
+
+def assign_dist(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Point-to-centroid distance block [n, k] (K-Means assignment input)."""
+    return cross_dist(x, c)

@@ -1,0 +1,106 @@
+"""L2: the JAX compute graphs exported to the Rust runtime.
+
+Each public function here is a *graph*: a pure, shape-static jax function that
+composes the L1 Pallas kernels (python/compile/kernels/) and is lowered once
+by aot.py to HLO text under artifacts/.  The Rust coordinator loads these via
+PJRT and never touches Python again.
+
+Exported graphs (all f32, shapes fixed per AOT bucket):
+
+  pdist_graph(x)                  -> (D,)            the VAT hot spot (Pallas)
+  pdist_mm_graph(x)               -> (D,)            dot-trick jnp variant
+                                                     (ablation A5: Pallas
+                                                     tiling vs plain XLA
+                                                     fusion of the same math)
+  hopkins_graph(u, s, x)          -> (u_min, w_min)  both Hopkins statistics
+  kmeans_assign_graph(x, c)       -> (D_nk,)         assignment distances
+
+Conventions shared with rust/src/runtime/ (keep in sync!):
+  * every graph returns a tuple (lowered with return_tuple=True; Rust unwraps
+    with to_tupleN);
+  * padding: callers zero-pad the feature axis to the bucket d and pad extra
+    rows arbitrarily for pdist/assign (the un-padded block of the output is
+    unaffected — property-tested in python/tests/test_padding.py); for
+    hopkins_graph padded X rows must be placed >= PAD_OFFSET away from the
+    data so they never win a min (Rust standardizes to unit variance first,
+    so PAD_OFFSET = 1e4 is > 1e3 sigma away from any real point).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import assign_dist, mindist, mindist_excl, pdist
+
+# Placement offset for pad rows fed to hopkins_graph (see module docstring).
+PAD_OFFSET = 1.0e4
+
+
+def pdist_graph(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Pairwise distance matrix via the Pallas tiled kernel. -> ([n,n],)"""
+    return (pdist(x),)
+
+
+def pdist_mm_graph(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Same math as pdist_graph but left to XLA's own fusion.
+
+    ||x_i - x_j||^2 = |x_i|^2 + |x_j|^2 - 2 x_i.x_j as one [n,d]@[d,n] dot —
+    no [n,n,d] broadcast is ever materialized. Exported alongside the Pallas
+    variant so benches/ablation can compare hand-tiling vs XLA fusion.
+    """
+    cross = jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+    nrm = jnp.sum(x * x, axis=1, keepdims=True)
+    sq = nrm + nrm.T - 2.0 * cross
+    return (jnp.sqrt(jnp.maximum(sq, 0.0)),)
+
+
+def hopkins_graph(
+    u: jnp.ndarray, s: jnp.ndarray, s_idx: jnp.ndarray, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Hopkins nearest-neighbour distances for synthetic and real probes.
+
+    Args:
+      u: [m, d] synthetic probes uniform over the data bounding box.
+      s: [m, d] sampled dataset rows (probes are rows of x).
+      s_idx: [m] int32 row index of each sampled probe within x (exact
+        self-exclusion for the w-statistic).
+      x: [n, d] dataset.
+    Returns:
+      (u_min[m], w_min[m]); Rust folds them into
+      H = sum(u_min^d) / (sum(u_min^d) + sum(w_min^d)).
+    """
+    u_min = mindist(u, x)
+    w_min = mindist_excl(s, s_idx, x)
+    return (u_min, w_min)
+
+
+def kmeans_assign_graph(x: jnp.ndarray, c: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """K-Means assignment distances via the Pallas kernel. -> ([n,k],)"""
+    return (assign_dist(x, c),)
+
+
+#: name -> (fn, arg-builder) registry used by aot.py; the arg builder maps a
+#: bucket dict to (name, shape, dtype) triples the graph is lowered with.
+GRAPHS = {
+    "pdist": (pdist_graph, lambda b: (("x", (b["n"], b["d"]), jnp.float32),)),
+    "pdist_mm": (
+        pdist_mm_graph,
+        lambda b: (("x", (b["n"], b["d"]), jnp.float32),),
+    ),
+    "hopkins": (
+        hopkins_graph,
+        lambda b: (
+            ("u", (b["m"], b["d"]), jnp.float32),
+            ("s", (b["m"], b["d"]), jnp.float32),
+            ("s_idx", (b["m"],), jnp.int32),
+            ("x", (b["n"], b["d"]), jnp.float32),
+        ),
+    ),
+    "kmeans_assign": (
+        kmeans_assign_graph,
+        lambda b: (
+            ("x", (b["n"], b["d"]), jnp.float32),
+            ("c", (b["k"], b["d"]), jnp.float32),
+        ),
+    ),
+}

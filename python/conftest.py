@@ -1,0 +1,5 @@
+"""Make `compile` and `baseline` importable when pytest runs from repo root."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,58 @@
+"""AOT pipeline tests: artifact naming, manifest format, bucket registry."""
+
+from __future__ import annotations
+
+import os
+
+from compile import aot
+
+
+def test_bucket_registry_consistency():
+    bs = list(aot.buckets())
+    assert [b["n"] for b in bs] == list(aot.N_BUCKETS)
+    for b in bs:
+        assert b["d"] == aot.FEATURE_DIM
+        assert b["k"] == aot.KMEANS_K
+        assert b["m"] == aot.HOPKINS_M[b["n"]]
+        assert b["m"] <= b["n"], "probe count must not exceed dataset bucket"
+
+
+def test_quick_is_smallest_bucket_only():
+    bs = list(aot.buckets(quick=True))
+    assert len(bs) == 1 and bs[0]["n"] == aot.N_BUCKETS[0]
+
+
+def test_artifact_names_are_unique_and_stable():
+    names = [
+        aot.artifact_name(g, b) for g in aot.GRAPH_KEYS for b in aot.buckets()
+    ]
+    assert len(names) == len(set(names))
+    assert aot.artifact_name("pdist", {"n": 512, "d": 16}) == "pdist_n512_d16"
+    assert (
+        aot.artifact_name("hopkins", {"n": 1024, "m": 128, "d": 16})
+        == "hopkins_n1024_m128_d16"
+    )
+
+
+def test_lower_one_writes_artifact_and_manifest_line(tmp_path):
+    bucket = {"n": 64, "d": 16, "m": 32, "k": 16}
+    line = aot.lower_one("pdist_mm", bucket, str(tmp_path))
+    assert line == "pdist_mm n=64 d=16 file=pdist_mm_n64_d16.hlo.txt"
+    path = tmp_path / "pdist_mm_n64_d16.hlo.txt"
+    assert path.exists() and path.stat().st_size > 100
+    text = path.read_text()
+    assert "ENTRY" in text
+
+
+def test_manifest_lines_parse_as_key_value(tmp_path):
+    """The exact contract rust/src/runtime/manifest.rs parses."""
+    bucket = {"n": 64, "d": 16, "m": 32, "k": 16}
+    for graph in aot.GRAPH_KEYS:
+        line = aot.lower_one(graph, bucket, str(tmp_path))
+        head, *tokens = line.split()
+        assert head == graph
+        kv = dict(t.split("=", 1) for t in tokens)
+        assert "file" in kv and kv["file"].endswith(".hlo.txt")
+        for key in aot.GRAPH_KEYS[graph]:
+            assert kv[key].isdigit()
+        assert os.path.exists(tmp_path / kv["file"])

@@ -1,0 +1,162 @@
+"""Kernel-vs-oracle correctness — the CORE signal for L1.
+
+Every Pallas kernel is swept against its pure-jnp oracle in ref.py across a
+hypothesis-driven space of shapes, scales and seeds.  Tolerances: the kernels
+use the dot-trick decomposition, whose f32 cancellation error near zero
+distance is ~sqrt(|x|^2 * eps_f32) — we assert both an absolute tolerance on
+distances and exact agreement on *squared* distances within rtol.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign_dist, mindist, mindist_excl, pdist, ref
+
+# Distances computed by the dot-trick on standardized-scale data: absolute
+# error bounded by sqrt(norm^2 * k * eps_f32) ~ 5e-3 at d=16, |x|~4.
+ATOL = 5e-3
+RTOL = 1e-4
+
+
+def _points(seed: int, n: int, d: int, scale: float = 1.0) -> np.ndarray:
+    return (scale * np.random.RandomState(seed).randn(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------- pdist ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([32, 64, 128, 256]),
+    d=st.sampled_from([2, 3, 4, 8, 16]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_pdist_matches_ref(seed, n, d, scale):
+    x = _points(seed, n, d, scale)
+    got = np.asarray(pdist(x))
+    want = np.asarray(ref.pdist(x))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL * scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pdist_properties(seed):
+    x = _points(seed, 128, 8)
+    d = np.asarray(pdist(x))
+    assert (d >= 0).all(), "distances must be non-negative"
+    np.testing.assert_allclose(d, d.T, rtol=0, atol=0)  # exact symmetry
+    assert np.abs(np.diag(d)).max() < ATOL, "diagonal ~ 0"
+
+
+def test_pdist_block_sizes_agree():
+    """Tiling must not change the result: sweep block sizes."""
+    x = _points(7, 256, 16)
+    base = np.asarray(pdist(x, block=256))
+    for block in (32, 64, 128):
+        # different tilings change f32 summation order; diagonal cancellation
+        # noise is bounded by ATOL
+        np.testing.assert_allclose(
+            np.asarray(pdist(x, block=block)), base, rtol=1e-5, atol=ATOL
+        )
+
+
+def test_pdist_rejects_ragged_block():
+    with pytest.raises(ValueError, match="not a multiple"):
+        pdist(_points(0, 100, 4), block=64)
+
+
+def test_pdist_two_far_clusters_structure():
+    """Sanity anchor: two separated blobs -> bimodal distance matrix."""
+    rs = np.random.RandomState(0)
+    a = rs.randn(32, 4).astype(np.float32)
+    b = (rs.randn(32, 4) + 50.0).astype(np.float32)
+    d = np.asarray(pdist(np.vstack([a, b])))
+    within = max(d[:32, :32].max(), d[32:, 32:].max())
+    across = d[:32, 32:].min()
+    assert across > 5 * within
+
+
+# -------------------------------------------------------------- mindist ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([32, 64]),
+    n=st.sampled_from([64, 256, 512]),
+    d=st.sampled_from([2, 8, 16]),
+)
+def test_mindist_matches_ref(seed, m, n, d):
+    u = _points(seed, m, d)
+    x = _points(seed + 1, n, d)
+    got = np.asarray(mindist(u, x))
+    want = np.asarray(ref.mindist(u, x))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([32, 64]),
+    n=st.sampled_from([256, 512]),
+)
+def test_mindist_excl_matches_ref(seed, m, n):
+    rs = np.random.RandomState(seed)
+    x = _points(seed, n, 16)
+    idx = rs.choice(n, m, replace=False).astype(np.int32)
+    u = x[idx]
+    got = np.asarray(mindist_excl(u, idx, x))
+    want = np.asarray(ref.mindist_excl(u, idx, x))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_mindist_excl_skips_exact_self_only():
+    """A true duplicate at another index must still be found (dist 0)."""
+    x = _points(3, 64, 8)
+    x[10] = x[42]  # duplicate pair
+    idx = np.array([10], dtype=np.int32)
+    got = float(mindist_excl(x[idx], idx, x)[0])
+    # nearest-other is the duplicate at index 42 -> ~0 (dot-trick atol)
+    assert got < ATOL
+
+
+def test_mindist_reduction_order_invariance():
+    """Folding over data tiles must equal a single-tile min."""
+    u, x = _points(1, 32, 16), _points(2, 512, 16)
+    one = np.asarray(mindist(u, x, data_block=512))
+    for db in (64, 128, 256):
+        np.testing.assert_allclose(
+            np.asarray(mindist(u, x, data_block=db)), one, rtol=1e-6, atol=1e-6
+        )
+
+
+# --------------------------------------------------------------- assign ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 128, 256]),
+    k=st.sampled_from([2, 4, 8, 16]),
+    d=st.sampled_from([2, 8, 16]),
+)
+def test_assign_matches_ref(seed, n, k, d):
+    x = _points(seed, n, d)
+    c = _points(seed + 1, k, d)
+    got = np.asarray(assign_dist(x, c))
+    want = np.asarray(ref.assign_dist(x, c))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_assign_argmin_matches_bruteforce():
+    """The downstream consumer is argmin — check label agreement."""
+    x = _points(11, 256, 8)
+    c = _points(12, 8, 8)
+    got = np.asarray(assign_dist(x, c)).argmin(axis=1)
+    want = np.asarray(ref.assign_dist(x, c)).argmin(axis=1)
+    # near-ties may legitimately flip; require >99% agreement
+    assert (got == want).mean() > 0.99

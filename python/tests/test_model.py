@@ -1,0 +1,85 @@
+"""L2 graph tests: composition, shapes, registry consistency."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _pts(seed, n, d):
+    return np.random.RandomState(seed).randn(n, d).astype(np.float32)
+
+
+def test_graphs_registry_covers_all_exports():
+    assert set(model.GRAPHS) == {"pdist", "pdist_mm", "hopkins", "kmeans_assign"}
+    assert set(aot.GRAPH_KEYS) == set(model.GRAPHS)
+
+
+def test_argspecs_match_graph_arity():
+    bucket = {"n": 64, "d": 16, "m": 32, "k": 16}
+    for name, (fn, argspec) in model.GRAPHS.items():
+        spec = argspec(bucket)
+        args = [jnp.zeros(shape, dtype) for _, shape, dtype in spec]
+        out = fn(*args)
+        assert isinstance(out, tuple), f"{name} must return a tuple"
+
+
+def test_pdist_graph_equals_mm_graph():
+    """The Pallas tiling and the XLA-fused dot-trick are the same math."""
+    x = _pts(0, 256, 16)
+    (a,) = model.pdist_graph(x)
+    (b,) = model.pdist_mm_graph(x)
+    # same math, different f32 summation order; diagonal cancellation ~5e-3
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=5e-3)
+
+
+def test_hopkins_graph_statistic_behaviour():
+    """End statistic: clustered data -> H well above 0.5; uniform -> ~0.5."""
+    rs = np.random.RandomState(0)
+    d = 16
+
+    def hopkins(x, seed):
+        r = np.random.RandomState(seed)
+        m = 32
+        n = x.shape[0]
+        lo, hi = x.min(0), x.max(0)
+        u = (r.rand(m, d) * (hi - lo) + lo).astype(np.float32)
+        idx = r.choice(n, m, replace=False).astype(np.int32)
+        u_min, w_min = model.hopkins_graph(u, x[idx], idx, x)
+        us, ws = float(np.sum(np.asarray(u_min) ** d)), float(
+            np.sum(np.asarray(w_min) ** d)
+        )
+        return us / (us + ws)
+
+    uniform = rs.rand(256, d).astype(np.float32)
+    clustered = np.vstack(
+        [0.05 * rs.randn(128, d) - 2, 0.05 * rs.randn(128, d) + 2]
+    ).astype(np.float32)
+    h_uni = np.mean([hopkins(uniform, s) for s in range(5)])
+    h_clu = np.mean([hopkins(clustered, s) for s in range(5)])
+    assert h_clu > 0.9, f"clustered Hopkins {h_clu}"
+    assert 0.3 < h_uni < 0.8, f"uniform Hopkins {h_uni}"
+
+
+def test_lowering_produces_hlo_entry():
+    bucket = {"n": 64, "d": 16, "m": 32, "k": 16}
+    for name, (fn, argspec) in model.GRAPHS.items():
+        args = [
+            jax.ShapeDtypeStruct(shape, dtype)
+            for _, shape, dtype in argspec(bucket)
+        ]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert "ENTRY" in text, f"{name}: no ENTRY in HLO text"
+        assert "f32[64,16]" in text or "f32[32,16]" in text
+
+
+def test_kmeans_assign_graph_matches_ref():
+    x, c = _pts(5, 128, 16), _pts(6, 16, 16)
+    (d,) = model.kmeans_assign_graph(x, c)
+    np.testing.assert_allclose(
+        np.asarray(d), np.asarray(ref.assign_dist(x, c)), rtol=1e-4, atol=5e-3
+    )

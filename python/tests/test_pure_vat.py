@@ -1,0 +1,100 @@
+"""Pure-Python VAT baseline tests — the Table-1 'Python VAT' column.
+
+The baseline must be *correct* VAT (permutation validity, block structure,
+agreement with an independent numpy re-implementation) so that Table-1 times
+compare identical algorithms, as the paper claims ("identical outputs").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from baseline import pure_vat
+
+
+def _numpy_vat_order(r: np.ndarray) -> list[int]:
+    """Independent numpy reference of the Prim-based VAT ordering."""
+    n = r.shape[0]
+    seed = int(np.unravel_index(np.argmax(r), r.shape)[0])
+    order = [seed]
+    selected = np.zeros(n, bool)
+    selected[seed] = True
+    dmin = r[seed].copy()
+    for _ in range(n - 1):
+        masked = np.where(selected, np.inf, dmin)
+        j = int(np.argmin(masked))  # np.argmin breaks ties toward low index
+        order.append(j)
+        selected[j] = True
+        dmin = np.minimum(dmin, r[j])
+    return order
+
+
+def _two_blobs(seed=0, n=30):
+    rs = np.random.RandomState(seed)
+    a = rs.randn(n, 2) * 0.3
+    b = rs.randn(n, 2) * 0.3 + 10.0
+    return np.vstack([a, b])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(5, 60))
+def test_order_is_permutation(seed, n):
+    x = np.random.RandomState(seed).randn(n, 3).tolist()
+    r = pure_vat.pairwise_distances(x)
+    order = pure_vat.vat_order(r)
+    assert sorted(order) == list(range(n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(5, 50))
+def test_order_matches_numpy_reference(seed, n):
+    x = np.random.RandomState(seed).randn(n, 4)
+    r_np = np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1))
+    r_py = pure_vat.pairwise_distances(x.tolist())
+    np.testing.assert_allclose(np.array(r_py), r_np, rtol=1e-12, atol=1e-12)
+    assert pure_vat.vat_order(r_py) == _numpy_vat_order(r_np)
+
+
+def test_reorder_is_gather():
+    x = np.random.RandomState(1).randn(12, 2)
+    r = pure_vat.pairwise_distances(x.tolist())
+    order = pure_vat.vat_order(r)
+    rs = pure_vat.reorder(r, order)
+    rn = np.array(r)[np.ix_(order, order)]
+    np.testing.assert_allclose(np.array(rs), rn)
+
+
+def test_two_cluster_block_structure():
+    """After reordering, each cluster occupies a contiguous index range."""
+    x = _two_blobs()
+    rs, order = pure_vat.vat(x.tolist())
+    labels = [0 if i < 30 else 1 for i in order]
+    # all of one cluster then all of the other (either order)
+    flips = sum(a != b for a, b in zip(labels, labels[1:]))
+    assert flips == 1, f"expected one label transition, got {flips}"
+    rsn = np.array(rs)
+    within = max(rsn[:30, :30].max(), rsn[30:, 30:].max())
+    across = rsn[:30, 30:].min()
+    assert across > within
+
+
+def test_empty_and_single_point():
+    assert pure_vat.vat_order([]) == []
+    assert pure_vat.vat_order([[0.0]]) == [0]
+
+
+def test_vat_timed_returns_positive():
+    x = np.random.RandomState(0).randn(40, 2).tolist()
+    t, order = pure_vat.vat_timed(x)
+    assert t > 0 and sorted(order) == list(range(40))
+
+
+def test_paper_datasets_shapes():
+    ds = dict(pure_vat._paper_datasets())
+    assert len(ds["Iris"]) == 150 and len(ds["Iris"][0]) == 4
+    assert len(ds["Spotify (500x500)"]) == 500
+    assert len(ds["Mall Customers"]) == 200
+    for name in ("Blobs", "Circles", "GMM", "Moons"):
+        assert len(ds[name]) == 500 and len(ds[name][0]) == 2

@@ -1,0 +1,100 @@
+//! Bench A6 — metric sensitivity (paper §5.1 limitation + §5.2 "learnable
+//! metrics"): VAT block recovery across distance metrics, including the
+//! Mahalanobis/whitening transform, on workloads engineered to punish the
+//! default Euclidean choice.
+//!
+//!   cargo bench --bench ablation_metric
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::data::generators::{anisotropic, separated_blobs};
+use fast_vat::data::scale::Scaler;
+use fast_vat::data::{Dataset, Points};
+use fast_vat::dissimilarity::mahalanobis::Whitener;
+use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::prng::Pcg32;
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::{ivat::ivat, vat};
+
+/// Two clusters separated on a feature whose scale is dwarfed by another.
+fn scale_dominated(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 2;
+        rows.push(vec![
+            20.0 * rng.normal(),
+            8.0 * c as f64 + 0.3 * rng.normal(),
+        ]);
+        labels.push(c);
+    }
+    Dataset::new(
+        "ScaleDominated",
+        Points::from_rows(&rows).unwrap(),
+        Some(labels),
+    )
+    .unwrap()
+}
+
+fn k_with(points: &Points, metric: Metric) -> (usize, f64) {
+    let det = BlockDetector::default();
+    let t = time_auto(0.3, || {
+        observe(&DistanceMatrix::build_blocked(points, metric).n());
+    });
+    let d = DistanceMatrix::build_blocked(points, metric);
+    let v = vat(&d);
+    (det.detect(&ivat(&v).transformed).len(), t.mean_s)
+}
+
+fn main() {
+    let mut table = Table::new(&[
+        "dataset",
+        "metric",
+        "k detected",
+        "k true",
+        "dist build (s)",
+    ]);
+    let workloads = vec![
+        separated_blobs(300, 3, 0.3, 10.0, 1),
+        anisotropic(300, 3, 0.3, 2),
+        scale_dominated(300, 3),
+    ];
+    for ds in workloads {
+        let k_true = ds.k_true();
+        // raw metrics on standardized data
+        let z = Scaler::standardized(&ds.points);
+        for metric in [
+            Metric::Euclidean,
+            Metric::Manhattan,
+            Metric::Chebyshev,
+            Metric::Cosine,
+        ] {
+            let (k, t) = k_with(&z, metric);
+            table.row(&[
+                ds.name.clone(),
+                format!("{metric:?}"),
+                k.to_string(),
+                k_true.to_string(),
+                format!("{t:.4}"),
+            ]);
+        }
+        // Mahalanobis = whitening + euclidean (raw, un-standardized input —
+        // the whitener learns the scales itself)
+        let w = Whitener::fit(&ds.points, 1e-9).expect("whitener");
+        let zw = w.transform(&ds.points).expect("transform");
+        let (k, t) = k_with(&zw, Metric::Euclidean);
+        table.row(&[
+            ds.name.clone(),
+            "Mahalanobis".into(),
+            k.to_string(),
+            k_true.to_string(),
+            format!("{t:.4}"),
+        ]);
+    }
+    println!("\n== A6: metric sensitivity (paper §5.1/§5.2) ==");
+    println!("{}", table.render());
+    println!("expectation: on ScaleDominated, Euclidean-on-standardized and");
+    println!("Mahalanobis recover k=2; Chebyshev/Cosine may not. On separated");
+    println!("blobs every metric agrees — the paper's §5.1 sensitivity is");
+    println!("a property of the data, not the implementation.");
+}

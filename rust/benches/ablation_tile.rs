@@ -1,0 +1,38 @@
+//! Bench A1 — tile-size ablation of the blocked distance builder (the
+//! cache-locality claim behind the paper's §3.3 flattened layout).
+//!
+//!   cargo bench --bench ablation_tile
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::data::generators::separated_blobs;
+use fast_vat::data::scale::Scaler;
+use fast_vat::dissimilarity::{blocked, Metric};
+
+fn main() {
+    let n = 2048;
+    let ds = separated_blobs(n, 4, 0.4, 10.0, 7);
+    let z = Scaler::standardized(&ds.points);
+
+    let mut table = Table::new(&["tile", "build (s)", "vs best"]);
+    let mut results = Vec::new();
+    for tile in [1usize, 8, 16, 32, 64, 128, 256, 512] {
+        let t = time_auto(0.5, || {
+            observe(&blocked::build_with_tile(&z, Metric::Euclidean, tile).n());
+        });
+        results.push((tile, t.mean_s));
+    }
+    let best = results
+        .iter()
+        .map(|&(_, t)| t)
+        .fold(f64::INFINITY, f64::min);
+    for (tile, t) in &results {
+        table.row(&[
+            tile.to_string(),
+            format!("{t:.4}"),
+            format!("{:.2}x", t / best),
+        ]);
+    }
+    println!("\n== A1: tile-size ablation (n={n}, d=2) ==");
+    println!("{}", table.render());
+    println!("default TILE = {} (see dissimilarity::blocked)", blocked::TILE);
+}

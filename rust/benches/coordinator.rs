@@ -1,0 +1,100 @@
+//! Bench A4 — coordinator throughput: jobs/s of the worker pool by worker
+//! count, engine, and queue depth, plus backpressure shedding behaviour.
+//!
+//!   cargo bench --bench coordinator
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fast_vat::bench_util::Table;
+use fast_vat::config::ServiceConfig;
+use fast_vat::coordinator::service::{SubmitError, VatService};
+use fast_vat::coordinator::JobOptions;
+use fast_vat::data::generators::{blobs, gmm, moons};
+use fast_vat::runtime::{BlockedEngine, DistanceEngine, XlaHandle};
+
+fn job_mix(n_jobs: usize) -> Vec<fast_vat::data::Points> {
+    (0..n_jobs)
+        .map(|j| match j % 3 {
+            0 => blobs(300, 2, 4, 0.5, j as u64).points,
+            1 => moons(300, 0.07, j as u64).points,
+            _ => gmm(300, 2, 3, j as u64).points,
+        })
+        .collect()
+}
+
+fn run_pool(engine: Arc<dyn DistanceEngine>, workers: usize, jobs: usize) -> f64 {
+    let cfg = ServiceConfig {
+        workers,
+        queue_depth: 64,
+        ..Default::default()
+    };
+    let service = VatService::start(&cfg, engine);
+    let mix = job_mix(jobs);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = mix
+        .into_iter()
+        .map(|p| service.submit(p, JobOptions::default()).unwrap().1)
+        .collect();
+    for t in tickets {
+        t.recv().unwrap().unwrap();
+    }
+    jobs as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+
+    let mut table = Table::new(&["engine", "workers", "jobs/s", "scaling vs 1w"]);
+    for engine_name in ["blocked", "xla"] {
+        let mut base = 0.0;
+        for workers in [1usize, 2, 4, 8] {
+            let engine: Arc<dyn DistanceEngine> = match engine_name {
+                "blocked" => Arc::new(BlockedEngine),
+                _ => {
+                    let h = XlaHandle::new(&artifacts).expect("artifacts");
+                    h.warmup().expect("warmup");
+                    Arc::new(h)
+                }
+            };
+            let jps = run_pool(engine, workers, 48);
+            if workers == 1 {
+                base = jps;
+            }
+            table.row(&[
+                engine_name.to_string(),
+                workers.to_string(),
+                format!("{jps:.1}"),
+                format!("{:.2}x", jps / base.max(1e-9)),
+            ]);
+        }
+    }
+    println!("\n== A4: coordinator throughput ==");
+    println!("{}", table.render());
+
+    // backpressure: tiny queue + slow jobs must shed, not grow unbounded
+    let cfg = ServiceConfig {
+        workers: 1,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let service = VatService::start(&cfg, Arc::new(BlockedEngine));
+    let mut accepted = 0;
+    let mut shed = 0;
+    let mut tickets = Vec::new();
+    for p in job_mix(32) {
+        match service.try_submit(p, JobOptions::default()) {
+            Ok((_, t)) => {
+                accepted += 1;
+                tickets.push(t);
+            }
+            Err(SubmitError::Backpressure) => shed += 1,
+            Err(e) => panic!("{e:?}"),
+        }
+    }
+    for t in tickets {
+        let _ = t.recv().unwrap().unwrap();
+    }
+    println!("backpressure: {accepted} accepted, {shed} shed (queue_depth=2, 1 worker)");
+    assert!(shed > 0, "tiny queue must shed load");
+}

@@ -1,0 +1,54 @@
+//! Bench F1–F3 — times the figure-generation path (XLA pdist → VAT →
+//! render → PGM) for each of the paper's three figures and reports the
+//! image's structural summary (band darkness, block count) so figure
+//! regressions show up in bench logs, not just by eyeballing PGMs.
+//!
+//!   cargo bench --bench figures
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::data::generators::paper_datasets;
+use fast_vat::data::scale::Scaler;
+use fast_vat::runtime::{DistanceEngine, XlaHandle};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::vat;
+use fast_vat::viz::{diagonal_darkness, render};
+
+fn main() {
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let xla = XlaHandle::new(&artifacts).expect("run `make artifacts` first");
+    xla.warmup().expect("warmup");
+    let det = BlockDetector::default();
+
+    let figures = ["Iris", "Spotify (500x500)", "Blobs"];
+    let mut table = Table::new(&[
+        "Figure",
+        "pipeline (s)",
+        "band darkness",
+        "blocks",
+        "expected",
+    ]);
+    let expected = ["3 species blocks", "no structure", "4 strong blocks"];
+    for (name, expect) in figures.iter().zip(expected) {
+        let ds = paper_datasets(42)
+            .into_iter()
+            .find(|d| &d.name == name)
+            .unwrap();
+        let z = Scaler::standardized(&ds.points);
+        let t = time_auto(0.5, || {
+            let d = xla.pdist(&z).expect("pdist");
+            let v = vat(&d);
+            observe(&render(&v.reordered).pixels);
+        });
+        let d = xla.pdist(&z).expect("pdist");
+        let v = vat(&d);
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", t.mean_s),
+            format!("{:.3}", diagonal_darkness(&v.reordered, 8)),
+            det.insight(&v),
+            expect.to_string(),
+        ]);
+    }
+    println!("\n== Figures 1-3: generation path ==");
+    println!("{}", table.render());
+}

@@ -1,0 +1,58 @@
+//! Bench A2 — engine scaling with n (the O(n²d) claim, measured), plus the
+//! A5 kernel ablation (Pallas-tiled `pdist` artifact vs XLA-fused
+//! `pdist_mm` — same math, different tiling authorship).
+//!
+//!   cargo bench --bench scaling
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::data::generators::separated_blobs;
+use fast_vat::data::scale::Scaler;
+use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+
+fn main() {
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let xla_pallas = XlaHandle::new(&artifacts).expect("artifacts");
+    let xla_mm = XlaHandle::with_variant(&artifacts, false).expect("artifacts");
+    xla_pallas.warmup().expect("warmup");
+
+    let mut table = Table::new(&[
+        "n",
+        "naive (s)",
+        "blocked (s)",
+        "xla-pallas (s)",
+        "xla-mm (s)",
+        "blocked speedup",
+        "n^2 ratio check",
+    ]);
+    let mut last: Option<(usize, f64)> = None;
+    for n in [128usize, 256, 512, 1024, 2048] {
+        let ds = separated_blobs(n, 4, 0.4, 10.0, n as u64);
+        let z = Scaler::standardized(&ds.points);
+        let t_naive = time_auto(0.4, || observe(&NaiveEngine.pdist(&z).unwrap().n()));
+        let t_blocked = time_auto(0.4, || observe(&BlockedEngine.pdist(&z).unwrap().n()));
+        let t_pallas = time_auto(0.4, || observe(&xla_pallas.pdist(&z).unwrap().n()));
+        let t_mm = time_auto(0.4, || observe(&xla_mm.pdist(&z).unwrap().n()));
+
+        // empirical scaling exponent vs the previous size
+        let ratio = last
+            .map(|(pn, pt)| {
+                let got = t_blocked.mean_s / pt;
+                let ideal = ((n * n) as f64) / ((pn * pn) as f64);
+                format!("{got:.2} (ideal {ideal:.1})")
+            })
+            .unwrap_or_else(|| "-".into());
+        last = Some((n, t_blocked.mean_s));
+
+        table.row(&[
+            n.to_string(),
+            format!("{:.4}", t_naive.mean_s),
+            format!("{:.4}", t_blocked.mean_s),
+            format!("{:.4}", t_pallas.mean_s),
+            format!("{:.4}", t_mm.mean_s),
+            format!("{:.1}x", t_naive.mean_s / t_blocked.mean_s.max(1e-12)),
+            ratio,
+        ]);
+    }
+    println!("\n== A2/A5: engine scaling and kernel-variant ablation ==");
+    println!("{}", table.render());
+}

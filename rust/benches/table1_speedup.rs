@@ -1,0 +1,59 @@
+//! Bench T1 — regenerates the paper's Table 1 (execution time + speedup)
+//! with trimmed-mean statistics over the three engine tiers.
+//!
+//!   cargo bench --bench table1_speedup
+//!
+//! NOTE: the first column is the *naive-rust* stand-in — compiled code with
+//! the interpreted baseline's operation profile (no symmetry exploitation,
+//! boxed dispatch, nested rows). It bounds how much of the paper's speedup
+//! comes from the algorithm-level waste alone; the interpreter overhead on
+//! top of it is measured against the REAL pure-Python baseline by
+//! `examples/paper_eval.rs` (Table 1 there reports 14-38x end to end).
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::data::generators::paper_datasets;
+use fast_vat::data::scale::Scaler;
+use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::vat::vat;
+
+fn main() {
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let xla = XlaHandle::new(&artifacts).expect("run `make artifacts` first");
+    xla.warmup().expect("warmup");
+    let engines: Vec<(&str, &dyn DistanceEngine)> = vec![
+        ("naive-rust", &NaiveEngine),
+        ("numba-tier", &BlockedEngine),
+        ("cython-tier", &xla),
+    ];
+
+    let mut table = Table::new(&[
+        "Dataset",
+        "naive-rust (s)",
+        "numba-tier (s)",
+        "cython-tier (s)",
+        "speedup numba",
+        "speedup cython",
+    ]);
+    for ds in paper_datasets(42) {
+        let z = Scaler::standardized(&ds.points);
+        let mut times = Vec::new();
+        for (_, engine) in &engines {
+            let t = time_auto(0.5, || {
+                let d = engine.pdist(&z).expect("pdist");
+                let v = vat(&d);
+                observe(&v.order);
+            });
+            times.push(t.mean_s);
+        }
+        table.row(&[
+            ds.name.clone(),
+            format!("{:.4}", times[0]),
+            format!("{:.4}", times[1]),
+            format!("{:.4}", times[2]),
+            format!("{:.2}x", times[0] / times[1].max(1e-12)),
+            format!("{:.2}x", times[0] / times[2].max(1e-12)),
+        ]);
+    }
+    println!("\n== Table 1: execution time and speedup ==");
+    println!("{}", table.render());
+}

@@ -1,0 +1,72 @@
+//! Bench T2 — regenerates the paper's Table 2 (Hopkins scores) and times
+//! the statistic through both backends (native vs XLA mindist kernels).
+//!
+//!   cargo bench --bench table2_hopkins
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::data::generators::paper_datasets;
+use fast_vat::data::scale::Scaler;
+use fast_vat::hopkins::{draw_probes, fold, hopkins_mean, nn_distances, HopkinsParams};
+use fast_vat::runtime::XlaHandle;
+
+fn main() {
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let xla = XlaHandle::new(&artifacts).expect("run `make artifacts` first");
+    xla.warmup().expect("warmup");
+
+    let mut table = Table::new(&[
+        "Dataset",
+        "Hopkins",
+        "paper",
+        "native (s)",
+        "xla (s)",
+        "|H_native - H_xla|",
+    ]);
+    let paper: [(&str, f64); 7] = [
+        ("Iris", 0.8121),
+        ("Spotify (500x500)", 0.8684),
+        ("Blobs", 0.9295),
+        ("Circles", 0.7362),
+        ("GMM", 0.9458),
+        ("Mall Customers", 0.8154),
+        ("Moons", 0.8955),
+    ];
+    for ds in paper_datasets(42) {
+        let z = Scaler::standardized(&ds.points);
+        let params = HopkinsParams {
+            seed: 42,
+            ..Default::default()
+        };
+        let h = hopkins_mean(&z, &params, 10).expect("hopkins");
+        let probes = draw_probes(&z, &params).expect("probes");
+
+        let t_native = time_auto(0.3, || {
+            let (u, w) = nn_distances(&z, &probes);
+            observe(&fold(&u, &w, 1, fast_vat::hopkins::Exponent::One));
+        });
+        let t_xla = time_auto(0.3, || {
+            let (u, w) = xla.hopkins_nn(&z, &probes).expect("xla hopkins");
+            observe(&fold(&u, &w, 1, fast_vat::hopkins::Exponent::One));
+        });
+        let (u_n, w_n) = nn_distances(&z, &probes);
+        let (u_x, w_x) = xla.hopkins_nn(&z, &probes).expect("xla hopkins");
+        let h_n = fold(&u_n, &w_n, 1, fast_vat::hopkins::Exponent::One);
+        let h_x = fold(&u_x, &w_x, 1, fast_vat::hopkins::Exponent::One);
+
+        let paper_h = paper
+            .iter()
+            .find(|(n, _)| *n == ds.name)
+            .map(|(_, v)| format!("{v:.4}"))
+            .unwrap_or_default();
+        table.row(&[
+            ds.name.clone(),
+            format!("{h:.4}"),
+            paper_h,
+            format!("{:.5}", t_native.mean_s),
+            format!("{:.5}", t_xla.mean_s),
+            format!("{:.1e}", (h_n - h_x).abs()),
+        ]);
+    }
+    println!("\n== Table 2: Hopkins scores (measured vs paper) ==");
+    println!("{}", table.render());
+}

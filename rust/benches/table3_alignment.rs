@@ -1,0 +1,78 @@
+//! Bench T3 — regenerates the paper's Table 3 (VAT vs K-Means vs DBSCAN)
+//! with quantitative agreement scores and per-algorithm timings.
+//!
+//!   cargo bench --bench table3_alignment
+
+use fast_vat::bench_util::{observe, time_auto, Table};
+use fast_vat::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
+use fast_vat::data::generators::paper_datasets;
+use fast_vat::data::scale::Scaler;
+use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::metrics::{ari, nmi, to_isize};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::{ivat::ivat, vat};
+
+fn main() {
+    let det = BlockDetector::default();
+    let mut table = Table::new(&[
+        "Dataset",
+        "VAT insight",
+        "KM ARI",
+        "KM NMI",
+        "DB ARI",
+        "DB NMI",
+        "KM (s)",
+        "DB (s)",
+    ]);
+    for ds in paper_datasets(42) {
+        let z = Scaler::standardized(&ds.points);
+        let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
+        let v = vat(&d);
+        let k_est = det.detect(&ivat(&v).transformed).len();
+        let insight = det.insight(&v);
+        let k = ds.k_true().max(2).min(8).max(k_est.min(8));
+
+        let km_params = KMeansParams {
+            k,
+            seed: 42,
+            ..Default::default()
+        };
+        let t_km = time_auto(0.3, || {
+            observe(&kmeans(&z, &km_params).expect("kmeans").inertia);
+        });
+        let km = kmeans(&z, &km_params).expect("kmeans");
+
+        let eps = suggest_eps(&z, 5, 0.98);
+        let db_params = DbscanParams { eps, min_pts: 5 };
+        let t_db = time_auto(0.3, || {
+            observe(&dbscan(&z, &db_params).expect("dbscan").clusters);
+        });
+        let db = dbscan(&z, &db_params).expect("dbscan");
+
+        let (km_ari, km_nmi, db_ari, db_nmi) = match &ds.labels {
+            Some(truth) => {
+                let t = to_isize(truth);
+                let kl = to_isize(&km.labels);
+                (
+                    format!("{:.2}", ari(&t, &kl)),
+                    format!("{:.2}", nmi(&t, &kl)),
+                    format!("{:.2}", ari(&t, &db.labels)),
+                    format!("{:.2}", nmi(&t, &db.labels)),
+                )
+            }
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        table.row(&[
+            ds.name.clone(),
+            insight,
+            km_ari,
+            km_nmi,
+            db_ari,
+            db_nmi,
+            format!("{:.4}", t_km.mean_s),
+            format!("{:.4}", t_db.mean_s),
+        ]);
+    }
+    println!("\n== Table 3: clustering alignment with VAT ==");
+    println!("{}", table.render());
+}

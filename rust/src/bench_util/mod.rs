@@ -1,0 +1,175 @@
+//! Timing/benchmark harness shared by `benches/` and the examples.
+//!
+//! The offline registry carries no criterion, so this module implements the
+//! essentials: monotonic wall timing, warmup, trimmed-mean statistics, and
+//! aligned table formatting matching the paper's table layout.
+
+use std::time::Instant;
+
+/// Timing summary of repeated runs.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// Trimmed mean (drop top/bottom 10%) in seconds.
+    pub mean_s: f64,
+    /// Minimum observed, seconds.
+    pub min_s: f64,
+    /// Maximum observed, seconds.
+    pub max_s: f64,
+    /// Sample count after warmup.
+    pub samples: usize,
+}
+
+impl Timing {
+    /// Format as seconds with 4 decimals (the paper's Table-1 format).
+    pub fn secs(&self) -> String {
+        format!("{:.4}", self.mean_s)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `samples` measured runs.
+/// Returns trimmed-mean statistics. `f` must do its own black-boxing
+/// (return or fold its result into something observable — see [`observe`]).
+pub fn time_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples.max(1));
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trim = times.len() / 10;
+    let kept = &times[trim..times.len() - trim];
+    let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+    Timing {
+        mean_s: mean,
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+        samples: times.len(),
+    }
+}
+
+/// Adaptive repetition: choose sample count so total measured time stays
+/// near `budget_s` (cheap ops get many samples, expensive ones few).
+pub fn time_auto<F: FnMut()>(budget_s: f64, mut f: F) -> Timing {
+    let t0 = Instant::now();
+    f(); // first run doubles as warmup + cost probe
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let samples = ((budget_s / once) as usize).clamp(3, 200);
+    time_fn(1.min(samples / 3), samples, f)
+}
+
+/// Keep a value observable so the optimizer cannot elide the computation.
+#[inline]
+pub fn observe<T>(value: &T) {
+    // volatile read of the first byte of the value
+    unsafe {
+        let p = value as *const T as *const u8;
+        std::ptr::read_volatile(p);
+    }
+}
+
+/// Simple fixed-width table printer (paper-style benchmark output).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", cell, width = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let mut acc = 0u64;
+        let t = time_fn(1, 12, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            observe(&acc);
+        });
+        assert!(t.mean_s > 0.0);
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+        assert_eq!(t.samples, 12);
+    }
+
+    #[test]
+    fn time_auto_clamps_samples() {
+        let t = time_auto(0.01, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(t.samples >= 3 && t.samples <= 200);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Dataset", "Time (s)"]);
+        t.row(&["Iris".into(), "0.0565".into()]);
+        t.row(&["Mall Customers".into(), "0.1054".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("Dataset"));
+        assert!(lines[2].starts_with("Iris"));
+        // columns align: "0.0565" starts at the same offset in both rows
+        let off2 = lines[2].find("0.0565").unwrap();
+        let off3 = lines[3].find("0.1054").unwrap();
+        assert_eq!(off2, off3);
+    }
+
+    #[test]
+    #[should_panic(expected = "table arity")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

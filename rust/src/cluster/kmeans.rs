@@ -1,0 +1,315 @@
+//! K-Means (Lloyd) with k-means++ seeding, restarts, and a mini-batch mode.
+//!
+//! Lloyd's algorithm (paper ref [6]); MiniBatchKMeans follows Sculley 2010
+//! (paper ref [12]) — the paper cites it as the scalable-clustering
+//! comparison point, so it ships as a first-class variant.
+
+use crate::data::Points;
+use crate::dissimilarity::blocked::sq_euclidean;
+use crate::error::{Error, Result};
+use crate::prng::Pcg32;
+
+/// Parameters for [`kmeans`].
+#[derive(Debug, Clone)]
+pub struct KMeansParams {
+    /// Number of clusters.
+    pub k: usize,
+    /// Max Lloyd iterations per restart.
+    pub max_iter: usize,
+    /// Independent restarts (best inertia wins).
+    pub n_init: usize,
+    /// Convergence threshold on centroid movement (squared).
+    pub tol: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Mini-batch size; 0 = full-batch Lloyd.
+    pub batch: usize,
+}
+
+impl Default for KMeansParams {
+    fn default() -> Self {
+        Self {
+            k: 3,
+            max_iter: 100,
+            n_init: 4,
+            tol: 1e-8,
+            seed: 0xC1,
+            batch: 0,
+        }
+    }
+}
+
+/// Result of a K-Means run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// Cluster index per point.
+    pub labels: Vec<usize>,
+    /// Flat k×d centroids.
+    pub centroids: Vec<f64>,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    /// Lloyd iterations used by the winning restart.
+    pub iterations: usize,
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii 2007).
+fn kmeanspp(points: &Points, k: usize, rng: &mut Pcg32) -> Vec<f64> {
+    let (n, d) = (points.n(), points.d());
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n as u32) as usize;
+    centroids.extend_from_slice(points.row(first));
+    let mut dist2: Vec<f64> = (0..n)
+        .map(|i| sq_euclidean(points.row(i), points.row(first)))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = dist2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(n as u32) as usize // all points coincide with a centroid
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in dist2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        let start = centroids.len();
+        centroids.extend_from_slice(points.row(next));
+        let new_c = &centroids[start..start + d];
+        for i in 0..n {
+            let v = sq_euclidean(points.row(i), new_c);
+            if v < dist2[i] {
+                dist2[i] = v;
+            }
+        }
+    }
+    centroids
+}
+
+fn assign(points: &Points, centroids: &[f64], k: usize, labels: &mut [usize]) -> f64 {
+    let d = points.d();
+    let mut inertia = 0.0;
+    for i in 0..points.n() {
+        let row = points.row(i);
+        let mut best = 0;
+        let mut bv = f64::INFINITY;
+        for c in 0..k {
+            let v = sq_euclidean(row, &centroids[c * d..(c + 1) * d]);
+            if v < bv {
+                bv = v;
+                best = c;
+            }
+        }
+        labels[i] = best;
+        inertia += bv;
+    }
+    inertia
+}
+
+fn update(points: &Points, labels: &[usize], k: usize, rng: &mut Pcg32) -> Vec<f64> {
+    let d = points.d();
+    let mut sums = vec![0.0; k * d];
+    let mut counts = vec![0usize; k];
+    for (i, &l) in labels.iter().enumerate() {
+        counts[l] += 1;
+        for (j, &v) in points.row(i).iter().enumerate() {
+            sums[l * d + j] += v;
+        }
+    }
+    for c in 0..k {
+        if counts[c] == 0 {
+            // dead centroid: respawn on a random point (standard practice)
+            let i = rng.below(points.n() as u32) as usize;
+            sums[c * d..(c + 1) * d].copy_from_slice(points.row(i));
+        } else {
+            for j in 0..d {
+                sums[c * d + j] /= counts[c] as f64;
+            }
+        }
+    }
+    sums
+}
+
+/// Run K-Means. With `batch > 0` runs Sculley-style mini-batch updates.
+pub fn kmeans(points: &Points, params: &KMeansParams) -> Result<KMeansResult> {
+    let n = points.n();
+    let k = params.k;
+    if k == 0 || k > n {
+        return Err(Error::InvalidArg(format!("k={k} out of range for n={n}")));
+    }
+    let mut best: Option<KMeansResult> = None;
+    for init in 0..params.n_init.max(1) {
+        let mut rng = Pcg32::new(params.seed.wrapping_add(init as u64));
+        let result = if params.batch == 0 {
+            lloyd(points, k, params, &mut rng)
+        } else {
+            minibatch(points, k, params, &mut rng)
+        };
+        if best.as_ref().map_or(true, |b| result.inertia < b.inertia) {
+            best = Some(result);
+        }
+    }
+    Ok(best.expect("n_init >= 1"))
+}
+
+fn lloyd(points: &Points, k: usize, params: &KMeansParams, rng: &mut Pcg32) -> KMeansResult {
+    let d = points.d();
+    let mut centroids = kmeanspp(points, k, rng);
+    let mut labels = vec![0usize; points.n()];
+    let mut iterations = 0;
+    for it in 0..params.max_iter {
+        assign(points, &centroids, k, &mut labels);
+        let new_centroids = update(points, &labels, k, rng);
+        let shift: f64 = centroids
+            .iter()
+            .zip(&new_centroids)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        centroids = new_centroids;
+        iterations = it + 1;
+        if shift < params.tol * d as f64 {
+            break;
+        }
+    }
+    let inertia = assign(points, &centroids, k, &mut labels);
+    KMeansResult {
+        labels,
+        centroids,
+        inertia,
+        iterations,
+    }
+}
+
+fn minibatch(points: &Points, k: usize, params: &KMeansParams, rng: &mut Pcg32) -> KMeansResult {
+    let (n, d) = (points.n(), points.d());
+    let b = params.batch.min(n);
+    let mut centroids = kmeanspp(points, k, rng);
+    let mut counts = vec![1usize; k]; // per-center learning-rate state
+    for _ in 0..params.max_iter {
+        let batch_idx = rng.choose_indices(n, b);
+        for &i in &batch_idx {
+            let row = points.row(i);
+            let mut bestc = 0;
+            let mut bv = f64::INFINITY;
+            for c in 0..k {
+                let v = sq_euclidean(row, &centroids[c * d..(c + 1) * d]);
+                if v < bv {
+                    bv = v;
+                    bestc = c;
+                }
+            }
+            counts[bestc] += 1;
+            let eta = 1.0 / counts[bestc] as f64;
+            for j in 0..d {
+                let c = &mut centroids[bestc * d + j];
+                *c += eta * (row[j] - *c);
+            }
+        }
+    }
+    let mut labels = vec![0usize; n];
+    let inertia = assign(points, &centroids, k, &mut labels);
+    KMeansResult {
+        labels,
+        centroids,
+        inertia,
+        iterations: params.max_iter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::metrics::ari;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let ds = blobs(300, 2, 3, 0.2, 60);
+        let r = kmeans(
+            &ds.points,
+            &KMeansParams {
+                k: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let truth: Vec<isize> = ds.labels.as_ref().unwrap().iter().map(|&l| l as isize).collect();
+        let got: Vec<isize> = r.labels.iter().map(|&l| l as isize).collect();
+        assert!(ari(&truth, &got) > 0.95, "ARI {}", ari(&truth, &got));
+    }
+
+    #[test]
+    fn inertia_non_increasing_over_iterations() {
+        // Run Lloyd manually step by step, checking the invariant.
+        let ds = blobs(150, 2, 3, 0.5, 61);
+        let mut rng = Pcg32::new(1);
+        let k = 3;
+        let mut centroids = kmeanspp(&ds.points, k, &mut rng);
+        let mut labels = vec![0usize; 150];
+        let mut last = f64::INFINITY;
+        for _ in 0..10 {
+            let inertia = assign(&ds.points, &centroids, k, &mut labels);
+            assert!(inertia <= last + 1e-9, "inertia rose: {inertia} > {last}");
+            last = inertia;
+            centroids = update(&ds.points, &labels, k, &mut rng);
+        }
+    }
+
+    #[test]
+    fn k_bounds_checked() {
+        let ds = blobs(10, 2, 2, 0.5, 62);
+        assert!(kmeans(&ds.points, &KMeansParams { k: 0, ..Default::default() }).is_err());
+        assert!(kmeans(&ds.points, &KMeansParams { k: 11, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let ds = blobs(8, 2, 2, 0.5, 63);
+        let r = kmeans(
+            &ds.points,
+            &KMeansParams {
+                k: 8,
+                n_init: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.inertia < 1e-9, "inertia {}", r.inertia);
+    }
+
+    #[test]
+    fn minibatch_close_to_full_batch() {
+        let ds = blobs(400, 2, 4, 0.25, 64);
+        let full = kmeans(&ds.points, &KMeansParams { k: 4, ..Default::default() }).unwrap();
+        let mini = kmeans(
+            &ds.points,
+            &KMeansParams {
+                k: 4,
+                batch: 64,
+                max_iter: 60,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            mini.inertia < full.inertia * 1.5,
+            "minibatch {} vs full {}",
+            mini.inertia,
+            full.inertia
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = blobs(100, 2, 3, 0.4, 65);
+        let p = KMeansParams { k: 3, ..Default::default() };
+        let a = kmeans(&ds.points, &p).unwrap();
+        let b = kmeans(&ds.points, &p).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+}

@@ -1,0 +1,50 @@
+//! Clustering comparators for Table 3: K-Means and DBSCAN.
+//!
+//! The paper validates VAT's visual read-out against what actual clustering
+//! algorithms find (Table 3). Both baselines are implemented natively; the
+//! K-Means assignment step can also run through the XLA artifact (the L1
+//! `assign` Pallas kernel) via `runtime::XlaEngine`.
+
+pub mod dbscan;
+pub mod kmeans;
+
+pub use dbscan::{dbscan, suggest_eps, DbscanParams, DbscanResult, NOISE};
+pub use kmeans::{kmeans, KMeansParams, KMeansResult};
+
+/// Remap labels to a canonical form: clusters numbered by first appearance
+/// (noise stays [`NOISE`]). Makes label vectors comparable across runs.
+pub fn canonicalize(labels: &[isize]) -> Vec<isize> {
+    let mut map: std::collections::HashMap<isize, isize> = std::collections::HashMap::new();
+    let mut next = 0;
+    labels
+        .iter()
+        .map(|&l| {
+            if l == NOISE {
+                NOISE
+            } else {
+                *map.entry(l).or_insert_with(|| {
+                    let v = next;
+                    next += 1;
+                    v
+                })
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalize_renumbers_by_first_appearance() {
+        let labels = vec![5, 5, 2, NOISE, 2, 7];
+        assert_eq!(canonicalize(&labels), vec![0, 0, 1, NOISE, 1, 2]);
+    }
+
+    #[test]
+    fn canonicalize_idempotent() {
+        let labels = vec![0, 1, NOISE, 1, 2];
+        assert_eq!(canonicalize(&canonicalize(&labels)), canonicalize(&labels));
+    }
+}

@@ -1,0 +1,341 @@
+//! Experiment configuration: a self-contained TOML-subset parser plus the
+//! typed config the CLI and coordinator consume.
+//!
+//! The offline registry has no `serde`/`toml`, so this module implements the
+//! subset the project needs: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, boolean, and flat arrays of those. Comments
+//! (`#`) and blank lines are ignored. Unknown keys are an error — configs
+//! fail loudly, not silently.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// 64-bit integer.
+    Int(i64),
+    /// Double float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of scalars.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    fn parse_scalar(s: &str) -> Result<Value> {
+        let s = s.trim();
+        if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+            return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        }
+        if s == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if s == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(Error::Config(format!("cannot parse value: {s}")))
+    }
+
+    fn parse(s: &str) -> Result<Value> {
+        let s = s.trim();
+        if let Some(inner) = s.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("unclosed array: {s}")))?;
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for item in split_top_level(inner) {
+                    items.push(Value::parse_scalar(&item)?);
+                }
+            }
+            return Ok(Value::Array(items));
+        }
+        Value::parse_scalar(s)
+    }
+
+    /// As i64, if an integer.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As f64 (integers widen).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As &str, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool, if a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Split a comma-separated list, respecting quoted strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for ch in s.chars() {
+        match ch {
+            '"' => {
+                in_str = !in_str;
+                cur.push(ch);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Parsed document: section -> key -> value. The unnamed leading section is "".
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                let name = line
+                    .strip_prefix('[')
+                    .and_then(|l| l.strip_suffix(']'))
+                    .ok_or_else(|| {
+                        Error::Config(format!("line {}: bad section: {raw}", lineno + 1))
+                    })?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value: {raw}", lineno + 1))
+            })?;
+            let parsed = Value::parse(val)
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), parsed);
+        }
+        Ok(doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Document> {
+        Document::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Lookup `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// Keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// Section names.
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().map(String::as_str).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Coordinator/service configuration (the `[service]` section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+    /// Default engine: "naive" | "blocked" | "parallel" | "xla" | "xla-mm".
+    pub engine: String,
+    /// artifacts/ directory for the XLA engine.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            queue_depth: 64,
+            engine: "blocked".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Read from a document's `[service]` section; unknown keys error.
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let mut cfg = ServiceConfig::default();
+        for key in doc.keys("service") {
+            let v = doc.get("service", key).unwrap();
+            match key {
+                "workers" => {
+                    cfg.workers = v
+                        .as_int()
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| Error::Config("workers must be int > 0".into()))?
+                        as usize
+                }
+                "queue_depth" => {
+                    cfg.queue_depth = v
+                        .as_int()
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| Error::Config("queue_depth must be int > 0".into()))?
+                        as usize
+                }
+                "engine" => {
+                    let e = v
+                        .as_str()
+                        .ok_or_else(|| Error::Config("engine must be a string".into()))?;
+                    if !["naive", "blocked", "parallel", "xla", "xla-mm"].contains(&e) {
+                        return Err(Error::Config(format!("unknown engine {e}")));
+                    }
+                    cfg.engine = e.to_string();
+                }
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = v
+                        .as_str()
+                        .ok_or_else(|| Error::Config("artifacts_dir must be a string".into()))?
+                        .to_string()
+                }
+                other => {
+                    return Err(Error::Config(format!("unknown [service] key: {other}")))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_arrays() {
+        let doc = Document::parse(
+            r#"
+            # experiment file
+            title = "demo"            # trailing comment
+            [service]
+            workers = 8
+            queue_depth = 32
+            engine = "xla"
+            [sweep]
+            sizes = [64, 256, 1024]
+            factors = [0.5, 1.5]
+            names = ["a", "b"]
+            flag = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("demo"));
+        assert_eq!(doc.get("service", "workers").unwrap().as_int(), Some(8));
+        match doc.get("sweep", "sizes").unwrap() {
+            Value::Array(items) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[2].as_int(), Some(1024));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        assert_eq!(doc.get("sweep", "flag").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Document::parse("just words\n").is_err());
+        assert!(Document::parse("[unclosed\n").is_err());
+        assert!(Document::parse("x = [1, 2\n").is_err());
+        assert!(Document::parse("x = @@@\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Document::parse("name = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn service_config_defaults_and_overrides() {
+        let doc = Document::parse("[service]\nworkers = 2\nengine = \"naive\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.engine, "naive");
+        assert_eq!(cfg.queue_depth, ServiceConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn service_config_rejects_unknown_key_and_bad_engine() {
+        let doc = Document::parse("[service]\nbogus = 1\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[service]\nengine = \"gpu\"\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only_ok() {
+        let doc = Document::parse("# nothing\n\n").unwrap();
+        assert!(doc.section_names().is_empty());
+    }
+}

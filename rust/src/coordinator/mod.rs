@@ -1,0 +1,97 @@
+//! The L3 coordinator: a concurrent VAT job service.
+//!
+//! Fast-VAT's pitch is making cluster-tendency assessment cheap enough to
+//! run *inside* production pipelines (paper §6.1: fraud pipelines,
+//! recommendation systems, streaming environments). This module is that
+//! deployment surface:
+//!
+//! * [`queue`] — bounded MPMC job queue with blocking and try semantics
+//!   (backpressure: a full queue rejects or blocks, never grows unbounded);
+//! * [`service`] — worker pool executing VAT jobs against a shared
+//!   [`crate::runtime::DistanceEngine`];
+//! * [`streaming`] — incremental VAT over an arriving point stream with
+//!   windowed eviction (paper §5.2 "Streaming VAT" future work);
+//! * [`pipeline`] — the tendency-informed auto-clustering pipeline (paper
+//!   §5.2 "Pipeline Integration": VAT/Hopkins decide *whether* and *how*
+//!   to cluster).
+
+pub mod pipeline;
+pub mod queue;
+pub mod service;
+pub mod stats;
+pub mod streaming;
+
+use crate::data::Points;
+use crate::vat::blocks::Block;
+
+/// What a job should compute beyond the reorder itself.
+#[derive(Debug, Clone)]
+pub struct JobOptions {
+    /// Standardize features before distances (recommended; paper does).
+    pub standardize: bool,
+    /// Also compute the iVAT transform.
+    pub ivat: bool,
+    /// Also compute the Hopkins statistic.
+    pub hopkins: bool,
+    /// Keep the reordered matrix in the result (memory-heavy for large n).
+    pub keep_matrix: bool,
+}
+
+impl Default for JobOptions {
+    fn default() -> Self {
+        Self {
+            standardize: true,
+            ivat: false,
+            hopkins: true,
+            keep_matrix: false,
+        }
+    }
+}
+
+/// A VAT job: a dataset snapshot plus options.
+#[derive(Debug, Clone)]
+pub struct VatJob {
+    /// Caller-assigned id, echoed in the result.
+    pub id: u64,
+    /// The points to assess.
+    pub points: Points,
+    /// What to compute.
+    pub options: JobOptions,
+}
+
+/// The result of one VAT job.
+#[derive(Debug, Clone)]
+pub struct VatJobOutput {
+    /// Echoed job id.
+    pub id: u64,
+    /// VAT permutation.
+    pub order: Vec<usize>,
+    /// Detected diagonal blocks (over iVAT when requested, else raw VAT).
+    pub blocks: Vec<Block>,
+    /// Estimated cluster count (= `blocks.len()`).
+    pub k_estimate: usize,
+    /// Hopkins statistic when requested.
+    pub hopkins: Option<f64>,
+    /// Qualitative insight string (Table-3 vocabulary).
+    pub insight: String,
+    /// Reordered matrix flat buffer (present iff `keep_matrix`).
+    pub reordered: Option<crate::dissimilarity::DistanceMatrix>,
+    /// Wall time spent in the distance stage, seconds.
+    pub t_distance_s: f64,
+    /// Wall time spent in ordering + transforms, seconds.
+    pub t_order_s: f64,
+    /// Which engine computed the distances.
+    pub engine: &'static str,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_options_default_is_service_friendly() {
+        let o = JobOptions::default();
+        assert!(o.standardize && o.hopkins);
+        assert!(!o.keep_matrix, "default must not retain O(n^2) buffers");
+    }
+}

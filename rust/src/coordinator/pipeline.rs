@@ -1,0 +1,254 @@
+//! The tendency-informed auto-clustering pipeline (paper §5.2 "Pipeline
+//! Integration"): VAT/Hopkins decide whether the data is clusterable, the
+//! VAT image suggests k, and the block *shapes* choose between K-Means and
+//! DBSCAN — exactly the workflow the paper sketches as future work.
+//!
+//! Decision procedure (documented in DESIGN.md, exercised by Table 3):
+//! 1. standardize; compute Hopkins (mean of several draws). Below the
+//!    clusterability threshold -> report "no structure", stop.
+//! 2. VAT + iVAT; detect blocks -> k estimate AND a reference partition:
+//!    each contiguous iVAT block, mapped back through the VAT order, is a
+//!    cluster. iVAT blocks capture *connectivity* structure (moons, rings)
+//!    that convex methods miss — this is exactly what the VAT image shows a
+//!    human analyst.
+//! 3. Run K-Means (k from step 2) and DBSCAN (eps from the k-dist knee).
+//! 4. The VAT image referees: pick the algorithm whose labels agree best
+//!    (ARI) with the iVAT block partition; silhouettes are reported for
+//!    diagnostics. DBSCAN must also be *viable* (>= 2 clusters, bounded
+//!    noise) to win.
+
+use std::sync::Arc;
+
+use crate::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
+use crate::data::scale::Scaler;
+use crate::data::Points;
+use crate::error::Result;
+use crate::hopkins::{hopkins_mean, HopkinsParams};
+use crate::metrics::{ari, silhouette, to_isize};
+use crate::vat::blocks::Block;
+use crate::runtime::DistanceEngine;
+use crate::vat::blocks::BlockDetector;
+use crate::vat::{ivat::ivat, vat};
+
+/// Tunables for [`auto_cluster`].
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Hopkins threshold below which data is declared unclusterable
+    /// (paper §4.2 uses 0.75).
+    pub hopkins_threshold: f64,
+    /// Hopkins draws averaged.
+    pub hopkins_runs: usize,
+    /// DBSCAN min_pts.
+    pub min_pts: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            hopkins_threshold: 0.75,
+            hopkins_runs: 5,
+            min_pts: 5,
+            seed: 0xA070,
+        }
+    }
+}
+
+/// Which algorithm the pipeline chose.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Choice {
+    /// Data not clusterable; no algorithm run.
+    NoStructure,
+    /// K-Means with the chosen k.
+    KMeans {
+        /// Chosen cluster count.
+        k: usize,
+    },
+    /// DBSCAN with the chosen eps.
+    Dbscan {
+        /// Chosen radius.
+        eps: f64,
+    },
+}
+
+/// Full pipeline report.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Mean Hopkins statistic.
+    pub hopkins: f64,
+    /// VAT block count (k estimate); 0 when the pipeline stopped early.
+    pub k_estimate: usize,
+    /// The decision.
+    pub choice: Choice,
+    /// Final labels (DBSCAN noise = -1); empty when NoStructure.
+    pub labels: Vec<isize>,
+    /// Silhouette of the K-Means candidate (None when not run).
+    pub kmeans_silhouette: Option<f64>,
+    /// Silhouette of the DBSCAN candidate (None when not run).
+    pub dbscan_silhouette: Option<f64>,
+    /// Qualitative insight string.
+    pub insight: String,
+}
+
+/// Labels implied by contiguous VAT blocks: display positions inside block
+/// `b` map back through `order` to original indices with label `b`.
+pub fn block_labels(blocks: &[Block], order: &[usize], n: usize) -> Vec<isize> {
+    let mut labels = vec![0isize; n];
+    for (b, block) in blocks.iter().enumerate() {
+        for pos in block.start..block.end.min(order.len()) {
+            labels[order[pos]] = b as isize;
+        }
+    }
+    labels
+}
+
+/// Run the auto-clustering pipeline over `points` with `engine` supplying
+/// the distance matrix.
+pub fn auto_cluster(
+    engine: &Arc<dyn DistanceEngine>,
+    points: &Points,
+    config: &PipelineConfig,
+) -> Result<PipelineReport> {
+    let z = Scaler::standardized(points);
+
+    // 1. clusterability gate
+    let h = hopkins_mean(
+        &z,
+        &HopkinsParams {
+            seed: config.seed,
+            ..Default::default()
+        },
+        config.hopkins_runs,
+    )?;
+    if h < config.hopkins_threshold {
+        return Ok(PipelineReport {
+            hopkins: h,
+            k_estimate: 0,
+            choice: Choice::NoStructure,
+            labels: Vec::new(),
+            kmeans_silhouette: None,
+            dbscan_silhouette: None,
+            insight: format!("No significant cluster structure (H = {h:.3})"),
+        });
+    }
+
+    // 2. tendency image -> k + the iVAT reference partition
+    let d = engine.pdist(&z)?;
+    let v = vat(&d);
+    let detector = BlockDetector::default();
+    let iv = ivat(&v);
+    let blocks = detector.detect(&iv.transformed);
+    let k = blocks.len().max(2);
+    let insight = detector.insight(&v);
+    let vat_reference = block_labels(&blocks, &v.order, z.n());
+
+    // 3. both candidates
+    let km = kmeans(
+        &z,
+        &KMeansParams {
+            k,
+            seed: config.seed,
+            ..Default::default()
+        },
+    )?;
+    let km_labels = to_isize(&km.labels);
+    let eps = suggest_eps(&z, config.min_pts, 0.98);
+    let db = dbscan(
+        &z,
+        &DbscanParams {
+            eps,
+            min_pts: config.min_pts,
+        },
+    )?;
+
+    // 4. the VAT image referees (see module docs)
+    let km_sil = silhouette(&d, &km_labels);
+    let db_sil = silhouette(&d, &db.labels);
+    let km_agreement = ari(&vat_reference, &km_labels);
+    let db_agreement = ari(&vat_reference, &db.labels);
+    let db_noise_frac = db.noise as f64 / z.n().max(1) as f64;
+    let db_viable = db.clusters >= 2 && db_noise_frac < 0.3;
+    let pick_db = db_viable && db_agreement > km_agreement;
+    let (choice, labels) = if pick_db {
+        (Choice::Dbscan { eps }, db.labels.clone())
+    } else {
+        (Choice::KMeans { k }, km_labels.clone())
+    };
+
+    Ok(PipelineReport {
+        hopkins: h,
+        k_estimate: k,
+        choice,
+        labels,
+        kmeans_silhouette: Some(km_sil),
+        dbscan_silhouette: Some(db_sil),
+        insight,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, circles, moons, uniform};
+    use crate::metrics::ari;
+    use crate::runtime::BlockedEngine;
+
+    fn engine() -> Arc<dyn DistanceEngine> {
+        Arc::new(BlockedEngine)
+    }
+
+    #[test]
+    fn uniform_noise_stops_early() {
+        let ds = uniform(300, 2, 140);
+        let r = auto_cluster(&engine(), &ds.points, &PipelineConfig::default()).unwrap();
+        assert_eq!(r.choice, Choice::NoStructure);
+        assert!(r.labels.is_empty());
+        assert!(r.hopkins < 0.75, "H = {}", r.hopkins);
+    }
+
+    #[test]
+    fn blobs_get_kmeans_or_dbscan_with_good_ari() {
+        let ds = blobs(300, 2, 3, 0.2, 141);
+        let r = auto_cluster(&engine(), &ds.points, &PipelineConfig::default()).unwrap();
+        assert_ne!(r.choice, Choice::NoStructure);
+        let truth = to_isize(ds.labels.as_ref().unwrap());
+        assert!(ari(&truth, &r.labels) > 0.9, "blobs ARI");
+    }
+
+    #[test]
+    fn moons_choose_dbscan() {
+        // the paper's Table-3 punchline: K-Means misclassifies moons,
+        // DBSCAN is perfect — the pipeline must route to DBSCAN
+        let ds = moons(400, 0.05, 142);
+        let r = auto_cluster(&engine(), &ds.points, &PipelineConfig::default()).unwrap();
+        match r.choice {
+            Choice::Dbscan { .. } => {}
+            other => panic!("moons should pick DBSCAN, got {other:?} (sil km={:?} db={:?})",
+                r.kmeans_silhouette, r.dbscan_silhouette),
+        }
+        let truth = to_isize(ds.labels.as_ref().unwrap());
+        assert!(ari(&truth, &r.labels) > 0.9, "moons ARI {}", ari(&truth, &r.labels));
+    }
+
+    #[test]
+    fn circles_choose_dbscan() {
+        let ds = circles(400, 0.04, 0.45, 143);
+        let r = auto_cluster(&engine(), &ds.points, &PipelineConfig::default()).unwrap();
+        match r.choice {
+            Choice::Dbscan { .. } => {}
+            other => panic!("circles should pick DBSCAN, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_is_internally_consistent() {
+        let ds = blobs(200, 2, 4, 0.25, 144);
+        let r = auto_cluster(&engine(), &ds.points, &PipelineConfig::default()).unwrap();
+        if r.choice != Choice::NoStructure {
+            assert_eq!(r.labels.len(), 200);
+            assert!(r.k_estimate >= 2);
+            assert!(r.kmeans_silhouette.is_some() && r.dbscan_silhouette.is_some());
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Bounded MPMC queue with blocking push/pop and backpressure semantics.
+//!
+//! std::sync::mpsc has no bounded MPMC receiver sharing, so the service uses
+//! this small Mutex+Condvar queue: producers block (or fail fast with
+//! [`PushError::Full`]) when the queue is at capacity; consumers block until
+//! an item or close. Closing wakes everyone; pending items still drain.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue closed; the value is returned to the caller.
+    Closed(T),
+    /// Queue at capacity (try_push only).
+    Full(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    capacity: usize,
+}
+
+/// A bounded multi-producer multi-consumer queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with a capacity >= 1.
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+                capacity: capacity.max(1),
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        })
+    }
+
+    /// Blocking push; waits while full. Errors only if closed.
+    pub fn push(&self, value: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(value));
+            }
+            if g.items.len() < g.capacity {
+                g.items.push_back(value);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push; fails fast when full (backpressure signal).
+    pub fn try_push(&self, value: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(value));
+        }
+        if g.items.len() >= g.capacity {
+            return Err(PushError::Full(value));
+        }
+        g.items.push_back(value);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` when closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue; wakes all waiters. Pending items still drain.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current depth (diagnostic).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when empty (diagnostic).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_full_signals_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(PushError::Closed(8)));
+        assert_eq!(q.pop(), Some(7)); // pending item drains
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_resumes_after_pop() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(2).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1)); // unblocks the producer
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn no_item_lost_or_duplicated_under_concurrency() {
+        let q = BoundedQueue::new(8);
+        let produced = 4 * 250;
+        let seen = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            let seen = seen.clone();
+            let sum = sum.clone();
+            consumers.push(std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    seen.fetch_add(1, Ordering::SeqCst);
+                    sum.fetch_add(v, Ordering::SeqCst);
+                }
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..4 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    q.push(p * 250 + i + 1).unwrap();
+                }
+            }));
+        }
+        for t in producers {
+            t.join().unwrap();
+        }
+        q.close();
+        for t in consumers {
+            t.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), produced);
+        // sum of 1..=1000
+        assert_eq!(sum.load(Ordering::SeqCst), 1000 * 1001 / 2);
+    }
+}

@@ -1,0 +1,316 @@
+//! The VAT job service: a worker pool over the bounded queue.
+//!
+//! One shared [`DistanceEngine`] (e.g. a single [`crate::runtime::XlaHandle`]
+//! whose executor thread owns the compiled artifacts) serves all workers;
+//! ordering/transform stages run on the worker threads themselves, so the
+//! O(n²) Prim sweeps parallelize across jobs while the distance stage is
+//! funneled through whichever engine the deployment chose.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::config::ServiceConfig;
+use crate::coordinator::queue::{BoundedQueue, PushError};
+use crate::coordinator::stats::ServiceStats;
+use crate::coordinator::{JobOptions, VatJob, VatJobOutput};
+use crate::data::scale::Scaler;
+use crate::data::Points;
+use crate::error::{Error, Result};
+use crate::hopkins::{hopkins, HopkinsParams};
+use crate::runtime::DistanceEngine;
+use crate::vat::blocks::BlockDetector;
+use crate::vat::{ivat::ivat, vat};
+
+/// A submitted job's completion channel.
+pub type Ticket = mpsc::Receiver<Result<VatJobOutput>>;
+
+struct WorkItem {
+    job: VatJob,
+    reply: mpsc::Sender<Result<VatJobOutput>>,
+}
+
+/// The running service. Dropping it shuts the pool down (pending jobs
+/// drain first).
+pub struct VatService {
+    queue: Arc<BoundedQueue<WorkItem>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    engine_name: &'static str,
+    stats: ServiceStats,
+}
+
+impl VatService {
+    /// Start `config.workers` workers over `engine`.
+    pub fn start(config: &ServiceConfig, engine: Arc<dyn DistanceEngine>) -> Self {
+        let queue: Arc<BoundedQueue<WorkItem>> = BoundedQueue::new(config.queue_depth);
+        let engine_name = engine.name();
+        let stats = ServiceStats::new();
+        let workers = (0..config.workers.max(1))
+            .map(|w| {
+                let queue = queue.clone();
+                let engine = engine.clone();
+                let stats = stats.clone();
+                std::thread::Builder::new()
+                    .name(format!("vat-worker-{w}"))
+                    .spawn(move || {
+                        while let Some(item) = queue.pop() {
+                            let out = execute_job(engine.as_ref(), item.job);
+                            match &out {
+                                Ok(o) => stats.on_complete(o.t_distance_s, o.t_order_s),
+                                Err(_) => stats.on_fail(),
+                            }
+                            let _ = item.reply.send(out);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            queue,
+            workers,
+            next_id: AtomicU64::new(1),
+            engine_name,
+            stats,
+        }
+    }
+
+    /// Live service metrics (counters + latency histograms).
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Engine the pool runs on.
+    pub fn engine_name(&self) -> &'static str {
+        self.engine_name
+    }
+
+    /// Submit a job, blocking if the queue is full. Returns the ticket to
+    /// await the result on.
+    pub fn submit(&self, points: Points, options: JobOptions) -> Result<(u64, Ticket)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, ticket) = mpsc::channel();
+        let item = WorkItem {
+            job: VatJob {
+                id,
+                points,
+                options,
+            },
+            reply,
+        };
+        match self.queue.push(item) {
+            Ok(()) => {
+                self.stats.on_submit();
+                Ok((id, ticket))
+            }
+            Err(PushError::Closed(_)) | Err(PushError::Full(_)) => {
+                Err(Error::Coordinator("service shut down".into()))
+            }
+        }
+    }
+
+    /// Non-blocking submit; `Err(Full)` is the backpressure signal the
+    /// caller must handle (shed load or retry later).
+    pub fn try_submit(
+        &self,
+        points: Points,
+        options: JobOptions,
+    ) -> std::result::Result<(u64, Ticket), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, ticket) = mpsc::channel();
+        let item = WorkItem {
+            job: VatJob {
+                id,
+                points,
+                options,
+            },
+            reply,
+        };
+        match self.queue.try_push(item) {
+            Ok(()) => {
+                self.stats.on_submit();
+                Ok((id, ticket))
+            }
+            Err(PushError::Full(_)) => {
+                self.stats.on_shed();
+                Err(SubmitError::Backpressure)
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Current queue depth (monitoring).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl Drop for VatService {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Why try_submit refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — backpressure.
+    Backpressure,
+    /// Service shut down.
+    Closed,
+}
+
+/// Execute one job (also used directly by the CLI's one-shot mode).
+pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOutput> {
+    let points = if job.options.standardize {
+        Scaler::standardized(&job.points)
+    } else {
+        job.points.clone()
+    };
+
+    let t0 = Instant::now();
+    let d = engine.pdist(&points)?;
+    let t_distance_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let v = vat(&d);
+    let detector = BlockDetector::default();
+    let (blocks, insight) = if job.options.ivat {
+        let iv = ivat(&v);
+        (detector.detect(&iv.transformed), detector.insight(&v))
+    } else {
+        (detector.detect(&v.reordered), detector.insight(&v))
+    };
+    let t_order_s = t1.elapsed().as_secs_f64();
+
+    let h = if job.options.hopkins {
+        Some(hopkins(
+            &points,
+            &HopkinsParams {
+                seed: job.id, // decorrelate probes across jobs deterministically
+                ..Default::default()
+            },
+        )?)
+    } else {
+        None
+    };
+
+    let k_estimate = blocks.len();
+    Ok(VatJobOutput {
+        id: job.id,
+        order: v.order.clone(),
+        blocks,
+        k_estimate,
+        hopkins: h,
+        insight,
+        reordered: job.options.keep_matrix.then(|| v.reordered.clone()),
+        t_distance_s,
+        t_order_s,
+        engine: engine.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::runtime::BlockedEngine;
+
+    fn svc(workers: usize, depth: usize) -> VatService {
+        let cfg = ServiceConfig {
+            workers,
+            queue_depth: depth,
+            ..Default::default()
+        };
+        VatService::start(&cfg, Arc::new(BlockedEngine))
+    }
+
+    #[test]
+    fn single_job_roundtrip() {
+        let service = svc(2, 8);
+        let ds = blobs(80, 2, 3, 0.3, 120);
+        let (id, ticket) = service.submit(ds.points, JobOptions::default()).unwrap();
+        let out = ticket.recv().unwrap().unwrap();
+        assert_eq!(out.id, id);
+        assert_eq!(out.order.len(), 80);
+        assert!(out.hopkins.unwrap() > 0.5);
+        assert!(out.t_distance_s >= 0.0 && out.t_order_s >= 0.0);
+        assert_eq!(out.engine, "blocked");
+    }
+
+    #[test]
+    fn many_jobs_all_complete_with_correct_ids() {
+        let service = svc(4, 16);
+        let mut tickets = Vec::new();
+        for seed in 0..24u64 {
+            let ds = blobs(40 + (seed as usize % 3) * 10, 2, 2, 0.4, seed);
+            let (id, t) = service.submit(ds.points, JobOptions::default()).unwrap();
+            tickets.push((id, t));
+        }
+        for (id, t) in tickets {
+            let out = t.recv().unwrap().unwrap();
+            assert_eq!(out.id, id);
+        }
+    }
+
+    #[test]
+    fn try_submit_backpressure_on_tiny_queue() {
+        // 1 worker, queue depth 1, slow jobs -> the 3rd+ submit must
+        // eventually see Backpressure
+        let service = svc(1, 1);
+        let ds = blobs(300, 2, 3, 0.4, 121);
+        let mut saw_backpressure = false;
+        let mut tickets = Vec::new();
+        for _ in 0..8 {
+            match service.try_submit(ds.points.clone(), JobOptions::default()) {
+                Ok((_, t)) => tickets.push(t),
+                Err(SubmitError::Backpressure) => {
+                    saw_backpressure = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(saw_backpressure, "queue depth 1 must shed load");
+        for t in tickets {
+            let _ = t.recv().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn keep_matrix_option() {
+        let service = svc(1, 4);
+        let ds = blobs(30, 2, 2, 0.3, 122);
+        let opts = JobOptions {
+            keep_matrix: true,
+            ..Default::default()
+        };
+        let (_, t) = service.submit(ds.points, opts).unwrap();
+        let out = t.recv().unwrap().unwrap();
+        let m = out.reordered.expect("matrix kept");
+        assert_eq!(m.n(), 30);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let ds = blobs(60, 2, 2, 0.4, 123);
+        let tickets: Vec<Ticket> = {
+            let service = svc(2, 8);
+            (0..6)
+                .map(|_| {
+                    service
+                        .submit(ds.points.clone(), JobOptions::default())
+                        .unwrap()
+                        .1
+                })
+                .collect()
+            // service drops here -> close + join, pending jobs drain
+        };
+        for t in tickets {
+            assert!(t.recv().unwrap().is_ok());
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Service observability: lock-free counters and latency histograms for
+//! the job service — the monitoring surface a production deployment of the
+//! paper's §6.1 scenarios (fraud pipelines, streaming recommenders) needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Log-scaled latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
+const BUCKETS: usize = 24; // up to ~16.7 s
+
+/// Shared service metrics. Cheap to clone (Arc inside).
+#[derive(Clone, Default)]
+pub struct ServiceStats {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    shed: AtomicU64,
+    distance_us: Histogram,
+    order_us: Histogram,
+    total_us: Histogram,
+}
+
+#[derive(Default)]
+struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    fn record(&self, us: u64) {
+        let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    fn quantile(&self, q: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1); // bucket upper bound
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    fn mean(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    /// Jobs accepted into the queue.
+    pub submitted: u64,
+    /// Jobs completed successfully.
+    pub completed: u64,
+    /// Jobs that returned an error.
+    pub failed: u64,
+    /// Jobs refused due to backpressure.
+    pub shed: u64,
+    /// Mean / p50 / p99 of the distance stage, microseconds.
+    pub distance_us: (f64, u64, u64),
+    /// Mean / p50 / p99 of the ordering stage, microseconds.
+    pub order_us: (f64, u64, u64),
+    /// Mean / p50 / p99 end-to-end, microseconds.
+    pub total_us: (f64, u64, u64),
+}
+
+impl ServiceStats {
+    /// New zeroed registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count an accepted submission.
+    pub fn on_submit(&self) {
+        self.inner.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a backpressure rejection.
+    pub fn on_shed(&self) {
+        self.inner.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a completed job's stage timings (seconds).
+    pub fn on_complete(&self, distance_s: f64, order_s: f64) {
+        self.inner.completed.fetch_add(1, Ordering::Relaxed);
+        let d_us = (distance_s * 1e6) as u64;
+        let o_us = (order_s * 1e6) as u64;
+        self.inner.distance_us.record(d_us);
+        self.inner.order_us.record(o_us);
+        self.inner.total_us.record(d_us + o_us);
+    }
+
+    /// Record a failed job.
+    pub fn on_fail(&self) {
+        self.inner.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let h = |hist: &Histogram| (hist.mean(), hist.quantile(0.5), hist.quantile(0.99));
+        StatsSnapshot {
+            submitted: self.inner.submitted.load(Ordering::Relaxed),
+            completed: self.inner.completed.load(Ordering::Relaxed),
+            failed: self.inner.failed.load(Ordering::Relaxed),
+            shed: self.inner.shed.load(Ordering::Relaxed),
+            distance_us: h(&self.inner.distance_us),
+            order_us: h(&self.inner.order_us),
+            total_us: h(&self.inner.total_us),
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "jobs: {} submitted, {} completed, {} failed, {} shed | \
+             distance mean {:.0}us p99 {}us | order mean {:.0}us p99 {}us",
+            s.submitted,
+            s.completed,
+            s.failed,
+            s.shed,
+            s.distance_us.0,
+            s.distance_us.2,
+            s.order_us.0,
+            s.order_us.2,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let stats = ServiceStats::new();
+        stats.on_submit();
+        stats.on_submit();
+        stats.on_shed();
+        stats.on_complete(0.001, 0.0005);
+        stats.on_fail();
+        let s = stats.snapshot();
+        assert_eq!((s.submitted, s.completed, s.failed, s.shed), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let stats = ServiceStats::new();
+        for i in 1..=100u64 {
+            stats.on_complete(i as f64 * 1e-4, 1e-5); // 100us..10ms
+        }
+        let s = stats.snapshot();
+        assert!(s.distance_us.1 <= s.distance_us.2, "p50 <= p99");
+        assert!(s.distance_us.0 > 0.0);
+        // p99 upper bound must cover the max recorded (10ms = 10_000us)
+        assert!(s.distance_us.2 >= 8_192);
+    }
+
+    #[test]
+    fn snapshot_of_empty_is_zero() {
+        let s = ServiceStats::new().snapshot();
+        assert_eq!(s.total_us, (0.0, 0, 0));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let a = ServiceStats::new();
+        let b = a.clone();
+        a.on_submit();
+        b.on_submit();
+        assert_eq!(a.snapshot().submitted, 2);
+    }
+
+    #[test]
+    fn concurrent_recording_is_consistent() {
+        let stats = ServiceStats::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let st = stats.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        st.on_submit();
+                        st.on_complete(0.001, 0.001);
+                    }
+                });
+            }
+        });
+        let s = stats.snapshot();
+        assert_eq!(s.submitted, 4000);
+        assert_eq!(s.completed, 4000);
+    }
+}

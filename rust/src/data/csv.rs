@@ -1,0 +1,184 @@
+//! Minimal CSV load/save for numeric tables (no external crates offline).
+//!
+//! Supports: header detection, comma/semicolon/tab delimiters, an optional
+//! trailing label column, comment lines (`#`). This is the loader behind
+//! `fast-vat vat --input data.csv` and keeps the CLI usable on real files.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::{Dataset, Points};
+use crate::error::{Error, Result};
+
+/// Options for [`load_csv`].
+#[derive(Debug, Clone)]
+pub struct CsvOptions {
+    /// Field delimiter; `None` auto-detects among `,`, `;`, tab.
+    pub delimiter: Option<char>,
+    /// Treat the last column as an integer class label.
+    pub label_column: bool,
+    /// Skip the first row if it fails to parse as numbers (header).
+    pub allow_header: bool,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        Self {
+            delimiter: None,
+            label_column: false,
+            allow_header: true,
+        }
+    }
+}
+
+fn detect_delimiter(line: &str) -> char {
+    for cand in [',', ';', '\t'] {
+        if line.contains(cand) {
+            return cand;
+        }
+    }
+    ','
+}
+
+/// Load a numeric CSV into a [`Dataset`] named after the file stem.
+pub fn load_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    let file = std::fs::File::open(path)?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut delim: Option<char> = opts.delimiter;
+    let mut first_data_line = true;
+
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let d = *delim.get_or_insert_with(|| detect_delimiter(trimmed));
+        let fields: Vec<&str> = trimmed.split(d).map(str::trim).collect();
+        let parsed: std::result::Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.parse::<f64>()).collect();
+        match parsed {
+            Ok(mut vals) => {
+                if opts.label_column {
+                    let l = vals.pop().ok_or_else(|| {
+                        Error::Data(format!("{path:?}:{lineno}: empty row"))
+                    })?;
+                    if l < 0.0 || l.fract() != 0.0 {
+                        return Err(Error::Data(format!(
+                            "{path:?}:{lineno}: label {l} not a non-negative integer"
+                        )));
+                    }
+                    labels.push(l as usize);
+                }
+                rows.push(vals);
+                first_data_line = false;
+            }
+            Err(e) => {
+                if first_data_line && opts.allow_header {
+                    first_data_line = false; // swallow one header row
+                } else {
+                    return Err(Error::Data(format!(
+                        "{path:?}:{lineno}: parse error: {e}"
+                    )));
+                }
+            }
+        }
+    }
+    if rows.is_empty() {
+        return Err(Error::Data(format!("{path:?}: no data rows")));
+    }
+    let points = Points::from_rows(&rows)?;
+    Dataset::new(name, points, opts.label_column.then_some(labels))
+}
+
+/// Save a dataset as CSV (optionally with its label column).
+pub fn save_csv(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for i in 0..ds.points.n() {
+        let row: Vec<String> = ds.points.row(i).iter().map(|v| v.to_string()).collect();
+        if let Some(l) = &ds.labels {
+            writeln!(f, "{},{}", row.join(","), l[i])?;
+        } else {
+            writeln!(f, "{}", row.join(","))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, contents: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("fastvat_csv_{name}"));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_plain_csv() {
+        let p = tmp("plain.csv", "1.0,2.0\n3.0,4.5\n");
+        let ds = load_csv(&p, &CsvOptions::default()).unwrap();
+        assert_eq!((ds.points.n(), ds.points.d()), (2, 2));
+        assert_eq!(ds.points.row(1), &[3.0, 4.5]);
+    }
+
+    #[test]
+    fn skips_header_and_comments() {
+        let p = tmp("hdr.csv", "# comment\nx,y\n1,2\n3,4\n");
+        let ds = load_csv(&p, &CsvOptions::default()).unwrap();
+        assert_eq!(ds.points.n(), 2);
+    }
+
+    #[test]
+    fn rejects_mid_file_garbage() {
+        let p = tmp("bad.csv", "1,2\nok,nope\n");
+        assert!(load_csv(&p, &CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn label_column_extracted() {
+        let p = tmp("lab.csv", "1,2,0\n3,4,1\n5,6,1\n");
+        let opts = CsvOptions {
+            label_column: true,
+            ..Default::default()
+        };
+        let ds = load_csv(&p, &opts).unwrap();
+        assert_eq!(ds.points.d(), 2);
+        assert_eq!(ds.labels, Some(vec![0, 1, 1]));
+    }
+
+    #[test]
+    fn semicolon_and_tab_autodetected() {
+        let p = tmp("semi.csv", "1;2\n3;4\n");
+        assert_eq!(load_csv(&p, &CsvOptions::default()).unwrap().points.d(), 2);
+        let p = tmp("tab.csv", "1\t2\n3\t4\n");
+        assert_eq!(load_csv(&p, &CsvOptions::default()).unwrap().points.d(), 2);
+    }
+
+    #[test]
+    fn roundtrip_save_load() {
+        let ds = crate::data::generators::blobs(20, 3, 2, 0.3, 5);
+        let p = std::env::temp_dir().join("fastvat_csv_rt.csv");
+        save_csv(&ds, &p).unwrap();
+        let opts = CsvOptions {
+            label_column: true,
+            ..Default::default()
+        };
+        let back = load_csv(&p, &opts).unwrap();
+        assert_eq!(back.points, ds.points);
+        assert_eq!(back.labels, ds.labels);
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        let p = tmp("empty.csv", "");
+        assert!(load_csv(&p, &CsvOptions::default()).is_err());
+    }
+}

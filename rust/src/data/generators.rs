@@ -1,0 +1,377 @@
+//! Synthetic dataset generators — the paper's evaluation workloads.
+//!
+//! Table 1 of the paper benchmarks seven datasets: Iris (embedded, see
+//! [`super::iris`]), four scikit-learn synthetics (blobs, moons, circles,
+//! GMM), and two real-world sets we substitute with statistically matched
+//! generators ([`spotify_like`], [`mall_like`]; DESIGN.md §Substitutions).
+//! Every generator is deterministic from its seed.
+
+use super::{Dataset, Points};
+use crate::prng::Pcg32;
+
+/// Isotropic Gaussian blobs around `k` uniformly placed centers
+/// (scikit-learn `make_blobs` analogue). Labels = blob index.
+pub fn blobs(n: usize, d: usize, k: usize, spread: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.uniform_in(-6.0, 6.0)).collect())
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k.max(1);
+        for j in 0..d {
+            data.push(centers[c][j] + spread * rng.normal());
+        }
+        labels.push(c);
+    }
+    Dataset::new(
+        "Blobs",
+        Points::new(data, n, d).expect("blobs shape"),
+        Some(labels),
+    )
+    .expect("blobs dataset")
+}
+
+/// Two interleaving half-moons (scikit-learn `make_moons` analogue), 2-D.
+pub fn moons(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = std::f64::consts::PI * rng.uniform();
+        let (x, y, l) = if i % 2 == 0 {
+            (t.cos(), t.sin(), 0)
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin(), 1)
+        };
+        data.push(x + noise * rng.normal());
+        data.push(y + noise * rng.normal());
+        labels.push(l);
+    }
+    Dataset::new(
+        "Moons",
+        Points::new(data, n, 2).expect("moons shape"),
+        Some(labels),
+    )
+    .expect("moons dataset")
+}
+
+/// Two concentric circles (scikit-learn `make_circles` analogue), 2-D.
+pub fn circles(n: usize, noise: f64, factor: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = std::f64::consts::TAU * rng.uniform();
+        let (r, l) = if i % 2 == 0 { (1.0, 0) } else { (factor, 1) };
+        data.push(r * t.cos() + noise * rng.normal());
+        data.push(r * t.sin() + noise * rng.normal());
+        labels.push(l);
+    }
+    Dataset::new(
+        "Circles",
+        Points::new(data, n, 2).expect("circles shape"),
+        Some(labels),
+    )
+    .expect("circles dataset")
+}
+
+/// Gaussian mixture with per-component anisotropic covariance (diagonal),
+/// overlapping by construction — the paper's "GMM" workload ("overlapping
+/// blobs", Table 3).
+pub fn gmm(n: usize, d: usize, k: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let comps: Vec<(Vec<f64>, Vec<f64>)> = (0..k)
+        .map(|_| {
+            // means spread vs std ~5:1 — components overlap at the skirts
+            // ("blurred diagonal", paper §4.4.4) while Hopkins stays high
+            // (paper reports 0.9458)
+            let mean: Vec<f64> = (0..d).map(|_| rng.uniform_in(-4.0, 4.0)).collect();
+            let std: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.5, 0.9)).collect();
+            (mean, std)
+        })
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(k as u32) as usize;
+        let (mean, std) = &comps[c];
+        for j in 0..d {
+            data.push(rng.normal_ms(mean[j], std[j]));
+        }
+        labels.push(c);
+    }
+    Dataset::new(
+        "GMM",
+        Points::new(data, n, d).expect("gmm shape"),
+        Some(labels),
+    )
+    .expect("gmm dataset")
+}
+
+/// Blobs with *guaranteed* separation: centers sit on a circle of radius
+/// `radius` (2-D), so inter-center distance is at least
+/// `2·radius·sin(π/k)`. Used wherever a test or ablation needs a known
+/// block count (plain [`blobs`] places centers uniformly and may overlap).
+pub fn separated_blobs(n: usize, k: usize, spread: f64, radius: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k.max(1);
+        let theta = std::f64::consts::TAU * c as f64 / k.max(1) as f64;
+        data.push(radius * theta.cos() + spread * rng.normal());
+        data.push(radius * theta.sin() + spread * rng.normal());
+        labels.push(c);
+    }
+    Dataset::new(
+        "SeparatedBlobs",
+        Points::new(data, n, 2).expect("separated_blobs shape"),
+        Some(labels),
+    )
+    .expect("separated_blobs dataset")
+}
+
+/// Uniform noise over a hyper-box — the Hopkins null model (H ≈ 0.5).
+pub fn uniform(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let data: Vec<f64> = (0..n * d).map(|_| rng.uniform()).collect();
+    Dataset::new(
+        "Uniform",
+        Points::new(data, n, d).expect("uniform shape"),
+        None,
+    )
+    .expect("uniform dataset")
+}
+
+/// Anisotropic blobs (blobs sheared by a fixed linear map) — ablation
+/// workload for metric sensitivity (paper §5.1 bullet 2).
+pub fn anisotropic(n: usize, k: usize, spread: f64, seed: u64) -> Dataset {
+    let base = blobs(n, 2, k, spread, seed);
+    // fixed shear [[0.6, -0.6], [-0.4, 0.8]] (sklearn's classic example)
+    let mut data = Vec::with_capacity(n * 2);
+    for i in 0..base.points.n() {
+        let r = base.points.row(i);
+        data.push(0.6 * r[0] - 0.6 * r[1]);
+        data.push(-0.4 * r[0] + 0.8 * r[1]);
+    }
+    Dataset::new(
+        "Anisotropic",
+        Points::new(data, n, 2).expect("aniso shape"),
+        base.labels.clone(),
+    )
+    .expect("aniso dataset")
+}
+
+/// Spotify-like audio-feature table: 500×13, weak global structure.
+///
+/// Substitute for the paper's Spotify subset (DESIGN.md §Substitutions):
+/// 13 features mimicking audio descriptors — a few loose, heavily
+/// overlapping genre modes plus per-feature heavy noise, tuned so the VAT
+/// image shows no clear diagonal blocks while the Hopkins score stays high
+/// (paper reports 0.8684 — distance concentration in d=13 inflates H even
+/// without visual structure, which is exactly the paper's §4.4.2 point).
+pub fn spotify_like(n: usize, seed: u64) -> Dataset {
+    let d = 13;
+    let mut rng = Pcg32::new(seed);
+    let k = 6; // loose "genres", overlapping
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect())
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    // Micro-pair structure: tracks come in near-duplicate pairs (same
+    // artist/album variants). This reproduces the paper's §4.4.2 punchline
+    // — a HIGH Hopkins score (w-distances are tiny for half the probes)
+    // with NO visible diagonal blocks (the pairs are scattered globally).
+    let mut prev: Vec<f64> = Vec::new();
+    for i in 0..n {
+        if i % 2 == 1 && !prev.is_empty() {
+            for j in 0..d {
+                data.push(prev[j] + 0.05 * rng.normal());
+            }
+            continue;
+        }
+        let c = rng.below(k as u32) as usize;
+        prev.clear();
+        for j in 0..d {
+            // noise comparable to center spread -> modes blur together
+            let v = centers[c][j] + 0.9 * rng.normal();
+            // a couple of skewed features, like loudness/tempo
+            let v = if j % 5 == 0 { v.abs().sqrt() * v.signum() } else { v };
+            prev.push(v);
+            data.push(v);
+        }
+    }
+    Dataset::new(
+        "Spotify (500x500)",
+        Points::new(data, n, d).expect("spotify shape"),
+        None,
+    )
+    .expect("spotify dataset")
+}
+
+/// Mall-Customers-like table: 200×3 (age, income, spending score), five
+/// loose segments — substitute for the Kaggle Mall Customers CSV.
+pub fn mall_like(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    // (age, income k$, spending 1-100) segment prototypes, from the classic
+    // 5-segment structure of the Kaggle dataset.
+    let protos: [[f64; 3]; 5] = [
+        [25.0, 25.0, 80.0], // young, low income, high spend
+        [45.0, 25.0, 20.0], // older, low income, low spend
+        [32.0, 55.0, 50.0], // mid everything (the big central mass)
+        [32.0, 85.0, 82.0], // young, high income, high spend
+        [42.0, 88.0, 17.0], // older, high income, low spend
+    ];
+    let stds: [[f64; 3]; 5] = [
+        [3.0, 4.0, 6.0],
+        [6.0, 4.0, 6.0],
+        [7.0, 6.0, 8.0],
+        [3.0, 7.0, 6.0],
+        [5.0, 8.0, 5.0],
+    ];
+    let mut data = Vec::with_capacity(n * 3);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 5;
+        for j in 0..3 {
+            data.push(rng.normal_ms(protos[c][j], stds[c][j]));
+        }
+        labels.push(c);
+    }
+    Dataset::new(
+        "Mall Customers",
+        Points::new(data, n, 3).expect("mall shape"),
+        Some(labels),
+    )
+    .expect("mall dataset")
+}
+
+/// The paper's seven Table-1 workloads, at the paper's exact (n, d).
+///
+/// Order matches Table 1; seeds are fixed so every run of the evaluation
+/// harness sees identical data.
+pub fn paper_datasets(seed: u64) -> Vec<Dataset> {
+    vec![
+        super::iris::iris(),
+        spotify_like(500, seed),
+        blobs(500, 2, 4, 0.6, seed + 1),
+        circles(500, 0.06, 0.45, seed + 2),
+        {
+            let mut ds = gmm(500, 2, 3, seed + 3);
+            ds.name = "GMM".into();
+            ds
+        },
+        mall_like(200, seed + 4),
+        moons(500, 0.08, seed + 5),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shapes_and_labels() {
+        let ds = blobs(120, 3, 4, 0.5, 1);
+        assert_eq!((ds.points.n(), ds.points.d()), (120, 3));
+        assert_eq!(ds.k_true(), 4);
+        // balanced round-robin assignment
+        let l = ds.labels.as_ref().unwrap();
+        assert_eq!(l.iter().filter(|&&x| x == 0).count(), 30);
+    }
+
+    #[test]
+    fn blobs_deterministic_per_seed() {
+        let a = blobs(50, 2, 3, 0.4, 9);
+        let b = blobs(50, 2, 3, 0.4, 9);
+        let c = blobs(50, 2, 3, 0.4, 10);
+        assert_eq!(a.points, b.points);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn moons_two_classes_in_plane() {
+        let ds = moons(200, 0.05, 2);
+        assert_eq!(ds.points.d(), 2);
+        assert_eq!(ds.k_true(), 2);
+        // moons span roughly [-1, 2] x [-0.5, 1]
+        let (lo, hi) = ds.points.bounds();
+        assert!(lo[0] > -2.0 && hi[0] < 3.0);
+    }
+
+    #[test]
+    fn circles_radii_separate() {
+        let ds = circles(400, 0.01, 0.45, 3);
+        let l = ds.labels.as_ref().unwrap();
+        for i in 0..ds.points.n() {
+            let r = ds.points.row(i);
+            let rad = (r[0] * r[0] + r[1] * r[1]).sqrt();
+            if l[i] == 0 {
+                assert!((rad - 1.0).abs() < 0.15, "outer radius {rad}");
+            } else {
+                assert!((rad - 0.45).abs() < 0.15, "inner radius {rad}");
+            }
+        }
+    }
+
+    #[test]
+    fn gmm_components_cover_all_labels() {
+        let ds = gmm(300, 2, 3, 4);
+        let l = ds.labels.as_ref().unwrap();
+        for c in 0..3 {
+            assert!(l.contains(&c), "component {c} never sampled");
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_box() {
+        let ds = uniform(100, 4, 5);
+        let (lo, hi) = ds.points.bounds();
+        assert!(lo.iter().all(|&v| v >= 0.0));
+        assert!(hi.iter().all(|&v| v < 1.0));
+        assert!(ds.labels.is_none());
+    }
+
+    #[test]
+    fn spotify_like_is_high_dim_weak_structure() {
+        let ds = spotify_like(500, 6);
+        assert_eq!((ds.points.n(), ds.points.d()), (500, 13));
+    }
+
+    #[test]
+    fn mall_like_five_segments() {
+        let ds = mall_like(200, 7);
+        assert_eq!((ds.points.n(), ds.points.d()), (200, 3));
+        assert_eq!(ds.k_true(), 5);
+    }
+
+    #[test]
+    fn paper_datasets_match_table1_spec() {
+        let ds = paper_datasets(42);
+        let spec: Vec<(&str, usize, usize)> = ds
+            .iter()
+            .map(|d| (d.name.as_str(), d.points.n(), d.points.d()))
+            .collect();
+        assert_eq!(
+            spec,
+            vec![
+                ("Iris", 150, 4),
+                ("Spotify (500x500)", 500, 13),
+                ("Blobs", 500, 2),
+                ("Circles", 500, 2),
+                ("GMM", 500, 2),
+                ("Mall Customers", 200, 3),
+                ("Moons", 500, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn anisotropic_is_sheared_blobs() {
+        let ds = anisotropic(90, 3, 0.3, 8);
+        assert_eq!((ds.points.n(), ds.points.d()), (90, 2));
+        assert_eq!(ds.k_true(), 3);
+    }
+}

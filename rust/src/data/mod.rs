@@ -1,0 +1,228 @@
+//! Dataset substrate: point containers, generators, loaders, scaling.
+//!
+//! Points are stored flat row-major (`n * d` contiguous f64) — the same
+//! layout the paper's Cython tier adopts ("flattened memory layout improves
+//! cache locality", §3.3) and the layout the XLA artifacts consume after f32
+//! narrowing.
+
+pub mod csv;
+pub mod generators;
+pub mod iris;
+pub mod scale;
+
+use crate::error::{Error, Result};
+
+/// A flat, row-major collection of `n` points in `d` dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Points {
+    data: Vec<f64>,
+    n: usize,
+    d: usize,
+}
+
+impl Points {
+    /// Wrap a flat row-major buffer. `data.len()` must equal `n * d`.
+    pub fn new(data: Vec<f64>, n: usize, d: usize) -> Result<Self> {
+        if data.len() != n * d {
+            return Err(Error::Shape(format!(
+                "flat buffer has {} values, expected n*d = {}*{} = {}",
+                data.len(),
+                n,
+                d,
+                n * d
+            )));
+        }
+        Ok(Self { data, n, d })
+    }
+
+    /// Build from nested rows (must be rectangular).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<Self> {
+        let n = rows.len();
+        let d = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(n * d);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != d {
+                return Err(Error::Shape(format!(
+                    "ragged row {i}: len {} != {d}",
+                    r.len()
+                )));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Self { data, n, d })
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimensionality.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The flat row-major buffer.
+    #[inline]
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable flat buffer (used by scalers).
+    #[inline]
+    pub fn flat_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Gather a subset of rows into a new container.
+    pub fn select(&self, idx: &[usize]) -> Points {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Points {
+            data,
+            n: idx.len(),
+            d: self.d,
+        }
+    }
+
+    /// Append one point (used by the streaming coordinator).
+    pub fn push(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.d {
+            return Err(Error::Shape(format!(
+                "push: row len {} != d {}",
+                row.len(),
+                self.d
+            )));
+        }
+        self.data.extend_from_slice(row);
+        self.n += 1;
+        Ok(())
+    }
+
+    /// Per-dimension (min, max) bounds.
+    pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut lo = vec![f64::INFINITY; self.d];
+        let mut hi = vec![f64::NEG_INFINITY; self.d];
+        for i in 0..self.n {
+            for (k, &v) in self.row(i).iter().enumerate() {
+                lo[k] = lo[k].min(v);
+                hi[k] = hi[k].max(v);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Narrow to f32 for the XLA engines.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+/// A named dataset with optional ground-truth labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Human-readable name (table row label).
+    pub name: String,
+    /// The points.
+    pub points: Points,
+    /// Ground-truth cluster labels, when the generator knows them.
+    pub labels: Option<Vec<usize>>,
+}
+
+impl Dataset {
+    /// Construct with labels; checks `labels.len() == points.n()`.
+    pub fn new(
+        name: impl Into<String>,
+        points: Points,
+        labels: Option<Vec<usize>>,
+    ) -> Result<Self> {
+        if let Some(l) = &labels {
+            if l.len() != points.n() {
+                return Err(Error::Shape(format!(
+                    "labels len {} != n {}",
+                    l.len(),
+                    points.n()
+                )));
+            }
+        }
+        Ok(Self {
+            name: name.into(),
+            points,
+            labels,
+        })
+    }
+
+    /// Number of ground-truth clusters (0 when unlabeled).
+    pub fn k_true(&self) -> usize {
+        self.labels
+            .as_ref()
+            .map_or(0, |l| l.iter().copied().max().map_or(0, |m| m + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_roundtrip_rows() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let p = Points::from_rows(&rows).unwrap();
+        assert_eq!((p.n(), p.d()), (3, 2));
+        assert_eq!(p.row(1), &[3.0, 4.0]);
+        assert_eq!(p.flat(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0]];
+        assert!(Points::from_rows(&rows).is_err());
+    }
+
+    #[test]
+    fn bad_flat_len_rejected() {
+        assert!(Points::new(vec![0.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn select_gathers_rows() {
+        let p = Points::new((0..12).map(|v| v as f64).collect(), 4, 3).unwrap();
+        let s = p.select(&[2, 0]);
+        assert_eq!(s.row(0), &[6.0, 7.0, 8.0]);
+        assert_eq!(s.row(1), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn push_appends_and_validates() {
+        let mut p = Points::new(vec![1.0, 2.0], 1, 2).unwrap();
+        p.push(&[3.0, 4.0]).unwrap();
+        assert_eq!(p.n(), 2);
+        assert!(p.push(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn bounds_cover_extremes() {
+        let p = Points::from_rows(&[vec![-1.0, 5.0], vec![2.0, -3.0]]).unwrap();
+        let (lo, hi) = p.bounds();
+        assert_eq!(lo, vec![-1.0, -3.0]);
+        assert_eq!(hi, vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn dataset_label_len_checked() {
+        let p = Points::new(vec![0.0; 4], 2, 2).unwrap();
+        assert!(Dataset::new("x", p.clone(), Some(vec![0])).is_err());
+        let ds = Dataset::new("x", p, Some(vec![0, 1])).unwrap();
+        assert_eq!(ds.k_true(), 2);
+    }
+}

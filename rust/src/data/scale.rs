@@ -1,0 +1,148 @@
+//! Feature scaling — applied before distance computation, as the paper's
+//! pipeline does (scikit-learn `StandardScaler`/`MinMaxScaler` analogues).
+//!
+//! Scaling matters twice here: (1) VAT images are metric-sensitive (paper
+//! §5.1), and (2) the XLA Hopkins artifact's pad-row guarantee (pad rows at
+//! `PAD_OFFSET` must dominate any real distance) is only sound on
+//! standardized data — `runtime::XlaEngine` asserts it.
+
+use super::Points;
+
+/// Per-feature affine transform `x' = (x - shift) / scale`.
+#[derive(Debug, Clone)]
+pub struct Scaler {
+    shift: Vec<f64>,
+    scale: Vec<f64>,
+}
+
+impl Scaler {
+    /// Fit a z-score scaler (mean 0, std 1). Constant features get scale 1.
+    pub fn standard(points: &Points) -> Self {
+        let (n, d) = (points.n(), points.d());
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (j, &v) in points.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n.max(1) as f64;
+        }
+        let mut var = vec![0.0; d];
+        for i in 0..n {
+            for (j, &v) in points.row(i).iter().enumerate() {
+                let t = v - mean[j];
+                var[j] += t * t;
+            }
+        }
+        let scale = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n.max(1) as f64).sqrt();
+                if s > 1e-12 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Self { shift: mean, scale }
+    }
+
+    /// Fit a min-max scaler to [0, 1]. Constant features get scale 1.
+    pub fn minmax(points: &Points) -> Self {
+        let (lo, hi) = points.bounds();
+        let scale = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| if h - l > 1e-12 { h - l } else { 1.0 })
+            .collect();
+        Self { shift: lo, scale }
+    }
+
+    /// Apply in place.
+    pub fn transform(&self, points: &mut Points) {
+        let d = points.d();
+        assert_eq!(d, self.shift.len(), "scaler dim mismatch");
+        for (idx, v) in points.flat_mut().iter_mut().enumerate() {
+            let j = idx % d;
+            *v = (*v - self.shift[j]) / self.scale[j];
+        }
+    }
+
+    /// Fit-and-apply convenience returning a new container.
+    pub fn standardized(points: &Points) -> Points {
+        let mut out = points.clone();
+        Scaler::standard(points).transform(&mut out);
+        out
+    }
+
+    /// Invert the transform (used by streaming snapshots for display).
+    pub fn inverse(&self, points: &mut Points) {
+        let d = points.d();
+        for (idx, v) in points.flat_mut().iter_mut().enumerate() {
+            let j = idx % d;
+            *v = *v * self.scale[j] + self.shift[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+
+    fn col_stats(p: &Points, j: usize) -> (f64, f64) {
+        let n = p.n() as f64;
+        let mean = (0..p.n()).map(|i| p.row(i)[j]).sum::<f64>() / n;
+        let var = (0..p.n())
+            .map(|i| (p.row(i)[j] - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        (mean, var.sqrt())
+    }
+
+    #[test]
+    fn standard_gives_zero_mean_unit_std() {
+        let ds = blobs(200, 3, 4, 0.5, 11);
+        let z = Scaler::standardized(&ds.points);
+        for j in 0..3 {
+            let (m, s) = col_stats(&z, j);
+            assert!(m.abs() < 1e-9, "mean {m}");
+            assert!((s - 1.0).abs() < 1e-9, "std {s}");
+        }
+    }
+
+    #[test]
+    fn minmax_maps_to_unit_interval() {
+        let ds = blobs(150, 2, 3, 0.7, 12);
+        let mut p = ds.points.clone();
+        Scaler::minmax(&ds.points).transform(&mut p);
+        let (lo, hi) = p.bounds();
+        for j in 0..2 {
+            assert!((lo[j] - 0.0).abs() < 1e-12);
+            assert!((hi[j] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_feature_survives() {
+        let p = Points::from_rows(&[vec![2.0, 5.0], vec![3.0, 5.0]]).unwrap();
+        let z = Scaler::standardized(&p);
+        // constant column centered to 0, not NaN
+        assert_eq!(z.row(0)[1], 0.0);
+        assert!(z.flat().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let ds = blobs(60, 2, 2, 0.4, 13);
+        let scaler = Scaler::standard(&ds.points);
+        let mut p = ds.points.clone();
+        scaler.transform(&mut p);
+        scaler.inverse(&mut p);
+        for (a, b) in p.flat().iter().zip(ds.points.flat()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! The "numba-tier" distance builder: compiled, cache-tiled, half-matrix.
+//!
+//! This is what the paper's Numba `@jit(nopython=True)` buys — native loops
+//! over flat memory — plus two structural wins the paper attributes to its
+//! Cython tier that are natural in Rust:
+//!
+//! * only the upper triangle is computed and mirrored (halves the work);
+//! * iteration is tiled (`TILE` rows a side) so the working set of point
+//!   rows stays in L1/L2 while the O(n²) sweep streams through the output;
+//! * Euclidean uses the dot-trick `|x|² + |y|² − 2x·y` with precomputed row
+//!   norms, matching what the XLA artifact's Pallas kernel does on the MXU.
+//!
+//! The builder is monomorphized per metric through an inlineable generic so
+//! per-pair dispatch costs nothing (contrast `naive.rs`).
+
+use super::{DistanceMatrix, Metric};
+use crate::data::Points;
+
+/// Row-tile side; 64 rows × d≤16 f64 ≈ 8 KiB per operand tile, comfortably
+/// inside L1d alongside the output tile. Ablated in benches/ablation_tile.rs.
+pub const TILE: usize = 64;
+
+#[inline(always)]
+fn sq_euclid(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let t = x - y;
+        s += t * t;
+    }
+    s
+}
+
+/// Tiled upper-triangle sweep with a per-pair kernel, mirrored into the
+/// full square matrix.
+fn build_tiled<F: Fn(&[f64], &[f64]) -> f64>(
+    points: &Points,
+    tile: usize,
+    f: F,
+) -> DistanceMatrix {
+    let n = points.n();
+    let mut m = DistanceMatrix::zeros(n);
+    let mut ib = 0;
+    while ib < n {
+        let ie = (ib + tile).min(n);
+        // diagonal tile: j >= i only
+        for i in ib..ie {
+            let a = points.row(i);
+            for j in (i + 1)..ie {
+                let v = f(a, points.row(j));
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        // off-diagonal tiles to the right
+        let mut jb = ie;
+        while jb < n {
+            let je = (jb + tile).min(n);
+            for i in ib..ie {
+                let a = points.row(i);
+                for j in jb..je {
+                    let v = f(a, points.row(j));
+                    m.set(i, j, v);
+                    m.set(j, i, v);
+                }
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
+    m
+}
+
+/// Euclidean fast path: precomputed norms + dot trick, with the norm fold
+/// and sqrt fused INTO the tile sweep (perf iteration 1, EXPERIMENTS.md
+/// §Perf: a separate fold pass re-streamed the whole n² buffer — 2×64 MB of
+/// extra memory traffic at n=2048 — for zero arithmetic benefit).
+/// Perf iteration 5: the inner dot is monomorphized for the small feature
+/// counts the paper's workloads use (d ≤ 4) — a dynamic-length zip over 2
+/// elements costs more in loop control than in arithmetic.
+fn build_euclidean(points: &Points, tile: usize, squared: bool) -> DistanceMatrix {
+    match points.d() {
+        2 => build_euclid_dot::<2>(points, tile, squared),
+        3 => build_euclid_dot::<3>(points, tile, squared),
+        4 => build_euclid_dot::<4>(points, tile, squared),
+        _ => build_euclid_dot::<0>(points, tile, squared),
+    }
+}
+
+#[inline(always)]
+fn dot_d<const D: usize>(a: &[f64], b: &[f64]) -> f64 {
+    if D == 0 {
+        let mut dot = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            dot += x * y;
+        }
+        dot
+    } else {
+        let mut dot = 0.0;
+        for k in 0..D {
+            dot += a[k] * b[k];
+        }
+        dot
+    }
+}
+
+fn build_euclid_dot<const D: usize>(
+    points: &Points,
+    tile: usize,
+    squared: bool,
+) -> DistanceMatrix {
+    let n = points.n();
+    let norms: Vec<f64> = (0..n)
+        .map(|i| points.row(i).iter().map(|v| v * v).sum())
+        .collect();
+    let ns = norms.as_slice();
+    // NOTE (perf iteration 6, reverted): moving the sqrt out to a linear
+    // vectorizable pass over the finished buffer was ~20% SLOWER at n=2048
+    // — the build is memory-bound and the extra 2×32 MB stream outweighs
+    // packed vsqrtpd. The sqrt stays fused in the pair loop.
+    let finish = move |sq: f64| if squared { sq } else { sq.sqrt() };
+    let mut m = DistanceMatrix::zeros(n);
+    let mut ib = 0;
+    while ib < n {
+        let ie = (ib + tile).min(n);
+        for i in ib..ie {
+            let a = points.row(i);
+            for j in (i + 1)..ie {
+                let dot = dot_d::<D>(a, points.row(j));
+                let v = finish((ns[i] + ns[j] - 2.0 * dot).max(0.0));
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let mut jb = ie;
+        while jb < n {
+            let je = (jb + tile).min(n);
+            for i in ib..ie {
+                let a = points.row(i);
+                for j in jb..je {
+                    let dot = dot_d::<D>(a, points.row(j));
+                    let v = finish((ns[i] + ns[j] - 2.0 * dot).max(0.0));
+                    m.set(i, j, v);
+                    m.set(j, i, v);
+                }
+            }
+            jb = je;
+        }
+        ib = ie;
+    }
+    m
+}
+
+/// Build the full matrix with the optimized compiled path.
+pub fn build(points: &Points, metric: Metric) -> DistanceMatrix {
+    build_with_tile(points, metric, TILE)
+}
+
+/// Tile-size-parameterized build (exposed for the tiling ablation bench).
+pub fn build_with_tile(points: &Points, metric: Metric, tile: usize) -> DistanceMatrix {
+    assert!(tile > 0, "tile must be positive");
+    match metric {
+        Metric::Euclidean => build_euclidean(points, tile, false),
+        Metric::SqEuclidean => build_euclidean(points, tile, true),
+        Metric::Manhattan => build_tiled(points, tile, |a, b| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+        }),
+        Metric::Chebyshev => build_tiled(points, tile, |a, b| {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max)
+        }),
+        Metric::Minkowski(p) => build_tiled(points, tile, move |a, b| {
+            let s: f64 = a.iter().zip(b).map(|(x, y)| (x - y).abs().powf(p)).sum();
+            s.powf(1.0 / p)
+        }),
+        Metric::Cosine => build_tiled(points, tile, |a, b| Metric::Cosine.eval(a, b)),
+    }
+}
+
+/// Direct (untiled) squared-distance helper used by clustering code that
+/// needs one-off pair distances without a full matrix.
+#[inline]
+pub fn sq_euclidean(a: &[f64], b: &[f64]) -> f64 {
+    sq_euclid(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, moons};
+    use crate::prng::Pcg32;
+
+    fn assert_matches_naive(metric: Metric, seed: u64) {
+        let ds = blobs(97, 3, 4, 0.6, seed); // 97: not a multiple of TILE
+        let fast = build(&ds.points, metric);
+        let slow = super::super::naive::build(&ds.points, metric);
+        for i in 0..97 {
+            for j in 0..97 {
+                let (a, b) = (fast.get(i, j), slow.get(i, j));
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "{metric:?} mismatch at ({i},{j}): {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_metrics_match_naive() {
+        assert_matches_naive(Metric::Euclidean, 31);
+        assert_matches_naive(Metric::SqEuclidean, 32);
+        assert_matches_naive(Metric::Manhattan, 33);
+        assert_matches_naive(Metric::Chebyshev, 34);
+        assert_matches_naive(Metric::Minkowski(3.0), 35);
+        assert_matches_naive(Metric::Cosine, 36);
+    }
+
+    #[test]
+    fn tile_size_does_not_change_result() {
+        let ds = moons(130, 0.05, 37);
+        let base = build_with_tile(&ds.points, Metric::Euclidean, 130);
+        for tile in [1, 7, 16, 64, 128, 256] {
+            let m = build_with_tile(&ds.points, Metric::Euclidean, tile);
+            for i in 0..130 {
+                for j in 0..130 {
+                    assert!((m.get(i, j) - base.get(i, j)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_symmetric_zero_diag_nonneg() {
+        // hand-rolled property sweep (no proptest offline)
+        let mut rng = Pcg32::new(99);
+        for trial in 0..25 {
+            let n = 5 + rng.below(80) as usize;
+            let d = 1 + rng.below(8) as usize;
+            let ds = blobs(n, d, 1 + rng.below(4) as usize, 0.8, trial);
+            let m = build(&ds.points, Metric::Euclidean);
+            assert!(m.asymmetry() < 1e-12);
+            for i in 0..n {
+                assert_eq!(m.get(i, i), 0.0);
+                for j in 0..n {
+                    assert!(m.get(i, j) >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_holds_euclidean() {
+        let ds = blobs(40, 2, 3, 0.5, 41);
+        let m = build(&ds.points, Metric::Euclidean);
+        for i in 0..40 {
+            for j in 0..40 {
+                for k in 0..40 {
+                    assert!(m.get(i, j) <= m.get(i, k) + m.get(k, j) + 1e-9);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Condensed (upper-triangle) distance storage — n(n-1)/2 entries instead
+//! of n², attacking the paper's §5.1 "Quadratic Memory Complexity" head-on.
+//!
+//! Layout matches scipy's `pdist` convention: for i < j the entry index is
+//! `i*n - i*(i+1)/2 + (j - i - 1)`. The VAT sweep only ever reads rows of
+//! the matrix sequentially, so [`CondensedMatrix::vat_order`] runs Prim
+//! directly on condensed storage at exactly half the resident footprint —
+//! on a 64 GiB box that moves the paper's n ≈ 90k ceiling to ≈ 128k.
+
+use crate::data::Points;
+use crate::dissimilarity::{DistanceMatrix, Metric};
+use crate::error::{Error, Result};
+
+/// Upper-triangle pairwise distances in scipy `pdist` layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CondensedMatrix {
+    data: Vec<f64>,
+    n: usize,
+}
+
+impl CondensedMatrix {
+    /// Build from points.
+    pub fn build(points: &Points, metric: Metric) -> Self {
+        let n = points.n();
+        let mut data = Vec::with_capacity(n * (n.saturating_sub(1)) / 2);
+        for i in 0..n {
+            let a = points.row(i);
+            for j in (i + 1)..n {
+                data.push(metric.eval(a, points.row(j)));
+            }
+        }
+        Self { data, n }
+    }
+
+    /// Wrap an existing condensed buffer.
+    pub fn from_flat(data: Vec<f64>, n: usize) -> Result<Self> {
+        if data.len() != n * n.saturating_sub(1) / 2 {
+            return Err(Error::Shape(format!(
+                "condensed len {} != n(n-1)/2 = {}",
+                data.len(),
+                n * n.saturating_sub(1) / 2
+            )));
+        }
+        Ok(Self { data, n })
+    }
+
+    /// Side of the square form.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when there are no pairs (n < 2).
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    fn index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j);
+        i * self.n - i * (i + 1) / 2 + (j - i - 1)
+    }
+
+    /// Entry (i, j); the diagonal is implicitly zero.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match i.cmp(&j) {
+            std::cmp::Ordering::Equal => 0.0,
+            std::cmp::Ordering::Less => self.data[self.index(i, j)],
+            std::cmp::Ordering::Greater => self.data[self.index(j, i)],
+        }
+    }
+
+    /// Expand to square storage (for rendering / interop).
+    pub fn to_square(&self) -> DistanceMatrix {
+        let n = self.n;
+        let mut m = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = self.get(i, j);
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        m
+    }
+
+    /// Memory resident for this matrix, bytes (diagnostic, for the §5.1
+    /// memory table).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// VAT ordering straight off condensed storage — same permutation as
+    /// `vat::prim::vat_order` on the square form (property-tested), at half
+    /// the memory.
+    pub fn vat_order(&self) -> Vec<usize> {
+        let n = self.n;
+        if n == 0 {
+            return Vec::new();
+        }
+        // seed: row of the global max, first occurrence in (i<j) scan order
+        // — identical to the square row-major argmax row because the max's
+        // first row-major occurrence (i, j) always has i < j.
+        let mut best = (0usize, f64::NEG_INFINITY);
+        let mut idx = 0usize;
+        for i in 0..n {
+            for _j in (i + 1)..n {
+                let v = self.data[idx];
+                if v > best.1 {
+                    best = (i, v);
+                }
+                idx += 1;
+            }
+        }
+        let seed = best.0;
+
+        let mut order = Vec::with_capacity(n);
+        order.push(seed);
+        let mut selected = vec![false; n];
+        selected[seed] = true;
+        let mut dmin: Vec<f64> = (0..n).map(|j| self.get(seed, j)).collect();
+        for _ in 1..n {
+            let mut bj = usize::MAX;
+            let mut bv = f64::INFINITY;
+            for j in 0..n {
+                if !selected[j] && dmin[j] < bv {
+                    bv = dmin[j];
+                    bj = j;
+                }
+            }
+            selected[bj] = true;
+            order.push(bj);
+            for j in 0..n {
+                if !selected[j] {
+                    let v = self.get(bj, j);
+                    if v < dmin[j] {
+                        dmin[j] = v;
+                    }
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, gmm};
+    use crate::prng::Pcg32;
+    use crate::vat::prim::vat_order;
+
+    #[test]
+    fn layout_matches_square_build() {
+        let ds = blobs(40, 3, 2, 0.5, 160);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let s = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        for i in 0..40 {
+            for j in 0..40 {
+                assert!((c.get(i, j) - s.get(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        assert_eq!(c.len(), 40 * 39 / 2);
+    }
+
+    #[test]
+    fn square_roundtrip() {
+        let ds = blobs(25, 2, 2, 0.5, 161);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let sq = c.to_square();
+        for i in 0..25 {
+            for j in 0..25 {
+                assert_eq!(sq.get(i, j), c.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn from_flat_validates_len() {
+        assert!(CondensedMatrix::from_flat(vec![1.0; 3], 3).is_ok());
+        assert!(CondensedMatrix::from_flat(vec![1.0; 4], 3).is_err());
+    }
+
+    #[test]
+    fn vat_order_matches_square_prim_property() {
+        let mut rng = Pcg32::new(162);
+        for trial in 0..15 {
+            let n = 5 + rng.below(70) as usize;
+            let ds = gmm(n, 2, 1 + rng.below(4) as usize, 500 + trial);
+            let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+            let s = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let (square_order, _) = vat_order(&s);
+            assert_eq!(c.vat_order(), square_order, "trial {trial} n {n}");
+        }
+    }
+
+    #[test]
+    fn memory_is_half_of_square() {
+        let ds = blobs(100, 2, 2, 0.5, 163);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let square_bytes = 100 * 100 * std::mem::size_of::<f64>();
+        assert!(c.resident_bytes() * 2 < square_bytes + 100 * 8);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let p = crate::data::Points::new(vec![], 0, 1).unwrap();
+        let c = CondensedMatrix::build(&p, Metric::Euclidean);
+        assert!(c.vat_order().is_empty());
+        let p1 = crate::data::Points::new(vec![1.0], 1, 1).unwrap();
+        let c1 = CondensedMatrix::build(&p1, Metric::Euclidean);
+        assert_eq!(c1.vat_order(), vec![0]);
+        assert!(c1.is_empty());
+    }
+}

@@ -1,0 +1,71 @@
+//! The "python-tier" distance builder — deliberately unoptimized.
+//!
+//! Mirrors how the paper's pure-Python baseline spends its time so Table-1
+//! sweeps have an in-process stand-in with the same operation profile:
+//!
+//! * nested `Vec<Vec<f64>>` rows (pointer-chasing like Python lists),
+//! * full n² evaluation — symmetry is NOT exploited,
+//! * per-pair dispatch through a boxed closure (like CPython's dynamic
+//!   dispatch per bytecode op),
+//! * row-by-row copy into the flat matrix at the end.
+//!
+//! The *real* interpreted baseline (python/baseline/pure_vat.py) is timed by
+//! the eval harness when a Python runtime is available; EXPERIMENTS.md
+//! reports both columns.
+
+use super::{DistanceMatrix, Metric};
+use crate::data::Points;
+
+/// Build the full matrix the slow way. See module docs.
+pub fn build(points: &Points, metric: Metric) -> DistanceMatrix {
+    let n = points.n();
+    // boxed closure = opaque per-pair dispatch the optimizer cannot inline
+    let dist: Box<dyn Fn(&[f64], &[f64]) -> f64> =
+        Box::new(move |a, b| metric.eval(a, b));
+
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = Vec::with_capacity(n);
+        for j in 0..n {
+            // full recompute for (j, i) as well — no symmetry shortcut
+            row.push(dist(points.row(i), points.row(j)));
+        }
+        rows.push(row);
+    }
+
+    let mut m = DistanceMatrix::zeros(n);
+    for (i, row) in rows.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            m.set(i, j, v);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+
+    #[test]
+    fn matches_direct_metric_eval() {
+        let ds = blobs(30, 3, 2, 0.5, 21);
+        let m = build(&ds.points, Metric::Euclidean);
+        for i in 0..30 {
+            for j in 0..30 {
+                let want = Metric::Euclidean.eval(ds.points.row(i), ds.points.row(j));
+                assert_eq!(m.get(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_zero_diagonal() {
+        let ds = blobs(25, 2, 3, 0.5, 22);
+        let m = build(&ds.points, Metric::Manhattan);
+        assert_eq!(m.asymmetry(), 0.0);
+        for i in 0..25 {
+            assert_eq!(m.get(i, i), 0.0);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Multi-threaded distance-matrix builder — row-band parallelism over the
+//! blocked kernel (std::thread::scope; no rayon offline).
+//!
+//! The matrix is split into horizontal bands of rows; each worker fills its
+//! band of the *full* square (computing both triangles for its rows, so no
+//! cross-band writes and no mirroring pass). Work per band is balanced by
+//! construction (each band covers whole rows). This is the engine behind
+//! `runtime::ParallelEngine` and the §Perf "parallel blocked" row.
+
+use crate::data::Points;
+use crate::dissimilarity::{DistanceMatrix, Metric};
+
+/// Build with `threads` workers (0 = available_parallelism).
+pub fn build_parallel(points: &Points, metric: Metric, threads: usize) -> DistanceMatrix {
+    let n = points.n();
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    }
+    .clamp(1, n.max(1));
+    if n < 128 || threads == 1 {
+        // below ~128 points thread spawn overhead dominates
+        return DistanceMatrix::build_blocked(points, metric);
+    }
+
+    // Euclidean fast path: precompute norms once, share read-only
+    let norms: Option<Vec<f64>> = matches!(metric, Metric::Euclidean | Metric::SqEuclidean)
+        .then(|| {
+            (0..n)
+                .map(|i| points.row(i).iter().map(|v| v * v).sum())
+                .collect()
+        });
+
+    let mut data = vec![0.0f64; n * n];
+    let band = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, chunk) in data.chunks_mut(band * n).enumerate() {
+            let norms = norms.as_ref();
+            scope.spawn(move || {
+                let row0 = t * band;
+                for (local, out_row) in chunk.chunks_mut(n).enumerate() {
+                    let i = row0 + local;
+                    let a = points.row(i);
+                    match (metric, norms) {
+                        (Metric::Euclidean, Some(ns)) => {
+                            for (j, out) in out_row.iter_mut().enumerate() {
+                                if i == j {
+                                    *out = 0.0;
+                                    continue;
+                                }
+                                let mut dot = 0.0;
+                                for (x, y) in a.iter().zip(points.row(j)) {
+                                    dot += x * y;
+                                }
+                                *out = (ns[i] + ns[j] - 2.0 * dot).max(0.0).sqrt();
+                            }
+                        }
+                        (Metric::SqEuclidean, Some(ns)) => {
+                            for (j, out) in out_row.iter_mut().enumerate() {
+                                if i == j {
+                                    *out = 0.0;
+                                    continue;
+                                }
+                                let mut dot = 0.0;
+                                for (x, y) in a.iter().zip(points.row(j)) {
+                                    dot += x * y;
+                                }
+                                *out = (ns[i] + ns[j] - 2.0 * dot).max(0.0);
+                            }
+                        }
+                        _ => {
+                            for (j, out) in out_row.iter_mut().enumerate() {
+                                *out = if i == j { 0.0 } else { metric.eval(a, points.row(j)) };
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    DistanceMatrix::from_flat(data, n).expect("n*n buffer")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, moons};
+
+    #[test]
+    fn matches_blocked_all_metrics() {
+        let ds = blobs(301, 3, 3, 0.5, 170); // odd n exercises band tails
+        for metric in [
+            Metric::Euclidean,
+            Metric::SqEuclidean,
+            Metric::Manhattan,
+            Metric::Cosine,
+        ] {
+            let par = build_parallel(&ds.points, metric, 4);
+            let seq = DistanceMatrix::build_blocked(&ds.points, metric);
+            for i in 0..301 {
+                for j in 0..301 {
+                    assert!(
+                        (par.get(i, j) - seq.get(i, j)).abs() < 1e-9,
+                        "{metric:?} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_counts_agree() {
+        let ds = moons(300, 0.06, 171);
+        let one = build_parallel(&ds.points, Metric::Euclidean, 1);
+        for t in [2, 3, 8, 0] {
+            let multi = build_parallel(&ds.points, Metric::Euclidean, t);
+            for i in 0..300 {
+                for j in 0..300 {
+                    assert!((one.get(i, j) - multi.get(i, j)).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_input_falls_back() {
+        let ds = blobs(20, 2, 2, 0.4, 172);
+        let m = build_parallel(&ds.points, Metric::Euclidean, 8);
+        assert_eq!(m.n(), 20);
+        assert!(m.asymmetry() < 1e-12);
+    }
+}

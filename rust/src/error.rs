@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+/// Errors surfaced by the fast-vat library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Input shapes/sizes are inconsistent (e.g. ragged rows, n mismatch).
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// A request exceeded the largest AOT bucket or no artifact matches.
+    #[error("no artifact for request: {0}")]
+    NoArtifact(String),
+
+    /// artifacts/manifest.txt is missing or malformed.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT/XLA runtime failure (compile, execute, literal conversion).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Dataset parsing / IO.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Configuration file parse error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Coordinator shut down or queue closed.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Invalid argument to a public API.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

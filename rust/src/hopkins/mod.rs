@@ -1,0 +1,264 @@
+//! Hopkins statistic — the paper's Table-2 clusterability measure.
+//!
+//! H = Σuᵈ / (Σuᵈ + Σwᵈ) where, for m probes:
+//!   * uᵢ = distance from a synthetic point (uniform in the data's bounding
+//!     box) to its nearest real point,
+//!   * wᵢ = distance from a sampled real point to its nearest *other* real
+//!     point,
+//! and d is the exponent (the space dimension in Hopkins & Skellam 1954;
+//! many implementations use d = 1 — both are exposed, the paper's band is
+//! matched with the dimensional exponent).
+//!
+//! H ≈ 0.5 for uniform noise; H → 1 for strongly clustered data; the paper
+//! uses 0.75 as its "significant structure" threshold (§4.2).
+//!
+//! Two backends: the native path below, and the AOT XLA artifact
+//! (`runtime::XlaEngine::hopkins`) whose nearest-neighbour kernels are the
+//! L1 Pallas `mindist`/`mindist_excl` (see python/compile/kernels/).
+
+use crate::data::Points;
+use crate::error::{Error, Result};
+use crate::prng::Pcg32;
+
+/// Exponent convention for the statistic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exponent {
+    /// Raw distances (d = 1); many textbook implementations.
+    One,
+    /// Distances to the power of the data dimension (original formulation).
+    Dim,
+}
+
+/// Parameters for the Hopkins statistic.
+#[derive(Debug, Clone)]
+pub struct HopkinsParams {
+    /// Number of probes m; clamped to n-1. 0 means `max(10, n/10)`
+    /// (the common 10% rule the paper follows).
+    pub probes: usize,
+    /// Exponent convention.
+    pub exponent: Exponent,
+    /// RNG seed (probe placement + row sampling).
+    pub seed: u64,
+}
+
+impl Default for HopkinsParams {
+    fn default() -> Self {
+        Self {
+            probes: 0,
+            // Exponent::One matches the paper's Table-2 band (0.73–0.95):
+            // the dimensional exponent saturates H toward 1 on clustered
+            // data (≈0.99 on every Table-2 workload), whereas the raw-
+            // distance convention reproduces the reported spread.
+            exponent: Exponent::One,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// The sampled inputs for one Hopkins evaluation — exposed so the XLA
+/// backend can consume the exact same probes (engine-parity tests).
+#[derive(Debug, Clone)]
+pub struct HopkinsProbes {
+    /// Synthetic uniform probes, m×d flat.
+    pub synth: Vec<f64>,
+    /// Indices of the sampled real rows.
+    pub sample_idx: Vec<usize>,
+    /// Probe count.
+    pub m: usize,
+}
+
+/// Draw the probe set for a dataset.
+pub fn draw_probes(points: &Points, params: &HopkinsParams) -> Result<HopkinsProbes> {
+    let n = points.n();
+    let d = points.d();
+    if n < 2 {
+        return Err(Error::InvalidArg("hopkins needs at least 2 points".into()));
+    }
+    let m = if params.probes == 0 {
+        (n / 10).max(10).min(n - 1)
+    } else {
+        params.probes.min(n - 1)
+    };
+    let mut rng = Pcg32::new(params.seed);
+    let (lo, hi) = points.bounds();
+    let mut synth = Vec::with_capacity(m * d);
+    for _ in 0..m {
+        for j in 0..d {
+            synth.push(rng.uniform_in(lo[j], hi[j]));
+        }
+    }
+    let sample_idx = rng.choose_indices(n, m);
+    Ok(HopkinsProbes {
+        synth,
+        sample_idx,
+        m,
+    })
+}
+
+/// Fold nearest-neighbour distances into the statistic.
+pub fn fold(u_min: &[f64], w_min: &[f64], d: usize, exponent: Exponent) -> f64 {
+    let p = match exponent {
+        Exponent::One => 1.0,
+        Exponent::Dim => d as f64,
+    };
+    let us: f64 = u_min.iter().map(|&v| v.powf(p)).sum();
+    let ws: f64 = w_min.iter().map(|&v| v.powf(p)).sum();
+    if us + ws <= 0.0 {
+        0.5 // degenerate (all-identical data): call it unclusterable
+    } else {
+        us / (us + ws)
+    }
+}
+
+/// Native Hopkins statistic.
+pub fn hopkins(points: &Points, params: &HopkinsParams) -> Result<f64> {
+    let probes = draw_probes(points, params)?;
+    let (u_min, w_min) = nn_distances(points, &probes);
+    Ok(fold(&u_min, &w_min, points.d(), params.exponent))
+}
+
+/// Nearest-neighbour distances for a probe set (native backend).
+pub fn nn_distances(points: &Points, probes: &HopkinsProbes) -> (Vec<f64>, Vec<f64>) {
+    let n = points.n();
+    let d = points.d();
+    let u_min: Vec<f64> = (0..probes.m)
+        .map(|i| {
+            let probe = &probes.synth[i * d..(i + 1) * d];
+            (0..n)
+                .map(|j| sq_dist(probe, points.row(j)))
+                .fold(f64::INFINITY, f64::min)
+                .sqrt()
+        })
+        .collect();
+    let w_min: Vec<f64> = probes
+        .sample_idx
+        .iter()
+        .map(|&si| {
+            let probe = points.row(si);
+            (0..n)
+                .filter(|&j| j != si)
+                .map(|j| sq_dist(probe, points.row(j)))
+                .fold(f64::INFINITY, f64::min)
+                .sqrt()
+        })
+        .collect();
+    (u_min, w_min)
+}
+
+#[inline]
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let t = x - y;
+        s += t * t;
+    }
+    s
+}
+
+/// Average of `runs` Hopkins evaluations with decorrelated seeds — the
+/// stable read-out EXPERIMENTS.md reports (single draws are noisy).
+pub fn hopkins_mean(points: &Points, params: &HopkinsParams, runs: usize) -> Result<f64> {
+    let mut total = 0.0;
+    for r in 0..runs.max(1) {
+        let p = HopkinsParams {
+            seed: params.seed.wrapping_add(0x9E37_79B9 * r as u64),
+            ..params.clone()
+        };
+        total += hopkins(points, &p)?;
+    }
+    Ok(total / runs.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, uniform};
+    use crate::data::scale::Scaler;
+
+    #[test]
+    fn uniform_data_near_half() {
+        let ds = uniform(400, 2, 100);
+        let h = hopkins_mean(&ds.points, &HopkinsParams::default(), 8).unwrap();
+        assert!((0.35..0.65).contains(&h), "uniform H = {h}");
+    }
+
+    #[test]
+    fn clustered_data_above_threshold() {
+        let ds = blobs(400, 2, 3, 0.2, 101);
+        let z = Scaler::standardized(&ds.points);
+        let h = hopkins_mean(&z, &HopkinsParams::default(), 8).unwrap();
+        assert!(h > 0.75, "clustered H = {h} (paper threshold 0.75)");
+    }
+
+    #[test]
+    fn h_in_unit_interval_always() {
+        for seed in 0..10 {
+            let ds = blobs(50, 3, 2, 1.5, 200 + seed);
+            let h = hopkins(
+                &ds.points,
+                &HopkinsParams {
+                    seed,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert!((0.0..=1.0).contains(&h));
+        }
+    }
+
+    #[test]
+    fn exponent_one_less_extreme_than_dim() {
+        let ds = blobs(300, 2, 3, 0.15, 102);
+        let z = Scaler::standardized(&ds.points);
+        let h1 = hopkins_mean(
+            &z,
+            &HopkinsParams {
+                exponent: Exponent::One,
+                ..Default::default()
+            },
+            8,
+        )
+        .unwrap();
+        let hd = hopkins_mean(&z, &HopkinsParams::default(), 8).unwrap();
+        assert!(hd >= h1 - 0.05, "dim exponent sharpens: {hd} vs {h1}");
+    }
+
+    #[test]
+    fn probe_count_rules() {
+        let ds = uniform(200, 2, 103);
+        let p = draw_probes(&ds.points, &HopkinsParams::default()).unwrap();
+        assert_eq!(p.m, 20); // 10% rule
+        let p = draw_probes(
+            &ds.points,
+            &HopkinsParams {
+                probes: 500,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(p.m, 199); // clamped to n-1
+    }
+
+    #[test]
+    fn too_few_points_is_error() {
+        let ds = uniform(1, 2, 104);
+        assert!(hopkins(&ds.points, &HopkinsParams::default()).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = blobs(100, 2, 2, 0.4, 105);
+        let p = HopkinsParams::default();
+        assert_eq!(
+            hopkins(&ds.points, &p).unwrap(),
+            hopkins(&ds.points, &p).unwrap()
+        );
+    }
+
+    #[test]
+    fn duplicate_points_degenerate_to_half() {
+        let p = Points::new(vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0], 3, 2).unwrap();
+        let h = hopkins(&p, &HopkinsParams::default()).unwrap();
+        assert_eq!(h, 0.5);
+    }
+}

@@ -1,0 +1,46 @@
+//! # fast-vat — accelerated Visual Assessment of Cluster Tendency
+//!
+//! A production reimplementation of *Fast-VAT: Accelerating Cluster Tendency
+//! Visualization using Cython and Numba* (Avinash & Lachheb, 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — the O(n²d) pairwise-distance hot spot is a
+//!   Pallas kernel composed into JAX graphs, AOT-lowered to HLO text under
+//!   `artifacts/` (`make artifacts`); Python never runs at request time.
+//! * **L3 (this crate)** — the full VAT pipeline: dataset substrate, three
+//!   distance-matrix engines (naive "python-tier", blocked "numba-tier",
+//!   XLA/PJRT "cython-tier"), Prim-based VAT reordering, iVAT, sVAT, the
+//!   Hopkins statistic, K-Means/DBSCAN comparators, rendering, a concurrent
+//!   job coordinator with streaming VAT, and the paper's entire evaluation
+//!   harness.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fast_vat::data::generators::blobs;
+//! use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+//! use fast_vat::vat::vat;
+//!
+//! let ds = blobs(500, 2, 4, 0.4, 42);
+//! let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+//! let result = vat(&d);
+//! println!("VAT order: {:?}", &result.order[..8]);
+//! ```
+//!
+//! See `examples/` for the paper-evaluation driver and the service scenarios.
+
+pub mod bench_util;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dissimilarity;
+pub mod error;
+pub mod hopkins;
+pub mod metrics;
+pub mod prng;
+pub mod runtime;
+pub mod vat;
+pub mod viz;
+
+pub use error::{Error, Result};

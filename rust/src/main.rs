@@ -1,0 +1,343 @@
+//! fast-vat CLI — the deployment entry point.
+//!
+//! Subcommands (run with no args for usage):
+//!   vat       assess a CSV or generated dataset, write PGM/ASCII output
+//!   hopkins   print the Hopkins statistic
+//!   pipeline  tendency-informed auto-clustering (paper §5.2)
+//!   serve     demo the concurrent job service over a synthetic job mix
+//!   info      runtime/artifact diagnostics
+//!
+//! Arg parsing is hand-rolled (offline registry carries no clap); flags are
+//! `--key value` pairs.
+
+use std::collections::HashMap;
+
+use fast_vat::config::ServiceConfig;
+use fast_vat::coordinator::pipeline::{auto_cluster, PipelineConfig};
+use fast_vat::coordinator::service::VatService;
+use fast_vat::coordinator::JobOptions;
+use fast_vat::data::csv::{load_csv, CsvOptions};
+use fast_vat::data::generators;
+use fast_vat::data::scale::Scaler;
+use fast_vat::data::Dataset;
+use fast_vat::error::{Error, Result};
+use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
+use fast_vat::runtime::engine_by_name;
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::{ivat::ivat, vat};
+use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm, render};
+
+fn usage() -> ! {
+    eprintln!(
+        "fast-vat — accelerated Visual Assessment of Cluster Tendency
+
+USAGE:
+  fast-vat vat      [--input data.csv | --dataset NAME] [--engine naive|blocked|xla|xla-mm]
+                    [--ivat] [--out image.pgm] [--ascii N] [--artifacts DIR]
+  fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
+  fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
+                    [--k N | --eps F] [--min-pts N]
+  fast-vat pipeline [--input data.csv | --dataset NAME] [--engine ...]
+  fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
+  fast-vat info     [--artifacts DIR]
+
+DATASETS: iris, blobs, moons, circles, gmm, spotify, mall, uniform
+  (generator datasets accept --n and --seed)
+"
+    );
+    std::process::exit(2);
+}
+
+/// Parse `--key value` pairs plus boolean flags.
+fn parse_flags(args: &[String], booleans: &[&str]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| Error::InvalidArg(format!("expected --flag, got {a}")))?;
+        if booleans.contains(&key) {
+            out.insert(key.to_string(), "true".to_string());
+            i += 1;
+        } else {
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| Error::InvalidArg(format!("--{key} needs a value")))?;
+            out.insert(key.to_string(), v.clone());
+            i += 2;
+        }
+    }
+    Ok(out)
+}
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::InvalidArg(format!("--{key} must be an integer"))),
+    }
+}
+
+fn load_dataset(flags: &HashMap<String, String>) -> Result<Dataset> {
+    if let Some(path) = flags.get("input") {
+        return load_csv(path, &CsvOptions::default());
+    }
+    let name = flags.get("dataset").map(String::as_str).unwrap_or("blobs");
+    let n = get_usize(flags, "n", 500)?;
+    let seed = get_usize(flags, "seed", 42)? as u64;
+    Ok(match name {
+        "iris" => generators::paper_datasets(seed).remove(0),
+        "blobs" => generators::blobs(n, 2, 4, 0.6, seed),
+        "moons" => generators::moons(n, 0.08, seed),
+        "circles" => generators::circles(n, 0.06, 0.45, seed),
+        "gmm" => generators::gmm(n, 2, 3, seed),
+        "spotify" => generators::spotify_like(n, seed),
+        "mall" => generators::mall_like(n.min(500), seed),
+        "uniform" => generators::uniform(n, 2, seed),
+        other => return Err(Error::InvalidArg(format!("unknown dataset {other}"))),
+    })
+}
+
+fn cmd_vat(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["ivat"])?;
+    let ds = load_dataset(&flags)?;
+    let artifacts = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let engine = engine_by_name(
+        flags.get("engine").map(String::as_str).unwrap_or("blocked"),
+        &artifacts,
+    )?;
+    let z = Scaler::standardized(&ds.points);
+    let t0 = std::time::Instant::now();
+    let d = engine.pdist(&z)?;
+    let t_dist = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let v = vat(&d);
+    let t_vat = t1.elapsed().as_secs_f64();
+
+    let use_ivat = flags.contains_key("ivat");
+    let display = if use_ivat {
+        ivat(&v).transformed
+    } else {
+        v.reordered.clone()
+    };
+    let det = BlockDetector::default();
+    let blocks = det.detect(&display);
+    println!(
+        "{}: n={} d={} engine={} distance={t_dist:.4}s reorder={t_vat:.4}s",
+        ds.name,
+        ds.points.n(),
+        ds.points.d(),
+        engine.name()
+    );
+    println!("insight: {} | blocks: {}", det.insight(&v), blocks.len());
+
+    let img = render(&display);
+    if let Some(out) = flags.get("out") {
+        write_pgm(&img, out)?;
+        println!("wrote {out}");
+    }
+    let ascii_side = get_usize(&flags, "ascii", 0)?;
+    if ascii_side > 0 {
+        println!("{}", to_ascii(&img, ascii_side));
+    }
+    Ok(())
+}
+
+fn cmd_hopkins(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let ds = load_dataset(&flags)?;
+    let runs = get_usize(&flags, "runs", 5)?;
+    let z = Scaler::standardized(&ds.points);
+    let h = hopkins_mean(&z, &HopkinsParams::default(), runs)?;
+    println!("{}: Hopkins = {h:.4} ({} runs)", ds.name, runs);
+    println!(
+        "interpretation: {}",
+        if h > 0.75 {
+            "significant cluster structure (paper threshold 0.75)"
+        } else if h > 0.6 {
+            "weak/borderline structure"
+        } else {
+            "no significant structure"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_cluster(args: &[String]) -> Result<()> {
+    use fast_vat::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
+    use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+    use fast_vat::metrics::{ari, silhouette, to_isize};
+    use fast_vat::vat::dendrogram::Dendrogram;
+
+    let flags = parse_flags(args, &[])?;
+    let ds = load_dataset(&flags)?;
+    let z = Scaler::standardized(&ds.points);
+    let algo = flags.get("algo").map(String::as_str).unwrap_or("kmeans");
+    let k = get_usize(&flags, "k", ds.k_true().max(2))?;
+    let labels: Vec<isize> = match algo {
+        "kmeans" => {
+            let r = kmeans(
+                &z,
+                &KMeansParams {
+                    k,
+                    ..Default::default()
+                },
+            )?;
+            println!("kmeans: k={k} inertia={:.4} iters={}", r.inertia, r.iterations);
+            to_isize(&r.labels)
+        }
+        "dbscan" => {
+            let min_pts = get_usize(&flags, "min-pts", 5)?;
+            let eps = match flags.get("eps") {
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::InvalidArg("--eps must be a float".into()))?,
+                None => suggest_eps(&z, min_pts, 0.98),
+            };
+            let r = dbscan(&z, &DbscanParams { eps, min_pts })?;
+            println!(
+                "dbscan: eps={eps:.4} min_pts={min_pts} clusters={} noise={}",
+                r.clusters, r.noise
+            );
+            r.labels
+        }
+        "single-link" => {
+            let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
+            let den = Dendrogram::from_vat(&vat(&d));
+            println!("single-linkage (VAT MST): k={k}");
+            to_isize(&den.cut_k(k))
+        }
+        other => return Err(Error::InvalidArg(format!("unknown algo {other}"))),
+    };
+    let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
+    println!("silhouette: {:.3}", silhouette(&d, &labels));
+    if let Some(truth) = &ds.labels {
+        println!("ARI vs ground truth: {:.3}", ari(&to_isize(truth), &labels));
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let ds = load_dataset(&flags)?;
+    let artifacts = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let engine = engine_by_name(
+        flags.get("engine").map(String::as_str).unwrap_or("blocked"),
+        &artifacts,
+    )?;
+    let report = auto_cluster(&engine, &ds.points, &PipelineConfig::default())?;
+    println!("{}: {}", ds.name, report.insight);
+    println!(
+        "hopkins={:.4} k_estimate={} choice={:?}",
+        report.hopkins, report.k_estimate, report.choice
+    );
+    if let (Some(km), Some(db)) = (report.kmeans_silhouette, report.dbscan_silhouette) {
+        println!("silhouette: kmeans={km:.3} dbscan={db:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let cfg = ServiceConfig {
+        workers: get_usize(&flags, "workers", 4)?,
+        queue_depth: get_usize(&flags, "queue", 32)?,
+        engine: flags
+            .get("engine")
+            .cloned()
+            .unwrap_or_else(|| "blocked".into()),
+        artifacts_dir: flags
+            .get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".into()),
+    };
+    let jobs = get_usize(&flags, "jobs", 16)?;
+    let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
+    let service = VatService::start(&cfg, engine);
+    println!(
+        "service up: {} workers, queue {}, engine {}",
+        cfg.workers,
+        cfg.queue_depth,
+        service.engine_name()
+    );
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    for j in 0..jobs {
+        let ds = match j % 4 {
+            0 => generators::blobs(300, 2, 4, 0.5, j as u64),
+            1 => generators::moons(300, 0.07, j as u64),
+            2 => generators::gmm(300, 2, 3, j as u64),
+            _ => generators::spotify_like(300, j as u64),
+        };
+        let (_, t) = service.submit(ds.points, JobOptions::default())?;
+        tickets.push(t);
+    }
+    let mut done = 0;
+    for t in tickets {
+        let out = t
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped".into()))??;
+        done += 1;
+        println!(
+            "job {:>3}: k~{} H={:.3} [{}] dist {:.4}s order {:.4}s",
+            out.id,
+            out.k_estimate,
+            out.hopkins.unwrap_or(f64::NAN),
+            out.insight,
+            out.t_distance_s,
+            out.t_order_s
+        );
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{done} jobs in {dt:.2}s -> {:.1} jobs/s",
+        done as f64 / dt.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    match fast_vat::runtime::manifest::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts dir: {dir} ({} artifacts)", m.specs.len());
+            for s in &m.specs {
+                println!("  {} {:?} -> {}", s.graph, s.params, s.file);
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); native engines still available"),
+    }
+    println!("engines: naive (python-tier), blocked (numba-tier), xla / xla-mm (cython-tier)");
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "vat" => cmd_vat(rest),
+        "hopkins" => cmd_hopkins(rest),
+        "cluster" => cmd_cluster(rest),
+        "pipeline" => cmd_pipeline(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,435 @@
+//! External cluster-validity metrics used by the Table-3 harness: adjusted
+//! Rand index, normalized mutual information, purity, and the silhouette
+//! coefficient (internal). Noise labels (DBSCAN's -1) are treated as
+//! singleton clusters for ARI/NMI, matching scikit-learn's convention.
+
+use std::collections::HashMap;
+
+use crate::dissimilarity::DistanceMatrix;
+
+/// Contingency table between two labelings (noise -1 expanded to unique
+/// singleton ids so partitions stay partitions).
+fn contingency(a: &[isize], b: &[isize]) -> (Vec<Vec<usize>>, Vec<usize>, Vec<usize>) {
+    assert_eq!(a.len(), b.len(), "label vectors must align");
+    let mut next_a = a.iter().copied().max().unwrap_or(0) + 1;
+    let mut next_b = b.iter().copied().max().unwrap_or(0) + 1;
+    let expand = |labels: &[isize], next: &mut isize| -> Vec<isize> {
+        labels
+            .iter()
+            .map(|&l| {
+                if l < 0 {
+                    let v = *next;
+                    *next += 1;
+                    v
+                } else {
+                    l
+                }
+            })
+            .collect()
+    };
+    let ea = expand(a, &mut next_a);
+    let eb = expand(b, &mut next_b);
+
+    let mut ida: HashMap<isize, usize> = HashMap::new();
+    let mut idb: HashMap<isize, usize> = HashMap::new();
+    for &l in &ea {
+        let n = ida.len();
+        ida.entry(l).or_insert(n);
+    }
+    for &l in &eb {
+        let n = idb.len();
+        idb.entry(l).or_insert(n);
+    }
+    let (ra, rb) = (ida.len(), idb.len());
+    let mut table = vec![vec![0usize; rb]; ra];
+    let mut rows = vec![0usize; ra];
+    let mut cols = vec![0usize; rb];
+    for (&la, &lb) in ea.iter().zip(&eb) {
+        let (i, j) = (ida[&la], idb[&lb]);
+        table[i][j] += 1;
+        rows[i] += 1;
+        cols[j] += 1;
+    }
+    (table, rows, cols)
+}
+
+fn comb2(x: usize) -> f64 {
+    (x as f64) * (x as f64 - 1.0) / 2.0
+}
+
+/// Adjusted Rand index (Hubert & Arabie 1985). 1 = identical partitions,
+/// ~0 = chance agreement.
+pub fn ari(a: &[isize], b: &[isize]) -> f64 {
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let (table, rows, cols) = contingency(a, b);
+    let sum_ij: f64 = table
+        .iter()
+        .flat_map(|r| r.iter())
+        .map(|&x| comb2(x))
+        .sum();
+    let sum_a: f64 = rows.iter().map(|&x| comb2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| comb2(x)).sum();
+    let total = comb2(n);
+    let expected = sum_a * sum_b / total.max(1.0);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // both trivial partitions
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Normalized mutual information with arithmetic-mean normalization.
+pub fn nmi(a: &[isize], b: &[isize]) -> f64 {
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let (table, rows, cols) = contingency(a, b);
+    let nf = n as f64;
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &x) in row.iter().enumerate() {
+            if x == 0 {
+                continue;
+            }
+            let pij = x as f64 / nf;
+            let pi = rows[i] as f64 / nf;
+            let pj = cols[j] as f64 / nf;
+            mi += pij * (pij / (pi * pj)).ln();
+        }
+    }
+    let h = |counts: &[usize]| -> f64 {
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / nf;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let (ha, hb) = (h(&rows), h(&cols));
+    if ha <= 0.0 && hb <= 0.0 {
+        return 1.0; // both single-cluster
+    }
+    let denom = 0.5 * (ha + hb);
+    if denom <= 0.0 {
+        0.0
+    } else {
+        (mi / denom).clamp(0.0, 1.0)
+    }
+}
+
+/// Purity: fraction of points in their cluster's majority true class.
+pub fn purity(truth: &[isize], pred: &[isize]) -> f64 {
+    let n = truth.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let (table, _, cols) = contingency(truth, pred);
+    let mut correct = 0usize;
+    for j in 0..cols.len() {
+        correct += table.iter().map(|row| row[j]).max().unwrap_or(0);
+    }
+    correct as f64 / n as f64
+}
+
+/// Mean silhouette coefficient over a precomputed distance matrix. Noise
+/// points (label < 0) are excluded; clusters of size 1 score 0.
+pub fn silhouette(d: &DistanceMatrix, labels: &[isize]) -> f64 {
+    let n = d.n();
+    assert_eq!(labels.len(), n);
+    let clusters: Vec<isize> = {
+        let mut c: Vec<isize> = labels.iter().copied().filter(|&l| l >= 0).collect();
+        c.sort_unstable();
+        c.dedup();
+        c
+    };
+    if clusters.len() < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for i in 0..n {
+        let li = labels[i];
+        if li < 0 {
+            continue;
+        }
+        let own: Vec<usize> = (0..n).filter(|&j| j != i && labels[j] == li).collect();
+        if own.is_empty() {
+            count += 1; // singleton scores 0
+            continue;
+        }
+        let a = own.iter().map(|&j| d.get(i, j)).sum::<f64>() / own.len() as f64;
+        let mut b = f64::INFINITY;
+        for &c in &clusters {
+            if c == li {
+                continue;
+            }
+            let other: Vec<usize> = (0..n).filter(|&j| labels[j] == c).collect();
+            if other.is_empty() {
+                continue;
+            }
+            let mean = other.iter().map(|&j| d.get(i, j)).sum::<f64>() / other.len() as f64;
+            b = b.min(mean);
+        }
+        total += (b - a) / a.max(b);
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+/// Convert usize labels to the isize convention shared with DBSCAN.
+pub fn to_isize(labels: &[usize]) -> Vec<isize> {
+    labels.iter().map(|&l| l as isize).collect()
+}
+
+/// Davies–Bouldin index over raw points (lower = better separation).
+/// Noise points (label < 0) are excluded.
+pub fn davies_bouldin(points: &crate::data::Points, labels: &[isize]) -> f64 {
+    let d = points.d();
+    let clusters = distinct_nonnoise(labels);
+    if clusters.len() < 2 {
+        return 0.0;
+    }
+    // centroids + mean intra-cluster distance (scatter)
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(clusters.len());
+    let mut scatter: Vec<f64> = Vec::with_capacity(clusters.len());
+    for &c in &clusters {
+        let members: Vec<usize> = (0..points.n()).filter(|&i| labels[i] == c).collect();
+        let mut mean = vec![0.0; d];
+        for &i in &members {
+            for (j, &v) in points.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= members.len() as f64;
+        }
+        let s = members
+            .iter()
+            .map(|&i| {
+                points
+                    .row(i)
+                    .iter()
+                    .zip(&mean)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / members.len() as f64;
+        centroids.push(mean);
+        scatter.push(s);
+    }
+    let k = clusters.len();
+    let mut total = 0.0;
+    for i in 0..k {
+        let mut worst: f64 = 0.0;
+        for j in 0..k {
+            if i == j {
+                continue;
+            }
+            let dist = centroids[i]
+                .iter()
+                .zip(&centroids[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            if dist > 1e-300 {
+                worst = worst.max((scatter[i] + scatter[j]) / dist);
+            }
+        }
+        total += worst;
+    }
+    total / k as f64
+}
+
+/// Calinski–Harabasz index (higher = better separation). Noise excluded.
+pub fn calinski_harabasz(points: &crate::data::Points, labels: &[isize]) -> f64 {
+    let d = points.d();
+    let clusters = distinct_nonnoise(labels);
+    let members_all: Vec<usize> = (0..points.n()).filter(|&i| labels[i] >= 0).collect();
+    let n = members_all.len();
+    let k = clusters.len();
+    if k < 2 || n <= k {
+        return 0.0;
+    }
+    let mut grand = vec![0.0; d];
+    for &i in &members_all {
+        for (j, &v) in points.row(i).iter().enumerate() {
+            grand[j] += v;
+        }
+    }
+    for g in &mut grand {
+        *g /= n as f64;
+    }
+    let mut between = 0.0;
+    let mut within = 0.0;
+    for &c in &clusters {
+        let members: Vec<usize> = (0..points.n()).filter(|&i| labels[i] == c).collect();
+        let mut mean = vec![0.0; d];
+        for &i in &members {
+            for (j, &v) in points.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= members.len() as f64;
+        }
+        between += members.len() as f64
+            * mean
+                .iter()
+                .zip(&grand)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>();
+        for &i in &members {
+            within += points
+                .row(i)
+                .iter()
+                .zip(&mean)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>();
+        }
+    }
+    if within <= 1e-300 {
+        return f64::INFINITY;
+    }
+    (between / (k - 1) as f64) / (within / (n - k) as f64)
+}
+
+fn distinct_nonnoise(labels: &[isize]) -> Vec<isize> {
+    let mut c: Vec<isize> = labels.iter().copied().filter(|&l| l >= 0).collect();
+    c.sort_unstable();
+    c.dedup();
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::Metric;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn ari_identity_and_permuted_names() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(ari(&a, &a), 1.0);
+        let renamed = vec![5, 5, 3, 3, 9, 9];
+        assert_eq!(ari(&a, &renamed), 1.0);
+    }
+
+    #[test]
+    fn ari_near_zero_for_random() {
+        let mut rng = Pcg32::new(80);
+        let a: Vec<isize> = (0..500).map(|_| rng.below(4) as isize).collect();
+        let b: Vec<isize> = (0..500).map(|_| rng.below(4) as isize).collect();
+        let s = ari(&a, &b);
+        assert!(s.abs() < 0.07, "random ARI {s}");
+    }
+
+    #[test]
+    fn ari_penalizes_partial_mismatch() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        let s = ari(&a, &b);
+        assert!(s > 0.0 && s < 1.0, "partial ARI {s}");
+    }
+
+    #[test]
+    fn nmi_bounds_and_identity() {
+        let a = vec![0, 0, 1, 1];
+        assert_eq!(nmi(&a, &a), 1.0);
+        let mut rng = Pcg32::new(81);
+        let x: Vec<isize> = (0..300).map(|_| rng.below(3) as isize).collect();
+        let y: Vec<isize> = (0..300).map(|_| rng.below(3) as isize).collect();
+        let s = nmi(&x, &y);
+        assert!((0.0..=1.0).contains(&s));
+        assert!(s < 0.1, "random NMI {s}");
+    }
+
+    #[test]
+    fn noise_expanded_as_singletons() {
+        let truth = vec![0, 0, 1, 1];
+        let with_noise = vec![0, 0, -1, -1];
+        // the two -1s become distinct singletons, so they can't look like
+        // one recovered cluster
+        let s = ari(&truth, &with_noise);
+        assert!(s < 1.0);
+    }
+
+    #[test]
+    fn purity_majority() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 0, 1, 1, 1, 1];
+        // cluster 0: majority class 0 (2), cluster 1: majority class 1 (3)
+        assert!((purity(&truth, &pred) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn silhouette_separated_vs_merged() {
+        let ds = blobs(90, 2, 3, 0.15, 82);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let truth = to_isize(ds.labels.as_ref().unwrap());
+        let good = silhouette(&d, &truth);
+        assert!(good > 0.6, "separated silhouette {good}");
+        // random labels score near zero
+        let mut rng = Pcg32::new(83);
+        let bad_labels: Vec<isize> = (0..90).map(|_| rng.below(3) as isize).collect();
+        let bad = silhouette(&d, &bad_labels);
+        assert!(bad < 0.2, "random silhouette {bad}");
+        assert!(good > bad);
+    }
+
+    #[test]
+    fn silhouette_single_cluster_zero() {
+        let ds = blobs(30, 2, 1, 0.3, 84);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        assert_eq!(silhouette(&d, &vec![0; 30]), 0.0);
+    }
+
+    #[test]
+    fn davies_bouldin_prefers_separation() {
+        use crate::data::generators::separated_blobs;
+        let tight = separated_blobs(120, 3, 0.2, 10.0, 85);
+        let loose = separated_blobs(120, 3, 2.5, 10.0, 85);
+        let lt = to_isize(tight.labels.as_ref().unwrap());
+        let ll = to_isize(loose.labels.as_ref().unwrap());
+        let db_tight = davies_bouldin(&tight.points, &lt);
+        let db_loose = davies_bouldin(&loose.points, &ll);
+        assert!(db_tight < db_loose, "{db_tight} vs {db_loose}");
+        assert!(db_tight > 0.0);
+    }
+
+    #[test]
+    fn calinski_harabasz_prefers_separation() {
+        use crate::data::generators::separated_blobs;
+        let tight = separated_blobs(120, 3, 0.2, 10.0, 86);
+        let loose = separated_blobs(120, 3, 2.5, 10.0, 86);
+        let lt = to_isize(tight.labels.as_ref().unwrap());
+        let ll = to_isize(loose.labels.as_ref().unwrap());
+        assert!(
+            calinski_harabasz(&tight.points, &lt) > calinski_harabasz(&loose.points, &ll)
+        );
+    }
+
+    #[test]
+    fn internal_indices_degenerate_cases() {
+        let ds = blobs(20, 2, 1, 0.3, 87);
+        let one_cluster = vec![0isize; 20];
+        assert_eq!(davies_bouldin(&ds.points, &one_cluster), 0.0);
+        assert_eq!(calinski_harabasz(&ds.points, &one_cluster), 0.0);
+        // all-noise
+        let noise = vec![-1isize; 20];
+        assert_eq!(davies_bouldin(&ds.points, &noise), 0.0);
+        assert_eq!(calinski_harabasz(&ds.points, &noise), 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Padding/slicing between arbitrary request shapes and static AOT buckets.
+//!
+//! Mirrors the conventions documented in python/compile/model.py (keep in
+//! sync): feature axis zero-padded to the bucket `d`; extra rows are
+//! arbitrary for `pdist`/`assign` (output block unaffected) and must sit
+//! `PAD_OFFSET` away from the data for `hopkins` (so they never win a
+//! nearest-neighbour min). Outputs are sliced back to the request shape.
+//! The python test `tests/test_padding.py` proves the scheme on the jax
+//! side; `rust/tests/xla_parity.rs` proves it end-to-end through PJRT.
+
+use crate::data::Points;
+
+/// Pad-row placement offset for hopkins X rows (see model.py PAD_OFFSET).
+pub const PAD_OFFSET: f32 = 1.0e4;
+
+/// Pad a flat f64 point buffer into an `n_to x d_to` f32 buffer.
+/// Feature padding is 0; row padding fills every coordinate with `fill`.
+pub fn pad_points_f32(
+    points: &Points,
+    n_to: usize,
+    d_to: usize,
+    fill: f32,
+) -> Vec<f32> {
+    assert!(points.n() <= n_to, "rows exceed bucket");
+    assert!(points.d() <= d_to, "features exceed bucket");
+    let mut out = vec![0.0f32; n_to * d_to];
+    for i in 0..points.n() {
+        for (j, &v) in points.row(i).iter().enumerate() {
+            out[i * d_to + j] = v as f32;
+        }
+    }
+    for i in points.n()..n_to {
+        for j in 0..d_to {
+            out[i * d_to + j] = fill;
+        }
+    }
+    out
+}
+
+/// Same, from a raw flat f64 slice (m rows of d features).
+pub fn pad_flat_f32(
+    flat: &[f64],
+    m: usize,
+    d: usize,
+    m_to: usize,
+    d_to: usize,
+    fill: f32,
+) -> Vec<f32> {
+    assert_eq!(flat.len(), m * d, "flat buffer shape");
+    assert!(m <= m_to && d <= d_to, "shape exceeds bucket");
+    let mut out = vec![0.0f32; m_to * d_to];
+    for i in 0..m {
+        for j in 0..d {
+            out[i * d_to + j] = flat[i * d + j] as f32;
+        }
+    }
+    for i in m..m_to {
+        for j in 0..d_to {
+            out[i * d_to + j] = fill;
+        }
+    }
+    out
+}
+
+/// Pad an index vector with `fill` (used for hopkins s_idx: pad probes point
+/// at pad rows so their min is a harmless 0 that gets sliced away).
+pub fn pad_indices_i32(idx: &[usize], m_to: usize, fill: i32) -> Vec<i32> {
+    let mut out: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+    out.resize(m_to, fill);
+    out
+}
+
+/// Slice the top-left `n x n` block out of a flat `n_b x n_b` f32 matrix,
+/// widening to f64.
+pub fn slice_square_f64(flat: &[f32], n_b: usize, n: usize) -> Vec<f64> {
+    assert_eq!(flat.len(), n_b * n_b, "bucket matrix shape");
+    assert!(n <= n_b);
+    let mut out = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            out.push(flat[i * n_b + j] as f64);
+        }
+    }
+    out
+}
+
+/// Slice the top-left `rows x cols` block out of a flat `rb x cb` matrix.
+pub fn slice_rect_f64(flat: &[f32], rb: usize, cb: usize, rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(flat.len(), rb * cb, "bucket matrix shape");
+    assert!(rows <= rb && cols <= cb);
+    let mut out = Vec::with_capacity(rows * cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            out.push(flat[i * cb + j] as f64);
+        }
+    }
+    out
+}
+
+/// First `m` entries of a vector, widened to f64.
+pub fn slice_vec_f64(flat: &[f32], m: usize) -> Vec<f64> {
+    assert!(m <= flat.len());
+    flat[..m].iter().map(|&v| v as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_points_layout() {
+        let p = Points::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let out = pad_points_f32(&p, 4, 3, 9.0);
+        assert_eq!(out.len(), 12);
+        assert_eq!(&out[0..3], &[1.0, 2.0, 0.0]); // zero feature pad
+        assert_eq!(&out[3..6], &[3.0, 4.0, 0.0]);
+        assert_eq!(&out[6..9], &[9.0, 9.0, 9.0]); // row pad fill
+    }
+
+    #[test]
+    #[should_panic(expected = "rows exceed bucket")]
+    fn pad_points_overflow_panics() {
+        let p = Points::from_rows(&[vec![1.0], vec![2.0]]).unwrap();
+        pad_points_f32(&p, 1, 1, 0.0);
+    }
+
+    #[test]
+    fn pad_flat_matches_pad_points() {
+        let p = Points::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let a = pad_points_f32(&p, 3, 4, 5.0);
+        let b = pad_flat_f32(p.flat(), 2, 2, 3, 4, 5.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slice_square_recovers_block() {
+        // 3x3 bucket matrix, want 2x2 block
+        let flat: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let out = slice_square_f64(&flat, 3, 2);
+        assert_eq!(out, vec![0.0, 1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn slice_rect_recovers_block() {
+        let flat: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 3x4
+        let out = slice_rect_f64(&flat, 3, 4, 2, 3);
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn pad_indices_fills_tail() {
+        assert_eq!(pad_indices_i32(&[3, 7], 4, -5), vec![3, 7, -5, -5]);
+    }
+
+    #[test]
+    fn roundtrip_pad_slice_identity() {
+        let p = Points::from_rows(&[vec![1.5, -2.0], vec![0.0, 4.0], vec![9.0, 1.0]]).unwrap();
+        let padded = pad_points_f32(&p, 8, 4, 0.0);
+        let back = slice_rect_f64(&padded, 8, 4, 3, 2);
+        assert_eq!(back, p.flat());
+    }
+}

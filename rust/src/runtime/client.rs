@@ -1,0 +1,207 @@
+//! XlaRuntime — owns the PJRT CPU client and the compiled executables.
+//!
+//! Loads HLO *text* artifacts (see aot.py for why text, not protos),
+//! compiles them once per process, and exposes typed entry points for each
+//! L2 graph. PJRT wrapper types hold raw pointers and are not `Send`, so
+//! this type is single-threaded by construction; cross-thread access goes
+//! through [`super::XlaHandle`]'s executor thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::data::Points;
+use crate::dissimilarity::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::hopkins::HopkinsProbes;
+
+use super::bucket;
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Single-threaded PJRT runtime over the artifacts directory.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    fn exe(&self, spec: &ArtifactSpec) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&spec.file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache
+            .borrow_mut()
+            .insert(spec.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact (warms the cache; used by the service).
+    pub fn warmup(&self) -> Result<usize> {
+        let specs: Vec<ArtifactSpec> = self.manifest.specs.clone();
+        for spec in &specs {
+            self.exe(spec)?;
+        }
+        Ok(specs.len())
+    }
+
+    fn literal_matrix_f32(vals: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(vals).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// Euclidean pairwise distance matrix through the AOT artifact.
+    ///
+    /// `pallas = true` runs the Pallas-tiled kernel artifact (`pdist`);
+    /// `false` runs the XLA-fused dot-trick variant (`pdist_mm`) — the two
+    /// are compared by the A5 ablation bench.
+    pub fn pdist(&self, points: &Points, pallas: bool) -> Result<DistanceMatrix> {
+        let graph = if pallas { "pdist" } else { "pdist_mm" };
+        let n = points.n();
+        if n == 0 {
+            return Ok(DistanceMatrix::zeros(0));
+        }
+        let spec = self
+            .manifest
+            .find(graph, &[("n", n), ("d", points.d())])?
+            .clone();
+        let (nb, db) = (spec.param("n").unwrap(), spec.param("d").unwrap());
+        let padded = bucket::pad_points_f32(points, nb, db, 0.0);
+        let x = Self::literal_matrix_f32(&padded, nb, db)?;
+        let exe = self.exe(&spec)?;
+        let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let flat: Vec<f32> = out.to_vec()?;
+        if flat.len() != nb * nb {
+            return Err(Error::Xla(format!(
+                "pdist output len {} != {}",
+                flat.len(),
+                nb * nb
+            )));
+        }
+        let mut m =
+            DistanceMatrix::from_flat(bucket::slice_square_f64(&flat, nb, n), n)?;
+        // exact-zero the diagonal: the f32 dot-trick leaves ~1e-3 residue
+        // there, and VAT/iVAT assume d(i,i) == 0
+        for i in 0..n {
+            m.set(i, i, 0.0);
+        }
+        Ok(m)
+    }
+
+    /// Hopkins nearest-neighbour distances through the AOT artifact.
+    ///
+    /// The data must be standardized (unit-variance scale): the pad rows are
+    /// placed at `PAD_OFFSET` and must dominate any real distance — see
+    /// model.py. Returns `(u_min, w_min)` for `probes.m` probes.
+    pub fn hopkins_nn(
+        &self,
+        points: &Points,
+        probes: &HopkinsProbes,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (n, d) = (points.n(), points.d());
+        let m = probes.m;
+        let spec = self
+            .manifest
+            .find("hopkins", &[("n", n), ("m", m), ("d", d)])?
+            .clone();
+        let (nb, mb, db) = (
+            spec.param("n").unwrap(),
+            spec.param("m").unwrap(),
+            spec.param("d").unwrap(),
+        );
+        // guard the pad-row guarantee on real rows
+        let (lo, hi) = points.bounds();
+        let diam: f64 = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| (h - l) * (h - l))
+            .sum::<f64>()
+            .sqrt();
+        if diam > bucket::PAD_OFFSET as f64 / 10.0 {
+            return Err(Error::InvalidArg(
+                "hopkins XLA path requires standardized data (diameter too \
+                 large for the pad-row guarantee); call Scaler::standardized \
+                 first"
+                    .into(),
+            ));
+        }
+
+        let x = bucket::pad_points_f32(points, nb, db, bucket::PAD_OFFSET);
+        let u = bucket::pad_flat_f32(&probes.synth, m, d, mb, db, 0.0);
+        let s_rows = points.select(&probes.sample_idx);
+        // pad probes sit on top of pad X rows (same PAD_OFFSET fill) and
+        // point their exclusion index at X pad row `n` — their outputs are
+        // sliced away below.
+        let s = bucket::pad_flat_f32(s_rows.flat(), m, d, mb, db, bucket::PAD_OFFSET);
+        let idx = bucket::pad_indices_i32(&probes.sample_idx, mb, n as i32);
+
+        let lu = Self::literal_matrix_f32(&u, mb, db)?;
+        let ls = Self::literal_matrix_f32(&s, mb, db)?;
+        let lidx = xla::Literal::vec1(&idx);
+        let lx = Self::literal_matrix_f32(&x, nb, db)?;
+        let exe = self.exe(&spec)?;
+        let result =
+            exe.execute::<xla::Literal>(&[lu, ls, lidx, lx])?[0][0].to_literal_sync()?;
+        let (u_out, w_out) = result.to_tuple2()?;
+        let u_min = bucket::slice_vec_f64(&u_out.to_vec::<f32>()?, m);
+        let w_min = bucket::slice_vec_f64(&w_out.to_vec::<f32>()?, m);
+        Ok((u_min, w_min))
+    }
+
+    /// K-Means assignment distances `[n, k]` through the AOT artifact.
+    /// `centroids` is flat k×d (same d as points).
+    pub fn assign(&self, points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
+        let (n, d) = (points.n(), points.d());
+        if centroids.len() != k * d {
+            return Err(Error::Shape(format!(
+                "centroids len {} != k*d = {}",
+                centroids.len(),
+                k * d
+            )));
+        }
+        let spec = self
+            .manifest
+            .find("kmeans_assign", &[("n", n), ("k", k), ("d", d)])?
+            .clone();
+        let (nb, kb, db) = (
+            spec.param("n").unwrap(),
+            spec.param("k").unwrap(),
+            spec.param("d").unwrap(),
+        );
+        let x = bucket::pad_points_f32(points, nb, db, 0.0);
+        let c = bucket::pad_flat_f32(centroids, k, d, kb, db, 0.0);
+        let lx = Self::literal_matrix_f32(&x, nb, db)?;
+        let lc = Self::literal_matrix_f32(&c, kb, db)?;
+        let exe = self.exe(&spec)?;
+        let result = exe.execute::<xla::Literal>(&[lx, lc])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let flat: Vec<f32> = out.to_vec()?;
+        Ok(bucket::slice_rect_f64(&flat, nb, kb, n, k))
+    }
+}

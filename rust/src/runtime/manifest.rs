@@ -1,0 +1,185 @@
+//! Parser for `artifacts/manifest.txt` — the contract with compile/aot.py.
+//!
+//! One line per artifact: `<graph> key=value ... file=<name>.hlo.txt`,
+//! e.g. `pdist n=512 d=16 file=pdist_n512_d16.hlo.txt`. Comment lines start
+//! with `#`. The manifest is the single source of truth for which size
+//! buckets exist; bucket *selection* lives in [`super::bucket`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One AOT artifact: a graph lowered at a specific size bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Graph name (`pdist`, `pdist_mm`, `hopkins`, `kmeans_assign`).
+    pub graph: String,
+    /// Bucket parameters (`n`, `d`, and graph-specific `m`/`k`).
+    pub params: BTreeMap<String, usize>,
+    /// HLO text filename, relative to the artifacts dir.
+    pub file: String,
+}
+
+impl ArtifactSpec {
+    /// Bucket parameter lookup.
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// All artifacts, in file order.
+    pub specs: Vec<ArtifactSpec>,
+    /// Directory containing the manifest and HLO files.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "{path:?}: {e} (run `make artifacts` first?)"
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut tokens = line.split_whitespace();
+            let graph = tokens
+                .next()
+                .ok_or_else(|| Error::Manifest(format!("line {}: empty", lineno + 1)))?
+                .to_string();
+            let mut params = BTreeMap::new();
+            let mut file = None;
+            for tok in tokens {
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    Error::Manifest(format!("line {}: bad token {tok}", lineno + 1))
+                })?;
+                if k == "file" {
+                    file = Some(v.to_string());
+                } else {
+                    let v: usize = v.parse().map_err(|_| {
+                        Error::Manifest(format!("line {}: non-integer {tok}", lineno + 1))
+                    })?;
+                    params.insert(k.to_string(), v);
+                }
+            }
+            let file = file.ok_or_else(|| {
+                Error::Manifest(format!("line {}: missing file=", lineno + 1))
+            })?;
+            specs.push(ArtifactSpec {
+                graph,
+                params,
+                file,
+            });
+        }
+        if specs.is_empty() {
+            return Err(Error::Manifest("manifest has no artifacts".into()));
+        }
+        Ok(Manifest { specs, dir })
+    }
+
+    /// Smallest artifact of `graph` whose every `requirements` key is >= the
+    /// required value (ties by `n`, then by the file name for stability).
+    pub fn find(&self, graph: &str, requirements: &[(&str, usize)]) -> Result<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.graph == graph)
+            .filter(|s| {
+                requirements
+                    .iter()
+                    .all(|&(k, v)| s.param(k).is_some_and(|have| have >= v))
+            })
+            .min_by_key(|s| (s.param("n").unwrap_or(usize::MAX), s.file.clone()))
+            .ok_or_else(|| {
+                Error::NoArtifact(format!(
+                    "{graph} with {requirements:?} (largest bucket exceeded? \
+                     available: {:?})",
+                    self.specs
+                        .iter()
+                        .filter(|s| s.graph == graph)
+                        .map(|s| &s.file)
+                        .collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    /// Absolute path of an artifact.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+pdist n=64 d=16 file=pdist_n64_d16.hlo.txt
+pdist n=512 d=16 file=pdist_n512_d16.hlo.txt
+hopkins n=512 m=64 d=16 file=hopkins_n512_m64_d16.hlo.txt
+";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn parses_specs() {
+        let m = manifest();
+        assert_eq!(m.specs.len(), 3);
+        assert_eq!(m.specs[0].graph, "pdist");
+        assert_eq!(m.specs[0].param("n"), Some(64));
+        assert_eq!(m.specs[2].param("m"), Some(64));
+    }
+
+    #[test]
+    fn find_selects_smallest_fitting_bucket() {
+        let m = manifest();
+        assert_eq!(m.find("pdist", &[("n", 60)]).unwrap().param("n"), Some(64));
+        assert_eq!(m.find("pdist", &[("n", 65)]).unwrap().param("n"), Some(512));
+        assert_eq!(
+            m.find("pdist", &[("n", 512)]).unwrap().param("n"),
+            Some(512)
+        );
+    }
+
+    #[test]
+    fn find_errors_when_exceeded_or_unknown() {
+        let m = manifest();
+        assert!(m.find("pdist", &[("n", 513)]).is_err());
+        assert!(m.find("bogus", &[]).is_err());
+        assert!(m.find("hopkins", &[("n", 100), ("m", 100)]).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Manifest::parse("pdist n=x file=f\n", "/tmp".into()).is_err());
+        assert!(Manifest::parse("pdist n=4\n", "/tmp".into()).is_err()); // no file
+        assert!(Manifest::parse("# only comments\n", "/tmp".into()).is_err());
+    }
+
+    #[test]
+    fn path_of_joins_dir() {
+        let m = manifest();
+        assert_eq!(
+            m.path_of(&m.specs[0]),
+            PathBuf::from("/tmp/pdist_n64_d16.hlo.txt")
+        );
+    }
+}

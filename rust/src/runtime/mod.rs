@@ -1,0 +1,304 @@
+//! Runtime layer: distance engines and the PJRT executor.
+//!
+//! Three engines reproduce the paper's three tiers (Table 1):
+//!
+//! | tier   | paper            | here                                   |
+//! |--------|------------------|----------------------------------------|
+//! | python | pure-Python VAT  | [`NaiveEngine`] (`dissimilarity::naive`) |
+//! | numba  | `@jit` VAT       | [`BlockedEngine`] (`dissimilarity::blocked`) |
+//! | cython | static C ext.    | [`XlaHandle`] → AOT Pallas/XLA artifact  |
+//!
+//! PJRT wrapper types are not `Send`; [`XlaHandle`] confines the
+//! [`client::XlaRuntime`] to a dedicated executor thread and forwards
+//! requests over channels, so the coordinator's worker pool can share one
+//! compiled-executable cache safely.
+
+pub mod bucket;
+pub mod client;
+pub mod manifest;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::data::Points;
+use crate::dissimilarity::{DistanceMatrix, Metric};
+use crate::error::{Error, Result};
+use crate::hopkins::HopkinsProbes;
+
+/// A pairwise-distance backend (the pluggable hot path).
+pub trait DistanceEngine: Send + Sync {
+    /// Short name for tables/CLI.
+    fn name(&self) -> &'static str;
+    /// Full pairwise matrix (Euclidean unless the engine supports more).
+    fn pdist(&self, points: &Points) -> Result<DistanceMatrix>;
+}
+
+/// Python-tier stand-in: the deliberately unoptimized builder.
+pub struct NaiveEngine;
+
+impl DistanceEngine for NaiveEngine {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
+        Ok(DistanceMatrix::build_naive(points, Metric::Euclidean))
+    }
+}
+
+/// Numba-tier: compiled, tiled native builder.
+pub struct BlockedEngine;
+
+impl DistanceEngine for BlockedEngine {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
+        Ok(DistanceMatrix::build_blocked(points, Metric::Euclidean))
+    }
+}
+
+/// Multi-threaded native builder (row-band parallelism; 0 = all cores).
+pub struct ParallelEngine {
+    /// Worker threads for the distance build (0 = available cores).
+    pub threads: usize,
+}
+
+impl Default for ParallelEngine {
+    fn default() -> Self {
+        Self { threads: 0 }
+    }
+}
+
+impl DistanceEngine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
+        Ok(DistanceMatrix::build_parallel(
+            points,
+            Metric::Euclidean,
+            self.threads,
+        ))
+    }
+}
+
+/// Requests served by the XLA executor thread.
+enum Request {
+    Pdist {
+        points: Points,
+        pallas: bool,
+        reply: mpsc::Sender<Result<DistanceMatrix>>,
+    },
+    Hopkins {
+        points: Points,
+        probes: HopkinsProbes,
+        reply: mpsc::Sender<Result<(Vec<f64>, Vec<f64>)>>,
+    },
+    Assign {
+        points: Points,
+        centroids: Vec<f64>,
+        k: usize,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Warmup {
+        reply: mpsc::Sender<Result<usize>>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the PJRT executor thread
+/// (the "cython tier" engine).
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: mpsc::Sender<Request>,
+    /// Keeps the join handle alive until the last handle drops.
+    _thread: Arc<ExecutorThread>,
+    /// Run the Pallas-tiled artifact (true) or the XLA-fused one (false).
+    pallas: bool,
+}
+
+struct ExecutorThread {
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for ExecutorThread {
+    fn drop(&mut self) {
+        // the channel sender is gone by now; the thread sees Disconnect
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl XlaHandle {
+    /// Spawn the executor thread over an artifacts directory.
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        Self::with_variant(artifacts_dir, true)
+    }
+
+    /// Choose the pdist artifact variant: `pallas = false` selects the
+    /// XLA-fused `pdist_mm` graph (ablation A5).
+    pub fn with_variant(
+        artifacts_dir: impl Into<std::path::PathBuf>,
+        pallas: bool,
+    ) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("xla-executor".into())
+            .spawn(move || {
+                let runtime = match client::XlaRuntime::new(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Pdist {
+                            points,
+                            pallas,
+                            reply,
+                        } => {
+                            let _ = reply.send(runtime.pdist(&points, pallas));
+                        }
+                        Request::Hopkins {
+                            points,
+                            probes,
+                            reply,
+                        } => {
+                            let _ = reply.send(runtime.hopkins_nn(&points, &probes));
+                        }
+                        Request::Assign {
+                            points,
+                            centroids,
+                            k,
+                            reply,
+                        } => {
+                            let _ = reply.send(runtime.assign(&points, &centroids, k));
+                        }
+                        Request::Warmup { reply } => {
+                            let _ = reply.send(runtime.warmup());
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn xla executor: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("xla executor died during init".into()))??;
+        Ok(Self {
+            tx,
+            _thread: Arc::new(ExecutorThread {
+                handle: Some(handle),
+            }),
+            pallas,
+        })
+    }
+
+    fn call<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request,
+    ) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| Error::Coordinator("xla executor gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("xla executor dropped reply".into()))?
+    }
+
+    /// Compile all artifacts ahead of time.
+    pub fn warmup(&self) -> Result<usize> {
+        self.call(|reply| Request::Warmup { reply })
+    }
+
+    /// Hopkins nearest-neighbour distances (see `XlaRuntime::hopkins_nn`).
+    pub fn hopkins_nn(
+        &self,
+        points: &Points,
+        probes: &HopkinsProbes,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.call(|reply| Request::Hopkins {
+            points: points.clone(),
+            probes: probes.clone(),
+            reply,
+        })
+    }
+
+    /// K-Means assignment distances `[n, k]`.
+    pub fn assign(&self, points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
+        self.call(|reply| Request::Assign {
+            points: points.clone(),
+            centroids: centroids.to_vec(),
+            k,
+            reply,
+        })
+    }
+}
+
+impl DistanceEngine for XlaHandle {
+    fn name(&self) -> &'static str {
+        if self.pallas {
+            "xla"
+        } else {
+            "xla-mm"
+        }
+    }
+    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
+        self.call(|reply| Request::Pdist {
+            points: points.clone(),
+            pallas: self.pallas,
+            reply,
+        })
+    }
+}
+
+/// Engine selector shared by CLI/config/coordinator.
+pub fn engine_by_name(
+    name: &str,
+    artifacts_dir: &str,
+) -> Result<Arc<dyn DistanceEngine>> {
+    Ok(match name {
+        "naive" => Arc::new(NaiveEngine),
+        "blocked" => Arc::new(BlockedEngine),
+        "parallel" => Arc::new(ParallelEngine::default()),
+        "xla" => Arc::new(XlaHandle::new(artifacts_dir)?),
+        "xla-mm" => Arc::new(XlaHandle::with_variant(artifacts_dir, false)?),
+        other => return Err(Error::InvalidArg(format!("unknown engine {other}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+
+    #[test]
+    fn native_engines_agree() {
+        let ds = blobs(50, 3, 2, 0.5, 90);
+        let a = NaiveEngine.pdist(&ds.points).unwrap();
+        let b = BlockedEngine.pdist(&ds.points).unwrap();
+        for i in 0..50 {
+            for j in 0..50 {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_names() {
+        assert_eq!(NaiveEngine.name(), "naive");
+        assert_eq!(BlockedEngine.name(), "blocked");
+    }
+
+    #[test]
+    fn unknown_engine_rejected() {
+        assert!(engine_by_name("cuda", "artifacts").is_err());
+    }
+}

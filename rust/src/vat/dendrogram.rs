@@ -1,0 +1,197 @@
+//! Single-linkage clustering from the VAT MST — "VAT-based clustering".
+//!
+//! The MST Prim builds for the reordering *is* the single-linkage
+//! dendrogram (Gower & Ross 1969): cutting the tree's k-1 heaviest edges
+//! yields the k-cluster single-linkage partition. This closes the loop the
+//! paper's §5.2 "Pipeline Integration" sketches — the tendency image and a
+//! clustering come from one O(n²) computation, free of extra passes.
+//!
+//! Because VAT places MST-adjacent points contiguously, every single-
+//! linkage cluster is a contiguous display range: cutting is literally
+//! splitting the VAT image at its brightest off-diagonal steps.
+
+use super::VatResult;
+
+/// A single-linkage flat clustering extracted from a VAT result.
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    /// MST edge weights by child display position (edge t connects display
+    /// position t+1 to its parent) — the merge heights.
+    heights: Vec<f64>,
+    /// Parent display position of edge t (connects to position t+1).
+    parents: Vec<usize>,
+    /// The VAT permutation (display -> original index).
+    order: Vec<usize>,
+}
+
+impl Dendrogram {
+    /// Build from a VAT result.
+    pub fn from_vat(v: &VatResult) -> Self {
+        Self {
+            heights: v.mst.iter().map(|&(_, _, w)| w).collect(),
+            parents: v.mst.iter().map(|&(p, _, _)| p).collect(),
+            order: v.order.clone(),
+        }
+    }
+
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Merge heights in display order (length n-1).
+    pub fn heights(&self) -> &[f64] {
+        &self.heights
+    }
+
+    /// Cut into exactly `k` clusters: remove the k-1 heaviest MST edges.
+    /// Returns labels in ORIGINAL index space, numbered by display order.
+    /// Ties broken toward earlier display position (deterministic).
+    pub fn cut_k(&self, k: usize) -> Vec<usize> {
+        let n = self.n();
+        if n == 0 {
+            return Vec::new();
+        }
+        let k = k.clamp(1, n);
+        // indices of the k-1 heaviest edges
+        let mut by_weight: Vec<usize> = (0..self.heights.len()).collect();
+        by_weight.sort_by(|&a, &b| {
+            self.heights[b]
+                .partial_cmp(&self.heights[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut is_cut = vec![false; self.heights.len()];
+        for &e in by_weight.iter().take(k - 1) {
+            is_cut[e] = true;
+        }
+        self.labels_from_cuts(&is_cut)
+    }
+
+    /// Cut at a height threshold: every edge heavier than `h` is removed.
+    pub fn cut_height(&self, h: f64) -> Vec<usize> {
+        let is_cut: Vec<bool> = self.heights.iter().map(|&w| w > h).collect();
+        self.labels_from_cuts(&is_cut)
+    }
+
+    fn labels_from_cuts(&self, is_cut: &[bool]) -> Vec<usize> {
+        let n = self.n();
+        let mut labels = vec![0usize; n];
+        // The MST edge for display position t+1 connects into the placed
+        // prefix, but the parent need NOT be position t — removing edge t
+        // splits the *tree*, not a contiguous range. Union-find over the
+        // kept edges gives exact connectivity in O(n α(n)).
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        for (t, &cut) in is_cut.iter().enumerate() {
+            if cut {
+                continue;
+            }
+            let (a, b) = self.edge_endpoints(t);
+            let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+            if ra != rb {
+                parent[ra.max(rb)] = ra.min(rb);
+            }
+        }
+        // number clusters by first appearance in display order
+        let mut next = 0usize;
+        let mut names: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        for pos in 0..n {
+            let root = find(&mut parent, pos);
+            let id = *names.entry(root).or_insert_with(|| {
+                let v = next;
+                next += 1;
+                v
+            });
+            labels[self.order[pos]] = id;
+        }
+        labels
+    }
+
+    fn edge_endpoints(&self, t: usize) -> (usize, usize) {
+        // child is display position t+1; parent is stored alongside
+        (self.parents[t], t + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{moons, separated_blobs};
+    use crate::dissimilarity::{DistanceMatrix, Metric};
+    use crate::metrics::{ari, to_isize};
+    use crate::vat::vat;
+
+    fn dendro(ds: &crate::data::Dataset) -> (Dendrogram, Vec<usize>) {
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let v = vat(&d);
+        (Dendrogram::from_vat(&v), ds.labels.clone().unwrap())
+    }
+
+    #[test]
+    fn cut_k_recovers_separated_blobs() {
+        for k in [2usize, 3, 4] {
+            let ds = separated_blobs(80 * k, k, 0.3, 10.0, 40 + k as u64);
+            let (den, truth) = dendro(&ds);
+            let labels = den.cut_k(k);
+            let score = ari(&to_isize(&truth), &to_isize(&labels));
+            assert!(score > 0.99, "k={k} ARI {score}");
+        }
+    }
+
+    #[test]
+    fn cut_k_is_a_partition_of_expected_size() {
+        let ds = separated_blobs(120, 3, 0.3, 10.0, 44);
+        let (den, _) = dendro(&ds);
+        for k in 1..=6 {
+            let labels = den.cut_k(k);
+            let mut distinct = labels.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert_eq!(distinct.len(), k, "cut_k({k})");
+            assert_eq!(labels.len(), 120);
+        }
+    }
+
+    #[test]
+    fn single_linkage_handles_moons() {
+        // the chain-following property K-Means lacks
+        let ds = moons(300, 0.05, 45);
+        let (den, truth) = dendro(&ds);
+        let labels = den.cut_k(2);
+        let score = ari(&to_isize(&truth), &to_isize(&labels));
+        assert!(score > 0.95, "moons single-linkage ARI {score}");
+    }
+
+    #[test]
+    fn cut_height_extremes() {
+        let ds = separated_blobs(60, 2, 0.3, 10.0, 46);
+        let (den, _) = dendro(&ds);
+        let all_one = den.cut_height(f64::INFINITY);
+        assert!(all_one.iter().all(|&l| l == 0));
+        let all_singletons = den.cut_height(-1.0);
+        let mut d = all_singletons.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 60);
+    }
+
+    #[test]
+    fn cut_k_clamps() {
+        let ds = separated_blobs(30, 2, 0.3, 10.0, 47);
+        let (den, _) = dendro(&ds);
+        assert_eq!(den.cut_k(0), den.cut_k(1));
+        let max_cut = den.cut_k(500);
+        let mut d = max_cut.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 30);
+    }
+}

@@ -1,0 +1,191 @@
+//! iVAT — improved VAT (Bezdek, Hathaway & Leckie; Havens & Bezdek 2012).
+//!
+//! Replaces each dissimilarity with the *minimax path distance*: the largest
+//! edge on the minimum-spanning-tree path between the two points. Tight
+//! clusters connected by short MST hops become uniformly dark blocks, and
+//! the paper's weak-structure cases (moons, circles — §4.4.4) sharpen
+//! dramatically because chain-connected shapes have small path maxima.
+//!
+//! We use the O(n²) recursion of Havens & Bezdek over the VAT-ordered
+//! matrix: when row r joins the ordering, its MST parent among the first r
+//! display positions is `j = argmin_{c<r} R*[r][c]`, and for every earlier
+//! point `c`:  D'[r][c] = max(R*[r][j], D'[j][c]).
+
+use super::VatResult;
+use crate::dissimilarity::DistanceMatrix;
+
+/// Result of an iVAT transform.
+#[derive(Debug, Clone)]
+pub struct IvatResult {
+    /// The VAT permutation the transform was computed over.
+    pub order: Vec<usize>,
+    /// Minimax-path-distance matrix in display (VAT) order.
+    pub transformed: DistanceMatrix,
+}
+
+/// Apply the iVAT transform to a VAT result. O(n²).
+///
+/// Perf iteration 3 (EXPERIMENTS.md §Perf): the textbook recursion writes
+/// each value twice — once row-major, once into the mirrored column, and
+/// the column writes touch n distinct cache lines per row. This version
+/// instead runs a path-max DFS over the MST from every display row: pure
+/// row-major writes, O(n) stack work per row, same O(n²) total but ~half
+/// the memory traffic and no scatter.
+pub fn ivat(v: &VatResult) -> IvatResult {
+    let n = v.reordered.n();
+    // MST adjacency in display coordinates (n-1 edges -> CSR-ish layout)
+    let mut degree = vec![0usize; n];
+    for &(p, c, _) in &v.mst {
+        degree[p] += 1;
+        degree[c] += 1;
+    }
+    let mut start = vec![0usize; n + 1];
+    for i in 0..n {
+        start[i + 1] = start[i] + degree[i];
+    }
+    let mut adj: Vec<(u32, f64)> = vec![(0, 0.0); v.mst.len() * 2];
+    let mut fill = start.clone();
+    for &(p, c, w) in &v.mst {
+        adj[fill[p]] = (c as u32, w);
+        fill[p] += 1;
+        adj[fill[c]] = (p as u32, w);
+        fill[c] += 1;
+    }
+
+    let mut out = DistanceMatrix::zeros(n);
+    let mut stack: Vec<u32> = Vec::with_capacity(n);
+    // generation-stamped visited set: one allocation for the whole sweep
+    let mut seen: Vec<u32> = vec![u32::MAX; n];
+    for row in 0..n {
+        let buf = out.flat_mut();
+        let row_buf = &mut buf[row * n..(row + 1) * n];
+        // DFS from `row`: path-max to every other node
+        row_buf[row] = 0.0;
+        stack.clear();
+        stack.push(row as u32);
+        let epoch = row as u32;
+        seen[row] = epoch;
+        while let Some(node) = stack.pop() {
+            let base = row_buf[node as usize];
+            for &(next, w) in &adj[start[node as usize]..start[node as usize + 1]] {
+                if seen[next as usize] != epoch {
+                    seen[next as usize] = epoch;
+                    row_buf[next as usize] = base.max(w);
+                    stack.push(next);
+                }
+            }
+        }
+    }
+    IvatResult {
+        order: v.order.clone(),
+        transformed: out,
+    }
+}
+
+/// Brute-force minimax path distance via Floyd–Warshall-style relaxation —
+/// O(n³), test oracle only.
+#[doc(hidden)]
+pub fn minimax_bruteforce(d: &DistanceMatrix) -> DistanceMatrix {
+    let n = d.n();
+    let mut m = d.clone();
+    for k in 0..n {
+        for i in 0..n {
+            for j in 0..n {
+                let via = m.get(i, k).max(m.get(k, j));
+                if via < m.get(i, j) {
+                    m.set(i, j, via);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, circles, moons};
+    use crate::dissimilarity::Metric;
+    use crate::vat::vat;
+
+    fn run(ds: &crate::data::Dataset) -> (VatResult, IvatResult) {
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let v = vat(&d);
+        let iv = ivat(&v);
+        (v, iv)
+    }
+
+    #[test]
+    fn matches_bruteforce_minimax() {
+        let ds = blobs(40, 2, 3, 0.6, 8);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let v = vat(&d);
+        let iv = ivat(&v);
+        let oracle = minimax_bruteforce(&v.reordered);
+        for i in 0..40 {
+            for j in 0..40 {
+                if i == j {
+                    continue;
+                }
+                assert!(
+                    (iv.transformed.get(i, j) - oracle.get(i, j)).abs() < 1e-9,
+                    "({i},{j}): {} vs {}",
+                    iv.transformed.get(i, j),
+                    oracle.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ivat_never_exceeds_vat_distances() {
+        let ds = moons(80, 0.06, 9);
+        let (v, iv) = run(&ds);
+        for i in 0..80 {
+            for j in 0..80 {
+                assert!(iv.transformed.get(i, j) <= v.reordered.get(i, j) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ivat_is_symmetric_zero_diagonal() {
+        let ds = blobs(50, 2, 2, 0.5, 10);
+        let (_, iv) = run(&ds);
+        assert!(iv.transformed.asymmetry() < 1e-12);
+        for i in 0..50 {
+            assert_eq!(iv.transformed.get(i, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn ivat_is_ultrametric() {
+        // minimax path distance satisfies the strong triangle inequality
+        let ds = blobs(30, 2, 3, 0.7, 11);
+        let (_, iv) = run(&ds);
+        let t = &iv.transformed;
+        for i in 0..30 {
+            for j in 0..30 {
+                for k in 0..30 {
+                    assert!(t.get(i, j) <= t.get(i, k).max(t.get(k, j)) + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ivat_sharpens_moons_and_circles() {
+        // the iVAT motivation: chain-shaped clusters gain block contrast
+        // (band vs whole-image, normalization-free — see viz::block_contrast)
+        for ds in [moons(150, 0.05, 12), circles(150, 0.04, 0.45, 13)] {
+            let (v, iv) = run(&ds);
+            let before = crate::viz::block_contrast(&v.reordered, 20);
+            let after = crate::viz::block_contrast(&iv.transformed, 20);
+            assert!(
+                after > before,
+                "{}: iVAT must sharpen block contrast: {after} vs {before}",
+                ds.name
+            );
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! VAT — Visual Assessment of Cluster Tendency (Bezdek & Hathaway 2002) and
+//! its variants iVAT and sVAT.
+//!
+//! The paper's contribution is making this pipeline fast while keeping the
+//! output *identical* to the reference algorithm. Two implementations of the
+//! ordering step live here:
+//!
+//! * [`prim::vat_order`] — the optimized O(n²) Prim sweep ("numba/cython
+//!   tier"): flat arrays, branchless inner argmin, index-vector reuse;
+//! * [`prim::vat_order_naive`] — structured exactly like the pure-Python
+//!   baseline (`python/baseline/pure_vat.py`): per-step full scans over a
+//!   boolean selected list. Same asymptotics as the paper's baseline loop.
+//!
+//! Both produce the **same permutation** for any input (tie-breaking is
+//! pinned to the lowest index) — property-tested in `tests/`.
+
+pub mod blocks;
+pub mod dendrogram;
+pub mod ivat;
+pub mod prim;
+pub mod svat;
+
+use crate::dissimilarity::DistanceMatrix;
+
+/// Result of a VAT run.
+#[derive(Debug, Clone)]
+pub struct VatResult {
+    /// The VAT permutation: `order[a]` = original index of display row `a`.
+    pub order: Vec<usize>,
+    /// `R*`: the input matrix reordered by `order` (the VAT image).
+    pub reordered: DistanceMatrix,
+    /// MST edges in insertion order: `(parent_display_pos, child_display_pos,
+    /// weight)` in *display* coordinates (positions within `order`).
+    /// `mst[t]` connects the point added at position `t + 1`.
+    pub mst: Vec<(usize, usize, f64)>,
+}
+
+/// Run VAT with the optimized ordering. The input must be a symmetric
+/// dissimilarity matrix (zero diagonal); see [`DistanceMatrix`] builders.
+pub fn vat(d: &DistanceMatrix) -> VatResult {
+    let (order, mst) = prim::vat_order(d);
+    let reordered = d.reorder(&order).expect("order is a permutation");
+    VatResult {
+        order,
+        reordered,
+        mst,
+    }
+}
+
+/// Run VAT with the baseline-shaped ordering (same output, slower — exists
+/// for Table-1 comparisons).
+pub fn vat_naive(d: &DistanceMatrix) -> VatResult {
+    let order = prim::vat_order_naive(d);
+    let reordered = d.reorder(&order).expect("order is a permutation");
+    // reconstruct MST edges from the order for API parity
+    let mst = prim::mst_from_order(d, &order);
+    VatResult {
+        order,
+        reordered,
+        mst,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, moons, uniform};
+    use crate::dissimilarity::Metric;
+    use crate::prng::Pcg32;
+
+    fn build(nds: &crate::data::Dataset) -> DistanceMatrix {
+        DistanceMatrix::build_blocked(&nds.points, Metric::Euclidean)
+    }
+
+    #[test]
+    fn order_is_permutation() {
+        let d = build(&blobs(80, 2, 3, 0.5, 1));
+        let r = vat(&d);
+        let mut sorted = r.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..80).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn optimized_equals_naive_property() {
+        // the paper's core claim: optimization does not change the output
+        let mut rng = Pcg32::new(7);
+        for trial in 0..20 {
+            let n = 5 + rng.below(90) as usize;
+            let ds = blobs(n, 2, 1 + rng.below(5) as usize, 0.7, 1000 + trial);
+            let d = build(&ds);
+            let fast = vat(&d);
+            let slow = vat_naive(&d);
+            assert_eq!(fast.order, slow.order, "trial {trial} n {n}");
+            assert_eq!(fast.reordered, slow.reordered);
+        }
+    }
+
+    #[test]
+    fn reordered_is_consistent_gather() {
+        let d = build(&moons(60, 0.05, 2));
+        let r = vat(&d);
+        for a in 0..60 {
+            for b in 0..60 {
+                assert_eq!(r.reordered.get(a, b), d.get(r.order[a], r.order[b]));
+            }
+        }
+    }
+
+    #[test]
+    fn mst_edges_form_spanning_tree() {
+        let d = build(&blobs(50, 3, 2, 0.5, 3));
+        let r = vat(&d);
+        assert_eq!(r.mst.len(), 49);
+        // child t+1 connects to an earlier display position
+        for (t, &(p, c, w)) in r.mst.iter().enumerate() {
+            assert_eq!(c, t + 1);
+            assert!(p <= t);
+            assert!(w >= 0.0);
+            assert_eq!(r.reordered.get(p, c), w);
+        }
+    }
+
+    #[test]
+    fn mst_edge_weights_match_prims_invariant() {
+        // each new point's connecting edge is its min distance to the
+        // already-placed prefix
+        let d = build(&blobs(40, 2, 3, 0.4, 4));
+        let r = vat(&d);
+        for &(p, c, w) in &r.mst {
+            let min_to_prefix = (0..c)
+                .map(|a| r.reordered.get(a, c))
+                .fold(f64::INFINITY, f64::min);
+            assert!((w - min_to_prefix).abs() < 1e-12);
+            assert_eq!(r.reordered.get(p, c), w);
+        }
+    }
+
+    #[test]
+    fn two_separated_blobs_form_contiguous_blocks() {
+        let ds = blobs(60, 2, 2, 0.2, 5);
+        let labels = ds.labels.clone().unwrap();
+        let r = vat(&build(&ds));
+        let seq: Vec<usize> = r.order.iter().map(|&i| labels[i]).collect();
+        let flips = seq.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(flips, 1, "two tight blobs must appear as two runs: {seq:?}");
+    }
+
+    #[test]
+    fn single_point_and_pair() {
+        let d1 = DistanceMatrix::zeros(1);
+        let r1 = vat(&d1);
+        assert_eq!(r1.order, vec![0]);
+        assert!(r1.mst.is_empty());
+
+        let mut d2 = DistanceMatrix::zeros(2);
+        d2.set(0, 1, 3.0);
+        d2.set(1, 0, 3.0);
+        let r2 = vat(&d2);
+        assert_eq!(r2.order.len(), 2);
+        assert_eq!(r2.mst, vec![(0, 1, 3.0)]);
+    }
+
+    #[test]
+    fn uniform_data_still_valid() {
+        let d = build(&uniform(70, 2, 6));
+        let r = vat(&d);
+        let mut sorted = r.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..70).collect::<Vec<_>>());
+    }
+}

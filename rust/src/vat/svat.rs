@@ -1,0 +1,155 @@
+//! sVAT — scalable VAT by sampling (Hathaway, Bezdek & Huband 2006).
+//!
+//! For n too large for the O(n²) matrix, sVAT selects a representative
+//! sample of size s via *maximin* (farthest-first) traversal — which is
+//! exactly the set of MST-diameter-spread points — runs VAT on the s×s
+//! matrix, and optionally maps the remaining points to their nearest sample
+//! for display. The paper lists sVAT as the scalability future-work
+//! direction (§5.2); here it is a first-class engine.
+
+use crate::data::Points;
+use crate::dissimilarity::{DistanceMatrix, Metric};
+use crate::prng::Pcg32;
+
+use super::{vat, VatResult};
+
+/// Result of an sVAT run.
+#[derive(Debug, Clone)]
+pub struct SvatResult {
+    /// Original indices of the selected sample, in selection order.
+    pub sample: Vec<usize>,
+    /// VAT over the sample's dissimilarity matrix.
+    pub vat: VatResult,
+    /// For every original point, the position in `sample` of its nearest
+    /// representative (sample points map to themselves).
+    pub assignment: Vec<usize>,
+}
+
+/// Maximin (farthest-first) sample of `s` points. Deterministic given the
+/// seed (which picks the starting point only).
+pub fn maximin_sample(points: &Points, s: usize, seed: u64) -> Vec<usize> {
+    let n = points.n();
+    let s = s.min(n);
+    if s == 0 {
+        return Vec::new();
+    }
+    let mut rng = Pcg32::new(seed);
+    let first = rng.below(n as u32) as usize;
+    let mut sample = vec![first];
+    // dmin[j] = distance from j to nearest selected sample
+    let mut dmin: Vec<f64> = (0..n)
+        .map(|j| Metric::Euclidean.eval(points.row(first), points.row(j)))
+        .collect();
+    while sample.len() < s {
+        // farthest point from the current sample (maximin step)
+        let mut best_j = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for (j, &v) in dmin.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best_j = j;
+            }
+        }
+        sample.push(best_j);
+        for j in 0..n {
+            let v = Metric::Euclidean.eval(points.row(best_j), points.row(j));
+            if v < dmin[j] {
+                dmin[j] = v;
+            }
+        }
+    }
+    sample
+}
+
+/// Run sVAT: sample `s` representatives, VAT the sample, assign the rest.
+pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> SvatResult {
+    let sample = maximin_sample(points, s, seed);
+    let sub = points.select(&sample);
+    let d = DistanceMatrix::build_blocked(&sub, metric);
+    let v = vat(&d);
+    // nearest-representative assignment for all original points
+    let assignment = (0..points.n())
+        .map(|i| {
+            let mut best = 0;
+            let mut bv = f64::INFINITY;
+            for (pos, &si) in sample.iter().enumerate() {
+                let val = metric.eval(points.row(i), points.row(si));
+                if val < bv {
+                    bv = val;
+                    best = pos;
+                }
+            }
+            best
+        })
+        .collect();
+    SvatResult {
+        sample,
+        vat: v,
+        assignment,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+
+    #[test]
+    fn sample_is_distinct_and_in_range() {
+        let ds = blobs(200, 2, 4, 0.4, 20);
+        let s = maximin_sample(&ds.points, 30, 1);
+        assert_eq!(s.len(), 30);
+        let mut u = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 30);
+        assert!(s.iter().all(|&i| i < 200));
+    }
+
+    #[test]
+    fn sample_capped_at_n() {
+        let ds = blobs(10, 2, 2, 0.4, 21);
+        assert_eq!(maximin_sample(&ds.points, 50, 2).len(), 10);
+    }
+
+    #[test]
+    fn maximin_covers_all_clusters() {
+        // 4 well-separated blobs; 8 maximin samples must hit all 4 labels
+        let ds = blobs(200, 2, 4, 0.2, 22);
+        let labels = ds.labels.as_ref().unwrap();
+        let s = maximin_sample(&ds.points, 8, 3);
+        let mut seen: Vec<usize> = s.iter().map(|&i| labels[i]).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn svat_block_structure_matches_full_vat() {
+        let ds = blobs(300, 2, 3, 0.25, 23);
+        let labels = ds.labels.as_ref().unwrap();
+        let r = svat(&ds.points, 45, Metric::Euclidean, 4);
+        // sample VAT order must keep each cluster contiguous
+        let seq: Vec<usize> = r.vat.order.iter().map(|&p| labels[r.sample[p]]).collect();
+        let flips = seq.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(flips, 2, "3 tight blobs -> 3 runs: {seq:?}");
+    }
+
+    #[test]
+    fn assignment_points_to_nearest_sample() {
+        let ds = blobs(100, 2, 2, 0.3, 24);
+        let r = svat(&ds.points, 10, Metric::Euclidean, 5);
+        for (i, &pos) in r.assignment.iter().enumerate() {
+            let d_assigned =
+                Metric::Euclidean.eval(ds.points.row(i), ds.points.row(r.sample[pos]));
+            for &sj in &r.sample {
+                let d_other = Metric::Euclidean.eval(ds.points.row(i), ds.points.row(sj));
+                assert!(d_assigned <= d_other + 1e-12);
+            }
+        }
+        // sample points map to themselves
+        for (pos, &si) in r.sample.iter().enumerate() {
+            assert_eq!(r.assignment[si], pos);
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! ASCII heatmap rendering for terminal inspection of VAT images.
+
+use super::{downsample, GrayImage};
+
+/// Darkness ramp: index 0 = darkest (cluster block), last = lightest.
+const RAMP: &[u8] = b"@%#*+=-:. ";
+
+/// Render an image as an ASCII heatmap at most `max_side` characters wide.
+/// Each character is doubled horizontally so blocks look square in a
+/// terminal's ~1:2 cell aspect.
+pub fn to_ascii(img: &GrayImage, max_side: usize) -> String {
+    let img = downsample(img, max_side.max(1));
+    let mut out = String::with_capacity(img.height * (img.width * 2 + 1));
+    for r in 0..img.height {
+        for c in 0..img.width {
+            let v = img.get(r, c) as usize;
+            let idx = v * (RAMP.len() - 1) / 255;
+            let ch = RAMP[idx] as char;
+            out.push(ch);
+            out.push(ch);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extremes_map_to_ramp_ends() {
+        let img = GrayImage {
+            pixels: vec![0, 255],
+            width: 2,
+            height: 1,
+        };
+        let s = to_ascii(&img, 4);
+        assert_eq!(s, "@@  \n");
+    }
+
+    #[test]
+    fn output_is_rectangular() {
+        let img = GrayImage {
+            pixels: vec![128; 36],
+            width: 6,
+            height: 6,
+        };
+        let s = to_ascii(&img, 3);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines.iter().all(|l| l.len() == 6));
+    }
+
+    #[test]
+    fn downsamples_when_too_large() {
+        let img = GrayImage {
+            pixels: vec![0; 100 * 100],
+            width: 100,
+            height: 100,
+        };
+        let s = to_ascii(&img, 20);
+        assert!(s.lines().count() <= 20);
+    }
+}

@@ -1,0 +1,179 @@
+//! Rendering reordered dissimilarity matrices — the paper's Figures 1–3.
+//!
+//! VAT's output *is* an image: the reordered matrix shown as grayscale, dark
+//! diagonal blocks = clusters. We render to PGM (portable graymap — every
+//! image viewer opens it, and it diffs cleanly in tests) and to ASCII for
+//! terminal inspection. Pixel semantics follow the paper: 0 distance = black,
+//! max distance = white.
+
+pub mod ascii;
+pub mod ppm;
+pub mod pgm;
+
+use crate::dissimilarity::DistanceMatrix;
+
+/// An 8-bit grayscale image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GrayImage {
+    /// Row-major pixels, `width * height` long.
+    pub pixels: Vec<u8>,
+    /// Width in pixels.
+    pub width: usize,
+    /// Height in pixels.
+    pub height: usize,
+}
+
+impl GrayImage {
+    /// Pixel at (row, col).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        self.pixels[r * self.width + c]
+    }
+}
+
+/// Render a (reordered) distance matrix as grayscale: 0 → black (cluster),
+/// max → white. `max_value == 0` (degenerate all-equal input) renders black.
+pub fn render(matrix: &DistanceMatrix) -> GrayImage {
+    let n = matrix.n();
+    let max = matrix.max_value();
+    let scale = if max > 0.0 { 255.0 / max } else { 0.0 };
+    let pixels = matrix
+        .flat()
+        .iter()
+        .map(|&v| (v * scale).round().clamp(0.0, 255.0) as u8)
+        .collect();
+    GrayImage {
+        pixels,
+        width: n,
+        height: n,
+    }
+}
+
+/// Downsample an image to at most `max_side` pixels a side (block mean) —
+/// keeps figure files small for large n without changing block structure.
+pub fn downsample(img: &GrayImage, max_side: usize) -> GrayImage {
+    if img.width <= max_side && img.height <= max_side {
+        return img.clone();
+    }
+    // one factor for both axes — aspect ratio is preserved
+    let f = img.width.max(img.height).div_ceil(max_side);
+    let (fw, fh) = (f, f);
+    let w = img.width.div_ceil(fw);
+    let h = img.height.div_ceil(fh);
+    let mut pixels = Vec::with_capacity(w * h);
+    for br in 0..h {
+        for bc in 0..w {
+            let (mut sum, mut cnt) = (0u32, 0u32);
+            for r in (br * fh)..((br + 1) * fh).min(img.height) {
+                for c in (bc * fw)..((bc + 1) * fw).min(img.width) {
+                    sum += img.get(r, c) as u32;
+                    cnt += 1;
+                }
+            }
+            pixels.push((sum / cnt.max(1)) as u8);
+        }
+    }
+    GrayImage {
+        pixels,
+        width: w,
+        height: h,
+    }
+}
+
+/// Mean darkness (0 = white, 1 = black) of the `band`-wide diagonal band —
+/// a scalar summary of "how block-diagonal" a VAT image is; used by tests
+/// and the block detector.
+pub fn diagonal_darkness(matrix: &DistanceMatrix, band: usize) -> f64 {
+    let n = matrix.n();
+    if n == 0 {
+        return 0.0;
+    }
+    let max = matrix.max_value();
+    if max <= 0.0 {
+        return 1.0;
+    }
+    let (mut sum, mut cnt) = (0.0, 0usize);
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        for j in lo..hi {
+            sum += 1.0 - matrix.get(i, j) / max;
+            cnt += 1;
+        }
+    }
+    sum / cnt as f64
+}
+
+/// Block contrast: how much darker the diagonal band is than the matrix as
+/// a whole, on the matrix's own grayscale. Normalization-free comparison of
+/// VAT vs iVAT sharpness (per-image `diagonal_darkness` values are not
+/// comparable across different `max_value`s).
+pub fn block_contrast(matrix: &DistanceMatrix, band: usize) -> f64 {
+    let n = matrix.n();
+    let max = matrix.max_value();
+    if n == 0 || max <= 0.0 {
+        return 0.0;
+    }
+    let mut band_sum = 0.0;
+    let mut band_cnt = 0usize;
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        for j in lo..hi {
+            band_sum += matrix.get(i, j);
+            band_cnt += 1;
+        }
+    }
+    let all_mean = matrix.flat().iter().sum::<f64>() / (n * n) as f64;
+    let band_mean = band_sum / band_cnt.max(1) as f64;
+    (all_mean - band_mean) / max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::Metric;
+    use crate::vat::vat;
+
+    #[test]
+    fn render_maps_extremes() {
+        let mut m = DistanceMatrix::zeros(2);
+        m.set(0, 1, 4.0);
+        m.set(1, 0, 4.0);
+        let img = render(&m);
+        assert_eq!(img.get(0, 0), 0); // zero distance = black
+        assert_eq!(img.get(0, 1), 255); // max = white
+    }
+
+    #[test]
+    fn render_degenerate_all_zero() {
+        let img = render(&DistanceMatrix::zeros(3));
+        assert!(img.pixels.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn downsample_halves_and_preserves_means() {
+        let img = GrayImage {
+            pixels: vec![0, 0, 200, 200, 0, 0, 200, 200],
+            width: 4,
+            height: 2,
+        };
+        let small = downsample(&img, 2);
+        assert_eq!((small.width, small.height), (2, 1));
+        assert_eq!(small.pixels, vec![0, 200]);
+    }
+
+    #[test]
+    fn clustered_data_darker_diagonal_than_reordered_random() {
+        let ds = blobs(120, 2, 3, 0.3, 50);
+        let m = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let r = vat(&m);
+        let dark_sorted = diagonal_darkness(&r.reordered, 10);
+        let dark_unsorted = diagonal_darkness(&m, 10);
+        assert!(
+            dark_sorted > dark_unsorted,
+            "VAT reorder must darken the diagonal band: {dark_sorted} vs {dark_unsorted}"
+        );
+    }
+}

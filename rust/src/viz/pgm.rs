@@ -1,0 +1,111 @@
+//! PGM (portable graymap, P5) writer/reader — dependency-free image IO.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use super::GrayImage;
+use crate::error::{Error, Result};
+
+/// Write a binary PGM (P5).
+pub fn write_pgm(img: &GrayImage, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write!(w, "P5\n{} {}\n255\n", img.width, img.height)?;
+    w.write_all(&img.pixels)?;
+    Ok(())
+}
+
+/// Read a binary PGM (P5) — used by round-trip tests and figure diffing.
+pub fn read_pgm(path: impl AsRef<Path>) -> Result<GrayImage> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+    parse_pgm(&bytes).map_err(|e| Error::Data(format!("{:?}: {e}", path.as_ref())))
+}
+
+/// Next whitespace/comment-delimited header token starting at `*pos`.
+fn next_token(bytes: &[u8], pos: &mut usize) -> std::result::Result<String, String> {
+    loop {
+        while *pos < bytes.len() && bytes[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if *pos < bytes.len() && bytes[*pos] == b'#' {
+            while *pos < bytes.len() && bytes[*pos] != b'\n' {
+                *pos += 1;
+            }
+        } else {
+            break;
+        }
+    }
+    let start = *pos;
+    while *pos < bytes.len() && !bytes[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+    if start == *pos {
+        return Err("unexpected EOF in header".into());
+    }
+    Ok(String::from_utf8_lossy(&bytes[start..*pos]).into_owned())
+}
+
+fn parse_pgm(bytes: &[u8]) -> std::result::Result<GrayImage, String> {
+    // header: magic, width, height, maxval — whitespace/comment separated
+    let mut pos = 0usize;
+    if next_token(bytes, &mut pos)? != "P5" {
+        return Err("not a P5 PGM".into());
+    }
+    let width: usize = next_token(bytes, &mut pos)?.parse().map_err(|_| "bad width")?;
+    let height: usize = next_token(bytes, &mut pos)?
+        .parse()
+        .map_err(|_| "bad height")?;
+    let maxval: usize = next_token(bytes, &mut pos)?
+        .parse()
+        .map_err(|_| "bad maxval")?;
+    if maxval != 255 {
+        return Err(format!("unsupported maxval {maxval}"));
+    }
+    pos += 1; // single whitespace after maxval
+    let need = width * height;
+    if bytes.len() < pos + need {
+        return Err(format!(
+            "pixel payload short: {} < {need}",
+            bytes.len() - pos
+        ));
+    }
+    Ok(GrayImage {
+        pixels: bytes[pos..pos + need].to_vec(),
+        width,
+        height,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let img = GrayImage {
+            pixels: (0u16..=255).map(|v| v as u8).collect(),
+            width: 16,
+            height: 16,
+        };
+        let p = std::env::temp_dir().join("fastvat_rt.pgm");
+        write_pgm(&img, &p).unwrap();
+        let back = read_pgm(&p).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_pgm(b"P6\n1 1\n255\n\0").is_err());
+        assert!(parse_pgm(b"P5\n2 2\n255\n\0").is_err()); // short payload
+    }
+
+    #[test]
+    fn parse_skips_comments() {
+        let mut bytes = b"P5\n# a comment\n2 1\n255\n".to_vec();
+        bytes.extend_from_slice(&[7, 9]);
+        let img = parse_pgm(&bytes).unwrap();
+        assert_eq!((img.width, img.height), (2, 1));
+        assert_eq!(img.pixels, vec![7, 9]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Color rendering: PPM (P6) writer with perceptual colormaps, and
+//! side-by-side composites for VAT-vs-iVAT comparison figures.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::GrayImage;
+use crate::error::Result;
+
+/// An RGB image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RgbImage {
+    /// Row-major RGB triples, `3 * width * height` bytes.
+    pub pixels: Vec<u8>,
+    /// Width in pixels.
+    pub width: usize,
+    /// Height in pixels.
+    pub height: usize,
+}
+
+/// Colormaps for grayscale-to-color mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Colormap {
+    /// Identity grayscale.
+    Gray,
+    /// Viridis-like perceptually uniform ramp (8 anchor points, lerped).
+    Viridis,
+    /// Black-red-yellow-white heat ramp.
+    Inferno,
+}
+
+const VIRIDIS: [[u8; 3]; 8] = [
+    [68, 1, 84],
+    [70, 50, 127],
+    [54, 92, 141],
+    [39, 127, 142],
+    [31, 161, 135],
+    [74, 194, 109],
+    [159, 218, 58],
+    [253, 231, 37],
+];
+
+const INFERNO: [[u8; 3]; 8] = [
+    [0, 0, 4],
+    [40, 11, 84],
+    [101, 21, 110],
+    [159, 42, 99],
+    [212, 72, 66],
+    [245, 125, 21],
+    [250, 193, 39],
+    [252, 255, 164],
+];
+
+fn map_value(v: u8, cmap: Colormap) -> [u8; 3] {
+    match cmap {
+        Colormap::Gray => [v, v, v],
+        Colormap::Viridis => lerp_ramp(v, &VIRIDIS),
+        Colormap::Inferno => lerp_ramp(v, &INFERNO),
+    }
+}
+
+fn lerp_ramp(v: u8, ramp: &[[u8; 3]; 8]) -> [u8; 3] {
+    let pos = v as f32 / 255.0 * 7.0;
+    let lo = pos.floor() as usize;
+    let hi = (lo + 1).min(7);
+    let t = pos - lo as f32;
+    let mut out = [0u8; 3];
+    for c in 0..3 {
+        out[c] = (ramp[lo][c] as f32 * (1.0 - t) + ramp[hi][c] as f32 * t) as u8;
+    }
+    out
+}
+
+/// Colorize a grayscale image. Note: VAT semantics are "dark = cluster", so
+/// the value is inverted first for the sequential ramps (clusters map to the
+/// ramp's bright end, which is what heatmap readers expect).
+pub fn colorize(img: &GrayImage, cmap: Colormap) -> RgbImage {
+    let mut pixels = Vec::with_capacity(img.pixels.len() * 3);
+    for &v in &img.pixels {
+        let value = match cmap {
+            Colormap::Gray => v,
+            _ => 255 - v,
+        };
+        pixels.extend_from_slice(&map_value(value, cmap));
+    }
+    RgbImage {
+        pixels,
+        width: img.width,
+        height: img.height,
+    }
+}
+
+/// Write a binary PPM (P6).
+pub fn write_ppm(img: &RgbImage, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    write!(w, "P6\n{} {}\n255\n", img.width, img.height)?;
+    w.write_all(&img.pixels)?;
+    Ok(())
+}
+
+/// Compose images horizontally with a separator gutter (VAT | iVAT figure).
+/// Images of different heights are bottom-padded with white.
+pub fn hstack(images: &[&GrayImage], gutter: usize) -> GrayImage {
+    if images.is_empty() {
+        return GrayImage {
+            pixels: Vec::new(),
+            width: 0,
+            height: 0,
+        };
+    }
+    let height = images.iter().map(|i| i.height).max().unwrap();
+    let width: usize =
+        images.iter().map(|i| i.width).sum::<usize>() + gutter * (images.len() - 1);
+    let mut pixels = vec![255u8; width * height];
+    let mut x0 = 0usize;
+    for img in images {
+        for r in 0..img.height {
+            for c in 0..img.width {
+                pixels[r * width + x0 + c] = img.get(r, c);
+            }
+        }
+        x0 += img.width + gutter;
+    }
+    GrayImage {
+        pixels,
+        width,
+        height,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gray(pixels: Vec<u8>, w: usize, h: usize) -> GrayImage {
+        GrayImage {
+            pixels,
+            width: w,
+            height: h,
+        }
+    }
+
+    #[test]
+    fn colorize_gray_is_identity_triples() {
+        let img = gray(vec![0, 128, 255], 3, 1);
+        let rgb = colorize(&img, Colormap::Gray);
+        assert_eq!(&rgb.pixels[0..3], &[0, 0, 0]);
+        assert_eq!(&rgb.pixels[6..9], &[255, 255, 255]);
+    }
+
+    #[test]
+    fn viridis_endpoints() {
+        let img = gray(vec![255, 0], 2, 1);
+        let rgb = colorize(&img, Colormap::Viridis);
+        // value 255 (max distance) inverts to 0 -> dark purple
+        assert_eq!(&rgb.pixels[0..3], &[68, 1, 84]);
+        // value 0 (cluster) inverts to 255 -> bright yellow
+        assert_eq!(&rgb.pixels[3..6], &[253, 231, 37]);
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let img = gray(vec![1, 2, 3, 4], 2, 2);
+        let rgb = colorize(&img, Colormap::Inferno);
+        let p = std::env::temp_dir().join("fastvat_test.ppm");
+        write_ppm(&rgb, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n2 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 12);
+    }
+
+    #[test]
+    fn hstack_places_and_pads() {
+        let a = gray(vec![10; 4], 2, 2);
+        let b = gray(vec![20; 1], 1, 1);
+        let out = hstack(&[&a, &b], 1);
+        assert_eq!((out.width, out.height), (4, 2));
+        assert_eq!(out.get(0, 0), 10);
+        assert_eq!(out.get(0, 2), 255); // gutter
+        assert_eq!(out.get(0, 3), 20);
+        assert_eq!(out.get(1, 3), 255); // bottom padding
+    }
+
+    #[test]
+    fn hstack_empty() {
+        let out = hstack(&[], 2);
+        assert_eq!(out.width, 0);
+    }
+}

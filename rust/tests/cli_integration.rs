@@ -1,0 +1,119 @@
+//! End-to-end CLI tests: run the `fast-vat` binary the way a user would.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_fast-vat"));
+    c.current_dir(env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("spawn fast-vat");
+    assert!(
+        out.status.success(),
+        "fast-vat {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage_and_exits_2() {
+    let out = bin().output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn vat_on_generated_blobs_with_ascii() {
+    let out = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "150", "--ascii", "16", "--ivat",
+    ]);
+    assert!(out.contains("insight:"), "{out}");
+    assert!(out.contains("blocks:"), "{out}");
+    // heatmap ramp characters must appear (dark end of the ramp)
+    assert!(out.contains('@') || out.contains('#'), "{out}");
+}
+
+#[test]
+fn vat_xla_engine_writes_pgm() {
+    let pgm = std::env::temp_dir().join("fastvat_cli.pgm");
+    let pgm_s = pgm.to_str().unwrap();
+    let out = run_ok(&[
+        "vat", "--dataset", "iris", "--engine", "xla", "--out", pgm_s,
+    ]);
+    assert!(out.contains("engine=xla"), "{out}");
+    let bytes = std::fs::read(&pgm).expect("pgm written");
+    assert!(bytes.starts_with(b"P5\n150 150\n"));
+}
+
+#[test]
+fn hopkins_reports_interpretation() {
+    let out = run_ok(&["hopkins", "--dataset", "blobs", "--n", "200"]);
+    assert!(out.contains("Hopkins ="), "{out}");
+    assert!(out.contains("significant cluster structure"), "{out}");
+}
+
+#[test]
+fn cluster_dbscan_on_moons() {
+    let out = run_ok(&["cluster", "--dataset", "moons", "--algo", "dbscan"]);
+    assert!(out.contains("dbscan:"), "{out}");
+    assert!(out.contains("ARI vs ground truth"), "{out}");
+}
+
+#[test]
+fn cluster_single_link_on_blobs() {
+    let out = run_ok(&[
+        "cluster", "--dataset", "blobs", "--algo", "single-link", "--k", "4",
+    ]);
+    assert!(out.contains("single-linkage"), "{out}");
+}
+
+#[test]
+fn pipeline_skips_uniform() {
+    let out = run_ok(&["pipeline", "--dataset", "uniform", "--n", "300"]);
+    assert!(out.contains("NoStructure"), "{out}");
+}
+
+#[test]
+fn serve_completes_job_mix() {
+    let out = run_ok(&["serve", "--workers", "2", "--jobs", "6"]);
+    assert!(out.contains("6 jobs in"), "{out}");
+    assert!(out.contains("jobs/s"), "{out}");
+}
+
+#[test]
+fn info_lists_artifacts() {
+    let out = run_ok(&["info"]);
+    assert!(out.contains("pdist"), "{out}");
+    assert!(out.contains("engines:"), "{out}");
+}
+
+#[test]
+fn csv_roundtrip_through_cli() {
+    // write a CSV, run vat --input on it
+    let csv = std::env::temp_dir().join("fastvat_cli.csv");
+    let mut text = String::new();
+    for i in 0..40 {
+        let (x, y) = if i % 2 == 0 {
+            (i as f64 * 0.01, 0.0)
+        } else {
+            (5.0 + i as f64 * 0.01, 5.0)
+        };
+        text.push_str(&format!("{x},{y}\n"));
+    }
+    std::fs::write(&csv, text).unwrap();
+    let out = run_ok(&["vat", "--input", csv.to_str().unwrap()]);
+    assert!(out.contains("n=40"), "{out}");
+}
+
+#[test]
+fn unknown_dataset_fails_cleanly() {
+    let out = bin()
+        .args(["vat", "--dataset", "nonexistent"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+}

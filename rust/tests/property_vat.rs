@@ -1,0 +1,231 @@
+//! Property suite over the whole VAT stack (hand-rolled generators; the
+//! offline registry has no proptest). Each property runs across a seeded
+//! family of random inputs — datasets, arbitrary symmetric matrices, and
+//! adversarial shapes — checking the DESIGN.md §Invariants list.
+
+use fast_vat::cluster::{dbscan, kmeans, DbscanParams, KMeansParams};
+use fast_vat::data::generators::{blobs, gmm, moons, uniform};
+use fast_vat::data::Points;
+use fast_vat::dissimilarity::condensed::CondensedMatrix;
+use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::metrics::{ari, nmi, silhouette, to_isize};
+use fast_vat::prng::Pcg32;
+use fast_vat::vat::dendrogram::Dendrogram;
+use fast_vat::vat::ivat::{ivat, minimax_bruteforce};
+use fast_vat::vat::{vat, vat_naive};
+
+/// Random symmetric zero-diagonal matrix (not necessarily metric!) — VAT
+/// must behave for any dissimilarity input, metric or not.
+fn random_dissimilarity(rng: &mut Pcg32, n: usize) -> DistanceMatrix {
+    let mut m = DistanceMatrix::zeros(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = rng.uniform_in(0.0, 10.0);
+            m.set(i, j, v);
+            m.set(j, i, v);
+        }
+    }
+    m
+}
+
+#[test]
+fn vat_invariants_on_arbitrary_dissimilarities() {
+    let mut rng = Pcg32::new(1000);
+    for trial in 0..30 {
+        let n = 2 + rng.below(60) as usize;
+        let d = random_dissimilarity(&mut rng, n);
+        let v = vat(&d);
+        // permutation
+        let mut sorted = v.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "trial {trial}");
+        // reordered consistency + symmetry preserved
+        assert!(v.reordered.asymmetry() < 1e-12);
+        // naive agrees even on non-metric inputs
+        assert_eq!(v.order, vat_naive(&d).order, "trial {trial}");
+        // MST edge count
+        assert_eq!(v.mst.len(), n - 1);
+    }
+}
+
+#[test]
+fn ivat_equals_bruteforce_on_random_inputs() {
+    let mut rng = Pcg32::new(1001);
+    for _ in 0..10 {
+        let n = 3 + rng.below(25) as usize;
+        let d = random_dissimilarity(&mut rng, n);
+        let v = vat(&d);
+        let fast = ivat(&v);
+        let slow = minimax_bruteforce(&v.reordered);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    assert!((fast.transformed.get(i, j) - slow.get(i, j)).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn condensed_and_square_vat_agree_on_random_data() {
+    let mut rng = Pcg32::new(1002);
+    for trial in 0..15 {
+        let n = 4 + rng.below(80) as usize;
+        let dims = 1 + rng.below(6) as usize;
+        let ds = uniform(n, dims, 2000 + trial);
+        let square = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let cond = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        assert_eq!(vat(&square).order, cond.vat_order(), "trial {trial}");
+    }
+}
+
+#[test]
+fn dendrogram_cuts_nest() {
+    // cutting at k+1 refines the k-cut: every (k+1)-cluster sits inside one
+    // k-cluster (single-linkage is hierarchical)
+    let mut rng = Pcg32::new(1003);
+    for trial in 0..10 {
+        let n = 20 + rng.below(60) as usize;
+        let ds = gmm(n, 2, 3, 3000 + trial);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let den = Dendrogram::from_vat(&vat(&d));
+        for k in 1..5.min(n - 1) {
+            let coarse = den.cut_k(k);
+            let fine = den.cut_k(k + 1);
+            // map each fine cluster to the set of coarse labels it touches
+            let mut touch: std::collections::HashMap<usize, std::collections::HashSet<usize>> =
+                Default::default();
+            for i in 0..n {
+                touch.entry(fine[i]).or_default().insert(coarse[i]);
+            }
+            for (fc, cs) in touch {
+                assert_eq!(cs.len(), 1, "fine cluster {fc} spans {cs:?} (k={k})");
+            }
+        }
+    }
+}
+
+#[test]
+fn metric_reorder_invariance_of_scores() {
+    // relabeling/permutation invariance of ARI/NMI
+    let mut rng = Pcg32::new(1004);
+    for _ in 0..20 {
+        let n = 10 + rng.below(100) as usize;
+        let a: Vec<isize> = (0..n).map(|_| rng.below(4) as isize).collect();
+        let b: Vec<isize> = (0..n).map(|_| rng.below(4) as isize).collect();
+        // symmetric
+        assert!((ari(&a, &b) - ari(&b, &a)).abs() < 1e-12);
+        assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+        // renaming labels leaves scores unchanged
+        let renamed: Vec<isize> = b.iter().map(|&l| 7 - l).collect();
+        assert!((ari(&a, &b) - ari(&a, &renamed)).abs() < 1e-12);
+        assert!((nmi(&a, &b) - nmi(&a, &renamed)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn kmeans_inertia_never_worse_with_more_restarts() {
+    let ds = gmm(150, 2, 3, 1005);
+    let mut last = f64::INFINITY;
+    for n_init in [1usize, 2, 4, 8] {
+        let r = kmeans(
+            &ds.points,
+            &KMeansParams {
+                k: 3,
+                n_init,
+                seed: 9,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            r.inertia <= last + 1e-9,
+            "n_init={n_init}: {} > {last}",
+            r.inertia
+        );
+        last = r.inertia;
+    }
+}
+
+#[test]
+fn dbscan_labels_form_valid_partition() {
+    let mut rng = Pcg32::new(1006);
+    for trial in 0..10 {
+        let ds = moons(100 + rng.below(100) as usize, 0.08, 4000 + trial);
+        let r = dbscan(
+            &ds.points,
+            &DbscanParams {
+                eps: 0.05 + rng.uniform() * 0.4,
+                min_pts: 2 + rng.below(6) as usize,
+            },
+        )
+        .unwrap();
+        // labels in {-1} ∪ [0, clusters)
+        for &l in &r.labels {
+            assert!(l == -1 || (0..r.clusters as isize).contains(&l));
+        }
+        // every cluster id is used
+        for c in 0..r.clusters as isize {
+            assert!(r.labels.contains(&c), "cluster {c} empty");
+        }
+        assert_eq!(r.noise, r.labels.iter().filter(|&&l| l == -1).count());
+    }
+}
+
+#[test]
+fn silhouette_bounded_on_random_labelings() {
+    let mut rng = Pcg32::new(1007);
+    let ds = blobs(80, 2, 3, 0.5, 1008);
+    let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+    for _ in 0..10 {
+        let labels: Vec<isize> = (0..80).map(|_| rng.below(5) as isize - 1).collect();
+        let s = silhouette(&d, &labels);
+        assert!((-1.0..=1.0).contains(&s), "silhouette {s}");
+    }
+}
+
+#[test]
+fn engine_substitution_does_not_change_cluster_quality() {
+    // a pipeline-level metamorphic property: swapping the distance engine
+    // must leave the downstream clustering metrics unchanged (same math)
+    let ds = blobs(120, 2, 3, 0.3, 1009);
+    let truth = to_isize(ds.labels.as_ref().unwrap());
+    let km = kmeans(
+        &ds.points,
+        &KMeansParams {
+            k: 3,
+            seed: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let labels = to_isize(&km.labels);
+    let d1 = DistanceMatrix::build_naive(&ds.points, Metric::Euclidean);
+    let d2 = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+    let d3 = DistanceMatrix::build_parallel(&ds.points, Metric::Euclidean, 4);
+    let s1 = silhouette(&d1, &labels);
+    let s2 = silhouette(&d2, &labels);
+    let s3 = silhouette(&d3, &labels);
+    assert!((s1 - s2).abs() < 1e-9 && (s2 - s3).abs() < 1e-9);
+    assert!(ari(&truth, &labels) > 0.9);
+}
+
+#[test]
+fn points_select_then_vat_equals_vat_of_subset() {
+    let mut rng = Pcg32::new(1010);
+    let ds = gmm(100, 3, 2, 1011);
+    for _ in 0..5 {
+        let k = 10 + rng.below(50) as usize;
+        let idx = rng.choose_indices(100, k);
+        let sub = ds.points.select(&idx);
+        let direct = Points::from_rows(
+            &idx.iter().map(|&i| ds.points.row(i).to_vec()).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert_eq!(sub, direct);
+        let v1 = vat(&DistanceMatrix::build_blocked(&sub, Metric::Euclidean));
+        let v2 = vat(&DistanceMatrix::build_blocked(&direct, Metric::Euclidean));
+        assert_eq!(v1.order, v2.order);
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration: the job service end to end over the XLA engine — the
+//! deployment configuration the paper's Broader-Impact scenarios imply
+//! (one shared AOT artifact cache, many concurrent tendency checks).
+
+use std::sync::Arc;
+
+use fast_vat::config::{Document, ServiceConfig};
+use fast_vat::coordinator::service::VatService;
+use fast_vat::coordinator::streaming::{StreamingConfig, StreamingVat};
+use fast_vat::coordinator::JobOptions;
+use fast_vat::data::generators::{blobs, moons, separated_blobs, spotify_like, uniform};
+use fast_vat::runtime::{engine_by_name, XlaHandle};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn xla_backed_service_mixed_workload() {
+    let cfg = ServiceConfig {
+        workers: 3,
+        queue_depth: 16,
+        ..Default::default()
+    };
+    let engine = Arc::new(XlaHandle::new(artifacts_dir()).expect("artifacts"));
+    engine.warmup().expect("warmup");
+    let service = VatService::start(&cfg, engine);
+
+    let mut tickets = Vec::new();
+    let mut expect_structure = Vec::new();
+    for seed in 0..12u64 {
+        let (points, structured, opts) = match seed % 3 {
+            // guaranteed-separated blobs -> blocks must appear on raw VAT
+            0 => (
+                separated_blobs(200, 3, 0.3, 10.0, seed).points,
+                true,
+                JobOptions::default(),
+            ),
+            // moons need the iVAT transform to resolve (chain-shaped)
+            1 => (
+                moons(150, 0.05, seed).points,
+                true,
+                JobOptions {
+                    ivat: true,
+                    ..Default::default()
+                },
+            ),
+            _ => (uniform(100, 2, seed).points, false, JobOptions::default()),
+        };
+        expect_structure.push(structured);
+        tickets.push(service.submit(points, opts).unwrap());
+    }
+    for ((id, t), want_structure) in tickets.into_iter().zip(expect_structure) {
+        let out = t.recv().unwrap().unwrap();
+        assert_eq!(out.id, id);
+        assert_eq!(out.engine, "xla");
+        if want_structure {
+            assert!(out.k_estimate >= 2, "job {id}: k={} insight={}", out.k_estimate, out.insight);
+        }
+    }
+
+    let snap = service.stats().snapshot();
+    assert_eq!(snap.submitted, 12);
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.distance_us.0 > 0.0);
+    assert!(!service.stats().report().is_empty());
+}
+
+#[test]
+fn service_from_config_document() {
+    let doc = Document::parse(
+        "[service]\nworkers = 2\nqueue_depth = 4\nengine = \"blocked\"\n",
+    )
+    .unwrap();
+    let cfg = ServiceConfig::from_document(&doc).unwrap();
+    let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir).unwrap();
+    let service = VatService::start(&cfg, engine);
+    let ds = blobs(80, 2, 2, 0.4, 1);
+    let (_, t) = service.submit(ds.points, JobOptions::default()).unwrap();
+    assert!(t.recv().unwrap().is_ok());
+}
+
+#[test]
+fn oversize_job_fails_cleanly_without_poisoning_pool() {
+    let cfg = ServiceConfig {
+        workers: 2,
+        queue_depth: 8,
+        ..Default::default()
+    };
+    let engine = Arc::new(XlaHandle::new(artifacts_dir()).expect("artifacts"));
+    let service = VatService::start(&cfg, engine);
+
+    // job 1: too large for any bucket -> must error
+    let big = spotify_like(2100, 1);
+    let (_, t_big) = service.submit(big.points, JobOptions::default()).unwrap();
+    assert!(t_big.recv().unwrap().is_err());
+
+    // job 2 after the failure: pool must still work
+    let ok = blobs(100, 2, 2, 0.4, 2);
+    let (_, t_ok) = service.submit(ok.points, JobOptions::default()).unwrap();
+    assert!(t_ok.recv().unwrap().is_ok());
+
+    let snap = service.stats().snapshot();
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn streaming_and_service_compose() {
+    // streaming front-end accumulates; snapshots are submitted to the pool
+    // for heavier analysis (ivat + hopkins) — a realistic topology
+    let cfg = ServiceConfig {
+        workers: 2,
+        queue_depth: 8,
+        ..Default::default()
+    };
+    let service = VatService::start(&cfg, Arc::new(fast_vat::runtime::BlockedEngine));
+    let mut sv = StreamingVat::new(
+        2,
+        StreamingConfig {
+            window: 150,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let ds = blobs(150, 2, 3, 0.3, 3);
+    let mut tickets = Vec::new();
+    for i in 0..150 {
+        sv.push(ds.points.row(i)).unwrap();
+        if (i + 1) % 50 == 0 {
+            // ship the current window to the analysis pool
+            let window_points = sv.snapshot().unwrap();
+            let opts = JobOptions {
+                ivat: true,
+                ..Default::default()
+            };
+            // rebuild Points from the snapshot's reordered matrix order size
+            let _ = window_points;
+            tickets.push(
+                service
+                    .submit(ds.points.select(&(0..=i).collect::<Vec<_>>()), opts)
+                    .unwrap(),
+            );
+        }
+    }
+    for (_, t) in tickets {
+        let out = t.recv().unwrap().unwrap();
+        assert!(out.k_estimate >= 1);
+    }
+}

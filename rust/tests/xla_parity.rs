@@ -1,0 +1,185 @@
+//! End-to-end parity: the XLA/PJRT engine (AOT Pallas kernels) must agree
+//! with the native engines — the paper's "identical outputs" claim across
+//! tiers, verified through the real artifact path.
+//!
+//! Requires `artifacts/` (run `make artifacts`). Every test uses a single
+//! shared [`XlaHandle`] (one compiled-executable cache; exercises the
+//! executor thread under reuse).
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use fast_vat::data::generators::{blobs, moons, paper_datasets, spotify_like};
+use fast_vat::data::scale::Scaler;
+use fast_vat::data::Points;
+use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::hopkins::{draw_probes, fold, nn_distances, Exponent, HopkinsParams};
+use fast_vat::runtime::{DistanceEngine, XlaHandle};
+use fast_vat::vat::vat;
+
+fn artifacts_dir() -> String {
+    std::env::var("FAST_VAT_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}
+
+fn handle() -> &'static Mutex<XlaHandle> {
+    static HANDLE: OnceLock<Mutex<XlaHandle>> = OnceLock::new();
+    HANDLE.get_or_init(|| {
+        Mutex::new(XlaHandle::new(artifacts_dir()).expect("artifacts present"))
+    })
+}
+
+/// The dot-trick in f32 leaves ~1e-3 absolute error near zero distance.
+const ATOL: f64 = 5e-3;
+
+fn assert_matrices_close(a: &DistanceMatrix, b: &DistanceMatrix, atol: f64, ctx: &str) {
+    assert_eq!(a.n(), b.n(), "{ctx}: size");
+    for i in 0..a.n() {
+        for j in 0..a.n() {
+            let (x, y) = (a.get(i, j), b.get(i, j));
+            assert!(
+                (x - y).abs() <= atol + 1e-4 * y.abs(),
+                "{ctx}: ({i},{j}) {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pdist_matches_blocked_engine() {
+    let h = handle().lock().unwrap();
+    for (n, d, seed) in [(40usize, 2usize, 1u64), (150, 4, 2), (500, 13, 3)] {
+        let ds = blobs(n, d, 3, 0.7, seed);
+        let z = Scaler::standardized(&ds.points);
+        let xla = h.pdist(&z).unwrap();
+        let native = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
+        assert_matrices_close(&xla, &native, ATOL, &format!("n={n} d={d}"));
+    }
+}
+
+#[test]
+fn pdist_mm_variant_matches_too() {
+    let h = XlaHandle::with_variant(artifacts_dir(), false).unwrap();
+    let ds = moons(200, 0.07, 4);
+    let z = Scaler::standardized(&ds.points);
+    let xla = h.pdist(&z).unwrap();
+    let native = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
+    assert_matrices_close(&xla, &native, ATOL, "pdist_mm");
+}
+
+#[test]
+fn vat_permutation_identical_across_engines() {
+    // the paper's central claim, end to end: same ordering from the
+    // interpreted-tier, compiled-tier, and XLA-tier matrices
+    let h = handle().lock().unwrap();
+    for seed in [10u64, 11, 12] {
+        let ds = blobs(120, 2, 3, 0.5, seed);
+        let z = Scaler::standardized(&ds.points);
+        let from_native = vat(&DistanceMatrix::build_blocked(&z, Metric::Euclidean));
+        let from_xla = vat(&h.pdist(&z).unwrap());
+        assert_eq!(
+            from_native.order, from_xla.order,
+            "seed {seed}: engine must not change the VAT permutation"
+        );
+    }
+}
+
+#[test]
+fn hopkins_parity_native_vs_xla() {
+    let h = handle().lock().unwrap();
+    let ds = blobs(400, 2, 3, 0.3, 20);
+    let z = Scaler::standardized(&ds.points);
+    let params = HopkinsParams {
+        seed: 99,
+        ..Default::default()
+    };
+    let probes = draw_probes(&z, &params).unwrap();
+    let (u_native, w_native) = nn_distances(&z, &probes);
+    let (u_xla, w_xla) = h.hopkins_nn(&z, &probes).unwrap();
+    for (a, b) in u_native.iter().zip(&u_xla) {
+        assert!((a - b).abs() < ATOL, "u: {a} vs {b}");
+    }
+    for (a, b) in w_native.iter().zip(&w_xla) {
+        assert!((a - b).abs() < ATOL, "w: {a} vs {b}");
+    }
+    let h_native = fold(&u_native, &w_native, z.d(), Exponent::Dim);
+    let h_xla = fold(&u_xla, &w_xla, z.d(), Exponent::Dim);
+    assert!((h_native - h_xla).abs() < 0.02, "{h_native} vs {h_xla}");
+}
+
+#[test]
+fn hopkins_rejects_unstandardized_huge_data() {
+    let h = handle().lock().unwrap();
+    // diameter >> PAD_OFFSET/10 must be refused, not silently wrong
+    let p = Points::from_rows(&[vec![0.0, 0.0], vec![5.0e3, 5.0e3], vec![1.0, 1.0]]).unwrap();
+    let params = HopkinsParams {
+        probes: 2,
+        ..Default::default()
+    };
+    let probes = draw_probes(&p, &params).unwrap();
+    assert!(h.hopkins_nn(&p, &probes).is_err());
+}
+
+#[test]
+fn assign_matches_native_bruteforce() {
+    let h = handle().lock().unwrap();
+    let ds = blobs(300, 2, 4, 0.4, 30);
+    let z = Scaler::standardized(&ds.points);
+    let k = 4;
+    // centroids: first k points (content irrelevant for parity)
+    let centroids: Vec<f64> = (0..k).flat_map(|i| z.row(i).to_vec()).collect();
+    let xla = h.assign(&z, &centroids, k).unwrap();
+    assert_eq!(xla.len(), 300 * k);
+    for i in 0..300 {
+        for c in 0..k {
+            let want = Metric::Euclidean.eval(z.row(i), &centroids[c * 2..(c + 1) * 2]);
+            let got = xla[i * k + c];
+            assert!((got - want).abs() < ATOL, "({i},{c}): {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn all_paper_datasets_run_through_xla() {
+    // every Table-1 workload must fit a bucket and produce a valid VAT
+    let h = handle().lock().unwrap();
+    for ds in paper_datasets(42) {
+        let z = Scaler::standardized(&ds.points);
+        let m = h.pdist(&z).unwrap();
+        assert_eq!(m.n(), ds.points.n(), "{}", ds.name);
+        let v = vat(&m);
+        let mut sorted = v.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..ds.points.n()).collect::<Vec<_>>(), "{}", ds.name);
+    }
+}
+
+#[test]
+fn oversize_request_errors_cleanly() {
+    let h = handle().lock().unwrap();
+    let ds = spotify_like(2049, 50); // largest bucket is 2048
+    let z = Scaler::standardized(&ds.points);
+    match h.pdist(&z) {
+        Err(fast_vat::Error::NoArtifact(_)) => {}
+        other => panic!("expected NoArtifact, got {other:?}"),
+    }
+}
+
+#[test]
+fn handle_is_shareable_across_threads() {
+    let h = XlaHandle::new(artifacts_dir()).unwrap();
+    let mut joins = Vec::new();
+    for seed in 0..4u64 {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            let ds = blobs(64, 2, 2, 0.4, seed);
+            let z = Scaler::standardized(&ds.points);
+            let m = h.pdist(&z).unwrap();
+            assert_eq!(m.n(), 64);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let _: Arc<dyn DistanceEngine> = Arc::new(h); // trait-object compatible
+}
