@@ -1,0 +1,151 @@
+//! Offline **type-level stub** of the `xla` PJRT bindings.
+//!
+//! The fast-vat `xla` cargo feature gates the real AOT/PJRT execution path
+//! (`rust/src/runtime/client.rs`). The actual PJRT bindings are a native
+//! dependency that cannot resolve in an offline build, so this crate vendors
+//! the exact API *surface* that path consumes: the same types, method names,
+//! and signatures, with bodies that return a descriptive runtime error.
+//!
+//! This keeps `cargo build --features xla` type-checking (and the whole PJRT
+//! layer under `cargo clippy`/CI) with zero external dependencies. A real
+//! deployment swaps this crate for functional bindings with a `[patch]`
+//! entry, e.g.:
+//!
+//! ```toml
+//! [patch."crates-io".xla]        # or a path/git patch on the workspace dep
+//! git = "https://github.com/LaurentMazare/xla-rs"
+//! ```
+//!
+//! No behaviour of the default build depends on this crate: the deterministic
+//! in-crate fallback (`fast_vat::runtime::SimulatedXlaEngine`) serves the
+//! "xla" engine name when the feature is off or artifacts are missing.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} requires the real PJRT bindings (this build links \
+         the offline type-level stub; patch the `xla` dependency to execute \
+         artifacts)"
+    )))
+}
+
+/// Element types transferable to/from [`Literal`] buffers.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor value.
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Unwrap a 1-tuple result.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Unwrap a 2-tuple result.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        unavailable("Literal::to_tuple2")
+    }
+}
+
+/// Values accepted as execution arguments.
+pub trait ExecuteInput {}
+
+impl ExecuteInput for Literal {}
+
+/// Parsed HLO module.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO *text* artifact from disk.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer returned by execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one output list per device.
+    pub fn execute<L: ExecuteInput>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client (CPU platform in this project).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}

@@ -11,7 +11,8 @@ use fast_vat::config::ServiceConfig;
 use fast_vat::coordinator::service::{SubmitError, VatService};
 use fast_vat::coordinator::JobOptions;
 use fast_vat::data::generators::{blobs, gmm, moons};
-use fast_vat::runtime::{BlockedEngine, DistanceEngine, XlaHandle};
+use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine};
+use fast_vat::runtime::engine_by_name;
 
 fn job_mix(n_jobs: usize) -> Vec<fast_vat::data::Points> {
     (0..n_jobs)
@@ -49,14 +50,8 @@ fn main() {
     for engine_name in ["blocked", "xla"] {
         let mut base = 0.0;
         for workers in [1usize, 2, 4, 8] {
-            let engine: Arc<dyn DistanceEngine> = match engine_name {
-                "blocked" => Arc::new(BlockedEngine),
-                _ => {
-                    let h = XlaHandle::new(&artifacts).expect("artifacts");
-                    h.warmup().expect("warmup");
-                    Arc::new(h)
-                }
-            };
+            let engine = engine_by_name(engine_name, &artifacts).expect("engine");
+            engine.warmup().expect("warmup");
             let jps = run_pool(engine, workers, 48);
             if workers == 1 {
                 base = jps;

@@ -1,4 +1,4 @@
-//! Bench F1–F3 — times the figure-generation path (XLA pdist → VAT →
+//! Bench F1–F3 — times the figure-generation path (xla-tier pdist → VAT →
 //! render → PGM) for each of the paper's three figures and reports the
 //! image's structural summary (band darkness, block count) so figure
 //! regressions show up in bench logs, not just by eyeballing PGMs.
@@ -8,14 +8,15 @@
 use fast_vat::bench_util::{observe, time_auto, Table};
 use fast_vat::data::generators::paper_datasets;
 use fast_vat::data::scale::Scaler;
-use fast_vat::runtime::{DistanceEngine, XlaHandle};
+use fast_vat::dissimilarity::engine::DistanceEngine;
+use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::blocks::BlockDetector;
 use fast_vat::vat::vat;
 use fast_vat::viz::{diagonal_darkness, render};
 
 fn main() {
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let xla = XlaHandle::new(&artifacts).expect("run `make artifacts` first");
+    let xla = engine_by_name("xla", &artifacts).expect("engine");
     xla.warmup().expect("warmup");
     let det = BlockDetector::default();
 
@@ -49,6 +50,6 @@ fn main() {
             expect.to_string(),
         ]);
     }
-    println!("\n== Figures 1-3: generation path ==");
+    println!("\n== Figures 1-3: generation path (engine: {}) ==", xla.name());
     println!("{}", table.render());
 }

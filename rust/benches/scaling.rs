@@ -1,18 +1,20 @@
 //! Bench A2 — engine scaling with n (the O(n²d) claim, measured), plus the
 //! A5 kernel ablation (Pallas-tiled `pdist` artifact vs XLA-fused
-//! `pdist_mm` — same math, different tiling authorship).
+//! `pdist_mm` — same math, different tiling authorship). Under the default
+//! build the two xla columns run the deterministic simulated engine.
 //!
 //!   cargo bench --bench scaling
 
 use fast_vat::bench_util::{observe, time_auto, Table};
 use fast_vat::data::generators::separated_blobs;
 use fast_vat::data::scale::Scaler;
-use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine, NaiveEngine};
+use fast_vat::runtime::engine_by_name;
 
 fn main() {
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let xla_pallas = XlaHandle::new(&artifacts).expect("artifacts");
-    let xla_mm = XlaHandle::with_variant(&artifacts, false).expect("artifacts");
+    let xla_pallas = engine_by_name("xla", &artifacts).expect("engine");
+    let xla_mm = engine_by_name("xla-mm", &artifacts).expect("engine");
     xla_pallas.warmup().expect("warmup");
 
     let mut table = Table::new(&[
@@ -54,5 +56,10 @@ fn main() {
         ]);
     }
     println!("\n== A2/A5: engine scaling and kernel-variant ablation ==");
+    println!(
+        "(xla engines: {} / {})",
+        xla_pallas.name(),
+        xla_mm.name()
+    );
     println!("{}", table.render());
 }

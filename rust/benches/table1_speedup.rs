@@ -9,22 +9,30 @@
 //! comes from the algorithm-level waste alone; the interpreter overhead on
 //! top of it is measured against the REAL pure-Python baseline by
 //! `examples/paper_eval.rs` (Table 1 there reports 14-38x end to end).
+//!
+//! The cython-tier column runs whatever "xla" resolves to on this build:
+//! the real PJRT artifacts under `--features xla`, the deterministic
+//! simulated engine otherwise.
+
+use std::sync::Arc;
 
 use fast_vat::bench_util::{observe, time_auto, Table};
 use fast_vat::data::generators::paper_datasets;
 use fast_vat::data::scale::Scaler;
-use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::dissimilarity::engine::DistanceEngine;
+use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::vat;
 
 fn main() {
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let xla = XlaHandle::new(&artifacts).expect("run `make artifacts` first");
-    xla.warmup().expect("warmup");
-    let engines: Vec<(&str, &dyn DistanceEngine)> = vec![
-        ("naive-rust", &NaiveEngine),
-        ("numba-tier", &BlockedEngine),
-        ("cython-tier", &xla),
+    let engines: Vec<(&str, Arc<dyn DistanceEngine>)> = vec![
+        ("naive-rust", engine_by_name("naive", &artifacts).unwrap()),
+        ("numba-tier", engine_by_name("blocked", &artifacts).unwrap()),
+        ("cython-tier", engine_by_name("xla", &artifacts).unwrap()),
     ];
+    for (_, engine) in &engines {
+        engine.warmup().expect("warmup");
+    }
 
     let mut table = Table::new(&[
         "Dataset",
@@ -55,5 +63,6 @@ fn main() {
         ]);
     }
     println!("\n== Table 1: execution time and speedup ==");
+    println!("(cython-tier engine: {})", engines[2].1.name());
     println!("{}", table.render());
 }

@@ -1,17 +1,20 @@
 //! Bench T2 — regenerates the paper's Table 2 (Hopkins scores) and times
-//! the statistic through both backends (native vs XLA mindist kernels).
+//! the statistic through both backends (native vs the xla-tier mindist
+//! kernels — real artifacts under `--features xla`, the native-backed
+//! default trait path otherwise).
 //!
 //!   cargo bench --bench table2_hopkins
 
 use fast_vat::bench_util::{observe, time_auto, Table};
 use fast_vat::data::generators::paper_datasets;
 use fast_vat::data::scale::Scaler;
+use fast_vat::dissimilarity::engine::DistanceEngine;
 use fast_vat::hopkins::{draw_probes, fold, hopkins_mean, nn_distances, HopkinsParams};
-use fast_vat::runtime::XlaHandle;
+use fast_vat::runtime::engine_by_name;
 
 fn main() {
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let xla = XlaHandle::new(&artifacts).expect("run `make artifacts` first");
+    let xla = engine_by_name("xla", &artifacts).expect("engine");
     xla.warmup().expect("warmup");
 
     let mut table = Table::new(&[
@@ -68,5 +71,6 @@ fn main() {
         ]);
     }
     println!("\n== Table 2: Hopkins scores (measured vs paper) ==");
+    println!("(xla column engine: {})", xla.name());
     println!("{}", table.render());
 }

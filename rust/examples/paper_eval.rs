@@ -26,9 +26,10 @@ use fast_vat::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams}
 use fast_vat::data::generators::paper_datasets;
 use fast_vat::data::scale::Scaler;
 use fast_vat::data::Dataset;
+use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine, NaiveEngine};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::metrics::{ari, nmi, to_isize};
-use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::blocks::BlockDetector;
 use fast_vat::vat::vat;
 use fast_vat::viz::{ascii::to_ascii, downsample, pgm::write_pgm, render};
@@ -55,7 +56,7 @@ fn python_baseline_times(no_python: bool) -> Option<Vec<(String, f64)>> {
     }
     let out = std::process::Command::new("python")
         .args(["-m", "baseline.pure_vat"])
-        .current_dir(format!("{}/python", env!("CARGO_MANIFEST_DIR")))
+        .current_dir(format!("{}/../python", env!("CARGO_MANIFEST_DIR")))
         .output()
         .ok()?;
     if !out.status.success() {
@@ -85,7 +86,8 @@ fn main() -> fast_vat::Result<()> {
     let datasets = paper_datasets(SEED);
     let naive = NaiveEngine;
     let blocked = BlockedEngine;
-    let xla = XlaHandle::new(&artifacts)?;
+    // real PJRT artifacts under --features xla; deterministic sim otherwise
+    let xla = engine_by_name("xla", &artifacts)?;
     xla.warmup()?;
 
     let mut report = String::new();
@@ -109,7 +111,7 @@ fn main() -> fast_vat::Result<()> {
         let reps = if ds.points.n() <= 200 { 5 } else { 3 };
         let t_naive = time_vat(&naive, &z, reps);
         let t_blocked = time_vat(&blocked, &z, reps);
-        let t_xla = time_vat(&xla, &z, reps);
+        let t_xla = time_vat(xla.as_ref(), &z, reps);
         let t_python = py_times
             .as_ref()
             .and_then(|rows| {

@@ -1,13 +1,19 @@
 //! Stage-level profile of the VAT pipeline (perf-pass instrumentation).
+
 use std::time::Instant;
+
 use fast_vat::data::generators::separated_blobs;
 use fast_vat::data::scale::Scaler;
 use fast_vat::dissimilarity::{DistanceMatrix, Metric};
-use fast_vat::vat::{vat, ivat::ivat, prim};
+use fast_vat::vat::{ivat::ivat, prim, vat};
 
 fn t<F: FnMut()>(label: &str, mut f: F) {
     let mut best = f64::INFINITY;
-    for _ in 0..5 { let t0 = Instant::now(); f(); best = best.min(t0.elapsed().as_secs_f64()); }
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
     println!("{label:<28} {best:.5}s");
 }
 
@@ -16,18 +22,30 @@ fn main() {
         println!("--- n = {n} (d=2) ---");
         let ds = separated_blobs(n, 4, 0.4, 10.0, 7);
         let z = Scaler::standardized(&ds.points);
-        t("distance blocked", || { std::hint::black_box(DistanceMatrix::build_blocked(&z, Metric::Euclidean)); });
+        t("distance blocked", || {
+            std::hint::black_box(DistanceMatrix::build_blocked(&z, Metric::Euclidean));
+        });
         let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
-        t("prim order", || { std::hint::black_box(prim::vat_order(&d)); });
+        t("prim order", || {
+            std::hint::black_box(prim::vat_order(&d));
+        });
         let (order, _) = prim::vat_order(&d);
-        t("reorder gather", || { std::hint::black_box(d.reorder(&order).unwrap()); });
+        t("reorder gather", || {
+            std::hint::black_box(d.reorder(&order).unwrap());
+        });
         let v = vat(&d);
-        t("ivat transform", || { std::hint::black_box(ivat(&v)); });
-        t("full vat()", || { std::hint::black_box(vat(&d)); });
+        t("ivat transform", || {
+            std::hint::black_box(ivat(&v));
+        });
+        t("full vat()", || {
+            std::hint::black_box(vat(&d));
+        });
     }
     // d=13 spotify-scale
     let ds = fast_vat::data::generators::spotify_like(500, 42);
     let z = Scaler::standardized(&ds.points);
     println!("--- spotify 500x13 ---");
-    t("distance blocked", || { std::hint::black_box(DistanceMatrix::build_blocked(&z, Metric::Euclidean)); });
+    t("distance blocked", || {
+        std::hint::black_box(DistanceMatrix::build_blocked(&z, Metric::Euclidean));
+    });
 }

@@ -14,14 +14,16 @@ use std::time::Instant;
 use fast_vat::bench_util::Table;
 use fast_vat::data::generators::separated_blobs;
 use fast_vat::data::scale::Scaler;
+use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine, NaiveEngine};
 use fast_vat::dissimilarity::Metric;
-use fast_vat::runtime::{BlockedEngine, DistanceEngine, NaiveEngine, XlaHandle};
+use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::svat::svat;
 use fast_vat::vat::vat;
 
 fn main() -> fast_vat::Result<()> {
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let xla = XlaHandle::new(&artifacts)?;
+    // real PJRT artifacts under --features xla; deterministic sim otherwise
+    let xla = engine_by_name("xla", &artifacts)?;
     xla.warmup()?;
     let naive = NaiveEngine;
     let blocked = BlockedEngine;

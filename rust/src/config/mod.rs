@@ -206,7 +206,8 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Bounded queue depth (backpressure threshold).
     pub queue_depth: usize,
-    /// Default engine: "naive" | "blocked" | "parallel" | "xla" | "xla-mm".
+    /// Default engine: "naive" | "blocked" | "parallel" | "condensed" |
+    /// "xla" | "xla-mm".
     pub engine: String,
     /// artifacts/ directory for the XLA engine.
     pub artifacts_dir: String,
@@ -248,7 +249,7 @@ impl ServiceConfig {
                     let e = v
                         .as_str()
                         .ok_or_else(|| Error::Config("engine must be a string".into()))?;
-                    if !["naive", "blocked", "parallel", "xla", "xla-mm"].contains(&e) {
+                    if !crate::runtime::ENGINE_NAMES.contains(&e) {
                         return Err(Error::Config(format!("unknown engine {e}")));
                     }
                     cfg.engine = e.to_string();

@@ -8,7 +8,7 @@
 //! * [`queue`] — bounded MPMC job queue with blocking and try semantics
 //!   (backpressure: a full queue rejects or blocks, never grows unbounded);
 //! * [`service`] — worker pool executing VAT jobs against a shared
-//!   [`crate::runtime::DistanceEngine`];
+//!   [`crate::dissimilarity::engine::DistanceEngine`];
 //! * [`streaming`] — incremental VAT over an arriving point stream with
 //!   windowed eviction (paper §5.2 "Streaming VAT" future work);
 //! * [`pipeline`] — the tendency-informed auto-clustering pipeline (paper

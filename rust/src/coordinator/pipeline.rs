@@ -22,12 +22,11 @@ use std::sync::Arc;
 use crate::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
 use crate::data::scale::Scaler;
 use crate::data::Points;
+use crate::dissimilarity::engine::DistanceEngine;
 use crate::error::Result;
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::metrics::{ari, silhouette, to_isize};
-use crate::vat::blocks::Block;
-use crate::runtime::DistanceEngine;
-use crate::vat::blocks::BlockDetector;
+use crate::vat::blocks::{Block, BlockDetector};
 use crate::vat::{ivat::ivat, vat};
 
 /// Tunables for [`auto_cluster`].
@@ -191,8 +190,8 @@ pub fn auto_cluster(
 mod tests {
     use super::*;
     use crate::data::generators::{blobs, circles, moons, uniform};
+    use crate::dissimilarity::engine::BlockedEngine;
     use crate::metrics::ari;
-    use crate::runtime::BlockedEngine;
 
     fn engine() -> Arc<dyn DistanceEngine> {
         Arc::new(BlockedEngine)

@@ -1,10 +1,11 @@
 //! The VAT job service: a worker pool over the bounded queue.
 //!
-//! One shared [`DistanceEngine`] (e.g. a single [`crate::runtime::XlaHandle`]
-//! whose executor thread owns the compiled artifacts) serves all workers;
-//! ordering/transform stages run on the worker threads themselves, so the
-//! O(n²) Prim sweeps parallelize across jobs while the distance stage is
-//! funneled through whichever engine the deployment chose.
+//! One shared [`DistanceEngine`] (e.g. a single `runtime::XlaHandle` whose
+//! executor thread owns the compiled artifacts, when the `xla` feature is
+//! on) serves all workers; ordering/transform stages run on the worker
+//! threads themselves, so the O(n²) Prim sweeps parallelize across jobs
+//! while the distance stage is funneled through whichever engine the
+//! deployment chose.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -16,9 +17,9 @@ use crate::coordinator::stats::ServiceStats;
 use crate::coordinator::{JobOptions, VatJob, VatJobOutput};
 use crate::data::scale::Scaler;
 use crate::data::Points;
+use crate::dissimilarity::engine::DistanceEngine;
 use crate::error::{Error, Result};
 use crate::hopkins::{hopkins, HopkinsParams};
-use crate::runtime::DistanceEngine;
 use crate::vat::blocks::BlockDetector;
 use crate::vat::{ivat::ivat, vat};
 
@@ -217,7 +218,7 @@ pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOut
 mod tests {
     use super::*;
     use crate::data::generators::blobs;
-    use crate::runtime::BlockedEngine;
+    use crate::dissimilarity::engine::BlockedEngine;
 
     fn svc(workers: usize, depth: usize) -> VatService {
         let cfg = ServiceConfig {

@@ -1,0 +1,228 @@
+//! The unified [`DistanceEngine`] trait — one object-safe interface over
+//! every pairwise-distance backend in the crate.
+//!
+//! The paper's three tiers (pure Python / Numba / Cython) map onto engines,
+//! and everything downstream of the distance stage (the VAT job service,
+//! the auto-clustering pipeline, the benches, the CLI) is written against
+//! this trait so backends are swappable per deployment:
+//!
+//! | engine        | tier analogue | implementation                          |
+//! |---------------|---------------|------------------------------------------|
+//! | [`NaiveEngine`]     | python  | per-pair boxed dispatch, full n² sweep |
+//! | [`BlockedEngine`]   | numba   | cache-tiled, symmetric-half, dot-trick |
+//! | [`ParallelEngine`]  | —       | row-band threads over the blocked core |
+//! | [`CondensedEngine`] | —       | n(n−1)/2 storage, expanded on demand   |
+//! | `runtime::SimulatedXlaEngine` | cython | deterministic f32 bucket emulation |
+//! | `runtime::XlaHandle` (`xla` feature) | cython | AOT Pallas/XLA artifacts via PJRT |
+//!
+//! Beyond the distance matrix itself the trait exposes the two auxiliary
+//! kernels the AOT artifacts accelerate — Hopkins nearest-neighbour
+//! distances and K-Means assignment — with native default implementations,
+//! so callers hold a single engine object for the whole workload and
+//! non-XLA engines need no extra code.
+
+use super::condensed::CondensedMatrix;
+use super::{DistanceMatrix, Metric};
+use crate::data::Points;
+use crate::error::{Error, Result};
+use crate::hopkins::HopkinsProbes;
+
+/// A pluggable pairwise-distance backend (object safe; see module docs).
+pub trait DistanceEngine: Send + Sync {
+    /// Short name for tables/CLI.
+    fn name(&self) -> &'static str;
+
+    /// Build the full dissimilarity matrix under `metric`.
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix>;
+
+    /// True when the engine supports `metric` (engines reject unsupported
+    /// metrics from [`DistanceEngine::build`] with `Error::InvalidArg`).
+    fn supports(&self, _metric: Metric) -> bool {
+        true
+    }
+
+    /// Euclidean matrix — the paper's default hot path.
+    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
+        self.build(points, Metric::Euclidean)
+    }
+
+    /// Prepare caches/executables ahead of time; returns how many kernels
+    /// were prepared (0 for engines with nothing to warm).
+    fn warmup(&self) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// Hopkins nearest-neighbour distances `(u_min, w_min)` for a probe
+    /// set. Default: the exact native backend.
+    fn hopkins_nn(
+        &self,
+        points: &Points,
+        probes: &HopkinsProbes,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Ok(crate::hopkins::nn_distances(points, probes))
+    }
+
+    /// K-Means assignment distance table `[n, k]` for flat k×d `centroids`.
+    /// Default: exact native evaluation.
+    fn assign(&self, points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
+        native_assign(points, centroids, k)
+    }
+}
+
+/// Exact native K-Means assignment table `[n, k]` — the default
+/// [`DistanceEngine::assign`] body, exposed so engines that add their own
+/// admission checks (e.g. the simulated XLA engine's bucket ceilings) can
+/// delegate the computation.
+pub fn native_assign(points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
+    let d = points.d();
+    if centroids.len() != k * d {
+        return Err(Error::Shape(format!(
+            "centroids len {} != k*d = {}",
+            centroids.len(),
+            k * d
+        )));
+    }
+    let mut out = Vec::with_capacity(points.n() * k);
+    for i in 0..points.n() {
+        let row = points.row(i);
+        for c in 0..k {
+            out.push(Metric::Euclidean.eval(row, &centroids[c * d..(c + 1) * d]));
+        }
+    }
+    Ok(out)
+}
+
+/// Python-tier stand-in: the deliberately unoptimized builder.
+pub struct NaiveEngine;
+
+impl DistanceEngine for NaiveEngine {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+        Ok(DistanceMatrix::build_naive(points, metric))
+    }
+}
+
+/// Numba-tier: compiled, cache-tiled native builder.
+pub struct BlockedEngine;
+
+impl DistanceEngine for BlockedEngine {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+        Ok(DistanceMatrix::build_blocked(points, metric))
+    }
+}
+
+/// Multi-threaded native builder (row-band parallelism; 0 = all cores).
+#[derive(Debug, Default)]
+pub struct ParallelEngine {
+    /// Worker threads for the distance build (0 = available cores).
+    pub threads: usize,
+}
+
+impl DistanceEngine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+        Ok(DistanceMatrix::build_parallel(points, metric, self.threads))
+    }
+}
+
+/// Half-memory engine: builds the n(n−1)/2 condensed form and expands it to
+/// square storage for trait interop (use [`CondensedMatrix`] directly when
+/// the O(n²/2) resident footprint is the point).
+pub struct CondensedEngine;
+
+impl DistanceEngine for CondensedEngine {
+    fn name(&self) -> &'static str {
+        "condensed"
+    }
+
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+        Ok(CondensedMatrix::build(points, metric).to_square())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+
+    #[test]
+    fn native_engines_agree() {
+        let ds = blobs(50, 3, 2, 0.5, 90);
+        let a = NaiveEngine.pdist(&ds.points).unwrap();
+        let b = BlockedEngine.pdist(&ds.points).unwrap();
+        for i in 0..50 {
+            for j in 0..50 {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_names() {
+        assert_eq!(NaiveEngine.name(), "naive");
+        assert_eq!(BlockedEngine.name(), "blocked");
+        assert_eq!(ParallelEngine::default().name(), "parallel");
+        assert_eq!(CondensedEngine.name(), "condensed");
+    }
+
+    #[test]
+    fn metric_aware_build_through_trait_objects() {
+        let ds = blobs(40, 2, 2, 0.5, 91);
+        let engines: Vec<Box<dyn DistanceEngine>> = vec![
+            Box::new(NaiveEngine),
+            Box::new(BlockedEngine),
+            Box::new(ParallelEngine::default()),
+            Box::new(CondensedEngine),
+        ];
+        for e in &engines {
+            assert!(e.supports(Metric::Manhattan));
+            let m = e.build(&ds.points, Metric::Manhattan).unwrap();
+            assert_eq!(m.n(), 40);
+            assert!(m.asymmetry() < 1e-12, "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn default_assign_matches_direct_metric() {
+        let ds = blobs(30, 2, 3, 0.4, 92);
+        let k = 3;
+        let centroids: Vec<f64> = (0..k).flat_map(|i| ds.points.row(i).to_vec()).collect();
+        let table = BlockedEngine.assign(&ds.points, &centroids, k).unwrap();
+        assert_eq!(table.len(), 30 * k);
+        for i in 0..30 {
+            for c in 0..k {
+                let want =
+                    Metric::Euclidean.eval(ds.points.row(i), &centroids[c * 2..(c + 1) * 2]);
+                assert_eq!(table[i * k + c], want);
+            }
+        }
+        // shape validation
+        assert!(BlockedEngine.assign(&ds.points, &centroids[..4], k).is_err());
+    }
+
+    #[test]
+    fn default_hopkins_nn_is_native() {
+        use crate::hopkins::{draw_probes, nn_distances, HopkinsParams};
+        let ds = blobs(60, 2, 2, 0.4, 93);
+        let probes = draw_probes(&ds.points, &HopkinsParams::default()).unwrap();
+        let (u1, w1) = NaiveEngine.hopkins_nn(&ds.points, &probes).unwrap();
+        let (u2, w2) = nn_distances(&ds.points, &probes);
+        assert_eq!(u1, u2);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn warmup_default_is_zero() {
+        assert_eq!(CondensedEngine.warmup().unwrap(), 0);
+    }
+}

@@ -10,11 +10,17 @@
 //!   pure-Python baseline lives in `python/baseline/pure_vat.py`).
 //! * [`blocked`] — "numba-tier": compiled, cache-tiled, symmetric-half
 //!   computation, monomorphized per metric.
-//! * `runtime::XlaEngine` — "cython-tier": the AOT Pallas/XLA artifact for
-//!   the Euclidean hot path (see `rust/src/runtime/`).
+//! * `runtime::XlaHandle` / `runtime::SimulatedXlaEngine` — "cython-tier":
+//!   the AOT Pallas/XLA artifact path for the Euclidean hot spot (see
+//!   `rust/src/runtime/`), or its deterministic f32 emulation.
+//!
+//! All builders are unified behind the object-safe [`engine::DistanceEngine`]
+//! trait; downstream layers (coordinator, pipeline, CLI, benches) depend on
+//! the trait, not on concrete builders.
 
 pub mod blocked;
 pub mod condensed;
+pub mod engine;
 pub mod mahalanobis;
 pub mod naive;
 pub mod parallel;
@@ -197,8 +203,16 @@ impl DistanceMatrix {
     }
 
     /// Largest entry (used for VAT seeding and rendering normalization).
+    ///
+    /// The reduction seeds with `f64::NEG_INFINITY` (not 0.0) so buffers of
+    /// all-negative dissimilarities — legal through [`Self::from_flat`] —
+    /// report their true maximum instead of being silently clamped to zero.
+    /// An empty matrix returns `f64::NEG_INFINITY`.
     pub fn max_value(&self) -> f64 {
-        self.data.iter().copied().fold(0.0, f64::max)
+        self.data
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// Gather `R*[a][b] = R[order[a]][order[b]]` — VAT step 3.
@@ -310,5 +324,14 @@ mod tests {
     fn from_flat_checks_len() {
         assert!(DistanceMatrix::from_flat(vec![0.0; 5], 2).is_err());
         assert!(DistanceMatrix::from_flat(vec![0.0; 4], 2).is_ok());
+    }
+
+    #[test]
+    fn max_value_does_not_clamp_all_negative_buffers() {
+        // regression: fold(0.0, max) silently reported 0.0 here
+        let m = DistanceMatrix::from_flat(vec![-5.0, -1.0, -3.0, -2.0], 2).unwrap();
+        assert_eq!(m.max_value(), -1.0);
+        assert_eq!(DistanceMatrix::zeros(3).max_value(), 0.0);
+        assert_eq!(DistanceMatrix::zeros(0).max_value(), f64::NEG_INFINITY);
     }
 }

@@ -1,44 +1,74 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (the offline registry carries no
+//! `thiserror`); the `xla::Error` conversion only exists when the `xla`
+//! feature links the PJRT bindings.
+
+use std::fmt;
 
 /// Errors surfaced by the fast-vat library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Input shapes/sizes are inconsistent (e.g. ragged rows, n mismatch).
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// A request exceeded the largest AOT bucket or no artifact matches.
-    #[error("no artifact for request: {0}")]
     NoArtifact(String),
 
     /// artifacts/manifest.txt is missing or malformed.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// PJRT/XLA runtime failure (compile, execute, literal conversion).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Dataset parsing / IO.
-    #[error("data error: {0}")]
     Data(String),
 
     /// Configuration file parse error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Coordinator shut down or queue closed.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Invalid argument to a public API.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying IO error.
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::NoArtifact(m) => write!(f, "no artifact for request: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -47,3 +77,29 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_variants() {
+        assert_eq!(
+            Error::Shape("bad".into()).to_string(),
+            "shape error: bad"
+        );
+        assert_eq!(
+            Error::InvalidArg("k".into()).to_string(),
+            "invalid argument: k"
+        );
+    }
+
+    #[test]
+    fn io_error_is_transparent_with_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::from(io);
+        assert_eq!(e.to_string(), "gone");
+        assert!(e.source().is_some());
+    }
+}

@@ -16,18 +16,27 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! Every distance backend implements the object-safe
+//! [`dissimilarity::engine::DistanceEngine`] trait, so the pipeline below
+//! runs unchanged on the naive, blocked, parallel, condensed, or XLA-tier
+//! engines:
+//!
+//! ```
 //! use fast_vat::data::generators::blobs;
-//! use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+//! use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine};
+//! use fast_vat::dissimilarity::Metric;
 //! use fast_vat::vat::vat;
 //!
-//! let ds = blobs(500, 2, 4, 0.4, 42);
-//! let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+//! let ds = blobs(120, 2, 3, 0.4, 42);
+//! let engine = BlockedEngine; // or ParallelEngine, CondensedEngine, ...
+//! let d = engine.build(&ds.points, Metric::Euclidean).unwrap();
 //! let result = vat(&d);
-//! println!("VAT order: {:?}", &result.order[..8]);
+//! assert_eq!(result.order.len(), 120);
 //! ```
 //!
-//! See `examples/` for the paper-evaluation driver and the service scenarios.
+//! See `rust/examples/` for the paper-evaluation driver and the service
+//! scenarios, and the top-level `README.md` for build and feature-flag
+//! instructions.
 
 pub mod bench_util;
 pub mod cluster;

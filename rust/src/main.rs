@@ -20,6 +20,7 @@ use fast_vat::data::csv::{load_csv, CsvOptions};
 use fast_vat::data::generators;
 use fast_vat::data::scale::Scaler;
 use fast_vat::data::Dataset;
+use fast_vat::dissimilarity::engine::DistanceEngine;
 use fast_vat::error::{Error, Result};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::runtime::engine_by_name;
@@ -32,7 +33,8 @@ fn usage() -> ! {
         "fast-vat — accelerated Visual Assessment of Cluster Tendency
 
 USAGE:
-  fast-vat vat      [--input data.csv | --dataset NAME] [--engine naive|blocked|xla|xla-mm]
+  fast-vat vat      [--input data.csv | --dataset NAME]
+                    [--engine naive|blocked|parallel|condensed|xla|xla-mm]
                     [--ivat] [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
   fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
@@ -317,9 +319,21 @@ fn cmd_info(args: &[String]) -> Result<()> {
                 println!("  {} {:?} -> {}", s.graph, s.params, s.file);
             }
         }
-        Err(e) => println!("no artifacts ({e}); native engines still available"),
+        Err(e) => {
+            println!("no artifacts ({e}); native engines still available");
+            println!(
+                "simulated xla tier: pdist / pdist_mm emulated at buckets \
+                 n in {:?}, d <= {}",
+                fast_vat::runtime::bucket::N_BUCKETS,
+                fast_vat::runtime::bucket::FEATURE_DIM
+            );
+        }
     }
-    println!("engines: naive (python-tier), blocked (numba-tier), xla / xla-mm (cython-tier)");
+    println!(
+        "engines: naive (python-tier), blocked (numba-tier), parallel, \
+         condensed, xla / xla-mm (cython-tier; simulated unless built with \
+         --features xla and artifacts present)"
+    );
     Ok(())
 }
 

@@ -9,9 +9,49 @@
 //! side; `rust/tests/xla_parity.rs` proves it end-to-end through PJRT.
 
 use crate::data::Points;
+use crate::error::{Error, Result};
 
 /// Pad-row placement offset for hopkins X rows (see model.py PAD_OFFSET).
 pub const PAD_OFFSET: f32 = 1.0e4;
+
+/// Enforce the hopkins pad-row guarantee shared by the real PJRT path and
+/// the simulated engine: pad rows sit at [`PAD_OFFSET`], so real data must
+/// be standardized-scale (diameter well below the offset) or a pad row
+/// could win a nearest-neighbour min.
+pub fn check_pad_row_diameter(points: &Points) -> Result<()> {
+    let (lo, hi) = points.bounds();
+    let diam: f64 = lo
+        .iter()
+        .zip(&hi)
+        .map(|(&l, &h)| (h - l) * (h - l))
+        .sum::<f64>()
+        .sqrt();
+    if diam > PAD_OFFSET as f64 / 10.0 {
+        return Err(Error::InvalidArg(
+            "hopkins XLA path requires standardized data (diameter too \
+             large for the pad-row guarantee); call Scaler::standardized \
+             first"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Row-count buckets the AOT artifacts are lowered at (keep in sync with
+/// `python/compile/aot.py::N_BUCKETS`). Requests pad up to the smallest
+/// bucket that fits; beyond the largest, the engine reports `NoArtifact`.
+pub const N_BUCKETS: [usize; 5] = [64, 256, 512, 1024, 2048];
+
+/// Padded feature width of every artifact (aot.py `FEATURE_DIM`).
+pub const FEATURE_DIM: usize = 16;
+
+/// Hopkins probe capacity per n-bucket (aot.py `HOPKINS_M`).
+pub const HOPKINS_M: [(usize, usize); 5] =
+    [(64, 32), (256, 32), (512, 64), (1024, 128), (2048, 256)];
+
+/// Maximum centroid count of the `kmeans_assign` artifacts (aot.py
+/// `KMEANS_K`).
+pub const KMEANS_K: usize = 16;
 
 /// Pad a flat f64 point buffer into an `n_to x d_to` f32 buffer.
 /// Feature padding is 0; row padding fills every coordinate with `fill`.

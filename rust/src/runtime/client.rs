@@ -135,22 +135,9 @@ impl XlaRuntime {
             spec.param("m").unwrap(),
             spec.param("d").unwrap(),
         );
-        // guard the pad-row guarantee on real rows
-        let (lo, hi) = points.bounds();
-        let diam: f64 = lo
-            .iter()
-            .zip(&hi)
-            .map(|(&l, &h)| (h - l) * (h - l))
-            .sum::<f64>()
-            .sqrt();
-        if diam > bucket::PAD_OFFSET as f64 / 10.0 {
-            return Err(Error::InvalidArg(
-                "hopkins XLA path requires standardized data (diameter too \
-                 large for the pad-row guarantee); call Scaler::standardized \
-                 first"
-                    .into(),
-            ));
-        }
+        // guard the pad-row guarantee on real rows (shared with the
+        // simulated engine so offline admission mirrors this path exactly)
+        bucket::check_pad_row_diameter(points)?;
 
         let x = bucket::pad_points_f32(points, nb, db, bucket::PAD_OFFSET);
         let u = bucket::pad_flat_f32(&probes.synth, m, d, mb, db, 0.0);

@@ -1,23 +1,32 @@
-//! Runtime layer: distance engines and the PJRT executor.
+//! Runtime layer: engine selection, the deterministic XLA-tier emulation,
+//! and (behind the `xla` cargo feature) the real PJRT executor.
 //!
-//! Three engines reproduce the paper's three tiers (Table 1):
+//! The [`DistanceEngine`] trait itself lives in
+//! [`crate::dissimilarity::engine`]; this module re-exports it together
+//! with the native engines, and adds the two "cython-tier" backends:
 //!
-//! | tier   | paper            | here                                   |
-//! |--------|------------------|----------------------------------------|
-//! | python | pure-Python VAT  | [`NaiveEngine`] (`dissimilarity::naive`) |
-//! | numba  | `@jit` VAT       | [`BlockedEngine`] (`dissimilarity::blocked`) |
-//! | cython | static C ext.    | [`XlaHandle`] → AOT Pallas/XLA artifact  |
+//! * [`SimulatedXlaEngine`] — always available. Reproduces the AOT artifact
+//!   *contract* (f32 narrowing, dot-trick arithmetic, zeroed diagonal, the
+//!   aot.py size buckets and their ceiling) in pure deterministic Rust, so
+//!   the default offline build exercises the exact numerics the artifact
+//!   path produces without any native dependency.
+//! * [`XlaHandle`] (`xla` feature) — the real thing: HLO text artifacts
+//!   compiled through PJRT. PJRT wrapper types are not `Send`, so the
+//!   handle confines the [`client::XlaRuntime`] to a dedicated executor
+//!   thread and forwards requests over channels; the coordinator's worker
+//!   pool shares one compiled-executable cache safely.
 //!
-//! PJRT wrapper types are not `Send`; [`XlaHandle`] confines the
-//! [`client::XlaRuntime`] to a dedicated executor thread and forwards
-//! requests over channels, so the coordinator's worker pool can share one
-//! compiled-executable cache safely.
+//! [`engine_by_name`] is the single selector used by CLI/config/benches:
+//! when the `xla` feature is off — or artifacts are missing — the "xla" and
+//! "xla-mm" names degrade to the simulated engine (with a stderr note), so
+//! every deployment surface works offline.
+
+#[cfg(feature = "xla")]
+pub mod client;
 
 pub mod bucket;
-pub mod client;
 pub mod manifest;
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::data::Points;
@@ -25,241 +34,398 @@ use crate::dissimilarity::{DistanceMatrix, Metric};
 use crate::error::{Error, Result};
 use crate::hopkins::HopkinsProbes;
 
-/// A pairwise-distance backend (the pluggable hot path).
-pub trait DistanceEngine: Send + Sync {
-    /// Short name for tables/CLI.
-    fn name(&self) -> &'static str;
-    /// Full pairwise matrix (Euclidean unless the engine supports more).
-    fn pdist(&self, points: &Points) -> Result<DistanceMatrix>;
-}
+pub use crate::dissimilarity::engine::{
+    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+};
 
-/// Python-tier stand-in: the deliberately unoptimized builder.
-pub struct NaiveEngine;
+/// Every name [`engine_by_name`] accepts — the single source of truth for
+/// config validation and CLI docs (`known_engine_names_all_resolve` keeps
+/// it in sync with the selector).
+pub const ENGINE_NAMES: [&str; 6] =
+    ["naive", "blocked", "parallel", "condensed", "xla", "xla-mm"];
 
-impl DistanceEngine for NaiveEngine {
-    fn name(&self) -> &'static str {
-        "naive"
-    }
-    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
-        Ok(DistanceMatrix::build_naive(points, Metric::Euclidean))
-    }
-}
-
-/// Numba-tier: compiled, tiled native builder.
-pub struct BlockedEngine;
-
-impl DistanceEngine for BlockedEngine {
-    fn name(&self) -> &'static str {
-        "blocked"
-    }
-    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
-        Ok(DistanceMatrix::build_blocked(points, Metric::Euclidean))
-    }
-}
-
-/// Multi-threaded native builder (row-band parallelism; 0 = all cores).
-pub struct ParallelEngine {
-    /// Worker threads for the distance build (0 = available cores).
-    pub threads: usize,
-}
-
-impl Default for ParallelEngine {
-    fn default() -> Self {
-        Self { threads: 0 }
-    }
-}
-
-impl DistanceEngine for ParallelEngine {
-    fn name(&self) -> &'static str {
-        "parallel"
-    }
-    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
-        Ok(DistanceMatrix::build_parallel(
-            points,
-            Metric::Euclidean,
-            self.threads,
-        ))
-    }
-}
-
-/// Requests served by the XLA executor thread.
-enum Request {
-    Pdist {
-        points: Points,
-        pallas: bool,
-        reply: mpsc::Sender<Result<DistanceMatrix>>,
-    },
-    Hopkins {
-        points: Points,
-        probes: HopkinsProbes,
-        reply: mpsc::Sender<Result<(Vec<f64>, Vec<f64>)>>,
-    },
-    Assign {
-        points: Points,
-        centroids: Vec<f64>,
-        k: usize,
-        reply: mpsc::Sender<Result<Vec<f64>>>,
-    },
-    Warmup {
-        reply: mpsc::Sender<Result<usize>>,
-    },
-}
-
-/// Cloneable, thread-safe handle to the PJRT executor thread
-/// (the "cython tier" engine).
-#[derive(Clone)]
-pub struct XlaHandle {
-    tx: mpsc::Sender<Request>,
-    /// Keeps the join handle alive until the last handle drops.
-    _thread: Arc<ExecutorThread>,
-    /// Run the Pallas-tiled artifact (true) or the XLA-fused one (false).
+/// Deterministic in-crate emulation of the XLA artifact path.
+///
+/// Mirrors what `XlaRuntime::pdist` does end to end — pad to an aot.py size
+/// bucket, narrow to f32, compute `|x|² + |y|² − 2x·y` the way the Pallas
+/// kernel does, slice back, zero the diagonal — so outputs are bit-for-bit
+/// reproducible and within f32 tolerance of both the native f64 engines and
+/// the real artifact path. Serves the "xla"/"xla-mm" engine names whenever
+/// the real PJRT path is unavailable.
+pub struct SimulatedXlaEngine {
+    /// Emulate the Pallas-tiled artifact (true) or the XLA-fused `pdist_mm`
+    /// variant (false). Both compute identical values here; the flag keeps
+    /// names/ablation wiring intact.
     pallas: bool,
 }
 
-struct ExecutorThread {
-    handle: Option<std::thread::JoinHandle<()>>,
+impl SimulatedXlaEngine {
+    /// Create the emulated engine.
+    pub fn new(pallas: bool) -> Self {
+        Self { pallas }
+    }
+
+    fn bucket_for(&self, points: &Points) -> Result<usize> {
+        let (n, d) = (points.n(), points.d());
+        if d > bucket::FEATURE_DIM {
+            return Err(Error::NoArtifact(format!(
+                "pdist d={d} exceeds padded feature width {}",
+                bucket::FEATURE_DIM
+            )));
+        }
+        bucket::N_BUCKETS
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                Error::NoArtifact(format!(
+                    "pdist with [(\"n\", {n})] (largest bucket exceeded? \
+                     simulated buckets: {:?})",
+                    bucket::N_BUCKETS
+                ))
+            })
+    }
 }
 
-impl Drop for ExecutorThread {
-    fn drop(&mut self) {
-        // the channel sender is gone by now; the thread sees Disconnect
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+impl DistanceEngine for SimulatedXlaEngine {
+    fn name(&self) -> &'static str {
+        if self.pallas {
+            "xla-sim"
+        } else {
+            "xla-mm-sim"
         }
     }
-}
 
-impl XlaHandle {
-    /// Spawn the executor thread over an artifacts directory.
-    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
-        Self::with_variant(artifacts_dir, true)
+    fn supports(&self, metric: Metric) -> bool {
+        matches!(metric, Metric::Euclidean)
     }
 
-    /// Choose the pdist artifact variant: `pallas = false` selects the
-    /// XLA-fused `pdist_mm` graph (ablation A5).
-    pub fn with_variant(
-        artifacts_dir: impl Into<std::path::PathBuf>,
-        pallas: bool,
-    ) -> Result<Self> {
-        let dir = artifacts_dir.into();
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("xla-executor".into())
-            .spawn(move || {
-                let runtime = match client::XlaRuntime::new(&dir) {
-                    Ok(r) => {
-                        let _ = ready_tx.send(Ok(()));
-                        r
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Pdist {
-                            points,
-                            pallas,
-                            reply,
-                        } => {
-                            let _ = reply.send(runtime.pdist(&points, pallas));
-                        }
-                        Request::Hopkins {
-                            points,
-                            probes,
-                            reply,
-                        } => {
-                            let _ = reply.send(runtime.hopkins_nn(&points, &probes));
-                        }
-                        Request::Assign {
-                            points,
-                            centroids,
-                            k,
-                            reply,
-                        } => {
-                            let _ = reply.send(runtime.assign(&points, &centroids, k));
-                        }
-                        Request::Warmup { reply } => {
-                            let _ = reply.send(runtime.warmup());
-                        }
-                    }
-                }
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+        if !matches!(metric, Metric::Euclidean) {
+            return Err(Error::InvalidArg(format!(
+                "{} implements Euclidean only (the artifact contract); \
+                 whiten/transform the data or pick a native engine",
+                self.name()
+            )));
+        }
+        let n = points.n();
+        if n == 0 {
+            return Ok(DistanceMatrix::zeros(0));
+        }
+        let nb = self.bucket_for(points)?;
+        let db = bucket::FEATURE_DIM;
+        // f32 narrowing + zero feature padding, exactly like the artifact
+        // input; pad *rows* never touch the top-left n×n output block, so
+        // only the first n rows are computed.
+        let x = bucket::pad_points_f32(points, nb, db, 0.0);
+        let norms: Vec<f32> = (0..n)
+            .map(|i| {
+                let row = &x[i * db..(i + 1) * db];
+                row.iter().map(|v| v * v).sum()
             })
-            .map_err(|e| Error::Coordinator(format!("spawn xla executor: {e}")))?;
-        ready_rx
-            .recv()
-            .map_err(|_| Error::Coordinator("xla executor died during init".into()))??;
-        Ok(Self {
-            tx,
-            _thread: Arc::new(ExecutorThread {
-                handle: Some(handle),
-            }),
-            pallas,
-        })
+            .collect();
+        // symmetric half only: dot/norm-sum are commutative in f32, so the
+        // mirrored entry is bit-identical at half the work. The diagonal
+        // stays exactly 0 (the artifact path's post-fix).
+        let mut m = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            let a = &x[i * db..(i + 1) * db];
+            for j in (i + 1)..n {
+                let b = &x[j * db..(j + 1) * db];
+                let mut dot = 0.0f32;
+                for k in 0..db {
+                    dot += a[k] * b[k];
+                }
+                let sq = (norms[i] + norms[j] - 2.0 * dot).max(0.0);
+                let v = sq.sqrt() as f64;
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        Ok(m)
     }
 
-    fn call<T>(
-        &self,
-        make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request,
-    ) -> Result<T> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(make(reply_tx))
-            .map_err(|_| Error::Coordinator("xla executor gone".into()))?;
-        reply_rx
-            .recv()
-            .map_err(|_| Error::Coordinator("xla executor dropped reply".into()))?
-    }
-
-    /// Compile all artifacts ahead of time.
-    pub fn warmup(&self) -> Result<usize> {
-        self.call(|reply| Request::Warmup { reply })
-    }
-
-    /// Hopkins nearest-neighbour distances (see `XlaRuntime::hopkins_nn`).
-    pub fn hopkins_nn(
+    /// Mirrors the real artifact path's admission checks (bucket ceilings
+    /// and the pad-row diameter guarantee from `client.rs`) before falling
+    /// back to the exact native computation, so code that passes offline
+    /// does not start erroring on a real `--features xla` deployment.
+    fn hopkins_nn(
         &self,
         points: &Points,
         probes: &HopkinsProbes,
     ) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.call(|reply| Request::Hopkins {
-            points: points.clone(),
-            probes: probes.clone(),
-            reply,
-        })
+        let (n, d) = (points.n(), points.d());
+        if d > bucket::FEATURE_DIM {
+            return Err(Error::NoArtifact(format!(
+                "hopkins d={d} exceeds padded feature width {}",
+                bucket::FEATURE_DIM
+            )));
+        }
+        if !bucket::HOPKINS_M
+            .iter()
+            .any(|&(nb, mb)| nb >= n && mb >= probes.m)
+        {
+            return Err(Error::NoArtifact(format!(
+                "hopkins with n={n} m={} (largest simulated bucket exceeded: {:?})",
+                probes.m,
+                bucket::HOPKINS_M
+            )));
+        }
+        // the same pad-row guard XlaRuntime::hopkins_nn enforces
+        bucket::check_pad_row_diameter(points)?;
+        Ok(crate::hopkins::nn_distances(points, probes))
     }
 
-    /// K-Means assignment distances `[n, k]`.
-    pub fn assign(&self, points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
-        self.call(|reply| Request::Assign {
-            points: points.clone(),
-            centroids: centroids.to_vec(),
-            k,
-            reply,
-        })
+    /// Same admission mirroring for the K-Means assignment kernel.
+    fn assign(&self, points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
+        let (n, d) = (points.n(), points.d());
+        if d > bucket::FEATURE_DIM || k > bucket::KMEANS_K {
+            return Err(Error::NoArtifact(format!(
+                "kmeans_assign k={k} d={d} exceeds simulated buckets (k <= {}, d <= {})",
+                bucket::KMEANS_K,
+                bucket::FEATURE_DIM
+            )));
+        }
+        if !bucket::N_BUCKETS.iter().any(|&b| b >= n) {
+            return Err(Error::NoArtifact(format!(
+                "kmeans_assign n={n} exceeds largest simulated bucket {:?}",
+                bucket::N_BUCKETS
+            )));
+        }
+        crate::dissimilarity::engine::native_assign(points, centroids, k)
     }
 }
 
-impl DistanceEngine for XlaHandle {
-    fn name(&self) -> &'static str {
-        if self.pallas {
-            "xla"
-        } else {
-            "xla-mm"
+#[cfg(feature = "xla")]
+mod handle {
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    use super::client;
+    use crate::data::Points;
+    use crate::dissimilarity::engine::DistanceEngine;
+    use crate::dissimilarity::{DistanceMatrix, Metric};
+    use crate::error::{Error, Result};
+    use crate::hopkins::HopkinsProbes;
+
+    /// Requests served by the XLA executor thread.
+    enum Request {
+        Pdist {
+            points: Points,
+            pallas: bool,
+            reply: mpsc::Sender<Result<DistanceMatrix>>,
+        },
+        Hopkins {
+            points: Points,
+            probes: HopkinsProbes,
+            reply: mpsc::Sender<Result<(Vec<f64>, Vec<f64>)>>,
+        },
+        Assign {
+            points: Points,
+            centroids: Vec<f64>,
+            k: usize,
+            reply: mpsc::Sender<Result<Vec<f64>>>,
+        },
+        Warmup {
+            reply: mpsc::Sender<Result<usize>>,
+        },
+    }
+
+    /// Cloneable, thread-safe handle to the PJRT executor thread
+    /// (the "cython tier" engine).
+    #[derive(Clone)]
+    pub struct XlaHandle {
+        tx: mpsc::Sender<Request>,
+        /// Keeps the join handle alive until the last handle drops.
+        _thread: Arc<ExecutorThread>,
+        /// Run the Pallas-tiled artifact (true) or the XLA-fused one (false).
+        pallas: bool,
+    }
+
+    struct ExecutorThread {
+        handle: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl Drop for ExecutorThread {
+        fn drop(&mut self) {
+            // the channel sender is gone by now; the thread sees Disconnect
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
         }
     }
-    fn pdist(&self, points: &Points) -> Result<DistanceMatrix> {
-        self.call(|reply| Request::Pdist {
-            points: points.clone(),
-            pallas: self.pallas,
-            reply,
-        })
+
+    impl XlaHandle {
+        /// Spawn the executor thread over an artifacts directory.
+        pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+            Self::with_variant(artifacts_dir, true)
+        }
+
+        /// Choose the pdist artifact variant: `pallas = false` selects the
+        /// XLA-fused `pdist_mm` graph (ablation A5).
+        pub fn with_variant(
+            artifacts_dir: impl Into<std::path::PathBuf>,
+            pallas: bool,
+        ) -> Result<Self> {
+            let dir = artifacts_dir.into();
+            let (tx, rx) = mpsc::channel::<Request>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let handle = std::thread::Builder::new()
+                .name("xla-executor".into())
+                .spawn(move || {
+                    let runtime = match client::XlaRuntime::new(&dir) {
+                        Ok(r) => {
+                            let _ = ready_tx.send(Ok(()));
+                            r
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        match req {
+                            Request::Pdist {
+                                points,
+                                pallas,
+                                reply,
+                            } => {
+                                let _ = reply.send(runtime.pdist(&points, pallas));
+                            }
+                            Request::Hopkins {
+                                points,
+                                probes,
+                                reply,
+                            } => {
+                                let _ = reply.send(runtime.hopkins_nn(&points, &probes));
+                            }
+                            Request::Assign {
+                                points,
+                                centroids,
+                                k,
+                                reply,
+                            } => {
+                                let _ = reply.send(runtime.assign(&points, &centroids, k));
+                            }
+                            Request::Warmup { reply } => {
+                                let _ = reply.send(runtime.warmup());
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn xla executor: {e}")))?;
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Coordinator("xla executor died during init".into()))??;
+            Ok(Self {
+                tx,
+                _thread: Arc::new(ExecutorThread {
+                    handle: Some(handle),
+                }),
+                pallas,
+            })
+        }
+
+        fn call<T>(
+            &self,
+            make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request,
+        ) -> Result<T> {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.tx
+                .send(make(reply_tx))
+                .map_err(|_| Error::Coordinator("xla executor gone".into()))?;
+            reply_rx
+                .recv()
+                .map_err(|_| Error::Coordinator("xla executor dropped reply".into()))?
+        }
+    }
+
+    impl DistanceEngine for XlaHandle {
+        fn name(&self) -> &'static str {
+            if self.pallas {
+                "xla"
+            } else {
+                "xla-mm"
+            }
+        }
+
+        fn supports(&self, metric: Metric) -> bool {
+            matches!(metric, Metric::Euclidean)
+        }
+
+        fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+            if !matches!(metric, Metric::Euclidean) {
+                return Err(Error::InvalidArg(
+                    "xla engine implements Euclidean only (the artifact \
+                     contract); whiten/transform the data or pick a native \
+                     engine"
+                        .into(),
+                ));
+            }
+            self.call(|reply| Request::Pdist {
+                points: points.clone(),
+                pallas: self.pallas,
+                reply,
+            })
+        }
+
+        /// Compile all artifacts ahead of time.
+        fn warmup(&self) -> Result<usize> {
+            self.call(|reply| Request::Warmup { reply })
+        }
+
+        /// Hopkins nearest-neighbour distances through the AOT artifact.
+        fn hopkins_nn(
+            &self,
+            points: &Points,
+            probes: &HopkinsProbes,
+        ) -> Result<(Vec<f64>, Vec<f64>)> {
+            self.call(|reply| Request::Hopkins {
+                points: points.clone(),
+                probes: probes.clone(),
+                reply,
+            })
+        }
+
+        /// K-Means assignment distances `[n, k]` through the AOT artifact.
+        fn assign(&self, points: &Points, centroids: &[f64], k: usize) -> Result<Vec<f64>> {
+            self.call(|reply| Request::Assign {
+                points: points.clone(),
+                centroids: centroids.to_vec(),
+                k,
+                reply,
+            })
+        }
     }
 }
 
-/// Engine selector shared by CLI/config/coordinator.
+#[cfg(feature = "xla")]
+pub use handle::XlaHandle;
+
+#[cfg(feature = "xla")]
+fn xla_engine(artifacts_dir: &str, pallas: bool) -> Arc<dyn DistanceEngine> {
+    match XlaHandle::with_variant(artifacts_dir, pallas) {
+        Ok(h) => Arc::new(h),
+        Err(e) => {
+            eprintln!(
+                "xla engine unavailable ({e}); using the deterministic \
+                 simulated engine"
+            );
+            Arc::new(SimulatedXlaEngine::new(pallas))
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_engine(_artifacts_dir: &str, pallas: bool) -> Arc<dyn DistanceEngine> {
+    Arc::new(SimulatedXlaEngine::new(pallas))
+}
+
+/// Engine selector shared by CLI/config/coordinator/benches.
+///
+/// `"xla"`/`"xla-mm"` resolve to the PJRT-backed [`XlaHandle`] when the
+/// `xla` feature is enabled and artifacts load; otherwise they degrade to
+/// the deterministic [`SimulatedXlaEngine`].
 pub fn engine_by_name(
     name: &str,
     artifacts_dir: &str,
@@ -268,8 +434,9 @@ pub fn engine_by_name(
         "naive" => Arc::new(NaiveEngine),
         "blocked" => Arc::new(BlockedEngine),
         "parallel" => Arc::new(ParallelEngine::default()),
-        "xla" => Arc::new(XlaHandle::new(artifacts_dir)?),
-        "xla-mm" => Arc::new(XlaHandle::with_variant(artifacts_dir, false)?),
+        "condensed" => Arc::new(CondensedEngine),
+        "xla" => xla_engine(artifacts_dir, true),
+        "xla-mm" => xla_engine(artifacts_dir, false),
         other => return Err(Error::InvalidArg(format!("unknown engine {other}"))),
     })
 }
@@ -277,28 +444,139 @@ pub fn engine_by_name(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::generators::blobs;
-
-    #[test]
-    fn native_engines_agree() {
-        let ds = blobs(50, 3, 2, 0.5, 90);
-        let a = NaiveEngine.pdist(&ds.points).unwrap();
-        let b = BlockedEngine.pdist(&ds.points).unwrap();
-        for i in 0..50 {
-            for j in 0..50 {
-                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-9);
-            }
-        }
-    }
-
-    #[test]
-    fn engine_names() {
-        assert_eq!(NaiveEngine.name(), "naive");
-        assert_eq!(BlockedEngine.name(), "blocked");
-    }
+    use crate::data::generators::{blobs, spotify_like};
+    use crate::vat::vat;
 
     #[test]
     fn unknown_engine_rejected() {
         assert!(engine_by_name("cuda", "artifacts").is_err());
+    }
+
+    #[test]
+    fn known_engines_resolve() {
+        for name in ["naive", "blocked", "parallel", "condensed"] {
+            assert_eq!(engine_by_name(name, "artifacts").unwrap().name(), name);
+        }
+        // "xla" resolves in every build configuration (sim fallback)
+        let e = engine_by_name("xla", "artifacts-not-present").unwrap();
+        assert!(e.name().starts_with("xla"), "{}", e.name());
+    }
+
+    #[test]
+    fn known_engine_names_all_resolve() {
+        // keeps ENGINE_NAMES (used by config validation) in lockstep with
+        // the selector's match arms
+        for name in ENGINE_NAMES {
+            assert!(
+                engine_by_name(name, "artifacts-not-present").is_ok(),
+                "ENGINE_NAMES entry {name} not accepted by engine_by_name"
+            );
+        }
+    }
+
+    #[test]
+    fn simulated_hopkins_mirrors_artifact_admission() {
+        use crate::hopkins::{draw_probes, nn_distances, HopkinsParams};
+        let sim = SimulatedXlaEngine::new(true);
+        // standardized-scale data passes and matches the native backend
+        let ds = blobs(100, 2, 2, 0.4, 99);
+        let z = crate::data::scale::Scaler::standardized(&ds.points);
+        let probes = draw_probes(&z, &HopkinsParams::default()).unwrap();
+        let (u, w) = sim.hopkins_nn(&z, &probes).unwrap();
+        let (un, wn) = nn_distances(&z, &probes);
+        assert_eq!(u, un);
+        assert_eq!(w, wn);
+        // diameter >> PAD_OFFSET/10 is refused, like the real runtime
+        let p = crate::data::Points::from_rows(&[
+            vec![0.0, 0.0],
+            vec![5.0e3, 5.0e3],
+            vec![1.0, 1.0],
+        ])
+        .unwrap();
+        let params = HopkinsParams {
+            probes: 2,
+            ..Default::default()
+        };
+        let probes = draw_probes(&p, &params).unwrap();
+        assert!(sim.hopkins_nn(&p, &probes).is_err());
+    }
+
+    #[test]
+    fn simulated_assign_mirrors_artifact_admission() {
+        let sim = SimulatedXlaEngine::new(true);
+        let ds = blobs(60, 2, 3, 0.4, 100);
+        let k = 3;
+        let centroids: Vec<f64> = (0..k).flat_map(|i| ds.points.row(i).to_vec()).collect();
+        let got = sim.assign(&ds.points, &centroids, k).unwrap();
+        assert_eq!(got.len(), 60 * k);
+        // k beyond the artifact centroid bucket is refused
+        let big_k = bucket::KMEANS_K + 1;
+        let big: Vec<f64> = vec![0.0; big_k * 2];
+        match sim.assign(&ds.points, &big, big_k) {
+            Err(Error::NoArtifact(_)) => {}
+            other => panic!("expected NoArtifact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simulated_engine_matches_blocked_within_f32_tolerance() {
+        let ds = blobs(150, 4, 3, 0.7, 95);
+        let z = crate::data::scale::Scaler::standardized(&ds.points);
+        let sim = SimulatedXlaEngine::new(true).pdist(&z).unwrap();
+        let native = BlockedEngine.pdist(&z).unwrap();
+        for i in 0..150 {
+            for j in 0..150 {
+                let (a, b) = (sim.get(i, j), native.get(i, j));
+                assert!(
+                    (a - b).abs() <= 5e-3 + 1e-4 * b.abs(),
+                    "({i},{j}): {a} vs {b}"
+                );
+            }
+        }
+        for i in 0..150 {
+            assert_eq!(sim.get(i, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn simulated_engine_is_deterministic() {
+        let ds = blobs(80, 2, 2, 0.5, 96);
+        let a = SimulatedXlaEngine::new(true).pdist(&ds.points).unwrap();
+        let b = SimulatedXlaEngine::new(true).pdist(&ds.points).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn simulated_engine_preserves_vat_order() {
+        // the paper's fidelity claim holds through the f32 emulation
+        let ds = blobs(120, 2, 3, 0.5, 97);
+        let z = crate::data::scale::Scaler::standardized(&ds.points);
+        let from_native = vat(&BlockedEngine.pdist(&z).unwrap());
+        let from_sim = vat(&SimulatedXlaEngine::new(true).pdist(&z).unwrap());
+        assert_eq!(from_native.order, from_sim.order);
+    }
+
+    #[test]
+    fn simulated_engine_enforces_bucket_ceiling() {
+        let ds = spotify_like(2049, 50); // largest bucket is 2048
+        match SimulatedXlaEngine::new(true).pdist(&ds.points) {
+            Err(Error::NoArtifact(_)) => {}
+            other => panic!("expected NoArtifact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simulated_engine_rejects_non_euclidean() {
+        let ds = blobs(20, 2, 2, 0.4, 98);
+        let sim = SimulatedXlaEngine::new(false);
+        assert!(!sim.supports(Metric::Manhattan));
+        assert!(sim.build(&ds.points, Metric::Manhattan).is_err());
+        assert_eq!(sim.name(), "xla-mm-sim");
+    }
+
+    #[test]
+    fn simulated_engine_empty_input() {
+        let p = crate::data::Points::new(vec![], 0, 2).unwrap();
+        assert_eq!(SimulatedXlaEngine::new(true).pdist(&p).unwrap().n(), 0);
     }
 }

@@ -1,0 +1,153 @@
+//! Engine parity — the paper's "identical outputs across tiers" fidelity
+//! claim (the same bar ConiVAT holds VAT variants to), engine-agnostic and
+//! artifact-free: every native engine behind the unified
+//! [`DistanceEngine`] trait must produce element-wise-equal dissimilarity
+//! matrices AND the identical VAT permutation on every dataset × metric
+//! combination.
+//!
+//! Engines under test: naive (python-tier), blocked (numba-tier), parallel
+//! (row-band threads), condensed (half-memory). Dataset sizes are >= 128 so
+//! the parallel engine exercises its threaded path instead of falling back
+//! to the blocked builder.
+
+use fast_vat::data::generators::{blobs, gmm, moons};
+use fast_vat::data::Dataset;
+use fast_vat::dissimilarity::condensed::CondensedMatrix;
+use fast_vat::dissimilarity::engine::{
+    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+};
+use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::vat::vat;
+
+/// Numerics note: naive/condensed evaluate each metric directly while
+/// blocked/parallel use the precomputed-norm dot-trick for (Sq)Euclidean,
+/// so matrices agree to rounding, not bitwise.
+const ATOL: f64 = 1e-9;
+
+fn engines() -> Vec<Box<dyn DistanceEngine>> {
+    vec![
+        Box::new(NaiveEngine),
+        Box::new(BlockedEngine),
+        Box::new(ParallelEngine { threads: 4 }),
+        Box::new(CondensedEngine),
+    ]
+}
+
+fn datasets() -> Vec<Dataset> {
+    vec![
+        blobs(160, 3, 3, 0.6, 7001),
+        moons(150, 0.06, 7002),
+        gmm(140, 2, 3, 7003),
+    ]
+}
+
+fn metrics() -> Vec<Metric> {
+    vec![
+        Metric::Euclidean,
+        Metric::SqEuclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Minkowski(3.0),
+        Metric::Cosine,
+    ]
+}
+
+fn assert_matrices_equal(a: &DistanceMatrix, b: &DistanceMatrix, ctx: &str) {
+    assert_eq!(a.n(), b.n(), "{ctx}: size");
+    for i in 0..a.n() {
+        for j in 0..a.n() {
+            let (x, y) = (a.get(i, j), b.get(i, j));
+            assert!(
+                (x - y).abs() <= ATOL,
+                "{ctx}: element ({i},{j}) differs: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn matrices_elementwise_equal_across_engines() {
+    for ds in datasets() {
+        for metric in metrics() {
+            let engines = engines();
+            let reference = engines[0].build(&ds.points, metric).unwrap();
+            for e in &engines[1..] {
+                let m = e.build(&ds.points, metric).unwrap();
+                assert_matrices_equal(
+                    &reference,
+                    &m,
+                    &format!("{} vs {} on {} / {metric:?}", engines[0].name(), e.name(), ds.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn vat_order_identical_across_engines() {
+    // the fidelity claim itself: the permutation — the thing the analyst
+    // actually looks at — must not depend on which engine built the matrix
+    for ds in datasets() {
+        for metric in metrics() {
+            let engines = engines();
+            let reference = vat(&engines[0].build(&ds.points, metric).unwrap()).order;
+            for e in &engines[1..] {
+                let order = vat(&e.build(&ds.points, metric).unwrap()).order;
+                assert_eq!(
+                    reference,
+                    order,
+                    "VAT order diverged: {} vs {} on {} / {metric:?}",
+                    engines[0].name(),
+                    e.name(),
+                    ds.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn condensed_native_order_matches_square_prim() {
+    // CondensedMatrix also runs Prim directly on half-memory storage; that
+    // specialized sweep must agree with the trait path on every workload
+    for ds in datasets() {
+        for metric in metrics() {
+            let cond = CondensedMatrix::build(&ds.points, metric);
+            let square = vat(&BlockedEngine.build(&ds.points, metric).unwrap());
+            assert_eq!(
+                cond.vat_order(),
+                square.order,
+                "condensed sweep vs square prim on {} / {metric:?}",
+                ds.name
+            );
+        }
+    }
+}
+
+#[test]
+fn reordered_matrices_equal_across_engines() {
+    // beyond the permutation: the displayed image R* itself is equal
+    let ds = blobs(150, 2, 4, 0.5, 7004);
+    let engines = engines();
+    let reference = vat(&engines[0].pdist(&ds.points).unwrap());
+    for e in &engines[1..] {
+        let v = vat(&e.pdist(&ds.points).unwrap());
+        assert_eq!(reference.order, v.order, "{}", e.name());
+        assert_matrices_equal(
+            &reference.reordered,
+            &v.reordered,
+            &format!("reordered via {}", e.name()),
+        );
+    }
+}
+
+#[test]
+fn unsupported_metric_is_reported_not_miscomputed() {
+    // engines advertising supports(metric) == false must refuse, and every
+    // native engine advertises the full metric set
+    for e in engines() {
+        for metric in metrics() {
+            assert!(e.supports(metric), "{} should support {metric:?}", e.name());
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Golden-file tests for the `viz/` renderers (ASCII, PGM, PPM) over a
+//! tiny fixed dataset, with goldens checked in under `tests/golden/`.
+//!
+//! The fixture is a hand-constructed 4-point dissimilarity matrix whose
+//! values are chosen so the grayscale mapping is exact (max = 255 →
+//! scale = 1.0, every pixel an integer), making the goldens stable across
+//! platforms and float environments. The matrix is also already in VAT
+//! order (verified below), so the rendered image is the actual VAT display
+//! path output, not just a raw-matrix render.
+
+use fast_vat::dissimilarity::DistanceMatrix;
+use fast_vat::vat::vat;
+use fast_vat::viz::ppm::{colorize, write_ppm, Colormap};
+use fast_vat::viz::{ascii::to_ascii, pgm, render};
+
+/// 4-point symmetric dissimilarity, values picked for exact u8 mapping.
+fn tiny_matrix() -> DistanceMatrix {
+    #[rustfmt::skip]
+    let flat = vec![
+        0.0,  60.0, 120.0, 255.0,
+        60.0,  0.0,  90.0, 200.0,
+        120.0, 90.0,  0.0,  30.0,
+        255.0, 200.0, 30.0,  0.0,
+    ];
+    DistanceMatrix::from_flat(flat, 4).unwrap()
+}
+
+#[test]
+fn fixture_is_already_in_vat_order() {
+    // seed = row of the global max 255 at (0,3) -> row 0; the Prim sweep
+    // then appends 1 (60), 2 (90), 3 (30): identity permutation. This pins
+    // the goldens to the full vat() -> render() path.
+    let v = vat(&tiny_matrix());
+    assert_eq!(v.order, vec![0, 1, 2, 3]);
+    assert_eq!(v.mst, vec![(0, 1, 60.0), (1, 2, 90.0), (2, 3, 30.0)]);
+}
+
+#[test]
+fn ascii_render_matches_golden() {
+    let v = vat(&tiny_matrix());
+    let img = render(&v.reordered);
+    let ascii = to_ascii(&img, 4);
+    assert_eq!(ascii, include_str!("golden/tiny_vat.txt"));
+}
+
+#[test]
+fn pgm_render_matches_golden() {
+    let v = vat(&tiny_matrix());
+    let img = render(&v.reordered);
+    let path = std::env::temp_dir().join("fastvat_golden.pgm");
+    pgm::write_pgm(&img, &path).unwrap();
+    let written = std::fs::read(&path).unwrap();
+    let golden: &[u8] = include_bytes!("golden/tiny_vat.pgm");
+    assert_eq!(written, golden);
+}
+
+#[test]
+fn pgm_golden_roundtrips_through_reader() {
+    // the checked-in golden is itself a valid PGM the crate can parse back
+    let v = vat(&tiny_matrix());
+    let img = render(&v.reordered);
+    let path = std::env::temp_dir().join("fastvat_golden_rt.pgm");
+    std::fs::write(&path, include_bytes!("golden/tiny_vat.pgm")).unwrap();
+    let back = pgm::read_pgm(&path).unwrap();
+    assert_eq!(back, img);
+}
+
+#[test]
+fn ppm_gray_render_matches_golden() {
+    let v = vat(&tiny_matrix());
+    let rgb = colorize(&render(&v.reordered), Colormap::Gray);
+    let path = std::env::temp_dir().join("fastvat_golden.ppm");
+    write_ppm(&rgb, &path).unwrap();
+    let written = std::fs::read(&path).unwrap();
+    let golden: &[u8] = include_bytes!("golden/tiny_vat.ppm");
+    assert_eq!(written, golden);
+}
+
+#[test]
+fn pixel_values_are_exact() {
+    // the premise of the goldens: scale = 255/255 = 1.0, pixels == values
+    let img = render(&tiny_matrix());
+    assert_eq!(img.width, 4);
+    assert_eq!(
+        img.pixels,
+        vec![
+            0, 60, 120, 255, //
+            60, 0, 90, 200, //
+            120, 90, 0, 30, //
+            255, 200, 30, 0,
+        ]
+    );
+}

@@ -1,6 +1,11 @@
-//! Integration: the job service end to end over the XLA engine — the
+//! Integration: the job service end to end over the xla-tier engine — the
 //! deployment configuration the paper's Broader-Impact scenarios imply
 //! (one shared AOT artifact cache, many concurrent tendency checks).
+//!
+//! The xla-tier engine is resolved through `engine_by_name("xla", ..)`, so
+//! this suite runs in every build configuration: the real PJRT artifacts
+//! under `--features xla` (when `artifacts/` exists), the deterministic
+//! `SimulatedXlaEngine` otherwise.
 
 use std::sync::Arc;
 
@@ -9,10 +14,15 @@ use fast_vat::coordinator::service::VatService;
 use fast_vat::coordinator::streaming::{StreamingConfig, StreamingVat};
 use fast_vat::coordinator::JobOptions;
 use fast_vat::data::generators::{blobs, moons, separated_blobs, spotify_like, uniform};
-use fast_vat::runtime::{engine_by_name, XlaHandle};
+use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine};
+use fast_vat::runtime::engine_by_name;
 
 fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn xla_tier() -> Arc<dyn DistanceEngine> {
+    engine_by_name("xla", &artifacts_dir()).expect("xla-tier engine resolves")
 }
 
 #[test]
@@ -22,7 +32,7 @@ fn xla_backed_service_mixed_workload() {
         queue_depth: 16,
         ..Default::default()
     };
-    let engine = Arc::new(XlaHandle::new(artifacts_dir()).expect("artifacts"));
+    let engine = xla_tier();
     engine.warmup().expect("warmup");
     let service = VatService::start(&cfg, engine);
 
@@ -53,9 +63,18 @@ fn xla_backed_service_mixed_workload() {
     for ((id, t), want_structure) in tickets.into_iter().zip(expect_structure) {
         let out = t.recv().unwrap().unwrap();
         assert_eq!(out.id, id);
-        assert_eq!(out.engine, "xla");
+        assert!(
+            out.engine.starts_with("xla"),
+            "xla-tier engine expected, got {}",
+            out.engine
+        );
         if want_structure {
-            assert!(out.k_estimate >= 2, "job {id}: k={} insight={}", out.k_estimate, out.insight);
+            assert!(
+                out.k_estimate >= 2,
+                "job {id}: k={} insight={}",
+                out.k_estimate,
+                out.insight
+            );
         }
     }
 
@@ -88,10 +107,10 @@ fn oversize_job_fails_cleanly_without_poisoning_pool() {
         queue_depth: 8,
         ..Default::default()
     };
-    let engine = Arc::new(XlaHandle::new(artifacts_dir()).expect("artifacts"));
-    let service = VatService::start(&cfg, engine);
+    let service = VatService::start(&cfg, xla_tier());
 
-    // job 1: too large for any bucket -> must error
+    // job 1: too large for any bucket -> must error (both the real artifact
+    // path and the simulated engine enforce the 2048 ceiling)
     let big = spotify_like(2100, 1);
     let (_, t_big) = service.submit(big.points, JobOptions::default()).unwrap();
     assert!(t_big.recv().unwrap().is_err());
@@ -115,7 +134,7 @@ fn streaming_and_service_compose() {
         queue_depth: 8,
         ..Default::default()
     };
-    let service = VatService::start(&cfg, Arc::new(fast_vat::runtime::BlockedEngine));
+    let service = VatService::start(&cfg, Arc::new(BlockedEngine));
     let mut sv = StreamingVat::new(
         2,
         StreamingConfig {
