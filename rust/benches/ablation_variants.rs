@@ -48,11 +48,11 @@ fn main() {
             format!("{:.4}", t_vat.mean_s),
             format!("{:.4}", t_ivat.mean_s),
             format!("{:.4}", t_svat.mean_s),
-            format!("{:.3}", block_contrast(&v.reordered, 20)),
+            format!("{:.3}", block_contrast(&v.view(&d), 20)),
             format!("{:.3}", block_contrast(&iv.transformed, 20)),
-            det.detect(&v.reordered).len().to_string(),
+            det.detect(&v.view(&d)).len().to_string(),
             det.detect(&iv.transformed).len().to_string(),
-            det.detect(&sv.vat.reordered).len().to_string(),
+            det.detect(&sv.view()).len().to_string(),
         ]);
     }
     println!("\n== A3: VAT / iVAT / sVAT ablation ==");

@@ -38,15 +38,15 @@ fn main() {
         let t = time_auto(0.5, || {
             let d = xla.pdist(&z).expect("pdist");
             let v = vat(&d);
-            observe(&render(&v.reordered).pixels);
+            observe(&render(&v.view(&d)).pixels);
         });
         let d = xla.pdist(&z).expect("pdist");
         let v = vat(&d);
         table.row(&[
             name.to_string(),
             format!("{:.4}", t.mean_s),
-            format!("{:.3}", diagonal_darkness(&v.reordered, 8)),
-            det.insight(&v),
+            format!("{:.3}", diagonal_darkness(&v.view(&d), 8)),
+            det.insight(&v, &d),
             expect.to_string(),
         ]);
     }

@@ -28,8 +28,9 @@ fn main() {
         let z = Scaler::standardized(&ds.points);
         let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
         let v = vat(&d);
-        let k_est = det.detect(&ivat(&v).transformed).len();
-        let insight = det.insight(&v);
+        let iv_blocks = det.detect(&ivat(&v).transformed);
+        let k_est = iv_blocks.len();
+        let insight = det.insight_with(&v, &iv_blocks, &d);
         let k = ds.k_true().max(2).min(8).max(k_est.min(8));
 
         let km_params = KMeansParams {

@@ -167,9 +167,12 @@ fn main() -> fast_vat::Result<()> {
         let z = Scaler::standardized(&ds.points);
         let d = engine.pdist(&z)?;
         let v = vat(&d);
-        let insight = det.insight(&v);
-        // k read off the iVAT image, as a human analyst would (module docs)
-        let k_est = det.estimate_k(&fast_vat::vat::ivat::ivat(&v).transformed);
+        // k read off the iVAT image, as a human analyst would (module docs);
+        // the same blocks feed the insight string, so the O(n²) transform
+        // and detection run once
+        let iv_blocks = det.detect(&fast_vat::vat::ivat::ivat(&v).transformed);
+        let k_est = iv_blocks.len();
+        let insight = det.insight_with(&v, &iv_blocks, &d);
         let k_run = ds.k_true().max(2).min(8);
         let km = kmeans(
             &z,
@@ -216,7 +219,7 @@ fn main() -> fast_vat::Result<()> {
         let z = Scaler::standardized(&ds.points);
         let d = xla.pdist(&z)?; // figures go through the full XLA path
         let v = vat(&d);
-        let img = render(&v.reordered);
+        let img = render(&v.view(&d)); // zero-copy: no reordered matrix
         let path = format!("{out_dir}/{stem}.pgm");
         write_pgm(&img, &path)?;
         println!("{name} -> {path}");

@@ -29,11 +29,13 @@ fn main() {
         t("prim order", || {
             std::hint::black_box(prim::vat_order(&d));
         });
-        let (order, _) = prim::vat_order(&d);
-        t("reorder gather", || {
-            std::hint::black_box(d.reorder(&order).unwrap());
-        });
         let v = vat(&d);
+        t("materialize view (opt-in)", || {
+            std::hint::black_box(v.materialize(&d));
+        });
+        t("render from view", || {
+            std::hint::black_box(fast_vat::viz::render(&v.view(&d)));
+        });
         t("ivat transform", || {
             std::hint::black_box(ivat(&v));
         });

@@ -24,11 +24,12 @@ fn main() -> fast_vat::Result<()> {
     let h = hopkins_mean(&z, &HopkinsParams::default(), 5)?;
     println!("Hopkins statistic: {h:.3} (>0.75 = significant structure)\n");
 
-    // 3. the VAT image (paper Figures 1-3)
+    // 3. the VAT image (paper Figures 1-3) — rendered straight off the
+    // zero-copy view; no reordered matrix is materialized
     let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
     let v = vat(&d);
     println!("VAT image ({} points, raw):", z.n());
-    println!("{}", to_ascii(&render(&v.reordered), 32));
+    println!("{}", to_ascii(&render(&v.view(&d)), 32));
 
     // 4. iVAT sharpening + block detection -> k estimate
     let iv = ivat(&v);
@@ -37,6 +38,6 @@ fn main() -> fast_vat::Result<()> {
     println!("iVAT image (path-max sharpened):");
     println!("{}", to_ascii(&render(&iv.transformed), 32));
     println!("detected blocks: {} -> k estimate = {}", blocks.len(), blocks.len());
-    println!("insight: {}", det.insight(&v));
+    println!("insight: {}", det.insight_with(&v, &blocks, &d));
     Ok(())
 }

@@ -71,6 +71,49 @@ pub fn observe<T>(value: &T) {
     }
 }
 
+/// Distance-buffer allocation audit (the §5.1 memory-accounting helper):
+/// records the resident bytes of each distance buffer a pipeline holds —
+/// via `DistanceStorage::distance_bytes` / `resident_bytes` — so tests and
+/// benches can assert footprint ratios (e.g. the condensed + zero-copy-view
+/// path holding ≤ ~55% of the dense path's distance bytes) without a
+/// custom global allocator.
+#[derive(Debug, Default)]
+pub struct FootprintAudit {
+    entries: Vec<(String, usize)>,
+}
+
+impl FootprintAudit {
+    /// Empty audit.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one resident distance buffer.
+    pub fn record(&mut self, label: impl Into<String>, bytes: usize) {
+        self.entries.push((label.into(), bytes));
+    }
+
+    /// Total distance bytes recorded.
+    pub fn total(&self) -> usize {
+        self.entries.iter().map(|(_, b)| b).sum()
+    }
+
+    /// Recorded entries (label, bytes).
+    pub fn entries(&self) -> &[(String, usize)] {
+        &self.entries
+    }
+
+    /// Aligned report table.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(&["buffer", "bytes"]);
+        for (label, bytes) in &self.entries {
+            t.row(&[label.clone(), bytes.to_string()]);
+        }
+        t.row(&["TOTAL".into(), self.total().to_string()]);
+        t.render()
+    }
+}
+
 /// Simple fixed-width table printer (paper-style benchmark output).
 pub struct Table {
     headers: Vec<String>,
@@ -171,5 +214,17 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn footprint_audit_totals_and_reports() {
+        let mut audit = FootprintAudit::new();
+        audit.record("dense matrix", 800);
+        audit.record("reordered copy", 800);
+        assert_eq!(audit.total(), 1600);
+        assert_eq!(audit.entries().len(), 2);
+        let report = audit.report();
+        assert!(report.contains("TOTAL"));
+        assert!(report.contains("1600"));
     }
 }

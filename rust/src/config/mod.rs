@@ -10,6 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::dissimilarity::StorageKind;
 use crate::error::{Error, Result};
 
 /// A parsed scalar value.
@@ -211,6 +212,10 @@ pub struct ServiceConfig {
     pub engine: String,
     /// artifacts/ directory for the XLA engine.
     pub artifacts_dir: String,
+    /// Distance-storage layout for jobs: "dense" | "condensed". Condensed
+    /// halves per-job resident distance bytes with bit-identical output
+    /// (see `dissimilarity/storage.rs`).
+    pub storage: StorageKind,
 }
 
 impl Default for ServiceConfig {
@@ -220,6 +225,7 @@ impl Default for ServiceConfig {
             queue_depth: 64,
             engine: "blocked".into(),
             artifacts_dir: "artifacts".into(),
+            storage: StorageKind::Dense,
         }
     }
 }
@@ -259,6 +265,13 @@ impl ServiceConfig {
                         .as_str()
                         .ok_or_else(|| Error::Config("artifacts_dir must be a string".into()))?
                         .to_string()
+                }
+                "storage" => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| Error::Config("storage must be a string".into()))?;
+                    cfg.storage = StorageKind::parse(s)
+                        .map_err(|_| Error::Config(format!("unknown storage {s}")))?;
                 }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
@@ -324,6 +337,19 @@ mod tests {
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.engine, "naive");
         assert_eq!(cfg.queue_depth, ServiceConfig::default().queue_depth);
+        assert_eq!(cfg.storage, StorageKind::Dense);
+    }
+
+    #[test]
+    fn service_config_storage_knob() {
+        let doc = Document::parse("[service]\nstorage = \"condensed\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.storage, StorageKind::Condensed);
+        // validation fails loudly on unknown layouts and non-strings
+        let doc = Document::parse("[service]\nstorage = \"sparse\"\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[service]\nstorage = 3\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).is_err());
     }
 
     #[test]

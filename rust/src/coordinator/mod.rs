@@ -22,6 +22,7 @@ pub mod stats;
 pub mod streaming;
 
 use crate::data::Points;
+use crate::dissimilarity::StorageKind;
 use crate::vat::blocks::Block;
 
 /// What a job should compute beyond the reorder itself.
@@ -33,8 +34,13 @@ pub struct JobOptions {
     pub ivat: bool,
     /// Also compute the Hopkins statistic.
     pub hopkins: bool,
-    /// Keep the reordered matrix in the result (memory-heavy for large n).
+    /// Keep the reordered matrix in the result (memory-heavy for large n:
+    /// this is the one option that materializes the dense n×n reordered
+    /// copy; everything else reads the zero-copy view).
     pub keep_matrix: bool,
+    /// Distance-storage layout for the job (`condensed` holds ~half the
+    /// dense resident distance bytes with bit-identical output).
+    pub storage: StorageKind,
 }
 
 impl Default for JobOptions {
@@ -44,6 +50,7 @@ impl Default for JobOptions {
             ivat: false,
             hopkins: true,
             keep_matrix: false,
+            storage: StorageKind::Dense,
         }
     }
 }
@@ -74,7 +81,8 @@ pub struct VatJobOutput {
     pub hopkins: Option<f64>,
     /// Qualitative insight string (Table-3 vocabulary).
     pub insight: String,
-    /// Reordered matrix flat buffer (present iff `keep_matrix`).
+    /// Dense reordered matrix, materialized from the zero-copy view
+    /// (present iff `keep_matrix`).
     pub reordered: Option<crate::dissimilarity::DistanceMatrix>,
     /// Wall time spent in the distance stage, seconds.
     pub t_distance_s: f64,
@@ -82,6 +90,8 @@ pub struct VatJobOutput {
     pub t_order_s: f64,
     /// Which engine computed the distances.
     pub engine: &'static str,
+    /// Which storage layout the job ran on (echoed from the options).
+    pub storage: StorageKind,
 }
 
 #[cfg(test)]
@@ -93,5 +103,6 @@ mod tests {
         let o = JobOptions::default();
         assert!(o.standardize && o.hopkins);
         assert!(!o.keep_matrix, "default must not retain O(n^2) buffers");
+        assert_eq!(o.storage, StorageKind::Dense);
     }
 }

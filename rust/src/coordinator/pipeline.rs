@@ -23,11 +23,12 @@ use crate::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
 use crate::data::scale::Scaler;
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
+use crate::dissimilarity::{Metric, StorageKind};
 use crate::error::Result;
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::metrics::{ari, silhouette, to_isize};
 use crate::vat::blocks::{Block, BlockDetector};
-use crate::vat::{ivat::ivat, vat};
+use crate::vat::{ivat::ivat_with, vat};
 
 /// Tunables for [`auto_cluster`].
 #[derive(Debug, Clone)]
@@ -41,6 +42,9 @@ pub struct PipelineConfig {
     pub min_pts: usize,
     /// Base RNG seed.
     pub seed: u64,
+    /// Distance-storage layout for the tendency stage (condensed halves
+    /// the resident distance bytes; the decision output is identical).
+    pub storage: StorageKind,
 }
 
 impl Default for PipelineConfig {
@@ -50,6 +54,7 @@ impl Default for PipelineConfig {
             hopkins_runs: 5,
             min_pts: 5,
             seed: 0xA070,
+            storage: StorageKind::Dense,
         }
     }
 }
@@ -132,14 +137,16 @@ pub fn auto_cluster(
         });
     }
 
-    // 2. tendency image -> k + the iVAT reference partition
-    let d = engine.pdist(&z)?;
+    // 2. tendency image -> k + the iVAT reference partition (the whole
+    // tendency stage runs on the configured storage layout; silhouettes
+    // below read the same storage, so condensed never expands to dense)
+    let d = engine.build_storage(&z, Metric::Euclidean, config.storage)?;
     let v = vat(&d);
     let detector = BlockDetector::default();
-    let iv = ivat(&v);
+    let iv = ivat_with(&v, config.storage);
     let blocks = detector.detect(&iv.transformed);
     let k = blocks.len().max(2);
-    let insight = detector.insight(&v);
+    let insight = detector.insight_with(&v, &blocks, &d);
     let vat_reference = block_labels(&blocks, &v.order, z.n());
 
     // 3. both candidates
@@ -238,6 +245,23 @@ mod tests {
             Choice::Dbscan { .. } => {}
             other => panic!("circles should pick DBSCAN, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn condensed_storage_reaches_same_decision() {
+        // the storage knob must not change the pipeline's routing or labels
+        let ds = moons(300, 0.05, 145);
+        let dense_cfg = PipelineConfig::default();
+        let cond_cfg = PipelineConfig {
+            storage: crate::dissimilarity::StorageKind::Condensed,
+            ..Default::default()
+        };
+        let a = auto_cluster(&engine(), &ds.points, &dense_cfg).unwrap();
+        let b = auto_cluster(&engine(), &ds.points, &cond_cfg).unwrap();
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.k_estimate, b.k_estimate);
+        assert_eq!(a.insight, b.insight);
     }
 
     #[test]

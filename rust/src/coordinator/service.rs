@@ -18,10 +18,11 @@ use crate::coordinator::{JobOptions, VatJob, VatJobOutput};
 use crate::data::scale::Scaler;
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
+use crate::dissimilarity::Metric;
 use crate::error::{Error, Result};
 use crate::hopkins::{hopkins, HopkinsParams};
 use crate::vat::blocks::BlockDetector;
-use crate::vat::{ivat::ivat, vat};
+use crate::vat::{ivat::ivat_with, vat};
 
 /// A submitted job's completion channel.
 pub type Ticket = mpsc::Receiver<Result<VatJobOutput>>;
@@ -165,6 +166,12 @@ pub enum SubmitError {
 }
 
 /// Execute one job (also used directly by the CLI's one-shot mode).
+///
+/// The distance stage emits the storage layout the job asked for; every
+/// downstream stage (Prim sweep, iVAT, block detection, insight) reads
+/// that storage — through the zero-copy `VatResult::view` — without ever
+/// materializing the reordered n×n copy. Only `keep_matrix` materializes,
+/// explicitly, for callers that want `R*` back.
 pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOutput> {
     let points = if job.options.standardize {
         Scaler::standardized(&job.points)
@@ -173,17 +180,22 @@ pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOut
     };
 
     let t0 = Instant::now();
-    let d = engine.pdist(&points)?;
+    let storage = engine.build_storage(&points, Metric::Euclidean, job.options.storage)?;
     let t_distance_s = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
-    let v = vat(&d);
+    let v = vat(&storage);
     let detector = BlockDetector::default();
     let (blocks, insight) = if job.options.ivat {
-        let iv = ivat(&v);
-        (detector.detect(&iv.transformed), detector.insight(&v))
+        let iv = ivat_with(&v, job.options.storage);
+        let blocks = detector.detect(&iv.transformed);
+        let insight = detector.insight_with(&v, &blocks, &storage);
+        (blocks, insight)
     } else {
-        (detector.detect(&v.reordered), detector.insight(&v))
+        (
+            detector.detect(&v.view(&storage)),
+            detector.insight(&v, &storage),
+        )
     };
     let t_order_s = t1.elapsed().as_secs_f64();
 
@@ -207,10 +219,11 @@ pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOut
         k_estimate,
         hopkins: h,
         insight,
-        reordered: job.options.keep_matrix.then(|| v.reordered.clone()),
+        reordered: job.options.keep_matrix.then(|| v.materialize(&storage)),
         t_distance_s,
         t_order_s,
         engine: engine.name(),
+        storage: job.options.storage,
     })
 }
 
@@ -279,6 +292,32 @@ mod tests {
         for t in tickets {
             let _ = t.recv().unwrap().unwrap();
         }
+    }
+
+    #[test]
+    fn condensed_storage_jobs_match_dense_jobs() {
+        use crate::dissimilarity::StorageKind;
+        let service = svc(2, 8);
+        let ds = blobs(120, 2, 3, 0.3, 125);
+        let dense_opts = JobOptions {
+            ivat: true,
+            ..Default::default()
+        };
+        let cond_opts = JobOptions {
+            ivat: true,
+            storage: StorageKind::Condensed,
+            ..Default::default()
+        };
+        let (_, td) = service.submit(ds.points.clone(), dense_opts).unwrap();
+        let (_, tc) = service.submit(ds.points, cond_opts).unwrap();
+        let out_d = td.recv().unwrap().unwrap();
+        let out_c = tc.recv().unwrap().unwrap();
+        // the storage axis changes layout, not output
+        assert_eq!(out_d.order, out_c.order);
+        assert_eq!(out_d.blocks, out_c.blocks);
+        assert_eq!(out_d.insight, out_c.insight);
+        assert_eq!(out_d.storage, StorageKind::Dense);
+        assert_eq!(out_c.storage, StorageKind::Condensed);
     }
 
     #[test]

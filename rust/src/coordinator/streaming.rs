@@ -16,10 +16,14 @@
 //! approximating the final image.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 #[cfg(test)]
 use crate::data::Points;
-use crate::dissimilarity::{DistanceMatrix, Metric};
+use crate::dissimilarity::condensed::CondensedMatrix;
+use crate::dissimilarity::{
+    DistanceMatrix, DistanceStore, Metric, PermutedView, StorageKind,
+};
 use crate::error::{Error, Result};
 use crate::vat::blocks::{Block, BlockDetector};
 use crate::vat::{vat, VatResult};
@@ -31,6 +35,12 @@ pub struct StreamingConfig {
     pub window: usize,
     /// Distance metric.
     pub metric: Metric,
+    /// Storage layout of the cached/handed-out snapshots. The *incremental*
+    /// window matrix stays dense (the O(w·d) push extends rows in place;
+    /// condensed strides shift with every size change), but a `Condensed`
+    /// snapshot compresses on reorder, so monitors holding snapshots pay
+    /// ~half the distance bytes per retained snapshot.
+    pub snapshot_storage: StorageKind,
 }
 
 impl Default for StreamingConfig {
@@ -38,6 +48,7 @@ impl Default for StreamingConfig {
         Self {
             window: 512,
             metric: Metric::Euclidean,
+            snapshot_storage: StorageKind::Dense,
         }
     }
 }
@@ -47,12 +58,23 @@ impl Default for StreamingConfig {
 pub struct StreamSnapshot {
     /// Points in the window when the snapshot was taken.
     pub n: usize,
-    /// VAT result over the window.
+    /// VAT result over the window (permutation + MST; O(w) resident).
     pub vat: VatResult,
+    /// The window's distances at snapshot time, in the configured layout —
+    /// what `vat` was computed over. Shared (`Arc`) with the monitor's
+    /// cache, so polling a clean window never copies the distance buffer.
+    pub storage: Arc<DistanceStore>,
     /// Detected blocks.
     pub blocks: Vec<Block>,
     /// Total points ever pushed.
     pub total_seen: u64,
+}
+
+impl StreamSnapshot {
+    /// Zero-copy view of the snapshot's VAT image.
+    pub fn view(&self) -> PermutedView<'_, DistanceStore> {
+        self.vat.view(self.storage.as_ref())
+    }
 }
 
 /// Incremental VAT over a sliding window.
@@ -64,7 +86,7 @@ pub struct StreamingVat {
     /// Flat (w x w) distance matrix over `rows`, kept in sync by push/evict.
     dist: Vec<f64>,
     dirty: bool,
-    cached: Option<VatResult>,
+    cached: Option<(VatResult, Arc<DistanceStore>, Vec<Block>)>,
     total_seen: u64,
 }
 
@@ -155,8 +177,11 @@ impl StreamingVat {
         DistanceMatrix::from_flat(self.dist.clone(), self.rows.len())
     }
 
-    /// Lazily reorder and summarize the window. O(w²) when dirty, O(1) when
-    /// the window is unchanged since the last call.
+    /// Lazily reorder and summarize the window. O(w²) when dirty; when the
+    /// window is unchanged since the last call the snapshot is an O(w)
+    /// clone of the cached permutation/MST/blocks plus an `Arc` handle to
+    /// the storage — the distance buffer is never copied and no reordered
+    /// matrix is ever materialized.
     pub fn snapshot(&mut self) -> Result<StreamSnapshot> {
         let n = self.rows.len();
         if n < 2 {
@@ -165,15 +190,28 @@ impl StreamingVat {
             )));
         }
         if self.dirty || self.cached.is_none() {
-            let m = self.distance_matrix()?;
-            self.cached = Some(vat(&m));
+            let store = Arc::new(match self.config.snapshot_storage {
+                StorageKind::Dense => DistanceStore::Dense(self.distance_matrix()?),
+                StorageKind::Condensed => {
+                    // compress straight off the incremental window buffer,
+                    // so the condensed path never clones the dense w×w
+                    // intermediate first
+                    DistanceStore::Condensed(
+                        CondensedMatrix::from_square_flat(&self.dist, n)
+                            .expect("window buffer is n*n"),
+                    )
+                }
+            });
+            let v = vat(store.as_ref());
+            let blocks = BlockDetector::default().detect(&v.view(store.as_ref()));
+            self.cached = Some((v, store, blocks));
             self.dirty = false;
         }
-        let v = self.cached.clone().expect("cached above");
-        let blocks = BlockDetector::default().detect(&v.reordered);
+        let (v, store, blocks) = self.cached.clone().expect("cached above");
         Ok(StreamSnapshot {
             n,
             vat: v,
+            storage: store,
             blocks,
             total_seen: self.total_seen,
         })
@@ -263,6 +301,32 @@ mod tests {
         let k2 = sv.snapshot().unwrap().blocks.len();
         assert_eq!(k1, 1, "single cluster first");
         assert_eq!(k2, 2, "second cluster must appear in the VAT image");
+    }
+
+    #[test]
+    fn condensed_snapshots_match_dense_snapshots() {
+        let ds = blobs(80, 2, 2, 0.3, 133);
+        let mut dense = StreamingVat::new(2, cfg(100)).unwrap();
+        let mut cond = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 100,
+                snapshot_storage: StorageKind::Condensed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..80 {
+            dense.push(ds.points.row(i)).unwrap();
+            cond.push(ds.points.row(i)).unwrap();
+        }
+        let a = dense.snapshot().unwrap();
+        let b = cond.snapshot().unwrap();
+        assert_eq!(a.vat.order, b.vat.order);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(a.storage.kind(), StorageKind::Dense);
+        assert_eq!(b.storage.kind(), StorageKind::Condensed);
+        assert!(b.storage.distance_bytes() * 2 < a.storage.distance_bytes() + 100 * 8);
     }
 
     #[test]

@@ -178,6 +178,130 @@ pub fn build_with_tile(points: &Points, metric: Metric, tile: usize) -> Distance
     }
 }
 
+/// Precomputed row norms + monomorphized dot for the (Sq)Euclidean fast
+/// path; `None` norms route every other metric through `Metric::eval`.
+/// Shared by the sequential and parallel condensed builders so the
+/// bitwise-parity contract has a single source of truth.
+fn condensed_kernel(
+    points: &Points,
+    metric: Metric,
+) -> (Option<Vec<f64>>, fn(&[f64], &[f64]) -> f64) {
+    let norms = matches!(metric, Metric::Euclidean | Metric::SqEuclidean).then(|| {
+        (0..points.n())
+            .map(|i| points.row(i).iter().map(|v| v * v).sum())
+            .collect()
+    });
+    let dot: fn(&[f64], &[f64]) -> f64 = match points.d() {
+        2 => dot_d::<2>,
+        3 => dot_d::<3>,
+        4 => dot_d::<4>,
+        _ => dot_d::<0>,
+    };
+    (norms, dot)
+}
+
+/// Fill the condensed entries of rows `rows` (scipy `pdist` order: i
+/// ascending, then j > i) into `out`, whose length must equal the range's
+/// total entry count. This is THE condensed pair loop — both the
+/// sequential and the row-band-parallel builders call it, so their entries
+/// are bitwise identical to each other and to [`build`]'s dense entries
+/// (same precomputed-norm dot trick with the same monomorphized inner dot
+/// for (Sq)Euclidean, same `Metric::eval` arithmetic otherwise).
+fn fill_condensed_rows(
+    points: &Points,
+    metric: Metric,
+    norms: Option<&[f64]>,
+    dot: fn(&[f64], &[f64]) -> f64,
+    rows: std::ops::Range<usize>,
+    out: &mut [f64],
+) {
+    let n = points.n();
+    let squared = matches!(metric, Metric::SqEuclidean);
+    let mut slot = out.iter_mut();
+    for i in rows {
+        let a = points.row(i);
+        for j in (i + 1)..n {
+            let v = match (metric, norms) {
+                (Metric::Euclidean | Metric::SqEuclidean, Some(ns)) => {
+                    let sq = (ns[i] + ns[j] - 2.0 * dot(a, points.row(j))).max(0.0);
+                    if squared {
+                        sq
+                    } else {
+                        sq.sqrt()
+                    }
+                }
+                _ => metric.eval(a, points.row(j)),
+            };
+            *slot.next().expect("out sized to the row range") = v;
+        }
+    }
+    debug_assert!(slot.next().is_none(), "out larger than the row range");
+}
+
+/// Upper-triangle build sharing this module's pair kernels — entries are
+/// bitwise identical to [`build`]'s, so the condensed storage path never
+/// changes a value, only the layout. Returns the flat n(n−1)/2 buffer
+/// (wrapped by `CondensedMatrix::build_blocked`).
+pub(crate) fn build_condensed(points: &Points, metric: Metric) -> Vec<f64> {
+    let n = points.n();
+    let (norms, dot) = condensed_kernel(points, metric);
+    let mut data = vec![0.0f64; n * n.saturating_sub(1) / 2];
+    fill_condensed_rows(points, metric, norms.as_deref(), dot, 0..n, &mut data);
+    data
+}
+
+/// Row-band parallel upper-triangle build: the condensed twin of
+/// `parallel::build_parallel`. Rows are grouped into contiguous bands of
+/// roughly equal entry counts (row i holds n−1−i entries) and each band is
+/// a disjoint `&mut` chunk of the triangle buffer, so threads never share
+/// writes; every band runs [`fill_condensed_rows`], so entries are bitwise
+/// identical to the sequential build (and to the dense builders).
+pub(crate) fn build_condensed_parallel(
+    points: &Points,
+    metric: Metric,
+    threads: usize,
+) -> Vec<f64> {
+    let n = points.n();
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    }
+    .clamp(1, n.max(1));
+    if n < 128 || threads == 1 {
+        // below ~128 points thread spawn overhead dominates
+        return build_condensed(points, metric);
+    }
+    let (norms, dot) = condensed_kernel(points, metric);
+    let total = n * (n - 1) / 2;
+    let mut data = vec![0.0f64; total];
+    let target = total.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f64] = &mut data;
+        let mut row = 0usize;
+        while row < n {
+            // extend the band row by row until it carries ~total/threads
+            // entries (bands cover whole rows, so chunks stay disjoint)
+            let mut end = row;
+            let mut count = 0usize;
+            while end < n && count < target {
+                count += n - 1 - end;
+                end += 1;
+            }
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(count);
+            rest = tail;
+            let norms = norms.as_deref();
+            scope.spawn(move || {
+                fill_condensed_rows(points, metric, norms, dot, row..end, band);
+            });
+            row = end;
+        }
+    });
+    data
+}
+
 /// Direct (untiled) squared-distance helper used by clustering code that
 /// needs one-off pair distances without a full matrix.
 #[inline]

@@ -2,13 +2,24 @@
 //! of n², attacking the paper's §5.1 "Quadratic Memory Complexity" head-on.
 //!
 //! Layout matches scipy's `pdist` convention: for i < j the entry index is
-//! `i*n - i*(i+1)/2 + (j - i - 1)`. The VAT sweep only ever reads rows of
-//! the matrix sequentially, so [`CondensedMatrix::vat_order`] runs Prim
-//! directly on condensed storage at exactly half the resident footprint —
-//! on a 64 GiB box that moves the paper's n ≈ 90k ceiling to ≈ 128k.
+//! `i*n - i*(i+1)/2 + (j - i - 1)`. The VAT sweep only ever needs row reads
+//! and an argmax seed scan, both of which this type provides through the
+//! [`crate::dissimilarity::storage::DistanceStorage`] trait, so VAT / iVAT /
+//! block detection / rendering all run directly on condensed storage at half
+//! the resident footprint — on a 64 GiB box that moves the paper's n ≈ 90k
+//! ceiling to ≈ 128k.
+//!
+//! Three builders, matching the engine families bit for bit:
+//! * [`CondensedMatrix::build`] — direct `metric.eval` per pair (the
+//!   naive/condensed engine family);
+//! * [`CondensedMatrix::build_blocked`] — shares the dense blocked
+//!   builder's pair kernels (dot-trick Euclidean), so entries equal
+//!   `DistanceMatrix::build_blocked`'s bitwise;
+//! * [`CondensedMatrix::from_dense`] — compress an existing dense matrix
+//!   (trivially bitwise-identical; the default engine condensed path).
 
 use crate::data::Points;
-use crate::dissimilarity::{DistanceMatrix, Metric};
+use crate::dissimilarity::{blocked, mahalanobis, DistanceMatrix, Metric};
 use crate::error::{Error, Result};
 
 /// Upper-triangle pairwise distances in scipy `pdist` layout.
@@ -19,7 +30,8 @@ pub struct CondensedMatrix {
 }
 
 impl CondensedMatrix {
-    /// Build from points.
+    /// Build from points with direct per-pair `metric.eval` (bitwise equal
+    /// to the naive dense builder's entries).
     pub fn build(points: &Points, metric: Metric) -> Self {
         let n = points.n();
         let mut data = Vec::with_capacity(n * (n.saturating_sub(1)) / 2);
@@ -30,6 +42,64 @@ impl CondensedMatrix {
             }
         }
         Self { data, n }
+    }
+
+    /// Build sharing the dense blocked builder's pair kernels (precomputed
+    /// norms + dot trick for (Sq)Euclidean), so entries are bitwise equal
+    /// to `DistanceMatrix::build_blocked` — and to the parallel builder,
+    /// which shares the same kernels — without ever allocating the n²
+    /// square.
+    pub fn build_blocked(points: &Points, metric: Metric) -> Self {
+        Self {
+            data: blocked::build_condensed(points, metric),
+            n: points.n(),
+        }
+    }
+
+    /// Row-band multi-threaded condensed build (0 = all cores) — the
+    /// condensed twin of `DistanceMatrix::build_parallel`, sharing the
+    /// same pair kernels, so entries are bitwise equal to both
+    /// [`CondensedMatrix::build_blocked`] and the parallel dense build.
+    pub fn build_parallel(points: &Points, metric: Metric, threads: usize) -> Self {
+        Self {
+            data: blocked::build_condensed_parallel(points, metric, threads),
+            n: points.n(),
+        }
+    }
+
+    /// Mahalanobis-metric condensed build via the shared whitening path
+    /// ([`mahalanobis::whiten`]): whitened points flow through the same
+    /// blocked Euclidean kernel the dense and parallel builders use, so the
+    /// condensed route can neither error nor diverge from them — entries
+    /// equal [`DistanceMatrix::build_mahalanobis`]'s bitwise.
+    pub fn build_mahalanobis(points: &Points, ridge: f64) -> Result<Self> {
+        let z = mahalanobis::whiten(points, ridge)?;
+        Ok(Self::build_blocked(&z, Metric::Euclidean))
+    }
+
+    /// Compress a flat row-major n×n symmetric buffer (copies each row's
+    /// j > i tail; entries bitwise identical by construction). THE
+    /// square→triangle compression — [`CondensedMatrix::from_dense`] and
+    /// the streaming snapshot path both route through it.
+    pub fn from_square_flat(flat: &[f64], n: usize) -> Result<Self> {
+        if flat.len() != n * n {
+            return Err(Error::Shape(format!(
+                "flat len {} != n*n = {}",
+                flat.len(),
+                n * n
+            )));
+        }
+        let mut data = Vec::with_capacity(n * (n.saturating_sub(1)) / 2);
+        for i in 0..n {
+            data.extend_from_slice(&flat[i * n + i + 1..(i + 1) * n]);
+        }
+        Ok(Self { data, n })
+    }
+
+    /// Compress an existing dense symmetric matrix (copies the upper
+    /// triangle; entries bitwise identical by construction).
+    pub fn from_dense(m: &DistanceMatrix) -> Self {
+        Self::from_square_flat(m.flat(), m.n()).expect("dense matrix is n*n by construction")
     }
 
     /// Wrap an existing condensed buffer.
@@ -77,6 +147,65 @@ impl CondensedMatrix {
         }
     }
 
+    /// Copy row `i` of the square form into `out` (`out.len() == n`). The
+    /// j > i tail is one contiguous memcpy; the j < i head is a strided
+    /// gather down the column.
+    pub fn fill_row(&self, i: usize, out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(out.len(), n, "fill_row buffer must have length n");
+        assert!(i < n, "row {i} out of range for n {n}");
+        for (j, slot) in out.iter_mut().enumerate().take(i) {
+            *slot = self.data[self.index(j, i)];
+        }
+        out[i] = 0.0;
+        if i + 1 < n {
+            let start = self.index(i, i + 1);
+            out[i + 1..].copy_from_slice(&self.data[start..start + (n - i - 1)]);
+        }
+    }
+
+    /// Largest entry of the square form. The implicit diagonal counts, so
+    /// this matches `DistanceMatrix::max_value` even for (non-metric)
+    /// all-negative buffers; n = 0 reports `f64::NEG_INFINITY`.
+    pub fn max_value(&self) -> f64 {
+        let best = self
+            .data
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max);
+        if self.n > 0 {
+            best.max(0.0)
+        } else {
+            best
+        }
+    }
+
+    /// VAT seed row: first upper-triangle (row-major) occurrence of the
+    /// global maximum. For a symmetric matrix this is exactly the square
+    /// form's first row-major argmax row — the first full-scan occurrence
+    /// of the max is always an upper-triangle entry, and if no entry beats
+    /// the implicit zero diagonal the square scan stops at (0, 0).
+    pub fn seed_row(&self) -> usize {
+        let mut best_i = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        let mut idx = 0usize;
+        for i in 0..self.n {
+            for _j in (i + 1)..self.n {
+                let v = self.data[idx];
+                if v > best_v {
+                    best_v = v;
+                    best_i = i;
+                }
+                idx += 1;
+            }
+        }
+        if best_v <= 0.0 {
+            0
+        } else {
+            best_i
+        }
+    }
+
     /// Expand to square storage (for rendering / interop).
     pub fn to_square(&self) -> DistanceMatrix {
         let n = self.n;
@@ -99,61 +228,16 @@ impl CondensedMatrix {
 
     /// VAT ordering straight off condensed storage — same permutation as
     /// `vat::prim::vat_order` on the square form (property-tested), at half
-    /// the memory.
+    /// the memory. Delegates to the storage-generic Prim sweep.
     pub fn vat_order(&self) -> Vec<usize> {
-        let n = self.n;
-        if n == 0 {
-            return Vec::new();
-        }
-        // seed: row of the global max, first occurrence in (i<j) scan order
-        // — identical to the square row-major argmax row because the max's
-        // first row-major occurrence (i, j) always has i < j.
-        let mut best = (0usize, f64::NEG_INFINITY);
-        let mut idx = 0usize;
-        for i in 0..n {
-            for _j in (i + 1)..n {
-                let v = self.data[idx];
-                if v > best.1 {
-                    best = (i, v);
-                }
-                idx += 1;
-            }
-        }
-        let seed = best.0;
-
-        let mut order = Vec::with_capacity(n);
-        order.push(seed);
-        let mut selected = vec![false; n];
-        selected[seed] = true;
-        let mut dmin: Vec<f64> = (0..n).map(|j| self.get(seed, j)).collect();
-        for _ in 1..n {
-            let mut bj = usize::MAX;
-            let mut bv = f64::INFINITY;
-            for j in 0..n {
-                if !selected[j] && dmin[j] < bv {
-                    bv = dmin[j];
-                    bj = j;
-                }
-            }
-            selected[bj] = true;
-            order.push(bj);
-            for j in 0..n {
-                if !selected[j] {
-                    let v = self.get(bj, j);
-                    if v < dmin[j] {
-                        dmin[j] = v;
-                    }
-                }
-            }
-        }
-        order
+        crate::vat::prim::vat_order_on(self).0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::generators::{blobs, gmm};
+    use crate::data::generators::{anisotropic, blobs, gmm};
     use crate::prng::Pcg32;
     use crate::vat::prim::vat_order;
 
@@ -168,6 +252,121 @@ mod tests {
             }
         }
         assert_eq!(c.len(), 40 * 39 / 2);
+    }
+
+    #[test]
+    fn blocked_condensed_build_is_bitwise_dense_blocked() {
+        let ds = blobs(45, 3, 3, 0.5, 164);
+        for metric in [
+            Metric::Euclidean,
+            Metric::SqEuclidean,
+            Metric::Manhattan,
+            Metric::Chebyshev,
+            Metric::Minkowski(3.0),
+            Metric::Cosine,
+        ] {
+            let c = CondensedMatrix::build_blocked(&ds.points, metric);
+            let s = DistanceMatrix::build_blocked(&ds.points, metric);
+            for i in 0..45 {
+                for j in 0..45 {
+                    assert_eq!(c.get(i, j), s.get(i, j), "{metric:?} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_condensed_build_matches_blocked_bitwise() {
+        let ds = blobs(301, 3, 3, 0.5, 169); // odd n exercises band tails
+        for metric in [Metric::Euclidean, Metric::Manhattan, Metric::Cosine] {
+            let base = CondensedMatrix::build_blocked(&ds.points, metric);
+            for t in [2usize, 3, 8, 0] {
+                let par = CondensedMatrix::build_parallel(&ds.points, metric, t);
+                assert!(par == base, "{metric:?} threads {t} diverged");
+            }
+        }
+        // small n falls back to the sequential build
+        let small = blobs(40, 2, 2, 0.4, 170);
+        assert!(
+            CondensedMatrix::build_parallel(&small.points, Metric::Euclidean, 8)
+                == CondensedMatrix::build_blocked(&small.points, Metric::Euclidean)
+        );
+    }
+
+    #[test]
+    fn from_dense_is_bitwise() {
+        let ds = blobs(30, 2, 2, 0.5, 165);
+        let s = DistanceMatrix::build_blocked(&ds.points, Metric::Cosine);
+        let c = CondensedMatrix::from_dense(&s);
+        for i in 0..30 {
+            for j in 0..30 {
+                assert_eq!(c.get(i, j), s.get(i, j));
+            }
+        }
+        assert_eq!(c.len(), 30 * 29 / 2);
+        // the shared square->triangle helper validates its input shape
+        assert!(CondensedMatrix::from_square_flat(&[0.0; 5], 2).is_err());
+        assert_eq!(
+            CondensedMatrix::from_square_flat(s.flat(), 30).unwrap(),
+            c
+        );
+    }
+
+    #[test]
+    fn mahalanobis_routes_through_shared_whitening() {
+        // regression (storage spine satellite): the condensed Mahalanobis
+        // build must agree with the dense blocked/parallel route — same
+        // whitening, same pair kernel — not error or diverge.
+        let ds = anisotropic(80, 3, 0.5, 166);
+        let c = CondensedMatrix::build_mahalanobis(&ds.points, 1e-9).unwrap();
+        let s = DistanceMatrix::build_mahalanobis(&ds.points, 1e-9).unwrap();
+        let sp = {
+            let z = mahalanobis::whiten(&ds.points, 1e-9).unwrap();
+            DistanceMatrix::build_parallel(&z, Metric::Euclidean, 4)
+        };
+        for i in 0..80 {
+            for j in 0..80 {
+                assert_eq!(c.get(i, j), s.get(i, j), "dense ({i},{j})");
+                assert_eq!(c.get(i, j), sp.get(i, j), "parallel ({i},{j})");
+            }
+        }
+        // and against the direct Mahalanobis definition, to rounding
+        let w = mahalanobis::Whitener::fit(&ds.points, 1e-9).unwrap();
+        for (i, j) in [(0usize, 7usize), (3, 50), (42, 79)] {
+            let direct = w.distance(ds.points.row(i), ds.points.row(j));
+            assert!((c.get(i, j) - direct).abs() < 1e-9, "({i},{j})");
+        }
+        // same VAT permutation through either storage
+        assert_eq!(c.vat_order(), vat_order(&s).0);
+    }
+
+    #[test]
+    fn fill_row_matches_square_rows() {
+        let ds = gmm(33, 2, 2, 167);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let s = c.to_square();
+        let mut buf = vec![0.0; 33];
+        for i in 0..33 {
+            c.fill_row(i, &mut buf);
+            assert_eq!(buf.as_slice(), s.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn max_and_seed_match_square_semantics() {
+        let ds = blobs(50, 2, 3, 0.5, 168);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let s = c.to_square();
+        assert_eq!(c.max_value(), s.max_value());
+        // degenerate shapes
+        let empty = CondensedMatrix::from_flat(vec![], 0).unwrap();
+        assert_eq!(empty.max_value(), f64::NEG_INFINITY);
+        let single = CondensedMatrix::from_flat(vec![], 1).unwrap();
+        assert_eq!(single.max_value(), 0.0);
+        assert_eq!(single.seed_row(), 0);
+        // all-zero pairs (duplicate points) seed at row 0 like the square scan
+        let zeros = CondensedMatrix::from_flat(vec![0.0; 3], 3).unwrap();
+        assert_eq!(zeros.seed_row(), 0);
     }
 
     #[test]

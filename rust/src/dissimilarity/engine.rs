@@ -11,7 +11,7 @@
 //! | [`NaiveEngine`]     | python  | per-pair boxed dispatch, full n² sweep |
 //! | [`BlockedEngine`]   | numba   | cache-tiled, symmetric-half, dot-trick |
 //! | [`ParallelEngine`]  | —       | row-band threads over the blocked core |
-//! | [`CondensedEngine`] | —       | n(n−1)/2 storage, expanded on demand   |
+//! | [`CondensedEngine`] | —       | n(n−1)/2 storage, native condensed     |
 //! | `runtime::SimulatedXlaEngine` | cython | deterministic f32 bucket emulation |
 //! | `runtime::XlaHandle` (`xla` feature) | cython | AOT Pallas/XLA artifacts via PJRT |
 //!
@@ -22,6 +22,7 @@
 //! non-XLA engines need no extra code.
 
 use super::condensed::CondensedMatrix;
+use super::storage::{DistanceStore, StorageKind};
 use super::{DistanceMatrix, Metric};
 use crate::data::Points;
 use crate::error::{Error, Result};
@@ -34,6 +35,34 @@ pub trait DistanceEngine: Send + Sync {
 
     /// Build the full dissimilarity matrix under `metric`.
     fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix>;
+
+    /// Build the condensed (n(n−1)/2 upper-triangle) form under `metric`.
+    ///
+    /// Contract: for a given engine and metric, the condensed entries are
+    /// **bitwise identical** to the dense entries (the storage axis changes
+    /// layout, never values — `tests/storage_parity.rs` enforces this for
+    /// every engine × metric). The default builds dense and compresses
+    /// (trivially bitwise); native engines override to emit their natural
+    /// representation without the n² interim.
+    fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
+        Ok(CondensedMatrix::from_dense(&self.build(points, metric)?))
+    }
+
+    /// Build distance storage of the requested layout — the engine-layer
+    /// entry point for the `storage = "dense" | "condensed"` knob.
+    fn build_storage(
+        &self,
+        points: &Points,
+        metric: Metric,
+        kind: StorageKind,
+    ) -> Result<DistanceStore> {
+        Ok(match kind {
+            StorageKind::Dense => DistanceStore::Dense(self.build(points, metric)?),
+            StorageKind::Condensed => {
+                DistanceStore::Condensed(self.build_condensed(points, metric)?)
+            }
+        })
+    }
 
     /// True when the engine supports `metric` (engines reject unsupported
     /// metrics from [`DistanceEngine::build`] with `Error::InvalidArg`).
@@ -103,6 +132,12 @@ impl DistanceEngine for NaiveEngine {
     fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
         Ok(DistanceMatrix::build_naive(points, metric))
     }
+
+    /// Direct per-pair `metric.eval` — the same arithmetic as the naive
+    /// dense sweep, so entries are bitwise identical at half the allocation.
+    fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
+        Ok(CondensedMatrix::build(points, metric))
+    }
 }
 
 /// Numba-tier: compiled, cache-tiled native builder.
@@ -115,6 +150,12 @@ impl DistanceEngine for BlockedEngine {
 
     fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
         Ok(DistanceMatrix::build_blocked(points, metric))
+    }
+
+    /// The upper-triangle builder shares the dense tiled builder's pair
+    /// kernels, so entries are bitwise identical without the n² interim.
+    fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
+        Ok(CondensedMatrix::build_blocked(points, metric))
     }
 }
 
@@ -133,11 +174,18 @@ impl DistanceEngine for ParallelEngine {
     fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
         Ok(DistanceMatrix::build_parallel(points, metric, self.threads))
     }
+
+    /// Row-band threaded triangle build — same pair kernels as the dense
+    /// parallel path (bitwise equal), same `threads` knob.
+    fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
+        Ok(CondensedMatrix::build_parallel(points, metric, self.threads))
+    }
 }
 
-/// Half-memory engine: builds the n(n−1)/2 condensed form and expands it to
-/// square storage for trait interop (use [`CondensedMatrix`] directly when
-/// the O(n²/2) resident footprint is the point).
+/// Half-memory engine: the n(n−1)/2 condensed form is its natural
+/// representation (`build_storage` with `StorageKind::Condensed` never
+/// touches square storage); the dense [`DistanceEngine::build`] arm expands
+/// on demand for trait interop.
 pub struct CondensedEngine;
 
 impl DistanceEngine for CondensedEngine {
@@ -147,6 +195,11 @@ impl DistanceEngine for CondensedEngine {
 
     fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
         Ok(CondensedMatrix::build(points, metric).to_square())
+    }
+
+    /// Condensed is this engine's natural representation: no expansion.
+    fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
+        Ok(CondensedMatrix::build(points, metric))
     }
 }
 
@@ -224,5 +277,61 @@ mod tests {
     #[test]
     fn warmup_default_is_zero() {
         assert_eq!(CondensedEngine.warmup().unwrap(), 0);
+    }
+
+    #[test]
+    fn build_storage_kinds_agree_elementwise_per_engine() {
+        let ds = blobs(60, 2, 2, 0.5, 94);
+        let engines: Vec<Box<dyn DistanceEngine>> = vec![
+            Box::new(NaiveEngine),
+            Box::new(BlockedEngine),
+            Box::new(ParallelEngine::default()),
+            Box::new(CondensedEngine),
+        ];
+        for e in &engines {
+            let dense = e
+                .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+                .unwrap();
+            let cond = e
+                .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
+                .unwrap();
+            assert_eq!(dense.kind(), StorageKind::Dense, "{}", e.name());
+            assert_eq!(cond.kind(), StorageKind::Condensed, "{}", e.name());
+            for i in 0..60 {
+                for j in 0..60 {
+                    // the storage contract: layout changes, values do not
+                    assert_eq!(
+                        dense.get(i, j),
+                        cond.get(i, j),
+                        "{} ({i},{j})",
+                        e.name()
+                    );
+                }
+            }
+            assert!(cond.distance_bytes() * 2 < dense.distance_bytes() + 60 * 8);
+        }
+    }
+
+    #[test]
+    fn default_build_storage_compresses_the_dense_path() {
+        // the simulated XLA engine exercises the trait default
+        let sim = crate::runtime::SimulatedXlaEngine::new(true);
+        let ds = blobs(50, 2, 2, 0.5, 95);
+        let z = crate::data::scale::Scaler::standardized(&ds.points);
+        let dense = sim
+            .build_storage(&z, Metric::Euclidean, StorageKind::Dense)
+            .unwrap();
+        let cond = sim
+            .build_storage(&z, Metric::Euclidean, StorageKind::Condensed)
+            .unwrap();
+        for i in 0..50 {
+            for j in 0..50 {
+                assert_eq!(dense.get(i, j), cond.get(i, j));
+            }
+        }
+        // unsupported metrics are refused through the storage path too
+        assert!(sim
+            .build_storage(&z, Metric::Manhattan, StorageKind::Condensed)
+            .is_err());
     }
 }

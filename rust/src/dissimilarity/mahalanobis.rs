@@ -83,6 +83,15 @@ fn forward_solve(l: &[f64], d: usize, b: &mut [f64]) {
     }
 }
 
+/// Fit-and-transform in one call: the shared Mahalanobis route every
+/// builder and storage layout uses (`DistanceMatrix::build_mahalanobis`,
+/// `CondensedMatrix::build_mahalanobis`, and any engine fed pre-whitened
+/// points). Centralizing it here is what keeps the dense, parallel, and
+/// condensed Mahalanobis paths bitwise consistent.
+pub fn whiten(points: &Points, ridge: f64) -> Result<Points> {
+    Whitener::fit(points, ridge)?.transform(points)
+}
+
 /// A fitted whitening transform (Mahalanobis-izing map).
 #[derive(Debug, Clone)]
 pub struct Whitener {

@@ -17,6 +17,12 @@
 //! All builders are unified behind the object-safe [`engine::DistanceEngine`]
 //! trait; downstream layers (coordinator, pipeline, CLI, benches) depend on
 //! the trait, not on concrete builders.
+//!
+//! Orthogonal to the *builder* choice is the *storage* choice: the
+//! [`storage::DistanceStorage`] trait abstracts dense ([`DistanceMatrix`])
+//! vs condensed ([`condensed::CondensedMatrix`]) layouts, and every stage
+//! downstream of the distance build (VAT Prim sweep, iVAT, block detection,
+//! rendering, silhouette) is generic over it. See `storage.rs` module docs.
 
 pub mod blocked;
 pub mod condensed;
@@ -24,6 +30,9 @@ pub mod engine;
 pub mod mahalanobis;
 pub mod naive;
 pub mod parallel;
+pub mod storage;
+
+pub use storage::{DistanceStorage, DistanceStore, PermutedView, StorageKind};
 
 use crate::data::Points;
 use crate::error::{Error, Result};
@@ -200,6 +209,22 @@ impl DistanceMatrix {
     /// Build with row-band multi-threading (0 = all cores).
     pub fn build_parallel(points: &Points, metric: Metric, threads: usize) -> Self {
         parallel::build_parallel(points, metric, threads)
+    }
+
+    /// Mahalanobis-metric dense build via the shared whitening path
+    /// (`mahalanobis::whiten` + the blocked Euclidean kernel). The
+    /// condensed twin is [`condensed::CondensedMatrix::build_mahalanobis`];
+    /// both route through the same whitened points and the same pair
+    /// kernel, so their entries are bitwise identical.
+    pub fn build_mahalanobis(points: &Points, ridge: f64) -> Result<Self> {
+        let z = mahalanobis::whiten(points, ridge)?;
+        Ok(Self::build_blocked(&z, Metric::Euclidean))
+    }
+
+    /// Resident distance-buffer bytes (the §5.1 memory accounting hook;
+    /// mirrors [`condensed::CondensedMatrix::resident_bytes`]).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
     }
 
     /// Largest entry (used for VAT seeding and rendering normalization).

@@ -1,0 +1,530 @@
+//! The storage spine: one abstraction over every way the crate keeps
+//! pairwise dissimilarities resident.
+//!
+//! The paper names quadratic memory as the binding constraint on VAT's
+//! scalability (§5.1). The ordering and rendering stages never need the
+//! dense n×n matrix — only triangle reads, a seed-row argmax scan, and a
+//! permutation — so this module makes that the architecture:
+//!
+//! * [`DistanceStorage`] — the access patterns downstream stages actually
+//!   use (`n`, `get`, sequential row fill, argmax seed scan). The VAT Prim
+//!   sweep, iVAT, sVAT, the block detector, silhouette, and the renderers
+//!   are all generic over this trait.
+//! * [`DistanceMatrix`] (dense) and [`CondensedMatrix`] (n(n−1)/2 upper
+//!   triangle) are the two canonical implementations; [`DistanceStore`] is
+//!   the runtime-chosen sum of the two that the engine layer emits.
+//! * [`PermutedView`] — a zero-copy view of storage under a VAT
+//!   permutation. This replaces the second full n×n `reordered` copy that
+//!   `VatResult` used to materialize: viz renders from the view directly,
+//!   and [`PermutedView::materialize`] is the explicit escape hatch for
+//!   callers that genuinely need the dense reordered matrix.
+//!
+//! Contract shared by all implementations: values are what the builder
+//! produced — switching storage kind never changes a single bit, only the
+//! layout (locked by `tests/storage_parity.rs`).
+
+use super::condensed::CondensedMatrix;
+use super::DistanceMatrix;
+use crate::error::{Error, Result};
+
+/// Which storage layout to build — the `storage = "dense" | "condensed"`
+/// config/CLI knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StorageKind {
+    /// Full n×n flat matrix (the paper's §3.3 layout).
+    #[default]
+    Dense,
+    /// Upper-triangle n(n−1)/2 buffer — ~half the resident bytes.
+    Condensed,
+}
+
+impl StorageKind {
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> Result<StorageKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(StorageKind::Dense),
+            "condensed" => Ok(StorageKind::Condensed),
+            other => Err(Error::InvalidArg(format!(
+                "unknown storage {other} (expected dense|condensed)"
+            ))),
+        }
+    }
+
+    /// Canonical name (the string `parse` accepts).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StorageKind::Dense => "dense",
+            StorageKind::Condensed => "condensed",
+        }
+    }
+}
+
+/// Read access to a symmetric dissimilarity matrix, independent of layout.
+///
+/// Every method has a correct default built on `n`/`get`; implementations
+/// override where their layout admits a faster path. All defaults and
+/// overrides are value-identical — downstream stages produce bitwise-equal
+/// output whichever storage backs them.
+pub trait DistanceStorage: Send + Sync {
+    /// Side of the (square-form) matrix.
+    fn n(&self) -> usize;
+
+    /// Entry (i, j); the diagonal is zero.
+    fn get(&self, i: usize, j: usize) -> f64;
+
+    /// Which layout this storage is (views report their backing storage).
+    fn kind(&self) -> StorageKind {
+        StorageKind::Dense
+    }
+
+    /// Copy row `i` into `out` (`out.len() == n`).
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.n());
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = self.get(i, j);
+        }
+    }
+
+    /// Row `i` as a contiguous slice when the layout has one (dense does;
+    /// condensed and views return `None` and callers fall back to
+    /// [`DistanceStorage::fill_row`] into a scratch buffer).
+    fn row_slice(&self, _i: usize) -> Option<&[f64]> {
+        None
+    }
+
+    /// Largest entry (rendering normalization). Empty storage reports
+    /// `f64::NEG_INFINITY`, matching [`DistanceMatrix::max_value`].
+    fn max_value(&self) -> f64 {
+        let n = self.n();
+        let mut best = f64::NEG_INFINITY;
+        for i in 0..n {
+            for j in 0..n {
+                best = best.max(self.get(i, j));
+            }
+        }
+        best
+    }
+
+    /// VAT seed: row of the first row-major occurrence of the global
+    /// maximum (strict `>`), matching the pure-Python baseline's argmax.
+    fn seed_row(&self) -> usize {
+        let n = self.n();
+        let mut best_i = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..n {
+            for j in 0..n {
+                let v = self.get(i, j);
+                if v > best_v {
+                    best_v = v;
+                    best_i = i;
+                }
+            }
+        }
+        best_i
+    }
+
+    /// Resident distance-buffer bytes this storage owns (views own none) —
+    /// the §5.1 memory-accounting hook used by `bench_util::FootprintAudit`.
+    fn distance_bytes(&self) -> usize;
+}
+
+impl DistanceStorage for DistanceMatrix {
+    fn n(&self) -> usize {
+        DistanceMatrix::n(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        DistanceMatrix::get(self, i, j)
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        out.copy_from_slice(self.row(i));
+    }
+
+    fn row_slice(&self, i: usize) -> Option<&[f64]> {
+        Some(self.row(i))
+    }
+
+    fn max_value(&self) -> f64 {
+        DistanceMatrix::max_value(self)
+    }
+
+    fn seed_row(&self) -> usize {
+        // row-slice scan: same order and tie-break as the trait default
+        let mut best_i = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..DistanceMatrix::n(self) {
+            for &v in self.row(i) {
+                if v > best_v {
+                    best_v = v;
+                    best_i = i;
+                }
+            }
+        }
+        best_i
+    }
+
+    fn distance_bytes(&self) -> usize {
+        self.resident_bytes()
+    }
+}
+
+impl DistanceStorage for CondensedMatrix {
+    fn n(&self) -> usize {
+        CondensedMatrix::n(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        CondensedMatrix::get(self, i, j)
+    }
+
+    fn kind(&self) -> StorageKind {
+        StorageKind::Condensed
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        CondensedMatrix::fill_row(self, i, out);
+    }
+
+    fn max_value(&self) -> f64 {
+        CondensedMatrix::max_value(self)
+    }
+
+    fn seed_row(&self) -> usize {
+        CondensedMatrix::seed_row(self)
+    }
+
+    fn distance_bytes(&self) -> usize {
+        self.resident_bytes()
+    }
+}
+
+/// The engine layer's output: dense or condensed distance storage, chosen
+/// at runtime by the `storage` config knob
+/// (see `DistanceEngine::build_storage`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistanceStore {
+    /// Full n×n storage.
+    Dense(DistanceMatrix),
+    /// Upper-triangle storage.
+    Condensed(CondensedMatrix),
+}
+
+impl DistanceStore {
+    /// Which layout this store holds.
+    pub fn kind(&self) -> StorageKind {
+        match self {
+            DistanceStore::Dense(_) => StorageKind::Dense,
+            DistanceStore::Condensed(_) => StorageKind::Condensed,
+        }
+    }
+
+    /// Matrix side.
+    pub fn n(&self) -> usize {
+        match self {
+            DistanceStore::Dense(m) => m.n(),
+            DistanceStore::Condensed(c) => c.n(),
+        }
+    }
+
+    /// Entry (i, j).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            DistanceStore::Dense(m) => m.get(i, j),
+            DistanceStore::Condensed(c) => c.get(i, j),
+        }
+    }
+
+    /// Largest entry.
+    pub fn max_value(&self) -> f64 {
+        match self {
+            DistanceStore::Dense(m) => m.max_value(),
+            DistanceStore::Condensed(c) => c.max_value(),
+        }
+    }
+
+    /// Resident distance-buffer bytes.
+    pub fn distance_bytes(&self) -> usize {
+        match self {
+            DistanceStore::Dense(m) => m.resident_bytes(),
+            DistanceStore::Condensed(c) => c.resident_bytes(),
+        }
+    }
+
+    /// Borrow the dense matrix if this store is dense.
+    pub fn as_dense(&self) -> Option<&DistanceMatrix> {
+        match self {
+            DistanceStore::Dense(m) => Some(m),
+            DistanceStore::Condensed(_) => None,
+        }
+    }
+
+    /// Borrow the condensed matrix if this store is condensed.
+    pub fn as_condensed(&self) -> Option<&CondensedMatrix> {
+        match self {
+            DistanceStore::Dense(_) => None,
+            DistanceStore::Condensed(c) => Some(c),
+        }
+    }
+
+    /// Materialize dense square storage (clone for dense, expand for
+    /// condensed) — interop escape hatch.
+    pub fn to_square(&self) -> DistanceMatrix {
+        match self {
+            DistanceStore::Dense(m) => m.clone(),
+            DistanceStore::Condensed(c) => c.to_square(),
+        }
+    }
+}
+
+impl DistanceStorage for DistanceStore {
+    fn n(&self) -> usize {
+        DistanceStore::n(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        DistanceStore::get(self, i, j)
+    }
+
+    fn kind(&self) -> StorageKind {
+        DistanceStore::kind(self)
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        match self {
+            DistanceStore::Dense(m) => DistanceStorage::fill_row(m, i, out),
+            DistanceStore::Condensed(c) => CondensedMatrix::fill_row(c, i, out),
+        }
+    }
+
+    fn row_slice(&self, i: usize) -> Option<&[f64]> {
+        match self {
+            DistanceStore::Dense(m) => Some(m.row(i)),
+            DistanceStore::Condensed(_) => None,
+        }
+    }
+
+    fn max_value(&self) -> f64 {
+        DistanceStore::max_value(self)
+    }
+
+    fn seed_row(&self) -> usize {
+        match self {
+            DistanceStore::Dense(m) => DistanceStorage::seed_row(m),
+            DistanceStore::Condensed(c) => CondensedMatrix::seed_row(c),
+        }
+    }
+
+    fn distance_bytes(&self) -> usize {
+        DistanceStore::distance_bytes(self)
+    }
+}
+
+impl From<DistanceMatrix> for DistanceStore {
+    fn from(m: DistanceMatrix) -> Self {
+        DistanceStore::Dense(m)
+    }
+}
+
+impl From<CondensedMatrix> for DistanceStore {
+    fn from(c: CondensedMatrix) -> Self {
+        DistanceStore::Condensed(c)
+    }
+}
+
+/// A zero-copy view of distance storage under a permutation:
+/// `view.get(a, b) == storage.get(order[a], order[b])`.
+///
+/// This is the VAT image without the second n×n copy: `VatResult::view`
+/// hands it to the renderers and the block detector directly. The view
+/// itself implements [`DistanceStorage`], so everything downstream of the
+/// reorder is agnostic to whether it reads an owned matrix or a view.
+#[derive(Debug, Clone, Copy)]
+pub struct PermutedView<'a, S> {
+    storage: &'a S,
+    order: &'a [usize],
+}
+
+impl<'a, S: DistanceStorage> PermutedView<'a, S> {
+    /// Wrap `storage` under `order`. `order` must be a full permutation of
+    /// `0..storage.n()`: length and index range are validated here (an
+    /// out-of-range index must not reach condensed index arithmetic, which
+    /// could silently alias a wrong entry instead of panicking), mirroring
+    /// `DistanceMatrix::reorder`'s up-front validation.
+    pub fn new(storage: &'a S, order: &'a [usize]) -> PermutedView<'a, S> {
+        let n = storage.n();
+        assert_eq!(
+            order.len(),
+            n,
+            "permutation length must equal the storage side"
+        );
+        if let Some(&bad) = order.iter().find(|&&i| i >= n) {
+            panic!("permutation contains {bad} >= n {n}");
+        }
+        PermutedView { storage, order }
+    }
+
+    /// The permutation this view applies.
+    pub fn order(&self) -> &[usize] {
+        self.order
+    }
+
+    /// The backing storage.
+    pub fn backing(&self) -> &S {
+        self.storage
+    }
+
+    /// Materialize the dense reordered matrix — the explicit escape hatch
+    /// for callers that genuinely need `R*` as owned square storage
+    /// (allocates n² f64; everything in-crate renders from the view).
+    pub fn materialize(&self) -> DistanceMatrix {
+        let n = self.order.len();
+        let mut m = DistanceMatrix::zeros(n);
+        for (a, &ia) in self.order.iter().enumerate() {
+            for (b, &ib) in self.order.iter().enumerate() {
+                m.set(a, b, self.storage.get(ia, ib));
+            }
+        }
+        m
+    }
+}
+
+impl<'a, S: DistanceStorage> DistanceStorage for PermutedView<'a, S> {
+    fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        self.storage.get(self.order[i], self.order[j])
+    }
+
+    fn kind(&self) -> StorageKind {
+        self.storage.kind()
+    }
+
+    fn max_value(&self) -> f64 {
+        // a full permutation preserves the value set exactly
+        self.storage.max_value()
+    }
+
+    fn distance_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::Metric;
+
+    #[test]
+    fn storage_kind_parse_roundtrip() {
+        assert_eq!(StorageKind::parse("dense").unwrap(), StorageKind::Dense);
+        assert_eq!(
+            StorageKind::parse("Condensed").unwrap(),
+            StorageKind::Condensed
+        );
+        assert!(StorageKind::parse("sparse").is_err());
+        assert_eq!(StorageKind::Condensed.as_str(), "condensed");
+        assert_eq!(StorageKind::default(), StorageKind::Dense);
+    }
+
+    #[test]
+    fn dense_and_condensed_storage_agree_elementwise() {
+        let ds = blobs(40, 2, 2, 0.5, 900);
+        let dense = DistanceMatrix::build_naive(&ds.points, Metric::Euclidean);
+        let cond = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let store_d = DistanceStore::from(dense.clone());
+        let store_c = DistanceStore::from(cond);
+        assert_eq!(store_d.kind(), StorageKind::Dense);
+        assert_eq!(store_c.kind(), StorageKind::Condensed);
+        assert_eq!(store_d.n(), store_c.n());
+        for i in 0..40 {
+            for j in 0..40 {
+                // naive dense and direct condensed share metric.eval per
+                // pair, so the entries are bitwise identical
+                assert_eq!(store_d.get(i, j), store_c.get(i, j), "({i},{j})");
+            }
+        }
+        assert_eq!(store_d.max_value(), store_c.max_value());
+        assert_eq!(
+            DistanceStorage::seed_row(&store_d),
+            DistanceStorage::seed_row(&store_c)
+        );
+        assert!(store_c.distance_bytes() * 2 < store_d.distance_bytes() + 40 * 8);
+    }
+
+    #[test]
+    fn fill_row_matches_get_on_both_layouts() {
+        let ds = blobs(23, 3, 2, 0.5, 901);
+        let dense = DistanceMatrix::build_naive(&ds.points, Metric::Manhattan);
+        let cond = CondensedMatrix::build(&ds.points, Metric::Manhattan);
+        let mut buf_d = vec![0.0; 23];
+        let mut buf_c = vec![0.0; 23];
+        for i in 0..23 {
+            DistanceStorage::fill_row(&dense, i, &mut buf_d);
+            DistanceStorage::fill_row(&cond, i, &mut buf_c);
+            for j in 0..23 {
+                assert_eq!(buf_d[j], dense.get(i, j));
+                assert_eq!(buf_c[j], cond.get(i, j));
+                assert_eq!(buf_d[j], buf_c[j], "row {i} col {j}");
+            }
+        }
+        assert!(DistanceStorage::row_slice(&dense, 3).is_some());
+        assert!(DistanceStorage::row_slice(&cond, 3).is_none());
+    }
+
+    #[test]
+    fn permuted_view_reads_through_the_permutation() {
+        let ds = blobs(15, 2, 2, 0.4, 902);
+        let dense = DistanceMatrix::build_naive(&ds.points, Metric::Euclidean);
+        let order: Vec<usize> = (0..15).rev().collect();
+        let view = PermutedView::new(&dense, &order);
+        assert_eq!(DistanceStorage::n(&view), 15);
+        assert_eq!(view.distance_bytes(), 0);
+        for a in 0..15 {
+            for b in 0..15 {
+                assert_eq!(view.get(a, b), dense.get(order[a], order[b]));
+            }
+        }
+        let mat = view.materialize();
+        let gathered = dense.reorder(&order).unwrap();
+        assert_eq!(mat, gathered);
+        assert_eq!(view.max_value(), dense.max_value());
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation length")]
+    fn permuted_view_rejects_wrong_length() {
+        let m = DistanceMatrix::zeros(4);
+        let order = vec![0usize, 1];
+        let _ = PermutedView::new(&m, &order);
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation contains 4")]
+    fn permuted_view_rejects_out_of_range_index() {
+        // condensed index arithmetic would silently alias for i >= n, so
+        // the constructor must refuse up front
+        let ds = blobs(4, 2, 1, 0.5, 904);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let order = vec![0usize, 1, 2, 4];
+        let _ = PermutedView::new(&c, &order);
+    }
+
+    #[test]
+    fn store_to_square_roundtrips() {
+        let ds = blobs(12, 2, 2, 0.4, 903);
+        let cond = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let store = DistanceStore::from(cond.clone());
+        let sq = store.to_square();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(sq.get(i, j), cond.get(i, j));
+            }
+        }
+        assert!(store.as_condensed().is_some());
+        assert!(store.as_dense().is_none());
+    }
+}

@@ -17,26 +17,35 @@
 //! ## Quickstart
 //!
 //! Every distance backend implements the object-safe
-//! [`dissimilarity::engine::DistanceEngine`] trait, so the pipeline below
-//! runs unchanged on the naive, blocked, parallel, condensed, or XLA-tier
-//! engines:
+//! [`dissimilarity::engine::DistanceEngine`] trait, and every stage
+//! downstream of the distance build is generic over the
+//! [`dissimilarity::DistanceStorage`] layout (dense n×n or condensed
+//! n(n−1)/2), so the pipeline below runs unchanged on any engine × storage
+//! combination — with bit-identical output:
 //!
 //! ```
 //! use fast_vat::data::generators::blobs;
 //! use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine};
-//! use fast_vat::dissimilarity::Metric;
+//! use fast_vat::dissimilarity::{Metric, StorageKind};
 //! use fast_vat::vat::vat;
+//! use fast_vat::viz::render;
 //!
 //! let ds = blobs(120, 2, 3, 0.4, 42);
 //! let engine = BlockedEngine; // or ParallelEngine, CondensedEngine, ...
-//! let d = engine.build(&ds.points, Metric::Euclidean).unwrap();
+//! // condensed storage: ~half the resident distance bytes
+//! let d = engine
+//!     .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
+//!     .unwrap();
 //! let result = vat(&d);
 //! assert_eq!(result.order.len(), 120);
+//! // the VAT image renders from a zero-copy view — no reordered n×n copy
+//! let image = render(&result.view(&d));
+//! assert_eq!(image.width, 120);
 //! ```
 //!
 //! See `rust/examples/` for the paper-evaluation driver and the service
 //! scenarios, and the top-level `README.md` for build and feature-flag
-//! instructions.
+//! instructions (including the `storage = "dense" | "condensed"` knob).
 
 pub mod bench_util;
 pub mod cluster;

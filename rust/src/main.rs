@@ -21,12 +21,13 @@ use fast_vat::data::generators;
 use fast_vat::data::scale::Scaler;
 use fast_vat::data::Dataset;
 use fast_vat::dissimilarity::engine::DistanceEngine;
+use fast_vat::dissimilarity::StorageKind;
 use fast_vat::error::{Error, Result};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::{ivat::ivat, vat};
-use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm, render};
+use fast_vat::vat::{ivat::ivat_with, vat};
+use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm, render, GrayImage};
 
 fn usage() -> ! {
     eprintln!(
@@ -35,13 +36,20 @@ fn usage() -> ! {
 USAGE:
   fast-vat vat      [--input data.csv | --dataset NAME]
                     [--engine naive|blocked|parallel|condensed|xla|xla-mm]
-                    [--ivat] [--out image.pgm] [--ascii N] [--artifacts DIR]
+                    [--storage dense|condensed] [--ivat]
+                    [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
   fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
                     [--k N | --eps F] [--min-pts N]
   fast-vat pipeline [--input data.csv | --dataset NAME] [--engine ...]
+                    [--storage dense|condensed]
   fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
+                    [--storage dense|condensed]
   fast-vat info     [--artifacts DIR]
+
+STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
+  dense bytes) and renders through a zero-copy permuted view; output is
+  bit-identical to dense.
 
 DATASETS: iris, blobs, moons, circles, gmm, spotify, mall, uniform
   (generator datasets accept --n and --seed)
@@ -102,6 +110,10 @@ fn load_dataset(flags: &HashMap<String, String>) -> Result<Dataset> {
     })
 }
 
+fn storage_kind(flags: &HashMap<String, String>) -> Result<StorageKind> {
+    StorageKind::parse(flags.get("storage").map(String::as_str).unwrap_or("dense"))
+}
+
 fn cmd_vat(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &["ivat"])?;
     let ds = load_dataset(&flags)?;
@@ -113,32 +125,42 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         flags.get("engine").map(String::as_str).unwrap_or("blocked"),
         &artifacts,
     )?;
+    let storage = storage_kind(&flags)?;
     let z = Scaler::standardized(&ds.points);
     let t0 = std::time::Instant::now();
-    let d = engine.pdist(&z)?;
+    let d = engine.build_storage(&z, fast_vat::dissimilarity::Metric::Euclidean, storage)?;
     let t_dist = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let v = vat(&d);
     let t_vat = t1.elapsed().as_secs_f64();
 
-    let use_ivat = flags.contains_key("ivat");
-    let display = if use_ivat {
-        ivat(&v).transformed
-    } else {
-        v.reordered.clone()
-    };
+    // raw VAT renders through the zero-copy view; iVAT renders its own
+    // transform (emitted in the same storage layout)
     let det = BlockDetector::default();
-    let blocks = det.detect(&display);
+    let (img, block_count, insight): (GrayImage, usize, String) =
+        if flags.contains_key("ivat") {
+            let iv = ivat_with(&v, storage);
+            let blocks = det.detect(&iv.transformed);
+            let insight = det.insight_with(&v, &blocks, &d);
+            (render(&iv.transformed), blocks.len(), insight)
+        } else {
+            let view = v.view(&d);
+            (
+                render(&view),
+                det.detect(&view).len(),
+                det.insight(&v, &d),
+            )
+        };
     println!(
-        "{}: n={} d={} engine={} distance={t_dist:.4}s reorder={t_vat:.4}s",
+        "{}: n={} d={} engine={} storage={} distance={t_dist:.4}s reorder={t_vat:.4}s",
         ds.name,
         ds.points.n(),
         ds.points.d(),
-        engine.name()
+        engine.name(),
+        storage.as_str()
     );
-    println!("insight: {} | blocks: {}", det.insight(&v), blocks.len());
+    println!("insight: {insight} | blocks: {block_count}");
 
-    let img = render(&display);
     if let Some(out) = flags.get("out") {
         write_pgm(&img, out)?;
         println!("wrote {out}");
@@ -235,7 +257,11 @@ fn cmd_pipeline(args: &[String]) -> Result<()> {
         flags.get("engine").map(String::as_str).unwrap_or("blocked"),
         &artifacts,
     )?;
-    let report = auto_cluster(&engine, &ds.points, &PipelineConfig::default())?;
+    let config = PipelineConfig {
+        storage: storage_kind(&flags)?,
+        ..Default::default()
+    };
+    let report = auto_cluster(&engine, &ds.points, &config)?;
     println!("{}: {}", ds.name, report.insight);
     println!(
         "hopkins={:.4} k_estimate={} choice={:?}",
@@ -260,17 +286,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .get("artifacts")
             .cloned()
             .unwrap_or_else(|| "artifacts".into()),
+        storage: storage_kind(&flags)?,
     };
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
     let service = VatService::start(&cfg, engine);
     println!(
-        "service up: {} workers, queue {}, engine {}",
+        "service up: {} workers, queue {}, engine {}, storage {}",
         cfg.workers,
         cfg.queue_depth,
-        service.engine_name()
+        service.engine_name(),
+        cfg.storage.as_str()
     );
     let t0 = std::time::Instant::now();
+    let opts = JobOptions {
+        storage: cfg.storage,
+        ..Default::default()
+    };
     let mut tickets = Vec::new();
     for j in 0..jobs {
         let ds = match j % 4 {
@@ -279,7 +311,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             2 => generators::gmm(300, 2, 3, j as u64),
             _ => generators::spotify_like(300, j as u64),
         };
-        let (_, t) = service.submit(ds.points, JobOptions::default())?;
+        let (_, t) = service.submit(ds.points, opts.clone())?;
         tickets.push(t);
     }
     let mut done = 0;

@@ -5,8 +5,6 @@
 
 use std::collections::HashMap;
 
-use crate::dissimilarity::DistanceMatrix;
-
 /// Contingency table between two labelings (noise -1 expanded to unique
 /// singleton ids so partitions stay partitions).
 fn contingency(a: &[isize], b: &[isize]) -> (Vec<Vec<usize>>, Vec<usize>, Vec<usize>) {
@@ -137,9 +135,10 @@ pub fn purity(truth: &[isize], pred: &[isize]) -> f64 {
     correct as f64 / n as f64
 }
 
-/// Mean silhouette coefficient over a precomputed distance matrix. Noise
-/// points (label < 0) are excluded; clusters of size 1 score 0.
-pub fn silhouette(d: &DistanceMatrix, labels: &[isize]) -> f64 {
+/// Mean silhouette coefficient over precomputed distance storage (dense,
+/// condensed, or a view — any [`crate::dissimilarity::DistanceStorage`]).
+/// Noise points (label < 0) are excluded; clusters of size 1 score 0.
+pub fn silhouette<S: crate::dissimilarity::DistanceStorage>(d: &S, labels: &[isize]) -> f64 {
     let n = d.n();
     assert_eq!(labels.len(), n);
     let clusters: Vec<isize> = {
@@ -316,7 +315,7 @@ fn distinct_nonnoise(labels: &[isize]) -> Vec<isize> {
 mod tests {
     use super::*;
     use crate::data::generators::blobs;
-    use crate::dissimilarity::Metric;
+    use crate::dissimilarity::{DistanceMatrix, Metric};
     use crate::prng::Pcg32;
 
     #[test]

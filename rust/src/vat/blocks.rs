@@ -13,9 +13,14 @@
 //! On iVAT-transformed matrices the profile is piecewise-constant and the
 //! detector is near-exact; on raw VAT it is a good heuristic (tested on the
 //! paper's workloads).
+//!
+//! The detector is generic over [`DistanceStorage`]: it reads the VAT image
+//! through whatever backs it — a dense matrix, condensed storage, or the
+//! zero-copy [`crate::dissimilarity::PermutedView`] a [`VatResult`] hands
+//! out — and its output is identical across storages because the reads are.
 
 use super::VatResult;
-use crate::dissimilarity::DistanceMatrix;
+use crate::dissimilarity::DistanceStorage;
 
 /// Tunables for [`BlockDetector::detect`].
 #[derive(Debug, Clone)]
@@ -68,15 +73,16 @@ impl Block {
 }
 
 /// The consecutive-placement profile `p[t] = R*[t][t-1]`, `t in [1, n)`.
-pub fn diagonal_profile(reordered: &DistanceMatrix) -> Vec<f64> {
+pub fn diagonal_profile<S: DistanceStorage>(reordered: &S) -> Vec<f64> {
     (1..reordered.n())
         .map(|t| reordered.get(t, t - 1))
         .collect()
 }
 
 impl BlockDetector {
-    /// Detect dark diagonal blocks in a VAT/iVAT reordered matrix.
-    pub fn detect(&self, reordered: &DistanceMatrix) -> Vec<Block> {
+    /// Detect dark diagonal blocks in a VAT/iVAT reordered matrix (any
+    /// storage, including the zero-copy view from [`VatResult::view`]).
+    pub fn detect<S: DistanceStorage>(&self, reordered: &S) -> Vec<Block> {
         let n = reordered.n();
         if n == 0 {
             return Vec::new();
@@ -127,7 +133,11 @@ impl BlockDetector {
     /// Merge adjacent blocks that are not actually separated: the mean
     /// dissimilarity *between* them must exceed `merge_ratio ×` the larger
     /// mean *within* them, else they are one cluster (or an outlier tail).
-    fn coherence_merge(&self, m: &DistanceMatrix, mut blocks: Vec<Block>) -> Vec<Block> {
+    fn coherence_merge<S: DistanceStorage>(
+        &self,
+        m: &S,
+        mut blocks: Vec<Block>,
+    ) -> Vec<Block> {
         let within = |b: &Block| -> f64 {
             let w = b.len();
             if w < 2 {
@@ -175,20 +185,42 @@ impl BlockDetector {
     }
 
     /// Estimated cluster count.
-    pub fn estimate_k(&self, reordered: &DistanceMatrix) -> usize {
+    pub fn estimate_k<S: DistanceStorage>(&self, reordered: &S) -> usize {
         self.detect(reordered).len()
     }
 
-    /// A qualitative insight string in the paper's Table-3 vocabulary.
+    /// A qualitative insight string in the paper's Table-3 vocabulary,
+    /// computed from a VAT result and the storage it was computed over.
     ///
     /// Block counting runs on the iVAT transform (sharp boundaries even for
-    /// chain-shaped clusters — what a human reads off the image), while the
-    /// strength adjective comes from the raw VAT band darkness (iVAT images
-    /// are uniformly dark and would overstate strength).
-    pub fn insight(&self, v: &VatResult) -> String {
-        let iv = crate::vat::ivat::ivat(v);
-        let k = self.detect(&iv.transformed).len();
-        let dark = crate::viz::diagonal_darkness(&v.reordered, 8);
+    /// chain-shaped clusters — what a human reads off the image), emitted
+    /// in the storage's own layout so a condensed deployment never spikes
+    /// to dense; the strength adjective comes from the raw VAT band
+    /// darkness read through the zero-copy view (iVAT images are uniformly
+    /// dark and would overstate strength). Callers that already ran the
+    /// transform and its block detection should pass the blocks to
+    /// [`BlockDetector::insight_with`] instead of paying the O(n²) DFS and
+    /// detection a second time.
+    pub fn insight<S: DistanceStorage>(&self, v: &VatResult, storage: &S) -> String {
+        let iv = crate::vat::ivat::ivat_with(v, storage.kind());
+        let ivat_blocks = self.detect(&iv.transformed);
+        self.insight_with(v, &ivat_blocks, storage)
+    }
+
+    /// [`BlockDetector::insight`] from precomputed iVAT blocks —
+    /// `ivat_blocks` must be this detector's [`BlockDetector::detect`]
+    /// output over the iVAT transform (NOT raw-VAT blocks; raw profiles
+    /// under-count chain-shaped clusters). Avoids recomputing the O(n²)
+    /// transform and detection on call paths (service jobs, the pipeline,
+    /// the CLI) that already hold them.
+    pub fn insight_with<S: DistanceStorage>(
+        &self,
+        v: &VatResult,
+        ivat_blocks: &[Block],
+        storage: &S,
+    ) -> String {
+        let k = ivat_blocks.len();
+        let dark = crate::viz::diagonal_darkness(&v.view(storage), 8);
         match (k, dark) {
             (1, _) => "No clear structure".to_string(),
             (k, d) if d > 0.85 => format!("Clear clusters (k~{k})"),
@@ -202,6 +234,7 @@ impl BlockDetector {
 mod tests {
     use super::*;
     use crate::data::generators::{blobs, separated_blobs, uniform};
+    use crate::dissimilarity::condensed::CondensedMatrix;
     use crate::dissimilarity::{DistanceMatrix, Metric};
     use crate::vat::{ivat::ivat, vat};
 
@@ -212,7 +245,7 @@ mod tests {
         if use_ivat {
             det.detect(&ivat(&v).transformed)
         } else {
-            det.detect(&v.reordered)
+            det.detect(&v.view(&d))
         }
     }
 
@@ -245,6 +278,18 @@ mod tests {
     }
 
     #[test]
+    fn detector_is_storage_independent() {
+        let ds = blobs(140, 2, 3, 0.3, 35);
+        let dense = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let cond = CondensedMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let vd = vat(&dense);
+        let vc = vat(&cond);
+        let det = BlockDetector::default();
+        assert_eq!(det.detect(&vd.view(&dense)), det.detect(&vc.view(&cond)));
+        assert_eq!(det.insight(&vd, &dense), det.insight(&vc, &cond));
+    }
+
+    #[test]
     fn uniform_noise_yields_few_spurious_blocks() {
         let ds = uniform(200, 2, 33);
         let blocks = detect_on(&ds, false);
@@ -265,6 +310,7 @@ mod tests {
         let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
         let v = vat(&d);
         let det = BlockDetector::default();
-        assert_eq!(det.estimate_k(&v.reordered), det.detect(&v.reordered).len());
+        let view = v.view(&d);
+        assert_eq!(det.estimate_k(&view), det.detect(&view).len());
     }
 }

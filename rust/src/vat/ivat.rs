@@ -6,36 +6,38 @@
 //! the paper's weak-structure cases (moons, circles — §4.4.4) sharpen
 //! dramatically because chain-connected shapes have small path maxima.
 //!
-//! We use the O(n²) recursion of Havens & Bezdek over the VAT-ordered
-//! matrix: when row r joins the ordering, its MST parent among the first r
-//! display positions is `j = argmin_{c<r} R*[r][c]`, and for every earlier
-//! point `c`:  D'[r][c] = max(R*[r][j], D'[j][c]).
+//! We use the MST-only formulation: the transform depends on nothing but
+//! the VAT result's spanning tree, so it needs **no access to the distance
+//! storage at all** — a path-max DFS over the MST from every display row
+//! fills the transformed matrix in pure row-major writes (perf iteration 3,
+//! EXPERIMENTS.md §Perf: ~half the memory traffic of the textbook mirrored
+//! recursion, no scatter). [`ivat_with`] emits the transform in either
+//! storage layout; the condensed output keeps the whole iVAT pipeline at
+//! roughly half the dense resident footprint.
 
 use super::VatResult;
-use crate::dissimilarity::DistanceMatrix;
+use crate::dissimilarity::condensed::CondensedMatrix;
+use crate::dissimilarity::{DistanceMatrix, DistanceStore, StorageKind};
 
 /// Result of an iVAT transform.
 #[derive(Debug, Clone)]
 pub struct IvatResult {
     /// The VAT permutation the transform was computed over.
     pub order: Vec<usize>,
-    /// Minimax-path-distance matrix in display (VAT) order.
-    pub transformed: DistanceMatrix,
+    /// Minimax-path-distance matrix in display (VAT) order, in the storage
+    /// layout requested from [`ivat_with`] (dense for [`ivat`]).
+    pub transformed: DistanceStore,
 }
 
-/// Apply the iVAT transform to a VAT result. O(n²).
-///
-/// Perf iteration 3 (EXPERIMENTS.md §Perf): the textbook recursion writes
-/// each value twice — once row-major, once into the mirrored column, and
-/// the column writes touch n distinct cache lines per row. This version
-/// instead runs a path-max DFS over the MST from every display row: pure
-/// row-major writes, O(n) stack work per row, same O(n²) total but ~half
-/// the memory traffic and no scatter.
-pub fn ivat(v: &VatResult) -> IvatResult {
-    let n = v.reordered.n();
-    // MST adjacency in display coordinates (n-1 edges -> CSR-ish layout)
+/// MST adjacency in display coordinates (CSR-ish layout over n-1 edges).
+struct MstAdjacency {
+    start: Vec<usize>,
+    adj: Vec<(u32, f64)>,
+}
+
+fn mst_adjacency(n: usize, mst: &[(usize, usize, f64)]) -> MstAdjacency {
     let mut degree = vec![0usize; n];
-    for &(p, c, _) in &v.mst {
+    for &(p, c, _) in mst {
         degree[p] += 1;
         degree[c] += 1;
     }
@@ -43,42 +45,88 @@ pub fn ivat(v: &VatResult) -> IvatResult {
     for i in 0..n {
         start[i + 1] = start[i] + degree[i];
     }
-    let mut adj: Vec<(u32, f64)> = vec![(0, 0.0); v.mst.len() * 2];
+    let mut adj: Vec<(u32, f64)> = vec![(0, 0.0); mst.len() * 2];
     let mut fill = start.clone();
-    for &(p, c, w) in &v.mst {
+    for &(p, c, w) in mst {
         adj[fill[p]] = (c as u32, w);
         fill[p] += 1;
         adj[fill[c]] = (p as u32, w);
         fill[c] += 1;
     }
+    MstAdjacency { start, adj }
+}
 
-    let mut out = DistanceMatrix::zeros(n);
-    let mut stack: Vec<u32> = Vec::with_capacity(n);
-    // generation-stamped visited set: one allocation for the whole sweep
-    let mut seen: Vec<u32> = vec![u32::MAX; n];
-    for row in 0..n {
-        let buf = out.flat_mut();
-        let row_buf = &mut buf[row * n..(row + 1) * n];
-        // DFS from `row`: path-max to every other node
-        row_buf[row] = 0.0;
-        stack.clear();
-        stack.push(row as u32);
-        let epoch = row as u32;
-        seen[row] = epoch;
-        while let Some(node) = stack.pop() {
-            let base = row_buf[node as usize];
-            for &(next, w) in &adj[start[node as usize]..start[node as usize + 1]] {
-                if seen[next as usize] != epoch {
-                    seen[next as usize] = epoch;
-                    row_buf[next as usize] = base.max(w);
-                    stack.push(next);
-                }
+/// Path-max DFS from `row` over the MST: fills `row_buf` (length n) with
+/// the minimax path distance from `row` to every node. One generation
+/// stamp per row keeps `seen` allocation-free across the sweep.
+fn path_max_row(
+    row: usize,
+    a: &MstAdjacency,
+    stack: &mut Vec<u32>,
+    seen: &mut [u32],
+    row_buf: &mut [f64],
+) {
+    row_buf[row] = 0.0;
+    stack.clear();
+    stack.push(row as u32);
+    let epoch = row as u32;
+    seen[row] = epoch;
+    while let Some(node) = stack.pop() {
+        let base = row_buf[node as usize];
+        for &(next, w) in &a.adj[a.start[node as usize]..a.start[node as usize + 1]] {
+            if seen[next as usize] != epoch {
+                seen[next as usize] = epoch;
+                row_buf[next as usize] = base.max(w);
+                stack.push(next);
             }
         }
     }
+}
+
+/// Apply the iVAT transform, emitting dense storage (compatibility
+/// wrapper over [`ivat_with`]).
+pub fn ivat(v: &VatResult) -> IvatResult {
+    ivat_with(v, StorageKind::Dense)
+}
+
+/// Apply the iVAT transform to a VAT result, emitting the requested
+/// storage layout. O(n²) either way; the per-entry values are identical
+/// across layouts (the same DFS arithmetic fills both — max is exact, so
+/// the transform is bitwise symmetric and layout-independent).
+pub fn ivat_with(v: &VatResult, kind: StorageKind) -> IvatResult {
+    let n = v.order.len();
+    let a = mst_adjacency(n, &v.mst);
+    let mut stack: Vec<u32> = Vec::with_capacity(n);
+    // generation-stamped visited set: one allocation for the whole sweep
+    let mut seen: Vec<u32> = vec![u32::MAX; n];
+
+    let transformed = match kind {
+        StorageKind::Dense => {
+            let mut out = DistanceMatrix::zeros(n);
+            for row in 0..n {
+                let buf = out.flat_mut();
+                let row_buf = &mut buf[row * n..(row + 1) * n];
+                path_max_row(row, &a, &mut stack, &mut seen, row_buf);
+            }
+            DistanceStore::Dense(out)
+        }
+        StorageKind::Condensed => {
+            // rows are filled in ascending order, so the j > row tail of
+            // each row lands contiguously in scipy pdist layout
+            let mut data = Vec::with_capacity(n * n.saturating_sub(1) / 2);
+            let mut row_buf = vec![0.0f64; n];
+            for row in 0..n {
+                path_max_row(row, &a, &mut stack, &mut seen, &mut row_buf);
+                data.extend_from_slice(&row_buf[row + 1..]);
+            }
+            DistanceStore::Condensed(
+                CondensedMatrix::from_flat(data, n).expect("triangle length by construction"),
+            )
+        }
+    };
     IvatResult {
         order: v.order.clone(),
-        transformed: out,
+        transformed,
     }
 }
 
@@ -105,23 +153,21 @@ pub fn minimax_bruteforce(d: &DistanceMatrix) -> DistanceMatrix {
 mod tests {
     use super::*;
     use crate::data::generators::{blobs, circles, moons};
-    use crate::dissimilarity::Metric;
+    use crate::dissimilarity::{DistanceStorage, Metric};
     use crate::vat::vat;
 
-    fn run(ds: &crate::data::Dataset) -> (VatResult, IvatResult) {
+    fn run(ds: &crate::data::Dataset) -> (DistanceMatrix, VatResult, IvatResult) {
         let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
         let v = vat(&d);
         let iv = ivat(&v);
-        (v, iv)
+        (d, v, iv)
     }
 
     #[test]
     fn matches_bruteforce_minimax() {
         let ds = blobs(40, 2, 3, 0.6, 8);
-        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
-        let v = vat(&d);
-        let iv = ivat(&v);
-        let oracle = minimax_bruteforce(&v.reordered);
+        let (d, v, iv) = run(&ds);
+        let oracle = minimax_bruteforce(&v.materialize(&d));
         for i in 0..40 {
             for j in 0..40 {
                 if i == j {
@@ -138,12 +184,34 @@ mod tests {
     }
 
     #[test]
+    fn dense_and_condensed_transforms_are_bitwise_equal() {
+        let ds = moons(90, 0.06, 14);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let v = vat(&d);
+        let dense = ivat_with(&v, StorageKind::Dense);
+        let cond = ivat_with(&v, StorageKind::Condensed);
+        assert_eq!(dense.transformed.kind(), StorageKind::Dense);
+        assert_eq!(cond.transformed.kind(), StorageKind::Condensed);
+        for i in 0..90 {
+            for j in 0..90 {
+                assert_eq!(
+                    dense.transformed.get(i, j),
+                    cond.transformed.get(i, j),
+                    "({i},{j})"
+                );
+            }
+        }
+        assert!(cond.transformed.distance_bytes() * 2 < dense.transformed.distance_bytes() + 90 * 8);
+    }
+
+    #[test]
     fn ivat_never_exceeds_vat_distances() {
         let ds = moons(80, 0.06, 9);
-        let (v, iv) = run(&ds);
+        let (d, v, iv) = run(&ds);
+        let view = v.view(&d);
         for i in 0..80 {
             for j in 0..80 {
-                assert!(iv.transformed.get(i, j) <= v.reordered.get(i, j) + 1e-12);
+                assert!(iv.transformed.get(i, j) <= view.get(i, j) + 1e-12);
             }
         }
     }
@@ -151,10 +219,12 @@ mod tests {
     #[test]
     fn ivat_is_symmetric_zero_diagonal() {
         let ds = blobs(50, 2, 2, 0.5, 10);
-        let (_, iv) = run(&ds);
-        assert!(iv.transformed.asymmetry() < 1e-12);
+        let (_, _, iv) = run(&ds);
         for i in 0..50 {
             assert_eq!(iv.transformed.get(i, i), 0.0);
+            for j in 0..50 {
+                assert_eq!(iv.transformed.get(i, j), iv.transformed.get(j, i));
+            }
         }
     }
 
@@ -162,7 +232,7 @@ mod tests {
     fn ivat_is_ultrametric() {
         // minimax path distance satisfies the strong triangle inequality
         let ds = blobs(30, 2, 3, 0.7, 11);
-        let (_, iv) = run(&ds);
+        let (_, _, iv) = run(&ds);
         let t = &iv.transformed;
         for i in 0..30 {
             for j in 0..30 {
@@ -178,8 +248,8 @@ mod tests {
         // the iVAT motivation: chain-shaped clusters gain block contrast
         // (band vs whole-image, normalization-free — see viz::block_contrast)
         for ds in [moons(150, 0.05, 12), circles(150, 0.04, 0.45, 13)] {
-            let (v, iv) = run(&ds);
-            let before = crate::viz::block_contrast(&v.reordered, 20);
+            let (d, v, iv) = run(&ds);
+            let before = crate::viz::block_contrast(&v.view(&d), 20);
             let after = crate::viz::block_contrast(&iv.transformed, 20);
             assert!(
                 after > before,

@@ -5,7 +5,7 @@
 //! output *identical* to the reference algorithm. Two implementations of the
 //! ordering step live here:
 //!
-//! * [`prim::vat_order`] — the optimized O(n²) Prim sweep ("numba/cython
+//! * [`prim::vat_order_on`] — the optimized O(n²) Prim sweep ("numba/cython
 //!   tier"): flat arrays, branchless inner argmin, index-vector reuse;
 //! * [`prim::vat_order_naive`] — structured exactly like the pure-Python
 //!   baseline (`python/baseline/pure_vat.py`): per-step full scans over a
@@ -13,6 +13,21 @@
 //!
 //! Both produce the **same permutation** for any input (tie-breaking is
 //! pinned to the lowest index) — property-tested in `tests/`.
+//!
+//! ## Memory model (the storage spine)
+//!
+//! Both sweeps are generic over
+//! [`DistanceStorage`](crate::dissimilarity::DistanceStorage), so VAT runs
+//! on the dense n×n matrix or on condensed n(n−1)/2 storage unchanged. A
+//! [`VatResult`] carries only the permutation and the MST — it does **not**
+//! materialize the reordered matrix. The VAT image is read through the
+//! zero-copy [`VatResult::view`] (a
+//! [`PermutedView`](crate::dissimilarity::PermutedView) the renderers and
+//! the block detector consume directly); [`VatResult::materialize`] is the
+//! explicit escape hatch for callers that genuinely need the dense
+//! reordered matrix. Under condensed storage the resident distance bytes of
+//! a full VAT job drop to ~25% of the old dense-plus-reordered footprint
+//! (locked by the accounting test in `tests/storage_parity.rs`).
 
 pub mod blocks;
 pub mod dendrogram;
@@ -20,51 +35,66 @@ pub mod ivat;
 pub mod prim;
 pub mod svat;
 
-use crate::dissimilarity::DistanceMatrix;
+use crate::dissimilarity::{DistanceMatrix, DistanceStorage, PermutedView};
 
-/// Result of a VAT run.
+/// Result of a VAT run: the permutation and the MST, O(n) resident.
+///
+/// The reordered matrix `R*` is not stored — read it zero-copy through
+/// [`VatResult::view`] against the storage the run was computed over, or
+/// materialize it explicitly with [`VatResult::materialize`].
 #[derive(Debug, Clone)]
 pub struct VatResult {
     /// The VAT permutation: `order[a]` = original index of display row `a`.
     pub order: Vec<usize>,
-    /// `R*`: the input matrix reordered by `order` (the VAT image).
-    pub reordered: DistanceMatrix,
     /// MST edges in insertion order: `(parent_display_pos, child_display_pos,
     /// weight)` in *display* coordinates (positions within `order`).
     /// `mst[t]` connects the point added at position `t + 1`.
     pub mst: Vec<(usize, usize, f64)>,
 }
 
-/// Run VAT with the optimized ordering. The input must be a symmetric
-/// dissimilarity matrix (zero diagonal); see [`DistanceMatrix`] builders.
-pub fn vat(d: &DistanceMatrix) -> VatResult {
-    let (order, mst) = prim::vat_order(d);
-    let reordered = d.reorder(&order).expect("order is a permutation");
-    VatResult {
-        order,
-        reordered,
-        mst,
+impl VatResult {
+    /// Number of points ordered.
+    pub fn n(&self) -> usize {
+        self.order.len()
     }
+
+    /// Zero-copy view of the VAT image `R*` over `storage` (the storage the
+    /// result was computed from, or any storage with identical entries):
+    /// `view.get(a, b) == storage.get(order[a], order[b])`.
+    pub fn view<'a, S: DistanceStorage>(&'a self, storage: &'a S) -> PermutedView<'a, S> {
+        PermutedView::new(storage, &self.order)
+    }
+
+    /// Materialize the dense reordered matrix (allocates n² f64) — the
+    /// escape hatch for interop; in-crate consumers render from
+    /// [`VatResult::view`] instead.
+    pub fn materialize<S: DistanceStorage>(&self, storage: &S) -> DistanceMatrix {
+        self.view(storage).materialize()
+    }
+}
+
+/// Run VAT with the optimized ordering over any distance storage (dense or
+/// condensed). The input must be a symmetric dissimilarity matrix (zero
+/// diagonal); see the [`crate::dissimilarity`] builders.
+pub fn vat<S: DistanceStorage>(d: &S) -> VatResult {
+    let (order, mst) = prim::vat_order_on(d);
+    VatResult { order, mst }
 }
 
 /// Run VAT with the baseline-shaped ordering (same output, slower — exists
 /// for Table-1 comparisons).
-pub fn vat_naive(d: &DistanceMatrix) -> VatResult {
+pub fn vat_naive<S: DistanceStorage>(d: &S) -> VatResult {
     let order = prim::vat_order_naive(d);
-    let reordered = d.reorder(&order).expect("order is a permutation");
     // reconstruct MST edges from the order for API parity
     let mst = prim::mst_from_order(d, &order);
-    VatResult {
-        order,
-        reordered,
-        mst,
-    }
+    VatResult { order, mst }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::generators::{blobs, moons, uniform};
+    use crate::dissimilarity::condensed::CondensedMatrix;
     use crate::dissimilarity::Metric;
     use crate::prng::Pcg32;
 
@@ -79,6 +109,7 @@ mod tests {
         let mut sorted = r.order.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..80).collect::<Vec<_>>());
+        assert_eq!(r.n(), 80);
     }
 
     #[test]
@@ -92,17 +123,43 @@ mod tests {
             let fast = vat(&d);
             let slow = vat_naive(&d);
             assert_eq!(fast.order, slow.order, "trial {trial} n {n}");
-            assert_eq!(fast.reordered, slow.reordered);
         }
     }
 
     #[test]
-    fn reordered_is_consistent_gather() {
+    fn view_is_consistent_gather() {
         let d = build(&moons(60, 0.05, 2));
         let r = vat(&d);
+        let view = r.view(&d);
         for a in 0..60 {
             for b in 0..60 {
-                assert_eq!(r.reordered.get(a, b), d.get(r.order[a], r.order[b]));
+                assert_eq!(view.get(a, b), d.get(r.order[a], r.order[b]));
+            }
+        }
+        // materialize() equals the element-wise view
+        let mat = r.materialize(&d);
+        for a in 0..60 {
+            for b in 0..60 {
+                assert_eq!(mat.get(a, b), view.get(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_and_condensed_storage_same_result() {
+        let ds = blobs(70, 2, 3, 0.4, 9);
+        let dense = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let cond = CondensedMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let vd = vat(&dense);
+        let vc = vat(&cond);
+        assert_eq!(vd.order, vc.order);
+        assert_eq!(vd.mst, vc.mst);
+        // the two views expose the identical image
+        let view_d = vd.view(&dense);
+        let view_c = vc.view(&cond);
+        for a in 0..70 {
+            for b in 0..70 {
+                assert_eq!(view_d.get(a, b), view_c.get(a, b));
             }
         }
     }
@@ -111,13 +168,14 @@ mod tests {
     fn mst_edges_form_spanning_tree() {
         let d = build(&blobs(50, 3, 2, 0.5, 3));
         let r = vat(&d);
+        let view = r.view(&d);
         assert_eq!(r.mst.len(), 49);
         // child t+1 connects to an earlier display position
         for (t, &(p, c, w)) in r.mst.iter().enumerate() {
             assert_eq!(c, t + 1);
             assert!(p <= t);
             assert!(w >= 0.0);
-            assert_eq!(r.reordered.get(p, c), w);
+            assert_eq!(view.get(p, c), w);
         }
     }
 
@@ -127,12 +185,13 @@ mod tests {
         // already-placed prefix
         let d = build(&blobs(40, 2, 3, 0.4, 4));
         let r = vat(&d);
+        let view = r.view(&d);
         for &(p, c, w) in &r.mst {
             let min_to_prefix = (0..c)
-                .map(|a| r.reordered.get(a, c))
+                .map(|a| view.get(a, c))
                 .fold(f64::INFINITY, f64::min);
             assert!((w - min_to_prefix).abs() < 1e-12);
-            assert_eq!(r.reordered.get(p, c), w);
+            assert_eq!(view.get(p, c), w);
         }
     }
 

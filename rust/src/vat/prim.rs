@@ -7,28 +7,18 @@
 //!   3. ties break toward the lower original index (pinned so that every
 //!      tier — pure Python, naive Rust, optimized Rust, XLA — produces the
 //!      identical permutation; the paper's "identical outputs" claim).
+//!
+//! Both sweeps are generic over [`DistanceStorage`], so they run unchanged
+//! on the dense n×n matrix or the condensed n(n−1)/2 triangle: the sweep
+//! only ever needs the seed argmax and one row at a time. Dense storage
+//! hands rows out as zero-copy slices; condensed storage fills a reused
+//! scratch row. The arithmetic and tie-breaking are identical either way,
+//! so the permutation is bit-for-bit storage-independent
+//! (`tests/storage_parity.rs`).
 
-use crate::dissimilarity::DistanceMatrix;
+use crate::dissimilarity::{DistanceMatrix, DistanceStorage};
 
-/// Seed row: row index of the first occurrence (row-major scan) of the
-/// global maximum — matches `np.unravel_index(np.argmax(R), R.shape)[0]`
-/// and the pure-Python baseline's nested loop.
-fn seed_row(d: &DistanceMatrix) -> usize {
-    let n = d.n();
-    let mut best_i = 0;
-    let mut best_v = f64::NEG_INFINITY;
-    for i in 0..n {
-        for &v in d.row(i) {
-            if v > best_v {
-                best_v = v;
-                best_i = i;
-            }
-        }
-    }
-    best_i
-}
-
-/// Optimized VAT ordering: O(n²) Prim sweep over flat rows.
+/// Optimized VAT ordering over any distance storage: O(n²) Prim sweep.
 ///
 /// Returns the permutation and the MST edges in *display* coordinates
 /// (`(parent_pos, child_pos, weight)`, child added at `parent… + 1`).
@@ -38,12 +28,12 @@ fn seed_row(d: &DistanceMatrix) -> usize {
 /// computed during the update of step t, so each step reads `dmin` exactly
 /// once (this halves memory traffic versus a scan-then-update pair; the
 /// paper's Cython tier does the same fusion implicitly via its C loop).
-pub fn vat_order(d: &DistanceMatrix) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
+pub fn vat_order_on<S: DistanceStorage>(d: &S) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
     let n = d.n();
     if n == 0 {
         return (Vec::new(), Vec::new());
     }
-    let seed = seed_row(d);
+    let seed = d.seed_row();
     let mut order = Vec::with_capacity(n);
     order.push(seed);
     let mut mst = Vec::with_capacity(n.saturating_sub(1));
@@ -65,12 +55,14 @@ pub fn vat_order(d: &DistanceMatrix) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
         from_pos: u32,
         dmin: f64,
     }
+    let mut scratch = vec![0.0f64; n];
+    d.fill_row(seed, &mut scratch);
     let mut cands: Vec<Cand> = (0..n)
         .filter(|&j| j != seed)
         .map(|j| Cand {
             idx: j as u32,
             from_pos: 0,
-            dmin: d.get(seed, j),
+            dmin: scratch[j],
         })
         .collect();
 
@@ -92,8 +84,15 @@ pub fn vat_order(d: &DistanceMatrix) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
         mst.push((chosen.from_pos as usize, step, chosen.dmin));
         order.push(chosen.idx as usize);
 
-        // fold the new row into the frontier's dmin (fused single pass)
-        let row = d.row(chosen.idx as usize);
+        // fold the new row into the frontier's dmin (fused single pass);
+        // dense storage lends the row zero-copy, condensed fills scratch
+        let row: &[f64] = match d.row_slice(chosen.idx as usize) {
+            Some(r) => r,
+            None => {
+                d.fill_row(chosen.idx as usize, &mut scratch);
+                &scratch
+            }
+        };
         for c in cands.iter_mut() {
             let v = row[c.idx as usize];
             if v < c.dmin {
@@ -105,17 +104,24 @@ pub fn vat_order(d: &DistanceMatrix) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
     (order, mst)
 }
 
+/// Optimized VAT ordering on a dense matrix — thin wrapper over
+/// [`vat_order_on`] kept for callers and benches that hold a
+/// [`DistanceMatrix`] directly.
+pub fn vat_order(d: &DistanceMatrix) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
+    vat_order_on(d)
+}
+
 /// Baseline-shaped VAT ordering — mirrors `python/baseline/pure_vat.py`
 /// operation-for-operation (its `vat_order`): same seed, same dmin update,
 /// but with the interpreted style's separate scan/update passes and
-/// per-element bounds-checked indexing. Exists so the Table-1 harness can
-/// compare tiers running *identical algorithms*.
-pub fn vat_order_naive(d: &DistanceMatrix) -> Vec<usize> {
+/// per-element indexing. Exists so the Table-1 harness can compare tiers
+/// running *identical algorithms*.
+pub fn vat_order_naive<S: DistanceStorage>(d: &S) -> Vec<usize> {
     let n = d.n();
     if n == 0 {
         return Vec::new();
     }
-    let seed = seed_row(d);
+    let seed = d.seed_row();
     let mut order = vec![seed];
     let mut selected = vec![false; n];
     selected[seed] = true;
@@ -144,8 +150,8 @@ pub fn vat_order_naive(d: &DistanceMatrix) -> Vec<usize> {
 
 /// Reconstruct MST edges (display coordinates) from a known VAT order:
 /// the point at display position `t` connects to its nearest predecessor.
-pub fn mst_from_order(
-    d: &DistanceMatrix,
+pub fn mst_from_order<S: DistanceStorage>(
+    d: &S,
     order: &[usize],
 ) -> Vec<(usize, usize, f64)> {
     let mut mst = Vec::with_capacity(order.len().saturating_sub(1));
@@ -168,6 +174,7 @@ pub fn mst_from_order(
 mod tests {
     use super::*;
     use crate::data::generators::{blobs, gmm};
+    use crate::dissimilarity::condensed::CondensedMatrix;
     use crate::dissimilarity::Metric;
 
     #[test]
@@ -178,7 +185,7 @@ mod tests {
         d.set(2, 0, 5.0);
         d.set(1, 2, 5.0); // same value later in scan must not win
         d.set(2, 1, 5.0);
-        assert_eq!(seed_row(&d), 0);
+        assert_eq!(DistanceStorage::seed_row(&d), 0);
     }
 
     #[test]
@@ -203,6 +210,24 @@ mod tests {
             let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
             let (fast, _) = vat_order(&d);
             assert_eq!(fast, vat_order_naive(&d), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn generic_sweep_identical_on_both_storages() {
+        // the storage axis: fast AND naive sweeps, dense AND condensed,
+        // all four produce the identical permutation (and the fast sweeps
+        // identical MSTs), because the values are bitwise shared
+        for seed in 20..26 {
+            let ds = gmm(60, 2, 3, seed);
+            let dense = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let cond = CondensedMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let (fd, md) = vat_order_on(&dense);
+            let (fc, mc) = vat_order_on(&cond);
+            assert_eq!(fd, fc, "seed {seed}");
+            assert_eq!(md, mc, "seed {seed}");
+            assert_eq!(vat_order_naive(&dense), vat_order_naive(&cond));
+            assert_eq!(fd, vat_order_naive(&cond), "seed {seed}");
         }
     }
 

@@ -5,10 +5,16 @@
 //! exactly the set of MST-diameter-spread points — runs VAT on the s×s
 //! matrix, and optionally maps the remaining points to their nearest sample
 //! for display. The paper lists sVAT as the scalability future-work
-//! direction (§5.2); here it is a first-class engine.
+//! direction (§5.2); here it is a first-class engine, and the sample matrix
+//! itself goes through the storage spine: [`svat_with_storage`] runs the
+//! sample VAT on dense or condensed storage (identical output, ~half the
+//! sample-matrix memory condensed).
 
 use crate::data::Points;
-use crate::dissimilarity::{DistanceMatrix, Metric};
+use crate::dissimilarity::condensed::CondensedMatrix;
+use crate::dissimilarity::{
+    DistanceMatrix, DistanceStore, Metric, PermutedView, StorageKind,
+};
 use crate::prng::Pcg32;
 
 use super::{vat, VatResult};
@@ -20,9 +26,18 @@ pub struct SvatResult {
     pub sample: Vec<usize>,
     /// VAT over the sample's dissimilarity matrix.
     pub vat: VatResult,
+    /// The sample's s×s distance storage (what `vat` was computed over).
+    pub storage: DistanceStore,
     /// For every original point, the position in `sample` of its nearest
     /// representative (sample points map to themselves).
     pub assignment: Vec<usize>,
+}
+
+impl SvatResult {
+    /// Zero-copy view of the sample VAT image.
+    pub fn view(&self) -> PermutedView<'_, DistanceStore> {
+        self.vat.view(&self.storage)
+    }
 }
 
 /// Maximin (farthest-first) sample of `s` points. Deterministic given the
@@ -61,12 +76,32 @@ pub fn maximin_sample(points: &Points, s: usize, seed: u64) -> Vec<usize> {
     sample
 }
 
-/// Run sVAT: sample `s` representatives, VAT the sample, assign the rest.
+/// Run sVAT with dense sample storage (see [`svat_with_storage`]).
 pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> SvatResult {
+    svat_with_storage(points, s, metric, seed, StorageKind::Dense)
+}
+
+/// Run sVAT: sample `s` representatives, VAT the sample over the requested
+/// storage layout, assign the rest. The sample permutation is identical
+/// across layouts (both are built from the blocked pair kernels).
+pub fn svat_with_storage(
+    points: &Points,
+    s: usize,
+    metric: Metric,
+    seed: u64,
+    kind: StorageKind,
+) -> SvatResult {
     let sample = maximin_sample(points, s, seed);
     let sub = points.select(&sample);
-    let d = DistanceMatrix::build_blocked(&sub, metric);
-    let v = vat(&d);
+    let storage = match kind {
+        StorageKind::Dense => {
+            DistanceStore::Dense(DistanceMatrix::build_blocked(&sub, metric))
+        }
+        StorageKind::Condensed => {
+            DistanceStore::Condensed(CondensedMatrix::build_blocked(&sub, metric))
+        }
+    };
+    let v = vat(&storage);
     // nearest-representative assignment for all original points
     let assignment = (0..points.n())
         .map(|i| {
@@ -85,6 +120,7 @@ pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> SvatResult 
     SvatResult {
         sample,
         vat: v,
+        storage,
         assignment,
     }
 }
@@ -93,6 +129,7 @@ pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> SvatResult 
 mod tests {
     use super::*;
     use crate::data::generators::blobs;
+    use crate::dissimilarity::DistanceStorage;
 
     #[test]
     fn sample_is_distinct_and_in_range() {
@@ -133,6 +170,25 @@ mod tests {
         let seq: Vec<usize> = r.vat.order.iter().map(|&p| labels[r.sample[p]]).collect();
         let flips = seq.windows(2).filter(|w| w[0] != w[1]).count();
         assert_eq!(flips, 2, "3 tight blobs -> 3 runs: {seq:?}");
+    }
+
+    #[test]
+    fn storage_kinds_agree_on_sample_vat() {
+        let ds = blobs(250, 2, 3, 0.3, 25);
+        let dense = svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Dense);
+        let cond =
+            svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Condensed);
+        assert_eq!(dense.sample, cond.sample);
+        assert_eq!(dense.vat.order, cond.vat.order);
+        assert_eq!(dense.assignment, cond.assignment);
+        assert_eq!(dense.storage.kind(), StorageKind::Dense);
+        assert_eq!(cond.storage.kind(), StorageKind::Condensed);
+        // the views expose the same sample image
+        for a in 0..40 {
+            for b in 0..40 {
+                assert_eq!(dense.view().get(a, b), cond.view().get(a, b));
+            }
+        }
     }
 
     #[test]

@@ -5,12 +5,21 @@
 //! image viewer opens it, and it diffs cleanly in tests) and to ASCII for
 //! terminal inspection. Pixel semantics follow the paper: 0 distance = black,
 //! max distance = white.
+//!
+//! Every reader here is generic over
+//! [`DistanceStorage`](crate::dissimilarity::DistanceStorage): [`render`]
+//! and the scalar summaries consume a dense matrix, condensed storage, or —
+//! the normal case post-refactor — the zero-copy
+//! [`PermutedView`](crate::dissimilarity::PermutedView) from
+//! `VatResult::view`, so rendering a VAT image no longer requires
+//! materializing the reordered n×n copy. Pixels are bitwise identical
+//! across storages (same per-entry arithmetic, same normalization).
 
 pub mod ascii;
 pub mod ppm;
 pub mod pgm;
 
-use crate::dissimilarity::DistanceMatrix;
+use crate::dissimilarity::DistanceStorage;
 
 /// An 8-bit grayscale image.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,17 +40,19 @@ impl GrayImage {
     }
 }
 
-/// Render a (reordered) distance matrix as grayscale: 0 → black (cluster),
+/// Render (reordered) distance storage as grayscale: 0 → black (cluster),
 /// max → white. `max_value == 0` (degenerate all-equal input) renders black.
-pub fn render(matrix: &DistanceMatrix) -> GrayImage {
+/// Accepts any storage — including the zero-copy `VatResult::view`.
+pub fn render<S: DistanceStorage>(matrix: &S) -> GrayImage {
     let n = matrix.n();
     let max = matrix.max_value();
     let scale = if max > 0.0 { 255.0 / max } else { 0.0 };
-    let pixels = matrix
-        .flat()
-        .iter()
-        .map(|&v| (v * scale).round().clamp(0.0, 255.0) as u8)
-        .collect();
+    let mut pixels = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            pixels.push((matrix.get(i, j) * scale).round().clamp(0.0, 255.0) as u8);
+        }
+    }
     GrayImage {
         pixels,
         width: n,
@@ -83,7 +94,7 @@ pub fn downsample(img: &GrayImage, max_side: usize) -> GrayImage {
 /// Mean darkness (0 = white, 1 = black) of the `band`-wide diagonal band —
 /// a scalar summary of "how block-diagonal" a VAT image is; used by tests
 /// and the block detector.
-pub fn diagonal_darkness(matrix: &DistanceMatrix, band: usize) -> f64 {
+pub fn diagonal_darkness<S: DistanceStorage>(matrix: &S, band: usize) -> f64 {
     let n = matrix.n();
     if n == 0 {
         return 0.0;
@@ -108,7 +119,7 @@ pub fn diagonal_darkness(matrix: &DistanceMatrix, band: usize) -> f64 {
 /// a whole, on the matrix's own grayscale. Normalization-free comparison of
 /// VAT vs iVAT sharpness (per-image `diagonal_darkness` values are not
 /// comparable across different `max_value`s).
-pub fn block_contrast(matrix: &DistanceMatrix, band: usize) -> f64 {
+pub fn block_contrast<S: DistanceStorage>(matrix: &S, band: usize) -> f64 {
     let n = matrix.n();
     let max = matrix.max_value();
     if n == 0 || max <= 0.0 {
@@ -116,15 +127,20 @@ pub fn block_contrast(matrix: &DistanceMatrix, band: usize) -> f64 {
     }
     let mut band_sum = 0.0;
     let mut band_cnt = 0usize;
+    let mut all_sum = 0.0;
     for i in 0..n {
         let lo = i.saturating_sub(band);
         let hi = (i + band + 1).min(n);
-        for j in lo..hi {
-            band_sum += matrix.get(i, j);
-            band_cnt += 1;
+        for j in 0..n {
+            let v = matrix.get(i, j);
+            all_sum += v;
+            if j >= lo && j < hi {
+                band_sum += v;
+                band_cnt += 1;
+            }
         }
     }
-    let all_mean = matrix.flat().iter().sum::<f64>() / (n * n) as f64;
+    let all_mean = all_sum / (n * n) as f64;
     let band_mean = band_sum / band_cnt.max(1) as f64;
     (all_mean - band_mean) / max
 }
@@ -133,7 +149,7 @@ pub fn block_contrast(matrix: &DistanceMatrix, band: usize) -> f64 {
 mod tests {
     use super::*;
     use crate::data::generators::blobs;
-    use crate::dissimilarity::Metric;
+    use crate::dissimilarity::{DistanceMatrix, Metric};
     use crate::vat::vat;
 
     #[test]
@@ -169,11 +185,21 @@ mod tests {
         let ds = blobs(120, 2, 3, 0.3, 50);
         let m = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
         let r = vat(&m);
-        let dark_sorted = diagonal_darkness(&r.reordered, 10);
+        let dark_sorted = diagonal_darkness(&r.view(&m), 10);
         let dark_unsorted = diagonal_darkness(&m, 10);
         assert!(
             dark_sorted > dark_unsorted,
             "VAT reorder must darken the diagonal band: {dark_sorted} vs {dark_unsorted}"
         );
+    }
+
+    #[test]
+    fn render_through_view_equals_render_of_materialized() {
+        let ds = blobs(60, 2, 2, 0.4, 51);
+        let m = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let r = vat(&m);
+        let from_view = render(&r.view(&m));
+        let from_dense = render(&r.materialize(&m));
+        assert_eq!(from_view, from_dense);
     }
 }

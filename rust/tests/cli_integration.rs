@@ -49,6 +49,37 @@ fn vat_xla_engine_writes_pgm() {
 }
 
 #[test]
+fn condensed_storage_produces_identical_pgm_bytes() {
+    // the storage spine end to end: same dataset, same engine, dense vs
+    // condensed storage -> byte-identical VAT images on disk
+    let dense = std::env::temp_dir().join("fastvat_cli_dense.pgm");
+    let cond = std::env::temp_dir().join("fastvat_cli_cond.pgm");
+    let out_d = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--storage", "dense",
+        "--out", dense.to_str().unwrap(),
+    ]);
+    let out_c = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--storage", "condensed",
+        "--out", cond.to_str().unwrap(),
+    ]);
+    assert!(out_d.contains("storage=dense"), "{out_d}");
+    assert!(out_c.contains("storage=condensed"), "{out_c}");
+    let bytes_d = std::fs::read(&dense).unwrap();
+    let bytes_c = std::fs::read(&cond).unwrap();
+    assert_eq!(bytes_d, bytes_c, "storage axis changed the rendered image");
+}
+
+#[test]
+fn unknown_storage_fails_cleanly() {
+    let out = bin()
+        .args(["vat", "--dataset", "blobs", "--storage", "sparse"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown storage"));
+}
+
+#[test]
 fn hopkins_reports_interpretation() {
     let out = run_ok(&["hopkins", "--dataset", "blobs", "--n", "200"]);
     assert!(out.contains("Hopkins ="), "{out}");

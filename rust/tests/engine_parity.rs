@@ -127,15 +127,19 @@ fn condensed_native_order_matches_square_prim() {
 #[test]
 fn reordered_matrices_equal_across_engines() {
     // beyond the permutation: the displayed image R* itself is equal
+    // (read through the zero-copy view, materialized here for comparison)
     let ds = blobs(150, 2, 4, 0.5, 7004);
     let engines = engines();
-    let reference = vat(&engines[0].pdist(&ds.points).unwrap());
+    let d_ref = engines[0].pdist(&ds.points).unwrap();
+    let reference = vat(&d_ref);
+    let ref_image = reference.materialize(&d_ref);
     for e in &engines[1..] {
-        let v = vat(&e.pdist(&ds.points).unwrap());
+        let d = e.pdist(&ds.points).unwrap();
+        let v = vat(&d);
         assert_eq!(reference.order, v.order, "{}", e.name());
         assert_matrices_equal(
-            &reference.reordered,
-            &v.reordered,
+            &ref_image,
+            &v.materialize(&d),
             &format!("reordered via {}", e.name()),
         );
     }

@@ -6,9 +6,16 @@
 //! scale = 1.0, every pixel an integer), making the goldens stable across
 //! platforms and float environments. The matrix is also already in VAT
 //! order (verified below), so the rendered image is the actual VAT display
-//! path output, not just a raw-matrix render.
+//! path output — rendered through the zero-copy `VatResult::view`, the
+//! same path production uses (no materialized reordered matrix).
+//!
+//! The iVAT goldens (`tiny_ivat.*`) lock the transform's rendering too:
+//! its minimax values (60/90/30 under the fixture's MST) also map to exact
+//! pixels (255/90 scale → 170/255/85), and the dense and condensed
+//! transform layouts must produce byte-identical files.
 
-use fast_vat::dissimilarity::DistanceMatrix;
+use fast_vat::dissimilarity::{DistanceMatrix, StorageKind};
+use fast_vat::vat::ivat::{ivat, ivat_with};
 use fast_vat::vat::vat;
 use fast_vat::viz::ppm::{colorize, write_ppm, Colormap};
 use fast_vat::viz::{ascii::to_ascii, pgm, render};
@@ -29,7 +36,7 @@ fn tiny_matrix() -> DistanceMatrix {
 fn fixture_is_already_in_vat_order() {
     // seed = row of the global max 255 at (0,3) -> row 0; the Prim sweep
     // then appends 1 (60), 2 (90), 3 (30): identity permutation. This pins
-    // the goldens to the full vat() -> render() path.
+    // the goldens to the full vat() -> view -> render() path.
     let v = vat(&tiny_matrix());
     assert_eq!(v.order, vec![0, 1, 2, 3]);
     assert_eq!(v.mst, vec![(0, 1, 60.0), (1, 2, 90.0), (2, 3, 30.0)]);
@@ -37,16 +44,18 @@ fn fixture_is_already_in_vat_order() {
 
 #[test]
 fn ascii_render_matches_golden() {
-    let v = vat(&tiny_matrix());
-    let img = render(&v.reordered);
+    let m = tiny_matrix();
+    let v = vat(&m);
+    let img = render(&v.view(&m));
     let ascii = to_ascii(&img, 4);
     assert_eq!(ascii, include_str!("golden/tiny_vat.txt"));
 }
 
 #[test]
 fn pgm_render_matches_golden() {
-    let v = vat(&tiny_matrix());
-    let img = render(&v.reordered);
+    let m = tiny_matrix();
+    let v = vat(&m);
+    let img = render(&v.view(&m));
     let path = std::env::temp_dir().join("fastvat_golden.pgm");
     pgm::write_pgm(&img, &path).unwrap();
     let written = std::fs::read(&path).unwrap();
@@ -57,8 +66,9 @@ fn pgm_render_matches_golden() {
 #[test]
 fn pgm_golden_roundtrips_through_reader() {
     // the checked-in golden is itself a valid PGM the crate can parse back
-    let v = vat(&tiny_matrix());
-    let img = render(&v.reordered);
+    let m = tiny_matrix();
+    let v = vat(&m);
+    let img = render(&v.view(&m));
     let path = std::env::temp_dir().join("fastvat_golden_rt.pgm");
     std::fs::write(&path, include_bytes!("golden/tiny_vat.pgm")).unwrap();
     let back = pgm::read_pgm(&path).unwrap();
@@ -67,8 +77,9 @@ fn pgm_golden_roundtrips_through_reader() {
 
 #[test]
 fn ppm_gray_render_matches_golden() {
-    let v = vat(&tiny_matrix());
-    let rgb = colorize(&render(&v.reordered), Colormap::Gray);
+    let m = tiny_matrix();
+    let v = vat(&m);
+    let rgb = colorize(&render(&v.view(&m)), Colormap::Gray);
     let path = std::env::temp_dir().join("fastvat_golden.ppm");
     write_ppm(&rgb, &path).unwrap();
     let written = std::fs::read(&path).unwrap();
@@ -90,4 +101,61 @@ fn pixel_values_are_exact() {
             255, 200, 30, 0,
         ]
     );
+}
+
+// ---------------------------------------------------------------- iVAT
+
+#[test]
+fn ivat_pixel_values_are_exact() {
+    // minimax over the MST (60, 90, 30): d(0,1)=60, d(·)=90 across the
+    // {0,1}/{2,3} split, d(2,3)=30; scale = 255/90 maps to exact 170/255/85
+    let v = vat(&tiny_matrix());
+    let img = render(&ivat(&v).transformed);
+    assert_eq!(img.width, 4);
+    assert_eq!(
+        img.pixels,
+        vec![
+            0, 170, 255, 255, //
+            170, 0, 255, 255, //
+            255, 255, 0, 85, //
+            255, 255, 85, 0,
+        ]
+    );
+}
+
+#[test]
+fn ivat_ascii_matches_golden() {
+    let v = vat(&tiny_matrix());
+    let ascii = to_ascii(&render(&ivat(&v).transformed), 4);
+    assert_eq!(ascii, include_str!("golden/tiny_ivat.txt"));
+}
+
+#[test]
+fn ivat_pgm_matches_golden_in_both_storage_layouts() {
+    let v = vat(&tiny_matrix());
+    let golden: &[u8] = include_bytes!("golden/tiny_ivat.pgm");
+    for kind in [StorageKind::Dense, StorageKind::Condensed] {
+        let iv = ivat_with(&v, kind);
+        let path = std::env::temp_dir().join(format!(
+            "fastvat_golden_ivat_{}.pgm",
+            match kind {
+                StorageKind::Dense => "dense",
+                StorageKind::Condensed => "condensed",
+            }
+        ));
+        pgm::write_pgm(&render(&iv.transformed), &path).unwrap();
+        let written = std::fs::read(&path).unwrap();
+        assert_eq!(written, golden, "{kind:?}");
+    }
+}
+
+#[test]
+fn ivat_ppm_matches_golden() {
+    let v = vat(&tiny_matrix());
+    let rgb = colorize(&render(&ivat(&v).transformed), Colormap::Gray);
+    let path = std::env::temp_dir().join("fastvat_golden_ivat.ppm");
+    write_ppm(&rgb, &path).unwrap();
+    let written = std::fs::read(&path).unwrap();
+    let golden: &[u8] = include_bytes!("golden/tiny_ivat.ppm");
+    assert_eq!(written, golden);
 }

@@ -7,7 +7,7 @@ use fast_vat::cluster::{dbscan, kmeans, DbscanParams, KMeansParams};
 use fast_vat::data::generators::{blobs, gmm, moons, uniform};
 use fast_vat::data::Points;
 use fast_vat::dissimilarity::condensed::CondensedMatrix;
-use fast_vat::dissimilarity::{DistanceMatrix, Metric};
+use fast_vat::dissimilarity::{DistanceMatrix, DistanceStorage, Metric};
 use fast_vat::metrics::{ari, nmi, silhouette, to_isize};
 use fast_vat::prng::Pcg32;
 use fast_vat::vat::dendrogram::Dendrogram;
@@ -39,8 +39,15 @@ fn vat_invariants_on_arbitrary_dissimilarities() {
         let mut sorted = v.order.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "trial {trial}");
-        // reordered consistency + symmetry preserved
-        assert!(v.reordered.asymmetry() < 1e-12);
+        // view consistency + symmetry preserved through materialization
+        let mat = v.materialize(&d);
+        assert!(mat.asymmetry() < 1e-12);
+        let view = v.view(&d);
+        for a in 0..n {
+            for b in 0..n {
+                assert_eq!(mat.get(a, b), view.get(a, b));
+            }
+        }
         // naive agrees even on non-metric inputs
         assert_eq!(v.order, vat_naive(&d).order, "trial {trial}");
         // MST edge count
@@ -56,7 +63,7 @@ fn ivat_equals_bruteforce_on_random_inputs() {
         let d = random_dissimilarity(&mut rng, n);
         let v = vat(&d);
         let fast = ivat(&v);
-        let slow = minimax_bruteforce(&v.reordered);
+        let slow = minimax_bruteforce(&v.materialize(&d));
         for i in 0..n {
             for j in 0..n {
                 if i != j {

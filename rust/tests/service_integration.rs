@@ -15,6 +15,7 @@ use fast_vat::coordinator::streaming::{StreamingConfig, StreamingVat};
 use fast_vat::coordinator::JobOptions;
 use fast_vat::data::generators::{blobs, moons, separated_blobs, spotify_like, uniform};
 use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine};
+use fast_vat::dissimilarity::StorageKind;
 use fast_vat::runtime::engine_by_name;
 
 fn artifacts_dir() -> String {
@@ -88,16 +89,23 @@ fn xla_backed_service_mixed_workload() {
 
 #[test]
 fn service_from_config_document() {
+    // the storage knob flows config -> job options -> worker output
     let doc = Document::parse(
-        "[service]\nworkers = 2\nqueue_depth = 4\nengine = \"blocked\"\n",
+        "[service]\nworkers = 2\nqueue_depth = 4\nengine = \"blocked\"\nstorage = \"condensed\"\n",
     )
     .unwrap();
     let cfg = ServiceConfig::from_document(&doc).unwrap();
+    assert_eq!(cfg.storage, StorageKind::Condensed);
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir).unwrap();
     let service = VatService::start(&cfg, engine);
     let ds = blobs(80, 2, 2, 0.4, 1);
-    let (_, t) = service.submit(ds.points, JobOptions::default()).unwrap();
-    assert!(t.recv().unwrap().is_ok());
+    let opts = JobOptions {
+        storage: cfg.storage,
+        ..Default::default()
+    };
+    let (_, t) = service.submit(ds.points, opts).unwrap();
+    let out = t.recv().unwrap().unwrap();
+    assert_eq!(out.storage, StorageKind::Condensed);
 }
 
 #[test]

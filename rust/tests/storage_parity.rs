@@ -1,0 +1,191 @@
+//! Dense-vs-condensed storage parity — the paper's output-fidelity claim
+//! applied to the *storage* axis: for every engine × metric × dataset, the
+//! condensed n(n−1)/2 layout must produce bitwise-identical VAT
+//! permutations, identical iVAT pixels, and identical block-detector
+//! output to the dense n×n layout. The engines guarantee bitwise-equal
+//! *entries* across layouts (`DistanceEngine::build_storage` contract);
+//! these tests pin that the whole downstream pipeline preserves the
+//! equality through the zero-copy view path.
+//!
+//! The final test is the §5.1 memory accounting: the condensed +
+//! `PermutedView` pipeline must hold ≤ ~55% of the dense pipeline's
+//! resident distance-buffer bytes (audited via `bench_util::FootprintAudit`
+//! over `DistanceStorage::distance_bytes`).
+
+use fast_vat::bench_util::FootprintAudit;
+use fast_vat::data::generators::{blobs, gmm, moons};
+use fast_vat::data::Dataset;
+use fast_vat::dissimilarity::engine::{
+    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+};
+use fast_vat::dissimilarity::{DistanceStorage, Metric, StorageKind};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::ivat::ivat_with;
+use fast_vat::vat::vat;
+use fast_vat::viz::render;
+
+fn engines() -> Vec<Box<dyn DistanceEngine>> {
+    vec![
+        Box::new(NaiveEngine),
+        Box::new(BlockedEngine),
+        Box::new(ParallelEngine { threads: 4 }),
+        Box::new(CondensedEngine),
+    ]
+}
+
+fn datasets() -> Vec<Dataset> {
+    vec![
+        blobs(160, 3, 3, 0.6, 7101),
+        moons(150, 0.06, 7102),
+        gmm(140, 2, 3, 7103),
+    ]
+}
+
+fn metrics() -> Vec<Metric> {
+    vec![
+        Metric::Euclidean,
+        Metric::SqEuclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Minkowski(3.0),
+        Metric::Cosine,
+    ]
+}
+
+#[test]
+fn vat_permutation_bitwise_identical_across_storages() {
+    // every engine × metric × dataset: the condensed sweep must reproduce
+    // the dense sweep's permutation AND its MST (weights are f64-compared,
+    // i.e. bitwise: the storage axis never changes a value)
+    for ds in datasets() {
+        for metric in metrics() {
+            for e in engines() {
+                let dense = e
+                    .build_storage(&ds.points, metric, StorageKind::Dense)
+                    .unwrap();
+                let cond = e
+                    .build_storage(&ds.points, metric, StorageKind::Condensed)
+                    .unwrap();
+                let vd = vat(&dense);
+                let vc = vat(&cond);
+                let ctx = format!("{} on {} / {metric:?}", e.name(), ds.name);
+                assert_eq!(vd.order, vc.order, "order diverged: {ctx}");
+                assert_eq!(vd.mst, vc.mst, "mst diverged: {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vat_and_ivat_pixels_identical_across_storages() {
+    // the rendered bytes — what an analyst actually sees — must be equal:
+    // raw VAT through the zero-copy view, and the iVAT transform emitted
+    // in each layout
+    for ds in datasets() {
+        for metric in metrics() {
+            let e = BlockedEngine;
+            let dense = e
+                .build_storage(&ds.points, metric, StorageKind::Dense)
+                .unwrap();
+            let cond = e
+                .build_storage(&ds.points, metric, StorageKind::Condensed)
+                .unwrap();
+            let vd = vat(&dense);
+            let vc = vat(&cond);
+            let ctx = format!("{} / {metric:?}", ds.name);
+            assert_eq!(
+                render(&vd.view(&dense)).pixels,
+                render(&vc.view(&cond)).pixels,
+                "VAT pixels diverged: {ctx}"
+            );
+            assert_eq!(
+                render(&ivat_with(&vd, StorageKind::Dense).transformed).pixels,
+                render(&ivat_with(&vc, StorageKind::Condensed).transformed).pixels,
+                "iVAT pixels diverged: {ctx}"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_detector_identical_across_storages() {
+    for ds in datasets() {
+        for metric in metrics() {
+            let e = BlockedEngine;
+            let dense = e
+                .build_storage(&ds.points, metric, StorageKind::Dense)
+                .unwrap();
+            let cond = e
+                .build_storage(&ds.points, metric, StorageKind::Condensed)
+                .unwrap();
+            let vd = vat(&dense);
+            let vc = vat(&cond);
+            let det = BlockDetector::default();
+            let ctx = format!("{} / {metric:?}", ds.name);
+            assert_eq!(
+                det.detect(&vd.view(&dense)),
+                det.detect(&vc.view(&cond)),
+                "raw-VAT blocks diverged: {ctx}"
+            );
+            assert_eq!(
+                det.detect(&ivat_with(&vd, StorageKind::Dense).transformed),
+                det.detect(&ivat_with(&vc, StorageKind::Condensed).transformed),
+                "iVAT blocks diverged: {ctx}"
+            );
+            assert_eq!(
+                det.insight(&vd, &dense),
+                det.insight(&vc, &cond),
+                "insight diverged: {ctx}"
+            );
+        }
+    }
+}
+
+#[test]
+fn condensed_view_path_allocates_at_most_55_percent_of_dense() {
+    // peak-resident accounting for the raw-VAT pipeline, n >= 256:
+    //   dense path   = n² matrix + n² materialized reordered copy
+    //                  (the pre-refactor pipeline shape `keep_matrix` keeps)
+    //   condensed    = n(n−1)/2 triangle + zero-copy view (0 bytes)
+    // ratio → ~25%; even against a dense pipeline that skips the reordered
+    // copy the ratio is < 50% — both comfortably under the ~55% bound.
+    for n in [256usize, 384] {
+        let ds = blobs(n, 2, 3, 0.4, 7200 + n as u64);
+        let e = BlockedEngine;
+
+        let dense = e
+            .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+            .unwrap();
+        let vd = vat(&dense);
+        let mut dense_audit = FootprintAudit::new();
+        dense_audit.record("dense distance matrix", dense.distance_bytes());
+        dense_audit.record(
+            "materialized reordered copy",
+            vd.materialize(&dense).resident_bytes(),
+        );
+
+        let cond = e
+            .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
+            .unwrap();
+        let vc = vat(&cond);
+        let view = vc.view(&cond);
+        let mut cond_audit = FootprintAudit::new();
+        cond_audit.record("condensed distance triangle", cond.distance_bytes());
+        cond_audit.record("zero-copy permuted view", view.distance_bytes());
+
+        assert_eq!(vd.order, vc.order, "n={n}");
+        let (d, c) = (dense_audit.total(), cond_audit.total());
+        assert!(
+            c * 100 <= d * 55,
+            "n={n}: condensed path holds {c} bytes vs dense {d} (> 55%)\n{}\n{}",
+            dense_audit.report(),
+            cond_audit.report()
+        );
+        // and against the single-matrix dense footprint alone
+        assert!(
+            c * 100 <= dense.distance_bytes() * 55,
+            "n={n}: condensed {c} vs single dense matrix {}",
+            dense.distance_bytes()
+        );
+    }
+}
