@@ -39,9 +39,9 @@ fn main() {
         let t_ivat = time_auto(0.4, || observe(&ivat(&v).transformed.n()));
         let iv = ivat(&v);
         let t_svat = time_auto(0.4, || {
-            observe(&svat(&z, 64, Metric::Euclidean, 9).vat.order);
+            observe(&svat(&z, 64, Metric::Euclidean, 9).unwrap().vat.order);
         });
-        let sv = svat(&z, 64, Metric::Euclidean, 9);
+        let sv = svat(&z, 64, Metric::Euclidean, 9).unwrap();
 
         table.row(&[
             ds.name.clone(),

@@ -46,7 +46,7 @@ fn main() {
             name.to_string(),
             format!("{:.4}", t.mean_s),
             format!("{:.3}", diagonal_darkness(&v.view(&d), 8)),
-            det.insight(&v, &d),
+            det.insight(&v, &d).expect("in-RAM insight cannot fail"),
             expect.to_string(),
         ]);
     }

@@ -61,7 +61,7 @@ fn main() -> fast_vat::Result<()> {
             std::hint::black_box(vat(&d));
         });
         let t_svat = time(&mut || {
-            std::hint::black_box(svat(&z, 64, Metric::Euclidean, 1));
+            std::hint::black_box(svat(&z, 64, Metric::Euclidean, 1).unwrap());
         });
 
         table.row(&[

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::dissimilarity::StorageKind;
+use crate::dissimilarity::{ShardOptions, StorageKind};
 use crate::error::{Error, Result};
 
 /// A parsed scalar value.
@@ -212,10 +212,15 @@ pub struct ServiceConfig {
     pub engine: String,
     /// artifacts/ directory for the XLA engine.
     pub artifacts_dir: String,
-    /// Distance-storage layout for jobs: "dense" | "condensed". Condensed
-    /// halves per-job resident distance bytes with bit-identical output
-    /// (see `dissimilarity/storage.rs`).
+    /// Distance-storage layout for jobs: "dense" | "condensed" | "sharded".
+    /// Condensed halves per-job resident distance bytes; sharded spills the
+    /// triangle to disk and keeps only the shard LRU resident — both with
+    /// bit-identical output (see `dissimilarity/storage.rs` and
+    /// `dissimilarity/shard.rs`).
     pub storage: StorageKind,
+    /// Shard knobs for `storage = "sharded"` (`shard_rows`, `cache_shards`,
+    /// `spill_dir` keys; ignored by the in-RAM layouts).
+    pub shard: ShardOptions,
 }
 
 impl Default for ServiceConfig {
@@ -226,6 +231,7 @@ impl Default for ServiceConfig {
             engine: "blocked".into(),
             artifacts_dir: "artifacts".into(),
             storage: StorageKind::Dense,
+            shard: ShardOptions::default(),
         }
     }
 }
@@ -272,6 +278,28 @@ impl ServiceConfig {
                         .ok_or_else(|| Error::Config("storage must be a string".into()))?;
                     cfg.storage = StorageKind::parse(s)
                         .map_err(|_| Error::Config(format!("unknown storage {s}")))?;
+                }
+                "shard_rows" => {
+                    cfg.shard.shard_rows = v
+                        .as_int()
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| Error::Config("shard_rows must be int > 0".into()))?
+                        as usize
+                }
+                "cache_shards" => {
+                    cfg.shard.cache_shards = v
+                        .as_int()
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| {
+                            Error::Config("cache_shards must be int > 0".into())
+                        })? as usize
+                }
+                "spill_dir" => {
+                    cfg.shard.spill_dir = Some(
+                        v.as_str()
+                            .ok_or_else(|| Error::Config("spill_dir must be a string".into()))?
+                            .into(),
+                    )
                 }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
@@ -350,6 +378,37 @@ mod tests {
         assert!(ServiceConfig::from_document(&doc).is_err());
         let doc = Document::parse("[service]\nstorage = 3\n").unwrap();
         assert!(ServiceConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn service_config_shard_knobs() {
+        let doc = Document::parse(
+            "[service]\nstorage = \"sharded\"\nshard_rows = 128\n\
+             cache_shards = 2\nspill_dir = \"/var/tmp/vat\"\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.storage, StorageKind::Sharded);
+        assert_eq!(cfg.shard.shard_rows, 128);
+        assert_eq!(cfg.shard.cache_shards, 2);
+        assert_eq!(
+            cfg.shard.spill_dir.as_deref(),
+            Some(std::path::Path::new("/var/tmp/vat"))
+        );
+        // defaults apply when the keys are absent
+        let doc = Document::parse("[service]\nstorage = \"sharded\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.shard, crate::dissimilarity::ShardOptions::default());
+        // zero and non-int values fail loudly
+        for bad in [
+            "[service]\nshard_rows = 0\n",
+            "[service]\ncache_shards = 0\n",
+            "[service]\nshard_rows = \"many\"\n",
+            "[service]\nspill_dir = 7\n",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod stats;
 pub mod streaming;
 
 use crate::data::Points;
-use crate::dissimilarity::StorageKind;
+use crate::dissimilarity::{ShardOptions, StorageKind};
 use crate::vat::blocks::Block;
 
 /// What a job should compute beyond the reorder itself.
@@ -39,8 +39,11 @@ pub struct JobOptions {
     /// copy; everything else reads the zero-copy view).
     pub keep_matrix: bool,
     /// Distance-storage layout for the job (`condensed` holds ~half the
-    /// dense resident distance bytes with bit-identical output).
+    /// dense resident distance bytes, `sharded` spills the triangle and
+    /// holds only the LRU budget — both with bit-identical output).
     pub storage: StorageKind,
+    /// Shard knobs for `sharded` jobs (ignored by the in-RAM layouts).
+    pub shard: ShardOptions,
 }
 
 impl Default for JobOptions {
@@ -51,6 +54,7 @@ impl Default for JobOptions {
             hopkins: true,
             keep_matrix: false,
             storage: StorageKind::Dense,
+            shard: ShardOptions::default(),
         }
     }
 }

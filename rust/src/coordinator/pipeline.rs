@@ -23,12 +23,12 @@ use crate::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
 use crate::data::scale::Scaler;
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
-use crate::dissimilarity::{Metric, StorageKind};
+use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
 use crate::error::Result;
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::metrics::{ari, silhouette, to_isize};
 use crate::vat::blocks::{Block, BlockDetector};
-use crate::vat::{ivat::ivat_with, vat};
+use crate::vat::{ivat::ivat_with_opts, vat};
 
 /// Tunables for [`auto_cluster`].
 #[derive(Debug, Clone)]
@@ -43,8 +43,11 @@ pub struct PipelineConfig {
     /// Base RNG seed.
     pub seed: u64,
     /// Distance-storage layout for the tendency stage (condensed halves
-    /// the resident distance bytes; the decision output is identical).
+    /// the resident distance bytes, sharded spills the triangle and keeps
+    /// only the LRU budget resident; the decision output is identical).
     pub storage: StorageKind,
+    /// Shard knobs for `sharded` storage (ignored by the in-RAM layouts).
+    pub shard: ShardOptions,
 }
 
 impl Default for PipelineConfig {
@@ -55,6 +58,7 @@ impl Default for PipelineConfig {
             min_pts: 5,
             seed: 0xA070,
             storage: StorageKind::Dense,
+            shard: ShardOptions::default(),
         }
     }
 }
@@ -139,11 +143,12 @@ pub fn auto_cluster(
 
     // 2. tendency image -> k + the iVAT reference partition (the whole
     // tendency stage runs on the configured storage layout; silhouettes
-    // below read the same storage, so condensed never expands to dense)
-    let d = engine.build_storage(&z, Metric::Euclidean, config.storage)?;
+    // below read the same storage, so condensed never expands to dense and
+    // sharded stays inside its LRU budget)
+    let d = engine.build_storage_with(&z, Metric::Euclidean, config.storage, &config.shard)?;
     let v = vat(&d);
     let detector = BlockDetector::default();
-    let iv = ivat_with(&v, config.storage);
+    let iv = ivat_with_opts(&v, config.storage, &config.shard)?;
     let blocks = detector.detect(&iv.transformed);
     let k = blocks.len().max(2);
     let insight = detector.insight_with(&v, &blocks, &d);
@@ -248,20 +253,36 @@ mod tests {
     }
 
     #[test]
-    fn condensed_storage_reaches_same_decision() {
+    fn condensed_and_sharded_storage_reach_same_decision() {
         // the storage knob must not change the pipeline's routing or labels
         let ds = moons(300, 0.05, 145);
         let dense_cfg = PipelineConfig::default();
         let cond_cfg = PipelineConfig {
-            storage: crate::dissimilarity::StorageKind::Condensed,
+            storage: StorageKind::Condensed,
+            ..Default::default()
+        };
+        let shard_cfg = PipelineConfig {
+            storage: StorageKind::Sharded,
+            shard: ShardOptions {
+                shard_rows: 31,
+                cache_shards: 2,
+                spill_dir: None,
+            },
             ..Default::default()
         };
         let a = auto_cluster(&engine(), &ds.points, &dense_cfg).unwrap();
         let b = auto_cluster(&engine(), &ds.points, &cond_cfg).unwrap();
+        let c = auto_cluster(&engine(), &ds.points, &shard_cfg).unwrap();
         assert_eq!(a.choice, b.choice);
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.k_estimate, b.k_estimate);
         assert_eq!(a.insight, b.insight);
+        assert_eq!(a.choice, c.choice);
+        assert_eq!(a.labels, c.labels);
+        assert_eq!(a.k_estimate, c.k_estimate);
+        assert_eq!(a.insight, c.insight);
+        assert_eq!(a.kmeans_silhouette, c.kmeans_silhouette);
+        assert_eq!(a.dbscan_silhouette, c.dbscan_silhouette);
     }
 
     #[test]

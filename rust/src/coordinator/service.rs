@@ -22,7 +22,7 @@ use crate::dissimilarity::Metric;
 use crate::error::{Error, Result};
 use crate::hopkins::{hopkins, HopkinsParams};
 use crate::vat::blocks::BlockDetector;
-use crate::vat::{ivat::ivat_with, vat};
+use crate::vat::{ivat::ivat_with_opts, vat};
 
 /// A submitted job's completion channel.
 pub type Ticket = mpsc::Receiver<Result<VatJobOutput>>;
@@ -180,22 +180,29 @@ pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOut
     };
 
     let t0 = Instant::now();
-    let storage = engine.build_storage(&points, Metric::Euclidean, job.options.storage)?;
+    let storage = engine.build_storage_with(
+        &points,
+        Metric::Euclidean,
+        job.options.storage,
+        &job.options.shard,
+    )?;
     let t_distance_s = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
     let v = vat(&storage);
     let detector = BlockDetector::default();
     let (blocks, insight) = if job.options.ivat {
-        let iv = ivat_with(&v, job.options.storage);
+        // the transform is emitted in the job's own layout (sharded jobs
+        // spill it with the job's shard knobs), so iVAT never expands the
+        // memory envelope the storage choice promised
+        let iv = ivat_with_opts(&v, job.options.storage, &job.options.shard)?;
         let blocks = detector.detect(&iv.transformed);
         let insight = detector.insight_with(&v, &blocks, &storage);
         (blocks, insight)
     } else {
-        (
-            detector.detect(&v.view(&storage)),
-            detector.insight(&v, &storage),
-        )
+        let blocks = detector.detect(&v.view(&storage));
+        let insight = detector.insight_opts(&v, &storage, &job.options.shard)?;
+        (blocks, insight)
     };
     let t_order_s = t1.elapsed().as_secs_f64();
 
@@ -232,6 +239,7 @@ mod tests {
     use super::*;
     use crate::data::generators::blobs;
     use crate::dissimilarity::engine::BlockedEngine;
+    use crate::dissimilarity::StorageKind;
 
     fn svc(workers: usize, depth: usize) -> VatService {
         let cfg = ServiceConfig {
@@ -295,8 +303,8 @@ mod tests {
     }
 
     #[test]
-    fn condensed_storage_jobs_match_dense_jobs() {
-        use crate::dissimilarity::StorageKind;
+    fn condensed_and_sharded_storage_jobs_match_dense_jobs() {
+        use crate::dissimilarity::ShardOptions;
         let service = svc(2, 8);
         let ds = blobs(120, 2, 3, 0.3, 125);
         let dense_opts = JobOptions {
@@ -308,16 +316,32 @@ mod tests {
             storage: StorageKind::Condensed,
             ..Default::default()
         };
+        let shard_opts = JobOptions {
+            ivat: true,
+            storage: StorageKind::Sharded,
+            shard: ShardOptions {
+                shard_rows: 13,
+                cache_shards: 2,
+                spill_dir: None,
+            },
+            ..Default::default()
+        };
         let (_, td) = service.submit(ds.points.clone(), dense_opts).unwrap();
-        let (_, tc) = service.submit(ds.points, cond_opts).unwrap();
+        let (_, tc) = service.submit(ds.points.clone(), cond_opts).unwrap();
+        let (_, ts) = service.submit(ds.points, shard_opts).unwrap();
         let out_d = td.recv().unwrap().unwrap();
         let out_c = tc.recv().unwrap().unwrap();
+        let out_s = ts.recv().unwrap().unwrap();
         // the storage axis changes layout, not output
         assert_eq!(out_d.order, out_c.order);
         assert_eq!(out_d.blocks, out_c.blocks);
         assert_eq!(out_d.insight, out_c.insight);
+        assert_eq!(out_d.order, out_s.order);
+        assert_eq!(out_d.blocks, out_s.blocks);
+        assert_eq!(out_d.insight, out_s.insight);
         assert_eq!(out_d.storage, StorageKind::Dense);
         assert_eq!(out_c.storage, StorageKind::Condensed);
+        assert_eq!(out_s.storage, StorageKind::Sharded);
     }
 
     #[test]

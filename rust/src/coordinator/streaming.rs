@@ -21,8 +21,9 @@ use std::sync::Arc;
 #[cfg(test)]
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
+use crate::dissimilarity::shard::ShardedTriangle;
 use crate::dissimilarity::{
-    DistanceMatrix, DistanceStore, Metric, PermutedView, StorageKind,
+    DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
 };
 use crate::error::{Error, Result};
 use crate::vat::blocks::{Block, BlockDetector};
@@ -38,9 +39,13 @@ pub struct StreamingConfig {
     /// Storage layout of the cached/handed-out snapshots. The *incremental*
     /// window matrix stays dense (the O(w·d) push extends rows in place;
     /// condensed strides shift with every size change), but a `Condensed`
-    /// snapshot compresses on reorder, so monitors holding snapshots pay
-    /// ~half the distance bytes per retained snapshot.
+    /// snapshot compresses on reorder (~half the distance bytes per
+    /// retained snapshot) and a `Sharded` snapshot spills the compressed
+    /// triangle to disk, so monitors retaining many snapshots hold only
+    /// each snapshot's LRU budget in RAM.
     pub snapshot_storage: StorageKind,
+    /// Shard knobs for `Sharded` snapshots (ignored otherwise).
+    pub shard: ShardOptions,
 }
 
 impl Default for StreamingConfig {
@@ -49,6 +54,7 @@ impl Default for StreamingConfig {
             window: 512,
             metric: Metric::Euclidean,
             snapshot_storage: StorageKind::Dense,
+            shard: ShardOptions::default(),
         }
     }
 }
@@ -201,6 +207,15 @@ impl StreamingVat {
                             .expect("window buffer is n*n"),
                     )
                 }
+                StorageKind::Sharded => {
+                    // same square→triangle row tails, streamed band by band
+                    // into the spill file (bitwise identical entries)
+                    DistanceStore::Sharded(ShardedTriangle::from_square_flat(
+                        &self.dist,
+                        n,
+                        &self.config.shard,
+                    )?)
+                }
             });
             let v = vat(store.as_ref());
             let blocks = BlockDetector::default().detect(&v.view(store.as_ref()));
@@ -327,6 +342,94 @@ mod tests {
         assert_eq!(a.storage.kind(), StorageKind::Dense);
         assert_eq!(b.storage.kind(), StorageKind::Condensed);
         assert!(b.storage.distance_bytes() * 2 < a.storage.distance_bytes() + 100 * 8);
+    }
+
+    #[test]
+    fn snapshot_cache_reused_until_window_mutates_for_every_storage_kind() {
+        // clean-window polls must hand back the SAME cached storage (Arc
+        // identity — no rebuild, no distance-buffer copy); any push must
+        // invalidate it, for dense, condensed, AND sharded snapshots alike
+        let ds = blobs(40, 2, 2, 0.3, 134);
+        for kind in [
+            StorageKind::Dense,
+            StorageKind::Condensed,
+            StorageKind::Sharded,
+        ] {
+            let mut sv = StreamingVat::new(
+                2,
+                StreamingConfig {
+                    window: 64,
+                    snapshot_storage: kind,
+                    shard: ShardOptions {
+                        shard_rows: 7,
+                        cache_shards: 2,
+                        spill_dir: None,
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for i in 0..40 {
+                sv.push(ds.points.row(i)).unwrap();
+            }
+            let a = sv.snapshot().unwrap();
+            let b = sv.snapshot().unwrap();
+            assert!(
+                Arc::ptr_eq(&a.storage, &b.storage),
+                "{kind:?}: clean-window poll must reuse the cached storage"
+            );
+            assert_eq!(a.vat.order, b.vat.order, "{kind:?}");
+            assert_eq!(a.storage.kind(), kind);
+            sv.push(&[50.0, 50.0]).unwrap();
+            let c = sv.snapshot().unwrap();
+            assert!(
+                !Arc::ptr_eq(&a.storage, &c.storage),
+                "{kind:?}: a push must invalidate the cached snapshot"
+            );
+            assert_eq!(c.n, 41, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_snapshots_roundtrip_identically_to_dense() {
+        // the new layout end to end: same pushes, same eviction, and the
+        // snapshot view must expose the identical VAT image
+        let ds = blobs(90, 2, 3, 0.3, 135);
+        let mut dense = StreamingVat::new(2, cfg(70)).unwrap();
+        let mut shard = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 70,
+                snapshot_storage: StorageKind::Sharded,
+                shard: ShardOptions {
+                    shard_rows: 9,
+                    cache_shards: 2,
+                    spill_dir: None,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..90 {
+            // 90 pushes through a 70-window exercises eviction too
+            dense.push(ds.points.row(i)).unwrap();
+            shard.push(ds.points.row(i)).unwrap();
+        }
+        let a = dense.snapshot().unwrap();
+        let b = shard.snapshot().unwrap();
+        assert_eq!(a.vat.order, b.vat.order);
+        assert_eq!(a.vat.mst, b.vat.mst);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(b.storage.kind(), StorageKind::Sharded);
+        for x in 0..70 {
+            for y in 0..70 {
+                assert_eq!(a.view().get(x, y), b.view().get(x, y), "({x},{y})");
+            }
+        }
+        // sharded snapshots keep only the LRU budget resident
+        let s = b.storage.as_sharded().unwrap();
+        assert!(s.resident_bytes() <= 2 * 9 * 70 * 8);
+        assert_eq!(s.file_bytes(), 70 * 69 / 2 * 8);
     }
 
     #[test]

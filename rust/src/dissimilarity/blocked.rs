@@ -180,9 +180,10 @@ pub fn build_with_tile(points: &Points, metric: Metric, tile: usize) -> Distance
 
 /// Precomputed row norms + monomorphized dot for the (Sq)Euclidean fast
 /// path; `None` norms route every other metric through `Metric::eval`.
-/// Shared by the sequential and parallel condensed builders so the
-/// bitwise-parity contract has a single source of truth.
-fn condensed_kernel(
+/// Shared by the sequential and parallel condensed builders AND the
+/// sharded band builders (which hoist it once per build, not per band) so
+/// the bitwise-parity contract has a single source of truth.
+pub(crate) fn condensed_kernel(
     points: &Points,
     metric: Metric,
 ) -> (Option<Vec<f64>>, fn(&[f64], &[f64]) -> f64) {
@@ -207,7 +208,7 @@ fn condensed_kernel(
 /// are bitwise identical to each other and to [`build`]'s dense entries
 /// (same precomputed-norm dot trick with the same monomorphized inner dot
 /// for (Sq)Euclidean, same `Metric::eval` arithmetic otherwise).
-fn fill_condensed_rows(
+pub(crate) fn fill_condensed_rows(
     points: &Points,
     metric: Metric,
     norms: Option<&[f64]>,

@@ -120,6 +120,13 @@ impl CondensedMatrix {
         self.n
     }
 
+    /// The flat condensed buffer (scipy `pdist` order) — what the sharded
+    /// tier spills band by band.
+    #[inline]
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+
     /// Number of stored entries.
     #[inline]
     pub fn len(&self) -> usize {

@@ -22,6 +22,7 @@
 //! non-XLA engines need no extra code.
 
 use super::condensed::CondensedMatrix;
+use super::shard::{ShardOptions, ShardedTriangle};
 use super::storage::{DistanceStore, StorageKind};
 use super::{DistanceMatrix, Metric};
 use crate::data::Points;
@@ -48,18 +49,58 @@ pub trait DistanceEngine: Send + Sync {
         Ok(CondensedMatrix::from_dense(&self.build(points, metric)?))
     }
 
+    /// Build the sharded out-of-core form under `metric` — the engine-layer
+    /// hook of the sharded tier.
+    ///
+    /// Contract: same as [`DistanceEngine::build_condensed`] — the sharded
+    /// entries are **bitwise identical** to the engine's dense entries
+    /// (`tests/storage_parity.rs` enforces this for every engine × metric).
+    /// The default builds the engine's condensed form and spills it band by
+    /// band (trivially bitwise, so every backend — including the simulated
+    /// and real XLA engines — can emit shards with no extra code); native
+    /// engines override to stream bands through the shared pair kernels
+    /// without ever holding the full triangle in RAM.
+    fn build_sharded(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<ShardedTriangle> {
+        ShardedTriangle::from_condensed(&self.build_condensed(points, metric)?, opts)
+    }
+
     /// Build distance storage of the requested layout — the engine-layer
-    /// entry point for the `storage = "dense" | "condensed"` knob.
+    /// entry point for the `storage = "dense" | "condensed" | "sharded"`
+    /// knob. Sharded storage uses [`ShardOptions::default`]; callers with
+    /// tuned shard knobs (the job service, the pipeline, the CLI) use
+    /// [`DistanceEngine::build_storage_with`].
     fn build_storage(
         &self,
         points: &Points,
         metric: Metric,
         kind: StorageKind,
     ) -> Result<DistanceStore> {
+        self.build_storage_with(points, metric, kind, &ShardOptions::default())
+    }
+
+    /// [`DistanceEngine::build_storage`] with explicit shard knobs — THE
+    /// storage selector for configured call paths, so a tuned `spill_dir`
+    /// or `shard_rows` reaches the sharded arm instead of silently falling
+    /// back to defaults. The in-RAM layouts ignore `shard`.
+    fn build_storage_with(
+        &self,
+        points: &Points,
+        metric: Metric,
+        kind: StorageKind,
+        shard: &ShardOptions,
+    ) -> Result<DistanceStore> {
         Ok(match kind {
             StorageKind::Dense => DistanceStore::Dense(self.build(points, metric)?),
             StorageKind::Condensed => {
                 DistanceStore::Condensed(self.build_condensed(points, metric)?)
+            }
+            StorageKind::Sharded => {
+                DistanceStore::Sharded(self.build_sharded(points, metric, shard)?)
             }
         })
     }
@@ -138,6 +179,17 @@ impl DistanceEngine for NaiveEngine {
     fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
         Ok(CondensedMatrix::build(points, metric))
     }
+
+    /// Band-streamed direct evaluation — one shard resident at a time,
+    /// entries bitwise identical to the naive dense sweep.
+    fn build_sharded(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<ShardedTriangle> {
+        ShardedTriangle::build(points, metric, opts)
+    }
 }
 
 /// Numba-tier: compiled, cache-tiled native builder.
@@ -156,6 +208,17 @@ impl DistanceEngine for BlockedEngine {
     /// kernels, so entries are bitwise identical without the n² interim.
     fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
         Ok(CondensedMatrix::build_blocked(points, metric))
+    }
+
+    /// Band-streamed build on the shared pair kernels — bitwise identical
+    /// to the dense blocked build, one shard resident at a time.
+    fn build_sharded(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<ShardedTriangle> {
+        ShardedTriangle::build_blocked(points, metric, opts)
     }
 }
 
@@ -180,6 +243,19 @@ impl DistanceEngine for ParallelEngine {
     fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
         Ok(CondensedMatrix::build_parallel(points, metric, self.threads))
     }
+
+    /// Shard-parallel build: waves of `min(threads, cache_shards)` bands
+    /// computed concurrently on the shared pair kernels and spilled as
+    /// they complete — bitwise identical to every other blocked-kernel
+    /// build, inside the same RAM budget reads are capped to.
+    fn build_sharded(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<ShardedTriangle> {
+        ShardedTriangle::build_parallel(points, metric, opts, self.threads)
+    }
 }
 
 /// Half-memory engine: the n(n−1)/2 condensed form is its natural
@@ -200,6 +276,17 @@ impl DistanceEngine for CondensedEngine {
     /// Condensed is this engine's natural representation: no expansion.
     fn build_condensed(&self, points: &Points, metric: Metric) -> Result<CondensedMatrix> {
         Ok(CondensedMatrix::build(points, metric))
+    }
+
+    /// Band-streamed direct evaluation — the sharded twin of this engine's
+    /// condensed form, bitwise identical to it.
+    fn build_sharded(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<ShardedTriangle> {
+        ShardedTriangle::build(points, metric, opts)
     }
 }
 
@@ -295,8 +382,12 @@ mod tests {
             let cond = e
                 .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
                 .unwrap();
+            let shard = e
+                .build_storage(&ds.points, Metric::Euclidean, StorageKind::Sharded)
+                .unwrap();
             assert_eq!(dense.kind(), StorageKind::Dense, "{}", e.name());
             assert_eq!(cond.kind(), StorageKind::Condensed, "{}", e.name());
+            assert_eq!(shard.kind(), StorageKind::Sharded, "{}", e.name());
             for i in 0..60 {
                 for j in 0..60 {
                     // the storage contract: layout changes, values do not
@@ -306,6 +397,12 @@ mod tests {
                         "{} ({i},{j})",
                         e.name()
                     );
+                    assert_eq!(
+                        dense.get(i, j),
+                        shard.get(i, j),
+                        "{} sharded ({i},{j})",
+                        e.name()
+                    );
                 }
             }
             assert!(cond.distance_bytes() * 2 < dense.distance_bytes() + 60 * 8);
@@ -313,8 +410,40 @@ mod tests {
     }
 
     #[test]
+    fn sharded_hook_respects_the_options() {
+        let ds = blobs(70, 2, 2, 0.5, 96);
+        let opts = ShardOptions {
+            shard_rows: 9,
+            cache_shards: 2,
+            spill_dir: None,
+        };
+        for e in [
+            Box::new(NaiveEngine) as Box<dyn DistanceEngine>,
+            Box::new(ParallelEngine { threads: 3 }),
+        ] {
+            let s = e.build_sharded(&ds.points, Metric::Euclidean, &opts).unwrap();
+            assert_eq!(s.shard_rows(), 9);
+            assert_eq!(s.bands(), 69usize.div_ceil(9));
+            // the configured storage selector must route the same knobs
+            let via_selector = e
+                .build_storage_with(&ds.points, Metric::Euclidean, StorageKind::Sharded, &opts)
+                .unwrap();
+            let st = via_selector.as_sharded().expect("sharded arm");
+            assert_eq!(st.shard_rows(), 9);
+            assert_eq!(st.cache_shards(), 2);
+            let dense = e.build(&ds.points, Metric::Euclidean).unwrap();
+            for i in 0..70 {
+                for j in 0..70 {
+                    assert_eq!(s.get(i, j), dense.get(i, j), "{} ({i},{j})", e.name());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn default_build_storage_compresses_the_dense_path() {
-        // the simulated XLA engine exercises the trait default
+        // the simulated XLA engine exercises the trait defaults for both
+        // the condensed and the sharded (spill-the-condensed-form) routes
         let sim = crate::runtime::SimulatedXlaEngine::new(true);
         let ds = blobs(50, 2, 2, 0.5, 95);
         let z = crate::data::scale::Scaler::standardized(&ds.points);
@@ -324,14 +453,21 @@ mod tests {
         let cond = sim
             .build_storage(&z, Metric::Euclidean, StorageKind::Condensed)
             .unwrap();
+        let shard = sim
+            .build_storage(&z, Metric::Euclidean, StorageKind::Sharded)
+            .unwrap();
         for i in 0..50 {
             for j in 0..50 {
                 assert_eq!(dense.get(i, j), cond.get(i, j));
+                assert_eq!(dense.get(i, j), shard.get(i, j));
             }
         }
         // unsupported metrics are refused through the storage path too
         assert!(sim
             .build_storage(&z, Metric::Manhattan, StorageKind::Condensed)
+            .is_err());
+        assert!(sim
+            .build_storage(&z, Metric::Manhattan, StorageKind::Sharded)
             .is_err());
     }
 }

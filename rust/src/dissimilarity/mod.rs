@@ -19,19 +19,24 @@
 //! the trait, not on concrete builders.
 //!
 //! Orthogonal to the *builder* choice is the *storage* choice: the
-//! [`storage::DistanceStorage`] trait abstracts dense ([`DistanceMatrix`])
-//! vs condensed ([`condensed::CondensedMatrix`]) layouts, and every stage
-//! downstream of the distance build (VAT Prim sweep, iVAT, block detection,
-//! rendering, silhouette) is generic over it. See `storage.rs` module docs.
+//! [`storage::DistanceStorage`] trait abstracts dense ([`DistanceMatrix`]),
+//! condensed ([`condensed::CondensedMatrix`]), and sharded out-of-core
+//! ([`shard::ShardedTriangle`], spilled via [`ooc`]) layouts, and every
+//! stage downstream of the distance build (VAT Prim sweep, iVAT, block
+//! detection, rendering, silhouette) is generic over it. See `storage.rs`
+//! and `shard.rs` module docs.
 
 pub mod blocked;
 pub mod condensed;
 pub mod engine;
 pub mod mahalanobis;
 pub mod naive;
+pub mod ooc;
 pub mod parallel;
+pub mod shard;
 pub mod storage;
 
+pub use shard::{ShardOptions, ShardedTriangle};
 pub use storage::{DistanceStorage, DistanceStore, PermutedView, StorageKind};
 
 use crate::data::Points;

@@ -1,0 +1,277 @@
+//! Out-of-core plumbing for the sharded distance tier: anonymous spill
+//! files that hold the condensed triangle on disk.
+//!
+//! Nothing here knows about distances — [`SpillFile`] is a flat array of
+//! f64 entries on disk with positional chunked read/write (little-endian,
+//! fixed 64 KiB scratch so IO never doubles the resident band buffer) and
+//! unlink-on-drop lifetime. The shard layout, the LRU of hot shards, and
+//! the [`crate::dissimilarity::DistanceStorage`] implementation live in
+//! [`crate::dissimilarity::shard`]; this module is deliberately the only
+//! place that touches the filesystem.
+//!
+//! Plain `File` IO through a `Mutex` — no mmap, no `O_DIRECT`, no new
+//! dependencies — keeps the tier portable and the failure modes boring;
+//! the LRU above it is what makes the hot path RAM-speed.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+/// Per-process sequence number: together with the pid this makes spill
+/// file names unique without consulting a clock or an RNG.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Crash-leak containment: spill files are unlinked on drop, so a killed
+/// process (OOM, SIGKILL) leaves its whole triangle behind. Once per
+/// spill dir per process, the first use sweeps `fastvat-shard-<pid>-*.bin`
+/// files whose owning pid is no longer alive AND whose mtime is at least
+/// [`STALE_SPILL_MIN_AGE`] old. The age guard exists because `/proc`
+/// liveness is PID-namespace-local while the directory may not be (two
+/// containers sharing a spill volume cannot see each other's pids): a
+/// foreign live job's spill is written once at build time, so requiring
+/// the file to be both "pid dead here" and old keeps the reclaim from
+/// racing jobs in other namespaces, while crash leaks — which persist
+/// forever — are still collected, just on a delay. Best effort: the
+/// sweep is skipped entirely where `/proc` does not exist and every
+/// failure is ignored — it must never break a build. Deployments sharing
+/// one spill volume across PID namespaces should still prefer per-node
+/// `spill_dir`s.
+pub(crate) fn sweep_stale_spills(dir: &Path) {
+    sweep_stale_spills_older_than(dir, STALE_SPILL_MIN_AGE);
+}
+
+/// Minimum age before a dead-owner spill file is reclaimed (see
+/// [`sweep_stale_spills`]).
+pub(crate) const STALE_SPILL_MIN_AGE: std::time::Duration =
+    std::time::Duration::from_secs(60 * 60);
+
+pub(crate) fn sweep_stale_spills_older_than(dir: &Path, min_age: std::time::Duration) {
+    if !Path::new("/proc").is_dir() {
+        return;
+    }
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let own_pid = std::process::id().to_string();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix("fastvat-shard-") else {
+            continue;
+        };
+        if !name.ends_with(".bin") {
+            continue;
+        }
+        let Some((pid, _)) = rest.split_once('-') else {
+            continue;
+        };
+        if pid == own_pid || pid.parse::<u32>().is_err() {
+            continue;
+        }
+        let old_enough = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= min_age);
+        if old_enough && !Path::new("/proc").join(pid).is_dir() {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// IO scratch size for the entry<->byte conversion (8192 entries).
+const CHUNK_BYTES: usize = 64 * 1024;
+
+/// A flat array of f64 entries spilled to a plain file. The file is
+/// created exclusively (`create_new`), read/written positionally under an
+/// internal mutex, and unlinked when the last owner drops it.
+#[derive(Debug)]
+pub struct SpillFile {
+    file: Mutex<File>,
+    path: PathBuf,
+}
+
+impl SpillFile {
+    /// Create a fresh spill file in `dir` (created if missing). The name is
+    /// `fastvat-shard-<pid>-<seq>.bin`; a stale file from a crashed earlier
+    /// process with the same pid is skipped, not clobbered.
+    pub fn create_in(dir: &Path) -> Result<SpillFile> {
+        std::fs::create_dir_all(dir)?;
+        // reclaim what a crashed predecessor left behind — once per
+        // distinct spill dir per process (the sweep is O(dir entries);
+        // deployments mixing spill_dirs must have each one reclaimed, not
+        // just whichever directory happened to be used first)
+        static SWEPT: Mutex<Vec<PathBuf>> = Mutex::new(Vec::new());
+        {
+            let mut swept = SWEPT.lock().unwrap_or_else(|e| e.into_inner());
+            if !swept.iter().any(|d| d.as_path() == dir) {
+                swept.push(dir.to_path_buf());
+                sweep_stale_spills(dir);
+            }
+        }
+        let pid = std::process::id();
+        for _ in 0..1024 {
+            let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+            let path = dir.join(format!("fastvat-shard-{pid}-{seq}.bin"));
+            match OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(file) => {
+                    return Ok(SpillFile {
+                        file: Mutex::new(file),
+                        path,
+                    })
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+        Err(Error::Io(std::io::Error::new(
+            std::io::ErrorKind::AlreadyExists,
+            format!("no free spill file name under {}", dir.display()),
+        )))
+    }
+
+    /// Where the file lives (diagnostics; the file is unlinked on drop).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write `data` at entry offset `offset` (f64 units, little-endian).
+    pub fn write_f64s_at(&self, offset: u64, data: &[f64]) -> Result<()> {
+        let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        file.seek(SeekFrom::Start(offset * 8))?;
+        let mut scratch = [0u8; CHUNK_BYTES];
+        for chunk in data.chunks(CHUNK_BYTES / 8) {
+            for (v, slot) in chunk.iter().zip(scratch.chunks_exact_mut(8)) {
+                slot.copy_from_slice(&v.to_le_bytes());
+            }
+            file.write_all(&scratch[..chunk.len() * 8])?;
+        }
+        Ok(())
+    }
+
+    /// Fill `out` from entry offset `offset` (f64 units, little-endian).
+    pub fn read_f64s_at(&self, offset: u64, out: &mut [f64]) -> Result<()> {
+        let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        file.seek(SeekFrom::Start(offset * 8))?;
+        let mut scratch = [0u8; CHUNK_BYTES];
+        for chunk in out.chunks_mut(CHUNK_BYTES / 8) {
+            let bytes = &mut scratch[..chunk.len() * 8];
+            file.read_exact(bytes)?;
+            for (slot, raw) in chunk.iter_mut().zip(bytes.chunks_exact(8)) {
+                *slot = f64::from_le_bytes(raw.try_into().expect("8-byte chunk"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_at_offsets() {
+        let f = SpillFile::create_in(&std::env::temp_dir()).unwrap();
+        let a: Vec<f64> = (0..1000).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let b: Vec<f64> = (0..17).map(|i| -(i as f64)).collect();
+        f.write_f64s_at(0, &a).unwrap();
+        f.write_f64s_at(1000, &b).unwrap();
+        let mut got_a = vec![0.0; 1000];
+        let mut got_b = vec![0.0; 17];
+        f.read_f64s_at(0, &mut got_a).unwrap();
+        f.read_f64s_at(1000, &mut got_b).unwrap();
+        assert_eq!(got_a, a);
+        assert_eq!(got_b, b);
+        // bitwise fidelity for non-finite and signed-zero entries too
+        let weird = [f64::INFINITY, -0.0, f64::MIN_POSITIVE];
+        f.write_f64s_at(500, &weird).unwrap();
+        let mut got_w = vec![0.0; 3];
+        f.read_f64s_at(500, &mut got_w).unwrap();
+        assert_eq!(got_w[0], f64::INFINITY);
+        assert!(got_w[1] == 0.0 && got_w[1].is_sign_negative());
+        assert_eq!(got_w[2], f64::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn spans_larger_than_one_chunk() {
+        // > 8192 entries forces multiple scratch chunks per call
+        let f = SpillFile::create_in(&std::env::temp_dir()).unwrap();
+        let big: Vec<f64> = (0..20_000).map(|i| (i as f64).sin()).collect();
+        f.write_f64s_at(3, &big).unwrap();
+        let mut got = vec![0.0; 20_000];
+        f.read_f64s_at(3, &mut got).unwrap();
+        assert_eq!(got, big);
+    }
+
+    #[test]
+    fn file_is_unlinked_on_drop() {
+        let path = {
+            let f = SpillFile::create_in(&std::env::temp_dir()).unwrap();
+            f.write_f64s_at(0, &[1.0, 2.0]).unwrap();
+            assert!(f.path().exists());
+            f.path().to_path_buf()
+        };
+        assert!(!path.exists(), "spill file must be removed on drop");
+    }
+
+    #[test]
+    fn names_are_unique_within_the_process() {
+        let a = SpillFile::create_in(&std::env::temp_dir()).unwrap();
+        let b = SpillFile::create_in(&std::env::temp_dir()).unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn stale_spills_from_dead_processes_are_swept_live_ones_kept() {
+        if !Path::new("/proc").is_dir() {
+            return; // liveness check unavailable on this platform
+        }
+        let dir = std::env::temp_dir().join(format!(
+            "fastvat-sweep-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        // pid 0 is the scheduler — /proc/0 never exists, so this reads as
+        // a dead owner; our own pid reads as alive
+        let dead = dir.join("fastvat-shard-0-7.bin");
+        let alive = dir.join(format!("fastvat-shard-{}-7.bin", std::process::id()));
+        let unrelated = dir.join("notes.txt");
+        for p in [&dead, &alive, &unrelated] {
+            std::fs::write(p, b"x").unwrap();
+        }
+        // the production threshold keeps even a dead-owner file while it is
+        // fresh (PID-namespace safety margin)...
+        sweep_stale_spills(&dir);
+        assert!(dead.exists(), "fresh files must survive the aged sweep");
+        // ...and the age-zero sweep shows the reclaim logic itself
+        sweep_stale_spills_older_than(&dir, std::time::Duration::ZERO);
+        assert!(!dead.exists(), "dead-owner spill must be reclaimed");
+        assert!(alive.exists(), "live-owner spill must be kept");
+        assert!(unrelated.exists(), "non-spill files must be untouched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_past_end_errors() {
+        let f = SpillFile::create_in(&std::env::temp_dir()).unwrap();
+        f.write_f64s_at(0, &[1.0]).unwrap();
+        let mut out = vec![0.0; 4];
+        assert!(f.read_f64s_at(0, &mut out).is_err());
+    }
+}

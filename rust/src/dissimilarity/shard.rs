@@ -1,0 +1,868 @@
+//! The sharded, out-of-core distance tier: the condensed n(n−1)/2 upper
+//! triangle split into fixed-size row-band shards, spilled to disk, with an
+//! in-memory LRU of hot shards.
+//!
+//! PR 2's condensed layout halved the resident triangle; this module takes
+//! the next step named in ROADMAP.md: the triangle no longer has to be
+//! resident at all. [`ShardedTriangle`] implements
+//! [`DistanceStorage`], so the VAT Prim sweep, iVAT, sVAT, the block
+//! detector, silhouette, and the renderers run **unmodified** against it —
+//! peak in-RAM distance bytes drop from O(n²) to
+//! O(`cache_shards` · `shard_rows` · n), turning disk capacity into the new
+//! ceiling for n (the sVAT/§5.2 scalability direction of the source paper,
+//! and the same row-band streaming that MST-of-millions pipelines use).
+//!
+//! Layout: band `b` owns the condensed entries of rows
+//! `[b·shard_rows, (b+1)·shard_rows)` — exactly the contiguous slice
+//! `offsets[b]..offsets[b+1]` of the scipy `pdist` buffer, so the spill
+//! file as a whole *is* the condensed buffer and every entry is bitwise
+//! identical to the [`CondensedMatrix`] (and dense) forms built by the same
+//! engine. Values never change across storage kinds; only residency does
+//! (locked by `tests/storage_parity.rs`).
+//!
+//! Failure model: building and spilling return `Result`; *reads* go through
+//! the infallible [`DistanceStorage`] trait, so a spill file that vanishes
+//! mid-computation panics with context (the same contract as an allocation
+//! failure for the in-RAM layouts).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::condensed::CondensedMatrix;
+use super::ooc::SpillFile;
+use super::storage::{DistanceStorage, StorageKind};
+use super::{blocked, DistanceMatrix, Metric};
+use crate::data::Points;
+use crate::error::{Error, Result};
+
+/// Tuning knobs for the sharded tier — the `shard_rows` / `cache_shards` /
+/// `spill_dir` config and CLI options.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardOptions {
+    /// Rows of the (square-form) matrix per shard. Peak resident distance
+    /// bytes scale as `cache_shards · shard_rows · n · 8`.
+    pub shard_rows: usize,
+    /// How many shards the LRU keeps hot in RAM (≥ 1). `1` forces a
+    /// spill-file read on every band switch — the configuration the CI
+    /// disk-path leg runs the parity suite under.
+    pub cache_shards: usize,
+    /// Directory for spill files (`None` → the OS temp dir). Files are
+    /// unlinked when the storage (and all its clones) drop; crash leaks
+    /// are reclaimed by a best-effort aged sweep on first use (see
+    /// `ooc::sweep_stale_spills`). Prefer a per-node directory — the
+    /// sweep's pid-liveness check is PID-namespace-local, so containers
+    /// should not share one spill volume.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            shard_rows: 256,
+            cache_shards: 4,
+            spill_dir: None,
+        }
+    }
+}
+
+impl ShardOptions {
+    fn validate(&self) -> Result<()> {
+        if self.shard_rows == 0 {
+            return Err(Error::InvalidArg("shard_rows must be >= 1".into()));
+        }
+        if self.cache_shards == 0 {
+            return Err(Error::InvalidArg("cache_shards must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    fn dir(&self) -> PathBuf {
+        self.spill_dir.clone().unwrap_or_else(std::env::temp_dir)
+    }
+}
+
+/// Number of row bands: rows `0..n-1` carry entries (row n−1 carries none),
+/// grouped `shard_rows` at a time.
+fn band_count(n: usize, shard_rows: usize) -> usize {
+    if n < 2 {
+        0
+    } else {
+        (n - 1).div_ceil(shard_rows)
+    }
+}
+
+/// Entries in rows `< r` of the condensed layout.
+fn entries_before_row(n: usize, r: usize) -> u64 {
+    let r = r.min(n) as u64;
+    let n = n as u64;
+    r * n - r * (r + 1) / 2
+}
+
+/// `offsets[b]` = entry offset of band `b` in the spill file;
+/// `offsets[bands]` = n(n−1)/2.
+fn band_offsets(n: usize, shard_rows: usize, bands: usize) -> Vec<u64> {
+    (0..=bands)
+        .map(|b| entries_before_row(n, b * shard_rows))
+        .collect()
+}
+
+/// LRU of hot shards: most recently used at the back.
+#[derive(Debug, Default)]
+struct BandCache {
+    entries: Vec<(u32, Vec<f64>)>,
+    bytes: usize,
+}
+
+/// The condensed upper triangle in fixed-size row-band shards on disk, with
+/// an LRU of hot shards. Cloning shares the spill file (refcounted; the
+/// file is unlinked when the last clone drops) but starts a fresh cache.
+pub struct ShardedTriangle {
+    n: usize,
+    shard_rows: usize,
+    cache_shards: usize,
+    offsets: Arc<Vec<u64>>,
+    spill: Arc<SpillFile>,
+    cache: Mutex<BandCache>,
+    /// High-water mark of in-RAM distance bytes this instance held: cache
+    /// occupancy, the transient build buffers of the constructor that
+    /// produced it, and — for the spill-an-existing-buffer routes
+    /// (`from_condensed`, `from_square_flat`, the default engine
+    /// `build_sharded`) — the resident source buffer, so the §5.1 audit
+    /// hook never under-reports an O(n²) build as out-of-core.
+    peak: AtomicUsize,
+}
+
+impl ShardedTriangle {
+    // ---- construction ----------------------------------------------------
+
+    fn assemble(
+        n: usize,
+        opts: &ShardOptions,
+        offsets: Vec<u64>,
+        spill: SpillFile,
+        build_peak: usize,
+    ) -> Self {
+        Self {
+            n,
+            shard_rows: opts.shard_rows,
+            cache_shards: opts.cache_shards,
+            offsets: Arc::new(offsets),
+            spill: Arc::new(spill),
+            cache: Mutex::new(BandCache::default()),
+            peak: AtomicUsize::new(build_peak),
+        }
+    }
+
+    /// Build band by band through `fill(rows, out)` — one band buffer is
+    /// resident at a time, so the build itself stays inside the
+    /// O(shard_rows·n) envelope.
+    fn with_bands(
+        n: usize,
+        opts: &ShardOptions,
+        mut fill: impl FnMut(std::ops::Range<usize>, &mut [f64]) -> Result<()>,
+    ) -> Result<Self> {
+        opts.validate()?;
+        let sr = opts.shard_rows;
+        let bands = band_count(n, sr);
+        let offsets = band_offsets(n, sr, bands);
+        let spill = SpillFile::create_in(&opts.dir())?;
+        let mut build_peak = 0usize;
+        let mut buf: Vec<f64> = Vec::new();
+        for b in 0..bands {
+            let rows = (b * sr)..((b + 1) * sr).min(n);
+            let len = (offsets[b + 1] - offsets[b]) as usize;
+            buf.clear();
+            buf.resize(len, 0.0);
+            build_peak = build_peak.max(len * 8);
+            fill(rows, &mut buf)?;
+            spill.write_f64s_at(offsets[b], &buf)?;
+        }
+        Ok(Self::assemble(n, opts, offsets, spill, build_peak))
+    }
+
+    /// Build with direct per-pair `metric.eval` — bitwise identical to
+    /// [`CondensedMatrix::build`] and the naive dense builder (the
+    /// naive/condensed engine family).
+    pub fn build(points: &Points, metric: Metric, opts: &ShardOptions) -> Result<Self> {
+        let n = points.n();
+        Self::with_bands(n, opts, |rows, out| {
+            let mut slot = out.iter_mut();
+            for i in rows {
+                let a = points.row(i);
+                for j in (i + 1)..n {
+                    *slot.next().expect("band sized to its rows") =
+                        metric.eval(a, points.row(j));
+                }
+            }
+            debug_assert!(slot.next().is_none());
+            Ok(())
+        })
+    }
+
+    /// Build sharing the blocked builder's pair kernels (precomputed-norm
+    /// dot trick for (Sq)Euclidean, hoisted once for the whole build) —
+    /// entries bitwise identical to `DistanceMatrix::build_blocked` /
+    /// [`CondensedMatrix::build_blocked`] without ever holding more than
+    /// one band in RAM.
+    pub fn build_blocked(
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<Self> {
+        let (norms, dot) = blocked::condensed_kernel(points, metric);
+        Self::with_bands(points.n(), opts, |rows, out| {
+            blocked::fill_condensed_rows(points, metric, norms.as_deref(), dot, rows, out);
+            Ok(())
+        })
+    }
+
+    /// Shard-parallel build: waves of concurrent bands filled on the shared
+    /// blocked pair kernels (entries bitwise identical to
+    /// [`ShardedTriangle::build_blocked`]) and spilled as each wave
+    /// completes. The wave width is `min(threads, cache_shards)` — the
+    /// build honors the same `cache_shards · shard_rows · n · 8` RAM budget
+    /// the operator configured for reads, never silently exceeding the
+    /// out-of-core envelope on a many-core box. `threads = 0` uses all
+    /// cores (still capped by `cache_shards`).
+    pub fn build_parallel(
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+        threads: usize,
+    ) -> Result<Self> {
+        opts.validate()?;
+        let n = points.n();
+        let sr = opts.shard_rows;
+        let bands = band_count(n, sr);
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(4)
+        } else {
+            threads
+        }
+        .clamp(1, bands.max(1))
+        .min(opts.cache_shards);
+        if bands <= 1 || threads == 1 {
+            return Self::build_blocked(points, metric, opts);
+        }
+        let offsets = band_offsets(n, sr, bands);
+        let spill = SpillFile::create_in(&opts.dir())?;
+        // hoisted once and shared read-only by every wave's threads
+        let (norms, dot) = blocked::condensed_kernel(points, metric);
+        let norms = norms.as_deref();
+        let mut build_peak = 0usize;
+        let mut b = 0usize;
+        while b < bands {
+            let wave_end = (b + threads).min(bands);
+            let mut bufs: Vec<Vec<f64>> = (b..wave_end)
+                .map(|bb| vec![0.0; (offsets[bb + 1] - offsets[bb]) as usize])
+                .collect();
+            std::thread::scope(|scope| {
+                for (k, buf) in bufs.iter_mut().enumerate() {
+                    let rows = ((b + k) * sr)..((b + k + 1) * sr).min(n);
+                    scope.spawn(move || {
+                        blocked::fill_condensed_rows(points, metric, norms, dot, rows, buf);
+                    });
+                }
+            });
+            build_peak = build_peak.max(bufs.iter().map(|v| v.len() * 8).sum());
+            for (k, buf) in bufs.iter().enumerate() {
+                spill.write_f64s_at(offsets[b + k], buf)?;
+            }
+            b = wave_end;
+        }
+        Ok(Self::assemble(n, opts, offsets, spill, build_peak))
+    }
+
+    /// Spill an existing condensed triangle (entries bitwise identical by
+    /// construction) — the default `DistanceEngine::build_sharded` route
+    /// that makes *every* engine, including the XLA backends, shard-capable.
+    /// The source triangle is resident for the whole spill, so it counts
+    /// toward [`ShardedTriangle::peak_resident_bytes`] — this route does
+    /// NOT stay inside the O(shard_rows·n) build envelope (the native
+    /// band-streamed builders do), and the audit must say so.
+    pub fn from_condensed(c: &CondensedMatrix, opts: &ShardOptions) -> Result<Self> {
+        let flat = c.flat();
+        let mut writer = ShardedWriter::new(c.n(), opts)?;
+        writer.push(flat)?;
+        // the source triangle and the band staging buffer coexist
+        writer.peak += c.resident_bytes();
+        writer.finish()
+    }
+
+    /// Compress-and-spill a flat row-major n×n symmetric buffer (each row's
+    /// `j > i` tail, in order — the same square→triangle route as
+    /// [`CondensedMatrix::from_square_flat`], used by the streaming
+    /// snapshot path). The source buffer is resident during the spill and
+    /// counts toward [`ShardedTriangle::peak_resident_bytes`].
+    pub fn from_square_flat(flat: &[f64], n: usize, opts: &ShardOptions) -> Result<Self> {
+        if flat.len() != n * n {
+            return Err(Error::Shape(format!(
+                "flat len {} != n*n = {}",
+                flat.len(),
+                n * n
+            )));
+        }
+        let mut writer = ShardedWriter::new(n, opts)?;
+        for i in 0..n {
+            writer.push(&flat[i * n + i + 1..(i + 1) * n])?;
+        }
+        // the source square buffer and the band staging buffer coexist
+        writer.peak += std::mem::size_of_val(flat);
+        writer.finish()
+    }
+
+    // ---- layout ----------------------------------------------------------
+
+    /// Side of the square form.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries (on disk).
+    pub fn len(&self) -> usize {
+        *self.offsets.last().expect("offsets non-empty") as usize
+    }
+
+    /// True when there are no pairs (n < 2).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rows per shard.
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// LRU capacity in shards.
+    pub fn cache_shards(&self) -> usize {
+        self.cache_shards
+    }
+
+    /// Number of row-band shards.
+    pub fn bands(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Where the triangle is spilled (unlinked when the last clone drops).
+    pub fn spill_path(&self) -> &Path {
+        self.spill.path()
+    }
+
+    /// Bytes the spill file holds (the full triangle).
+    pub fn file_bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f64>()
+    }
+
+    /// In-RAM distance bytes currently held (LRU occupancy) — bounded by
+    /// `cache_shards · shard_rows · n · 8`.
+    pub fn resident_bytes(&self) -> usize {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).bytes
+    }
+
+    /// High-water mark of in-RAM distance bytes (build buffers + cache) —
+    /// what the `FootprintAudit` bound in `tests/storage_parity.rs` checks.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j);
+        i * self.n - i * (i + 1) / 2 + (j - i - 1)
+    }
+
+    /// Run `f` over band `b`'s entries, loading it from the spill file into
+    /// the LRU if cold (evicting least-recently-used shards beyond
+    /// `cache_shards` first, so occupancy never exceeds the budget).
+    fn with_band<R>(&self, b: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = cache.entries.iter().position(|(id, _)| *id == b as u32) {
+            let entry = cache.entries.remove(pos);
+            cache.entries.push(entry);
+            return f(&cache.entries.last().expect("just pushed").1);
+        }
+        while cache.entries.len() >= self.cache_shards {
+            let (_, old) = cache.entries.remove(0);
+            cache.bytes -= old.len() * std::mem::size_of::<f64>();
+        }
+        let len = (self.offsets[b + 1] - self.offsets[b]) as usize;
+        let mut buf = vec![0.0f64; len];
+        self.spill
+            .read_f64s_at(self.offsets[b], &mut buf)
+            .expect("sharded distance tier: spill file read failed");
+        cache.bytes += len * std::mem::size_of::<f64>();
+        self.peak.fetch_max(cache.bytes, Ordering::Relaxed);
+        cache.entries.push((b as u32, buf));
+        f(&cache.entries.last().expect("just pushed").1)
+    }
+
+    // ---- reads (square-form semantics, identical to CondensedMatrix) ----
+
+    /// Entry (i, j); the diagonal is implicitly zero.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = match i.cmp(&j) {
+            std::cmp::Ordering::Equal => return 0.0,
+            std::cmp::Ordering::Less => (i, j),
+            std::cmp::Ordering::Greater => (j, i),
+        };
+        let b = i / self.shard_rows;
+        let local = self.index(i, j) - self.offsets[b] as usize;
+        self.with_band(b, |buf| buf[local])
+    }
+
+    /// Copy row `i` of the square form into `out` (`out.len() == n`). The
+    /// `j > i` tail is one contiguous copy from row `i`'s own band; the
+    /// `j < i` head gathers down the column through each earlier band once.
+    pub fn fill_row(&self, i: usize, out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(out.len(), n, "fill_row buffer must have length n");
+        assert!(i < n, "row {i} out of range for n {n}");
+        let mut j = 0usize;
+        while j < i {
+            let b = j / self.shard_rows;
+            let hi = ((b + 1) * self.shard_rows).min(i);
+            let off = self.offsets[b] as usize;
+            self.with_band(b, |buf| {
+                for jj in j..hi {
+                    out[jj] = buf[self.index(jj, i) - off];
+                }
+            });
+            j = hi;
+        }
+        out[i] = 0.0;
+        if i + 1 < n {
+            let b = i / self.shard_rows;
+            let start = self.index(i, i + 1) - self.offsets[b] as usize;
+            self.with_band(b, |buf| {
+                out[i + 1..].copy_from_slice(&buf[start..start + (n - i - 1)]);
+            });
+        }
+    }
+
+    /// Largest entry of the square form (one streaming pass over the
+    /// shards; the implicit zero diagonal counts for n > 0) — identical
+    /// semantics to [`CondensedMatrix::max_value`].
+    pub fn max_value(&self) -> f64 {
+        let mut best = f64::NEG_INFINITY;
+        for b in 0..self.bands() {
+            self.with_band(b, |buf| {
+                for &v in buf {
+                    best = best.max(v);
+                }
+            });
+        }
+        if self.n > 0 {
+            best.max(0.0)
+        } else {
+            best
+        }
+    }
+
+    /// VAT seed row: first upper-triangle (row-major) occurrence of the
+    /// global maximum, streamed shard by shard — identical semantics to
+    /// [`CondensedMatrix::seed_row`].
+    pub fn seed_row(&self) -> usize {
+        let mut best_i = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for b in 0..self.bands() {
+            let rows = (b * self.shard_rows)..((b + 1) * self.shard_rows).min(self.n);
+            self.with_band(b, |buf| {
+                let mut idx = 0usize;
+                for i in rows {
+                    for _j in (i + 1)..self.n {
+                        let v = buf[idx];
+                        if v > best_v {
+                            best_v = v;
+                            best_i = i;
+                        }
+                        idx += 1;
+                    }
+                }
+            });
+        }
+        if best_v <= 0.0 {
+            0
+        } else {
+            best_i
+        }
+    }
+
+    /// Expand to dense square storage (interop escape hatch; streams each
+    /// shard once).
+    pub fn to_square(&self) -> DistanceMatrix {
+        let mut m = DistanceMatrix::zeros(self.n);
+        for b in 0..self.bands() {
+            let rows = (b * self.shard_rows)..((b + 1) * self.shard_rows).min(self.n);
+            self.with_band(b, |buf| {
+                let mut idx = 0usize;
+                for i in rows {
+                    for j in (i + 1)..self.n {
+                        let v = buf[idx];
+                        m.set(i, j, v);
+                        m.set(j, i, v);
+                        idx += 1;
+                    }
+                }
+            });
+        }
+        m
+    }
+}
+
+impl Clone for ShardedTriangle {
+    /// Shares the spill file (unlinked only when the last clone drops);
+    /// the clone starts with a cold cache and a fresh peak counter.
+    fn clone(&self) -> Self {
+        Self {
+            n: self.n,
+            shard_rows: self.shard_rows,
+            cache_shards: self.cache_shards,
+            offsets: Arc::clone(&self.offsets),
+            spill: Arc::clone(&self.spill),
+            cache: Mutex::new(BandCache::default()),
+            peak: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl PartialEq for ShardedTriangle {
+    /// Value equality of the square forms (streamed; test/diagnostic use —
+    /// this reads both triangles end to end).
+    fn eq(&self, other: &Self) -> bool {
+        if self.n != other.n {
+            return false;
+        }
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if self.get(i, j) != other.get(i, j) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::fmt::Debug for ShardedTriangle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedTriangle")
+            .field("n", &self.n)
+            .field("shard_rows", &self.shard_rows)
+            .field("cache_shards", &self.cache_shards)
+            .field("bands", &self.bands())
+            .field("spill", &self.spill.path())
+            .finish()
+    }
+}
+
+impl DistanceStorage for ShardedTriangle {
+    fn n(&self) -> usize {
+        ShardedTriangle::n(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        ShardedTriangle::get(self, i, j)
+    }
+
+    fn kind(&self) -> StorageKind {
+        StorageKind::Sharded
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        ShardedTriangle::fill_row(self, i, out);
+    }
+
+    fn max_value(&self) -> f64 {
+        ShardedTriangle::max_value(self)
+    }
+
+    fn seed_row(&self) -> usize {
+        ShardedTriangle::seed_row(self)
+    }
+
+    fn distance_bytes(&self) -> usize {
+        self.resident_bytes()
+    }
+}
+
+/// Streaming constructor for a [`ShardedTriangle`]: accepts condensed
+/// entries in scipy `pdist` order (any slice granularity) and spills each
+/// band as it fills, holding at most one band in RAM. This is how iVAT
+/// emits its transform shard by shard without a resident triangle.
+pub struct ShardedWriter {
+    n: usize,
+    opts: ShardOptions,
+    offsets: Vec<u64>,
+    spill: SpillFile,
+    band: usize,
+    buf: Vec<f64>,
+    peak: usize,
+}
+
+impl ShardedWriter {
+    /// Start a writer for an n×n square form.
+    pub fn new(n: usize, opts: &ShardOptions) -> Result<Self> {
+        opts.validate()?;
+        let bands = band_count(n, opts.shard_rows);
+        let offsets = band_offsets(n, opts.shard_rows, bands);
+        let spill = SpillFile::create_in(&opts.dir())?;
+        Ok(Self {
+            n,
+            opts: opts.clone(),
+            offsets,
+            spill,
+            band: 0,
+            buf: Vec::new(),
+            peak: 0,
+        })
+    }
+
+    /// Append entries in condensed order; full bands are spilled eagerly.
+    pub fn push(&mut self, mut entries: &[f64]) -> Result<()> {
+        while !entries.is_empty() {
+            if self.band + 1 >= self.offsets.len() {
+                return Err(Error::Shape(format!(
+                    "sharded writer overflow: more than n(n-1)/2 = {} entries",
+                    self.offsets.last().copied().unwrap_or(0)
+                )));
+            }
+            let cap = (self.offsets[self.band + 1] - self.offsets[self.band]) as usize;
+            let take = (cap - self.buf.len()).min(entries.len());
+            self.buf.extend_from_slice(&entries[..take]);
+            entries = &entries[take..];
+            self.peak = self.peak.max(self.buf.len() * 8);
+            if self.buf.len() == cap {
+                self.spill
+                    .write_f64s_at(self.offsets[self.band], &self.buf)?;
+                self.band += 1;
+                self.buf.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the writer; errors unless exactly n(n−1)/2 entries arrived.
+    pub fn finish(self) -> Result<ShardedTriangle> {
+        let bands = self.offsets.len() - 1;
+        if self.band != bands || !self.buf.is_empty() {
+            return Err(Error::Shape(format!(
+                "sharded writer incomplete: {} of {} bands written",
+                self.band, bands
+            )));
+        }
+        Ok(ShardedTriangle::assemble(
+            self.n,
+            &self.opts,
+            self.offsets,
+            self.spill,
+            self.peak,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, gmm};
+    use crate::prng::Pcg32;
+
+    fn opts(shard_rows: usize, cache_shards: usize) -> ShardOptions {
+        ShardOptions {
+            shard_rows,
+            cache_shards,
+            spill_dir: None,
+        }
+    }
+
+    #[test]
+    fn layout_matches_condensed_bitwise() {
+        // every read path — get, fill_row, max, seed — must agree with the
+        // condensed reference, across shard sizes that do and do not divide n
+        let ds = blobs(53, 3, 3, 0.5, 700);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        for sr in [1usize, 7, 16, 52, 53, 200] {
+            let s = ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(sr, 3))
+                .unwrap();
+            assert_eq!(s.len(), c.len(), "sr={sr}");
+            let mut buf_s = vec![0.0; 53];
+            let mut buf_c = vec![0.0; 53];
+            for i in 0..53 {
+                s.fill_row(i, &mut buf_s);
+                c.fill_row(i, &mut buf_c);
+                assert_eq!(buf_s, buf_c, "sr={sr} row {i}");
+                for j in 0..53 {
+                    assert_eq!(s.get(i, j), c.get(i, j), "sr={sr} ({i},{j})");
+                }
+            }
+            assert_eq!(s.max_value(), c.max_value(), "sr={sr}");
+            assert_eq!(s.seed_row(), c.seed_row(), "sr={sr}");
+        }
+    }
+
+    #[test]
+    fn blocked_and_parallel_builds_are_bitwise_blocked_condensed() {
+        let ds = blobs(131, 3, 3, 0.5, 701); // prime n exercises band tails
+        for metric in [Metric::Euclidean, Metric::Manhattan, Metric::Cosine] {
+            let base = CondensedMatrix::build_blocked(&ds.points, metric);
+            let sb =
+                ShardedTriangle::build_blocked(&ds.points, metric, &opts(17, 2)).unwrap();
+            for i in 0..131 {
+                for j in (i + 1)..131 {
+                    assert_eq!(sb.get(i, j), base.get(i, j), "{metric:?} ({i},{j})");
+                }
+            }
+            for threads in [2usize, 3, 0] {
+                let sp = ShardedTriangle::build_parallel(
+                    &ds.points,
+                    metric,
+                    &opts(17, 2),
+                    threads,
+                )
+                .unwrap();
+                assert!(sp == sb, "{metric:?} threads {threads} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn from_condensed_and_from_square_flat_roundtrip() {
+        let ds = gmm(40, 2, 3, 702);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let sq = c.to_square();
+        let a = ShardedTriangle::from_condensed(&c, &opts(9, 2)).unwrap();
+        let b = ShardedTriangle::from_square_flat(sq.flat(), 40, &opts(9, 2)).unwrap();
+        for i in 0..40 {
+            for j in 0..40 {
+                assert_eq!(a.get(i, j), c.get(i, j), "({i},{j})");
+                assert_eq!(b.get(i, j), c.get(i, j), "({i},{j})");
+            }
+        }
+        assert!(ShardedTriangle::from_square_flat(&[0.0; 5], 2, &opts(2, 1)).is_err());
+    }
+
+    #[test]
+    fn single_shard_cache_still_reads_correctly() {
+        // cache_shards = 1 forces a spill reload on every band switch; the
+        // values must not change, only the IO traffic
+        let ds = blobs(60, 2, 3, 0.4, 703);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let s = ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(5, 1)).unwrap();
+        assert_eq!(s.bands(), 12);
+        // column-major-ish access pattern maximizes band switching
+        for j in 0..60 {
+            for i in 0..60 {
+                assert_eq!(s.get(i, j), c.get(i, j), "({i},{j})");
+            }
+        }
+        assert_eq!(s.seed_row(), c.seed_row());
+    }
+
+    #[test]
+    fn resident_bytes_respect_the_cache_budget() {
+        let ds = blobs(80, 2, 2, 0.4, 704);
+        let o = opts(8, 2);
+        let s = ShardedTriangle::build(&ds.points, Metric::Euclidean, &o).unwrap();
+        // touch every band
+        for i in 0..80 {
+            for j in 0..80 {
+                let _ = s.get(i, j);
+            }
+        }
+        let band_cap = 8 * 80 * 8; // shard_rows * n * 8 bytes
+        assert!(s.resident_bytes() <= 2 * band_cap, "{}", s.resident_bytes());
+        assert!(
+            s.peak_resident_bytes() <= 2 * band_cap,
+            "{}",
+            s.peak_resident_bytes()
+        );
+        assert!(s.peak_resident_bytes() > 0);
+        assert_eq!(s.file_bytes(), 80 * 79 / 2 * 8);
+    }
+
+    #[test]
+    fn clone_shares_the_spill_file_until_last_drop() {
+        let ds = blobs(30, 2, 2, 0.4, 705);
+        let s = ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(4, 2)).unwrap();
+        let path = s.spill_path().to_path_buf();
+        let twin = s.clone();
+        assert_eq!(twin.spill_path(), path.as_path());
+        drop(s);
+        assert!(path.exists(), "file must survive while a clone lives");
+        assert_eq!(twin.get(1, 2), twin.get(2, 1));
+        drop(twin);
+        assert!(!path.exists(), "file must be unlinked by the last clone");
+    }
+
+    #[test]
+    fn writer_validates_entry_count() {
+        let mut w = ShardedWriter::new(5, &opts(2, 1)).unwrap();
+        w.push(&[1.0; 4]).unwrap();
+        assert!(w.finish().is_err(), "10 entries expected, 4 given");
+        let mut w = ShardedWriter::new(5, &opts(2, 1)).unwrap();
+        w.push(&[1.0; 10]).unwrap();
+        assert!(w.push(&[1.0]).is_err(), "overflow must be rejected");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let p0 = Points::new(vec![], 0, 2).unwrap();
+        let s0 = ShardedTriangle::build(&p0, Metric::Euclidean, &opts(4, 1)).unwrap();
+        assert_eq!(s0.bands(), 0);
+        assert!(s0.is_empty());
+        assert_eq!(s0.max_value(), f64::NEG_INFINITY);
+        let p1 = Points::new(vec![1.0, 2.0], 1, 2).unwrap();
+        let s1 = ShardedTriangle::build(&p1, Metric::Euclidean, &opts(4, 1)).unwrap();
+        assert_eq!(s1.max_value(), 0.0);
+        assert_eq!(s1.seed_row(), 0);
+        let mut row = vec![9.0];
+        s1.fill_row(0, &mut row);
+        assert_eq!(row, vec![0.0]);
+    }
+
+    #[test]
+    fn negative_buffers_keep_square_semantics() {
+        // non-metric buffers are legal through from_condensed; max/seed
+        // must keep the square-form semantics the condensed layout pins
+        let c = CondensedMatrix::from_flat(vec![-5.0, -1.0, -3.0], 3).unwrap();
+        let s = ShardedTriangle::from_condensed(&c, &opts(1, 1)).unwrap();
+        assert_eq!(s.max_value(), 0.0); // implicit diagonal wins
+        assert_eq!(s.seed_row(), 0);
+        assert_eq!(s.get(0, 1), -5.0);
+        assert_eq!(s.get(2, 1), -3.0);
+    }
+
+    #[test]
+    fn options_validate() {
+        let ds = blobs(10, 2, 1, 0.4, 706);
+        assert!(ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(0, 1)).is_err());
+        assert!(ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(1, 0)).is_err());
+        assert_eq!(ShardOptions::default().shard_rows, 256);
+    }
+
+    #[test]
+    fn vat_order_matches_condensed_property() {
+        // the whole point: the Prim sweep runs unmodified on sharded
+        // storage and reproduces the condensed (== dense) permutation
+        let mut rng = Pcg32::new(707);
+        for trial in 0..8 {
+            let n = 10 + rng.below(70) as usize;
+            let ds = gmm(n, 2, 1 + rng.below(3) as usize, 800 + trial);
+            let c = CondensedMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let sr = 1 + rng.below(20) as usize;
+            let s = ShardedTriangle::build_blocked(
+                &ds.points,
+                Metric::Euclidean,
+                &opts(sr, 1 + rng.below(3) as usize),
+            )
+            .unwrap();
+            let (co, cm) = crate::vat::prim::vat_order_on(&c);
+            let (so, sm) = crate::vat::prim::vat_order_on(&s);
+            assert_eq!(co, so, "trial {trial} n {n} sr {sr}");
+            assert_eq!(cm, sm, "trial {trial} n {n} sr {sr}");
+        }
+    }
+}

@@ -10,9 +10,11 @@
 //!   use (`n`, `get`, sequential row fill, argmax seed scan). The VAT Prim
 //!   sweep, iVAT, sVAT, the block detector, silhouette, and the renderers
 //!   are all generic over this trait.
-//! * [`DistanceMatrix`] (dense) and [`CondensedMatrix`] (n(n−1)/2 upper
-//!   triangle) are the two canonical implementations; [`DistanceStore`] is
-//!   the runtime-chosen sum of the two that the engine layer emits.
+//! * [`DistanceMatrix`] (dense), [`CondensedMatrix`] (n(n−1)/2 upper
+//!   triangle), and [`ShardedTriangle`] (the triangle in row-band shards
+//!   on disk with an LRU of hot shards — see [`super::shard`]) are the
+//!   three canonical implementations; [`DistanceStore`] is the
+//!   runtime-chosen sum of them that the engine layer emits.
 //! * [`PermutedView`] — a zero-copy view of storage under a VAT
 //!   permutation. This replaces the second full n×n `reordered` copy that
 //!   `VatResult` used to materialize: viz renders from the view directly,
@@ -24,11 +26,12 @@
 //! layout (locked by `tests/storage_parity.rs`).
 
 use super::condensed::CondensedMatrix;
+use super::shard::ShardedTriangle;
 use super::DistanceMatrix;
 use crate::error::{Error, Result};
 
-/// Which storage layout to build — the `storage = "dense" | "condensed"`
-/// config/CLI knob.
+/// Which storage layout to build — the
+/// `storage = "dense" | "condensed" | "sharded"` config/CLI knob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum StorageKind {
     /// Full n×n flat matrix (the paper's §3.3 layout).
@@ -36,6 +39,10 @@ pub enum StorageKind {
     Dense,
     /// Upper-triangle n(n−1)/2 buffer — ~half the resident bytes.
     Condensed,
+    /// Out-of-core: the triangle in row-band shards on disk with an LRU of
+    /// hot shards — O(`cache_shards`·`shard_rows`·n) resident bytes (see
+    /// [`super::shard`]).
+    Sharded,
 }
 
 impl StorageKind {
@@ -44,8 +51,9 @@ impl StorageKind {
         match s.to_ascii_lowercase().as_str() {
             "dense" => Ok(StorageKind::Dense),
             "condensed" => Ok(StorageKind::Condensed),
+            "sharded" => Ok(StorageKind::Sharded),
             other => Err(Error::InvalidArg(format!(
-                "unknown storage {other} (expected dense|condensed)"
+                "unknown storage {other} (expected dense|condensed|sharded)"
             ))),
         }
     }
@@ -55,6 +63,7 @@ impl StorageKind {
         match self {
             StorageKind::Dense => "dense",
             StorageKind::Condensed => "condensed",
+            StorageKind::Sharded => "sharded",
         }
     }
 }
@@ -199,8 +208,8 @@ impl DistanceStorage for CondensedMatrix {
     }
 }
 
-/// The engine layer's output: dense or condensed distance storage, chosen
-/// at runtime by the `storage` config knob
+/// The engine layer's output: dense, condensed, or sharded distance
+/// storage, chosen at runtime by the `storage` config knob
 /// (see `DistanceEngine::build_storage`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum DistanceStore {
@@ -208,6 +217,8 @@ pub enum DistanceStore {
     Dense(DistanceMatrix),
     /// Upper-triangle storage.
     Condensed(CondensedMatrix),
+    /// Out-of-core row-band shards (triangle on disk, LRU of hot shards).
+    Sharded(ShardedTriangle),
 }
 
 impl DistanceStore {
@@ -216,6 +227,7 @@ impl DistanceStore {
         match self {
             DistanceStore::Dense(_) => StorageKind::Dense,
             DistanceStore::Condensed(_) => StorageKind::Condensed,
+            DistanceStore::Sharded(_) => StorageKind::Sharded,
         }
     }
 
@@ -224,6 +236,7 @@ impl DistanceStore {
         match self {
             DistanceStore::Dense(m) => m.n(),
             DistanceStore::Condensed(c) => c.n(),
+            DistanceStore::Sharded(s) => s.n(),
         }
     }
 
@@ -232,6 +245,7 @@ impl DistanceStore {
         match self {
             DistanceStore::Dense(m) => m.get(i, j),
             DistanceStore::Condensed(c) => c.get(i, j),
+            DistanceStore::Sharded(s) => s.get(i, j),
         }
     }
 
@@ -240,14 +254,17 @@ impl DistanceStore {
         match self {
             DistanceStore::Dense(m) => m.max_value(),
             DistanceStore::Condensed(c) => c.max_value(),
+            DistanceStore::Sharded(s) => s.max_value(),
         }
     }
 
-    /// Resident distance-buffer bytes.
+    /// Resident distance-buffer bytes (for sharded storage: the LRU's
+    /// current occupancy, not the on-disk triangle).
     pub fn distance_bytes(&self) -> usize {
         match self {
             DistanceStore::Dense(m) => m.resident_bytes(),
             DistanceStore::Condensed(c) => c.resident_bytes(),
+            DistanceStore::Sharded(s) => s.resident_bytes(),
         }
     }
 
@@ -255,24 +272,33 @@ impl DistanceStore {
     pub fn as_dense(&self) -> Option<&DistanceMatrix> {
         match self {
             DistanceStore::Dense(m) => Some(m),
-            DistanceStore::Condensed(_) => None,
+            _ => None,
         }
     }
 
     /// Borrow the condensed matrix if this store is condensed.
     pub fn as_condensed(&self) -> Option<&CondensedMatrix> {
         match self {
-            DistanceStore::Dense(_) => None,
             DistanceStore::Condensed(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Borrow the sharded triangle if this store is sharded.
+    pub fn as_sharded(&self) -> Option<&ShardedTriangle> {
+        match self {
+            DistanceStore::Sharded(s) => Some(s),
+            _ => None,
         }
     }
 
     /// Materialize dense square storage (clone for dense, expand for
-    /// condensed) — interop escape hatch.
+    /// condensed/sharded) — interop escape hatch.
     pub fn to_square(&self) -> DistanceMatrix {
         match self {
             DistanceStore::Dense(m) => m.clone(),
             DistanceStore::Condensed(c) => c.to_square(),
+            DistanceStore::Sharded(s) => s.to_square(),
         }
     }
 }
@@ -294,13 +320,14 @@ impl DistanceStorage for DistanceStore {
         match self {
             DistanceStore::Dense(m) => DistanceStorage::fill_row(m, i, out),
             DistanceStore::Condensed(c) => CondensedMatrix::fill_row(c, i, out),
+            DistanceStore::Sharded(s) => ShardedTriangle::fill_row(s, i, out),
         }
     }
 
     fn row_slice(&self, i: usize) -> Option<&[f64]> {
         match self {
             DistanceStore::Dense(m) => Some(m.row(i)),
-            DistanceStore::Condensed(_) => None,
+            _ => None,
         }
     }
 
@@ -312,6 +339,7 @@ impl DistanceStorage for DistanceStore {
         match self {
             DistanceStore::Dense(m) => DistanceStorage::seed_row(m),
             DistanceStore::Condensed(c) => CondensedMatrix::seed_row(c),
+            DistanceStore::Sharded(s) => ShardedTriangle::seed_row(s),
         }
     }
 
@@ -329,6 +357,12 @@ impl From<DistanceMatrix> for DistanceStore {
 impl From<CondensedMatrix> for DistanceStore {
     fn from(c: CondensedMatrix) -> Self {
         DistanceStore::Condensed(c)
+    }
+}
+
+impl From<ShardedTriangle> for DistanceStore {
+    fn from(s: ShardedTriangle) -> Self {
+        DistanceStore::Sharded(s)
     }
 }
 
@@ -425,8 +459,13 @@ mod tests {
             StorageKind::parse("Condensed").unwrap(),
             StorageKind::Condensed
         );
+        assert_eq!(
+            StorageKind::parse("Sharded").unwrap(),
+            StorageKind::Sharded
+        );
         assert!(StorageKind::parse("sparse").is_err());
         assert_eq!(StorageKind::Condensed.as_str(), "condensed");
+        assert_eq!(StorageKind::Sharded.as_str(), "sharded");
         assert_eq!(StorageKind::default(), StorageKind::Dense);
     }
 

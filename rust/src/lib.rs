@@ -19,9 +19,11 @@
 //! Every distance backend implements the object-safe
 //! [`dissimilarity::engine::DistanceEngine`] trait, and every stage
 //! downstream of the distance build is generic over the
-//! [`dissimilarity::DistanceStorage`] layout (dense n×n or condensed
-//! n(n−1)/2), so the pipeline below runs unchanged on any engine × storage
-//! combination — with bit-identical output:
+//! [`dissimilarity::DistanceStorage`] layout (dense n×n, condensed
+//! n(n−1)/2, or the sharded out-of-core tier that spills the triangle to
+//! disk behind an LRU of hot row-band shards), so the pipeline below runs
+//! unchanged on any engine × storage combination — with bit-identical
+//! output:
 //!
 //! ```
 //! use fast_vat::data::generators::blobs;
@@ -45,7 +47,9 @@
 //!
 //! See `rust/examples/` for the paper-evaluation driver and the service
 //! scenarios, and the top-level `README.md` for build and feature-flag
-//! instructions (including the `storage = "dense" | "condensed"` knob).
+//! instructions (including the
+//! `storage = "dense" | "condensed" | "sharded"` knob and the shard
+//! tuning options).
 
 pub mod bench_util;
 pub mod cluster;

@@ -21,12 +21,12 @@ use fast_vat::data::generators;
 use fast_vat::data::scale::Scaler;
 use fast_vat::data::Dataset;
 use fast_vat::dissimilarity::engine::DistanceEngine;
-use fast_vat::dissimilarity::StorageKind;
+use fast_vat::dissimilarity::{ShardOptions, StorageKind};
 use fast_vat::error::{Error, Result};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::{ivat::ivat_with, vat};
+use fast_vat::vat::{ivat::ivat_with_opts, vat};
 use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm, render, GrayImage};
 
 fn usage() -> ! {
@@ -36,20 +36,25 @@ fn usage() -> ! {
 USAGE:
   fast-vat vat      [--input data.csv | --dataset NAME]
                     [--engine naive|blocked|parallel|condensed|xla|xla-mm]
-                    [--storage dense|condensed] [--ivat]
+                    [--storage dense|condensed|sharded] [--ivat]
+                    [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
   fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
                     [--k N | --eps F] [--min-pts N]
   fast-vat pipeline [--input data.csv | --dataset NAME] [--engine ...]
-                    [--storage dense|condensed]
+                    [--storage dense|condensed|sharded] [--shard-rows N]
+                    [--cache-shards N] [--spill-dir DIR]
   fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
-                    [--storage dense|condensed]
+                    [--storage dense|condensed|sharded] [--shard-rows N]
+                    [--cache-shards N] [--spill-dir DIR]
   fast-vat info     [--artifacts DIR]
 
 STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
-  dense bytes) and renders through a zero-copy permuted view; output is
-  bit-identical to dense.
+  dense bytes) and renders through a zero-copy permuted view; sharded
+  spills the triangle to row-band shard files (--spill-dir, default the OS
+  temp dir) and keeps only --cache-shards hot shards of --shard-rows rows
+  in RAM. Output is bit-identical across all three.
 
 DATASETS: iris, blobs, moons, circles, gmm, spotify, mall, uniform
   (generator datasets accept --n and --seed)
@@ -114,6 +119,15 @@ fn storage_kind(flags: &HashMap<String, String>) -> Result<StorageKind> {
     StorageKind::parse(flags.get("storage").map(String::as_str).unwrap_or("dense"))
 }
 
+fn shard_options(flags: &HashMap<String, String>) -> Result<ShardOptions> {
+    let defaults = ShardOptions::default();
+    Ok(ShardOptions {
+        shard_rows: get_usize(flags, "shard-rows", defaults.shard_rows)?,
+        cache_shards: get_usize(flags, "cache-shards", defaults.cache_shards)?,
+        spill_dir: flags.get("spill-dir").map(Into::into),
+    })
+}
+
 fn cmd_vat(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &["ivat"])?;
     let ds = load_dataset(&flags)?;
@@ -126,20 +140,26 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         &artifacts,
     )?;
     let storage = storage_kind(&flags)?;
+    let shard = shard_options(&flags)?;
     let z = Scaler::standardized(&ds.points);
     let t0 = std::time::Instant::now();
-    let d = engine.build_storage(&z, fast_vat::dissimilarity::Metric::Euclidean, storage)?;
+    let d = engine.build_storage_with(
+        &z,
+        fast_vat::dissimilarity::Metric::Euclidean,
+        storage,
+        &shard,
+    )?;
     let t_dist = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let v = vat(&d);
     let t_vat = t1.elapsed().as_secs_f64();
 
     // raw VAT renders through the zero-copy view; iVAT renders its own
-    // transform (emitted in the same storage layout)
+    // transform (emitted in the same storage layout, sharded included)
     let det = BlockDetector::default();
     let (img, block_count, insight): (GrayImage, usize, String) =
         if flags.contains_key("ivat") {
-            let iv = ivat_with(&v, storage);
+            let iv = ivat_with_opts(&v, storage, &shard)?;
             let blocks = det.detect(&iv.transformed);
             let insight = det.insight_with(&v, &blocks, &d);
             (render(&iv.transformed), blocks.len(), insight)
@@ -148,7 +168,7 @@ fn cmd_vat(args: &[String]) -> Result<()> {
             (
                 render(&view),
                 det.detect(&view).len(),
-                det.insight(&v, &d),
+                det.insight_opts(&v, &d, &shard)?,
             )
         };
     println!(
@@ -259,6 +279,7 @@ fn cmd_pipeline(args: &[String]) -> Result<()> {
     )?;
     let config = PipelineConfig {
         storage: storage_kind(&flags)?,
+        shard: shard_options(&flags)?,
         ..Default::default()
     };
     let report = auto_cluster(&engine, &ds.points, &config)?;
@@ -287,6 +308,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .cloned()
             .unwrap_or_else(|| "artifacts".into()),
         storage: storage_kind(&flags)?,
+        shard: shard_options(&flags)?,
     };
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
@@ -301,6 +323,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let opts = JobOptions {
         storage: cfg.storage,
+        shard: cfg.shard.clone(),
         ..Default::default()
     };
     let mut tickets = Vec::new();

@@ -20,7 +20,8 @@
 //! out — and its output is identical across storages because the reads are.
 
 use super::VatResult;
-use crate::dissimilarity::DistanceStorage;
+use crate::dissimilarity::{DistanceStorage, ShardOptions};
+use crate::error::Result;
 
 /// Tunables for [`BlockDetector::detect`].
 #[derive(Debug, Clone)]
@@ -195,16 +196,31 @@ impl BlockDetector {
     /// Block counting runs on the iVAT transform (sharp boundaries even for
     /// chain-shaped clusters — what a human reads off the image), emitted
     /// in the storage's own layout so a condensed deployment never spikes
-    /// to dense; the strength adjective comes from the raw VAT band
-    /// darkness read through the zero-copy view (iVAT images are uniformly
-    /// dark and would overstate strength). Callers that already ran the
-    /// transform and its block detection should pass the blocks to
+    /// to dense and a sharded deployment spills the transform (default
+    /// shard knobs; the only fallible step — in-RAM layouts cannot error);
+    /// the strength adjective comes from the raw VAT band darkness read
+    /// through the zero-copy view (iVAT images are uniformly dark and would
+    /// overstate strength). Callers that already ran the transform and its
+    /// block detection should pass the blocks to
     /// [`BlockDetector::insight_with`] instead of paying the O(n²) DFS and
     /// detection a second time.
-    pub fn insight<S: DistanceStorage>(&self, v: &VatResult, storage: &S) -> String {
-        let iv = crate::vat::ivat::ivat_with(v, storage.kind());
+    pub fn insight<S: DistanceStorage>(&self, v: &VatResult, storage: &S) -> Result<String> {
+        self.insight_opts(v, storage, &ShardOptions::default())
+    }
+
+    /// [`BlockDetector::insight`] with explicit shard knobs for the iVAT
+    /// transform's emission — what configured call paths (the job service,
+    /// the CLI) use so a sharded job's transform spills with the job's own
+    /// `spill_dir`/`shard_rows` rather than the defaults.
+    pub fn insight_opts<S: DistanceStorage>(
+        &self,
+        v: &VatResult,
+        storage: &S,
+        shard: &ShardOptions,
+    ) -> Result<String> {
+        let iv = crate::vat::ivat::ivat_with_opts(v, storage.kind(), shard)?;
         let ivat_blocks = self.detect(&iv.transformed);
-        self.insight_with(v, &ivat_blocks, storage)
+        Ok(self.insight_with(v, &ivat_blocks, storage))
     }
 
     /// [`BlockDetector::insight`] from precomputed iVAT blocks —
@@ -286,7 +302,10 @@ mod tests {
         let vc = vat(&cond);
         let det = BlockDetector::default();
         assert_eq!(det.detect(&vd.view(&dense)), det.detect(&vc.view(&cond)));
-        assert_eq!(det.insight(&vd, &dense), det.insight(&vc, &cond));
+        assert_eq!(
+            det.insight(&vd, &dense).unwrap(),
+            det.insight(&vc, &cond).unwrap()
+        );
     }
 
     #[test]

@@ -17,7 +17,11 @@
 
 use super::VatResult;
 use crate::dissimilarity::condensed::CondensedMatrix;
-use crate::dissimilarity::{DistanceMatrix, DistanceStore, StorageKind};
+use crate::dissimilarity::shard::ShardedWriter;
+use crate::dissimilarity::{
+    DistanceMatrix, DistanceStore, ShardOptions, StorageKind,
+};
+use crate::error::Result;
 
 /// Result of an iVAT transform.
 #[derive(Debug, Clone)]
@@ -84,16 +88,30 @@ fn path_max_row(
 }
 
 /// Apply the iVAT transform, emitting dense storage (compatibility
-/// wrapper over [`ivat_with`]).
+/// wrapper over [`ivat_with`]; in-RAM emission cannot fail).
 pub fn ivat(v: &VatResult) -> IvatResult {
-    ivat_with(v, StorageKind::Dense)
+    ivat_with(v, StorageKind::Dense).expect("in-RAM iVAT emission cannot fail")
 }
 
 /// Apply the iVAT transform to a VAT result, emitting the requested
-/// storage layout. O(n²) either way; the per-entry values are identical
-/// across layouts (the same DFS arithmetic fills both — max is exact, so
-/// the transform is bitwise symmetric and layout-independent).
-pub fn ivat_with(v: &VatResult, kind: StorageKind) -> IvatResult {
+/// storage layout (default shard knobs for `Sharded`; tuned callers use
+/// [`ivat_with_opts`]). O(n²) either way; the per-entry values are
+/// identical across layouts (the same DFS arithmetic fills both — max is
+/// exact, so the transform is bitwise symmetric and layout-independent).
+/// Only the sharded arm can fail (spill IO).
+pub fn ivat_with(v: &VatResult, kind: StorageKind) -> Result<IvatResult> {
+    ivat_with_opts(v, kind, &ShardOptions::default())
+}
+
+/// [`ivat_with`] with explicit shard knobs: the sharded arm streams each
+/// display row's tail into a [`ShardedWriter`], so the transform of an
+/// out-of-core job is spilled band by band and never resident as a whole —
+/// the iVAT pipeline stays inside the O(shard_rows·n) envelope end to end.
+pub fn ivat_with_opts(
+    v: &VatResult,
+    kind: StorageKind,
+    shard: &ShardOptions,
+) -> Result<IvatResult> {
     let n = v.order.len();
     let a = mst_adjacency(n, &v.mst);
     let mut stack: Vec<u32> = Vec::with_capacity(n);
@@ -123,11 +141,23 @@ pub fn ivat_with(v: &VatResult, kind: StorageKind) -> IvatResult {
                 CondensedMatrix::from_flat(data, n).expect("triangle length by construction"),
             )
         }
+        StorageKind::Sharded => {
+            // same row order as the condensed arm, so the same contiguous
+            // tails stream straight into the band writer — entries bitwise
+            // identical, one shard resident at a time
+            let mut writer = ShardedWriter::new(n, shard)?;
+            let mut row_buf = vec![0.0f64; n];
+            for row in 0..n {
+                path_max_row(row, &a, &mut stack, &mut seen, &mut row_buf);
+                writer.push(&row_buf[row + 1..])?;
+            }
+            DistanceStore::Sharded(writer.finish()?)
+        }
     };
-    IvatResult {
+    Ok(IvatResult {
         order: v.order.clone(),
         transformed,
-    }
+    })
 }
 
 /// Brute-force minimax path distance via Floyd–Warshall-style relaxation —
@@ -188,8 +218,8 @@ mod tests {
         let ds = moons(90, 0.06, 14);
         let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
         let v = vat(&d);
-        let dense = ivat_with(&v, StorageKind::Dense);
-        let cond = ivat_with(&v, StorageKind::Condensed);
+        let dense = ivat_with(&v, StorageKind::Dense).unwrap();
+        let cond = ivat_with(&v, StorageKind::Condensed).unwrap();
         assert_eq!(dense.transformed.kind(), StorageKind::Dense);
         assert_eq!(cond.transformed.kind(), StorageKind::Condensed);
         for i in 0..90 {
@@ -202,6 +232,39 @@ mod tests {
             }
         }
         assert!(cond.transformed.distance_bytes() * 2 < dense.transformed.distance_bytes() + 90 * 8);
+    }
+
+    #[test]
+    fn sharded_transform_is_bitwise_equal_and_spilled() {
+        // the out-of-core arm streams the same row tails through the band
+        // writer: identical entries, resident bytes bounded by the LRU
+        let ds = moons(85, 0.06, 15);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let v = vat(&d);
+        let dense = ivat_with(&v, StorageKind::Dense).unwrap();
+        let shard = ivat_with_opts(
+            &v,
+            StorageKind::Sharded,
+            &ShardOptions {
+                shard_rows: 11,
+                cache_shards: 2,
+                spill_dir: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(shard.transformed.kind(), StorageKind::Sharded);
+        for i in 0..85 {
+            for j in 0..85 {
+                assert_eq!(
+                    dense.transformed.get(i, j),
+                    shard.transformed.get(i, j),
+                    "({i},{j})"
+                );
+            }
+        }
+        let s = shard.transformed.as_sharded().unwrap();
+        assert_eq!(s.shard_rows(), 11);
+        assert!(s.peak_resident_bytes() <= 2 * 11 * 85 * 8);
     }
 
     #[test]

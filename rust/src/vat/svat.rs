@@ -7,14 +7,17 @@
 //! for display. The paper lists sVAT as the scalability future-work
 //! direction (§5.2); here it is a first-class engine, and the sample matrix
 //! itself goes through the storage spine: [`svat_with_storage`] runs the
-//! sample VAT on dense or condensed storage (identical output, ~half the
-//! sample-matrix memory condensed).
+//! sample VAT on dense, condensed, or sharded out-of-core storage
+//! (identical output; condensed ~halves the sample-matrix memory, sharded
+//! bounds it by the LRU budget).
 
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
+use crate::dissimilarity::shard::ShardedTriangle;
 use crate::dissimilarity::{
-    DistanceMatrix, DistanceStore, Metric, PermutedView, StorageKind,
+    DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
 };
+use crate::error::Result;
 use crate::prng::Pcg32;
 
 use super::{vat, VatResult};
@@ -40,9 +43,17 @@ impl SvatResult {
     }
 }
 
-/// Maximin (farthest-first) sample of `s` points. Deterministic given the
-/// seed (which picks the starting point only).
-pub fn maximin_sample(points: &Points, s: usize, seed: u64) -> Vec<usize> {
+/// Maximin (farthest-first) sample of `s` points under `metric` — the same
+/// metric the sample matrix and the assignment stage use, so the sample is
+/// spread in the geometry the caller actually asked for. Deterministic
+/// given the seed (which picks the starting point only).
+///
+/// Already-selected indices are skipped during the argmax, so the sample is
+/// always `s` *distinct* indices even when the dataset contains duplicate
+/// points (where every remaining `dmin` is 0 and an unskipped argmax would
+/// fall back to index 0 repeatedly); ties break toward the lowest
+/// unselected index.
+pub fn maximin_sample(points: &Points, s: usize, metric: Metric, seed: u64) -> Vec<usize> {
     let n = points.n();
     let s = s.min(n);
     if s == 0 {
@@ -51,23 +62,38 @@ pub fn maximin_sample(points: &Points, s: usize, seed: u64) -> Vec<usize> {
     let mut rng = Pcg32::new(seed);
     let first = rng.below(n as u32) as usize;
     let mut sample = vec![first];
+    let mut selected = vec![false; n];
+    selected[first] = true;
     // dmin[j] = distance from j to nearest selected sample
     let mut dmin: Vec<f64> = (0..n)
-        .map(|j| Metric::Euclidean.eval(points.row(first), points.row(j)))
+        .map(|j| metric.eval(points.row(first), points.row(j)))
         .collect();
     while sample.len() < s {
-        // farthest point from the current sample (maximin step)
-        let mut best_j = 0;
+        // farthest unselected point from the current sample (maximin step).
+        // NaN distances (a NaN coordinate poisons every eval against it)
+        // never win a `>` comparison, so when every unselected dmin is NaN
+        // the argmax falls back to the first unselected index — a
+        // deterministic distinct pick instead of a panic.
+        let mut best_j = usize::MAX;
         let mut best_v = f64::NEG_INFINITY;
+        let mut fallback = usize::MAX;
         for (j, &v) in dmin.iter().enumerate() {
+            if selected[j] {
+                continue;
+            }
+            if fallback == usize::MAX {
+                fallback = j;
+            }
             if v > best_v {
                 best_v = v;
                 best_j = j;
             }
         }
+        let best_j = if best_j == usize::MAX { fallback } else { best_j };
         sample.push(best_j);
+        selected[best_j] = true;
         for j in 0..n {
-            let v = Metric::Euclidean.eval(points.row(best_j), points.row(j));
+            let v = metric.eval(points.row(best_j), points.row(j));
             if v < dmin[j] {
                 dmin[j] = v;
             }
@@ -77,21 +103,37 @@ pub fn maximin_sample(points: &Points, s: usize, seed: u64) -> Vec<usize> {
 }
 
 /// Run sVAT with dense sample storage (see [`svat_with_storage`]).
-pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> SvatResult {
+pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> Result<SvatResult> {
     svat_with_storage(points, s, metric, seed, StorageKind::Dense)
 }
 
-/// Run sVAT: sample `s` representatives, VAT the sample over the requested
-/// storage layout, assign the rest. The sample permutation is identical
-/// across layouts (both are built from the blocked pair kernels).
+/// Run sVAT: sample `s` representatives via maximin under `metric`, VAT the
+/// sample over the requested storage layout (default shard knobs for
+/// `Sharded`; tuned callers use [`svat_with_opts`]), assign the rest.
 pub fn svat_with_storage(
     points: &Points,
     s: usize,
     metric: Metric,
     seed: u64,
     kind: StorageKind,
-) -> SvatResult {
-    let sample = maximin_sample(points, s, seed);
+) -> Result<SvatResult> {
+    svat_with_opts(points, s, metric, seed, kind, &ShardOptions::default())
+}
+
+/// [`svat_with_storage`] with explicit shard knobs, so a configured
+/// `spill_dir`/`shard_rows` reaches the sample triangle's sharded build
+/// (the in-RAM layouts ignore `shard`; only the sharded build can fail).
+/// The sample and its permutation are identical across layouts (all three
+/// are built from the blocked pair kernels).
+pub fn svat_with_opts(
+    points: &Points,
+    s: usize,
+    metric: Metric,
+    seed: u64,
+    kind: StorageKind,
+    shard: &ShardOptions,
+) -> Result<SvatResult> {
+    let sample = maximin_sample(points, s, metric, seed);
     let sub = points.select(&sample);
     let storage = match kind {
         StorageKind::Dense => {
@@ -100,6 +142,9 @@ pub fn svat_with_storage(
         StorageKind::Condensed => {
             DistanceStore::Condensed(CondensedMatrix::build_blocked(&sub, metric))
         }
+        StorageKind::Sharded => DistanceStore::Sharded(ShardedTriangle::build_blocked(
+            &sub, metric, shard,
+        )?),
     };
     let v = vat(&storage);
     // nearest-representative assignment for all original points
@@ -117,12 +162,12 @@ pub fn svat_with_storage(
             best
         })
         .collect();
-    SvatResult {
+    Ok(SvatResult {
         sample,
         vat: v,
         storage,
         assignment,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -134,7 +179,7 @@ mod tests {
     #[test]
     fn sample_is_distinct_and_in_range() {
         let ds = blobs(200, 2, 4, 0.4, 20);
-        let s = maximin_sample(&ds.points, 30, 1);
+        let s = maximin_sample(&ds.points, 30, Metric::Euclidean, 1);
         assert_eq!(s.len(), 30);
         let mut u = s.clone();
         u.sort_unstable();
@@ -146,7 +191,10 @@ mod tests {
     #[test]
     fn sample_capped_at_n() {
         let ds = blobs(10, 2, 2, 0.4, 21);
-        assert_eq!(maximin_sample(&ds.points, 50, 2).len(), 10);
+        assert_eq!(
+            maximin_sample(&ds.points, 50, Metric::Euclidean, 2).len(),
+            10
+        );
     }
 
     #[test]
@@ -154,7 +202,7 @@ mod tests {
         // 4 well-separated blobs; 8 maximin samples must hit all 4 labels
         let ds = blobs(200, 2, 4, 0.2, 22);
         let labels = ds.labels.as_ref().unwrap();
-        let s = maximin_sample(&ds.points, 8, 3);
+        let s = maximin_sample(&ds.points, 8, Metric::Euclidean, 3);
         let mut seen: Vec<usize> = s.iter().map(|&i| labels[i]).collect();
         seen.sort_unstable();
         seen.dedup();
@@ -162,10 +210,95 @@ mod tests {
     }
 
     #[test]
+    fn maximin_respects_the_requested_metric() {
+        // regression: `maximin_sample` used to hardcode Euclidean for both
+        // the dmin fill and the update loop, so non-Euclidean sVAT sampled
+        // under the wrong geometry. Points built to split the metrics: from
+        // the start (0,0) — pinned by seed 4 — the farthest point is
+        // (5.5,1.5) under L2 (5.70), (4,4) under L1 (8), and (0,5.6) under
+        // L∞ (5.6). Expected samples mirror-validated bit-exactly.
+        let points = crate::data::Points::from_rows(&[
+            vec![0.0, 0.0],
+            vec![4.0, 4.0],
+            vec![5.5, 1.5],
+            vec![0.0, 5.6],
+        ])
+        .unwrap();
+        let euclid = maximin_sample(&points, 2, Metric::Euclidean, 4);
+        let manhattan = maximin_sample(&points, 2, Metric::Manhattan, 4);
+        let chebyshev = maximin_sample(&points, 2, Metric::Chebyshev, 4);
+        assert_eq!(euclid, vec![0, 2]);
+        assert_eq!(manhattan, vec![0, 1]);
+        assert_eq!(chebyshev, vec![0, 3]);
+        assert_ne!(euclid, manhattan);
+        assert_ne!(euclid, chebyshev);
+        assert_ne!(manhattan, chebyshev);
+        // and the metric flows through the whole sVAT run
+        let sv_l1 = svat(&points, 2, Metric::Manhattan, 4).unwrap();
+        assert_eq!(sv_l1.sample, manhattan);
+    }
+
+    #[test]
+    fn duplicate_points_still_yield_distinct_samples() {
+        // regression: with duplicates every remaining dmin hits 0.0 and the
+        // old argmax (no selected-skip) returned index 0 over and over. The
+        // sample must always be s distinct indices; ties break toward the
+        // lowest unselected index (mirror-validated: seed 4 starts at 0,
+        // jumps to the other value class, then sweeps the remainder).
+        let rows: Vec<Vec<f64>> = (0..6)
+            .map(|i| if i < 3 { vec![0.0, 0.0] } else { vec![1.0, 0.0] })
+            .collect();
+        let points = crate::data::Points::from_rows(&rows).unwrap();
+        let s = maximin_sample(&points, 6, Metric::Euclidean, 4);
+        assert_eq!(s, vec![0, 3, 1, 2, 4, 5]);
+        for seed in 0..20u64 {
+            for take in [2usize, 4, 6] {
+                let s = maximin_sample(&points, take, Metric::Euclidean, seed);
+                let mut u = s.clone();
+                u.sort_unstable();
+                u.dedup();
+                assert_eq!(u.len(), take, "seed {seed} take {take}: {s:?}");
+            }
+        }
+        // an all-duplicates dataset is the fully degenerate case
+        let same = crate::data::Points::from_rows(&vec![vec![2.0]; 5]).unwrap();
+        let s = maximin_sample(&same, 5, Metric::Euclidean, 9);
+        let mut u = s.clone();
+        u.sort_unstable();
+        assert_eq!(u, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nan_coordinates_degrade_without_panicking() {
+        // a NaN coordinate poisons every eval against it: all dmin can go
+        // NaN, no `v > best_v` comparison succeeds, and the argmax must
+        // still fall back to the first unselected index (the pre-fix code
+        // degraded to index 0; the selected-skip rewrite must not panic)
+        let points = crate::data::Points::from_rows(&[
+            vec![f64::NAN, 0.0],
+            vec![1.0, 0.0],
+            vec![2.0, 0.0],
+            vec![3.0, 0.0],
+        ])
+        .unwrap();
+        for seed in 0..10u64 {
+            for take in [2usize, 3, 4] {
+                let s = maximin_sample(&points, take, Metric::Euclidean, seed);
+                assert_eq!(s.len(), take, "seed {seed}");
+                let mut u = s.clone();
+                u.sort_unstable();
+                u.dedup();
+                assert_eq!(u.len(), take, "seed {seed}: {s:?}");
+                assert!(s.iter().all(|&i| i < 4));
+            }
+        }
+    }
+
+    #[test]
     fn svat_block_structure_matches_full_vat() {
         let ds = blobs(300, 2, 3, 0.25, 23);
         let labels = ds.labels.as_ref().unwrap();
-        let r = svat(&ds.points, 45, Metric::Euclidean, 4);
+        let r = svat(&ds.points, 45, Metric::Euclidean, 4).unwrap();
         // sample VAT order must keep each cluster contiguous
         let seq: Vec<usize> = r.vat.order.iter().map(|&p| labels[r.sample[p]]).collect();
         let flips = seq.windows(2).filter(|w| w[0] != w[1]).count();
@@ -175,26 +308,55 @@ mod tests {
     #[test]
     fn storage_kinds_agree_on_sample_vat() {
         let ds = blobs(250, 2, 3, 0.3, 25);
-        let dense = svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Dense);
+        let dense =
+            svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Dense)
+                .unwrap();
         let cond =
-            svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Condensed);
+            svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Condensed)
+                .unwrap();
+        let shard =
+            svat_with_storage(&ds.points, 40, Metric::Euclidean, 6, StorageKind::Sharded)
+                .unwrap();
         assert_eq!(dense.sample, cond.sample);
         assert_eq!(dense.vat.order, cond.vat.order);
         assert_eq!(dense.assignment, cond.assignment);
+        assert_eq!(dense.sample, shard.sample);
+        assert_eq!(dense.vat.order, shard.vat.order);
+        assert_eq!(dense.assignment, shard.assignment);
         assert_eq!(dense.storage.kind(), StorageKind::Dense);
         assert_eq!(cond.storage.kind(), StorageKind::Condensed);
+        assert_eq!(shard.storage.kind(), StorageKind::Sharded);
         // the views expose the same sample image
         for a in 0..40 {
             for b in 0..40 {
                 assert_eq!(dense.view().get(a, b), cond.view().get(a, b));
+                assert_eq!(dense.view().get(a, b), shard.view().get(a, b));
             }
         }
+        // tuned shard knobs reach the sample triangle (and change nothing
+        // about the output)
+        let tuned = svat_with_opts(
+            &ds.points,
+            40,
+            Metric::Euclidean,
+            6,
+            StorageKind::Sharded,
+            &ShardOptions {
+                shard_rows: 7,
+                cache_shards: 2,
+                spill_dir: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(tuned.sample, dense.sample);
+        assert_eq!(tuned.vat.order, dense.vat.order);
+        assert_eq!(tuned.storage.as_sharded().unwrap().shard_rows(), 7);
     }
 
     #[test]
     fn assignment_points_to_nearest_sample() {
         let ds = blobs(100, 2, 2, 0.3, 24);
-        let r = svat(&ds.points, 10, Metric::Euclidean, 5);
+        let r = svat(&ds.points, 10, Metric::Euclidean, 5).unwrap();
         for (i, &pos) in r.assignment.iter().enumerate() {
             let d_assigned =
                 Metric::Euclidean.eval(ds.points.row(i), ds.points.row(r.sample[pos]));

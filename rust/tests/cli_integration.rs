@@ -70,6 +70,29 @@ fn condensed_storage_produces_identical_pgm_bytes() {
 }
 
 #[test]
+fn sharded_storage_produces_identical_pgm_bytes() {
+    // the out-of-core tier end to end: the triangle lives in spill files
+    // (forced multi-band by --shard-rows) yet the rendered image on disk is
+    // byte-identical to the dense run
+    let dense = std::env::temp_dir().join("fastvat_cli_dense2.pgm");
+    let shard = std::env::temp_dir().join("fastvat_cli_shard.pgm");
+    let out_d = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--storage", "dense",
+        "--out", dense.to_str().unwrap(),
+    ]);
+    let out_s = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--storage", "sharded",
+        "--shard-rows", "16", "--cache-shards", "2",
+        "--out", shard.to_str().unwrap(),
+    ]);
+    assert!(out_d.contains("storage=dense"), "{out_d}");
+    assert!(out_s.contains("storage=sharded"), "{out_s}");
+    let bytes_d = std::fs::read(&dense).unwrap();
+    let bytes_s = std::fs::read(&shard).unwrap();
+    assert_eq!(bytes_d, bytes_s, "sharded tier changed the rendered image");
+}
+
+#[test]
 fn unknown_storage_fails_cleanly() {
     let out = bin()
         .args(["vat", "--dataset", "blobs", "--storage", "sparse"])

@@ -131,17 +131,18 @@ fn ivat_ascii_matches_golden() {
 }
 
 #[test]
-fn ivat_pgm_matches_golden_in_both_storage_layouts() {
+fn ivat_pgm_matches_golden_in_every_storage_layout() {
     let v = vat(&tiny_matrix());
     let golden: &[u8] = include_bytes!("golden/tiny_ivat.pgm");
-    for kind in [StorageKind::Dense, StorageKind::Condensed] {
-        let iv = ivat_with(&v, kind);
+    for kind in [
+        StorageKind::Dense,
+        StorageKind::Condensed,
+        StorageKind::Sharded,
+    ] {
+        let iv = ivat_with(&v, kind).unwrap();
         let path = std::env::temp_dir().join(format!(
             "fastvat_golden_ivat_{}.pgm",
-            match kind {
-                StorageKind::Dense => "dense",
-                StorageKind::Condensed => "condensed",
-            }
+            kind.as_str()
         ));
         pgm::write_pgm(&render(&iv.transformed), &path).unwrap();
         let written = std::fs::read(&path).unwrap();

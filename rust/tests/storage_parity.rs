@@ -1,26 +1,35 @@
-//! Dense-vs-condensed storage parity — the paper's output-fidelity claim
-//! applied to the *storage* axis: for every engine × metric × dataset, the
-//! condensed n(n−1)/2 layout must produce bitwise-identical VAT
-//! permutations, identical iVAT pixels, and identical block-detector
-//! output to the dense n×n layout. The engines guarantee bitwise-equal
-//! *entries* across layouts (`DistanceEngine::build_storage` contract);
-//! these tests pin that the whole downstream pipeline preserves the
-//! equality through the zero-copy view path.
+//! Storage parity — the paper's output-fidelity claim applied to the
+//! *storage* axis: for every engine × metric × dataset, the condensed
+//! n(n−1)/2 layout AND the sharded out-of-core layout must produce
+//! bitwise-identical VAT permutations, identical iVAT pixels, and identical
+//! block-detector output to the dense n×n layout. The engines guarantee
+//! bitwise-equal *entries* across layouts (`DistanceEngine::build_storage`
+//! / `build_sharded` contract); these tests pin that the whole downstream
+//! pipeline preserves the equality through the zero-copy view path and
+//! through the spill-file round trip.
 //!
-//! The final test is the §5.1 memory accounting: the condensed +
+//! Sharded runs use deliberately small shards (several bands per dataset)
+//! and honor `FAST_VAT_TEST_CACHE_SHARDS` so CI can force the LRU down to a
+//! single hot shard — every band switch then reloads from disk, exercising
+//! the spill path rather than the warm cache.
+//!
+//! The final tests are the §5.1 memory accounting: the condensed +
 //! `PermutedView` pipeline must hold ≤ ~55% of the dense pipeline's
-//! resident distance-buffer bytes (audited via `bench_util::FootprintAudit`
-//! over `DistanceStorage::distance_bytes`).
+//! resident distance-buffer bytes, and a sharded VAT job's peak in-RAM
+//! distance bytes must stay ≤ 2·shard_rows·n·8 (the LRU budget with
+//! `cache_shards = 2`), audited via `bench_util::FootprintAudit`.
 
 use fast_vat::bench_util::FootprintAudit;
 use fast_vat::data::generators::{blobs, gmm, moons};
+use fast_vat::data::scale::Scaler;
 use fast_vat::data::Dataset;
 use fast_vat::dissimilarity::engine::{
     BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
 };
-use fast_vat::dissimilarity::{DistanceStorage, Metric, StorageKind};
+use fast_vat::dissimilarity::{DistanceStorage, Metric, ShardOptions, StorageKind};
+use fast_vat::runtime::SimulatedXlaEngine;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::ivat::ivat_with;
+use fast_vat::vat::ivat::{ivat_with, ivat_with_opts};
 use fast_vat::vat::vat;
 use fast_vat::viz::render;
 
@@ -52,11 +61,28 @@ fn metrics() -> Vec<Metric> {
     ]
 }
 
+/// Shard knobs for the parity runs: small shards so every dataset spans
+/// several bands, and an LRU size CI can override (`=1` forces a spill-file
+/// reload on every band switch — the cold disk path, not the warm cache).
+fn test_shard_opts() -> ShardOptions {
+    let cache_shards = std::env::var("FAST_VAT_TEST_CACHE_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(4);
+    ShardOptions {
+        shard_rows: 23,
+        cache_shards,
+        spill_dir: None,
+    }
+}
+
 #[test]
 fn vat_permutation_bitwise_identical_across_storages() {
-    // every engine × metric × dataset: the condensed sweep must reproduce
-    // the dense sweep's permutation AND its MST (weights are f64-compared,
-    // i.e. bitwise: the storage axis never changes a value)
+    // every engine × metric × dataset: the condensed AND sharded sweeps
+    // must reproduce the dense sweep's permutation AND its MST (weights are
+    // f64-compared, i.e. bitwise: the storage axis never changes a value)
+    let shard_opts = test_shard_opts();
     for ds in datasets() {
         for metric in metrics() {
             for e in engines() {
@@ -66,11 +92,15 @@ fn vat_permutation_bitwise_identical_across_storages() {
                 let cond = e
                     .build_storage(&ds.points, metric, StorageKind::Condensed)
                     .unwrap();
+                let shard = e.build_sharded(&ds.points, metric, &shard_opts).unwrap();
                 let vd = vat(&dense);
                 let vc = vat(&cond);
+                let vs = vat(&shard);
                 let ctx = format!("{} on {} / {metric:?}", e.name(), ds.name);
-                assert_eq!(vd.order, vc.order, "order diverged: {ctx}");
-                assert_eq!(vd.mst, vc.mst, "mst diverged: {ctx}");
+                assert_eq!(vd.order, vc.order, "condensed order diverged: {ctx}");
+                assert_eq!(vd.mst, vc.mst, "condensed mst diverged: {ctx}");
+                assert_eq!(vd.order, vs.order, "sharded order diverged: {ctx}");
+                assert_eq!(vd.mst, vs.mst, "sharded mst diverged: {ctx}");
             }
         }
     }
@@ -80,7 +110,9 @@ fn vat_permutation_bitwise_identical_across_storages() {
 fn vat_and_ivat_pixels_identical_across_storages() {
     // the rendered bytes — what an analyst actually sees — must be equal:
     // raw VAT through the zero-copy view, and the iVAT transform emitted
-    // in each layout
+    // in each layout (sharded included: the transform itself round-trips
+    // through the spill file)
+    let shard_opts = test_shard_opts();
     for ds in datasets() {
         for metric in metrics() {
             let e = BlockedEngine;
@@ -90,18 +122,38 @@ fn vat_and_ivat_pixels_identical_across_storages() {
             let cond = e
                 .build_storage(&ds.points, metric, StorageKind::Condensed)
                 .unwrap();
+            let shard = e.build_sharded(&ds.points, metric, &shard_opts).unwrap();
             let vd = vat(&dense);
             let vc = vat(&cond);
+            let vs = vat(&shard);
             let ctx = format!("{} / {metric:?}", ds.name);
+            let dense_pixels = render(&vd.view(&dense)).pixels;
             assert_eq!(
-                render(&vd.view(&dense)).pixels,
+                dense_pixels,
                 render(&vc.view(&cond)).pixels,
-                "VAT pixels diverged: {ctx}"
+                "condensed VAT pixels diverged: {ctx}"
             );
             assert_eq!(
-                render(&ivat_with(&vd, StorageKind::Dense).transformed).pixels,
-                render(&ivat_with(&vc, StorageKind::Condensed).transformed).pixels,
-                "iVAT pixels diverged: {ctx}"
+                dense_pixels,
+                render(&vs.view(&shard)).pixels,
+                "sharded VAT pixels diverged: {ctx}"
+            );
+            let dense_ivat =
+                render(&ivat_with(&vd, StorageKind::Dense).unwrap().transformed).pixels;
+            assert_eq!(
+                dense_ivat,
+                render(&ivat_with(&vc, StorageKind::Condensed).unwrap().transformed).pixels,
+                "condensed iVAT pixels diverged: {ctx}"
+            );
+            assert_eq!(
+                dense_ivat,
+                render(
+                    &ivat_with_opts(&vs, StorageKind::Sharded, &shard_opts)
+                        .unwrap()
+                        .transformed
+                )
+                .pixels,
+                "sharded iVAT pixels diverged: {ctx}"
             );
         }
     }
@@ -109,6 +161,7 @@ fn vat_and_ivat_pixels_identical_across_storages() {
 
 #[test]
 fn block_detector_identical_across_storages() {
+    let shard_opts = test_shard_opts();
     for ds in datasets() {
         for metric in metrics() {
             let e = BlockedEngine;
@@ -118,27 +171,79 @@ fn block_detector_identical_across_storages() {
             let cond = e
                 .build_storage(&ds.points, metric, StorageKind::Condensed)
                 .unwrap();
+            let shard = e.build_sharded(&ds.points, metric, &shard_opts).unwrap();
             let vd = vat(&dense);
             let vc = vat(&cond);
+            let vs = vat(&shard);
             let det = BlockDetector::default();
             let ctx = format!("{} / {metric:?}", ds.name);
+            let dense_blocks = det.detect(&vd.view(&dense));
             assert_eq!(
-                det.detect(&vd.view(&dense)),
+                dense_blocks,
                 det.detect(&vc.view(&cond)),
-                "raw-VAT blocks diverged: {ctx}"
+                "condensed raw-VAT blocks diverged: {ctx}"
             );
             assert_eq!(
-                det.detect(&ivat_with(&vd, StorageKind::Dense).transformed),
-                det.detect(&ivat_with(&vc, StorageKind::Condensed).transformed),
-                "iVAT blocks diverged: {ctx}"
+                dense_blocks,
+                det.detect(&vs.view(&shard)),
+                "sharded raw-VAT blocks diverged: {ctx}"
+            );
+            let dense_iv = det.detect(&ivat_with(&vd, StorageKind::Dense).unwrap().transformed);
+            assert_eq!(
+                dense_iv,
+                det.detect(&ivat_with(&vc, StorageKind::Condensed).unwrap().transformed),
+                "condensed iVAT blocks diverged: {ctx}"
             );
             assert_eq!(
-                det.insight(&vd, &dense),
-                det.insight(&vc, &cond),
-                "insight diverged: {ctx}"
+                dense_iv,
+                det.detect(
+                    &ivat_with_opts(&vs, StorageKind::Sharded, &shard_opts)
+                        .unwrap()
+                        .transformed
+                ),
+                "sharded iVAT blocks diverged: {ctx}"
+            );
+            let dense_insight = det.insight(&vd, &dense).unwrap();
+            assert_eq!(
+                dense_insight,
+                det.insight(&vc, &cond).unwrap(),
+                "condensed insight diverged: {ctx}"
+            );
+            assert_eq!(
+                dense_insight,
+                det.insight(&vs, &shard).unwrap(),
+                "sharded insight diverged: {ctx}"
             );
         }
     }
+}
+
+#[test]
+fn simulated_xla_engine_shards_identically_to_its_dense_path() {
+    // the engine with no native sharded build exercises the trait default
+    // (build condensed, spill band by band): the f32 artifact numerics must
+    // survive the disk round trip bit for bit
+    let shard_opts = test_shard_opts();
+    let sim = SimulatedXlaEngine::new(true);
+    let ds = blobs(150, 2, 3, 0.5, 7104);
+    let z = Scaler::standardized(&ds.points);
+    let dense = sim
+        .build_storage(&z, Metric::Euclidean, StorageKind::Dense)
+        .unwrap();
+    let shard = sim.build_sharded(&z, Metric::Euclidean, &shard_opts).unwrap();
+    for i in 0..150 {
+        for j in 0..150 {
+            assert_eq!(dense.get(i, j), shard.get(i, j), "({i},{j})");
+        }
+    }
+    let vd = vat(&dense);
+    let vs = vat(&shard);
+    assert_eq!(vd.order, vs.order);
+    assert_eq!(vd.mst, vs.mst);
+    assert_eq!(
+        render(&vd.view(&dense)).pixels,
+        render(&vs.view(&shard)).pixels
+    );
 }
 
 #[test]
@@ -186,6 +291,77 @@ fn condensed_view_path_allocates_at_most_55_percent_of_dense() {
             c * 100 <= dense.distance_bytes() * 55,
             "n={n}: condensed {c} vs single dense matrix {}",
             dense.distance_bytes()
+        );
+    }
+}
+
+#[test]
+fn sharded_vat_job_peaks_within_two_shards_of_ram() {
+    // the out-of-core bound: a full sharded VAT job — band-streamed build,
+    // Prim sweep, block detection, rendering through the zero-copy view —
+    // must never hold more than 2·shard_rows·n·8 distance bytes in RAM
+    // (cache_shards = 2: one band resident while another streams in), and
+    // the iVAT transform spilled with the same knobs obeys the same bound.
+    // Output stays bitwise identical to dense throughout.
+    for n in [256usize, 384] {
+        let ds = blobs(n, 2, 3, 0.4, 7300 + n as u64);
+        let e = BlockedEngine;
+        let opts = ShardOptions {
+            shard_rows: 32,
+            cache_shards: 2,
+            spill_dir: None,
+        };
+        let bound = 2 * opts.shard_rows * n * 8;
+
+        let shard = e.build_sharded(&ds.points, Metric::Euclidean, &opts).unwrap();
+        let vs = vat(&shard);
+        let det = BlockDetector::default();
+        let blocks = det.detect(&vs.view(&shard));
+        let pixels = render(&vs.view(&shard)).pixels;
+        let distance_peak = shard.peak_resident_bytes();
+
+        let iv = ivat_with_opts(&vs, StorageKind::Sharded, &opts).unwrap();
+        let iv_blocks = det.detect(&iv.transformed);
+        let iv_store = iv
+            .transformed
+            .as_sharded()
+            .expect("sharded emission requested");
+        let transform_peak = iv_store.peak_resident_bytes();
+
+        let mut audit = FootprintAudit::new();
+        audit.record("sharded distance tier (peak)", distance_peak);
+        audit.record("sharded iVAT transform (peak)", transform_peak);
+        assert!(
+            distance_peak <= bound,
+            "n={n}: distance tier peaked at {distance_peak} > {bound}\n{}",
+            audit.report()
+        );
+        assert!(
+            transform_peak <= bound,
+            "n={n}: iVAT transform peaked at {transform_peak} > {bound}\n{}",
+            audit.report()
+        );
+        // the whole job stays far under even a single dense matrix
+        let dense_bytes = n * n * 8;
+        assert!(
+            audit.total() * 2 < dense_bytes,
+            "n={n}: sharded job total {} vs dense matrix {dense_bytes}\n{}",
+            audit.total(),
+            audit.report()
+        );
+
+        // identical output to the dense job
+        let dense = e
+            .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+            .unwrap();
+        let vd = vat(&dense);
+        assert_eq!(vd.order, vs.order, "n={n}");
+        assert_eq!(blocks, det.detect(&vd.view(&dense)), "n={n}");
+        assert_eq!(pixels, render(&vd.view(&dense)).pixels, "n={n}");
+        assert_eq!(
+            iv_blocks,
+            det.detect(&ivat_with(&vd, StorageKind::Dense).unwrap().transformed),
+            "n={n}"
         );
     }
 }
