@@ -2,42 +2,59 @@
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Generates a small clustered dataset, assesses its tendency three ways
-//! (VAT image, Hopkins statistic, block detection), and prints an ASCII
-//! heatmap you can eyeball — the same artifact the paper's Figure 1 shows
-//! for Iris.
+//! One request does everything: an `Analysis` plan assesses a clustered
+//! dataset (Hopkins, VAT image, iVAT sharpening, block detection, insight)
+//! in a single validated pass, with the storage tier chosen by a RAM
+//! budget instead of hand-tuned layout knobs. The ASCII heatmaps are the
+//! same artifact the paper's Figure 1 shows for Iris.
 
+use fast_vat::analysis::{Analysis, StoragePolicy};
 use fast_vat::data::generators::blobs;
-use fast_vat::data::scale::Scaler;
-use fast_vat::dissimilarity::{DistanceMatrix, Metric};
-use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
+use fast_vat::dissimilarity::engine::BlockedEngine;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::{ivat::ivat, vat};
 use fast_vat::viz::{ascii::to_ascii, render};
 
 fn main() -> fast_vat::Result<()> {
     // 1. data: 300 points, 3 Gaussian blobs
     let ds = blobs(300, 2, 3, 0.35, 7);
-    let z = Scaler::standardized(&ds.points);
 
-    // 2. is it clusterable at all? (paper Table 2)
-    let h = hopkins_mean(&z, &HopkinsParams::default(), 5)?;
-    println!("Hopkins statistic: {h:.3} (>0.75 = significant structure)\n");
+    // 2. one request: standardize, pick the storage tier from a 256 KiB
+    // budget (dense 300² needs ~703 KiB, the condensed triangle ~350 KiB,
+    // so the resolver spills to the sharded tier), VAT + iVAT + blocks +
+    // Hopkins + render — validated up front, each stage run exactly once
+    let report = Analysis::of(ds.points)
+        .storage(StoragePolicy::Auto {
+            memory_budget_bytes: 256 * 1024,
+        })
+        .ivat(true)
+        .detect_blocks(BlockDetector::default())
+        .insight(true)
+        .hopkins(5)
+        .render(true)
+        .plan()?
+        .execute(&BlockedEngine)?;
 
-    // 3. the VAT image (paper Figures 1-3) — rendered straight off the
+    // 3. is it clusterable at all? (paper Table 2)
+    println!(
+        "Hopkins statistic: {:.3} (>0.75 = significant structure)",
+        report.hopkins.unwrap()
+    );
+    println!(
+        "resolved storage: {} (shard_rows = {})\n",
+        report.plan.storage.as_str(),
+        report.plan.shard.shard_rows
+    );
+
+    // 4. the raw VAT image (paper Figures 1-3) — rendered straight off the
     // zero-copy view; no reordered matrix is materialized
-    let d = DistanceMatrix::build_blocked(&z, Metric::Euclidean);
-    let v = vat(&d);
-    println!("VAT image ({} points, raw):", z.n());
-    println!("{}", to_ascii(&render(&v.view(&d)), 32));
+    println!("VAT image ({} points, raw):", report.plan.n_assessed);
+    println!("{}", to_ascii(&render(&report.view()), 32));
 
-    // 4. iVAT sharpening + block detection -> k estimate
-    let iv = ivat(&v);
-    let det = BlockDetector::default();
-    let blocks = det.detect(&iv.transformed);
+    // 5. iVAT sharpening + block detection -> k estimate
     println!("iVAT image (path-max sharpened):");
-    println!("{}", to_ascii(&render(&iv.transformed), 32));
-    println!("detected blocks: {} -> k estimate = {}", blocks.len(), blocks.len());
-    println!("insight: {}", det.insight_with(&v, &blocks, &d));
+    println!("{}", to_ascii(report.image.as_ref().unwrap(), 32));
+    let k = report.k_estimate().unwrap();
+    println!("detected blocks: {k} -> k estimate = {k}");
+    println!("insight: {}", report.insight.as_deref().unwrap());
     Ok(())
 }

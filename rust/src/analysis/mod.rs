@@ -1,0 +1,688 @@
+//! The one request API: [`AnalysisPlan`] → [`AnalysisReport`].
+//!
+//! Fast-VAT's pitch is cluster-tendency assessment cheap enough to run
+//! *inside* production pipelines (paper §6.1). This module is the single
+//! front door every deployment surface enters through: the CLI, the job
+//! service, the auto-clustering pipeline, streaming snapshots, and the
+//! examples all build an [`Analysis`] request, validate it into an
+//! [`AnalysisPlan`], and execute it against any
+//! [`DistanceEngine`](crate::dissimilarity::engine::DistanceEngine).
+//!
+//! ```
+//! use fast_vat::analysis::{Analysis, StoragePolicy};
+//! use fast_vat::data::generators::blobs;
+//! use fast_vat::dissimilarity::engine::BlockedEngine;
+//! use fast_vat::vat::blocks::BlockDetector;
+//!
+//! let ds = blobs(120, 2, 3, 0.4, 42);
+//! let report = Analysis::of(ds.points)
+//!     .storage(StoragePolicy::Auto { memory_budget_bytes: 64 * 1024 })
+//!     .ivat(true)
+//!     .detect_blocks(BlockDetector::default())
+//!     .hopkins(1)
+//!     .plan()
+//!     .unwrap()
+//!     .execute(&BlockedEngine)
+//!     .unwrap();
+//! assert_eq!(report.vat.order.len(), 120);
+//! assert!(report.k_estimate().unwrap() >= 1);
+//! ```
+//!
+//! Three properties the old per-surface entry points could not offer:
+//!
+//! * **Up-front validation** — [`Analysis::plan`] rejects inconsistent
+//!   requests (insight without detection, a Hopkins stage on a
+//!   precomputed-storage input, a zero RAM budget) before any work runs.
+//! * **Budget-aware tier selection** — [`StoragePolicy::Auto`] picks
+//!   dense / condensed / sharded from `n` and a caller RAM budget, and
+//!   [`SamplePolicy::Above`] escalates to sVAT maximin sampling above a
+//!   point cap, instead of every caller hand-tuning
+//!   `StorageKind` + `ShardOptions`.
+//! * **Each stage exactly once** — distance → VAT → iVAT → detection →
+//!   Hopkins → render run once per requested stage, and the
+//!   [`AnalysisReport`] carries the typed output, per-stage wall timings,
+//!   and the resolved plan.
+//!
+//! Output is bitwise identical to the deprecated per-surface entry points
+//! (`ivat_with_opts`, `svat_with_opts`, `BlockDetector::insight_opts`) —
+//! locked by `tests/analysis_parity.rs` across engines × metrics × storage
+//! kinds.
+
+pub mod policy;
+pub mod report;
+
+pub use policy::{condensed_bytes, dense_bytes, SamplePolicy, StoragePolicy};
+pub use report::{AnalysisReport, ResolvedPlan, SampleInfo, StageTimings};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::scale::Scaler;
+use crate::data::Points;
+use crate::dissimilarity::engine::DistanceEngine;
+use crate::dissimilarity::{DistanceStore, Metric, ShardOptions};
+use crate::error::{Error, Result};
+use crate::hopkins::{hopkins_mean, HopkinsParams};
+use crate::vat::blocks::BlockDetector;
+use crate::vat::svat::{assign_nearest, maximin_sample};
+use crate::vat::{ivat, vat};
+use crate::viz::render;
+
+/// What the plan assesses: raw points (the engine builds distances) or
+/// precomputed distance storage (streaming snapshots, pre-built matrices).
+#[derive(Debug, Clone)]
+enum PlanInput {
+    Points(Points),
+    Storage(Arc<DistanceStore>),
+}
+
+/// Builder for an [`AnalysisPlan`] — the one request type for the whole
+/// crate. Start from [`Analysis::of`] (points) or [`Analysis::over`]
+/// (precomputed storage), chain stage/policy knobs, then validate with
+/// [`Analysis::plan`].
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    input: PlanInput,
+    metric: Metric,
+    standardize: bool,
+    storage: StoragePolicy,
+    shard: ShardOptions,
+    sample: SamplePolicy,
+    seed: u64,
+    ivat: bool,
+    detector: Option<BlockDetector>,
+    insight: bool,
+    hopkins_runs: usize,
+    hopkins_params: HopkinsParams,
+    render: bool,
+    keep_matrix: bool,
+}
+
+impl Analysis {
+    fn new(input: PlanInput, standardize: bool) -> Self {
+        Self {
+            input,
+            metric: Metric::Euclidean,
+            standardize,
+            storage: StoragePolicy::default(),
+            shard: ShardOptions::default(),
+            sample: SamplePolicy::Never,
+            seed: 0x5eed,
+            ivat: false,
+            detector: None,
+            insight: false,
+            hopkins_runs: 0,
+            hopkins_params: HopkinsParams::default(),
+            render: false,
+            keep_matrix: false,
+        }
+    }
+
+    /// Assess a dataset: the engine builds the distance storage. Features
+    /// are standardized by default (the paper does); disable with
+    /// [`Analysis::standardize`].
+    pub fn of(points: Points) -> Self {
+        Self::new(PlanInput::Points(points), true)
+    }
+
+    /// Assess precomputed distance storage (no distance build, no engine
+    /// required — execute with [`AnalysisPlan::execute_precomputed`]).
+    /// Point-only stages (standardize, sampling, Hopkins) are rejected at
+    /// [`Analysis::plan`] time for this input.
+    pub fn over(storage: Arc<DistanceStore>) -> Self {
+        Self::new(PlanInput::Storage(storage), false)
+    }
+
+    /// Distance metric (default Euclidean, the paper's choice).
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    /// Standardize features before distances (default `true` for point
+    /// input; must stay `false` for storage input).
+    pub fn standardize(mut self, yes: bool) -> Self {
+        self.standardize = yes;
+        self
+    }
+
+    /// Storage policy: pin a layout or give a RAM budget and let the
+    /// resolver pick the tier (see [`StoragePolicy`]).
+    pub fn storage(mut self, policy: StoragePolicy) -> Self {
+        self.storage = policy;
+        self
+    }
+
+    /// Shard knobs for sharded storage: used as-is by
+    /// `StoragePolicy::Fixed(Sharded)`; `Auto` derives
+    /// `shard_rows`/`cache_shards` from the budget and keeps only the
+    /// `spill_dir` from here.
+    pub fn shard(mut self, shard: ShardOptions) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    /// sVAT escalation policy (see [`SamplePolicy`]); point input only.
+    pub fn sample(mut self, policy: SamplePolicy) -> Self {
+        self.sample = policy;
+        self
+    }
+
+    /// Seed for the maximin sampling stage (deterministic per seed).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Also compute the iVAT path-max transform, emitted in the resolved
+    /// storage layout.
+    pub fn ivat(mut self, yes: bool) -> Self {
+        self.ivat = yes;
+        self
+    }
+
+    /// Detect dark diagonal blocks with this detector (over the iVAT
+    /// transform when [`Analysis::ivat`] is on, else over the raw VAT
+    /// image) — enables [`AnalysisReport::k_estimate`].
+    pub fn detect_blocks(mut self, detector: BlockDetector) -> Self {
+        self.detector = Some(detector);
+        self
+    }
+
+    /// Also produce the qualitative Table-3 insight string (requires
+    /// [`Analysis::detect_blocks`]; runs the iVAT transform internally when
+    /// the plan itself does not request iVAT).
+    pub fn insight(mut self, yes: bool) -> Self {
+        self.insight = yes;
+        self
+    }
+
+    /// Also compute the Hopkins statistic, averaged over `runs` draws
+    /// (`runs = 1` is a single evaluation); point input only.
+    pub fn hopkins(mut self, runs: usize) -> Self {
+        self.hopkins_runs = runs;
+        self
+    }
+
+    /// Tunables (probe count, exponent, seed) for the Hopkins stage.
+    pub fn hopkins_params(mut self, params: HopkinsParams) -> Self {
+        self.hopkins_params = params;
+        self
+    }
+
+    /// Also render the grayscale image (iVAT image when [`Analysis::ivat`]
+    /// is on, else the raw VAT image).
+    pub fn render(mut self, yes: bool) -> Self {
+        self.render = yes;
+        self
+    }
+
+    /// Keep the dense reordered matrix `R*` in the report (materializes n²
+    /// bytes; everything else reads the zero-copy view).
+    pub fn keep_matrix(mut self, yes: bool) -> Self {
+        self.keep_matrix = yes;
+        self
+    }
+
+    /// Validate the request into an executable [`AnalysisPlan`]. All
+    /// consistency errors surface here, before any stage runs.
+    pub fn plan(self) -> Result<AnalysisPlan> {
+        if self.shard.shard_rows == 0 {
+            return Err(Error::InvalidArg("shard_rows must be >= 1".into()));
+        }
+        if self.shard.cache_shards == 0 {
+            return Err(Error::InvalidArg("cache_shards must be >= 1".into()));
+        }
+        if let StoragePolicy::Auto {
+            memory_budget_bytes,
+        } = self.storage
+        {
+            if memory_budget_bytes == 0 {
+                return Err(Error::InvalidArg(
+                    "StoragePolicy::Auto needs a positive memory budget".into(),
+                ));
+            }
+        }
+        if let SamplePolicy::Above(cap) = self.sample {
+            if cap < 2 {
+                return Err(Error::InvalidArg(
+                    "SamplePolicy::Above cap must be >= 2".into(),
+                ));
+            }
+        }
+        if self.insight && self.detector.is_none() {
+            return Err(Error::InvalidArg(
+                "insight requires detect_blocks on the plan".into(),
+            ));
+        }
+        match &self.input {
+            PlanInput::Points(points) => {
+                if self.hopkins_runs > 0 && points.n() < 2 {
+                    return Err(Error::InvalidArg(
+                        "hopkins needs at least 2 points".into(),
+                    ));
+                }
+            }
+            PlanInput::Storage(_) => {
+                if self.standardize {
+                    return Err(Error::InvalidArg(
+                        "standardize applies to point input, not precomputed storage".into(),
+                    ));
+                }
+                if self.sample != SamplePolicy::Never {
+                    return Err(Error::InvalidArg(
+                        "sampling applies to point input, not precomputed storage".into(),
+                    ));
+                }
+                if self.hopkins_runs > 0 {
+                    return Err(Error::InvalidArg(
+                        "the Hopkins stage needs point input, not precomputed storage".into(),
+                    ));
+                }
+            }
+        }
+        Ok(AnalysisPlan { spec: self })
+    }
+}
+
+/// A validated analysis request. Execute with [`AnalysisPlan::execute`]
+/// (any [`DistanceEngine`]) or, for storage-input plans,
+/// [`AnalysisPlan::execute_precomputed`].
+#[derive(Debug, Clone)]
+pub struct AnalysisPlan {
+    spec: Analysis,
+}
+
+/// Execute a plan against an engine — free-function form of
+/// [`AnalysisPlan::execute`].
+pub fn execute(plan: &AnalysisPlan, engine: &dyn DistanceEngine) -> Result<AnalysisReport> {
+    plan.execute(engine)
+}
+
+impl AnalysisPlan {
+    /// Run every requested stage exactly once — distance → VAT → iVAT →
+    /// detection → Hopkins → render — and return the typed report.
+    pub fn execute(&self, engine: &dyn DistanceEngine) -> Result<AnalysisReport> {
+        self.run(Some(engine))
+    }
+
+    /// Execute a storage-input plan without an engine (the distance stage
+    /// is already done). Errors on point-input plans.
+    pub fn execute_precomputed(&self) -> Result<AnalysisReport> {
+        match self.spec.input {
+            PlanInput::Storage(_) => self.run(None),
+            PlanInput::Points(_) => Err(Error::InvalidArg(
+                "this plan assesses points; call execute(engine)".into(),
+            )),
+        }
+    }
+
+    fn run(&self, engine: Option<&dyn DistanceEngine>) -> Result<AnalysisReport> {
+        let t_total = Instant::now();
+        let mut timings = StageTimings::default();
+        let spec = &self.spec;
+
+        // stage 1: input → distance storage (+ resolved plan, sVAT record)
+        let (store, resolved, sample_info, z_opt) = match &spec.input {
+            PlanInput::Storage(s) => {
+                let resolved = ResolvedPlan {
+                    metric: spec.metric,
+                    standardize: false,
+                    storage: s.kind(),
+                    shard: spec.shard.clone(),
+                    n_input: s.n(),
+                    n_assessed: s.n(),
+                    engine: engine.map(|e| e.name()).unwrap_or("precomputed"),
+                };
+                (s.clone(), resolved, None, None)
+            }
+            PlanInput::Points(points) => {
+                let engine = engine.ok_or_else(|| {
+                    Error::InvalidArg(
+                        "a points-input plan needs a distance engine; call execute(engine)"
+                            .into(),
+                    )
+                })?;
+                let z = if spec.standardize {
+                    Scaler::standardized(points)
+                } else {
+                    points.clone()
+                };
+                let n_input = z.n();
+                let (built, kind, shard, n_assessed, info) =
+                    match spec.sample.resolve(n_input) {
+                        Some(s) => {
+                            let t = Instant::now();
+                            let indices = maximin_sample(&z, s, spec.metric, spec.seed);
+                            let sub = z.select(&indices);
+                            // shared with sVAT, so assignments match the
+                            // deprecated shim bitwise
+                            let assignment = assign_nearest(&z, &indices, spec.metric);
+                            timings.sample_s = t.elapsed().as_secs_f64();
+                            let (kind, shard) = spec.storage.resolve(sub.n(), &spec.shard);
+                            let t = Instant::now();
+                            let built =
+                                engine.build_storage_with(&sub, spec.metric, kind, &shard)?;
+                            timings.distance_s = t.elapsed().as_secs_f64();
+                            let n_assessed = sub.n();
+                            (
+                                built,
+                                kind,
+                                shard,
+                                n_assessed,
+                                Some(SampleInfo {
+                                    indices,
+                                    assignment,
+                                }),
+                            )
+                        }
+                        None => {
+                            let (kind, shard) = spec.storage.resolve(n_input, &spec.shard);
+                            let t = Instant::now();
+                            let built =
+                                engine.build_storage_with(&z, spec.metric, kind, &shard)?;
+                            timings.distance_s = t.elapsed().as_secs_f64();
+                            (built, kind, shard, n_input, None)
+                        }
+                    };
+                let resolved = ResolvedPlan {
+                    metric: spec.metric,
+                    standardize: spec.standardize,
+                    storage: kind,
+                    shard,
+                    n_input,
+                    n_assessed,
+                    engine: engine.name(),
+                };
+                (Arc::new(built), resolved, info, Some(z))
+            }
+        };
+
+        // stage 2: VAT ordering
+        let t = Instant::now();
+        let v = vat(store.as_ref());
+        timings.vat_s = t.elapsed().as_secs_f64();
+
+        // stage 3: iVAT transform, emitted in the resolved layout
+        let ivat_result = if spec.ivat {
+            let t = Instant::now();
+            let iv = ivat::transform(&v, store.kind(), &resolved.shard)?;
+            timings.ivat_s = t.elapsed().as_secs_f64();
+            Some(iv)
+        } else {
+            None
+        };
+
+        // stage 4: block detection + insight
+        let (blocks, insight) = if let Some(det) = &spec.detector {
+            let t = Instant::now();
+            let blocks = match &ivat_result {
+                Some(iv) => det.detect(&iv.transformed),
+                None => det.detect(&v.view(store.as_ref())),
+            };
+            let insight = if spec.insight {
+                Some(match &ivat_result {
+                    // `blocks` are iVAT blocks here — exactly what the
+                    // insight vocabulary wants
+                    Some(_) => det.insight_with(&v, &blocks, store.as_ref()),
+                    None => det.insight_impl(&v, store.as_ref(), &resolved.shard)?,
+                })
+            } else {
+                None
+            };
+            timings.detect_s = t.elapsed().as_secs_f64();
+            (Some(blocks), insight)
+        } else {
+            (None, None)
+        };
+
+        // stage 5: Hopkins over the full (standardized) points
+        let hopkins = if spec.hopkins_runs > 0 {
+            let z = z_opt
+                .as_ref()
+                .expect("validated at plan time: hopkins requires point input");
+            let t = Instant::now();
+            let h = hopkins_mean(z, &spec.hopkins_params, spec.hopkins_runs)?;
+            timings.hopkins_s = t.elapsed().as_secs_f64();
+            Some(h)
+        } else {
+            None
+        };
+
+        // stage 6: render
+        let image = if spec.render {
+            let t = Instant::now();
+            let img = match &ivat_result {
+                Some(iv) => render(&iv.transformed),
+                None => render(&v.view(store.as_ref())),
+            };
+            timings.render_s = t.elapsed().as_secs_f64();
+            Some(img)
+        } else {
+            None
+        };
+
+        let reordered = spec.keep_matrix.then(|| v.materialize(store.as_ref()));
+        timings.total_s = t_total.elapsed().as_secs_f64();
+
+        Ok(AnalysisReport {
+            plan: resolved,
+            vat: v,
+            storage: store,
+            ivat: ivat_result,
+            blocks,
+            insight,
+            hopkins,
+            image,
+            reordered,
+            sample: sample_info,
+            timings,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::engine::BlockedEngine;
+    use crate::dissimilarity::{DistanceMatrix, DistanceStorage, StorageKind};
+    use crate::vat::ivat::ivat_with;
+
+    #[test]
+    fn builder_validates_up_front() {
+        let pts = blobs(20, 2, 2, 0.4, 1).points;
+        // insight without a detector
+        assert!(Analysis::of(pts.clone()).insight(true).plan().is_err());
+        // zero budget
+        assert!(Analysis::of(pts.clone())
+            .storage(StoragePolicy::Auto {
+                memory_budget_bytes: 0
+            })
+            .plan()
+            .is_err());
+        // degenerate sample cap
+        assert!(Analysis::of(pts.clone())
+            .sample(SamplePolicy::Above(1))
+            .plan()
+            .is_err());
+        // broken shard knobs
+        assert!(Analysis::of(pts.clone())
+            .shard(ShardOptions {
+                shard_rows: 0,
+                cache_shards: 1,
+                spill_dir: None
+            })
+            .plan()
+            .is_err());
+        // hopkins needs >= 2 points
+        let one = blobs(1, 2, 1, 0.4, 2).points;
+        assert!(Analysis::of(one).hopkins(1).plan().is_err());
+        // point-only stages rejected on storage input
+        let store = Arc::new(DistanceStore::Dense(DistanceMatrix::zeros(4)));
+        assert!(Analysis::over(store.clone())
+            .standardize(true)
+            .plan()
+            .is_err());
+        assert!(Analysis::over(store.clone())
+            .sample(SamplePolicy::Above(2))
+            .plan()
+            .is_err());
+        assert!(Analysis::over(store.clone()).hopkins(1).plan().is_err());
+        // and the valid baseline passes
+        assert!(Analysis::over(store).plan().is_ok());
+        assert!(Analysis::of(pts).plan().is_ok());
+    }
+
+    #[test]
+    fn execute_precomputed_rejects_point_input() {
+        let plan = Analysis::of(blobs(10, 2, 2, 0.4, 3).points).plan().unwrap();
+        assert!(plan.execute_precomputed().is_err());
+    }
+
+    #[test]
+    fn plan_matches_hand_rolled_stages_bitwise() {
+        // the executor is a re-orchestration of the same primitives; pin it
+        let ds = blobs(60, 2, 3, 0.35, 4);
+        let det = BlockDetector::default();
+        let params = HopkinsParams {
+            seed: 5,
+            ..Default::default()
+        };
+
+        // hand-rolled (non-deprecated primitives)
+        let z = Scaler::standardized(&ds.points);
+        let d = BlockedEngine
+            .build_storage(&z, Metric::Euclidean, StorageKind::Condensed)
+            .unwrap();
+        let v = vat(&d);
+        let iv = ivat_with(&v, StorageKind::Condensed).unwrap();
+        let blocks = det.detect(&iv.transformed);
+        let insight = det.insight_with(&v, &blocks, &d);
+        let h = hopkins_mean(&z, &params, 2).unwrap();
+        let image = render(&iv.transformed);
+
+        // one plan
+        let report = Analysis::of(ds.points.clone())
+            .storage(StoragePolicy::Fixed(StorageKind::Condensed))
+            .ivat(true)
+            .detect_blocks(BlockDetector::default())
+            .insight(true)
+            .hopkins(2)
+            .hopkins_params(params)
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+
+        assert_eq!(report.vat.order, v.order);
+        assert_eq!(report.vat.mst, v.mst);
+        assert_eq!(report.blocks.as_deref(), Some(blocks.as_slice()));
+        assert_eq!(report.k_estimate(), Some(blocks.len()));
+        assert_eq!(report.insight.as_deref(), Some(insight.as_str()));
+        assert_eq!(report.hopkins, Some(h));
+        assert_eq!(report.image.as_ref().unwrap().pixels, image.pixels);
+        assert_eq!(report.plan.storage, StorageKind::Condensed);
+        assert_eq!(report.plan.engine, "blocked");
+        assert_eq!(report.plan.n_input, 60);
+        assert_eq!(report.plan.n_assessed, 60);
+        assert!(report.timings.total_s >= 0.0);
+        assert!(report.sample.is_none());
+        assert!(report.reordered.is_none());
+    }
+
+    #[test]
+    fn storage_input_plan_reuses_the_exact_arc() {
+        let ds = blobs(40, 2, 2, 0.4, 6);
+        let d = BlockedEngine
+            .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+            .unwrap();
+        let expect = vat(&d);
+        let store = Arc::new(d);
+        let report = Analysis::over(store.clone())
+            .detect_blocks(BlockDetector::default())
+            .plan()
+            .unwrap()
+            .execute_precomputed()
+            .unwrap();
+        assert!(Arc::ptr_eq(&store, &report.storage));
+        assert_eq!(report.vat.order, expect.order);
+        assert_eq!(report.plan.engine, "precomputed");
+        assert_eq!(report.timings.distance_s, 0.0);
+        assert!(report.blocks.is_some());
+        assert!(report.hopkins.is_none());
+    }
+
+    #[test]
+    fn auto_policy_resolves_per_request_size() {
+        // one budget, two sizes: 16_000 bytes holds a dense 40×40 matrix
+        // (12_800 B) but neither the dense (115_200 B) nor the condensed
+        // (57_120 B) form of 120 points -> the resolver spills, with
+        // shard_rows = 16_000 / (16·120) = 8
+        let budget = StoragePolicy::Auto {
+            memory_budget_bytes: 16_000,
+        };
+        let small = Analysis::of(blobs(40, 2, 2, 0.4, 7).points)
+            .storage(budget.clone())
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(small.plan.storage, StorageKind::Dense);
+
+        let ds = blobs(120, 2, 3, 0.35, 8);
+        let big = Analysis::of(ds.points.clone())
+            .storage(budget)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(big.plan.storage, StorageKind::Sharded);
+        assert_eq!(big.plan.shard.shard_rows, 8);
+        assert_eq!(big.plan.shard.cache_shards, 2);
+        // tier choice never changes the output
+        let dense = Analysis::of(ds.points)
+            .storage(StoragePolicy::Fixed(StorageKind::Dense))
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(big.vat.order, dense.vat.order);
+        assert_eq!(big.vat.mst, dense.vat.mst);
+    }
+
+    #[test]
+    fn sample_policy_escalates_to_svat() {
+        let ds = blobs(120, 2, 3, 0.3, 9);
+        let report = Analysis::of(ds.points.clone())
+            .sample(SamplePolicy::Above(30))
+            .seed(11)
+            .detect_blocks(BlockDetector::default())
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(report.plan.n_input, 120);
+        assert_eq!(report.plan.n_assessed, 30);
+        assert_eq!(report.vat.order.len(), 30);
+        let info = report.sample.as_ref().unwrap();
+        assert_eq!(info.indices.len(), 30);
+        assert_eq!(info.assignment.len(), 120);
+        // sample points map to themselves
+        for (pos, &si) in info.indices.iter().enumerate() {
+            assert_eq!(info.assignment[si], pos);
+        }
+        // the view reads the 30×30 sample image
+        assert_eq!(report.view().get(0, 0), 0.0);
+        // at or below the cap: no escalation
+        let full = Analysis::of(ds.points)
+            .sample(SamplePolicy::Above(120))
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert!(full.sample.is_none());
+        assert_eq!(full.plan.n_assessed, 120);
+    }
+}

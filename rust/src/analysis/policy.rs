@@ -1,0 +1,203 @@
+//! Budget-aware tier selection: [`StoragePolicy`] and [`SamplePolicy`].
+//!
+//! Before this module, every caller that wanted the condensed or sharded
+//! distance tier had to hand-tune a `StorageKind` plus `ShardOptions` per
+//! entry point (job options, pipeline config, streaming config, CLI flags).
+//! The policy layer inverts that: callers state a **RAM budget** (or pin a
+//! layout explicitly) and the resolver picks the cheapest layout that fits,
+//! using the footprint accounting the storage spine already audits:
+//!
+//! * dense n×n ............ `n² · 8` bytes resident
+//! * condensed triangle ... `n(n−1)/2 · 8` bytes resident
+//! * sharded .............. ≤ `2 · shard_rows · n · 8` bytes resident during
+//!   a full VAT job (`cache_shards = 2`; bound locked by
+//!   `tests/storage_parity.rs`)
+//!
+//! [`SamplePolicy`] is the orthogonal sVAT axis: above a caller-chosen point
+//! count the plan escalates to maximin sampling (Hathaway, Bezdek & Huband
+//! 2006) so the assessed matrix never exceeds the cap, whatever n arrives.
+
+use crate::dissimilarity::{ShardOptions, StorageKind};
+
+/// How a plan chooses its distance-storage layout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoragePolicy {
+    /// Pin a layout explicitly (the pre-plan behavior; sharded runs use the
+    /// plan's `shard` knobs).
+    Fixed(StorageKind),
+    /// Pick the cheapest layout whose resident distance bytes fit the
+    /// budget: dense if `n²·8` fits, else condensed if `n(n−1)/2·8` fits,
+    /// else sharded with `shard_rows` sized so the audited two-shard peak
+    /// (`2·shard_rows·n·8`) stays inside the budget.
+    Auto {
+        /// Resident distance-byte budget for the request.
+        memory_budget_bytes: usize,
+    },
+}
+
+impl Default for StoragePolicy {
+    fn default() -> Self {
+        StoragePolicy::Fixed(StorageKind::Dense)
+    }
+}
+
+/// Resident bytes of the dense n×n layout.
+pub fn dense_bytes(n: usize) -> usize {
+    n * n * 8
+}
+
+/// Resident bytes of the condensed n(n−1)/2 layout.
+pub fn condensed_bytes(n: usize) -> usize {
+    n * n.saturating_sub(1) / 2 * 8
+}
+
+impl StoragePolicy {
+    /// Resolve the layout for an n-point request. `base` supplies the shard
+    /// knobs for `Fixed(Sharded)` and the `spill_dir` for the auto-sized
+    /// sharded arm (auto derives `shard_rows`/`cache_shards` from the
+    /// budget, overriding `base`'s values for those two fields).
+    pub fn resolve(&self, n: usize, base: &ShardOptions) -> (StorageKind, ShardOptions) {
+        match self {
+            StoragePolicy::Fixed(kind) => (*kind, base.clone()),
+            StoragePolicy::Auto {
+                memory_budget_bytes,
+            } => {
+                let budget = *memory_budget_bytes;
+                if dense_bytes(n) <= budget {
+                    (StorageKind::Dense, base.clone())
+                } else if condensed_bytes(n) <= budget {
+                    (StorageKind::Condensed, base.clone())
+                } else {
+                    // peak resident distance bytes of a sharded VAT job are
+                    // bounded by 2·shard_rows·n·8 (cache_shards = 2), so the
+                    // largest fitting band is budget / (16n). This arm only
+                    // runs when budget < n(n−1)/2·8, which keeps the derived
+                    // shard_rows < (n−1)/4 — always a genuine multi-band
+                    // spill, never a single resident triangle.
+                    let shard_rows = (budget / (16 * n.max(1))).max(1);
+                    (
+                        StorageKind::Sharded,
+                        ShardOptions {
+                            shard_rows,
+                            cache_shards: 2,
+                            spill_dir: base.spill_dir.clone(),
+                        },
+                    )
+                }
+            }
+        }
+    }
+}
+
+/// When a plan escalates to sVAT sampling instead of assessing all n points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplePolicy {
+    /// Always assess the full matrix.
+    #[default]
+    Never,
+    /// Above `cap` points, maximin-sample `cap` representatives and assess
+    /// the `cap × cap` sample matrix (sVAT); at or below, assess everything.
+    Above(usize),
+}
+
+impl SamplePolicy {
+    /// The sample size to draw for an n-point request, or `None` when the
+    /// full matrix is assessed.
+    pub fn resolve(&self, n: usize) -> Option<usize> {
+        match *self {
+            SamplePolicy::Never => None,
+            SamplePolicy::Above(cap) if n > cap => Some(cap),
+            SamplePolicy::Above(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_tier_cutovers_at_exact_byte_budgets() {
+        // n = 100: dense = 80_000 bytes, condensed = 39_600 bytes
+        let base = ShardOptions::default();
+        assert_eq!(dense_bytes(100), 80_000);
+        assert_eq!(condensed_bytes(100), 39_600);
+        let at = |budget: usize| {
+            StoragePolicy::Auto {
+                memory_budget_bytes: budget,
+            }
+            .resolve(100, &base)
+        };
+        assert_eq!(at(80_000).0, StorageKind::Dense); // exactly fits
+        assert_eq!(at(79_999).0, StorageKind::Condensed); // one byte short
+        assert_eq!(at(39_600).0, StorageKind::Condensed); // exactly fits
+        let (kind, shard) = at(39_599); // one byte short of condensed
+        assert_eq!(kind, StorageKind::Sharded);
+        // 39_599 / (16 · 100) = 24 rows per shard, two-shard LRU
+        assert_eq!(shard.shard_rows, 24);
+        assert_eq!(shard.cache_shards, 2);
+        // a budget below one row still yields a valid (1-row) band
+        assert_eq!(at(1_600).1.shard_rows, 1);
+        assert_eq!(at(1).1.shard_rows, 1);
+    }
+
+    #[test]
+    fn auto_keeps_the_callers_spill_dir_only() {
+        let base = ShardOptions {
+            shard_rows: 999,
+            cache_shards: 7,
+            spill_dir: Some(std::path::PathBuf::from("/var/tmp/vat")),
+        };
+        let (kind, shard) = StoragePolicy::Auto {
+            memory_budget_bytes: 1_000,
+        }
+        .resolve(100, &base);
+        assert_eq!(kind, StorageKind::Sharded);
+        // rows/cache come from the budget, not the base knobs...
+        assert_eq!(shard.shard_rows, 1_000 / (16 * 100));
+        assert_eq!(shard.cache_shards, 2);
+        // ...but the spill location is the caller's
+        assert_eq!(
+            shard.spill_dir.as_deref(),
+            Some(std::path::Path::new("/var/tmp/vat"))
+        );
+    }
+
+    #[test]
+    fn fixed_policy_passes_the_base_knobs_through() {
+        let base = ShardOptions {
+            shard_rows: 13,
+            cache_shards: 3,
+            spill_dir: None,
+        };
+        for kind in [
+            StorageKind::Dense,
+            StorageKind::Condensed,
+            StorageKind::Sharded,
+        ] {
+            let (k, s) = StoragePolicy::Fixed(kind).resolve(500, &base);
+            assert_eq!(k, kind);
+            assert_eq!(s, base);
+        }
+    }
+
+    #[test]
+    fn tiny_n_is_always_dense_under_auto() {
+        let base = ShardOptions::default();
+        for n in [0usize, 1] {
+            let (kind, _) = StoragePolicy::Auto {
+                memory_budget_bytes: 8,
+            }
+            .resolve(n, &base);
+            assert_eq!(kind, StorageKind::Dense, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sample_policy_caps_strictly_above_the_threshold() {
+        assert_eq!(SamplePolicy::Never.resolve(1_000_000), None);
+        assert_eq!(SamplePolicy::Above(50).resolve(50), None);
+        assert_eq!(SamplePolicy::Above(50).resolve(51), Some(50));
+        assert_eq!(SamplePolicy::Above(50).resolve(10_000), Some(50));
+    }
+}

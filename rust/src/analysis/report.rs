@@ -1,0 +1,115 @@
+//! Typed outputs of an executed [`crate::analysis::AnalysisPlan`].
+//!
+//! An [`AnalysisReport`] carries one field per requested stage — `None`
+//! means the stage was not in the plan, never that it failed (failures
+//! surface as `Err` from `execute`) — plus per-stage wall timings and the
+//! fully resolved plan echoed back, so a caller can see exactly which
+//! storage tier, shard geometry, and sample size the policy layer chose.
+
+use std::sync::Arc;
+
+use crate::dissimilarity::{
+    DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
+};
+use crate::vat::blocks::Block;
+use crate::vat::ivat::IvatResult;
+use crate::vat::VatResult;
+use crate::viz::GrayImage;
+
+/// The plan after policy resolution: what actually ran.
+#[derive(Debug, Clone)]
+pub struct ResolvedPlan {
+    /// Distance metric the request ran under.
+    pub metric: Metric,
+    /// Whether features were standardized before distances.
+    pub standardize: bool,
+    /// The storage layout the policy resolved to.
+    pub storage: StorageKind,
+    /// The shard knobs the resolved layout used (meaningful for sharded).
+    pub shard: ShardOptions,
+    /// Points in the input (after standardization, before sampling).
+    pub n_input: usize,
+    /// Points actually assessed (equals `n_input` unless sVAT escalated).
+    pub n_assessed: usize,
+    /// Engine that built the distances (`"precomputed"` for storage-input
+    /// plans executed without an engine).
+    pub engine: &'static str,
+}
+
+/// Wall-clock seconds per executed stage (0.0 for stages not in the plan).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimings {
+    /// Maximin sampling + nearest-representative assignment (sVAT only).
+    pub sample_s: f64,
+    /// Distance-storage build.
+    pub distance_s: f64,
+    /// VAT Prim sweep.
+    pub vat_s: f64,
+    /// iVAT path-max transform (when requested).
+    pub ivat_s: f64,
+    /// Block detection + insight.
+    pub detect_s: f64,
+    /// Hopkins statistic (when requested).
+    pub hopkins_s: f64,
+    /// Rendering (when requested).
+    pub render_s: f64,
+    /// End-to-end execute time.
+    pub total_s: f64,
+}
+
+/// sVAT escalation record: which points stood in for the full dataset.
+#[derive(Debug, Clone)]
+pub struct SampleInfo {
+    /// Original indices of the maximin sample, in selection order. The
+    /// report's `vat`/`ivat`/`blocks` are over this sample's matrix.
+    pub indices: Vec<usize>,
+    /// For every original point, the position in `indices` of its nearest
+    /// representative (sample points map to themselves).
+    pub assignment: Vec<usize>,
+}
+
+/// The result of executing an [`crate::analysis::AnalysisPlan`]: one typed
+/// field per requested stage, the storage the stages ran over, per-stage
+/// timings, and the resolved plan.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// The resolved plan that actually ran (storage tier, shard geometry,
+    /// sample size, engine).
+    pub plan: ResolvedPlan,
+    /// VAT permutation + MST (always computed; O(n) resident).
+    pub vat: VatResult,
+    /// The distance storage the stages ran over — shared, so retaining the
+    /// report never copies the distance buffer.
+    pub storage: Arc<DistanceStore>,
+    /// iVAT transform in the resolved storage layout (when requested).
+    pub ivat: Option<IvatResult>,
+    /// Detected diagonal blocks (when requested; over the iVAT transform
+    /// when the plan ran iVAT, else over the raw VAT image).
+    pub blocks: Option<Vec<Block>>,
+    /// Qualitative Table-3 insight string (when requested).
+    pub insight: Option<String>,
+    /// Hopkins statistic (when requested).
+    pub hopkins: Option<f64>,
+    /// Rendered grayscale image (when requested; iVAT image when the plan
+    /// ran iVAT, else the raw VAT image).
+    pub image: Option<GrayImage>,
+    /// Dense reordered matrix `R*` (only when `keep_matrix` was requested —
+    /// the one output that materializes n² bytes).
+    pub reordered: Option<DistanceMatrix>,
+    /// sVAT escalation record (when the sample policy fired).
+    pub sample: Option<SampleInfo>,
+    /// Per-stage wall timings.
+    pub timings: StageTimings,
+}
+
+impl AnalysisReport {
+    /// Estimated cluster count (`blocks.len()` when detection ran).
+    pub fn k_estimate(&self) -> Option<usize> {
+        self.blocks.as_ref().map(Vec::len)
+    }
+
+    /// Zero-copy view of the VAT image `R*` over the report's storage.
+    pub fn view(&self) -> PermutedView<'_, DistanceStore> {
+        self.vat.view(self.storage.as_ref())
+    }
+}

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::dissimilarity::{ShardOptions, StorageKind};
+use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
 use crate::error::{Error, Result};
 
 /// A parsed scalar value.
@@ -221,6 +221,11 @@ pub struct ServiceConfig {
     /// Shard knobs for `storage = "sharded"` (`shard_rows`, `cache_shards`,
     /// `spill_dir` keys; ignored by the in-RAM layouts).
     pub shard: ShardOptions,
+    /// Default distance metric for jobs (the `metric` key, any name
+    /// [`Metric::parse`] accepts). Per-request overrides go through
+    /// [`crate::coordinator::JobOptions::metric`], so one pool serves
+    /// mixed-metric traffic; this is only the template default.
+    pub metric: Metric,
 }
 
 impl Default for ServiceConfig {
@@ -232,6 +237,7 @@ impl Default for ServiceConfig {
             artifacts_dir: "artifacts".into(),
             storage: StorageKind::Dense,
             shard: ShardOptions::default(),
+            metric: Metric::Euclidean,
         }
     }
 }
@@ -301,12 +307,33 @@ impl ServiceConfig {
                             .into(),
                     )
                 }
+                "metric" => {
+                    let m = v
+                        .as_str()
+                        .ok_or_else(|| Error::Config("metric must be a string".into()))?;
+                    cfg.metric = Metric::parse(m)
+                        .map_err(|e| Error::Config(format!("bad metric: {e}")))?;
+                }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
                 }
             }
         }
         Ok(cfg)
+    }
+
+    /// The per-job plan template this document parsed into: the
+    /// [`crate::coordinator::JobOptions`] every submitted job starts from
+    /// (callers override per request —
+    /// [`crate::coordinator::JobOptions::into_plan`] turns options + points
+    /// into the `analysis::AnalysisPlan` the worker executes).
+    pub fn plan_template(&self) -> crate::coordinator::JobOptions {
+        crate::coordinator::JobOptions {
+            storage: self.storage,
+            shard: self.shard.clone(),
+            metric: self.metric,
+            ..Default::default()
+        }
     }
 }
 
@@ -406,6 +433,31 @@ mod tests {
             "[service]\nshard_rows = \"many\"\n",
             "[service]\nspill_dir = 7\n",
         ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn service_config_metric_key_parses_into_the_plan_template() {
+        let doc = Document::parse(
+            "[service]\nstorage = \"condensed\"\nmetric = \"manhattan\"\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.metric, Metric::Manhattan);
+        // the parsed document IS the per-job plan template
+        let template = cfg.plan_template();
+        assert_eq!(template.metric, Metric::Manhattan);
+        assert_eq!(template.storage, StorageKind::Condensed);
+        assert!(template.standardize, "template keeps service defaults");
+        // defaults and validation
+        let doc = Document::parse("[service]\n").unwrap();
+        assert_eq!(
+            ServiceConfig::from_document(&doc).unwrap().metric,
+            Metric::Euclidean
+        );
+        for bad in ["[service]\nmetric = \"warp\"\n", "[service]\nmetric = 3\n"] {
             let doc = Document::parse(bad).unwrap();
             assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
         }

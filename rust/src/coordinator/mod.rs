@@ -21,11 +21,16 @@ pub mod service;
 pub mod stats;
 pub mod streaming;
 
+use crate::analysis::{Analysis, AnalysisPlan, StoragePolicy};
 use crate::data::Points;
-use crate::dissimilarity::{ShardOptions, StorageKind};
-use crate::vat::blocks::Block;
+use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
+use crate::error::Result;
+use crate::hopkins::HopkinsParams;
+use crate::vat::blocks::{Block, BlockDetector};
 
-/// What a job should compute beyond the reorder itself.
+/// What a job should compute beyond the reorder itself — the per-job plan
+/// template: [`JobOptions::into_plan`] turns options + points into the
+/// [`AnalysisPlan`] the worker executes.
 #[derive(Debug, Clone)]
 pub struct JobOptions {
     /// Standardize features before distances (recommended; paper does).
@@ -44,6 +49,9 @@ pub struct JobOptions {
     pub storage: StorageKind,
     /// Shard knobs for `sharded` jobs (ignored by the in-RAM layouts).
     pub shard: ShardOptions,
+    /// Per-request distance metric, so one service pool serves mixed-metric
+    /// traffic (default Euclidean, the paper's choice).
+    pub metric: Metric,
 }
 
 impl Default for JobOptions {
@@ -55,7 +63,32 @@ impl Default for JobOptions {
             keep_matrix: false,
             storage: StorageKind::Dense,
             shard: ShardOptions::default(),
+            metric: Metric::Euclidean,
         }
+    }
+}
+
+impl JobOptions {
+    /// Build the [`AnalysisPlan`] for one job. `job_id` seeds the Hopkins
+    /// probes so concurrent jobs draw decorrelated probe sets
+    /// deterministically.
+    pub fn into_plan(self, points: Points, job_id: u64) -> Result<AnalysisPlan> {
+        let mut request = Analysis::of(points)
+            .metric(self.metric)
+            .standardize(self.standardize)
+            .storage(StoragePolicy::Fixed(self.storage))
+            .shard(self.shard)
+            .ivat(self.ivat)
+            .detect_blocks(BlockDetector::default())
+            .insight(true)
+            .keep_matrix(self.keep_matrix);
+        if self.hopkins {
+            request = request.hopkins(1).hopkins_params(HopkinsParams {
+                seed: job_id,
+                ..Default::default()
+            });
+        }
+        request.plan()
     }
 }
 
@@ -108,5 +141,19 @@ mod tests {
         assert!(o.standardize && o.hopkins);
         assert!(!o.keep_matrix, "default must not retain O(n^2) buffers");
         assert_eq!(o.storage, StorageKind::Dense);
+        assert_eq!(o.metric, Metric::Euclidean);
+    }
+
+    #[test]
+    fn job_options_build_a_valid_plan() {
+        let ds = crate::data::generators::blobs(20, 2, 2, 0.4, 1);
+        let plan = JobOptions::default().into_plan(ds.points, 7).unwrap();
+        let report = plan
+            .execute(&crate::dissimilarity::engine::BlockedEngine)
+            .unwrap();
+        assert_eq!(report.vat.order.len(), 20);
+        assert!(report.blocks.is_some());
+        assert!(report.insight.is_some());
+        assert!(report.hopkins.is_some());
     }
 }

@@ -19,6 +19,7 @@
 
 use std::sync::Arc;
 
+use crate::analysis::{Analysis, StoragePolicy};
 use crate::cluster::{dbscan, kmeans, suggest_eps, DbscanParams, KMeansParams};
 use crate::data::scale::Scaler;
 use crate::data::Points;
@@ -28,7 +29,6 @@ use crate::error::Result;
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::metrics::{ari, silhouette, to_isize};
 use crate::vat::blocks::{Block, BlockDetector};
-use crate::vat::{ivat::ivat_with_opts, vat};
 
 /// Tunables for [`auto_cluster`].
 #[derive(Debug, Clone)]
@@ -141,18 +141,26 @@ pub fn auto_cluster(
         });
     }
 
-    // 2. tendency image -> k + the iVAT reference partition (the whole
-    // tendency stage runs on the configured storage layout; silhouettes
-    // below read the same storage, so condensed never expands to dense and
-    // sharded stays inside its LRU budget)
-    let d = engine.build_storage_with(&z, Metric::Euclidean, config.storage, &config.shard)?;
-    let v = vat(&d);
-    let detector = BlockDetector::default();
-    let iv = ivat_with_opts(&v, config.storage, &config.shard)?;
-    let blocks = detector.detect(&iv.transformed);
+    // 2. tendency image -> k + the iVAT reference partition, through the
+    // one request API (already-standardized input, so the plan does not
+    // re-scale). The whole tendency stage runs on the configured storage
+    // layout; silhouettes below read the report's storage, so condensed
+    // never expands to dense and sharded stays inside its LRU budget
+    let report = Analysis::of(z.clone())
+        .standardize(false)
+        .metric(Metric::Euclidean)
+        .storage(StoragePolicy::Fixed(config.storage))
+        .shard(config.shard.clone())
+        .ivat(true)
+        .detect_blocks(BlockDetector::default())
+        .insight(true)
+        .plan()?
+        .execute(engine.as_ref())?;
+    let d = report.storage.as_ref();
+    let blocks = report.blocks.as_deref().expect("detection was requested");
     let k = blocks.len().max(2);
-    let insight = detector.insight_with(&v, &blocks, &d);
-    let vat_reference = block_labels(&blocks, &v.order, z.n());
+    let insight = report.insight.clone().expect("insight was requested");
+    let vat_reference = block_labels(blocks, &report.vat.order, z.n());
 
     // 3. both candidates
     let km = kmeans(
@@ -174,8 +182,8 @@ pub fn auto_cluster(
     )?;
 
     // 4. the VAT image referees (see module docs)
-    let km_sil = silhouette(&d, &km_labels);
-    let db_sil = silhouette(&d, &db.labels);
+    let km_sil = silhouette(d, &km_labels);
+    let db_sil = silhouette(d, &db.labels);
     let km_agreement = ari(&vat_reference, &km_labels);
     let db_agreement = ari(&vat_reference, &db.labels);
     let db_noise_frac = db.noise as f64 / z.n().max(1) as f64;

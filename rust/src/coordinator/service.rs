@@ -9,20 +9,14 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
 
 use crate::config::ServiceConfig;
 use crate::coordinator::queue::{BoundedQueue, PushError};
 use crate::coordinator::stats::ServiceStats;
 use crate::coordinator::{JobOptions, VatJob, VatJobOutput};
-use crate::data::scale::Scaler;
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
-use crate::dissimilarity::Metric;
 use crate::error::{Error, Result};
-use crate::hopkins::{hopkins, HopkinsParams};
-use crate::vat::blocks::BlockDetector;
-use crate::vat::{ivat::ivat_with_opts, vat};
 
 /// A submitted job's completion channel.
 pub type Ticket = mpsc::Receiver<Result<VatJobOutput>>;
@@ -105,8 +99,15 @@ impl VatService {
                 self.stats.on_submit();
                 Ok((id, ticket))
             }
-            Err(PushError::Closed(_)) | Err(PushError::Full(_)) => {
+            Err(PushError::Closed(_)) => {
                 Err(Error::Coordinator("service shut down".into()))
+            }
+            // the blocking push waits out a full queue, so `Full` is
+            // unreachable today — but it is backpressure, not a shutdown,
+            // and must never be reported as one
+            Err(PushError::Full(_)) => {
+                self.stats.on_shed();
+                Err(Error::Coordinator("queue full (backpressure)".into()))
             }
         }
     }
@@ -167,70 +168,30 @@ pub enum SubmitError {
 
 /// Execute one job (also used directly by the CLI's one-shot mode).
 ///
-/// The distance stage emits the storage layout the job asked for; every
-/// downstream stage (Prim sweep, iVAT, block detection, insight) reads
-/// that storage — through the zero-copy `VatResult::view` — without ever
-/// materializing the reordered n×n copy. Only `keep_matrix` materializes,
-/// explicitly, for callers that want `R*` back.
+/// The body is a thin adapter over the one request API: options + points
+/// become an `analysis::AnalysisPlan`, [`AnalysisPlan::execute`] runs
+/// distance → VAT → iVAT → detection → Hopkins exactly once per requested
+/// stage on the job's storage layout (zero-copy views throughout; only
+/// `keep_matrix` materializes `R*`), and the typed report maps back onto
+/// the wire-stable [`VatJobOutput`].
+///
+/// [`AnalysisPlan::execute`]: crate::analysis::AnalysisPlan::execute
 pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOutput> {
-    let points = if job.options.standardize {
-        Scaler::standardized(&job.points)
-    } else {
-        job.points.clone()
-    };
-
-    let t0 = Instant::now();
-    let storage = engine.build_storage_with(
-        &points,
-        Metric::Euclidean,
-        job.options.storage,
-        &job.options.shard,
-    )?;
-    let t_distance_s = t0.elapsed().as_secs_f64();
-
-    let t1 = Instant::now();
-    let v = vat(&storage);
-    let detector = BlockDetector::default();
-    let (blocks, insight) = if job.options.ivat {
-        // the transform is emitted in the job's own layout (sharded jobs
-        // spill it with the job's shard knobs), so iVAT never expands the
-        // memory envelope the storage choice promised
-        let iv = ivat_with_opts(&v, job.options.storage, &job.options.shard)?;
-        let blocks = detector.detect(&iv.transformed);
-        let insight = detector.insight_with(&v, &blocks, &storage);
-        (blocks, insight)
-    } else {
-        let blocks = detector.detect(&v.view(&storage));
-        let insight = detector.insight_opts(&v, &storage, &job.options.shard)?;
-        (blocks, insight)
-    };
-    let t_order_s = t1.elapsed().as_secs_f64();
-
-    let h = if job.options.hopkins {
-        Some(hopkins(
-            &points,
-            &HopkinsParams {
-                seed: job.id, // decorrelate probes across jobs deterministically
-                ..Default::default()
-            },
-        )?)
-    } else {
-        None
-    };
-
+    let report = job.options.into_plan(job.points, job.id)?.execute(engine)?;
+    let blocks = report.blocks.clone().unwrap_or_default();
     let k_estimate = blocks.len();
     Ok(VatJobOutput {
         id: job.id,
-        order: v.order.clone(),
+        order: report.vat.order.clone(),
         blocks,
         k_estimate,
-        hopkins: h,
-        insight,
-        reordered: job.options.keep_matrix.then(|| v.materialize(&storage)),
-        t_distance_s,
-        t_order_s,
-        engine: engine.name(),
-        storage: job.options.storage,
+        hopkins: report.hopkins,
+        insight: report.insight.unwrap_or_default(),
+        reordered: report.reordered,
+        t_distance_s: report.timings.distance_s,
+        t_order_s: report.timings.vat_s + report.timings.ivat_s + report.timings.detect_s,
+        engine: report.plan.engine,
+        storage: report.plan.storage,
     })
 }
 
@@ -342,6 +303,67 @@ mod tests {
         assert_eq!(out_d.storage, StorageKind::Dense);
         assert_eq!(out_c.storage, StorageKind::Condensed);
         assert_eq!(out_s.storage, StorageKind::Sharded);
+    }
+
+    #[test]
+    fn blocking_submit_waits_out_a_full_queue_instead_of_erroring() {
+        // regression: the blocking `push` arm used to fold `PushError::Full`
+        // into the same "service shut down" error as `Closed`. A full queue
+        // must make `submit` wait for capacity — every submit succeeds and
+        // every job completes, and no backpressure is ever misreported as a
+        // shutdown
+        let service = svc(1, 1);
+        let ds = blobs(200, 2, 3, 0.4, 127);
+        let mut tickets = Vec::new();
+        for _ in 0..5 {
+            let (_, t) = service
+                .submit(ds.points.clone(), JobOptions::default())
+                .expect("blocking submit must never surface queue-full as an error");
+            tickets.push(t);
+        }
+        for t in tickets {
+            t.recv().unwrap().unwrap();
+        }
+        let snap = service.stats().snapshot();
+        assert_eq!(snap.submitted, 5);
+        assert_eq!(snap.completed, 5);
+    }
+
+    #[test]
+    fn mixed_metric_jobs_match_their_single_metric_references() {
+        // one pool, two metrics in flight: each job's order must equal the
+        // reference computed under its own metric (bitwise — same engine,
+        // same standardization, same storage)
+        use crate::data::scale::Scaler;
+        use crate::dissimilarity::Metric;
+        use crate::vat::vat;
+
+        let service = svc(2, 8);
+        let ds = blobs(90, 2, 3, 0.35, 126);
+        let (_, t_l2) = service
+            .submit(ds.points.clone(), JobOptions::default())
+            .unwrap();
+        let (_, t_l1) = service
+            .submit(
+                ds.points.clone(),
+                JobOptions {
+                    metric: Metric::Manhattan,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let out_l2 = t_l2.recv().unwrap().unwrap();
+        let out_l1 = t_l1.recv().unwrap().unwrap();
+
+        let z = Scaler::standardized(&ds.points);
+        let ref_l2 = vat(&BlockedEngine
+            .build_storage(&z, Metric::Euclidean, StorageKind::Dense)
+            .unwrap());
+        let ref_l1 = vat(&BlockedEngine
+            .build_storage(&z, Metric::Manhattan, StorageKind::Dense)
+            .unwrap());
+        assert_eq!(out_l2.order, ref_l2.order);
+        assert_eq!(out_l1.order, ref_l1.order);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::analysis::Analysis;
 #[cfg(test)]
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
@@ -27,7 +28,7 @@ use crate::dissimilarity::{
 };
 use crate::error::{Error, Result};
 use crate::vat::blocks::{Block, BlockDetector};
-use crate::vat::{vat, VatResult};
+use crate::vat::VatResult;
 
 /// Configuration for [`StreamingVat`].
 #[derive(Debug, Clone)]
@@ -217,9 +218,15 @@ impl StreamingVat {
                     )?)
                 }
             });
-            let v = vat(store.as_ref());
-            let blocks = BlockDetector::default().detect(&v.view(store.as_ref()));
-            self.cached = Some((v, store, blocks));
+            // the reorder + detection stages run through the one request
+            // API over the already-built window storage (`Analysis::over`
+            // skips the distance stage and echoes back the same Arc)
+            let report = Analysis::over(store.clone())
+                .detect_blocks(BlockDetector::default())
+                .plan()?
+                .execute_precomputed()?;
+            let blocks = report.blocks.unwrap_or_default();
+            self.cached = Some((report.vat, store, blocks));
             self.dirty = false;
         }
         let (v, store, blocks) = self.cached.clone().expect("cached above");

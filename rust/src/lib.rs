@@ -14,43 +14,55 @@
 //!   job coordinator with streaming VAT, and the paper's entire evaluation
 //!   harness.
 //!
-//! ## Quickstart
+//! ## Quickstart — one request, one report
 //!
-//! Every distance backend implements the object-safe
-//! [`dissimilarity::engine::DistanceEngine`] trait, and every stage
-//! downstream of the distance build is generic over the
-//! [`dissimilarity::DistanceStorage`] layout (dense n×n, condensed
-//! n(n−1)/2, or the sharded out-of-core tier that spills the triangle to
-//! disk behind an LRU of hot row-band shards), so the pipeline below runs
-//! unchanged on any engine × storage combination — with bit-identical
-//! output:
+//! Every deployment surface enters through the [`analysis`] module: build
+//! an [`analysis::Analysis`] request, validate it into an
+//! [`analysis::AnalysisPlan`], execute it against any
+//! [`dissimilarity::engine::DistanceEngine`], and read the typed
+//! [`analysis::AnalysisReport`]. A [`analysis::StoragePolicy`] RAM budget
+//! (or a pinned `StorageKind`) picks the distance tier — dense n×n,
+//! condensed n(n−1)/2, or the sharded out-of-core spill — and an
+//! [`analysis::SamplePolicy`] escalates to sVAT sampling above a point
+//! cap. Output is bit-identical whichever engine and tier run the request:
 //!
 //! ```
+//! use fast_vat::analysis::{Analysis, StoragePolicy};
 //! use fast_vat::data::generators::blobs;
-//! use fast_vat::dissimilarity::engine::{BlockedEngine, DistanceEngine};
-//! use fast_vat::dissimilarity::{Metric, StorageKind};
-//! use fast_vat::vat::vat;
-//! use fast_vat::viz::render;
+//! use fast_vat::dissimilarity::engine::BlockedEngine;
+//! use fast_vat::dissimilarity::StorageKind;
+//! use fast_vat::vat::blocks::BlockDetector;
 //!
 //! let ds = blobs(120, 2, 3, 0.4, 42);
-//! let engine = BlockedEngine; // or ParallelEngine, CondensedEngine, ...
-//! // condensed storage: ~half the resident distance bytes
-//! let d = engine
-//!     .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
+//! let report = Analysis::of(ds.points)
+//!     // 64 KiB budget: dense 120² would need 112.5 KiB, the condensed
+//!     // triangle fits -> the resolver picks condensed
+//!     .storage(StoragePolicy::Auto { memory_budget_bytes: 64 * 1024 })
+//!     .ivat(true)
+//!     .detect_blocks(BlockDetector::default())
+//!     .hopkins(1)
+//!     .render(true)
+//!     .plan()
+//!     .unwrap()
+//!     .execute(&BlockedEngine) // or ParallelEngine, the XLA tier, ...
 //!     .unwrap();
-//! let result = vat(&d);
-//! assert_eq!(result.order.len(), 120);
-//! // the VAT image renders from a zero-copy view — no reordered n×n copy
-//! let image = render(&result.view(&d));
-//! assert_eq!(image.width, 120);
+//! assert_eq!(report.plan.storage, StorageKind::Condensed);
+//! assert_eq!(report.vat.order.len(), 120);
+//! assert!(report.k_estimate().unwrap() >= 1);
+//! assert!(report.hopkins.unwrap() > 0.0);
+//! assert_eq!(report.image.as_ref().unwrap().width, 120);
 //! ```
 //!
-//! See `rust/examples/` for the paper-evaluation driver and the service
-//! scenarios, and the top-level `README.md` for build and feature-flag
-//! instructions (including the
-//! `storage = "dense" | "condensed" | "sharded"` knob and the shard
-//! tuning options).
+//! The storage spine underneath is unchanged: every stage downstream of
+//! the distance build is generic over [`dissimilarity::DistanceStorage`],
+//! reads through zero-copy [`dissimilarity::PermutedView`]s, and never
+//! materializes the reordered n×n copy unless asked
+//! (`Analysis::keep_matrix`). See `rust/examples/` for the
+//! paper-evaluation driver and the service scenarios, and the top-level
+//! `README.md` for build and feature-flag instructions plus the
+//! old-entry-point → plan migration table.
 
+pub mod analysis;
 pub mod bench_util;
 pub mod cluster;
 pub mod config;

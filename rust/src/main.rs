@@ -12,22 +12,21 @@
 
 use std::collections::HashMap;
 
+use fast_vat::analysis::{Analysis, SamplePolicy, StoragePolicy};
 use fast_vat::config::ServiceConfig;
 use fast_vat::coordinator::pipeline::{auto_cluster, PipelineConfig};
 use fast_vat::coordinator::service::VatService;
-use fast_vat::coordinator::JobOptions;
 use fast_vat::data::csv::{load_csv, CsvOptions};
 use fast_vat::data::generators;
 use fast_vat::data::scale::Scaler;
 use fast_vat::data::Dataset;
-use fast_vat::dissimilarity::engine::DistanceEngine;
-use fast_vat::dissimilarity::{ShardOptions, StorageKind};
+use fast_vat::dissimilarity::{Metric, ShardOptions, StorageKind};
 use fast_vat::error::{Error, Result};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::{ivat::ivat_with_opts, vat};
-use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm, render, GrayImage};
+use fast_vat::vat::vat;
+use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm};
 
 fn usage() -> ! {
     eprintln!(
@@ -36,7 +35,9 @@ fn usage() -> ! {
 USAGE:
   fast-vat vat      [--input data.csv | --dataset NAME]
                     [--engine naive|blocked|parallel|condensed|xla|xla-mm]
-                    [--storage dense|condensed|sharded] [--ivat]
+                    [--metric euclidean|l1|linf|cosine|minkowski:P|...]
+                    [--storage dense|condensed|sharded | --budget-mb N]
+                    [--sample N] [--ivat]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
@@ -46,15 +47,18 @@ USAGE:
                     [--storage dense|condensed|sharded] [--shard-rows N]
                     [--cache-shards N] [--spill-dir DIR]
   fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
-                    [--storage dense|condensed|sharded] [--shard-rows N]
-                    [--cache-shards N] [--spill-dir DIR]
+                    [--metric NAME] [--storage dense|condensed|sharded]
+                    [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
   fast-vat info     [--artifacts DIR]
 
 STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
   dense bytes) and renders through a zero-copy permuted view; sharded
   spills the triangle to row-band shard files (--spill-dir, default the OS
   temp dir) and keeps only --cache-shards hot shards of --shard-rows rows
-  in RAM. Output is bit-identical across all three.
+  in RAM. Output is bit-identical across all three. --budget-mb hands the
+  choice to the storage policy: the cheapest tier whose resident distance
+  bytes fit the budget is picked per request. --sample N escalates to sVAT
+  (maximin sampling) above N points.
 
 DATASETS: iris, blobs, moons, circles, gmm, spotify, mall, uniform
   (generator datasets accept --n and --seed)
@@ -139,55 +143,74 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         flags.get("engine").map(String::as_str).unwrap_or("blocked"),
         &artifacts,
     )?;
-    let storage = storage_kind(&flags)?;
-    let shard = shard_options(&flags)?;
-    let z = Scaler::standardized(&ds.points);
-    let t0 = std::time::Instant::now();
-    let d = engine.build_storage_with(
-        &z,
-        fast_vat::dissimilarity::Metric::Euclidean,
-        storage,
-        &shard,
+    let metric = Metric::parse(
+        flags.get("metric").map(String::as_str).unwrap_or("euclidean"),
     )?;
-    let t_dist = t0.elapsed().as_secs_f64();
-    let t1 = std::time::Instant::now();
-    let v = vat(&d);
-    let t_vat = t1.elapsed().as_secs_f64();
+    let shard = shard_options(&flags)?;
+    // --budget-mb hands the layout choice to the storage policy; --storage
+    // pins it explicitly (the pre-policy behavior)
+    let policy = match flags.get("budget-mb") {
+        Some(v) => {
+            let mb: usize = v
+                .parse()
+                .map_err(|_| Error::InvalidArg("--budget-mb must be an integer".into()))?;
+            let memory_budget_bytes = mb
+                .checked_mul(1024 * 1024)
+                .ok_or_else(|| Error::InvalidArg("--budget-mb is out of range".into()))?;
+            StoragePolicy::Auto {
+                memory_budget_bytes,
+            }
+        }
+        None => StoragePolicy::Fixed(storage_kind(&flags)?),
+    };
 
-    // raw VAT renders through the zero-copy view; iVAT renders its own
-    // transform (emitted in the same storage layout, sharded included)
-    let det = BlockDetector::default();
-    let (img, block_count, insight): (GrayImage, usize, String) =
-        if flags.contains_key("ivat") {
-            let iv = ivat_with_opts(&v, storage, &shard)?;
-            let blocks = det.detect(&iv.transformed);
-            let insight = det.insight_with(&v, &blocks, &d);
-            (render(&iv.transformed), blocks.len(), insight)
-        } else {
-            let view = v.view(&d);
-            (
-                render(&view),
-                det.detect(&view).len(),
-                det.insight_opts(&v, &d, &shard)?,
-            )
-        };
+    // the whole request is one plan: distance → VAT → iVAT → detection →
+    // render, each stage exactly once, on the resolved storage tier
+    let (name, n, dim) = (ds.name, ds.points.n(), ds.points.d());
+    let mut request = Analysis::of(ds.points)
+        .metric(metric)
+        .storage(policy)
+        .shard(shard)
+        .ivat(flags.contains_key("ivat"))
+        .detect_blocks(BlockDetector::default())
+        .insight(true)
+        .render(true);
+    if let Some(cap) = flags.get("sample") {
+        let cap: usize = cap
+            .parse()
+            .map_err(|_| Error::InvalidArg("--sample must be an integer".into()))?;
+        request = request.sample(SamplePolicy::Above(cap));
+    }
+    let report = request.plan()?.execute(engine.as_ref())?;
+
     println!(
-        "{}: n={} d={} engine={} storage={} distance={t_dist:.4}s reorder={t_vat:.4}s",
-        ds.name,
-        ds.points.n(),
-        ds.points.d(),
-        engine.name(),
-        storage.as_str()
+        "{name}: n={n} d={dim} engine={} storage={} distance={:.4}s reorder={:.4}s",
+        report.plan.engine,
+        report.plan.storage.as_str(),
+        report.timings.distance_s,
+        report.timings.vat_s
     );
-    println!("insight: {insight} | blocks: {block_count}");
+    if let Some(sample) = &report.sample {
+        println!(
+            "svat: assessed {} of {} points (maximin sample)",
+            sample.indices.len(),
+            report.plan.n_input
+        );
+    }
+    println!(
+        "insight: {} | blocks: {}",
+        report.insight.as_deref().unwrap_or("-"),
+        report.k_estimate().unwrap_or(0)
+    );
 
+    let img = report.image.as_ref().expect("render was requested");
     if let Some(out) = flags.get("out") {
-        write_pgm(&img, out)?;
+        write_pgm(img, out)?;
         println!("wrote {out}");
     }
     let ascii_side = get_usize(&flags, "ascii", 0)?;
     if ascii_side > 0 {
-        println!("{}", to_ascii(&img, ascii_side));
+        println!("{}", to_ascii(img, ascii_side));
     }
     Ok(())
 }
@@ -309,6 +332,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .unwrap_or_else(|| "artifacts".into()),
         storage: storage_kind(&flags)?,
         shard: shard_options(&flags)?,
+        metric: Metric::parse(
+            flags.get("metric").map(String::as_str).unwrap_or("euclidean"),
+        )?,
     };
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
@@ -321,11 +347,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.storage.as_str()
     );
     let t0 = std::time::Instant::now();
-    let opts = JobOptions {
-        storage: cfg.storage,
-        shard: cfg.shard.clone(),
-        ..Default::default()
-    };
+    // the config IS the plan template every job starts from
+    let opts = cfg.plan_template();
     let mut tickets = Vec::new();
     for j in 0..jobs {
         let ds = match j % 4 {

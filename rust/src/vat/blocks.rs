@@ -205,20 +205,38 @@ impl BlockDetector {
     /// [`BlockDetector::insight_with`] instead of paying the O(n²) DFS and
     /// detection a second time.
     pub fn insight<S: DistanceStorage>(&self, v: &VatResult, storage: &S) -> Result<String> {
-        self.insight_opts(v, storage, &ShardOptions::default())
+        self.insight_impl(v, storage, &ShardOptions::default())
     }
 
     /// [`BlockDetector::insight`] with explicit shard knobs for the iVAT
-    /// transform's emission — what configured call paths (the job service,
-    /// the CLI) use so a sharded job's transform spills with the job's own
-    /// `spill_dir`/`shard_rows` rather than the defaults.
+    /// transform's emission — the deprecated per-surface entry point; full
+    /// requests route through `analysis::AnalysisPlan::execute` with
+    /// `.insight(true)`, which emits the transform with the plan's resolved
+    /// shard geometry.
+    #[deprecated(
+        note = "build an `analysis::Analysis` request with `.detect_blocks(..).insight(true)` \
+                and execute the plan"
+    )]
     pub fn insight_opts<S: DistanceStorage>(
         &self,
         v: &VatResult,
         storage: &S,
         shard: &ShardOptions,
     ) -> Result<String> {
-        let iv = crate::vat::ivat::ivat_with_opts(v, storage.kind(), shard)?;
+        self.insight_impl(v, storage, shard)
+    }
+
+    /// The insight stage body: run the iVAT transform in the storage's own
+    /// layout with the given shard knobs, detect blocks over it, and fold
+    /// both into the Table-3 vocabulary via
+    /// [`BlockDetector::insight_with`].
+    pub(crate) fn insight_impl<S: DistanceStorage>(
+        &self,
+        v: &VatResult,
+        storage: &S,
+        shard: &ShardOptions,
+    ) -> Result<String> {
+        let iv = crate::vat::ivat::transform(v, storage.kind(), shard)?;
         let ivat_blocks = self.detect(&iv.transformed);
         Ok(self.insight_with(v, &ivat_blocks, storage))
     }

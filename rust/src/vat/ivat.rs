@@ -94,20 +94,39 @@ pub fn ivat(v: &VatResult) -> IvatResult {
 }
 
 /// Apply the iVAT transform to a VAT result, emitting the requested
-/// storage layout (default shard knobs for `Sharded`; tuned callers use
-/// [`ivat_with_opts`]). O(n²) either way; the per-entry values are
-/// identical across layouts (the same DFS arithmetic fills both — max is
-/// exact, so the transform is bitwise symmetric and layout-independent).
-/// Only the sharded arm can fail (spill IO).
+/// storage layout (default shard knobs for `Sharded`; requests that need
+/// tuned knobs go through `analysis::Analysis` — the plan's `.ivat(true)`
+/// stage emits the transform with the plan's resolved shard geometry).
+/// O(n²) either way; the per-entry values are identical across layouts
+/// (the same DFS arithmetic fills both — max is exact, so the transform is
+/// bitwise symmetric and layout-independent). Only the sharded arm can
+/// fail (spill IO).
 pub fn ivat_with(v: &VatResult, kind: StorageKind) -> Result<IvatResult> {
-    ivat_with_opts(v, kind, &ShardOptions::default())
+    transform(v, kind, &ShardOptions::default())
 }
 
-/// [`ivat_with`] with explicit shard knobs: the sharded arm streams each
-/// display row's tail into a [`ShardedWriter`], so the transform of an
-/// out-of-core job is spilled band by band and never resident as a whole —
-/// the iVAT pipeline stays inside the O(shard_rows·n) envelope end to end.
+/// [`ivat_with`] with explicit shard knobs — the deprecated per-surface
+/// entry point; full requests route through
+/// `analysis::AnalysisPlan::execute`, whose iVAT stage calls the same
+/// transform with the plan's resolved shard geometry.
+#[deprecated(
+    note = "build an `analysis::Analysis` request with `.ivat(true)` and execute the plan; \
+            the transform is emitted in the plan's resolved storage layout"
+)]
 pub fn ivat_with_opts(
+    v: &VatResult,
+    kind: StorageKind,
+    shard: &ShardOptions,
+) -> Result<IvatResult> {
+    transform(v, kind, shard)
+}
+
+/// The iVAT stage: path-max DFS over the MST, emitted in `kind` with the
+/// given shard knobs. The sharded arm streams each display row's tail into
+/// a [`ShardedWriter`], so the transform of an out-of-core job is spilled
+/// band by band and never resident as a whole — the iVAT pipeline stays
+/// inside the O(shard_rows·n) envelope end to end.
+pub(crate) fn transform(
     v: &VatResult,
     kind: StorageKind,
     shard: &ShardOptions,
@@ -242,7 +261,7 @@ mod tests {
         let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
         let v = vat(&d);
         let dense = ivat_with(&v, StorageKind::Dense).unwrap();
-        let shard = ivat_with_opts(
+        let shard = transform(
             &v,
             StorageKind::Sharded,
             &ShardOptions {

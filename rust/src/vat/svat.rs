@@ -109,7 +109,9 @@ pub fn svat(points: &Points, s: usize, metric: Metric, seed: u64) -> Result<Svat
 
 /// Run sVAT: sample `s` representatives via maximin under `metric`, VAT the
 /// sample over the requested storage layout (default shard knobs for
-/// `Sharded`; tuned callers use [`svat_with_opts`]), assign the rest.
+/// `Sharded`), assign the rest. Requests that need tuned shard knobs — or
+/// budget-aware escalation — go through `analysis::Analysis` with a
+/// `SamplePolicy`.
 pub fn svat_with_storage(
     points: &Points,
     s: usize,
@@ -117,15 +119,36 @@ pub fn svat_with_storage(
     seed: u64,
     kind: StorageKind,
 ) -> Result<SvatResult> {
-    svat_with_opts(points, s, metric, seed, kind, &ShardOptions::default())
+    svat_impl(points, s, metric, seed, kind, &ShardOptions::default())
 }
 
-/// [`svat_with_storage`] with explicit shard knobs, so a configured
-/// `spill_dir`/`shard_rows` reaches the sample triangle's sharded build
-/// (the in-RAM layouts ignore `shard`; only the sharded build can fail).
-/// The sample and its permutation are identical across layouts (all three
-/// are built from the blocked pair kernels).
+/// [`svat_with_storage`] with explicit shard knobs — the deprecated
+/// per-surface entry point; full requests route through
+/// `analysis::AnalysisPlan::execute` with
+/// `.sample(SamplePolicy::Above(..))`, which runs the same maximin →
+/// sample-matrix → assignment stages once per plan.
+#[deprecated(
+    note = "build an `analysis::Analysis` request with `.sample(SamplePolicy::Above(..))` \
+            and execute the plan; the sample matrix is built in the plan's resolved \
+            storage layout"
+)]
 pub fn svat_with_opts(
+    points: &Points,
+    s: usize,
+    metric: Metric,
+    seed: u64,
+    kind: StorageKind,
+    shard: &ShardOptions,
+) -> Result<SvatResult> {
+    svat_impl(points, s, metric, seed, kind, shard)
+}
+
+/// The sVAT stages: maximin sample, sample-matrix VAT over the requested
+/// layout (the in-RAM layouts ignore `shard`; only the sharded build can
+/// fail), nearest-representative assignment. The sample and its
+/// permutation are identical across layouts (all three are built from the
+/// blocked pair kernels).
+fn svat_impl(
     points: &Points,
     s: usize,
     metric: Metric,
@@ -147,8 +170,22 @@ pub fn svat_with_opts(
         )?),
     };
     let v = vat(&storage);
-    // nearest-representative assignment for all original points
-    let assignment = (0..points.n())
+    let assignment = assign_nearest(points, &sample, metric);
+    Ok(SvatResult {
+        sample,
+        vat: v,
+        storage,
+        assignment,
+    })
+}
+
+/// Nearest-representative assignment for all original points: the position
+/// in `sample` of each point's closest representative under `metric`
+/// (strict `<`, so ties break toward the earliest-selected representative;
+/// sample points map to themselves). Shared by sVAT and the analysis
+/// plan's sample stage so the two stay bitwise identical.
+pub(crate) fn assign_nearest(points: &Points, sample: &[usize], metric: Metric) -> Vec<usize> {
+    (0..points.n())
         .map(|i| {
             let mut best = 0;
             let mut bv = f64::INFINITY;
@@ -161,13 +198,7 @@ pub fn svat_with_opts(
             }
             best
         })
-        .collect();
-    Ok(SvatResult {
-        sample,
-        vat: v,
-        storage,
-        assignment,
-    })
+        .collect()
 }
 
 #[cfg(test)]
@@ -335,7 +366,7 @@ mod tests {
         }
         // tuned shard knobs reach the sample triangle (and change nothing
         // about the output)
-        let tuned = svat_with_opts(
+        let tuned = svat_impl(
             &ds.points,
             40,
             Metric::Euclidean,

@@ -1,0 +1,244 @@
+//! API-equivalence parity: the one request API (`AnalysisPlan::execute`)
+//! must be **bitwise identical** to the deprecated per-surface entry points
+//! it replaces — same VAT order and MST, same iVAT pixels, same detector
+//! blocks, same insight string, same Hopkins value, same rendered bytes —
+//! across engines × metrics × storage kinds, plus the sVAT escalation path
+//! vs the deprecated `svat_with_opts` shim.
+//!
+//! This suite is the shim-equivalence contract, so it intentionally calls
+//! the deprecated entry points as the reference implementation.
+#![allow(deprecated)]
+
+use fast_vat::analysis::{Analysis, SamplePolicy, StoragePolicy};
+use fast_vat::data::generators::{blobs, moons};
+use fast_vat::data::scale::Scaler;
+use fast_vat::data::Dataset;
+use fast_vat::dissimilarity::engine::{
+    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+};
+use fast_vat::dissimilarity::{DistanceStorage, Metric, ShardOptions, StorageKind};
+use fast_vat::hopkins::{hopkins, HopkinsParams};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::ivat::ivat_with_opts;
+use fast_vat::vat::svat::svat_with_opts;
+use fast_vat::vat::vat;
+use fast_vat::viz::render;
+
+fn engines() -> Vec<Box<dyn DistanceEngine>> {
+    vec![
+        Box::new(NaiveEngine),
+        Box::new(BlockedEngine),
+        Box::new(ParallelEngine { threads: 4 }),
+        Box::new(CondensedEngine),
+    ]
+}
+
+fn metrics() -> Vec<Metric> {
+    vec![Metric::Euclidean, Metric::Manhattan, Metric::Cosine]
+}
+
+fn kinds() -> Vec<StorageKind> {
+    vec![
+        StorageKind::Dense,
+        StorageKind::Condensed,
+        StorageKind::Sharded,
+    ]
+}
+
+fn datasets() -> Vec<Dataset> {
+    vec![blobs(72, 2, 3, 0.4, 8101), moons(64, 0.06, 8102)]
+}
+
+fn shard_opts() -> ShardOptions {
+    ShardOptions {
+        shard_rows: 13,
+        cache_shards: 2,
+        spill_dir: None,
+    }
+}
+
+#[test]
+fn plan_is_bitwise_identical_to_the_deprecated_free_function_path() {
+    let hopkins_params = HopkinsParams {
+        seed: 99,
+        ..Default::default()
+    };
+    for ds in datasets() {
+        for metric in metrics() {
+            for kind in kinds() {
+                for engine in engines() {
+                    let ctx = format!("{} / {metric:?} / {kind:?} / {}", ds.name, engine.name());
+                    let shard = shard_opts();
+
+                    // --- the old path: five uncoordinated entry points ---
+                    let z = Scaler::standardized(&ds.points);
+                    let d = engine
+                        .build_storage_with(&z, metric, kind, &shard)
+                        .unwrap();
+                    let v = vat(&d);
+                    let iv = ivat_with_opts(&v, kind, &shard).unwrap();
+                    let det = BlockDetector::default();
+                    let blocks = det.detect(&iv.transformed);
+                    let insight = det.insight_with(&v, &blocks, &d);
+                    let h = hopkins(&z, &hopkins_params).unwrap();
+                    let vat_pixels = render(&v.view(&d)).pixels;
+                    let ivat_pixels = render(&iv.transformed).pixels;
+
+                    // --- the new path: one plan ---
+                    let report = Analysis::of(ds.points.clone())
+                        .metric(metric)
+                        .storage(StoragePolicy::Fixed(kind))
+                        .shard(shard)
+                        .ivat(true)
+                        .detect_blocks(BlockDetector::default())
+                        .insight(true)
+                        .hopkins(1)
+                        .hopkins_params(hopkins_params.clone())
+                        .render(true)
+                        .plan()
+                        .unwrap()
+                        .execute(engine.as_ref())
+                        .unwrap();
+
+                    assert_eq!(report.vat.order, v.order, "order: {ctx}");
+                    assert_eq!(report.vat.mst, v.mst, "mst: {ctx}");
+                    let report_iv = report.ivat.as_ref().expect("ivat requested");
+                    assert_eq!(report_iv.transformed.kind(), kind, "ivat kind: {ctx}");
+                    let n = ds.points.n();
+                    for i in 0..n {
+                        for j in 0..n {
+                            assert_eq!(
+                                report_iv.transformed.get(i, j),
+                                iv.transformed.get(i, j),
+                                "ivat ({i},{j}): {ctx}"
+                            );
+                        }
+                    }
+                    assert_eq!(
+                        report.blocks.as_deref(),
+                        Some(blocks.as_slice()),
+                        "blocks: {ctx}"
+                    );
+                    assert_eq!(
+                        report.insight.as_deref(),
+                        Some(insight.as_str()),
+                        "insight: {ctx}"
+                    );
+                    assert_eq!(report.hopkins, Some(h), "hopkins: {ctx}");
+                    assert_eq!(
+                        render(&report.view()).pixels,
+                        vat_pixels,
+                        "vat pixels: {ctx}"
+                    );
+                    assert_eq!(
+                        report.image.as_ref().unwrap().pixels,
+                        ivat_pixels,
+                        "rendered ivat bytes: {ctx}"
+                    );
+                    assert_eq!(report.plan.storage, kind, "resolved kind: {ctx}");
+                    assert_eq!(report.plan.engine, engine.name(), "engine echo: {ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_sampling_is_bitwise_identical_to_the_deprecated_svat_shim() {
+    // the sample stage (maximin → sample matrix → assignment) vs the
+    // deprecated svat shim: identical sample, order, MST, assignment, and
+    // sample image for every storage kind. The shim builds the sample
+    // matrix with the blocked pair kernels, so the blocked engine is the
+    // bitwise-matching reference engine.
+    let ds = blobs(220, 2, 3, 0.3, 8103);
+    for kind in kinds() {
+        let shard = ShardOptions {
+            shard_rows: 9,
+            cache_shards: 2,
+            spill_dir: None,
+        };
+        let old = svat_with_opts(&ds.points, 40, Metric::Euclidean, 7, kind, &shard).unwrap();
+        let report = Analysis::of(ds.points.clone())
+            .standardize(false) // the shim samples the raw points
+            .metric(Metric::Euclidean)
+            .storage(StoragePolicy::Fixed(kind))
+            .shard(shard)
+            .sample(SamplePolicy::Above(40))
+            .seed(7)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+
+        let info = report.sample.as_ref().expect("sample policy fired");
+        assert_eq!(info.indices, old.sample, "{kind:?}");
+        assert_eq!(report.vat.order, old.vat.order, "{kind:?}");
+        assert_eq!(report.vat.mst, old.vat.mst, "{kind:?}");
+        assert_eq!(info.assignment, old.assignment, "{kind:?}");
+        assert_eq!(report.plan.storage, kind);
+        assert_eq!(report.plan.n_input, 220);
+        assert_eq!(report.plan.n_assessed, 40);
+        for a in 0..40 {
+            for b in 0..40 {
+                assert_eq!(
+                    report.view().get(a, b),
+                    old.view().get(a, b),
+                    "{kind:?} sample image ({a},{b})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_policy_output_matches_every_pinned_tier() {
+    // whatever tier the budget resolver picks, the output must equal the
+    // explicitly pinned runs — the policy changes residency, never bytes
+    let ds = blobs(130, 2, 3, 0.35, 8104);
+    let pinned: Vec<_> = kinds()
+        .into_iter()
+        .map(|kind| {
+            Analysis::of(ds.points.clone())
+                .storage(StoragePolicy::Fixed(kind))
+                .shard(shard_opts())
+                .ivat(true)
+                .detect_blocks(BlockDetector::default())
+                .render(true)
+                .plan()
+                .unwrap()
+                .execute(&BlockedEngine)
+                .unwrap()
+        })
+        .collect();
+    // three budgets that resolve to the three tiers for n = 130:
+    // dense = 135_200 B, condensed = 67_080 B
+    for (budget, want) in [
+        (200_000usize, StorageKind::Dense),
+        (70_000, StorageKind::Condensed),
+        (20_000, StorageKind::Sharded),
+    ] {
+        let auto = Analysis::of(ds.points.clone())
+            .storage(StoragePolicy::Auto {
+                memory_budget_bytes: budget,
+            })
+            .shard(shard_opts())
+            .ivat(true)
+            .detect_blocks(BlockDetector::default())
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(auto.plan.storage, want, "budget {budget}");
+        for p in &pinned {
+            assert_eq!(auto.vat.order, p.vat.order, "budget {budget}");
+            assert_eq!(auto.vat.mst, p.vat.mst, "budget {budget}");
+            assert_eq!(auto.blocks, p.blocks, "budget {budget}");
+            assert_eq!(
+                auto.image.as_ref().unwrap().pixels,
+                p.image.as_ref().unwrap().pixels,
+                "budget {budget}"
+            );
+        }
+    }
+}

@@ -29,7 +29,12 @@ use fast_vat::dissimilarity::engine::{
 use fast_vat::dissimilarity::{DistanceStorage, Metric, ShardOptions, StorageKind};
 use fast_vat::runtime::SimulatedXlaEngine;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::ivat::{ivat_with, ivat_with_opts};
+use fast_vat::vat::ivat::ivat_with;
+// the sharded runs below deliberately pin the deprecated tuned-knobs shim
+// (`ivat_with_opts`) byte-for-byte — intentional shim-equivalence usage;
+// new call paths route through `analysis::AnalysisPlan` instead
+#[allow(deprecated)]
+use fast_vat::vat::ivat::ivat_with_opts;
 use fast_vat::vat::vat;
 use fast_vat::viz::render;
 
@@ -107,6 +112,7 @@ fn vat_permutation_bitwise_identical_across_storages() {
 }
 
 #[test]
+#[allow(deprecated)] // pins the deprecated shim's sharded emission bitwise
 fn vat_and_ivat_pixels_identical_across_storages() {
     // the rendered bytes — what an analyst actually sees — must be equal:
     // raw VAT through the zero-copy view, and the iVAT transform emitted
@@ -160,6 +166,7 @@ fn vat_and_ivat_pixels_identical_across_storages() {
 }
 
 #[test]
+#[allow(deprecated)] // pins the deprecated shim's sharded emission bitwise
 fn block_detector_identical_across_storages() {
     let shard_opts = test_shard_opts();
     for ds in datasets() {
@@ -296,6 +303,7 @@ fn condensed_view_path_allocates_at_most_55_percent_of_dense() {
 }
 
 #[test]
+#[allow(deprecated)] // pins the deprecated shim's sharded emission bitwise
 fn sharded_vat_job_peaks_within_two_shards_of_ram() {
     // the out-of-core bound: a full sharded VAT job — band-streamed build,
     // Prim sweep, block detection, rendering through the zero-copy view —
