@@ -51,7 +51,9 @@
 pub mod policy;
 pub mod report;
 
-pub use policy::{condensed_bytes, dense_bytes, SamplePolicy, StoragePolicy};
+pub use policy::{
+    condensed_bytes, dense_bytes, AccessProfile, SamplePolicy, StorageDecision, StoragePolicy,
+};
 pub use report::{AnalysisReport, ResolvedPlan, SampleInfo, StageTimings};
 
 use std::sync::Arc;
@@ -60,7 +62,7 @@ use std::time::Instant;
 use crate::data::scale::Scaler;
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
-use crate::dissimilarity::{DistanceStore, Metric, ShardOptions};
+use crate::dissimilarity::{DistanceStore, Metric, ShardOptions, SquareBands};
 use crate::error::{Error, Result};
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::vat::blocks::BlockDetector;
@@ -153,10 +155,11 @@ impl Analysis {
         self
     }
 
-    /// Shard knobs for sharded storage: used as-is by
-    /// `StoragePolicy::Fixed(Sharded)`; `Auto` derives
-    /// `shard_rows`/`cache_shards` from the budget and keeps only the
-    /// `spill_dir` from here.
+    /// Shard knobs for sharded storage: used as-is by the
+    /// `StoragePolicy::Fixed` sharded layouts; `Auto` keeps the
+    /// `spill_dir` and the `cache_shards` depth from here (clamped down
+    /// only when that many one-row shards exceed the budget) and derives
+    /// `shard_rows` so the LRU peak stays inside the budget.
     pub fn shard(mut self, shard: ShardOptions) -> Self {
         self.shard = shard;
         self
@@ -322,6 +325,17 @@ impl AnalysisPlan {
         let mut timings = StageTimings::default();
         let spec = &self.spec;
 
+        // how the stages will READ the storage after the sweep — the
+        // resolver's second input. Stages that consume the iVAT transform
+        // read it in display order (it is emitted that way), so only
+        // raw-image re-reads count as permuted access.
+        let access = AccessProfile {
+            permuted: (spec.render && !spec.ivat)
+                || (spec.detector.is_some() && !spec.ivat)
+                || spec.insight
+                || spec.keep_matrix,
+        };
+
         // stage 1: input → distance storage (+ resolved plan, sVAT record)
         let (store, resolved, sample_info, z_opt) = match &spec.input {
             PlanInput::Storage(s) => {
@@ -330,6 +344,10 @@ impl AnalysisPlan {
                     standardize: false,
                     storage: s.kind(),
                     shard: spec.shard.clone(),
+                    // same layout × access rule as the resolver: a spilled
+                    // precomputed store whose permuted image is re-read
+                    // gets the display-ordered R* rewrite too
+                    reorder_spill: access.wants_reorder_spill(s.kind()),
                     n_input: s.n(),
                     n_assessed: s.n(),
                     engine: engine.map(|e| e.name()).unwrap_or("precomputed"),
@@ -349,7 +367,7 @@ impl AnalysisPlan {
                     points.clone()
                 };
                 let n_input = z.n();
-                let (built, kind, shard, n_assessed, info) =
+                let (built, decision, n_assessed, info) =
                     match spec.sample.resolve(n_input) {
                         Some(s) => {
                             let t = Instant::now();
@@ -359,16 +377,20 @@ impl AnalysisPlan {
                             // deprecated shim bitwise
                             let assignment = assign_nearest(&z, &indices, spec.metric);
                             timings.sample_s = t.elapsed().as_secs_f64();
-                            let (kind, shard) = spec.storage.resolve(sub.n(), &spec.shard);
+                            let decision =
+                                spec.storage.resolve_for(sub.n(), access, &spec.shard);
                             let t = Instant::now();
-                            let built =
-                                engine.build_storage_with(&sub, spec.metric, kind, &shard)?;
+                            let built = engine.build_storage_with(
+                                &sub,
+                                spec.metric,
+                                decision.kind,
+                                &decision.shard,
+                            )?;
                             timings.distance_s = t.elapsed().as_secs_f64();
                             let n_assessed = sub.n();
                             (
                                 built,
-                                kind,
-                                shard,
+                                decision,
                                 n_assessed,
                                 Some(SampleInfo {
                                     indices,
@@ -377,19 +399,25 @@ impl AnalysisPlan {
                             )
                         }
                         None => {
-                            let (kind, shard) = spec.storage.resolve(n_input, &spec.shard);
+                            let decision =
+                                spec.storage.resolve_for(n_input, access, &spec.shard);
                             let t = Instant::now();
-                            let built =
-                                engine.build_storage_with(&z, spec.metric, kind, &shard)?;
+                            let built = engine.build_storage_with(
+                                &z,
+                                spec.metric,
+                                decision.kind,
+                                &decision.shard,
+                            )?;
                             timings.distance_s = t.elapsed().as_secs_f64();
-                            (built, kind, shard, n_input, None)
+                            (built, decision, n_input, None)
                         }
                     };
                 let resolved = ResolvedPlan {
                     metric: spec.metric,
                     standardize: spec.standardize,
-                    storage: kind,
-                    shard,
+                    storage: decision.kind,
+                    shard: decision.shard,
+                    reorder_spill: decision.reorder_spill,
                     n_input,
                     n_assessed,
                     engine: engine.name(),
@@ -402,6 +430,21 @@ impl AnalysisPlan {
         let t = Instant::now();
         let v = vat(store.as_ref());
         timings.vat_s = t.elapsed().as_secs_f64();
+
+        // stage 2½: reorder-then-spill — when the resolver asked for it,
+        // rewrite R* in display order (one sequential pass over the
+        // square-band store, each display row written once), so every
+        // raw-image stage below reads band-sequentially instead of missing
+        // the LRU per pixel. Values are verbatim copies: output stays
+        // bitwise identical to reading through the permuted view.
+        let rstar: Option<SquareBands> = if resolved.reorder_spill {
+            let t = Instant::now();
+            let r = SquareBands::reorder_spill(store.as_ref(), &v.order, &resolved.shard)?;
+            timings.respill_s = t.elapsed().as_secs_f64();
+            Some(r)
+        } else {
+            None
+        };
 
         // stage 3: iVAT transform, emitted in the resolved layout
         let ivat_result = if spec.ivat {
@@ -416,16 +459,29 @@ impl AnalysisPlan {
         // stage 4: block detection + insight
         let (blocks, insight) = if let Some(det) = &spec.detector {
             let t = Instant::now();
-            let blocks = match &ivat_result {
-                Some(iv) => det.detect(&iv.transformed),
-                None => det.detect(&v.view(store.as_ref())),
+            let blocks = match (&ivat_result, &rstar) {
+                (Some(iv), _) => det.detect(&iv.transformed),
+                (None, Some(r)) => det.detect(r),
+                (None, None) => det.detect(&v.view(store.as_ref())),
             };
             let insight = if spec.insight {
-                Some(match &ivat_result {
-                    // `blocks` are iVAT blocks here — exactly what the
-                    // insight vocabulary wants
-                    Some(_) => det.insight_with(&v, &blocks, store.as_ref()),
-                    None => det.insight_impl(&v, store.as_ref(), &resolved.shard)?,
+                // `blocks` are iVAT blocks when the plan ran iVAT — exactly
+                // what the insight vocabulary wants; otherwise run the
+                // transform here (it reads only the MST, never the storage)
+                let ivat_blocks = match &ivat_result {
+                    Some(_) => None,
+                    None => Some(
+                        det.detect(
+                            &ivat::transform(&v, store.kind(), &resolved.shard)?.transformed,
+                        ),
+                    ),
+                };
+                let ivat_blocks = ivat_blocks.as_ref().unwrap_or(&blocks);
+                // the darkness scan reads the raw image: through the
+                // display-ordered spill when we have one, else the view
+                Some(match &rstar {
+                    Some(r) => det.insight_from_image(r, ivat_blocks),
+                    None => det.insight_with(&v, ivat_blocks, store.as_ref()),
                 })
             } else {
                 None
@@ -449,12 +505,16 @@ impl AnalysisPlan {
             None
         };
 
-        // stage 6: render
+        // stage 6: render — the raw image comes from the display-ordered
+        // spill when it exists (band-sequential reads; a permutation
+        // preserves the value set, so max/scale/pixels are bitwise equal
+        // to rendering through the view)
         let image = if spec.render {
             let t = Instant::now();
-            let img = match &ivat_result {
-                Some(iv) => render(&iv.transformed),
-                None => render(&v.view(store.as_ref())),
+            let img = match (&ivat_result, &rstar) {
+                (Some(iv), _) => render(&iv.transformed),
+                (None, Some(r)) => render(r),
+                (None, None) => render(&v.view(store.as_ref())),
             };
             timings.render_s = t.elapsed().as_secs_f64();
             Some(img)
@@ -462,7 +522,12 @@ impl AnalysisPlan {
             None
         };
 
-        let reordered = spec.keep_matrix.then(|| v.materialize(store.as_ref()));
+        let reordered = spec.keep_matrix.then(|| match &rstar {
+            // the spill IS R* — expand it with one streaming pass instead
+            // of a random gather through the permutation
+            Some(r) => r.to_square(),
+            None => v.materialize(store.as_ref()),
+        });
         timings.total_s = t_total.elapsed().as_secs_f64();
 
         Ok(AnalysisReport {
@@ -618,8 +683,9 @@ mod tests {
     fn auto_policy_resolves_per_request_size() {
         // one budget, two sizes: 16_000 bytes holds a dense 40×40 matrix
         // (12_800 B) but neither the dense (115_200 B) nor the condensed
-        // (57_120 B) form of 120 points -> the resolver spills, with
-        // shard_rows = 16_000 / (16·120) = 8
+        // (57_120 B) form of 120 points -> the resolver spills square
+        // bands, keeping the default 4-shard LRU (4 one-row shards =
+        // 3_840 B fit) with shard_rows = 16_000 / (8·120·4) = 4
         let budget = StoragePolicy::Auto {
             memory_budget_bytes: 16_000,
         };
@@ -638,9 +704,11 @@ mod tests {
             .unwrap()
             .execute(&BlockedEngine)
             .unwrap();
-        assert_eq!(big.plan.storage, StorageKind::Sharded);
-        assert_eq!(big.plan.shard.shard_rows, 8);
-        assert_eq!(big.plan.shard.cache_shards, 2);
+        assert_eq!(big.plan.storage, StorageKind::ShardedSquare);
+        assert_eq!(big.plan.shard.shard_rows, 4);
+        assert_eq!(big.plan.shard.cache_shards, 4);
+        // no stage re-reads the permuted raw image -> no respill scheduled
+        assert!(!big.plan.reorder_spill);
         // tier choice never changes the output
         let dense = Analysis::of(ds.points)
             .storage(StoragePolicy::Fixed(StorageKind::Dense))

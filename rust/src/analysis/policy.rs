@@ -9,9 +9,33 @@
 //!
 //! * dense n×n ............ `n² · 8` bytes resident
 //! * condensed triangle ... `n(n−1)/2 · 8` bytes resident
-//! * sharded .............. ≤ `2 · shard_rows · n · 8` bytes resident during
-//!   a full VAT job (`cache_shards = 2`; bound locked by
-//!   `tests/storage_parity.rs`)
+//! * sharded .............. ≤ `cache_shards · shard_rows · n · 8` resident
+//!   (the LRU budget; bound locked by `tests/storage_parity.rs`)
+//!
+//! The resolver — not callers — also owns the **sharded layout** choice
+//! (condensed-band vs square-band vs reorder-then-spill). The rule, from
+//! the access patterns rather than a new knob ([`AccessProfile`]):
+//!
+//! * The VAT Prim sweep runs in every plan and reads each row once. On
+//!   condensed bands each row fill gathers its column head through every
+//!   earlier band; whenever `Auto` spills at all, `budget <
+//!   n(n−1)/2·8` forces `bands > 2·cache_shards` (substitute
+//!   `cache_shards·shard_rows·n·8 ≤ budget` into
+//!   `bands = ceil((n−1)/shard_rows)`; budgets too small to hold even one
+//!   row clamp to 1-row bands — deeper still in that regime), i.e. the
+//!   LRU provably cannot cover the gather and the sweep re-reads ≈
+//!   `bands/2 ×` the file. So the `Auto` sharded arm always picks
+//!   **square-form bands** ([`StorageKind::ShardedSquare`]): 2× the disk,
+//!   one contiguous read per row fill, the file streamed once. The
+//!   condensed-band layout remains for `Fixed(Sharded)` pins (callers that
+//!   need the 1× disk footprint and accept the sweep amplification).
+//! * When the request includes a stage that re-reads the *permuted* image
+//!   after the sweep (render / block detection / insight over the raw VAT
+//!   image, or `keep_matrix`), the decision adds **reorder-then-spill**:
+//!   the executor rewrites `R*` in display order once, so those stages
+//!   read band-sequentially instead of missing the LRU per pixel. Stages
+//!   that consume the iVAT transform don't need it — the transform is
+//!   emitted in display order already.
 //!
 //! [`SamplePolicy`] is the orthogonal sVAT axis: above a caller-chosen point
 //! count the plan escalates to maximin sampling (Hathaway, Bezdek & Huband
@@ -27,8 +51,11 @@ pub enum StoragePolicy {
     Fixed(StorageKind),
     /// Pick the cheapest layout whose resident distance bytes fit the
     /// budget: dense if `n²·8` fits, else condensed if `n(n−1)/2·8` fits,
-    /// else sharded with `shard_rows` sized so the audited two-shard peak
-    /// (`2·shard_rows·n·8`) stays inside the budget.
+    /// else square-band sharded with the caller's `cache_shards` (clamped
+    /// to what fits, never reset) and `shard_rows` sized so the audited
+    /// LRU peak (`cache_shards·shard_rows·n·8`) stays inside the budget —
+    /// plus a reorder-then-spill pass when the request's stages re-read
+    /// the permuted image (see [`StoragePolicy::resolve_for`]).
     Auto {
         /// Resident distance-byte budget for the request.
         memory_budget_bytes: usize,
@@ -51,38 +78,131 @@ pub fn condensed_bytes(n: usize) -> usize {
     n * n.saturating_sub(1) / 2 * 8
 }
 
+/// How a request will *read* its distance storage after the build — the
+/// second input (after the byte budget) to [`StoragePolicy::resolve_for`].
+/// The analysis executor derives this from the requested stages; it is not
+/// a caller knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AccessProfile {
+    /// Some stage re-reads the raw matrix through the VAT permutation
+    /// after the sweep: rendering the raw image, block detection over it,
+    /// the insight darkness scan, or `R*` materialization. iVAT-consuming
+    /// stages do NOT set this — the transform is emitted in display order.
+    pub permuted: bool,
+}
+
+impl AccessProfile {
+    /// Only the Prim sweep reads the storage (order/MST/iVAT-only plans).
+    pub fn sweep_only() -> Self {
+        Self { permuted: false }
+    }
+
+    /// Permuted re-reads follow the sweep (raw-image render / detect /
+    /// insight / keep_matrix).
+    pub fn permuted() -> Self {
+        Self { permuted: true }
+    }
+
+    /// THE layout × access rule, shared by the resolver and the
+    /// precomputed-storage executor path: a *spilled* store whose permuted
+    /// image will be re-read gets the reorder-then-spill `R*` rewrite
+    /// (reading it back through the view would miss the LRU per pixel);
+    /// in-RAM layouts never do — their random access is already cheap.
+    pub fn wants_reorder_spill(&self, kind: StorageKind) -> bool {
+        self.permuted && matches!(kind, StorageKind::Sharded | StorageKind::ShardedSquare)
+    }
+}
+
+/// A resolved storage decision: the layout, the shard geometry, and
+/// whether the executor should rewrite `R*` in display order after the
+/// VAT sweep ([`crate::dissimilarity::SquareBands::reorder_spill`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageDecision {
+    /// The storage layout to build.
+    pub kind: StorageKind,
+    /// Shard geometry for the sharded layouts (in-RAM layouts ignore it).
+    pub shard: ShardOptions,
+    /// Run the reorder-then-spill pass after the sweep, and serve
+    /// permuted-image stages from the display-ordered spill.
+    pub reorder_spill: bool,
+}
+
 impl StoragePolicy {
-    /// Resolve the layout for an n-point request. `base` supplies the shard
-    /// knobs for `Fixed(Sharded)` and the `spill_dir` for the auto-sized
-    /// sharded arm (auto derives `shard_rows`/`cache_shards` from the
-    /// budget, overriding `base`'s values for those two fields).
+    /// [`StoragePolicy::resolve_for`] with a sweep-only access profile,
+    /// flattened to the historical `(kind, shard)` pair — kept for callers
+    /// that only need the layout of the distance build.
     pub fn resolve(&self, n: usize, base: &ShardOptions) -> (StorageKind, ShardOptions) {
+        let d = self.resolve_for(n, AccessProfile::sweep_only(), base);
+        (d.kind, d.shard)
+    }
+
+    /// Resolve the storage decision for an n-point request with the given
+    /// access profile. `base` supplies the shard knobs for `Fixed`
+    /// sharded layouts; the `Auto` arm keeps `base`'s `spill_dir` and
+    /// `cache_shards` (clamped down only if that many one-row shards
+    /// cannot fit the budget — a caller-tuned LRU depth is respected, not
+    /// reset) and derives `shard_rows` so the audited LRU peak
+    /// `cache_shards·shard_rows·n·8` stays inside the budget.
+    ///
+    /// The reorder-then-spill bit is layout × access
+    /// ([`AccessProfile::wants_reorder_spill`]), for pinned and
+    /// auto-resolved layouts alike.
+    pub fn resolve_for(
+        &self,
+        n: usize,
+        access: AccessProfile,
+        base: &ShardOptions,
+    ) -> StorageDecision {
         match self {
-            StoragePolicy::Fixed(kind) => (*kind, base.clone()),
+            StoragePolicy::Fixed(kind) => StorageDecision {
+                kind: *kind,
+                shard: base.clone(),
+                reorder_spill: access.wants_reorder_spill(*kind),
+            },
             StoragePolicy::Auto {
                 memory_budget_bytes,
             } => {
                 let budget = *memory_budget_bytes;
                 if dense_bytes(n) <= budget {
-                    (StorageKind::Dense, base.clone())
+                    StorageDecision {
+                        kind: StorageKind::Dense,
+                        shard: base.clone(),
+                        reorder_spill: false,
+                    }
                 } else if condensed_bytes(n) <= budget {
-                    (StorageKind::Condensed, base.clone())
+                    StorageDecision {
+                        kind: StorageKind::Condensed,
+                        shard: base.clone(),
+                        reorder_spill: false,
+                    }
                 } else {
-                    // peak resident distance bytes of a sharded VAT job are
-                    // bounded by 2·shard_rows·n·8 (cache_shards = 2), so the
-                    // largest fitting band is budget / (16n). This arm only
-                    // runs when budget < n(n−1)/2·8, which keeps the derived
-                    // shard_rows < (n−1)/4 — always a genuine multi-band
-                    // spill, never a single resident triangle.
-                    let shard_rows = (budget / (16 * n.max(1))).max(1);
-                    (
-                        StorageKind::Sharded,
-                        ShardOptions {
+                    // Square-form bands, always (see the module docs): this
+                    // arm only runs when budget < n(n−1)/2·8, which forces
+                    // bands > 2·cache_shards on the condensed layout — the
+                    // regime where the sweep's head gather re-reads the
+                    // file ≈ bands/2 times. The LRU keeps the caller's
+                    // depth when `cache_shards` one-row shards fit the
+                    // budget, else it is clamped (never silently reset);
+                    // shard_rows then fills the rest of the budget:
+                    // cache_shards·shard_rows·n·8 ≤ budget (a sub-one-row
+                    // budget still yields valid 1-row bands).
+                    // base.cache_shards = 0 is invalid ShardOptions (plan()
+                    // rejects it) but this resolver is public: clamp up to
+                    // 1 instead of dividing by zero below
+                    let row_bytes = 8 * n.max(1);
+                    let cache_shards =
+                        base.cache_shards.max(1).min((budget / row_bytes).max(1));
+                    let shard_rows = (budget / (row_bytes * cache_shards)).max(1);
+                    StorageDecision {
+                        kind: StorageKind::ShardedSquare,
+                        shard: ShardOptions {
                             shard_rows,
-                            cache_shards: 2,
+                            cache_shards,
                             spill_dir: base.spill_dir.clone(),
                         },
-                    )
+                        reorder_spill: access
+                            .wants_reorder_spill(StorageKind::ShardedSquare),
+                    }
                 }
             }
         }
@@ -119,7 +239,7 @@ mod tests {
     #[test]
     fn auto_tier_cutovers_at_exact_byte_budgets() {
         // n = 100: dense = 80_000 bytes, condensed = 39_600 bytes
-        let base = ShardOptions::default();
+        let base = ShardOptions::default(); // cache_shards = 4
         assert_eq!(dense_bytes(100), 80_000);
         assert_eq!(condensed_bytes(100), 39_600);
         let at = |budget: usize| {
@@ -132,35 +252,109 @@ mod tests {
         assert_eq!(at(79_999).0, StorageKind::Condensed); // one byte short
         assert_eq!(at(39_600).0, StorageKind::Condensed); // exactly fits
         let (kind, shard) = at(39_599); // one byte short of condensed
-        assert_eq!(kind, StorageKind::Sharded);
-        // 39_599 / (16 · 100) = 24 rows per shard, two-shard LRU
-        assert_eq!(shard.shard_rows, 24);
-        assert_eq!(shard.cache_shards, 2);
-        // a budget below one row still yields a valid (1-row) band
+        assert_eq!(kind, StorageKind::ShardedSquare);
+        // base cache depth 4 fits (4 one-row shards = 3_200 B), so it is
+        // kept; rows fill the rest: 39_599 / (8·100·4) = 12 per shard
+        assert_eq!(shard.shard_rows, 12);
+        assert_eq!(shard.cache_shards, 4);
+        // smaller budgets clamp the LRU down instead of keeping 4 shards
+        // it cannot afford: 1_600 B holds two 1-row shards...
+        assert_eq!(at(1_600).1.cache_shards, 2);
         assert_eq!(at(1_600).1.shard_rows, 1);
+        // ...and a sub-one-row budget still yields a valid 1×1-row LRU
+        assert_eq!(at(1).1.cache_shards, 1);
         assert_eq!(at(1).1.shard_rows, 1);
     }
 
     #[test]
-    fn auto_keeps_the_callers_spill_dir_only() {
-        let base = ShardOptions {
-            shard_rows: 999,
-            cache_shards: 7,
+    fn auto_keeps_tuned_cache_depth_when_it_fits_and_clamps_when_not() {
+        // regression: the old resolver silently overwrote a caller-tuned
+        // cache_shards with a hardcoded 2. It must be kept when that many
+        // shards fit the budget, and clamped (not reset) when they do not.
+        let tuned = |cache_shards: usize| ShardOptions {
+            shard_rows: 999, // always derived, never passed through
+            cache_shards,
             spill_dir: Some(std::path::PathBuf::from("/var/tmp/vat")),
         };
-        let (kind, shard) = StoragePolicy::Auto {
-            memory_budget_bytes: 1_000,
-        }
-        .resolve(100, &base);
-        assert_eq!(kind, StorageKind::Sharded);
-        // rows/cache come from the budget, not the base knobs...
-        assert_eq!(shard.shard_rows, 1_000 / (16 * 100));
-        assert_eq!(shard.cache_shards, 2);
-        // ...but the spill location is the caller's
+        let at = |budget: usize, cache: usize| {
+            StoragePolicy::Auto {
+                memory_budget_bytes: budget,
+            }
+            .resolve(100, &tuned(cache))
+        };
+        // 24_000 B (below the 39_600 B condensed cutover, so it spills)
+        // fits 3 shards of 10 rows (3·10·100·8 = 24_000 exactly)
+        let (kind, shard) = at(24_000, 3);
+        assert_eq!(kind, StorageKind::ShardedSquare);
+        assert_eq!(shard.cache_shards, 3);
+        assert_eq!(shard.shard_rows, 10);
+        // 1_000 B cannot hold 7 one-row shards (5_600 B): clamp to 1
+        let (_, shard) = at(1_000, 7);
+        assert_eq!(shard.cache_shards, 1);
+        assert_eq!(shard.shard_rows, 1);
+        // the spill location is always the caller's
         assert_eq!(
             shard.spill_dir.as_deref(),
             Some(std::path::Path::new("/var/tmp/vat"))
         );
+        // a (pre-plan-validation) zero cache depth clamps up to 1 instead
+        // of dividing by zero
+        let (_, shard) = at(1_000, 0);
+        assert_eq!(shard.cache_shards, 1);
+        assert_eq!(shard.shard_rows, 1);
+        // and the derived LRU peak respects the budget whenever the budget
+        // holds at least one row
+        for budget in [1_000usize, 8_000, 20_000, 39_599] {
+            let (_, s) = at(budget, 4);
+            assert!(
+                s.cache_shards * s.shard_rows * 100 * 8 <= budget,
+                "budget {budget}: {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn access_profile_drives_the_reorder_spill_bit() {
+        let base = ShardOptions::default();
+        let auto = StoragePolicy::Auto {
+            memory_budget_bytes: 10_000,
+        };
+        // spilling + permuted stages => respill; sweep-only => no respill
+        let d = auto.resolve_for(100, AccessProfile::permuted(), &base);
+        assert_eq!(d.kind, StorageKind::ShardedSquare);
+        assert!(d.reorder_spill);
+        let d = auto.resolve_for(100, AccessProfile::sweep_only(), &base);
+        assert_eq!(d.kind, StorageKind::ShardedSquare);
+        assert!(!d.reorder_spill);
+        // in-RAM tiers never respill, whatever the profile
+        let d = auto.resolve_for(10, AccessProfile::permuted(), &base);
+        assert_eq!(d.kind, StorageKind::Dense);
+        assert!(!d.reorder_spill);
+        // the bit is layout × access, so PINNED spilled layouts respill
+        // under permuted access too (and never without it)
+        for kind in [StorageKind::Sharded, StorageKind::ShardedSquare] {
+            let d = StoragePolicy::Fixed(kind).resolve_for(
+                100,
+                AccessProfile::permuted(),
+                &base,
+            );
+            assert_eq!(d.kind, kind);
+            assert!(d.reorder_spill);
+            let d = StoragePolicy::Fixed(kind).resolve_for(
+                100,
+                AccessProfile::sweep_only(),
+                &base,
+            );
+            assert!(!d.reorder_spill);
+        }
+        for kind in [StorageKind::Dense, StorageKind::Condensed] {
+            let d = StoragePolicy::Fixed(kind).resolve_for(
+                100,
+                AccessProfile::permuted(),
+                &base,
+            );
+            assert!(!d.reorder_spill);
+        }
     }
 
     #[test]
@@ -174,6 +368,7 @@ mod tests {
             StorageKind::Dense,
             StorageKind::Condensed,
             StorageKind::Sharded,
+            StorageKind::ShardedSquare,
         ] {
             let (k, s) = StoragePolicy::Fixed(kind).resolve(500, &base);
             assert_eq!(k, kind);

@@ -27,6 +27,10 @@ pub struct ResolvedPlan {
     pub storage: StorageKind,
     /// The shard knobs the resolved layout used (meaningful for sharded).
     pub shard: ShardOptions,
+    /// Whether the executor rewrote `R*` in display order after the sweep
+    /// (the reorder-then-spill pass the resolver schedules for spilled
+    /// requests whose stages re-read the permuted raw image).
+    pub reorder_spill: bool,
     /// Points in the input (after standardization, before sampling).
     pub n_input: usize,
     /// Points actually assessed (equals `n_input` unless sVAT escalated).
@@ -45,6 +49,8 @@ pub struct StageTimings {
     pub distance_s: f64,
     /// VAT Prim sweep.
     pub vat_s: f64,
+    /// Reorder-then-spill pass (when the resolver scheduled it).
+    pub respill_s: f64,
     /// iVAT path-max transform (when requested).
     pub ivat_s: f64,
     /// Block detection + insight.

@@ -212,7 +212,8 @@ pub struct ServiceConfig {
     pub engine: String,
     /// artifacts/ directory for the XLA engine.
     pub artifacts_dir: String,
-    /// Distance-storage layout for jobs: "dense" | "condensed" | "sharded".
+    /// Distance-storage layout for jobs:
+    /// "dense" | "condensed" | "sharded" | "sharded-square".
     /// Condensed halves per-job resident distance bytes; sharded spills the
     /// triangle to disk and keeps only the shard LRU resident — both with
     /// bit-identical output (see `dissimilarity/storage.rs` and
@@ -400,6 +401,9 @@ mod tests {
         let doc = Document::parse("[service]\nstorage = \"condensed\"\n").unwrap();
         let cfg = ServiceConfig::from_document(&doc).unwrap();
         assert_eq!(cfg.storage, StorageKind::Condensed);
+        let doc = Document::parse("[service]\nstorage = \"sharded-square\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.storage, StorageKind::ShardedSquare);
         // validation fails loudly on unknown layouts and non-strings
         let doc = Document::parse("[service]\nstorage = \"sparse\"\n").unwrap();
         assert!(ServiceConfig::from_document(&doc).is_err());

@@ -22,7 +22,7 @@ use crate::analysis::Analysis;
 #[cfg(test)]
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
-use crate::dissimilarity::shard::ShardedTriangle;
+use crate::dissimilarity::shard::{ShardedTriangle, SquareBands};
 use crate::dissimilarity::{
     DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
 };
@@ -217,6 +217,15 @@ impl StreamingVat {
                         &self.config.shard,
                     )?)
                 }
+                StorageKind::ShardedSquare => {
+                    // verbatim row copies into square bands (bitwise
+                    // identical entries; window rows are already square)
+                    DistanceStore::ShardedSquare(SquareBands::from_square_flat(
+                        &self.dist,
+                        n,
+                        &self.config.shard,
+                    )?)
+                }
             });
             // the reorder + detection stages run through the one request
             // API over the already-built window storage (`Analysis::over`
@@ -361,6 +370,7 @@ mod tests {
             StorageKind::Dense,
             StorageKind::Condensed,
             StorageKind::Sharded,
+            StorageKind::ShardedSquare,
         ] {
             let mut sv = StreamingVat::new(
                 2,
@@ -417,26 +427,51 @@ mod tests {
             },
         )
         .unwrap();
+        let mut square = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 70,
+                snapshot_storage: StorageKind::ShardedSquare,
+                shard: ShardOptions {
+                    shard_rows: 9,
+                    cache_shards: 2,
+                    spill_dir: None,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
         for i in 0..90 {
             // 90 pushes through a 70-window exercises eviction too
             dense.push(ds.points.row(i)).unwrap();
             shard.push(ds.points.row(i)).unwrap();
+            square.push(ds.points.row(i)).unwrap();
         }
         let a = dense.snapshot().unwrap();
         let b = shard.snapshot().unwrap();
+        let q = square.snapshot().unwrap();
         assert_eq!(a.vat.order, b.vat.order);
         assert_eq!(a.vat.mst, b.vat.mst);
         assert_eq!(a.blocks, b.blocks);
         assert_eq!(b.storage.kind(), StorageKind::Sharded);
+        assert_eq!(a.vat.order, q.vat.order);
+        assert_eq!(a.vat.mst, q.vat.mst);
+        assert_eq!(a.blocks, q.blocks);
+        assert_eq!(q.storage.kind(), StorageKind::ShardedSquare);
         for x in 0..70 {
             for y in 0..70 {
                 assert_eq!(a.view().get(x, y), b.view().get(x, y), "({x},{y})");
+                assert_eq!(a.view().get(x, y), q.view().get(x, y), "({x},{y})");
             }
         }
         // sharded snapshots keep only the LRU budget resident
         let s = b.storage.as_sharded().unwrap();
         assert!(s.resident_bytes() <= 2 * 9 * 70 * 8);
         assert_eq!(s.file_bytes(), 70 * 69 / 2 * 8);
+        // the square layout pays 2× disk for its contiguous rows
+        let sq = q.storage.as_sharded_square().unwrap();
+        assert!(sq.resident_bytes() <= 2 * 9 * 70 * 8);
+        assert_eq!(sq.file_bytes(), 70 * 70 * 8);
     }
 
     #[test]

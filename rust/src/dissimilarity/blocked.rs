@@ -239,6 +239,44 @@ pub(crate) fn fill_condensed_rows(
     debug_assert!(slot.next().is_none(), "out larger than the row range");
 }
 
+/// Fill the FULL square row `i` (n entries, zero diagonal) into `out`
+/// using the same pair kernels as [`fill_condensed_rows`], with every pair
+/// evaluated in canonical `(lo, hi)` order (`lo < hi`) — so the `j < i`
+/// head recomputes exactly the value row `lo`'s condensed tail holds, and
+/// the square-band layout is bitwise identical to the condensed/dense
+/// builds without ever reading earlier bands back. This is THE square pair
+/// loop of `shard::SquareBands::build_blocked`.
+pub(crate) fn fill_square_row(
+    points: &Points,
+    metric: Metric,
+    norms: Option<&[f64]>,
+    dot: fn(&[f64], &[f64]) -> f64,
+    i: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), points.n());
+    let squared = matches!(metric, Metric::SqEuclidean);
+    for (j, slot) in out.iter_mut().enumerate() {
+        if i == j {
+            *slot = 0.0;
+            continue;
+        }
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        *slot = match (metric, norms) {
+            (Metric::Euclidean | Metric::SqEuclidean, Some(ns)) => {
+                let sq =
+                    (ns[lo] + ns[hi] - 2.0 * dot(points.row(lo), points.row(hi))).max(0.0);
+                if squared {
+                    sq
+                } else {
+                    sq.sqrt()
+                }
+            }
+            _ => metric.eval(points.row(lo), points.row(hi)),
+        };
+    }
+}
+
 /// Upper-triangle build sharing this module's pair kernels — entries are
 /// bitwise identical to [`build`]'s, so the condensed storage path never
 /// changes a value, only the layout. Returns the flat n(n−1)/2 buffer

@@ -22,7 +22,7 @@
 //! non-XLA engines need no extra code.
 
 use super::condensed::CondensedMatrix;
-use super::shard::{ShardOptions, ShardedTriangle};
+use super::shard::{ShardOptions, ShardedTriangle, SquareBands};
 use super::storage::{DistanceStore, StorageKind};
 use super::{DistanceMatrix, Metric};
 use crate::data::Points;
@@ -69,8 +69,28 @@ pub trait DistanceEngine: Send + Sync {
         ShardedTriangle::from_condensed(&self.build_condensed(points, metric)?, opts)
     }
 
+    /// Build the square-form row-band out-of-core layout under `metric` —
+    /// the engine-layer hook of the IO-amplification fix.
+    ///
+    /// Contract: same as [`DistanceEngine::build_sharded`] — entries are
+    /// **bitwise identical** to the engine's dense entries. The default
+    /// builds the engine's condensed form and spills its full rows (row
+    /// fills on an in-RAM triangle are cheap, so every backend — including
+    /// the XLA engines — gets square bands with no extra code); native
+    /// engines override to compute full rows directly from points in
+    /// canonical pair order, never holding more than one band in RAM.
+    fn build_sharded_square(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<SquareBands> {
+        SquareBands::from_condensed(&self.build_condensed(points, metric)?, opts)
+    }
+
     /// Build distance storage of the requested layout — the engine-layer
-    /// entry point for the `storage = "dense" | "condensed" | "sharded"`
+    /// entry point for the
+    /// `storage = "dense" | "condensed" | "sharded" | "sharded-square"`
     /// knob. Sharded storage uses [`ShardOptions::default`]; callers with
     /// tuned shard knobs (the job service, the pipeline, the CLI) use
     /// [`DistanceEngine::build_storage_with`].
@@ -101,6 +121,9 @@ pub trait DistanceEngine: Send + Sync {
             }
             StorageKind::Sharded => {
                 DistanceStore::Sharded(self.build_sharded(points, metric, shard)?)
+            }
+            StorageKind::ShardedSquare => {
+                DistanceStore::ShardedSquare(self.build_sharded_square(points, metric, shard)?)
             }
         })
     }
@@ -190,6 +213,17 @@ impl DistanceEngine for NaiveEngine {
     ) -> Result<ShardedTriangle> {
         ShardedTriangle::build(points, metric, opts)
     }
+
+    /// Row-streamed direct evaluation in canonical pair order — bitwise
+    /// identical to the naive dense sweep, one band resident at a time.
+    fn build_sharded_square(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<SquareBands> {
+        SquareBands::build(points, metric, opts)
+    }
 }
 
 /// Numba-tier: compiled, cache-tiled native builder.
@@ -219,6 +253,17 @@ impl DistanceEngine for BlockedEngine {
         opts: &ShardOptions,
     ) -> Result<ShardedTriangle> {
         ShardedTriangle::build_blocked(points, metric, opts)
+    }
+
+    /// Row-streamed build on the shared pair kernels (canonical pair
+    /// order) — bitwise identical to the dense blocked build.
+    fn build_sharded_square(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<SquareBands> {
+        SquareBands::build_blocked(points, metric, opts)
     }
 }
 
@@ -256,6 +301,19 @@ impl DistanceEngine for ParallelEngine {
     ) -> Result<ShardedTriangle> {
         ShardedTriangle::build_parallel(points, metric, opts, self.threads)
     }
+
+    /// Square bands on the shared (sequential) blocked pair kernels — the
+    /// square build is disk-write-bound, so wave parallelism buys nothing
+    /// the spill mutex would not serialize; entries bitwise identical to
+    /// the parallel/blocked dense builds (they share one kernel).
+    fn build_sharded_square(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<SquareBands> {
+        SquareBands::build_blocked(points, metric, opts)
+    }
 }
 
 /// Half-memory engine: the n(n−1)/2 condensed form is its natural
@@ -287,6 +345,17 @@ impl DistanceEngine for CondensedEngine {
         opts: &ShardOptions,
     ) -> Result<ShardedTriangle> {
         ShardedTriangle::build(points, metric, opts)
+    }
+
+    /// Row-streamed direct evaluation in canonical pair order — the
+    /// square-band twin of this engine's condensed form, bitwise identical.
+    fn build_sharded_square(
+        &self,
+        points: &Points,
+        metric: Metric,
+        opts: &ShardOptions,
+    ) -> Result<SquareBands> {
+        SquareBands::build(points, metric, opts)
     }
 }
 
@@ -385,9 +454,13 @@ mod tests {
             let shard = e
                 .build_storage(&ds.points, Metric::Euclidean, StorageKind::Sharded)
                 .unwrap();
+            let square = e
+                .build_storage(&ds.points, Metric::Euclidean, StorageKind::ShardedSquare)
+                .unwrap();
             assert_eq!(dense.kind(), StorageKind::Dense, "{}", e.name());
             assert_eq!(cond.kind(), StorageKind::Condensed, "{}", e.name());
             assert_eq!(shard.kind(), StorageKind::Sharded, "{}", e.name());
+            assert_eq!(square.kind(), StorageKind::ShardedSquare, "{}", e.name());
             for i in 0..60 {
                 for j in 0..60 {
                     // the storage contract: layout changes, values do not
@@ -401,6 +474,12 @@ mod tests {
                         dense.get(i, j),
                         shard.get(i, j),
                         "{} sharded ({i},{j})",
+                        e.name()
+                    );
+                    assert_eq!(
+                        dense.get(i, j),
+                        square.get(i, j),
+                        "{} sharded-square ({i},{j})",
                         e.name()
                     );
                 }
@@ -431,10 +510,28 @@ mod tests {
             let st = via_selector.as_sharded().expect("sharded arm");
             assert_eq!(st.shard_rows(), 9);
             assert_eq!(st.cache_shards(), 2);
+            // ... and to the square-band arm (full rows per band)
+            let sq = e
+                .build_storage_with(
+                    &ds.points,
+                    Metric::Euclidean,
+                    StorageKind::ShardedSquare,
+                    &opts,
+                )
+                .unwrap();
+            let sq = sq.as_sharded_square().expect("square-band arm");
+            assert_eq!(sq.shard_rows(), 9);
+            assert_eq!(sq.bands(), 70usize.div_ceil(9));
             let dense = e.build(&ds.points, Metric::Euclidean).unwrap();
             for i in 0..70 {
                 for j in 0..70 {
                     assert_eq!(s.get(i, j), dense.get(i, j), "{} ({i},{j})", e.name());
+                    assert_eq!(
+                        sq.get(i, j),
+                        dense.get(i, j),
+                        "{} square ({i},{j})",
+                        e.name()
+                    );
                 }
             }
         }
@@ -456,10 +553,14 @@ mod tests {
         let shard = sim
             .build_storage(&z, Metric::Euclidean, StorageKind::Sharded)
             .unwrap();
+        let square = sim
+            .build_storage(&z, Metric::Euclidean, StorageKind::ShardedSquare)
+            .unwrap();
         for i in 0..50 {
             for j in 0..50 {
                 assert_eq!(dense.get(i, j), cond.get(i, j));
                 assert_eq!(dense.get(i, j), shard.get(i, j));
+                assert_eq!(dense.get(i, j), square.get(i, j));
             }
         }
         // unsupported metrics are refused through the storage path too
@@ -468,6 +569,9 @@ mod tests {
             .is_err());
         assert!(sim
             .build_storage(&z, Metric::Manhattan, StorageKind::Sharded)
+            .is_err());
+        assert!(sim
+            .build_storage(&z, Metric::Manhattan, StorageKind::ShardedSquare)
             .is_err());
     }
 }

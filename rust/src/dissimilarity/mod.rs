@@ -20,11 +20,12 @@
 //!
 //! Orthogonal to the *builder* choice is the *storage* choice: the
 //! [`storage::DistanceStorage`] trait abstracts dense ([`DistanceMatrix`]),
-//! condensed ([`condensed::CondensedMatrix`]), and sharded out-of-core
-//! ([`shard::ShardedTriangle`], spilled via [`ooc`]) layouts, and every
-//! stage downstream of the distance build (VAT Prim sweep, iVAT, block
-//! detection, rendering, silhouette) is generic over it. See `storage.rs`
-//! and `shard.rs` module docs.
+//! condensed ([`condensed::CondensedMatrix`]), and the two sharded
+//! out-of-core layouts ([`shard::ShardedTriangle`] condensed bands and
+//! [`shard::SquareBands`] square-form bands, spilled via [`ooc`]), and
+//! every stage downstream of the distance build (VAT Prim sweep, iVAT,
+//! block detection, rendering, silhouette) is generic over it. See
+//! `storage.rs` and `shard.rs` module docs.
 
 pub mod blocked;
 pub mod condensed;
@@ -36,7 +37,7 @@ pub mod parallel;
 pub mod shard;
 pub mod storage;
 
-pub use shard::{ShardOptions, ShardedTriangle};
+pub use shard::{ShardOptions, ShardedTriangle, SquareBands, SquareWriter};
 pub use storage::{DistanceStorage, DistanceStore, PermutedView, StorageKind};
 
 use crate::data::Points;

@@ -145,6 +145,17 @@ impl SpillFile {
         &self.path
     }
 
+    /// Extend the file to hold `entries` f64 slots up front (zero-filled by
+    /// the OS). Writers that fill the file out of positional order — the
+    /// reorder-then-spill pass scatters display rows — call this so the
+    /// final size is declared once instead of grown write by write; the
+    /// regions are then overwritten exactly once each.
+    pub fn preallocate(&self, entries: u64) -> Result<()> {
+        let file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        file.set_len(entries * 8)?;
+        Ok(())
+    }
+
     /// Write `data` at entry offset `offset` (f64 units, little-endian).
     pub fn write_f64s_at(&self, offset: u64, data: &[f64]) -> Result<()> {
         let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());

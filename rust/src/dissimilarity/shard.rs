@@ -1,24 +1,44 @@
-//! The sharded, out-of-core distance tier: the condensed n(n−1)/2 upper
-//! triangle split into fixed-size row-band shards, spilled to disk, with an
-//! in-memory LRU of hot shards.
+//! The sharded, out-of-core distance tier: pairwise distances split into
+//! fixed-size row-band shards, spilled to disk, with an in-memory LRU of
+//! hot shards — in one of **two band layouts**.
 //!
 //! PR 2's condensed layout halved the resident triangle; this module takes
-//! the next step named in ROADMAP.md: the triangle no longer has to be
-//! resident at all. [`ShardedTriangle`] implements
-//! [`DistanceStorage`], so the VAT Prim sweep, iVAT, sVAT, the block
-//! detector, silhouette, and the renderers run **unmodified** against it —
-//! peak in-RAM distance bytes drop from O(n²) to
-//! O(`cache_shards` · `shard_rows` · n), turning disk capacity into the new
-//! ceiling for n (the sVAT/§5.2 scalability direction of the source paper,
-//! and the same row-band streaming that MST-of-millions pipelines use).
+//! the next step named in ROADMAP.md: the matrix no longer has to be
+//! resident at all. Both layouts implement [`DistanceStorage`], so the VAT
+//! Prim sweep, iVAT, sVAT, the block detector, silhouette, and the
+//! renderers run **unmodified** against them — peak in-RAM distance bytes
+//! drop from O(n²) to O(`cache_shards` · `shard_rows` · n), turning disk
+//! capacity into the new ceiling for n (the sVAT/§5.2 scalability direction
+//! of the source paper, and the same row-band streaming that
+//! MST-of-millions pipelines use).
 //!
-//! Layout: band `b` owns the condensed entries of rows
-//! `[b·shard_rows, (b+1)·shard_rows)` — exactly the contiguous slice
-//! `offsets[b]..offsets[b+1]` of the scipy `pdist` buffer, so the spill
-//! file as a whole *is* the condensed buffer and every entry is bitwise
-//! identical to the [`CondensedMatrix`] (and dense) forms built by the same
-//! engine. Values never change across storage kinds; only residency does
-//! (locked by `tests/storage_parity.rs`).
+//! * [`ShardedTriangle`] — **condensed bands** (1× disk): band `b` owns the
+//!   condensed entries of rows `[b·shard_rows, (b+1)·shard_rows)` — exactly
+//!   the contiguous slice `offsets[b]..offsets[b+1]` of the scipy `pdist`
+//!   buffer, so the spill file as a whole *is* the condensed buffer. A row
+//!   fill must gather its `j < i` column head through every earlier band,
+//!   so once `bands ≫ cache_shards` a Prim sweep re-reads ≈ `bands/2 ×`
+//!   the file.
+//! * [`SquareBands`] — **square-form bands** (2× disk): band `b` owns the
+//!   *full* square rows `[b·shard_rows, (b+1)·shard_rows)` (n entries per
+//!   row, zero diagonal stored). `fill_row` is ONE contiguous read — the
+//!   Prim sweep streams the file exactly once — and row-major scans
+//!   (rendering an image spilled in display order, the seed/max passes)
+//!   touch each band a constant number of times.
+//!   [`SquareBands::reorder_spill`] rewrites `R*` in display order after
+//!   the VAT sweep (one sequential pass over the source), so permuted-view
+//!   rendering / block detection / iVAT over huge images becomes
+//!   band-sequential instead of LRU thrash. Which layout a request gets is
+//!   a *policy* decision (`analysis::StoragePolicy::resolve_for`), never a
+//!   per-surface knob.
+//!
+//! Entries are bitwise identical to the [`CondensedMatrix`] (and dense)
+//! forms built by the same engine in *both* layouts. Values never change
+//! across storage kinds; only residency does (locked by
+//! `tests/storage_parity.rs`). Both tiers count their spill-file band loads
+//! ([`ShardedTriangle::band_loads`] / [`SquareBands::band_loads`], plus
+//! [`SquareBands::row_reads`]) so the IO-amplification bounds are
+//! *asserted*, not assumed, à la `bench_util::FootprintAudit`.
 //!
 //! Failure model: building and spilling return `Result`; *reads* go through
 //! the infallible [`DistanceStorage`] trait, so a spill file that vanishes
@@ -107,11 +127,57 @@ fn band_offsets(n: usize, shard_rows: usize, bands: usize) -> Vec<u64> {
         .collect()
 }
 
-/// LRU of hot shards: most recently used at the back.
+/// LRU of hot shards: most recently used at the back. Both band layouts
+/// share this one implementation of the hit/evict/load/accounting
+/// discipline, so the eviction rule, byte accounting, peak tracking, and
+/// the band-load audit counter cannot drift between tiers.
 #[derive(Debug, Default)]
 struct BandCache {
     entries: Vec<(u32, Vec<f64>)>,
     bytes: usize,
+}
+
+impl BandCache {
+    /// Hit path: MRU-bump band `b` and run `f` over it; `None` on miss.
+    fn try_hit<R>(&mut self, b: usize, f: impl FnOnce(&[f64]) -> R) -> Option<R> {
+        let pos = self.entries.iter().position(|(id, _)| *id == b as u32)?;
+        let entry = self.entries.remove(pos);
+        self.entries.push(entry);
+        Some(f(&self.entries.last().expect("just pushed").1))
+    }
+
+    /// Run `f` over band `b` (`len` entries at spill `offset`), loading it
+    /// on a miss: evict least-recently-used shards down to the budget,
+    /// read from `spill`, bump the audit counter and the peak tracker.
+    #[allow(clippy::too_many_arguments)]
+    fn with_band<R>(
+        &mut self,
+        b: usize,
+        cache_shards: usize,
+        len: usize,
+        offset: u64,
+        spill: &SpillFile,
+        loads: &AtomicUsize,
+        peak: &AtomicUsize,
+        f: impl FnOnce(&[f64]) -> R,
+    ) -> R {
+        if self.entries.iter().any(|(id, _)| *id == b as u32) {
+            return self.try_hit(b, f).expect("band present: checked above");
+        }
+        while self.entries.len() >= cache_shards {
+            let (_, old) = self.entries.remove(0);
+            self.bytes -= old.len() * std::mem::size_of::<f64>();
+        }
+        let mut buf = vec![0.0f64; len];
+        spill
+            .read_f64s_at(offset, &mut buf)
+            .expect("sharded distance tier: spill file read failed");
+        loads.fetch_add(1, Ordering::Relaxed);
+        self.bytes += len * std::mem::size_of::<f64>();
+        peak.fetch_max(self.bytes, Ordering::Relaxed);
+        self.entries.push((b as u32, buf));
+        f(&self.entries.last().expect("just pushed").1)
+    }
 }
 
 /// The condensed upper triangle in fixed-size row-band shards on disk, with
@@ -131,6 +197,9 @@ pub struct ShardedTriangle {
     /// `build_sharded`) — the resident source buffer, so the §5.1 audit
     /// hook never under-reports an O(n²) build as out-of-core.
     peak: AtomicUsize,
+    /// Spill-file band loads (LRU misses) this instance served — the IO
+    /// audit counter read by `tests/storage_parity.rs`.
+    band_loads: AtomicUsize,
 }
 
 impl ShardedTriangle {
@@ -151,6 +220,7 @@ impl ShardedTriangle {
             spill: Arc::new(spill),
             cache: Mutex::new(BandCache::default()),
             peak: AtomicUsize::new(build_peak),
+            band_loads: AtomicUsize::new(0),
         }
     }
 
@@ -369,6 +439,15 @@ impl ShardedTriangle {
         self.peak.load(Ordering::Relaxed)
     }
 
+    /// How many band loads this instance has served from the spill file
+    /// (LRU misses; cache hits are free). The IO-amplification audit in
+    /// `tests/storage_parity.rs` reads this — on the condensed layout a
+    /// Prim sweep with `bands ≫ cache_shards` drives it toward
+    /// `n·bands/2`, which is exactly what [`SquareBands`] eliminates.
+    pub fn band_loads(&self) -> usize {
+        self.band_loads.load(Ordering::Relaxed)
+    }
+
     #[inline]
     fn index(&self, i: usize, j: usize) -> usize {
         debug_assert!(i < j);
@@ -380,24 +459,16 @@ impl ShardedTriangle {
     /// `cache_shards` first, so occupancy never exceeds the budget).
     fn with_band<R>(&self, b: usize, f: impl FnOnce(&[f64]) -> R) -> R {
         let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some(pos) = cache.entries.iter().position(|(id, _)| *id == b as u32) {
-            let entry = cache.entries.remove(pos);
-            cache.entries.push(entry);
-            return f(&cache.entries.last().expect("just pushed").1);
-        }
-        while cache.entries.len() >= self.cache_shards {
-            let (_, old) = cache.entries.remove(0);
-            cache.bytes -= old.len() * std::mem::size_of::<f64>();
-        }
-        let len = (self.offsets[b + 1] - self.offsets[b]) as usize;
-        let mut buf = vec![0.0f64; len];
-        self.spill
-            .read_f64s_at(self.offsets[b], &mut buf)
-            .expect("sharded distance tier: spill file read failed");
-        cache.bytes += len * std::mem::size_of::<f64>();
-        self.peak.fetch_max(cache.bytes, Ordering::Relaxed);
-        cache.entries.push((b as u32, buf));
-        f(&cache.entries.last().expect("just pushed").1)
+        cache.with_band(
+            b,
+            self.cache_shards,
+            (self.offsets[b + 1] - self.offsets[b]) as usize,
+            self.offsets[b],
+            &self.spill,
+            &self.band_loads,
+            &self.peak,
+            f,
+        )
     }
 
     // ---- reads (square-form semantics, identical to CondensedMatrix) ----
@@ -515,7 +586,7 @@ impl ShardedTriangle {
 
 impl Clone for ShardedTriangle {
     /// Shares the spill file (unlinked only when the last clone drops);
-    /// the clone starts with a cold cache and a fresh peak counter.
+    /// the clone starts with a cold cache and fresh peak/IO counters.
     fn clone(&self) -> Self {
         Self {
             n: self.n,
@@ -525,6 +596,7 @@ impl Clone for ShardedTriangle {
             spill: Arc::clone(&self.spill),
             cache: Mutex::new(BandCache::default()),
             peak: AtomicUsize::new(0),
+            band_loads: AtomicUsize::new(0),
         }
     }
 }
@@ -661,6 +733,550 @@ impl ShardedWriter {
             self.spill,
             self.peak,
         ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Square-form row bands: the IO-amplification fix
+// ---------------------------------------------------------------------------
+
+/// Number of square-form row bands: all n rows carry entries, grouped
+/// `shard_rows` at a time.
+fn square_band_count(n: usize, shard_rows: usize) -> usize {
+    n.div_ceil(shard_rows)
+}
+
+/// The full square matrix in fixed-size row-band shards on disk, with an
+/// LRU of hot shards: band `b` holds rows `[b·shard_rows,
+/// (b+1)·shard_rows)` of the square form, n entries per row with the zero
+/// diagonal stored, at entry offset `b·shard_rows·n`.
+///
+/// Twice the disk of [`ShardedTriangle`] buys the access pattern the VAT
+/// pipeline actually has:
+///
+/// * [`SquareBands::fill_row`] is ONE contiguous n-entry read (cache-hit
+///   copy when the row's band is hot, direct spill read otherwise — never
+///   a whole-band load for one row), so the Prim sweep reads each row
+///   exactly once: the file streams through once instead of the condensed
+///   layout's ≈ `bands/2 ×` re-read.
+/// * Row-major scans (`get` over an image spilled in display order, the
+///   seed/max passes) are band-sequential: every band loads a constant
+///   number of times whatever `cache_shards` is.
+/// * [`SquareBands::reorder_spill`] rewrites `R*` in display order after
+///   the sweep — one sequential pass over the source, each destination row
+///   written once — so rendering / detection / darkness over a permuted
+///   view become reads of *this* store in natural order.
+///
+/// Entries are bitwise identical to the condensed/dense forms built by the
+/// same engine: every builder here evaluates pairs in canonical `(lo, hi)`
+/// order (`lo < hi`), the exact arithmetic of the condensed builders, and
+/// the spill/copy routes move values verbatim. Cloning shares the spill
+/// file (refcounted) but starts a fresh cache and fresh counters.
+pub struct SquareBands {
+    n: usize,
+    shard_rows: usize,
+    cache_shards: usize,
+    spill: Arc<SpillFile>,
+    cache: Mutex<BandCache>,
+    /// High-water mark of in-RAM distance bytes (same contract as
+    /// [`ShardedTriangle::peak_resident_bytes`]).
+    peak: AtomicUsize,
+    /// Whole-band loads from the spill file (LRU misses).
+    band_loads: AtomicUsize,
+    /// Direct single-row reads from the spill file (`fill_row` misses).
+    row_reads: AtomicUsize,
+}
+
+impl SquareBands {
+    // ---- construction ----------------------------------------------------
+
+    fn assemble(n: usize, opts: &ShardOptions, spill: SpillFile, build_peak: usize) -> Self {
+        Self {
+            n,
+            shard_rows: opts.shard_rows,
+            cache_shards: opts.cache_shards,
+            spill: Arc::new(spill),
+            cache: Mutex::new(BandCache::default()),
+            peak: AtomicUsize::new(build_peak),
+            band_loads: AtomicUsize::new(0),
+            row_reads: AtomicUsize::new(0),
+        }
+    }
+
+    /// Build row by row through `fill(row, out)` (`out.len() == n`), one
+    /// band staged in RAM at a time. `extra_resident` is folded into the
+    /// peak for routes whose source buffer stays resident during the spill
+    /// (same audit honesty as [`ShardedTriangle::from_condensed`]).
+    fn with_rows(
+        n: usize,
+        opts: &ShardOptions,
+        extra_resident: usize,
+        mut fill: impl FnMut(usize, &mut [f64]) -> Result<()>,
+    ) -> Result<Self> {
+        let mut writer = SquareWriter::new(n, opts)?;
+        let mut row_buf = vec![0.0f64; n];
+        for i in 0..n {
+            fill(i, &mut row_buf)?;
+            writer.push(&row_buf)?;
+        }
+        // the row buffer and the band staging buffer coexist, plus any
+        // resident source the caller spilled from
+        writer.peak += n * 8 + extra_resident;
+        writer.finish()
+    }
+
+    /// Build with direct per-pair `metric.eval` in canonical `(lo, hi)`
+    /// argument order — entries bitwise identical to
+    /// [`CondensedMatrix::build`], [`ShardedTriangle::build`], and the
+    /// naive dense builder. The `j < i` head is re-evaluated (2× the
+    /// condensed build's arithmetic) so no band is ever read back during
+    /// the build.
+    pub fn build(points: &Points, metric: Metric, opts: &ShardOptions) -> Result<Self> {
+        let n = points.n();
+        Self::with_rows(n, opts, 0, |i, out| {
+            let a = points.row(i);
+            for (j, slot) in out.iter_mut().enumerate() {
+                *slot = match j.cmp(&i) {
+                    std::cmp::Ordering::Equal => 0.0,
+                    std::cmp::Ordering::Less => metric.eval(points.row(j), a),
+                    std::cmp::Ordering::Greater => metric.eval(a, points.row(j)),
+                };
+            }
+            Ok(())
+        })
+    }
+
+    /// Build sharing the blocked pair kernels (norms hoisted once for the
+    /// whole build, canonical argument order) — entries bitwise identical
+    /// to [`CondensedMatrix::build_blocked`] / `DistanceMatrix::build_blocked`
+    /// / [`ShardedTriangle::build_blocked`].
+    pub fn build_blocked(points: &Points, metric: Metric, opts: &ShardOptions) -> Result<Self> {
+        let (norms, dot) = blocked::condensed_kernel(points, metric);
+        Self::with_rows(points.n(), opts, 0, |i, out| {
+            blocked::fill_square_row(points, metric, norms.as_deref(), dot, i, out);
+            Ok(())
+        })
+    }
+
+    /// Spill an existing condensed triangle into square bands (entries
+    /// bitwise identical by copy) — the default
+    /// `DistanceEngine::build_sharded_square` route that makes every
+    /// engine, including the XLA backends, square-band-capable. The source
+    /// triangle is resident for the whole spill and counts toward the peak.
+    pub fn from_condensed(c: &CondensedMatrix, opts: &ShardOptions) -> Result<Self> {
+        Self::with_rows(c.n(), opts, c.resident_bytes(), |i, out| {
+            c.fill_row(i, out);
+            Ok(())
+        })
+    }
+
+    /// Spill a flat row-major n×n symmetric buffer (verbatim row copies;
+    /// the streaming snapshot route). The source buffer is resident during
+    /// the spill and counts toward the peak.
+    pub fn from_square_flat(flat: &[f64], n: usize, opts: &ShardOptions) -> Result<Self> {
+        if flat.len() != n * n {
+            return Err(Error::Shape(format!(
+                "flat len {} != n*n = {}",
+                flat.len(),
+                n * n
+            )));
+        }
+        Self::with_rows(n, opts, std::mem::size_of_val(flat), |i, out| {
+            out.copy_from_slice(&flat[i * n..(i + 1) * n]);
+            Ok(())
+        })
+    }
+
+    /// The reorder-then-spill pass: write the permuted image
+    /// `R*[a][b] = src[order[a]][order[b]]` as square bands in *display*
+    /// order, so every downstream permuted-access stage (rendering, block
+    /// detection, diagonal darkness, materialization) reads this store
+    /// band-sequentially instead of thrashing the source LRU.
+    ///
+    /// IO shape: the source is read row by row in *source* order — on a
+    /// [`SquareBands`] source that is one sequential streaming pass over
+    /// the file; each destination row is gathered in RAM (O(n)) and
+    /// written exactly once at its display offset. `order` must be a full
+    /// permutation of `0..src.n()` (checked — a duplicate index would
+    /// leave a destination row unwritten).
+    pub fn reorder_spill<S: DistanceStorage>(
+        src: &S,
+        order: &[usize],
+        opts: &ShardOptions,
+    ) -> Result<Self> {
+        opts.validate()?;
+        let n = src.n();
+        if order.len() != n {
+            return Err(Error::Shape(format!(
+                "order len {} != n {}",
+                order.len(),
+                n
+            )));
+        }
+        // inverse permutation; rejects out-of-range and duplicate indices
+        let mut inv = vec![usize::MAX; n];
+        for (a, &ia) in order.iter().enumerate() {
+            if ia >= n {
+                return Err(Error::Shape(format!("order contains {ia} >= n {n}")));
+            }
+            if inv[ia] != usize::MAX {
+                return Err(Error::Shape(format!("order repeats index {ia}")));
+            }
+            inv[ia] = a;
+        }
+        let spill = SpillFile::create_in(&opts.dir())?;
+        spill.preallocate((n * n) as u64)?;
+        let mut src_row = vec![0.0f64; n];
+        let mut out_row = vec![0.0f64; n];
+        for i in 0..n {
+            src.fill_row(i, &mut src_row);
+            for (slot, &ob) in out_row.iter_mut().zip(order.iter()) {
+                *slot = src_row[ob];
+            }
+            spill.write_f64s_at((inv[i] * n) as u64, &out_row)?;
+        }
+        Ok(Self::assemble(n, opts, spill, 2 * n * 8))
+    }
+
+    // ---- layout ----------------------------------------------------------
+
+    /// Side of the square form.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries (on disk): n².
+    pub fn len(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// True when there are no entries (n == 0).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Rows per shard.
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// LRU capacity in shards.
+    pub fn cache_shards(&self) -> usize {
+        self.cache_shards
+    }
+
+    /// Number of row-band shards.
+    pub fn bands(&self) -> usize {
+        square_band_count(self.n, self.shard_rows)
+    }
+
+    /// Where the square form is spilled (unlinked when the last clone
+    /// drops).
+    pub fn spill_path(&self) -> &Path {
+        self.spill.path()
+    }
+
+    /// Bytes the spill file holds (the full square form — 2× the triangle).
+    pub fn file_bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<f64>()
+    }
+
+    /// In-RAM distance bytes currently held (LRU occupancy).
+    pub fn resident_bytes(&self) -> usize {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).bytes
+    }
+
+    /// High-water mark of in-RAM distance bytes (build buffers + cache).
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Whole-band loads served from the spill file (LRU misses). The
+    /// amplification bound `tests/storage_parity.rs` asserts: band-ordered
+    /// stages keep this O(bands), never O(bands²).
+    pub fn band_loads(&self) -> usize {
+        self.band_loads.load(Ordering::Relaxed)
+    }
+
+    /// Direct single-row spill reads served by [`SquareBands::fill_row`]
+    /// misses. A Prim sweep performs at most n of these — each row read
+    /// once — which together with [`SquareBands::band_loads`] bounds the
+    /// sweep's total IO at ~2× the file size.
+    pub fn row_reads(&self) -> usize {
+        self.row_reads.load(Ordering::Relaxed)
+    }
+
+    /// First row of band `b`.
+    #[inline]
+    fn band_start(&self, b: usize) -> usize {
+        b * self.shard_rows
+    }
+
+    /// One past the last row of band `b`.
+    #[inline]
+    fn band_end(&self, b: usize) -> usize {
+        ((b + 1) * self.shard_rows).min(self.n)
+    }
+
+    /// Run `f` over band `b`'s entries, loading it from the spill file
+    /// into the LRU if cold — the shared [`BandCache`] discipline (and
+    /// the same band-load accounting) as [`ShardedTriangle`].
+    fn with_band<R>(&self, b: usize, f: impl FnOnce(&[f64]) -> R) -> R {
+        let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        cache.with_band(
+            b,
+            self.cache_shards,
+            (self.band_end(b) - self.band_start(b)) * self.n,
+            (self.band_start(b) * self.n) as u64,
+            &self.spill,
+            &self.band_loads,
+            &self.peak,
+            f,
+        )
+    }
+
+    // ---- reads -----------------------------------------------------------
+
+    /// Entry (i, j) — a direct lookup in row `i`'s band (the stored
+    /// diagonal is zero; both triangles are stored, so no index flip).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.n && j < self.n);
+        let b = i / self.shard_rows;
+        let local = (i - self.band_start(b)) * self.n + j;
+        self.with_band(b, |buf| buf[local])
+    }
+
+    /// Copy row `i` of the square form into `out` (`out.len() == n`): a
+    /// cache-hit copy when row `i`'s band is hot, otherwise ONE contiguous
+    /// n-entry spill read — never a whole-band load for a single row, so a
+    /// Prim sweep's n row fills read at most the file once in total.
+    pub fn fill_row(&self, i: usize, out: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(out.len(), n, "fill_row buffer must have length n");
+        assert!(i < n, "row {i} out of range for n {n}");
+        let b = i / self.shard_rows;
+        let local = (i - self.band_start(b)) * n;
+        let hit = self
+            .cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .try_hit(b, |buf| out.copy_from_slice(&buf[local..local + n]));
+        if hit.is_some() {
+            return;
+        }
+        self.spill
+            .read_f64s_at((i * n) as u64, out)
+            .expect("square-band distance tier: spill file read failed");
+        self.row_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Largest entry — one streaming pass over the bands; the stored zero
+    /// diagonal participates exactly as in `DistanceMatrix::max_value`
+    /// (NaN entries are skipped by `f64::max`, the rule every tier shares).
+    pub fn max_value(&self) -> f64 {
+        let mut best = f64::NEG_INFINITY;
+        for b in 0..self.bands() {
+            self.with_band(b, |buf| {
+                for &v in buf {
+                    best = best.max(v);
+                }
+            });
+        }
+        best
+    }
+
+    /// VAT seed row: first row-major occurrence of the global maximum
+    /// (strict `>`, NaNs never win) — the exact dense-scan semantics,
+    /// streamed band by band.
+    pub fn seed_row(&self) -> usize {
+        let mut best_i = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for b in 0..self.bands() {
+            let start = self.band_start(b);
+            self.with_band(b, |buf| {
+                for (k, &v) in buf.iter().enumerate() {
+                    if v > best_v {
+                        best_v = v;
+                        best_i = start + k / self.n;
+                    }
+                }
+            });
+        }
+        best_i
+    }
+
+    /// Expand to dense square storage (interop escape hatch; streams each
+    /// band once).
+    pub fn to_square(&self) -> DistanceMatrix {
+        let n = self.n;
+        let mut m = DistanceMatrix::zeros(n);
+        for b in 0..self.bands() {
+            let start = self.band_start(b);
+            let end = self.band_end(b);
+            self.with_band(b, |buf| {
+                for i in start..end {
+                    let local = (i - start) * n;
+                    m.flat_mut()[i * n..(i + 1) * n]
+                        .copy_from_slice(&buf[local..local + n]);
+                }
+            });
+        }
+        m
+    }
+}
+
+impl Clone for SquareBands {
+    /// Shares the spill file (unlinked only when the last clone drops);
+    /// the clone starts with a cold cache and fresh peak/IO counters.
+    fn clone(&self) -> Self {
+        Self {
+            n: self.n,
+            shard_rows: self.shard_rows,
+            cache_shards: self.cache_shards,
+            spill: Arc::clone(&self.spill),
+            cache: Mutex::new(BandCache::default()),
+            peak: AtomicUsize::new(0),
+            band_loads: AtomicUsize::new(0),
+            row_reads: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl PartialEq for SquareBands {
+    /// Value equality of the square forms (streamed; test/diagnostic use).
+    fn eq(&self, other: &Self) -> bool {
+        if self.n != other.n {
+            return false;
+        }
+        let mut a = vec![0.0f64; self.n];
+        let mut b = vec![0.0f64; self.n];
+        for i in 0..self.n {
+            self.fill_row(i, &mut a);
+            other.fill_row(i, &mut b);
+            if a.iter().zip(&b).any(|(x, y)| x != y) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl std::fmt::Debug for SquareBands {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SquareBands")
+            .field("n", &self.n)
+            .field("shard_rows", &self.shard_rows)
+            .field("cache_shards", &self.cache_shards)
+            .field("bands", &self.bands())
+            .field("spill", &self.spill.path())
+            .finish()
+    }
+}
+
+impl DistanceStorage for SquareBands {
+    fn n(&self) -> usize {
+        SquareBands::n(self)
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        SquareBands::get(self, i, j)
+    }
+
+    fn kind(&self) -> StorageKind {
+        StorageKind::ShardedSquare
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        SquareBands::fill_row(self, i, out);
+    }
+
+    fn max_value(&self) -> f64 {
+        SquareBands::max_value(self)
+    }
+
+    fn seed_row(&self) -> usize {
+        SquareBands::seed_row(self)
+    }
+
+    fn distance_bytes(&self) -> usize {
+        self.resident_bytes()
+    }
+}
+
+/// Streaming constructor for [`SquareBands`]: accepts square-form entries
+/// in row-major order (any slice granularity) and spills each band as it
+/// fills, holding at most one band in RAM — the square twin of
+/// [`ShardedWriter`], used by the iVAT transform's square emission (rows
+/// arrive in display order, which IS row-major order here).
+pub struct SquareWriter {
+    n: usize,
+    opts: ShardOptions,
+    spill: SpillFile,
+    band: usize,
+    buf: Vec<f64>,
+    peak: usize,
+}
+
+impl SquareWriter {
+    /// Start a writer for an n×n square form.
+    pub fn new(n: usize, opts: &ShardOptions) -> Result<Self> {
+        opts.validate()?;
+        let spill = SpillFile::create_in(&opts.dir())?;
+        Ok(Self {
+            n,
+            opts: opts.clone(),
+            spill,
+            band: 0,
+            buf: Vec::new(),
+            peak: 0,
+        })
+    }
+
+    /// Capacity in entries of band `b`.
+    fn band_cap(&self, b: usize) -> usize {
+        let start = b * self.opts.shard_rows;
+        let end = ((b + 1) * self.opts.shard_rows).min(self.n);
+        end.saturating_sub(start) * self.n
+    }
+
+    /// Append entries in row-major order; full bands are spilled eagerly.
+    pub fn push(&mut self, mut entries: &[f64]) -> Result<()> {
+        let bands = square_band_count(self.n, self.opts.shard_rows);
+        while !entries.is_empty() {
+            if self.band >= bands {
+                return Err(Error::Shape(format!(
+                    "square writer overflow: more than n*n = {} entries",
+                    self.n * self.n
+                )));
+            }
+            let cap = self.band_cap(self.band);
+            let take = (cap - self.buf.len()).min(entries.len());
+            self.buf.extend_from_slice(&entries[..take]);
+            entries = &entries[take..];
+            self.peak = self.peak.max(self.buf.len() * 8);
+            if self.buf.len() == cap {
+                self.spill.write_f64s_at(
+                    (self.band * self.opts.shard_rows * self.n) as u64,
+                    &self.buf,
+                )?;
+                self.band += 1;
+                self.buf.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the writer; errors unless exactly n² entries arrived.
+    pub fn finish(self) -> Result<SquareBands> {
+        let bands = square_band_count(self.n, self.opts.shard_rows);
+        if self.band != bands || !self.buf.is_empty() {
+            return Err(Error::Shape(format!(
+                "square writer incomplete: {} of {} bands written",
+                self.band, bands
+            )));
+        }
+        Ok(SquareBands::assemble(self.n, &self.opts, self.spill, self.peak))
     }
 }
 
@@ -841,6 +1457,260 @@ mod tests {
         assert!(ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(0, 1)).is_err());
         assert!(ShardedTriangle::build(&ds.points, Metric::Euclidean, &opts(1, 0)).is_err());
         assert_eq!(ShardOptions::default().shard_rows, 256);
+    }
+
+    // ---- square-form band layout ----------------------------------------
+
+    #[test]
+    fn square_layout_matches_condensed_bitwise() {
+        // every read path — get, fill_row, max, seed — must agree with the
+        // condensed reference, across shard sizes that do and do not
+        // divide n (incl. shard_rows >= n: a single band)
+        let ds = blobs(53, 3, 3, 0.5, 710);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        for sr in [1usize, 7, 16, 52, 53, 200] {
+            let s = SquareBands::build(&ds.points, Metric::Euclidean, &opts(sr, 3))
+                .unwrap();
+            assert_eq!(s.len(), 53 * 53, "sr={sr}");
+            assert_eq!(s.bands(), 53usize.div_ceil(sr), "sr={sr}");
+            assert_eq!(s.file_bytes(), 53 * 53 * 8, "sr={sr}");
+            let mut buf_s = vec![0.0; 53];
+            let mut buf_c = vec![0.0; 53];
+            for i in 0..53 {
+                s.fill_row(i, &mut buf_s);
+                c.fill_row(i, &mut buf_c);
+                assert_eq!(buf_s, buf_c, "sr={sr} row {i}");
+                for j in 0..53 {
+                    assert_eq!(s.get(i, j), c.get(i, j), "sr={sr} ({i},{j})");
+                }
+            }
+            assert_eq!(s.max_value(), c.max_value(), "sr={sr}");
+            assert_eq!(s.seed_row(), c.seed_row(), "sr={sr}");
+        }
+    }
+
+    #[test]
+    fn square_blocked_build_is_bitwise_blocked_condensed() {
+        // canonical (lo, hi) pair order in the square row fill must
+        // reproduce the condensed blocked entries bit for bit — heads and
+        // tails alike — for the dot-trick metrics AND the eval metrics
+        let ds = blobs(131, 3, 3, 0.5, 711); // prime n exercises band tails
+        for metric in [
+            Metric::Euclidean,
+            Metric::SqEuclidean,
+            Metric::Manhattan,
+            Metric::Cosine,
+        ] {
+            let base = CondensedMatrix::build_blocked(&ds.points, metric);
+            let sq = SquareBands::build_blocked(&ds.points, metric, &opts(17, 2)).unwrap();
+            let mut row = vec![0.0; 131];
+            for i in 0..131 {
+                sq.fill_row(i, &mut row);
+                for j in 0..131 {
+                    assert_eq!(row[j], base.get(i, j), "{metric:?} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn square_from_condensed_and_square_flat_roundtrip() {
+        let ds = gmm(40, 2, 3, 712);
+        let c = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let sq = c.to_square();
+        let a = SquareBands::from_condensed(&c, &opts(9, 2)).unwrap();
+        let b = SquareBands::from_square_flat(sq.flat(), 40, &opts(9, 2)).unwrap();
+        for i in 0..40 {
+            for j in 0..40 {
+                assert_eq!(a.get(i, j), c.get(i, j), "({i},{j})");
+                assert_eq!(b.get(i, j), c.get(i, j), "({i},{j})");
+            }
+        }
+        assert!(a == b);
+        assert!(SquareBands::from_square_flat(&[0.0; 5], 2, &opts(2, 1)).is_err());
+        // spill routes count the resident source toward the peak
+        assert!(a.peak_resident_bytes() >= c.resident_bytes());
+    }
+
+    #[test]
+    fn square_degenerate_geometry() {
+        // shard_rows >= n, shard_rows = 1, n <= 2, cache_shards = 1 — the
+        // band offsets, fill_row, and writer banding must all hold (the
+        // layout math is mirror-validated like the PR 3 condensed math)
+        for (n, sr, cache) in [
+            (0usize, 4usize, 1usize),
+            (1, 4, 1),
+            (1, 1, 1),
+            (2, 1, 1),
+            (2, 5, 1),
+            (5, 1, 1),
+            (5, 7, 1),
+        ] {
+            let p = Points::new(
+                (0..n * 2).map(|v| v as f64 * 0.7).collect(),
+                n,
+                2,
+            )
+            .unwrap();
+            let c = CondensedMatrix::build(&p, Metric::Euclidean);
+            let s = SquareBands::build(&p, Metric::Euclidean, &opts(sr, cache)).unwrap();
+            assert_eq!(s.bands(), if n == 0 { 0 } else { n.div_ceil(sr) });
+            assert_eq!(s.len(), n * n);
+            assert_eq!(s.is_empty(), n == 0);
+            let mut row = vec![0.0; n];
+            let mut want = vec![0.0; n];
+            for i in 0..n {
+                s.fill_row(i, &mut row);
+                c.fill_row(i, &mut want);
+                assert_eq!(row, want, "n={n} sr={sr} row {i}");
+            }
+            if n == 0 {
+                assert_eq!(s.max_value(), f64::NEG_INFINITY);
+            } else {
+                assert_eq!(s.max_value(), c.max_value(), "n={n} sr={sr}");
+            }
+            assert_eq!(s.seed_row(), c.seed_row(), "n={n} sr={sr}");
+        }
+    }
+
+    #[test]
+    fn square_writer_validates_entry_count() {
+        let mut w = SquareWriter::new(3, &opts(2, 1)).unwrap();
+        w.push(&[1.0; 4]).unwrap();
+        assert!(w.finish().is_err(), "9 entries expected, 4 given");
+        let mut w = SquareWriter::new(3, &opts(2, 1)).unwrap();
+        w.push(&[1.0; 9]).unwrap();
+        assert!(w.push(&[1.0]).is_err(), "overflow must be rejected");
+        // arbitrary push granularity reassembles the exact rows
+        let data: Vec<f64> = (0..25).map(|v| v as f64 - 7.5).collect();
+        let mut w = SquareWriter::new(5, &opts(2, 1)).unwrap();
+        for chunk in data.chunks(3) {
+            w.push(chunk).unwrap();
+        }
+        let s = w.finish().unwrap();
+        let mut row = vec![0.0; 5];
+        for i in 0..5 {
+            s.fill_row(i, &mut row);
+            assert_eq!(row, data[i * 5..(i + 1) * 5], "row {i}");
+        }
+    }
+
+    #[test]
+    fn reorder_spill_matches_the_permuted_view() {
+        use crate::dissimilarity::{DistanceStorage, PermutedView};
+        let ds = blobs(47, 2, 3, 0.4, 713);
+        let sq = SquareBands::build_blocked(&ds.points, Metric::Euclidean, &opts(6, 2))
+            .unwrap();
+        let (order, _) = crate::vat::prim::vat_order_on(&sq);
+        let r = SquareBands::reorder_spill(&sq, &order, &opts(6, 2)).unwrap();
+        let view = PermutedView::new(&sq, &order);
+        for a in 0..47 {
+            for b in 0..47 {
+                assert_eq!(r.get(a, b), view.get(a, b), "({a},{b})");
+            }
+        }
+        assert_eq!(
+            DistanceStorage::max_value(&r),
+            DistanceStorage::max_value(&view)
+        );
+        // identity and reversal permutations, and n = 1
+        let id: Vec<usize> = (0..47).collect();
+        let rid = SquareBands::reorder_spill(&sq, &id, &opts(6, 2)).unwrap();
+        assert!(rid == sq);
+        let rev: Vec<usize> = (0..47).rev().collect();
+        let rrev = SquareBands::reorder_spill(&sq, &rev, &opts(47, 1)).unwrap();
+        assert_eq!(rrev.get(0, 1), sq.get(46, 45));
+        // malformed permutations are rejected up front
+        assert!(SquareBands::reorder_spill(&sq, &id[..3], &opts(6, 2)).is_err());
+        let mut dup = id.clone();
+        dup[5] = 6; // 6 appears twice, 5 never
+        assert!(SquareBands::reorder_spill(&sq, &dup, &opts(6, 2)).is_err());
+        let mut oob = id.clone();
+        oob[5] = 47;
+        assert!(SquareBands::reorder_spill(&sq, &oob, &opts(6, 2)).is_err());
+    }
+
+    #[test]
+    fn square_fill_row_is_one_read_and_counters_track_io() {
+        let ds = blobs(60, 2, 3, 0.4, 714);
+        let s = SquareBands::build(&ds.points, Metric::Euclidean, &opts(5, 1)).unwrap();
+        assert_eq!(s.bands(), 12);
+        assert_eq!(s.band_loads(), 0, "the build never reads back");
+        assert_eq!(s.row_reads(), 0);
+        // n cold row fills = n direct reads, zero band loads
+        let mut row = vec![0.0; 60];
+        for i in 0..60 {
+            s.fill_row(i, &mut row);
+        }
+        assert_eq!(s.band_loads(), 0);
+        assert_eq!(s.row_reads(), 60);
+        // a hot band serves fill_row from cache (no extra row read)
+        let _ = s.get(7, 3); // loads band 1 (rows 5..10)
+        assert_eq!(s.band_loads(), 1);
+        s.fill_row(8, &mut row);
+        assert_eq!(s.row_reads(), 60, "hot-band fill must not hit the disk");
+        // resident bytes stay within the single-shard budget
+        assert!(s.resident_bytes() <= 5 * 60 * 8);
+        // clone shares the spill but starts cold counters
+        let twin = s.clone();
+        assert_eq!(twin.band_loads(), 0);
+        assert_eq!(twin.spill_path(), s.spill_path());
+    }
+
+    #[test]
+    fn square_vat_order_matches_condensed_property() {
+        // the Prim sweep runs unmodified on square bands and reproduces
+        // the condensed (== dense) permutation and MST
+        let mut rng = Pcg32::new(715);
+        for trial in 0..6 {
+            let n = 10 + rng.below(60) as usize;
+            let ds = gmm(n, 2, 1 + rng.below(3) as usize, 900 + trial);
+            let c = CondensedMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let sr = 1 + rng.below(16) as usize;
+            let s = SquareBands::build_blocked(
+                &ds.points,
+                Metric::Euclidean,
+                &opts(sr, 1 + rng.below(3) as usize),
+            )
+            .unwrap();
+            let (co, cm) = crate::vat::prim::vat_order_on(&c);
+            let (so, sm) = crate::vat::prim::vat_order_on(&s);
+            assert_eq!(co, so, "trial {trial} n {n} sr {sr}");
+            assert_eq!(cm, sm, "trial {trial} n {n} sr {sr}");
+        }
+    }
+
+    #[test]
+    fn nan_semantics_agree_across_all_tiers() {
+        // the seed/max NaN rule is pinned identical for dense, condensed,
+        // condensed-band sharded, and square-band sharded: `v > best_v`
+        // argmax (NaN never wins) and `f64::max` folds (NaN skipped).
+        // Fixtures mirror-validated; (entries, want_max, want_seed):
+        let nan = f64::NAN;
+        let cases: [(&[f64], f64, usize); 4] = [
+            (&[nan, 2.0, nan], 2.0, 0),  // NaN first, max in row 0
+            (&[nan, 1.0, 5.0], 5.0, 1),  // max in row 1 behind NaNs
+            (&[nan, nan, nan], 0.0, 0),  // fully poisoned: diagonal wins
+            (&[nan, -3.0, -5.0], 0.0, 0), // negatives + NaN: diagonal wins
+        ];
+        for (entries, want_max, want_seed) in cases {
+            let c = CondensedMatrix::from_flat(entries.to_vec(), 3).unwrap();
+            let dense = c.to_square();
+            let tri = ShardedTriangle::from_condensed(&c, &opts(1, 1)).unwrap();
+            let sq = SquareBands::from_condensed(&c, &opts(1, 1)).unwrap();
+            use crate::dissimilarity::DistanceStorage;
+            for (name, max, seed) in [
+                ("dense", DistanceStorage::max_value(&dense), DistanceStorage::seed_row(&dense)),
+                ("condensed", c.max_value(), c.seed_row()),
+                ("sharded", tri.max_value(), tri.seed_row()),
+                ("square", sq.max_value(), sq.seed_row()),
+            ] {
+                assert_eq!(max, want_max, "{name} max for {entries:?}");
+                assert_eq!(seed, want_seed, "{name} seed for {entries:?}");
+            }
+            // and NaN entries round-trip the spill bit-exactly
+            assert!(tri.get(0, 1).is_nan() && sq.get(0, 1).is_nan());
+        }
     }
 
     #[test]

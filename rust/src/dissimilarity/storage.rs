@@ -11,10 +11,12 @@
 //!   sweep, iVAT, sVAT, the block detector, silhouette, and the renderers
 //!   are all generic over this trait.
 //! * [`DistanceMatrix`] (dense), [`CondensedMatrix`] (n(n−1)/2 upper
-//!   triangle), and [`ShardedTriangle`] (the triangle in row-band shards
-//!   on disk with an LRU of hot shards — see [`super::shard`]) are the
-//!   three canonical implementations; [`DistanceStore`] is the
-//!   runtime-chosen sum of them that the engine layer emits.
+//!   triangle), [`ShardedTriangle`] (the triangle in row-band shards on
+//!   disk with an LRU of hot shards), and [`SquareBands`] (full square
+//!   rows per shard — 2× disk, one contiguous read per row fill; see
+//!   [`super::shard`]) are the canonical implementations;
+//!   [`DistanceStore`] is the runtime-chosen sum of them that the engine
+//!   layer emits.
 //! * [`PermutedView`] — a zero-copy view of storage under a VAT
 //!   permutation. This replaces the second full n×n `reordered` copy that
 //!   `VatResult` used to materialize: viz renders from the view directly,
@@ -26,12 +28,15 @@
 //! layout (locked by `tests/storage_parity.rs`).
 
 use super::condensed::CondensedMatrix;
-use super::shard::ShardedTriangle;
+use super::shard::{ShardedTriangle, SquareBands};
 use super::DistanceMatrix;
 use crate::error::{Error, Result};
 
 /// Which storage layout to build — the
-/// `storage = "dense" | "condensed" | "sharded"` config/CLI knob.
+/// `storage = "dense" | "condensed" | "sharded" | "sharded-square"`
+/// config/CLI knob. Prefer `analysis::StoragePolicy::Auto` over pinning a
+/// sharded variant by hand: the policy resolver owns the
+/// condensed-band / square-band / reorder-then-spill choice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum StorageKind {
     /// Full n×n flat matrix (the paper's §3.3 layout).
@@ -39,10 +44,16 @@ pub enum StorageKind {
     Dense,
     /// Upper-triangle n(n−1)/2 buffer — ~half the resident bytes.
     Condensed,
-    /// Out-of-core: the triangle in row-band shards on disk with an LRU of
-    /// hot shards — O(`cache_shards`·`shard_rows`·n) resident bytes (see
-    /// [`super::shard`]).
+    /// Out-of-core: the condensed triangle in row-band shards on disk with
+    /// an LRU of hot shards — O(`cache_shards`·`shard_rows`·n) resident
+    /// bytes at 1× triangle disk, but row fills gather their column head
+    /// through every earlier band (see [`super::shard`]).
     Sharded,
+    /// Out-of-core: FULL square rows per band — 2× the triangle's disk,
+    /// same resident bound, and `fill_row` is one contiguous read, so the
+    /// VAT sweep streams the spill file once instead of re-reading it
+    /// ≈ bands/2 times (see [`super::shard::SquareBands`]).
+    ShardedSquare,
 }
 
 impl StorageKind {
@@ -52,8 +63,9 @@ impl StorageKind {
             "dense" => Ok(StorageKind::Dense),
             "condensed" => Ok(StorageKind::Condensed),
             "sharded" => Ok(StorageKind::Sharded),
+            "sharded-square" => Ok(StorageKind::ShardedSquare),
             other => Err(Error::InvalidArg(format!(
-                "unknown storage {other} (expected dense|condensed|sharded)"
+                "unknown storage {other} (expected dense|condensed|sharded|sharded-square)"
             ))),
         }
     }
@@ -64,6 +76,7 @@ impl StorageKind {
             StorageKind::Dense => "dense",
             StorageKind::Condensed => "condensed",
             StorageKind::Sharded => "sharded",
+            StorageKind::ShardedSquare => "sharded-square",
         }
     }
 }
@@ -208,17 +221,21 @@ impl DistanceStorage for CondensedMatrix {
     }
 }
 
-/// The engine layer's output: dense, condensed, or sharded distance
-/// storage, chosen at runtime by the `storage` config knob
-/// (see `DistanceEngine::build_storage`).
+/// The engine layer's output: dense, condensed, or one of the two sharded
+/// distance layouts, chosen at runtime by the `storage` config knob or the
+/// `analysis::StoragePolicy` resolver (see `DistanceEngine::build_storage`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum DistanceStore {
     /// Full n×n storage.
     Dense(DistanceMatrix),
     /// Upper-triangle storage.
     Condensed(CondensedMatrix),
-    /// Out-of-core row-band shards (triangle on disk, LRU of hot shards).
+    /// Out-of-core condensed row-band shards (triangle on disk, LRU of hot
+    /// shards).
     Sharded(ShardedTriangle),
+    /// Out-of-core square-form row bands (full rows on disk — one
+    /// contiguous read per row fill, band-sequential row-major scans).
+    ShardedSquare(SquareBands),
 }
 
 impl DistanceStore {
@@ -228,6 +245,7 @@ impl DistanceStore {
             DistanceStore::Dense(_) => StorageKind::Dense,
             DistanceStore::Condensed(_) => StorageKind::Condensed,
             DistanceStore::Sharded(_) => StorageKind::Sharded,
+            DistanceStore::ShardedSquare(_) => StorageKind::ShardedSquare,
         }
     }
 
@@ -237,6 +255,7 @@ impl DistanceStore {
             DistanceStore::Dense(m) => m.n(),
             DistanceStore::Condensed(c) => c.n(),
             DistanceStore::Sharded(s) => s.n(),
+            DistanceStore::ShardedSquare(s) => s.n(),
         }
     }
 
@@ -246,6 +265,7 @@ impl DistanceStore {
             DistanceStore::Dense(m) => m.get(i, j),
             DistanceStore::Condensed(c) => c.get(i, j),
             DistanceStore::Sharded(s) => s.get(i, j),
+            DistanceStore::ShardedSquare(s) => s.get(i, j),
         }
     }
 
@@ -255,16 +275,18 @@ impl DistanceStore {
             DistanceStore::Dense(m) => m.max_value(),
             DistanceStore::Condensed(c) => c.max_value(),
             DistanceStore::Sharded(s) => s.max_value(),
+            DistanceStore::ShardedSquare(s) => s.max_value(),
         }
     }
 
-    /// Resident distance-buffer bytes (for sharded storage: the LRU's
-    /// current occupancy, not the on-disk triangle).
+    /// Resident distance-buffer bytes (for the sharded layouts: the LRU's
+    /// current occupancy, not the on-disk file).
     pub fn distance_bytes(&self) -> usize {
         match self {
             DistanceStore::Dense(m) => m.resident_bytes(),
             DistanceStore::Condensed(c) => c.resident_bytes(),
             DistanceStore::Sharded(s) => s.resident_bytes(),
+            DistanceStore::ShardedSquare(s) => s.resident_bytes(),
         }
     }
 
@@ -284,7 +306,7 @@ impl DistanceStore {
         }
     }
 
-    /// Borrow the sharded triangle if this store is sharded.
+    /// Borrow the sharded triangle if this store is condensed-band sharded.
     pub fn as_sharded(&self) -> Option<&ShardedTriangle> {
         match self {
             DistanceStore::Sharded(s) => Some(s),
@@ -292,13 +314,22 @@ impl DistanceStore {
         }
     }
 
-    /// Materialize dense square storage (clone for dense, expand for
-    /// condensed/sharded) — interop escape hatch.
+    /// Borrow the square-band store if this store is square-band sharded.
+    pub fn as_sharded_square(&self) -> Option<&SquareBands> {
+        match self {
+            DistanceStore::ShardedSquare(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Materialize dense square storage (clone for dense, expand for the
+    /// other layouts) — interop escape hatch.
     pub fn to_square(&self) -> DistanceMatrix {
         match self {
             DistanceStore::Dense(m) => m.clone(),
             DistanceStore::Condensed(c) => c.to_square(),
             DistanceStore::Sharded(s) => s.to_square(),
+            DistanceStore::ShardedSquare(s) => s.to_square(),
         }
     }
 }
@@ -321,6 +352,7 @@ impl DistanceStorage for DistanceStore {
             DistanceStore::Dense(m) => DistanceStorage::fill_row(m, i, out),
             DistanceStore::Condensed(c) => CondensedMatrix::fill_row(c, i, out),
             DistanceStore::Sharded(s) => ShardedTriangle::fill_row(s, i, out),
+            DistanceStore::ShardedSquare(s) => SquareBands::fill_row(s, i, out),
         }
     }
 
@@ -340,6 +372,7 @@ impl DistanceStorage for DistanceStore {
             DistanceStore::Dense(m) => DistanceStorage::seed_row(m),
             DistanceStore::Condensed(c) => CondensedMatrix::seed_row(c),
             DistanceStore::Sharded(s) => ShardedTriangle::seed_row(s),
+            DistanceStore::ShardedSquare(s) => SquareBands::seed_row(s),
         }
     }
 
@@ -363,6 +396,12 @@ impl From<CondensedMatrix> for DistanceStore {
 impl From<ShardedTriangle> for DistanceStore {
     fn from(s: ShardedTriangle) -> Self {
         DistanceStore::Sharded(s)
+    }
+}
+
+impl From<SquareBands> for DistanceStore {
+    fn from(s: SquareBands) -> Self {
+        DistanceStore::ShardedSquare(s)
     }
 }
 
@@ -411,13 +450,14 @@ impl<'a, S: DistanceStorage> PermutedView<'a, S> {
     /// Materialize the dense reordered matrix — the explicit escape hatch
     /// for callers that genuinely need `R*` as owned square storage
     /// (allocates n² f64; everything in-crate renders from the view).
+    /// Gathers row by row through [`DistanceStorage::fill_row`], so a
+    /// batched backing row fill serves each display row instead of n
+    /// per-element lookups (values identical either way).
     pub fn materialize(&self) -> DistanceMatrix {
         let n = self.order.len();
         let mut m = DistanceMatrix::zeros(n);
-        for (a, &ia) in self.order.iter().enumerate() {
-            for (b, &ib) in self.order.iter().enumerate() {
-                m.set(a, b, self.storage.get(ia, ib));
-            }
+        for a in 0..n {
+            self.fill_row(a, &mut m.flat_mut()[a * n..(a + 1) * n]);
         }
         m
     }
@@ -434,6 +474,31 @@ impl<'a, S: DistanceStorage> DistanceStorage for PermutedView<'a, S> {
 
     fn kind(&self) -> StorageKind {
         self.storage.kind()
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        // one backing row + an in-RAM gather, instead of the trait
+        // default's per-element `get` — on a sharded backing the default
+        // costs one band lookup per pixel; this batches the whole row into
+        // a single per-source-band pass (values identical: the backing's
+        // rows are element-equal to its gets, pinned by the storage tests,
+        // and the gather only permutes the copies). Backings that lend
+        // rows zero-copy skip the scratch buffer entirely.
+        debug_assert_eq!(out.len(), self.order.len());
+        match self.storage.row_slice(self.order[i]) {
+            Some(row) => {
+                for (slot, &ob) in out.iter_mut().zip(self.order.iter()) {
+                    *slot = row[ob];
+                }
+            }
+            None => {
+                let mut buf = vec![0.0f64; self.storage.n()];
+                self.storage.fill_row(self.order[i], &mut buf);
+                for (slot, &ob) in out.iter_mut().zip(self.order.iter()) {
+                    *slot = buf[ob];
+                }
+            }
+        }
     }
 
     fn max_value(&self) -> f64 {
@@ -463,9 +528,14 @@ mod tests {
             StorageKind::parse("Sharded").unwrap(),
             StorageKind::Sharded
         );
+        assert_eq!(
+            StorageKind::parse("Sharded-Square").unwrap(),
+            StorageKind::ShardedSquare
+        );
         assert!(StorageKind::parse("sparse").is_err());
         assert_eq!(StorageKind::Condensed.as_str(), "condensed");
         assert_eq!(StorageKind::Sharded.as_str(), "sharded");
+        assert_eq!(StorageKind::ShardedSquare.as_str(), "sharded-square");
         assert_eq!(StorageKind::default(), StorageKind::Dense);
     }
 
@@ -531,6 +601,43 @@ mod tests {
         let gathered = dense.reorder(&order).unwrap();
         assert_eq!(mat, gathered);
         assert_eq!(view.max_value(), dense.max_value());
+    }
+
+    #[test]
+    fn permuted_view_fill_row_matches_the_per_element_default() {
+        // regression (IO-amplification satellite): the view used to fall
+        // back to the trait default — one backing `get` per element, i.e.
+        // one band lookup per pixel on a sharded backing. The gather-based
+        // override must be bitwise identical to that default on every
+        // backing layout.
+        use crate::dissimilarity::shard::{ShardOptions, ShardedTriangle, SquareBands};
+        let ds = blobs(31, 2, 2, 0.4, 905);
+        let dense = DistanceMatrix::build_naive(&ds.points, Metric::Euclidean);
+        let cond = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let sopts = ShardOptions {
+            shard_rows: 4,
+            cache_shards: 1,
+            spill_dir: None,
+        };
+        let tri = ShardedTriangle::build(&ds.points, Metric::Euclidean, &sopts).unwrap();
+        let sq = SquareBands::build(&ds.points, Metric::Euclidean, &sopts).unwrap();
+        let order: Vec<usize> = (0..31).map(|i| (i * 7) % 31).collect();
+        fn assert_rows<S: DistanceStorage>(s: &S, order: &[usize], name: &str) {
+            let view = PermutedView::new(s, order);
+            let n = order.len();
+            let mut got = vec![0.0; n];
+            for a in 0..n {
+                view.fill_row(a, &mut got);
+                for b in 0..n {
+                    // the trait-default path, element by element
+                    assert_eq!(got[b], view.get(a, b), "{name} ({a},{b})");
+                }
+            }
+        }
+        assert_rows(&dense, &order, "dense");
+        assert_rows(&cond, &order, "condensed");
+        assert_rows(&tri, &order, "sharded");
+        assert_rows(&sq, &order, "sharded-square");
     }
 
     #[test]

@@ -36,7 +36,7 @@ USAGE:
   fast-vat vat      [--input data.csv | --dataset NAME]
                     [--engine naive|blocked|parallel|condensed|xla|xla-mm]
                     [--metric euclidean|l1|linf|cosine|minkowski:P|...]
-                    [--storage dense|condensed|sharded | --budget-mb N]
+                    [--storage dense|condensed|sharded|sharded-square | --budget-mb N]
                     [--sample N] [--ivat]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
@@ -44,10 +44,10 @@ USAGE:
   fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
                     [--k N | --eps F] [--min-pts N]
   fast-vat pipeline [--input data.csv | --dataset NAME] [--engine ...]
-                    [--storage dense|condensed|sharded] [--shard-rows N]
+                    [--storage dense|condensed|sharded|sharded-square] [--shard-rows N]
                     [--cache-shards N] [--spill-dir DIR]
   fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
-                    [--metric NAME] [--storage dense|condensed|sharded]
+                    [--metric NAME] [--storage dense|condensed|sharded|sharded-square]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
   fast-vat info     [--artifacts DIR]
 
@@ -55,10 +55,13 @@ STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
   dense bytes) and renders through a zero-copy permuted view; sharded
   spills the triangle to row-band shard files (--spill-dir, default the OS
   temp dir) and keeps only --cache-shards hot shards of --shard-rows rows
-  in RAM. Output is bit-identical across all three. --budget-mb hands the
-  choice to the storage policy: the cheapest tier whose resident distance
-  bytes fit the budget is picked per request. --sample N escalates to sVAT
-  (maximin sampling) above N points.
+  in RAM; sharded-square spills FULL square rows (2x disk, one contiguous
+  read per row fill — the out-of-core layout that streams instead of
+  thrashing). Output is bit-identical across all four. --budget-mb hands
+  the choice to the storage policy: the cheapest tier whose resident
+  distance bytes fit the budget is picked per request (spills resolve to
+  square bands, plus a reorder-then-spill pass when the image is re-read).
+  --sample N escalates to sVAT (maximin sampling) above N points.
 
 DATASETS: iris, blobs, moons, circles, gmm, spotify, mall, uniform
   (generator datasets accept --n and --seed)

@@ -253,8 +253,22 @@ impl BlockDetector {
         ivat_blocks: &[Block],
         storage: &S,
     ) -> String {
+        self.insight_from_image(&v.view(storage), ivat_blocks)
+    }
+
+    /// [`BlockDetector::insight_with`] from an already-reordered raw VAT
+    /// image (the zero-copy view, or the `R*` square-band spill the
+    /// analysis executor writes after the sweep — identical values either
+    /// way, so the insight string is identical; the spill just reads its
+    /// diagonal band band-sequentially instead of thrashing a sharded
+    /// backing's LRU).
+    pub fn insight_from_image<S: DistanceStorage>(
+        &self,
+        reordered: &S,
+        ivat_blocks: &[Block],
+    ) -> String {
         let k = ivat_blocks.len();
-        let dark = crate::viz::diagonal_darkness(&v.view(storage), 8);
+        let dark = crate::viz::diagonal_darkness(reordered, 8);
         match (k, dark) {
             (1, _) => "No clear structure".to_string(),
             (k, d) if d > 0.85 => format!("Clear clusters (k~{k})"),

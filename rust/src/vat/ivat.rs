@@ -17,7 +17,7 @@
 
 use super::VatResult;
 use crate::dissimilarity::condensed::CondensedMatrix;
-use crate::dissimilarity::shard::ShardedWriter;
+use crate::dissimilarity::shard::{ShardedWriter, SquareWriter};
 use crate::dissimilarity::{
     DistanceMatrix, DistanceStore, ShardOptions, StorageKind,
 };
@@ -171,6 +171,21 @@ pub(crate) fn transform(
                 writer.push(&row_buf[row + 1..])?;
             }
             DistanceStore::Sharded(writer.finish()?)
+        }
+        StorageKind::ShardedSquare => {
+            // the DFS fills the FULL display row (zero diagonal included),
+            // and display order IS row-major order for the transform — so
+            // whole rows stream straight into the square band writer, and
+            // downstream rendering / detection read the spilled transform
+            // band-sequentially. Entries are bitwise identical to every
+            // other arm: path maxima are order-independent exact folds.
+            let mut writer = SquareWriter::new(n, shard)?;
+            let mut row_buf = vec![0.0f64; n];
+            for row in 0..n {
+                path_max_row(row, &a, &mut stack, &mut seen, &mut row_buf);
+                writer.push(&row_buf)?;
+            }
+            DistanceStore::ShardedSquare(writer.finish()?)
         }
     };
     Ok(IvatResult {

@@ -13,7 +13,7 @@
 
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
-use crate::dissimilarity::shard::ShardedTriangle;
+use crate::dissimilarity::shard::{ShardedTriangle, SquareBands};
 use crate::dissimilarity::{
     DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
 };
@@ -168,6 +168,9 @@ fn svat_impl(
         StorageKind::Sharded => DistanceStore::Sharded(ShardedTriangle::build_blocked(
             &sub, metric, shard,
         )?),
+        StorageKind::ShardedSquare => DistanceStore::ShardedSquare(
+            SquareBands::build_blocked(&sub, metric, shard)?,
+        ),
     };
     let v = vat(&storage);
     let assignment = assign_nearest(points, &sample, metric);

@@ -42,6 +42,7 @@ fn kinds() -> Vec<StorageKind> {
         StorageKind::Dense,
         StorageKind::Condensed,
         StorageKind::Sharded,
+        StorageKind::ShardedSquare,
     ]
 }
 
@@ -211,11 +212,12 @@ fn auto_policy_output_matches_every_pinned_tier() {
         })
         .collect();
     // three budgets that resolve to the three tiers for n = 130:
-    // dense = 135_200 B, condensed = 67_080 B
+    // dense = 135_200 B, condensed = 67_080 B; the spill budget resolves
+    // to square-form bands (the Auto sharded arm's layout)
     for (budget, want) in [
         (200_000usize, StorageKind::Dense),
         (70_000, StorageKind::Condensed),
-        (20_000, StorageKind::Sharded),
+        (20_000, StorageKind::ShardedSquare),
     ] {
         let auto = Analysis::of(ds.points.clone())
             .storage(StoragePolicy::Auto {

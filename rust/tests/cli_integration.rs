@@ -90,6 +90,16 @@ fn sharded_storage_produces_identical_pgm_bytes() {
     let bytes_d = std::fs::read(&dense).unwrap();
     let bytes_s = std::fs::read(&shard).unwrap();
     assert_eq!(bytes_d, bytes_s, "sharded tier changed the rendered image");
+    // the square-band layout renders the same bytes too
+    let square = std::env::temp_dir().join("fastvat_cli_square.pgm");
+    let out_q = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--storage", "sharded-square",
+        "--shard-rows", "16", "--cache-shards", "2",
+        "--out", square.to_str().unwrap(),
+    ]);
+    assert!(out_q.contains("storage=sharded-square"), "{out_q}");
+    let bytes_q = std::fs::read(&square).unwrap();
+    assert_eq!(bytes_d, bytes_q, "square-band tier changed the rendered image");
 }
 
 #[test]

@@ -138,6 +138,7 @@ fn ivat_pgm_matches_golden_in_every_storage_layout() {
         StorageKind::Dense,
         StorageKind::Condensed,
         StorageKind::Sharded,
+        StorageKind::ShardedSquare,
     ] {
         let iv = ivat_with(&v, kind).unwrap();
         let path = std::env::temp_dir().join(format!(

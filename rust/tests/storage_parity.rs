@@ -19,6 +19,7 @@
 //! distance bytes must stay ≤ 2·shard_rows·n·8 (the LRU budget with
 //! `cache_shards = 2`), audited via `bench_util::FootprintAudit`.
 
+use fast_vat::analysis::{Analysis, StoragePolicy};
 use fast_vat::bench_util::FootprintAudit;
 use fast_vat::data::generators::{blobs, gmm, moons};
 use fast_vat::data::scale::Scaler;
@@ -26,7 +27,9 @@ use fast_vat::data::Dataset;
 use fast_vat::dissimilarity::engine::{
     BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
 };
-use fast_vat::dissimilarity::{DistanceStorage, Metric, ShardOptions, StorageKind};
+use fast_vat::dissimilarity::{
+    DistanceStorage, Metric, ShardOptions, SquareBands, StorageKind,
+};
 use fast_vat::runtime::SimulatedXlaEngine;
 use fast_vat::vat::blocks::BlockDetector;
 use fast_vat::vat::ivat::ivat_with;
@@ -98,14 +101,20 @@ fn vat_permutation_bitwise_identical_across_storages() {
                     .build_storage(&ds.points, metric, StorageKind::Condensed)
                     .unwrap();
                 let shard = e.build_sharded(&ds.points, metric, &shard_opts).unwrap();
+                let square = e
+                    .build_sharded_square(&ds.points, metric, &shard_opts)
+                    .unwrap();
                 let vd = vat(&dense);
                 let vc = vat(&cond);
                 let vs = vat(&shard);
+                let vq = vat(&square);
                 let ctx = format!("{} on {} / {metric:?}", e.name(), ds.name);
                 assert_eq!(vd.order, vc.order, "condensed order diverged: {ctx}");
                 assert_eq!(vd.mst, vc.mst, "condensed mst diverged: {ctx}");
                 assert_eq!(vd.order, vs.order, "sharded order diverged: {ctx}");
                 assert_eq!(vd.mst, vs.mst, "sharded mst diverged: {ctx}");
+                assert_eq!(vd.order, vq.order, "square-band order diverged: {ctx}");
+                assert_eq!(vd.mst, vq.mst, "square-band mst diverged: {ctx}");
             }
         }
     }
@@ -129,9 +138,13 @@ fn vat_and_ivat_pixels_identical_across_storages() {
                 .build_storage(&ds.points, metric, StorageKind::Condensed)
                 .unwrap();
             let shard = e.build_sharded(&ds.points, metric, &shard_opts).unwrap();
+            let square = e
+                .build_sharded_square(&ds.points, metric, &shard_opts)
+                .unwrap();
             let vd = vat(&dense);
             let vc = vat(&cond);
             let vs = vat(&shard);
+            let vq = vat(&square);
             let ctx = format!("{} / {metric:?}", ds.name);
             let dense_pixels = render(&vd.view(&dense)).pixels;
             assert_eq!(
@@ -143,6 +156,15 @@ fn vat_and_ivat_pixels_identical_across_storages() {
                 dense_pixels,
                 render(&vs.view(&shard)).pixels,
                 "sharded VAT pixels diverged: {ctx}"
+            );
+            // the square tier renders through the display-ordered R* spill
+            // — the access pattern the layout exists for — and must still
+            // be byte-identical to the dense view render
+            let rstar = SquareBands::reorder_spill(&square, &vq.order, &shard_opts).unwrap();
+            assert_eq!(
+                dense_pixels,
+                render(&rstar).pixels,
+                "square-band R* pixels diverged: {ctx}"
             );
             let dense_ivat =
                 render(&ivat_with(&vd, StorageKind::Dense).unwrap().transformed).pixels;
@@ -160,6 +182,16 @@ fn vat_and_ivat_pixels_identical_across_storages() {
                 )
                 .pixels,
                 "sharded iVAT pixels diverged: {ctx}"
+            );
+            assert_eq!(
+                dense_ivat,
+                render(
+                    &ivat_with_opts(&vq, StorageKind::ShardedSquare, &shard_opts)
+                        .unwrap()
+                        .transformed
+                )
+                .pixels,
+                "square-band iVAT pixels diverged: {ctx}"
             );
         }
     }
@@ -370,6 +402,191 @@ fn sharded_vat_job_peaks_within_two_shards_of_ram() {
             iv_blocks,
             det.detect(&ivat_with(&vd, StorageKind::Dense).unwrap().transformed),
             "n={n}"
+        );
+    }
+}
+
+#[test]
+fn band_load_audit_square_tier_streams_the_file_not_bands_squared() {
+    // THE IO-amplification fix, asserted via the with_band counters: on the
+    // square-band tier the Prim sweep and a full permuted render each load
+    // every band a constant number of times — for ANY cache_shards
+    // (FAST_VAT_TEST_CACHE_SHARDS=1 runs this in the thrash configuration,
+    // where the condensed-band tier demonstrably re-reads ~bands/2 × the
+    // file).
+    let ds = blobs(160, 2, 3, 0.4, 7400);
+    let cache_shards = test_shard_opts().cache_shards; // CI forces 1 here
+    let opts = ShardOptions {
+        shard_rows: 10,
+        cache_shards,
+        spill_dir: None,
+    };
+    let e = BlockedEngine;
+    let sq = e
+        .build_sharded_square(&ds.points, Metric::Euclidean, &opts)
+        .unwrap();
+    let bands = sq.bands();
+    assert_eq!(bands, 16);
+    assert_eq!(sq.band_loads(), 0, "the native build never reads back");
+
+    // Prim sweep: the seed scan streams each band exactly once; every row
+    // fill is one direct row read (or a hot-band copy), never a band load
+    let vq = vat(&sq);
+    assert_eq!(
+        sq.band_loads(),
+        bands,
+        "the sweep must load every band exactly once"
+    );
+    assert!(
+        sq.row_reads() <= 160,
+        "each row must be read at most once: {}",
+        sq.row_reads()
+    );
+
+    // reorder-then-spill: one sequential pass over the source rows
+    let rstar = SquareBands::reorder_spill(&sq, &vq.order, &opts).unwrap();
+    assert_eq!(sq.band_loads(), bands, "the respill adds no band loads");
+    assert!(
+        sq.row_reads() <= 2 * 160,
+        "the respill reads each row at most once more: {}",
+        sq.row_reads()
+    );
+
+    // a full render of R* (max pass + n² row-major pixels) is at most two
+    // sequential sweeps over the bands — O(1) loads per band even with a
+    // single hot shard
+    let pixels = render(&rstar).pixels;
+    assert!(
+        rstar.band_loads() <= 2 * bands,
+        "render loaded {} bands (> 2·{bands})",
+        rstar.band_loads()
+    );
+    assert_eq!(rstar.row_reads(), 0);
+
+    let mut audit = FootprintAudit::new();
+    audit.record("square sweep band loads", sq.band_loads());
+    audit.record("square sweep+respill row reads", sq.row_reads());
+    audit.record("R* render band loads", rstar.band_loads());
+
+    // output identical to the dense pipeline throughout
+    let dense = e
+        .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+        .unwrap();
+    let vd = vat(&dense);
+    assert_eq!(vd.order, vq.order);
+    assert_eq!(pixels, render(&vd.view(&dense)).pixels);
+
+    // and the counter shows exactly what the fix killed: the same sweep on
+    // the condensed-band tier with one hot shard gathers each row's column
+    // head through every earlier band — ≥ Σ_i floor((i−1)/10)+1 = 1344
+    // loads (mirror-validated lower bound) versus the square tier's 16
+    let tri = e
+        .build_sharded(
+            &ds.points,
+            Metric::Euclidean,
+            &ShardOptions {
+                shard_rows: 10,
+                cache_shards: 1,
+                spill_dir: None,
+            },
+        )
+        .unwrap();
+    let vt = vat(&tri);
+    assert_eq!(vt.order, vq.order);
+    assert!(
+        tri.band_loads() > 40 * bands,
+        "condensed-band sweep loaded only {} bands — the amplification this \
+         test documents has vanished, update the comparison\n{}",
+        tri.band_loads(),
+        audit.report()
+    );
+}
+
+#[test]
+#[allow(deprecated)] // pins the deprecated shim's square emission bitwise
+fn square_band_tier_bitwise_identical_to_condensed_band_across_engines() {
+    // the acceptance pin: VAT order, MST, iVAT entries, and rendered PGM
+    // bytes from the square-band tier (reading the raw image through the
+    // display-ordered R* spill) equal the condensed-band tier's bit for
+    // bit, for every engine × metric
+    let shard_opts = test_shard_opts();
+    let ds = blobs(130, 2, 3, 0.5, 7500);
+    for metric in metrics() {
+        for e in engines() {
+            let ctx = format!("{} / {metric:?}", e.name());
+            let tri = e.build_sharded(&ds.points, metric, &shard_opts).unwrap();
+            let vt = vat(&tri);
+            let sq = e
+                .build_sharded_square(&ds.points, metric, &shard_opts)
+                .unwrap();
+            let vq = vat(&sq);
+            assert_eq!(vt.order, vq.order, "{ctx}");
+            assert_eq!(vt.mst, vq.mst, "{ctx}");
+            let iv_t = ivat_with_opts(&vt, StorageKind::Sharded, &shard_opts).unwrap();
+            let iv_q =
+                ivat_with_opts(&vq, StorageKind::ShardedSquare, &shard_opts).unwrap();
+            for i in 0..130 {
+                for j in 0..130 {
+                    assert_eq!(
+                        iv_t.transformed.get(i, j),
+                        iv_q.transformed.get(i, j),
+                        "{ctx} ivat ({i},{j})"
+                    );
+                }
+            }
+            let rstar = SquareBands::reorder_spill(&sq, &vq.order, &shard_opts).unwrap();
+            assert_eq!(
+                render(&vt.view(&tri)).pixels,
+                render(&rstar).pixels,
+                "{ctx} rendered bytes diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_policy_resolves_square_plus_respill_and_matches_pinned_tiers() {
+    // no per-surface knob anywhere: a RAM budget plus the requested stages
+    // resolve to square bands + reorder-then-spill, and the report is
+    // bitwise identical to the dense and pinned condensed-band runs
+    let ds = blobs(130, 2, 3, 0.5, 7501);
+    let run = |storage: StoragePolicy| {
+        Analysis::of(ds.points.clone())
+            .storage(storage)
+            .shard(test_shard_opts())
+            .detect_blocks(BlockDetector::default())
+            .insight(true)
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap()
+    };
+    // n=130: dense 135_200 B, condensed 67_080 B -> 20_000 B must spill
+    let auto = run(StoragePolicy::Auto {
+        memory_budget_bytes: 20_000,
+    });
+    assert_eq!(auto.plan.storage, StorageKind::ShardedSquare);
+    assert!(
+        auto.plan.reorder_spill,
+        "raw render/detect/insight are permuted access: the resolver must respill"
+    );
+    let dense = run(StoragePolicy::Fixed(StorageKind::Dense));
+    let pinned_tri = run(StoragePolicy::Fixed(StorageKind::Sharded));
+    assert!(!dense.plan.reorder_spill, "in-RAM layouts never respill");
+    assert!(
+        pinned_tri.plan.reorder_spill,
+        "the respill bit is layout × access: pinned spilled layouts get it too"
+    );
+    for (name, other) in [("dense", &dense), ("condensed-band", &pinned_tri)] {
+        assert_eq!(auto.vat.order, other.vat.order, "{name}");
+        assert_eq!(auto.vat.mst, other.vat.mst, "{name}");
+        assert_eq!(auto.blocks, other.blocks, "{name}");
+        assert_eq!(auto.insight, other.insight, "{name}");
+        assert_eq!(
+            auto.image.as_ref().unwrap().pixels,
+            other.image.as_ref().unwrap().pixels,
+            "{name}"
         );
     }
 }
