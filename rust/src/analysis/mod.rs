@@ -67,7 +67,7 @@ use crate::error::{Error, Result};
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::vat::blocks::BlockDetector;
 use crate::vat::svat::{assign_nearest, maximin_sample};
-use crate::vat::{ivat, vat};
+use crate::vat::{ivat, vat_with, OrderingStrategy};
 use crate::viz::render;
 
 /// What the plan assesses: raw points (the engine builds distances) or
@@ -98,6 +98,7 @@ pub struct Analysis {
     hopkins_params: HopkinsParams,
     render: bool,
     keep_matrix: bool,
+    ordering: OrderingStrategy,
 }
 
 impl Analysis {
@@ -117,6 +118,7 @@ impl Analysis {
             hopkins_params: HopkinsParams::default(),
             render: false,
             keep_matrix: false,
+            ordering: OrderingStrategy::Auto,
         }
     }
 
@@ -224,6 +226,17 @@ impl Analysis {
     /// bytes; everything else reads the zero-copy view).
     pub fn keep_matrix(mut self, yes: bool) -> Self {
         self.keep_matrix = yes;
+        self
+    }
+
+    /// MST ordering strategy for the VAT stage (default
+    /// [`OrderingStrategy::Auto`]: parallel Borůvka above the size cutoff,
+    /// Prim below). Every strategy yields the bitwise-identical
+    /// permutation, MST, iVAT transform and rendered bytes — the knob only
+    /// moves wall-clock; the resolution is echoed in
+    /// [`ResolvedPlan::ordering`].
+    pub fn ordering(mut self, strategy: OrderingStrategy) -> Self {
+        self.ordering = strategy;
         self
     }
 
@@ -351,6 +364,7 @@ impl AnalysisPlan {
                     n_input: s.n(),
                     n_assessed: s.n(),
                     engine: engine.map(|e| e.name()).unwrap_or("precomputed"),
+                    ordering: spec.ordering.resolve(s.n()).as_str(),
                 };
                 (s.clone(), resolved, None, None)
             }
@@ -421,14 +435,17 @@ impl AnalysisPlan {
                     n_input,
                     n_assessed,
                     engine: engine.name(),
+                    ordering: spec.ordering.resolve(n_assessed).as_str(),
                 };
                 (Arc::new(built), resolved, info, Some(z))
             }
         };
 
-        // stage 2: VAT ordering
+        // stage 2: VAT ordering — the resolved strategy (echoed in
+        // `resolved.ordering`) only changes the wall-clock path; Prim and
+        // Borůvka produce bitwise-identical results
         let t = Instant::now();
-        let v = vat(store.as_ref());
+        let v = vat_with(store.as_ref(), spec.ordering);
         timings.vat_s = t.elapsed().as_secs_f64();
 
         // stage 2½: reorder-then-spill — when the resolver asked for it,
@@ -553,6 +570,7 @@ mod tests {
     use crate::dissimilarity::engine::BlockedEngine;
     use crate::dissimilarity::{DistanceMatrix, DistanceStorage, StorageKind};
     use crate::vat::ivat::ivat_with;
+    use crate::vat::vat;
 
     #[test]
     fn builder_validates_up_front() {
@@ -718,6 +736,56 @@ mod tests {
             .unwrap();
         assert_eq!(big.vat.order, dense.vat.order);
         assert_eq!(big.vat.mst, dense.vat.mst);
+    }
+
+    #[test]
+    fn ordering_strategy_is_echoed_and_output_invariant() {
+        let ds = blobs(90, 2, 3, 0.4, 12);
+        // Auto resolves to prim below the cutoff and says so in the echo
+        let auto = Analysis::of(ds.points.clone())
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(auto.plan.ordering, "prim");
+        // explicit strategies echo themselves and agree bitwise
+        let prim = Analysis::of(ds.points.clone())
+            .ordering(OrderingStrategy::Prim)
+            .ivat(true)
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        let boruvka = Analysis::of(ds.points.clone())
+            .ordering(OrderingStrategy::Boruvka)
+            .ivat(true)
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert_eq!(prim.plan.ordering, "prim");
+        assert_eq!(boruvka.plan.ordering, "boruvka");
+        assert_eq!(prim.vat.order, boruvka.vat.order);
+        assert_eq!(prim.vat.mst, boruvka.vat.mst);
+        assert_eq!(prim.image.as_ref().unwrap().pixels, boruvka.image.as_ref().unwrap().pixels);
+        // storage-input plans carry the echo too
+        let store = Arc::new(
+            BlockedEngine
+                .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
+                .unwrap(),
+        );
+        let expect = vat(store.as_ref());
+        let over = Analysis::over(store)
+            .ordering(OrderingStrategy::Boruvka)
+            .plan()
+            .unwrap()
+            .execute_precomputed()
+            .unwrap();
+        assert_eq!(over.plan.ordering, "boruvka");
+        assert_eq!(over.vat.order, expect.order);
+        assert_eq!(over.vat.mst, expect.mst);
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct ResolvedPlan {
     /// Engine that built the distances (`"precomputed"` for storage-input
     /// plans executed without an engine).
     pub engine: &'static str,
+    /// The MST ordering strategy the VAT stage ran (`"prim"` or
+    /// `"boruvka"` — an `Auto` request echoes its resolution). Output is
+    /// bitwise identical either way; the echo records the wall-clock path.
+    pub ordering: &'static str,
 }
 
 /// Wall-clock seconds per executed stage (0.0 for stages not in the plan).
@@ -47,7 +51,8 @@ pub struct StageTimings {
     pub sample_s: f64,
     /// Distance-storage build.
     pub distance_s: f64,
-    /// VAT Prim sweep.
+    /// VAT ordering sweep (Prim or parallel Borůvka, per the resolved
+    /// `ordering` echo).
     pub vat_s: f64,
     /// Reorder-then-spill pass (when the resolver scheduled it).
     pub respill_s: f64,

@@ -6,6 +6,12 @@
 
 use std::time::Instant;
 
+use crate::data::generators;
+use crate::dissimilarity::engine::{DistanceEngine, ParallelEngine};
+use crate::dissimilarity::{Metric, StorageKind};
+use crate::error::Result;
+use crate::vat::{boruvka, prim};
+
 /// Timing summary of repeated runs.
 #[derive(Debug, Clone)]
 pub struct Timing {
@@ -114,6 +120,160 @@ impl FootprintAudit {
     }
 }
 
+/// One measured cell of the ordering benchmark grid: a strategy at a
+/// thread count over one dataset size.
+#[derive(Debug, Clone)]
+pub struct OrderingBenchRow {
+    /// Points in the dataset.
+    pub n: usize,
+    /// `"prim"` or `"boruvka"`.
+    pub strategy: &'static str,
+    /// Worker threads the ordering ran with (1 for the sequential Prim
+    /// sweep and the single-threaded Borůvka cell).
+    pub threads: usize,
+    /// Wall-clock statistics over the repeated ordering sweeps.
+    pub timing: Timing,
+    /// Whether the Borůvka run routed through the sequential fallback
+    /// (always `false` for Prim rows; a fallback row times Prim + the
+    /// abandoned parallel attempt, so it is flagged rather than hidden).
+    pub fell_back: bool,
+}
+
+/// The ordering benchmark: Prim vs parallel Borůvka, 1 vs all threads,
+/// over a grid of dataset sizes. Serializes to the `BENCH_ordering.json`
+/// schema the `bench-baseline` CI leg validates.
+#[derive(Debug, Clone)]
+pub struct OrderingBenchReport {
+    /// Measured cells, grid order: per size, `prim@1`, `boruvka@1`,
+    /// `boruvka@all`.
+    pub rows: Vec<OrderingBenchRow>,
+    /// `available_parallelism` on the measuring host.
+    pub threads_available: usize,
+    /// Where the numbers came from (host/harness description).
+    pub provenance: String,
+}
+
+impl OrderingBenchReport {
+    /// Hand-written JSON in the checked-in `BENCH_ordering.json` schema
+    /// (the registry carries no serde).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"fast-vat/bench-ordering/v1\",\n");
+        out.push_str(&format!(
+            "  \"provenance\": \"{}\",\n",
+            self.provenance.replace('"', "'")
+        ));
+        out.push_str(&format!(
+            "  \"threads_available\": {},\n",
+            self.threads_available
+        ));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"n\": {}, \"strategy\": \"{}\", \"threads\": {}, \
+                 \"mean_s\": {:.6}, \"min_s\": {:.6}, \"max_s\": {:.6}, \
+                 \"samples\": {}, \"fell_back\": {}}}{}\n",
+                r.n,
+                r.strategy,
+                r.threads,
+                r.timing.mean_s,
+                r.timing.min_s,
+                r.timing.max_s,
+                r.timing.samples,
+                r.fell_back,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Aligned human-readable table with per-size speedups.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["n", "strategy", "threads", "mean (s)", "speedup vs prim"]);
+        for r in &self.rows {
+            let base = self
+                .rows
+                .iter()
+                .find(|b| b.n == r.n && b.strategy == "prim")
+                .map(|b| b.timing.mean_s);
+            let speedup = match base {
+                Some(b) if r.timing.mean_s > 0.0 => format!("{:.2}x", b / r.timing.mean_s),
+                _ => "-".into(),
+            };
+            t.row(&[
+                r.n.to_string(),
+                r.strategy.to_string(),
+                r.threads.to_string(),
+                r.timing.secs(),
+                speedup,
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Run the deterministic ordering benchmark: for each `n` in `sizes`,
+/// build a seeded GMM dataset, materialize its condensed distance matrix
+/// once (condensed so the 20k cell stays under ~2 GiB), then time the
+/// sequential Prim sweep against the parallel Borůvka sweep at 1 thread
+/// and at all available threads — pure ordering wall-clock, distances
+/// excluded. `budget_s` is the per-cell measuring budget (see
+/// [`time_auto`]); `seed` pins the datasets.
+pub fn run_ordering_bench(
+    sizes: &[usize],
+    budget_s: f64,
+    seed: u64,
+) -> Result<OrderingBenchReport> {
+    let threads_all = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let engine = ParallelEngine::default();
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let ds = generators::gmm(n, 2, 3, seed);
+        let store = engine.build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)?;
+        let timing = time_auto(budget_s, || {
+            let (order, mst) = prim::vat_order_on(&store);
+            observe(&order);
+            observe(&mst);
+        });
+        rows.push(OrderingBenchRow {
+            n,
+            strategy: "prim",
+            threads: 1,
+            timing,
+            fell_back: false,
+        });
+        for threads in [1, threads_all] {
+            if threads == threads_all && threads_all == 1 {
+                continue; // 1-core host: the all-threads cell is the 1-thread cell
+            }
+            let fell_back = boruvka::vat_order_boruvka_stats(&store, threads).fell_back;
+            let timing = time_auto(budget_s, || {
+                let out = boruvka::vat_order_boruvka_stats(&store, threads);
+                observe(&out.order);
+                observe(&out.mst);
+            });
+            rows.push(OrderingBenchRow {
+                n,
+                strategy: "boruvka",
+                threads,
+                timing,
+                fell_back,
+            });
+        }
+    }
+    Ok(OrderingBenchReport {
+        rows,
+        threads_available: threads_all,
+        provenance: format!(
+            "native: fast-vat bench-ordering (gmm seed {seed}, condensed storage, \
+             {threads_all} threads available)"
+        ),
+    })
+}
+
 /// Simple fixed-width table printer (paper-style benchmark output).
 pub struct Table {
     headers: Vec<String>,
@@ -214,6 +374,24 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn ordering_bench_emits_schema_and_full_grid() {
+        let r = run_ordering_bench(&[80, 120], 0.0, 7).unwrap();
+        // per size: prim@1, boruvka@1, and boruvka@all on multi-core hosts
+        let per_size = if r.threads_available > 1 { 3 } else { 2 };
+        assert_eq!(r.rows.len(), 2 * per_size);
+        assert!(r.rows.iter().all(|row| row.timing.mean_s >= 0.0));
+        assert!(r.rows.iter().any(|row| row.strategy == "prim" && row.threads == 1));
+        let json = r.to_json();
+        assert!(json.contains("\"schema\": \"fast-vat/bench-ordering/v1\""));
+        assert!(json.contains("\"threads_available\""));
+        assert!(json.contains("\"strategy\": \"boruvka\""));
+        // trailing-comma discipline: rows array must end without a comma
+        assert!(json.contains("}\n  ]\n}"));
+        let table = r.table();
+        assert!(table.contains("speedup vs prim"));
     }
 
     #[test]

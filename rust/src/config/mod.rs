@@ -12,6 +12,7 @@ use std::path::Path;
 
 use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
 use crate::error::{Error, Result};
+use crate::vat::OrderingStrategy;
 
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
@@ -227,6 +228,10 @@ pub struct ServiceConfig {
     /// [`crate::coordinator::JobOptions::metric`], so one pool serves
     /// mixed-metric traffic; this is only the template default.
     pub metric: Metric,
+    /// MST ordering strategy for the VAT stage (the `ordering` key:
+    /// "prim" | "boruvka" | "auto"). `auto` picks the parallel Borůvka
+    /// sweep above the size cutoff; output is bitwise identical either way.
+    pub ordering: OrderingStrategy,
 }
 
 impl Default for ServiceConfig {
@@ -239,6 +244,7 @@ impl Default for ServiceConfig {
             storage: StorageKind::Dense,
             shard: ShardOptions::default(),
             metric: Metric::Euclidean,
+            ordering: OrderingStrategy::Auto,
         }
     }
 }
@@ -315,6 +321,13 @@ impl ServiceConfig {
                     cfg.metric = Metric::parse(m)
                         .map_err(|e| Error::Config(format!("bad metric: {e}")))?;
                 }
+                "ordering" => {
+                    let o = v
+                        .as_str()
+                        .ok_or_else(|| Error::Config("ordering must be a string".into()))?;
+                    cfg.ordering = OrderingStrategy::parse(o)
+                        .map_err(|e| Error::Config(format!("bad ordering: {e}")))?;
+                }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
                 }
@@ -333,6 +346,7 @@ impl ServiceConfig {
             storage: self.storage,
             shard: self.shard.clone(),
             metric: self.metric,
+            ordering: self.ordering,
             ..Default::default()
         }
     }
@@ -462,6 +476,30 @@ mod tests {
             Metric::Euclidean
         );
         for bad in ["[service]\nmetric = \"warp\"\n", "[service]\nmetric = 3\n"] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn service_config_ordering_key_parses_into_the_plan_template() {
+        let doc = Document::parse("[service]\nordering = \"boruvka\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.ordering, OrderingStrategy::Boruvka);
+        assert_eq!(cfg.plan_template().ordering, OrderingStrategy::Boruvka);
+        let doc = Document::parse("[service]\nordering = \"prim\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.ordering, OrderingStrategy::Prim);
+        // default is auto; bad values fail loudly
+        let doc = Document::parse("[service]\n").unwrap();
+        assert_eq!(
+            ServiceConfig::from_document(&doc).unwrap().ordering,
+            OrderingStrategy::Auto
+        );
+        for bad in [
+            "[service]\nordering = \"kruskal\"\n",
+            "[service]\nordering = 1\n",
+        ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
         }

@@ -27,6 +27,7 @@ use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
 use crate::error::Result;
 use crate::hopkins::HopkinsParams;
 use crate::vat::blocks::{Block, BlockDetector};
+use crate::vat::OrderingStrategy;
 
 /// What a job should compute beyond the reorder itself — the per-job plan
 /// template: [`JobOptions::into_plan`] turns options + points into the
@@ -52,6 +53,9 @@ pub struct JobOptions {
     /// Per-request distance metric, so one service pool serves mixed-metric
     /// traffic (default Euclidean, the paper's choice).
     pub metric: Metric,
+    /// MST ordering strategy for the VAT stage (default `Auto`: parallel
+    /// Borůvka above the size cutoff; output bitwise identical either way).
+    pub ordering: OrderingStrategy,
 }
 
 impl Default for JobOptions {
@@ -64,6 +68,7 @@ impl Default for JobOptions {
             storage: StorageKind::Dense,
             shard: ShardOptions::default(),
             metric: Metric::Euclidean,
+            ordering: OrderingStrategy::Auto,
         }
     }
 }
@@ -78,6 +83,7 @@ impl JobOptions {
             .standardize(self.standardize)
             .storage(StoragePolicy::Fixed(self.storage))
             .shard(self.shard)
+            .ordering(self.ordering)
             .ivat(self.ivat)
             .detect_blocks(BlockDetector::default())
             .insight(true)

@@ -29,6 +29,7 @@ use crate::error::Result;
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::metrics::{ari, silhouette, to_isize};
 use crate::vat::blocks::{Block, BlockDetector};
+use crate::vat::OrderingStrategy;
 
 /// Tunables for [`auto_cluster`].
 #[derive(Debug, Clone)]
@@ -48,6 +49,9 @@ pub struct PipelineConfig {
     pub storage: StorageKind,
     /// Shard knobs for `sharded` storage (ignored by the in-RAM layouts).
     pub shard: ShardOptions,
+    /// MST ordering strategy for the tendency stage (default `Auto`; the
+    /// decision output is identical under every strategy).
+    pub ordering: OrderingStrategy,
 }
 
 impl Default for PipelineConfig {
@@ -59,6 +63,7 @@ impl Default for PipelineConfig {
             seed: 0xA070,
             storage: StorageKind::Dense,
             shard: ShardOptions::default(),
+            ordering: OrderingStrategy::Auto,
         }
     }
 }
@@ -151,6 +156,7 @@ pub fn auto_cluster(
         .metric(Metric::Euclidean)
         .storage(StoragePolicy::Fixed(config.storage))
         .shard(config.shard.clone())
+        .ordering(config.ordering)
         .ivat(true)
         .detect_blocks(BlockDetector::default())
         .insight(true)

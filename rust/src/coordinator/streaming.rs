@@ -28,7 +28,7 @@ use crate::dissimilarity::{
 };
 use crate::error::{Error, Result};
 use crate::vat::blocks::{Block, BlockDetector};
-use crate::vat::VatResult;
+use crate::vat::{OrderingStrategy, VatResult};
 
 /// Configuration for [`StreamingVat`].
 #[derive(Debug, Clone)]
@@ -47,6 +47,10 @@ pub struct StreamingConfig {
     pub snapshot_storage: StorageKind,
     /// Shard knobs for `Sharded` snapshots (ignored otherwise).
     pub shard: ShardOptions,
+    /// MST ordering strategy for the snapshot reorder (default `Auto`:
+    /// windows above the cutoff reorder with the parallel Borůvka sweep;
+    /// the snapshot is bitwise identical either way).
+    pub ordering: OrderingStrategy,
 }
 
 impl Default for StreamingConfig {
@@ -56,6 +60,7 @@ impl Default for StreamingConfig {
             metric: Metric::Euclidean,
             snapshot_storage: StorageKind::Dense,
             shard: ShardOptions::default(),
+            ordering: OrderingStrategy::Auto,
         }
     }
 }
@@ -231,6 +236,7 @@ impl StreamingVat {
             // API over the already-built window storage (`Analysis::over`
             // skips the distance stage and echoes back the same Arc)
             let report = Analysis::over(store.clone())
+                .ordering(self.config.ordering)
                 .detect_blocks(BlockDetector::default())
                 .plan()?
                 .execute_precomputed()?;
@@ -405,6 +411,44 @@ mod tests {
             );
             assert_eq!(c.n, 41, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn boruvka_snapshots_match_default_ordering() {
+        // the ordering knob must not change the snapshot: same pushes ->
+        // identical permutation, MST, and blocks under every strategy
+        let ds = blobs(70, 2, 3, 0.35, 136);
+        let mut auto_sv = StreamingVat::new(2, cfg(64)).unwrap();
+        let mut prim_sv = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 64,
+                ordering: OrderingStrategy::Prim,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut bor_sv = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 64,
+                ordering: OrderingStrategy::Boruvka,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..70 {
+            auto_sv.push(ds.points.row(i)).unwrap();
+            prim_sv.push(ds.points.row(i)).unwrap();
+            bor_sv.push(ds.points.row(i)).unwrap();
+        }
+        let a = auto_sv.snapshot().unwrap();
+        let p = prim_sv.snapshot().unwrap();
+        let b = bor_sv.snapshot().unwrap();
+        assert_eq!(a.vat.order, p.vat.order);
+        assert_eq!(a.vat.order, b.vat.order);
+        assert_eq!(a.vat.mst, b.vat.mst);
+        assert_eq!(a.blocks, b.blocks);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use fast_vat::error::{Error, Result};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::runtime::engine_by_name;
 use fast_vat::vat::blocks::BlockDetector;
-use fast_vat::vat::vat;
+use fast_vat::vat::{vat, OrderingStrategy};
 use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm};
 
 fn usage() -> ! {
@@ -37,7 +37,7 @@ USAGE:
                     [--engine naive|blocked|parallel|condensed|xla|xla-mm]
                     [--metric euclidean|l1|linf|cosine|minkowski:P|...]
                     [--storage dense|condensed|sharded|sharded-square | --budget-mb N]
-                    [--sample N] [--ivat]
+                    [--ordering prim|boruvka|auto] [--sample N] [--ivat]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
@@ -45,10 +45,13 @@ USAGE:
                     [--k N | --eps F] [--min-pts N]
   fast-vat pipeline [--input data.csv | --dataset NAME] [--engine ...]
                     [--storage dense|condensed|sharded|sharded-square] [--shard-rows N]
-                    [--cache-shards N] [--spill-dir DIR]
+                    [--cache-shards N] [--spill-dir DIR] [--ordering prim|boruvka|auto]
   fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
                     [--metric NAME] [--storage dense|condensed|sharded|sharded-square]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
+                    [--ordering prim|boruvka|auto]
+  fast-vat bench-ordering [--sizes N,N,...] [--budget-s F] [--seed N]
+                    [--out BENCH_ordering.json]
   fast-vat info     [--artifacts DIR]
 
 STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
@@ -62,6 +65,13 @@ STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
   distance bytes fit the budget is picked per request (spills resolve to
   square bands, plus a reorder-then-spill pass when the image is re-read).
   --sample N escalates to sVAT (maximin sampling) above N points.
+
+ORDERING: prim is the sequential O(n^2) sweep; boruvka reorders with a
+  parallel Borůvka/merge MST build whose output is verified bitwise
+  identical to prim (it falls back to the sequential sweep when ties or
+  NaNs make the parallel tree ambiguous); auto (default) picks boruvka
+  above 4096 points on multi-core hosts. bench-ordering times both and
+  writes the checked-in BENCH_ordering.json baseline.
 
 DATASETS: iris, blobs, moons, circles, gmm, spotify, mall, uniform
   (generator datasets accept --n and --seed)
@@ -126,6 +136,10 @@ fn storage_kind(flags: &HashMap<String, String>) -> Result<StorageKind> {
     StorageKind::parse(flags.get("storage").map(String::as_str).unwrap_or("dense"))
 }
 
+fn ordering_strategy(flags: &HashMap<String, String>) -> Result<OrderingStrategy> {
+    OrderingStrategy::parse(flags.get("ordering").map(String::as_str).unwrap_or("auto"))
+}
+
 fn shard_options(flags: &HashMap<String, String>) -> Result<ShardOptions> {
     let defaults = ShardOptions::default();
     Ok(ShardOptions {
@@ -174,6 +188,7 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         .metric(metric)
         .storage(policy)
         .shard(shard)
+        .ordering(ordering_strategy(&flags)?)
         .ivat(flags.contains_key("ivat"))
         .detect_blocks(BlockDetector::default())
         .insight(true)
@@ -187,9 +202,10 @@ fn cmd_vat(args: &[String]) -> Result<()> {
     let report = request.plan()?.execute(engine.as_ref())?;
 
     println!(
-        "{name}: n={n} d={dim} engine={} storage={} distance={:.4}s reorder={:.4}s",
+        "{name}: n={n} d={dim} engine={} storage={} ordering={} distance={:.4}s reorder={:.4}s",
         report.plan.engine,
         report.plan.storage.as_str(),
+        report.plan.ordering,
         report.timings.distance_s,
         report.timings.vat_s
     );
@@ -306,6 +322,7 @@ fn cmd_pipeline(args: &[String]) -> Result<()> {
     let config = PipelineConfig {
         storage: storage_kind(&flags)?,
         shard: shard_options(&flags)?,
+        ordering: ordering_strategy(&flags)?,
         ..Default::default()
     };
     let report = auto_cluster(&engine, &ds.points, &config)?;
@@ -338,6 +355,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         metric: Metric::parse(
             flags.get("metric").map(String::as_str).unwrap_or("euclidean"),
         )?,
+        ordering: ordering_strategy(&flags)?,
     };
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
@@ -387,6 +405,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_ordering(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let sizes: Vec<usize> = flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("2000,8000,20000")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--sizes: bad size {s}")))
+        })
+        .collect::<Result<_>>()?;
+    let budget_s: f64 = match flags.get("budget-s") {
+        None => 1.0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::InvalidArg("--budget-s must be a float".into()))?,
+    };
+    let seed = get_usize(&flags, "seed", 42)? as u64;
+    let report = fast_vat::bench_util::run_ordering_bench(&sizes, budget_s, seed)?;
+    print!("{}", report.table());
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &[])?;
     let dir = flags
@@ -428,6 +475,7 @@ fn main() {
         "cluster" => cmd_cluster(rest),
         "pipeline" => cmd_pipeline(rest),
         "serve" => cmd_serve(rest),
+        "bench-ordering" => cmd_bench_ordering(rest),
         "info" => cmd_info(rest),
         _ => usage(),
     };

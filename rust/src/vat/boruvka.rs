@@ -1,0 +1,770 @@
+//! Parallel Borůvka/merge VAT ordering — exact-output mode.
+//!
+//! The single-threaded Prim sweep in [`super::prim`] reads the whole
+//! triangle sequentially; once the distance build is parallel and
+//! band-streamed (PR 2–5), that sweep dominates wall-clock at scale. This
+//! module replaces it with a Borůvka-style MST construction whose scans are
+//! embarrassingly parallel over contiguous row ranges — the same unit of
+//! work the square-band shards already stream — followed by a root-down
+//! replay of the tree that reproduces the VAT permutation.
+//!
+//! ## Exactness contract (why the output is *identical* to Prim)
+//!
+//! VAT's order is a function of the MST **plus** its tie decisions, and on
+//! tied inputs a Borůvka tree keyed by any static total order can be a
+//! different (equally minimal) tree than Prim's — so exactness cannot come
+//! from tie-pinning alone. Instead this module is *verify-and-fallback*:
+//!
+//! 1. build a deterministic MST with edges keyed `(w, min(i,j), max(i,j))`
+//!    (parallel scans; thread-count independent by construction — partial
+//!    per-thread minima merge with the same pinned comparison);
+//! 2. replay the tree root-down from [`DistanceStorage::seed_row`] with a
+//!    `(weight, child-index)` heap — for Prim's own tree this provably
+//!    reproduces the exact Prim order (each prefix is connected, so every
+//!    frontier vertex has exactly one tree edge into it, and the minimal
+//!    cut weight is the minimal tree-crossing weight);
+//! 3. re-derive the display-coordinate MST with the pinned
+//!    [`super::prim::mst_from_order`] parent rule while simultaneously
+//!    **verifying** the Prim greedy invariant at every step: the vertex
+//!    placed at step `s` must beat every later-placed vertex `c` under the
+//!    `(dmin, index)` argmin. The check uses the tree attach weight
+//!    `w_s ≥ dmin_s(order[s])`, so a pass is sufficient; when the tree IS
+//!    Prim's tree, `w_s == dmin_s(order[s])` and the check never falsely
+//!    rejects.
+//! 4. if the input contains any NaN (detected exhaustively by the round-1
+//!    scan, which reads every pair) or the verification fails (possible
+//!    only on exact ties that made Borůvka pick a different minimal tree),
+//!    fall back to the sequential [`super::prim::vat_order_on`] — bitwise
+//!    the same output, just without the speedup.
+//!
+//! Either way the returned `(order, mst)` is **bitwise identical** to the
+//! Prim sweep's, which is what the storage/engine parity suite pins.
+//!
+//! ## Cost model
+//!
+//! With `T` threads the pipeline reads the triangle ~3–5× in parallel
+//! (round-1 nearest-neighbour scan, 0–2 component rounds, one contraction
+//! scan, one fused mst+verify pass) versus Prim's one sequential read, so
+//! the win appears once `T` outgrows that constant. `BENCH_ordering.json`
+//! carries the checked-in baseline (its `provenance` field says how it was
+//! measured; regenerate locally with `fast-vat bench-ordering`), and the
+//! `bench-baseline` CI leg re-times both strategies natively on every push.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::ivat::mst_adjacency;
+use super::prim;
+use crate::dissimilarity::DistanceStorage;
+
+/// Edge candidate with the pinned deterministic key `(w, a, b)`, `a < b`
+/// original indices. `NONE` (a == u32::MAX) never beats a real edge.
+#[derive(Clone, Copy)]
+struct EdgeKey {
+    w: f64,
+    a: u32,
+    b: u32,
+}
+
+impl EdgeKey {
+    const NONE: EdgeKey = EdgeKey {
+        w: f64::INFINITY,
+        a: u32::MAX,
+        b: u32::MAX,
+    };
+
+    fn is_some(&self) -> bool {
+        self.a != u32::MAX
+    }
+
+    /// Pinned strict total order on real edges: lexicographic
+    /// `(w, a, b)`. NaN weights never win (all comparisons false).
+    fn beats(&self, other: &EdgeKey) -> bool {
+        self.w < other.w || (self.w == other.w && (self.a, self.b) < (other.a, other.b))
+    }
+}
+
+/// Union-find with path-halving; union keeps the LOWER root, so component
+/// labels are the minimum original index — deterministic regardless of
+/// union order.
+struct Dsu {
+    parent: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu {
+            parent: (0..n as u32).collect(),
+        }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let grand = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = grand;
+            x = grand;
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) -> bool {
+        let mut ra = self.find(a);
+        let mut rb = self.find(b);
+        if ra == rb {
+            return false;
+        }
+        if ra > rb {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        true
+    }
+}
+
+/// Split rows `0..n` into at most `threads` contiguous ranges with roughly
+/// equal total `weight(i)` — tail scans and prefix walks are triangular, so
+/// equal row counts would leave most threads idle.
+fn balanced_chunks(
+    n: usize,
+    threads: usize,
+    weight: impl Fn(usize) -> usize,
+) -> Vec<(usize, usize)> {
+    let threads = threads.max(1);
+    let total: u64 = (0..n).map(|i| weight(i) as u64).sum();
+    let mut chunks = Vec::with_capacity(threads);
+    let mut row0 = 0usize;
+    let mut acc = 0u64;
+    let mut k = 1u64;
+    for i in 0..n {
+        acc += weight(i) as u64;
+        // the last range is emitted after the loop, so never exceed
+        // `threads` ranges in total
+        if chunks.len() + 1 < threads && acc * threads as u64 >= total * k {
+            chunks.push((row0, i + 1));
+            row0 = i + 1;
+            k += 1;
+        }
+    }
+    if row0 < n {
+        chunks.push((row0, n));
+    }
+    chunks
+}
+
+/// How many components remain for the contracted-matrix finish. Adaptive:
+/// each thread's condensed partial is `cap²/2 × 16 B`, so fewer threads can
+/// afford a larger cap (fewer full-scan rounds).
+fn contraction_cap(threads: usize) -> usize {
+    let budget_entries = 8_000_000 / threads.max(1); // ≈64 MiB total at 16 B
+    (budget_entries as f64).sqrt() as usize
+}
+
+/// Merge per-thread partial best-edge arrays elementwise (pinned key order,
+/// so the result is independent of thread count and partition).
+fn merge_partials(partials: Vec<Vec<EdgeKey>>) -> Vec<EdgeKey> {
+    let mut iter = partials.into_iter();
+    let mut out = iter.next().expect("at least one chunk");
+    for p in iter {
+        for (dst, src) in out.iter_mut().zip(&p) {
+            if src.beats(dst) {
+                *dst = *src;
+            }
+        }
+    }
+    out
+}
+
+/// One parallel sweep over the distance triangle. For each row range the
+/// worker streams rows (zero-copy on dense, `fill_row` scratch elsewhere —
+/// band-sequential on the sharded tiers) and folds tail entries `j > i`
+/// into a per-thread accumulator; `fold` receives `(acc, i, j, w)`.
+fn parallel_tail_scan<S, A, F>(d: &S, chunks: &[(usize, usize)], init: A, fold: F) -> Vec<A>
+where
+    S: DistanceStorage + Sync,
+    A: Send,
+    F: Fn(&mut A, usize, usize, f64) + Sync,
+    A: Clone,
+{
+    let n = d.n();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(r0, r1)| {
+                let mut acc = init.clone();
+                let fold = &fold;
+                scope.spawn(move || {
+                    let mut scratch = vec![0.0f64; n];
+                    for i in r0..r1 {
+                        let row: &[f64] = match d.row_slice(i) {
+                            Some(r) => r,
+                            None => {
+                                d.fill_row(i, &mut scratch);
+                                &scratch
+                            }
+                        };
+                        for (j, &w) in row.iter().enumerate().skip(i + 1) {
+                            fold(&mut acc, i, j, w);
+                        }
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scan worker panicked"))
+            .collect()
+    })
+}
+
+/// Build a deterministic MST over the full finite distance graph. Returns
+/// `None` if the input contains NaN (round 1 reads every pair, so detection
+/// is exhaustive) — the caller then falls back to the sequential sweep.
+fn boruvka_tree<S: DistanceStorage + Sync>(
+    d: &S,
+    threads: usize,
+    cap: usize,
+) -> Option<Vec<(usize, usize, f64)>> {
+    let n = d.n();
+    let chunks = balanced_chunks(n, threads, |i| n - 1 - i);
+
+    // round 1: per-vertex nearest neighbour, with exhaustive NaN detection
+    let partials = parallel_tail_scan(
+        d,
+        &chunks,
+        (vec![EdgeKey::NONE; n], false),
+        |(best, nan), i, j, w| {
+            if w.is_nan() {
+                *nan = true;
+                return;
+            }
+            let k = EdgeKey {
+                w,
+                a: i as u32,
+                b: j as u32,
+            };
+            if k.beats(&best[i]) {
+                best[i] = k;
+            }
+            if k.beats(&best[j]) {
+                best[j] = k;
+            }
+        },
+    );
+    if partials.iter().any(|(_, nan)| *nan) {
+        return None;
+    }
+    let best = merge_partials(partials.into_iter().map(|(b, _)| b).collect());
+
+    let mut dsu = Dsu::new(n);
+    let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(n.saturating_sub(1));
+    let mut m = n;
+    for k in best.iter().filter(|k| k.is_some()) {
+        if dsu.union(k.a, k.b) {
+            edges.push((k.a as usize, k.b as usize, k.w));
+            m -= 1;
+        }
+    }
+
+    // full-scan component rounds while the contracted matrix would be too
+    // large; each round halves (at least) the component count
+    while m > cap && m > 1 {
+        let (labels, mm) = component_labels(&mut dsu, n);
+        debug_assert_eq!(mm, m);
+        let partials = parallel_tail_scan(
+            d,
+            &chunks,
+            vec![EdgeKey::NONE; m],
+            |best, i, j, w| {
+                let ci = labels[i];
+                let cj = labels[j];
+                if ci == cj {
+                    return;
+                }
+                let k = EdgeKey {
+                    w,
+                    a: i as u32,
+                    b: j as u32,
+                };
+                if k.beats(&best[ci as usize]) {
+                    best[ci as usize] = k;
+                }
+                if k.beats(&best[cj as usize]) {
+                    best[cj as usize] = k;
+                }
+            },
+        );
+        let best = merge_partials(partials);
+        let before = m;
+        for k in best.iter().filter(|k| k.is_some()) {
+            if dsu.union(k.a, k.b) {
+                edges.push((k.a as usize, k.b as usize, k.w));
+                m -= 1;
+            }
+        }
+        if m >= before {
+            // no progress: unreachable on finite input, but never spin
+            return None;
+        }
+    }
+
+    if m > 1 {
+        // contracted condensed matrix over the m component labels, then a
+        // sequential exact Prim finish recording ORIGINAL endpoints (any
+        // correct MST works here: the verify pass is the correctness gate)
+        let (labels, mm) = component_labels(&mut dsu, n);
+        debug_assert_eq!(mm, m);
+        let tri = m * (m - 1) / 2;
+        let cond_idx = |a: usize, b: usize| -> usize {
+            // a < b over m labels, scipy condensed layout
+            a * m - a * (a + 1) / 2 + (b - a - 1)
+        };
+        let partials = parallel_tail_scan(
+            d,
+            &chunks,
+            vec![EdgeKey::NONE; tri],
+            |best, i, j, w| {
+                let ci = labels[i] as usize;
+                let cj = labels[j] as usize;
+                if ci == cj {
+                    return;
+                }
+                let (a, b) = if ci < cj { (ci, cj) } else { (cj, ci) };
+                let k = EdgeKey {
+                    w,
+                    a: i as u32,
+                    b: j as u32,
+                };
+                let slot = &mut best[cond_idx(a, b)];
+                if k.beats(slot) {
+                    *slot = k;
+                }
+            },
+        );
+        let best = merge_partials(partials);
+
+        let mut in_tree = vec![false; m];
+        in_tree[0] = true;
+        let mut dmin: Vec<EdgeKey> = (0..m)
+            .map(|c| if c == 0 { EdgeKey::NONE } else { best[cond_idx(0, c)] })
+            .collect();
+        for _ in 1..m {
+            let mut pick = usize::MAX;
+            for (c, key) in dmin.iter().enumerate() {
+                if !in_tree[c]
+                    && key.is_some()
+                    && (pick == usize::MAX || key.beats(&dmin[pick]))
+                {
+                    pick = c;
+                }
+            }
+            if pick == usize::MAX {
+                return None; // disconnected: unreachable on finite input
+            }
+            let k = dmin[pick];
+            edges.push((k.a as usize, k.b as usize, k.w));
+            in_tree[pick] = true;
+            for (c, tree) in in_tree.iter().enumerate() {
+                if !tree {
+                    let (a, b) = if pick < c { (pick, c) } else { (c, pick) };
+                    let cand = best[cond_idx(a, b)];
+                    if cand.is_some() && cand.beats(&dmin[c]) {
+                        dmin[c] = cand;
+                    }
+                }
+            }
+        }
+    }
+    Some(edges)
+}
+
+/// Deterministic compact component labels (0..m in ascending root order).
+fn component_labels(dsu: &mut Dsu, n: usize) -> (Vec<u32>, usize) {
+    let mut label_of_root = vec![u32::MAX; n];
+    let mut m = 0u32;
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let r = dsu.find(i as u32) as usize;
+        if label_of_root[r] == u32::MAX {
+            // lower-root union ⇒ roots appear in ascending index order
+            label_of_root[r] = m;
+            m += 1;
+        }
+        labels[i] = label_of_root[r];
+    }
+    (labels, m as usize)
+}
+
+/// Monotone order-preserving f64 → u64 map for heap keys (finite values
+/// only; −0.0 normalized so tied zero weights compare equal).
+fn key_bits(w: f64) -> u64 {
+    let w = if w == 0.0 { 0.0 } else { w };
+    let b = w.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1u64 << 63)
+    }
+}
+
+/// Replay the tree root-down from the VAT seed: pop the frontier vertex
+/// with the minimal `(attach weight, child index)`. Returns the display
+/// order and each position's attach weight, or `None` if the edge list did
+/// not span all vertices.
+fn replay_tree(
+    n: usize,
+    seed: usize,
+    edges: &[(usize, usize, f64)],
+) -> Option<(Vec<usize>, Vec<f64>)> {
+    // reuse the iVAT CSR adjacency: the layout is coordinate-agnostic
+    let adj = mst_adjacency(n, edges);
+    let mut order = Vec::with_capacity(n);
+    let mut attach_w = Vec::with_capacity(n);
+    let mut selected = vec![false; n];
+    let mut pending_w = vec![0.0f64; n];
+    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::with_capacity(n);
+    order.push(seed);
+    attach_w.push(0.0);
+    selected[seed] = true;
+    for &(nb, w) in &adj.adj[adj.start[seed]..adj.start[seed + 1]] {
+        pending_w[nb as usize] = w;
+        heap.push(Reverse((key_bits(w), nb)));
+    }
+    while let Some(Reverse((_, c))) = heap.pop() {
+        let c = c as usize;
+        if selected[c] {
+            // unreachable for a spanning tree (the selected prefix is
+            // always connected, so each vertex enters the heap once)
+            continue;
+        }
+        selected[c] = true;
+        order.push(c);
+        attach_w.push(pending_w[c]);
+        for &(nb, w) in &adj.adj[adj.start[c]..adj.start[c + 1]] {
+            if !selected[nb as usize] {
+                pending_w[nb as usize] = w;
+                heap.push(Reverse((key_bits(w), nb)));
+            }
+        }
+    }
+    (order.len() == n).then_some((order, attach_w))
+}
+
+/// Fused parallel pass: rebuild the display-coordinate MST with the pinned
+/// `mst_from_order` parent rule AND verify the Prim greedy invariant. For
+/// the child at position `t`, walking its row over the prefix keeps the
+/// running prefix-min (`best_v` == Prim's dmin); at each step `s` the
+/// placed vertex must beat this child under `(dmin, index)`, using the
+/// attach weight `w_s ≥ dmin_s(order[s])` as a sound proxy.
+fn mst_and_verify<S: DistanceStorage + Sync>(
+    d: &S,
+    order: &[usize],
+    attach_w: &[f64],
+    threads: usize,
+) -> Option<Vec<(usize, usize, f64)>> {
+    let n = order.len();
+    let chunks = balanced_chunks(n, threads, |t| t);
+    let results: Vec<Option<Vec<(usize, usize, f64)>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(t0, t1)| {
+                scope.spawn(move || {
+                    let mut scratch = vec![0.0f64; n];
+                    let mut out = Vec::with_capacity(t1 - t0);
+                    for t in t0.max(1)..t1 {
+                        let c = order[t];
+                        let row: &[f64] = match d.row_slice(c) {
+                            Some(r) => r,
+                            None => {
+                                d.fill_row(c, &mut scratch);
+                                &scratch
+                            }
+                        };
+                        let mut best_p = 0usize;
+                        let mut best_v = row[order[0]];
+                        for s in 1..t {
+                            let ws = attach_w[s];
+                            if !(ws < best_v || (ws == best_v && order[s] < c)) {
+                                return None; // not Prim's order: fall back
+                            }
+                            let v = row[order[s]];
+                            if v < best_v {
+                                best_v = v;
+                                best_p = s;
+                            }
+                        }
+                        out.push((best_p, t, best_v));
+                    }
+                    Some(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("verify worker panicked"))
+            .collect()
+    });
+    let mut mst = Vec::with_capacity(n.saturating_sub(1));
+    for r in results {
+        mst.extend(r?);
+    }
+    Some(mst)
+}
+
+/// Outcome of a Borůvka ordering run, with provenance for tests/benches.
+pub struct BoruvkaOutcome {
+    /// The VAT permutation — bitwise identical to [`prim::vat_order_on`].
+    pub order: Vec<usize>,
+    /// Display-coordinate MST edges, identical to the Prim sweep's.
+    pub mst: Vec<(usize, usize, f64)>,
+    /// True when the run routed through the sequential fallback (NaN input
+    /// or a tie-induced alternative minimal tree failing verification).
+    pub fell_back: bool,
+}
+
+/// Parallel Borůvka VAT ordering with verification stats. `threads = 0`
+/// uses `available_parallelism`.
+pub fn vat_order_boruvka_stats<S: DistanceStorage + Sync>(
+    d: &S,
+    threads: usize,
+) -> BoruvkaOutcome {
+    vat_order_boruvka_tuned(d, threads, 0)
+}
+
+/// [`vat_order_boruvka_stats`] with an explicit contraction cap
+/// (`cap = 0` ⇒ adaptive) — exposed so tests and benches can force the
+/// multi-round component-scan path at small n.
+#[doc(hidden)]
+pub fn vat_order_boruvka_tuned<S: DistanceStorage + Sync>(
+    d: &S,
+    threads: usize,
+    cap: usize,
+) -> BoruvkaOutcome {
+    let n = d.n();
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    }
+    .clamp(1, n.max(1));
+    let cap = if cap == 0 { contraction_cap(threads) } else { cap };
+
+    if n > 2 {
+        if let Some(edges) = boruvka_tree(d, threads, cap) {
+            if let Some((order, attach_w)) = replay_tree(n, d.seed_row(), &edges) {
+                if let Some(mst) = mst_and_verify(d, &order, &attach_w, threads) {
+                    return BoruvkaOutcome {
+                        order,
+                        mst,
+                        fell_back: false,
+                    };
+                }
+            }
+        }
+    }
+    let (order, mst) = prim::vat_order_on(d);
+    BoruvkaOutcome {
+        order,
+        mst,
+        fell_back: n > 2,
+    }
+}
+
+/// Parallel Borůvka VAT ordering — exact-output drop-in for
+/// [`prim::vat_order_on`]. `threads = 0` uses `available_parallelism`.
+pub fn vat_order_boruvka_on<S: DistanceStorage + Sync>(
+    d: &S,
+    threads: usize,
+) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
+    let out = vat_order_boruvka_stats(d, threads);
+    (out.order, out.mst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, gmm, moons};
+    use crate::dissimilarity::condensed::CondensedMatrix;
+    use crate::dissimilarity::{DistanceMatrix, Metric};
+
+    fn assert_same(d: &DistanceMatrix, threads: usize, ctx: &str) -> BoruvkaOutcome {
+        let (ref_order, ref_mst) = prim::vat_order_on(d);
+        let out = vat_order_boruvka_stats(d, threads);
+        assert_eq!(out.order, ref_order, "{ctx}: order");
+        assert_eq!(out.mst, ref_mst, "{ctx}: mst");
+        out
+    }
+
+    #[test]
+    fn matches_prim_on_generated_data() {
+        for seed in 0..8 {
+            let ds = gmm(90, 3, 3, seed);
+            let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let out = assert_same(&d, 4, &format!("seed {seed}"));
+            assert!(!out.fell_back, "float data must take the native path");
+        }
+    }
+
+    #[test]
+    fn thread_counts_all_agree() {
+        let ds = moons(150, 0.06, 31);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        for threads in [1, 2, 3, 5, 8, 0] {
+            assert_same(&d, threads, &format!("threads {threads}"));
+        }
+    }
+
+    #[test]
+    fn small_caps_force_extra_rounds_and_contraction() {
+        // tiny explicit caps route through every pipeline stage at small n:
+        // cap 1 runs component rounds down to a single component (the
+        // contracted finish is skipped), larger caps stop the rounds early
+        // and exercise the contracted sequential Prim
+        let ds = blobs(130, 2, 4, 0.5, 33);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let (ref_order, ref_mst) = prim::vat_order_on(&d);
+        for cap in [1, 2, 4, 16, 64] {
+            let out = vat_order_boruvka_tuned(&d, 4, cap);
+            assert_eq!(out.order, ref_order, "cap {cap}");
+            assert_eq!(out.mst, ref_mst, "cap {cap}");
+            assert!(!out.fell_back, "cap {cap}: float data stays native");
+        }
+    }
+
+    #[test]
+    fn condensed_storage_matches_dense() {
+        let ds = gmm(80, 2, 3, 77);
+        let dense = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let cond = CondensedMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let od = vat_order_boruvka_on(&dense, 3);
+        let oc = vat_order_boruvka_on(&cond, 3);
+        assert_eq!(od, oc);
+        let (ref_order, ref_mst) = prim::vat_order_on(&dense);
+        assert_eq!(od, (ref_order, ref_mst));
+    }
+
+    #[test]
+    fn all_tied_matrix_stays_native_and_exact() {
+        // all-equal off-diagonal: Borůvka's pinned keys produce the star at
+        // vertex 0, which IS Prim's tree — verification passes natively
+        let n = 40;
+        let mut d = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, 1.0);
+                }
+            }
+        }
+        let out = assert_same(&d, 4, "all-tied");
+        assert!(!out.fell_back, "the all-tied star must verify natively");
+    }
+
+    #[test]
+    fn duplicated_points_zero_distances_exact() {
+        // every point appears twice: masses of exact zero distances
+        let ds = blobs(30, 2, 2, 0.4, 55);
+        let mut rows = Vec::new();
+        for i in 0..30 {
+            rows.push(ds.points.row(i).to_vec());
+            rows.push(ds.points.row(i).to_vec());
+        }
+        let points = crate::data::Points::from_rows(&rows).unwrap();
+        let d = DistanceMatrix::build_blocked(&points, Metric::Euclidean);
+        assert_same(&d, 4, "duplicates");
+    }
+
+    #[test]
+    fn tie_heavy_quantized_matrices_fall_back_when_needed_but_stay_exact() {
+        let mut rng = crate::prng::Pcg32::new(4242);
+        let mut native = 0;
+        let mut fallback = 0;
+        for trial in 0..15 {
+            let n = 10 + rng.below(40) as usize;
+            let mut d = DistanceMatrix::zeros(n);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let v = (1 + rng.below(4)) as f64 * 0.25;
+                    d.set(i, j, v);
+                    d.set(j, i, v);
+                }
+            }
+            let out = assert_same(&d, 3, &format!("tie trial {trial}"));
+            if out.fell_back {
+                fallback += 1;
+            } else {
+                native += 1;
+            }
+        }
+        // exactness holds either way; both paths should occur across trials
+        assert!(native + fallback == 15);
+    }
+
+    #[test]
+    fn nan_poisoned_input_falls_back_and_matches() {
+        let ds = gmm(36, 2, 2, 11);
+        let mut d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        for j in 0..36 {
+            if j != 20 {
+                d.set(20, j, f64::NAN);
+                d.set(j, 20, f64::NAN);
+            }
+        }
+        let (ref_order, ref_mst) = prim::vat_order_on(&d);
+        let out = vat_order_boruvka_stats(&d, 4);
+        assert!(out.fell_back, "NaN must route through the fallback");
+        assert_eq!(out.order, ref_order);
+        // NaN-aware MST comparison (NaN != NaN defeats assert_eq!)
+        assert_eq!(out.mst.len(), ref_mst.len());
+        for (a, b) in out.mst.iter().zip(&ref_mst) {
+            assert_eq!((a.0, a.1), (b.0, b.1));
+            assert!(a.2 == b.2 || (a.2.is_nan() && b.2.is_nan()));
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        for n in [0usize, 1, 2, 3] {
+            let ds = blobs(n.max(1), 2, 1, 0.3, 9);
+            let mut d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            if n == 0 {
+                d = DistanceMatrix::zeros(0);
+            }
+            let (ref_order, ref_mst) = prim::vat_order_on(&d);
+            let (order, mst) = vat_order_boruvka_on(&d, 2);
+            assert_eq!(order, ref_order, "n {n}");
+            assert_eq!(mst, ref_mst, "n {n}");
+        }
+    }
+
+    #[test]
+    fn balanced_chunks_cover_and_balance() {
+        let chunks = balanced_chunks(1000, 7, |i| 1000 - 1 - i);
+        assert_eq!(chunks.first().unwrap().0, 0);
+        assert_eq!(chunks.last().unwrap().1, 1000);
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "contiguous");
+        }
+        let weights: Vec<u64> = chunks
+            .iter()
+            .map(|&(a, b)| (a..b).map(|i| (1000 - 1 - i) as u64).sum())
+            .collect();
+        let total: u64 = weights.iter().sum();
+        assert_eq!(total, 1000 * 999 / 2);
+        let target = total / 7;
+        for w in &weights {
+            assert!(*w <= 2 * target + 1000, "no chunk vastly overweight: {w}");
+        }
+    }
+
+    #[test]
+    fn key_bits_is_monotone() {
+        let vals = [-3.5, -0.0, 0.0, 1e-300, 0.25, 1.0, 1e300, f64::INFINITY];
+        for pair in vals.windows(2) {
+            assert!(key_bits(pair[0]) <= key_bits(pair[1]));
+        }
+        assert_eq!(key_bits(-0.0), key_bits(0.0));
+    }
+}

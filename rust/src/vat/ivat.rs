@@ -33,13 +33,16 @@ pub struct IvatResult {
     pub transformed: DistanceStore,
 }
 
-/// MST adjacency in display coordinates (CSR-ish layout over n-1 edges).
-struct MstAdjacency {
-    start: Vec<usize>,
-    adj: Vec<(u32, f64)>,
+/// MST adjacency (CSR-ish layout over n-1 edges). The coordinate space is
+/// whatever the caller's edge endpoints live in: display positions for the
+/// iVAT transform, original point indices for the Borůvka tree replay in
+/// `vat::boruvka` — the layout is agnostic.
+pub(crate) struct MstAdjacency {
+    pub(crate) start: Vec<usize>,
+    pub(crate) adj: Vec<(u32, f64)>,
 }
 
-fn mst_adjacency(n: usize, mst: &[(usize, usize, f64)]) -> MstAdjacency {
+pub(crate) fn mst_adjacency(n: usize, mst: &[(usize, usize, f64)]) -> MstAdjacency {
     let mut degree = vec![0usize; n];
     for &(p, c, _) in mst {
         degree[p] += 1;

@@ -30,12 +30,84 @@
 //! (locked by the accounting test in `tests/storage_parity.rs`).
 
 pub mod blocks;
+pub mod boruvka;
 pub mod dendrogram;
 pub mod ivat;
 pub mod prim;
 pub mod svat;
 
 use crate::dissimilarity::{DistanceMatrix, DistanceStorage, PermutedView};
+use crate::error::{Error, Result};
+
+/// Which MST construction drives the VAT ordering. Every strategy produces
+/// the **bitwise-identical** permutation and MST — the knob trades
+/// single-thread simplicity against multi-core wall-clock, never output.
+///
+/// * `Prim` — the sequential O(n²) sweep ([`prim::vat_order_on`]).
+/// * `Boruvka` — parallel Borůvka scans + root-down replay with a
+///   verification pass ([`boruvka::vat_order_boruvka_on`]); falls back to
+///   Prim internally on NaN input or tie-induced alternative trees, so the
+///   exactness contract is unconditional.
+/// * `Auto` (default) — Borůvka when the input is large enough to amortize
+///   thread spawns and more than one core is available
+///   ([`OrderingStrategy::AUTO_CUTOFF`]), Prim otherwise. Because the two
+///   strategies are output-identical, the runtime-conditional choice is
+///   safe: no reproducibility hazard across machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OrderingStrategy {
+    /// Sequential Prim sweep.
+    Prim,
+    /// Parallel Borůvka with verify-and-fallback.
+    Boruvka,
+    /// Pick by size: Borůvka at `n ≥ AUTO_CUTOFF` on multi-core hosts.
+    #[default]
+    Auto,
+}
+
+impl OrderingStrategy {
+    /// `Auto` switches to Borůvka at this many points (and ≥ 2 cores).
+    /// Below it, thread spawn + extra scan overhead beats the parallel win.
+    pub const AUTO_CUTOFF: usize = 4096;
+
+    /// Parse a config/CLI token (`"prim"`, `"boruvka"`, `"auto"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "prim" => Ok(OrderingStrategy::Prim),
+            "boruvka" => Ok(OrderingStrategy::Boruvka),
+            "auto" => Ok(OrderingStrategy::Auto),
+            other => Err(Error::InvalidArg(format!(
+                "unknown ordering strategy '{other}' (expected prim|boruvka|auto)"
+            ))),
+        }
+    }
+
+    /// Canonical token, e.g. for report echoes.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OrderingStrategy::Prim => "prim",
+            OrderingStrategy::Boruvka => "boruvka",
+            OrderingStrategy::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` for an input of `n` points: returns `Prim` or
+    /// `Boruvka`, never `Auto`.
+    pub fn resolve(self, n: usize) -> OrderingStrategy {
+        match self {
+            OrderingStrategy::Auto => {
+                let cores = std::thread::available_parallelism()
+                    .map(|v| v.get())
+                    .unwrap_or(1);
+                if n >= Self::AUTO_CUTOFF && cores > 1 {
+                    OrderingStrategy::Boruvka
+                } else {
+                    OrderingStrategy::Prim
+                }
+            }
+            fixed => fixed,
+        }
+    }
+}
 
 /// Result of a VAT run: the permutation and the MST, O(n) resident.
 ///
@@ -79,6 +151,20 @@ impl VatResult {
 pub fn vat<S: DistanceStorage>(d: &S) -> VatResult {
     let (order, mst) = prim::vat_order_on(d);
     VatResult { order, mst }
+}
+
+/// Run VAT with an explicit [`OrderingStrategy`] (`Auto` resolves by input
+/// size). Output is bitwise identical to [`vat`] for every strategy — the
+/// parity suite in `tests/storage_parity.rs` pins order, MST, iVAT entries
+/// and rendered bytes across strategies, storages and engines.
+pub fn vat_with<S: DistanceStorage + Sync>(d: &S, strategy: OrderingStrategy) -> VatResult {
+    match strategy.resolve(d.n()) {
+        OrderingStrategy::Boruvka => {
+            let (order, mst) = boruvka::vat_order_boruvka_on(d, 0);
+            VatResult { order, mst }
+        }
+        _ => vat(d),
+    }
 }
 
 /// Run VAT with the baseline-shaped ordering (same output, slower — exists
@@ -218,6 +304,47 @@ mod tests {
         let r2 = vat(&d2);
         assert_eq!(r2.order.len(), 2);
         assert_eq!(r2.mst, vec![(0, 1, 3.0)]);
+    }
+
+    #[test]
+    fn ordering_strategy_parse_roundtrip_and_resolve() {
+        for s in [
+            OrderingStrategy::Prim,
+            OrderingStrategy::Boruvka,
+            OrderingStrategy::Auto,
+        ] {
+            assert_eq!(OrderingStrategy::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(OrderingStrategy::parse("kruskal").is_err());
+        assert_eq!(OrderingStrategy::default(), OrderingStrategy::Auto);
+        // fixed strategies resolve to themselves at any size
+        assert_eq!(OrderingStrategy::Prim.resolve(1 << 20), OrderingStrategy::Prim);
+        assert_eq!(OrderingStrategy::Boruvka.resolve(3), OrderingStrategy::Boruvka);
+        // Auto below the cutoff is always Prim (above depends on host cores)
+        assert_eq!(
+            OrderingStrategy::Auto.resolve(OrderingStrategy::AUTO_CUTOFF - 1),
+            OrderingStrategy::Prim
+        );
+        assert_ne!(
+            OrderingStrategy::Auto.resolve(OrderingStrategy::AUTO_CUTOFF),
+            OrderingStrategy::Auto
+        );
+    }
+
+    #[test]
+    fn vat_with_is_strategy_independent() {
+        let ds = blobs(120, 2, 3, 0.5, 21);
+        let d = build(&ds);
+        let reference = vat(&d);
+        for s in [
+            OrderingStrategy::Prim,
+            OrderingStrategy::Boruvka,
+            OrderingStrategy::Auto,
+        ] {
+            let r = vat_with(&d, s);
+            assert_eq!(r.order, reference.order, "{s:?}");
+            assert_eq!(r.mst, reference.mst, "{s:?}");
+        }
     }
 
     #[test]

@@ -136,7 +136,18 @@ pub fn vat_order_naive<S: DistanceStorage>(d: &S) -> Vec<usize> {
                 best_j = j as isize;
             }
         }
-        let q = best_j as usize;
+        // NaN guard: when every unselected dmin is NaN the scan above never
+        // fires (NaN comparisons are all false) and best_j would stay -1 —
+        // previously wrapping to usize::MAX and indexing out of bounds.
+        // Fall back to the first unselected index, mirroring the
+        // `maximin_sample` NaN fix in svat.rs.
+        let q = if best_j >= 0 {
+            best_j as usize
+        } else {
+            (0..n)
+                .find(|&j| !selected[j])
+                .expect("loop runs exactly n-1 times, so one remains")
+        };
         order.push(q);
         selected[q] = true;
         for j in 0..n {
@@ -150,6 +161,13 @@ pub fn vat_order_naive<S: DistanceStorage>(d: &S) -> Vec<usize> {
 
 /// Reconstruct MST edges (display coordinates) from a known VAT order:
 /// the point at display position `t` connects to its nearest predecessor.
+///
+/// Parent rule pinned to the inline sweep's: the **lowest display position**
+/// among the minimizers wins (strict `<` keeps the first). The accumulator
+/// is seeded from position 0's actual distance rather than `INFINITY`, so
+/// NaN rows behave exactly like the sweep's sticky-dmin semantics (a NaN at
+/// position 0 is kept, never skipped for a later finite value) and the
+/// rebuilt edges equal the inline MST tuple-for-tuple.
 pub fn mst_from_order<S: DistanceStorage>(
     d: &S,
     order: &[usize],
@@ -157,8 +175,8 @@ pub fn mst_from_order<S: DistanceStorage>(
     let mut mst = Vec::with_capacity(order.len().saturating_sub(1));
     for t in 1..order.len() {
         let mut best_p = 0;
-        let mut best_v = f64::INFINITY;
-        for (p, &ip) in order[..t].iter().enumerate() {
+        let mut best_v = d.get(order[0], order[t]);
+        for (p, &ip) in order.iter().enumerate().take(t).skip(1) {
             let v = d.get(ip, order[t]);
             if v < best_v {
                 best_v = v;
@@ -236,13 +254,97 @@ mod tests {
         let ds = blobs(45, 2, 3, 0.5, 17);
         let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
         let (order, mst) = vat_order(&d);
-        let rebuilt = mst_from_order(&d, &order);
-        assert_eq!(mst.len(), rebuilt.len());
-        for (a, b) in mst.iter().zip(&rebuilt) {
-            assert_eq!(a.1, b.1);
-            assert!((a.2 - b.2).abs() < 1e-12);
-            // parent may differ only under exact ties; weights must agree
+        // full tuple equality: parents now pinned to the inline rule
+        assert_eq!(mst, mst_from_order(&d, &order));
+    }
+
+    #[test]
+    fn mst_from_order_matches_inline_on_tie_heavy_fixture() {
+        // quantized distances force masses of exact parent ties; the pinned
+        // rule (lowest display position wins) must make the rebuilt edges
+        // equal the inline MST tuple-for-tuple, parents included
+        let mut rng = crate::prng::Pcg32::new(1234);
+        for trial in 0..12 {
+            let n = 6 + rng.below(30) as usize;
+            let mut d = DistanceMatrix::zeros(n);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    // values from {0.25, 0.5, 0.75, 1.0}: heavy exact ties
+                    let v = (1 + rng.below(4)) as f64 * 0.25;
+                    d.set(i, j, v);
+                    d.set(j, i, v);
+                }
+            }
+            let (order, mst) = vat_order(&d);
+            assert_eq!(
+                mst,
+                mst_from_order(&d, &order),
+                "trial {trial} n {n}: rebuilt MST must equal inline MST exactly"
+            );
         }
+    }
+
+    /// NaN-aware MST edge comparison: tuples with NaN weights defeat
+    /// `assert_eq!` (NaN != NaN), so compare positions exactly and weights
+    /// bitwise-or-both-NaN.
+    fn assert_mst_eq(a: &[(usize, usize, f64)], b: &[(usize, usize, f64)]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!((x.0, x.1), (y.0, y.1), "{x:?} vs {y:?}");
+            assert!(
+                x.2 == y.2 || (x.2.is_nan() && y.2.is_nan()),
+                "{x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn naive_survives_single_all_nan_row_and_matches_fast() {
+        // regression for the best_j = -1 out-of-bounds wrap: one point with
+        // all-NaN distances is appended last by BOTH sweeps (its dmin is
+        // sticky-NaN and never wins the argmin), so fast ≡ naive holds
+        let ds = gmm(24, 2, 2, 99);
+        let mut d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let poison = 17;
+        for j in 0..24 {
+            if j != poison {
+                d.set(poison, j, f64::NAN);
+                d.set(j, poison, f64::NAN);
+            }
+        }
+        let (fast, mst) = vat_order(&d);
+        let naive = vat_order_naive(&d);
+        assert_eq!(fast, naive, "fast and fixed-naive must agree");
+        assert_eq!(*fast.last().unwrap(), poison, "NaN point must come last");
+        // its connecting edge is the sticky NaN from the seed fold
+        assert!(mst.last().unwrap().2.is_nan());
+        // and the pinned mst_from_order reproduces the inline MST, NaN edge
+        // included (init from position 0, not INFINITY)
+        assert_mst_eq(&mst, &mst_from_order(&d, &fast));
+    }
+
+    #[test]
+    fn naive_survives_fully_nan_matrix() {
+        // every off-diagonal NaN: the old code wrapped best_j = -1 to
+        // usize::MAX and panicked; the fix must yield a valid permutation
+        // (ascending: each step falls back to the first unselected index)
+        let n = 9;
+        let mut d = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, f64::NAN);
+                }
+            }
+        }
+        let naive = vat_order_naive(&d);
+        assert_eq!(naive, (0..n).collect::<Vec<_>>());
+        // the fast sweep stays panic-free too and returns a permutation
+        // (swap_remove gives it a different but equally arbitrary order)
+        let (fast, _) = vat_order(&d);
+        let mut sorted = fast.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>());
     }
 
     #[test]

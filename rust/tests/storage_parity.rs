@@ -30,8 +30,11 @@ use fast_vat::dissimilarity::engine::{
 use fast_vat::dissimilarity::{
     DistanceStorage, Metric, ShardOptions, SquareBands, StorageKind,
 };
+use fast_vat::dissimilarity::condensed::CondensedMatrix;
+use fast_vat::dissimilarity::{DistanceMatrix, DistanceStore, ShardedTriangle};
 use fast_vat::runtime::SimulatedXlaEngine;
 use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::boruvka::vat_order_boruvka_stats;
 use fast_vat::vat::ivat::ivat_with;
 // the sharded runs below deliberately pin the deprecated tuned-knobs shim
 // (`ivat_with_opts`) byte-for-byte — intentional shim-equivalence usage;
@@ -540,6 +543,164 @@ fn square_band_tier_bitwise_identical_to_condensed_band_across_engines() {
                 render(&rstar).pixels,
                 "{ctx} rendered bytes diverged"
             );
+        }
+    }
+}
+
+/// MST equality with NaN-aware weights (`NaN != NaN` would defeat a plain
+/// `assert_eq!` on poisoned fixtures; endpoints still compare exactly).
+fn assert_mst_eq_nan(a: &[(usize, usize, f64)], b: &[(usize, usize, f64)], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: mst length");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!((x.0, x.1), (y.0, y.1), "{ctx}: mst edge {k} endpoints");
+        assert!(
+            x.2 == y.2 || (x.2.is_nan() && y.2.is_nan()),
+            "{ctx}: mst edge {k} weight {} vs {}",
+            x.2,
+            y.2
+        );
+    }
+}
+
+/// All four storage layouts over one poisoned/synthetic square matrix.
+fn stores_from_flat(flat: &[f64], n: usize) -> Vec<(&'static str, DistanceStore)> {
+    let opts = test_shard_opts();
+    let dense = DistanceStore::Dense(DistanceMatrix::from_flat(flat.to_vec(), n).unwrap());
+    let cond = DistanceStore::Condensed(CondensedMatrix::from_square_flat(flat, n).unwrap());
+    let shard = DistanceStore::Sharded(ShardedTriangle::from_square_flat(flat, n, &opts).unwrap());
+    let square =
+        DistanceStore::ShardedSquare(SquareBands::from_square_flat(flat, n, &opts).unwrap());
+    vec![
+        ("dense", dense),
+        ("condensed", cond),
+        ("sharded", shard),
+        ("sharded-square", square),
+    ]
+}
+
+#[test]
+fn boruvka_ordering_bitwise_identical_across_engines_metrics_and_storages() {
+    // the tentpole acceptance pin: the parallel Borůvka sweep reproduces the
+    // Prim sweep's permutation AND MST bit for bit on every engine × metric
+    // × storage layout, single-threaded and at full parallelism
+    let shard_opts = test_shard_opts();
+    let ds = gmm(140, 2, 3, 7103);
+    for metric in metrics() {
+        for e in engines() {
+            let dense = e.build_storage(&ds.points, metric, StorageKind::Dense).unwrap();
+            let cond = e.build_storage(&ds.points, metric, StorageKind::Condensed).unwrap();
+            let shard =
+                DistanceStore::Sharded(e.build_sharded(&ds.points, metric, &shard_opts).unwrap());
+            let square = DistanceStore::ShardedSquare(
+                e.build_sharded_square(&ds.points, metric, &shard_opts).unwrap(),
+            );
+            let builds: Vec<(&str, DistanceStore)> = vec![
+                ("dense", dense),
+                ("condensed", cond),
+                ("sharded", shard),
+                ("sharded-square", square),
+            ];
+            for (layout, store) in &builds {
+                let reference = vat(store);
+                for threads in [1usize, 0] {
+                    let ctx = format!("{} on {layout} / {metric:?} / threads={threads}", e.name());
+                    let out = vat_order_boruvka_stats(store, threads);
+                    assert_eq!(out.order, reference.order, "{ctx}: order");
+                    assert_eq!(out.mst, reference.mst, "{ctx}: mst");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn boruvka_ivat_and_rendered_bytes_identical_to_prim() {
+    // downstream of the identical permutation the pixels must also agree —
+    // pinned end to end through the strategy knob rather than re-derived
+    let ds = moons(150, 0.06, 7102);
+    let e = BlockedEngine;
+    let run = |strategy| {
+        Analysis::of(ds.points.clone())
+            .ordering(strategy)
+            .ivat(true)
+            .detect_blocks(BlockDetector::default())
+            .insight(true)
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute(&e)
+            .unwrap()
+    };
+    let prim = run(fast_vat::vat::OrderingStrategy::Prim);
+    let boruvka = run(fast_vat::vat::OrderingStrategy::Boruvka);
+    assert_eq!(prim.plan.ordering, "prim");
+    assert_eq!(boruvka.plan.ordering, "boruvka");
+    assert_eq!(prim.vat.order, boruvka.vat.order);
+    assert_eq!(prim.vat.mst, boruvka.vat.mst);
+    assert_eq!(prim.blocks, boruvka.blocks);
+    assert_eq!(prim.insight, boruvka.insight);
+    assert_eq!(
+        prim.image.as_ref().unwrap().pixels,
+        boruvka.image.as_ref().unwrap().pixels,
+        "rendered iVAT bytes diverged across ordering strategies"
+    );
+}
+
+#[test]
+fn boruvka_nan_poisoned_fixture_falls_back_and_matches_prim_on_all_storages() {
+    // a NaN row/column (a corrupt upstream distance) must route Borůvka
+    // through the sequential fallback on every layout, with the exact
+    // permutation and a NaN-aware-identical MST
+    let ds = gmm(60, 2, 2, 7601);
+    let base = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+    let n = 60usize;
+    let poison = 17usize;
+    let mut flat = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            flat[i * n + j] = if i != j && (i == poison || j == poison) {
+                f64::NAN
+            } else {
+                base.get(i, j)
+            };
+        }
+    }
+    let dense_ref = DistanceMatrix::from_flat(flat.clone(), n).unwrap();
+    let (ref_order, ref_mst) = fast_vat::vat::prim::vat_order_on(&dense_ref);
+    assert_eq!(*ref_order.last().unwrap(), poison, "NaN point orders last");
+    for (layout, store) in stores_from_flat(&flat, n) {
+        let out = vat_order_boruvka_stats(&store, 0);
+        assert!(out.fell_back, "{layout}: NaN input must take the fallback");
+        assert_eq!(out.order, ref_order, "{layout}: order");
+        assert_mst_eq_nan(&out.mst, &ref_mst, layout);
+    }
+}
+
+#[test]
+fn boruvka_all_tied_fixture_stays_native_and_exact_on_all_storages() {
+    // the fully degenerate matrix (every off-diagonal distance equal) is
+    // tie-heavy yet Borůvka's pinned tie-break builds exactly Prim's tree —
+    // no fallback, identical output, on every layout and thread count
+    let n = 48usize;
+    let mut flat = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                flat[i * n + j] = 1.0;
+            }
+        }
+    }
+    let dense_ref = DistanceMatrix::from_flat(flat.clone(), n).unwrap();
+    let (ref_order, ref_mst) = fast_vat::vat::prim::vat_order_on(&dense_ref);
+    for (layout, store) in stores_from_flat(&flat, n) {
+        for threads in [1usize, 3, 0] {
+            let out = vat_order_boruvka_stats(&store, threads);
+            assert!(
+                !out.fell_back,
+                "{layout}/threads={threads}: all-tied must verify natively"
+            );
+            assert_eq!(out.order, ref_order, "{layout}/threads={threads}: order");
+            assert_eq!(out.mst, ref_mst, "{layout}/threads={threads}: mst");
         }
     }
 }
