@@ -52,7 +52,8 @@ pub mod policy;
 pub mod report;
 
 pub use policy::{
-    condensed_bytes, dense_bytes, AccessProfile, SamplePolicy, StorageDecision, StoragePolicy,
+    auto_knn_k, condensed_bytes, dense_bytes, AccessProfile, SamplePolicy, StorageDecision,
+    StoragePolicy,
 };
 pub use report::{AnalysisReport, ResolvedPlan, SampleInfo, StageTimings};
 
@@ -62,13 +63,22 @@ use std::time::Instant;
 use crate::data::scale::Scaler;
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
-use crate::dissimilarity::{DistanceStore, Metric, ShardOptions, SquareBands};
+use crate::dissimilarity::{DistanceStore, Metric, ShardOptions, SquareBands, StorageKind};
 use crate::error::{Error, Result};
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::vat::blocks::BlockDetector;
 use crate::vat::svat::{assign_nearest, maximin_sample};
-use crate::vat::{ivat, vat_with, OrderingStrategy};
+use crate::vat::{ivat, knn, vat_with, OrderingStrategy, VatResult};
 use crate::viz::render;
+
+/// Test-only escape hatch: when `FAST_VAT_TEST_FORCE_APPROX` is set (and
+/// not `"0"` / empty), every storage-backed VAT sweep reroutes through the
+/// kNN tier at k = n−1 — complete-graph mode, whose fidelity contract
+/// makes the reroute bitwise invisible. CI's approx-parity leg runs the
+/// whole suite this way.
+fn force_approx() -> bool {
+    std::env::var_os("FAST_VAT_TEST_FORCE_APPROX").is_some_and(|v| !v.is_empty() && v != "0")
+}
 
 /// What the plan assesses: raw points (the engine builds distances) or
 /// precomputed distance storage (streaming snapshots, pre-built matrices).
@@ -271,6 +281,16 @@ impl Analysis {
                 "insight requires detect_blocks on the plan".into(),
             ));
         }
+        if matches!(self.storage, StoragePolicy::Approx { .. })
+            && matches!(self.input, PlanInput::Points(_))
+            && !self.approx_stages_ok()
+        {
+            return Err(Error::InvalidArg(
+                "the approx tier never materializes the raw distance image: insight and \
+                 keep_matrix are unavailable, and render/detect_blocks need ivat(true)"
+                    .into(),
+            ));
+        }
         match &self.input {
             PlanInput::Points(points) => {
                 if self.hopkins_runs > 0 && points.n() < 2 {
@@ -298,6 +318,18 @@ impl Analysis {
             }
         }
         Ok(AnalysisPlan { spec: self })
+    }
+
+    /// Whether every requested stage can run without distance storage —
+    /// the gate for the matrix-free approx tier on point input. Insight,
+    /// `keep_matrix`, and render/detection *without* the iVAT transform
+    /// all read the raw distance image; everything else (VAT order, iVAT,
+    /// detection/render over iVAT, Hopkins) needs only the MST or the
+    /// points themselves.
+    fn approx_stages_ok(&self) -> bool {
+        !self.insight
+            && !self.keep_matrix
+            && (self.ivat || (!self.render && self.detector.is_none()))
     }
 }
 
@@ -349,9 +381,16 @@ impl AnalysisPlan {
                 || spec.keep_matrix,
         };
 
-        // stage 1: input → distance storage (+ resolved plan, sVAT record)
-        let (store, resolved, sample_info, z_opt) = match &spec.input {
+        // stage 1: input → distance storage (+ resolved plan, sVAT record).
+        // The matrix-free approx tier short-circuits here: the VAT sweep
+        // arrives pre-computed (`pre_vat`) and `store` stays `None`.
+        let (store, pre_vat, store_approx_k, resolved, sample_info, z_opt) = match &spec.input {
             PlanInput::Storage(s) => {
+                // an Approx policy over precomputed storage runs the kNN
+                // tier's sweep against the store (exact neighbor lists,
+                // recall 1.0); the store itself is kept, so every stage
+                // stays available
+                let approx_k = spec.storage.approx_k(s.n());
                 let resolved = ResolvedPlan {
                     metric: spec.metric,
                     standardize: false,
@@ -364,89 +403,162 @@ impl AnalysisPlan {
                     n_input: s.n(),
                     n_assessed: s.n(),
                     engine: engine.map(|e| e.name()).unwrap_or("precomputed"),
-                    ordering: spec.ordering.resolve(s.n()).as_str(),
+                    ordering: if approx_k.is_some() {
+                        "approx"
+                    } else {
+                        spec.ordering.resolve(s.n()).as_str()
+                    },
                 };
-                (s.clone(), resolved, None, None)
+                (Some(s.clone()), None, approx_k, resolved, None, None)
             }
             PlanInput::Points(points) => {
-                let engine = engine.ok_or_else(|| {
-                    Error::InvalidArg(
-                        "a points-input plan needs a distance engine; call execute(engine)"
-                            .into(),
-                    )
-                })?;
                 let z = if spec.standardize {
                     Scaler::standardized(points)
                 } else {
                     points.clone()
                 };
                 let n_input = z.n();
-                let (built, decision, n_assessed, info) =
-                    match spec.sample.resolve(n_input) {
-                        Some(s) => {
-                            let t = Instant::now();
-                            let indices = maximin_sample(&z, s, spec.metric, spec.seed);
-                            let sub = z.select(&indices);
-                            // shared with sVAT, so assignments match the
-                            // deprecated shim bitwise
-                            let assignment = assign_nearest(&z, &indices, spec.metric);
-                            timings.sample_s = t.elapsed().as_secs_f64();
-                            let decision =
-                                spec.storage.resolve_for(sub.n(), access, &spec.shard);
-                            let t = Instant::now();
-                            let built = engine.build_storage_with(
-                                &sub,
-                                spec.metric,
-                                decision.kind,
-                                &decision.shard,
-                            )?;
-                            timings.distance_s = t.elapsed().as_secs_f64();
-                            let n_assessed = sub.n();
-                            (
-                                built,
-                                decision,
-                                n_assessed,
-                                Some(SampleInfo {
-                                    indices,
-                                    assignment,
-                                }),
-                            )
-                        }
-                        None => {
-                            let decision =
-                                spec.storage.resolve_for(n_input, access, &spec.shard);
-                            let t = Instant::now();
-                            let built = engine.build_storage_with(
-                                &z,
-                                spec.metric,
-                                decision.kind,
-                                &decision.shard,
-                            )?;
-                            timings.distance_s = t.elapsed().as_secs_f64();
-                            (built, decision, n_input, None)
-                        }
-                    };
-                let resolved = ResolvedPlan {
-                    metric: spec.metric,
-                    standardize: spec.standardize,
-                    storage: decision.kind,
-                    shard: decision.shard,
-                    reorder_spill: decision.reorder_spill,
-                    n_input,
-                    n_assessed,
-                    engine: engine.name(),
-                    ordering: spec.ordering.resolve(n_assessed).as_str(),
+                // sVAT maximin sampling runs first (it needs only the
+                // points); the approx cutover below is judged on the
+                // points actually assessed
+                let sampled = match spec.sample.resolve(n_input) {
+                    Some(s) => {
+                        let t = Instant::now();
+                        let indices = maximin_sample(&z, s, spec.metric, spec.seed);
+                        let sub = z.select(&indices);
+                        // shared with sVAT, so assignments match the
+                        // deprecated shim bitwise
+                        let assignment = assign_nearest(&z, &indices, spec.metric);
+                        timings.sample_s = t.elapsed().as_secs_f64();
+                        (
+                            sub,
+                            Some(SampleInfo {
+                                indices,
+                                assignment,
+                            }),
+                        )
+                    }
+                    None => (z.clone(), None),
                 };
-                (Arc::new(built), resolved, info, Some(z))
+                let (assess, info) = sampled;
+                let n_assessed = assess.n();
+                // the matrix-free tier: metric-direct kNN graph → sparse
+                // Borůvka → replay; no engine, no distance storage. An
+                // explicit Approx policy was stage-checked at plan time;
+                // an Auto cutover only fires when the stages allow it
+                // (else it falls through to the exact resolver).
+                let approx_k = spec
+                    .storage
+                    .approx_k(n_assessed)
+                    .filter(|_| spec.approx_stages_ok());
+                if let Some(k) = approx_k {
+                    let t = Instant::now();
+                    let av = knn::approx_vat_points(&assess, spec.metric, k, spec.seed);
+                    timings.vat_s = t.elapsed().as_secs_f64();
+                    let resolved = ResolvedPlan {
+                        metric: spec.metric,
+                        standardize: spec.standardize,
+                        // the echo names the layout any transform is
+                        // emitted in; `AnalysisReport::approx` carries
+                        // the tier's own record
+                        storage: StorageKind::Condensed,
+                        shard: spec.shard.clone(),
+                        reorder_spill: false,
+                        n_input,
+                        n_assessed,
+                        engine: "approx",
+                        ordering: "approx",
+                    };
+                    (
+                        None,
+                        Some((
+                            VatResult {
+                                order: av.order,
+                                mst: av.mst,
+                            },
+                            av.outcome,
+                        )),
+                        None,
+                        resolved,
+                        info,
+                        Some(z),
+                    )
+                } else {
+                    let engine = engine.ok_or_else(|| {
+                        Error::InvalidArg(
+                            "a points-input plan needs a distance engine; call execute(engine)"
+                                .into(),
+                        )
+                    })?;
+                    let decision = spec.storage.resolve_for(n_assessed, access, &spec.shard);
+                    let t = Instant::now();
+                    let built = engine.build_storage_with(
+                        &assess,
+                        spec.metric,
+                        decision.kind,
+                        &decision.shard,
+                    )?;
+                    timings.distance_s = t.elapsed().as_secs_f64();
+                    let resolved = ResolvedPlan {
+                        metric: spec.metric,
+                        standardize: spec.standardize,
+                        storage: decision.kind,
+                        shard: decision.shard,
+                        reorder_spill: decision.reorder_spill,
+                        n_input,
+                        n_assessed,
+                        engine: engine.name(),
+                        ordering: spec.ordering.resolve(n_assessed).as_str(),
+                    };
+                    (
+                        Some(Arc::new(built)),
+                        None,
+                        None,
+                        resolved,
+                        info,
+                        Some(z),
+                    )
+                }
             }
         };
 
-        // stage 2: VAT ordering — the resolved strategy (echoed in
-        // `resolved.ordering`) only changes the wall-clock path; Prim and
-        // Borůvka produce bitwise-identical results
-        let t = Instant::now();
-        let v = vat_with(store.as_ref(), spec.ordering);
-        timings.vat_s = t.elapsed().as_secs_f64();
+        // stage 2: VAT ordering — Prim and Borůvka are bitwise identical
+        // (the resolved strategy only moves wall-clock). The approx tier's
+        // sweep arrives pre-computed from stage 1; a storage-backed approx
+        // request — or the FAST_VAT_TEST_FORCE_APPROX parity harness —
+        // runs `knn::approx_vat_on` here instead.
+        let (v, approx) = match pre_vat {
+            Some((v, outcome)) => (v, Some(outcome)),
+            None => {
+                let s = store
+                    .as_deref()
+                    .expect("exact tiers always build distance storage");
+                let t = Instant::now();
+                let (v, outcome) = if let Some(k) = store_approx_k {
+                    let av = knn::approx_vat_on(s, k, spec.seed);
+                    (
+                        VatResult {
+                            order: av.order,
+                            mst: av.mst,
+                        },
+                        Some(av.outcome),
+                    )
+                } else if force_approx() {
+                    let av = knn::approx_vat_on(s, s.n().saturating_sub(1), spec.seed);
+                    (
+                        VatResult {
+                            order: av.order,
+                            mst: av.mst,
+                        },
+                        Some(av.outcome),
+                    )
+                } else {
+                    (vat_with(s, spec.ordering), None)
+                };
+                timings.vat_s = t.elapsed().as_secs_f64();
+                (v, outcome)
+            }
+        };
 
         // stage 2½: reorder-then-spill — when the resolver asked for it,
         // rewrite R* in display order (one sequential pass over the
@@ -456,17 +568,31 @@ impl AnalysisPlan {
         // bitwise identical to reading through the permuted view.
         let rstar: Option<SquareBands> = if resolved.reorder_spill {
             let t = Instant::now();
-            let r = SquareBands::reorder_spill(store.as_ref(), &v.order, &resolved.shard)?;
+            let r = SquareBands::reorder_spill(
+                store.as_deref().expect("reorder_spill implies storage"),
+                &v.order,
+                &resolved.shard,
+            )?;
             timings.respill_s = t.elapsed().as_secs_f64();
             Some(r)
         } else {
             None
         };
 
-        // stage 3: iVAT transform, emitted in the resolved layout
-        let ivat_result = if spec.ivat {
+        // stage 3: iVAT transform, emitted in the resolved layout. When
+        // the plan wants only the rendered iVAT image (no detection or
+        // insight), skip the O(n²) transform entirely — stage 6 renders
+        // straight from the MST, bitwise identical
+        // (`ivat::image_from_mst`). This is also how the approx tier
+        // keeps image requests matrix-free.
+        let image_only = spec.ivat && spec.render && spec.detector.is_none() && !spec.insight;
+        let ivat_result = if spec.ivat && !image_only {
             let t = Instant::now();
-            let iv = ivat::transform(&v, store.kind(), &resolved.shard)?;
+            let kind = store
+                .as_deref()
+                .map(|s| s.kind())
+                .unwrap_or(StorageKind::Condensed);
+            let iv = ivat::transform(&v, kind, &resolved.shard)?;
             timings.ivat_s = t.elapsed().as_secs_f64();
             Some(iv)
         } else {
@@ -479,18 +605,25 @@ impl AnalysisPlan {
             let blocks = match (&ivat_result, &rstar) {
                 (Some(iv), _) => det.detect(&iv.transformed),
                 (None, Some(r)) => det.detect(r),
-                (None, None) => det.detect(&v.view(store.as_ref())),
+                (None, None) => det.detect(&v.view(
+                    store
+                        .as_deref()
+                        .expect("validated: detection without iVAT reads the distance image"),
+                )),
             };
             let insight = if spec.insight {
+                // insight reads the raw distance image, so it is rejected
+                // at plan time for the matrix-free tier
+                let s = store
+                    .as_deref()
+                    .expect("validated: insight reads the distance image");
                 // `blocks` are iVAT blocks when the plan ran iVAT — exactly
                 // what the insight vocabulary wants; otherwise run the
                 // transform here (it reads only the MST, never the storage)
                 let ivat_blocks = match &ivat_result {
                     Some(_) => None,
                     None => Some(
-                        det.detect(
-                            &ivat::transform(&v, store.kind(), &resolved.shard)?.transformed,
-                        ),
+                        det.detect(&ivat::transform(&v, s.kind(), &resolved.shard)?.transformed),
                     ),
                 };
                 let ivat_blocks = ivat_blocks.as_ref().unwrap_or(&blocks);
@@ -498,7 +631,7 @@ impl AnalysisPlan {
                 // display-ordered spill when we have one, else the view
                 Some(match &rstar {
                     Some(r) => det.insight_from_image(r, ivat_blocks),
-                    None => det.insight_with(&v, ivat_blocks, store.as_ref()),
+                    None => det.insight_with(&v, ivat_blocks, s),
                 })
             } else {
                 None
@@ -528,10 +661,21 @@ impl AnalysisPlan {
         // to rendering through the view)
         let image = if spec.render {
             let t = Instant::now();
-            let img = match (&ivat_result, &rstar) {
-                (Some(iv), _) => render(&iv.transformed),
-                (None, Some(r)) => render(r),
-                (None, None) => render(&v.view(store.as_ref())),
+            let img = if image_only {
+                // matrix-free: two path-max DFS sweeps over the MST —
+                // bitwise the pixels of rendering the materialized
+                // transform (pinned in `storage_parity`)
+                ivat::image_from_mst(&v)
+            } else {
+                match (&ivat_result, &rstar) {
+                    (Some(iv), _) => render(&iv.transformed),
+                    (None, Some(r)) => render(r),
+                    (None, None) => render(&v.view(
+                        store
+                            .as_deref()
+                            .expect("validated: raw-image render reads the distance image"),
+                    )),
+                }
             };
             timings.render_s = t.elapsed().as_secs_f64();
             Some(img)
@@ -543,7 +687,11 @@ impl AnalysisPlan {
             // the spill IS R* — expand it with one streaming pass instead
             // of a random gather through the permutation
             Some(r) => r.to_square(),
-            None => v.materialize(store.as_ref()),
+            None => v.materialize(
+                store
+                    .as_deref()
+                    .expect("validated: keep_matrix reads the distance image"),
+            ),
         });
         timings.total_s = t_total.elapsed().as_secs_f64();
 
@@ -551,6 +699,7 @@ impl AnalysisPlan {
             plan: resolved,
             vat: v,
             storage: store,
+            approx,
             ivat: ivat_result,
             blocks,
             insight,
@@ -689,7 +838,8 @@ mod tests {
             .unwrap()
             .execute_precomputed()
             .unwrap();
-        assert!(Arc::ptr_eq(&store, &report.storage));
+        assert!(Arc::ptr_eq(&store, report.storage.as_ref().unwrap()));
+        assert!(report.approx.is_none() || force_approx());
         assert_eq!(report.vat.order, expect.order);
         assert_eq!(report.plan.engine, "precomputed");
         assert_eq!(report.timings.distance_s, 0.0);
@@ -786,6 +936,144 @@ mod tests {
         assert_eq!(over.plan.ordering, "boruvka");
         assert_eq!(over.vat.order, expect.order);
         assert_eq!(over.vat.mst, expect.mst);
+    }
+
+    #[test]
+    fn approx_policy_validates_stage_compatibility() {
+        let pts = blobs(30, 2, 2, 0.4, 21).points;
+        let approx = StoragePolicy::Approx { k: 8 };
+        // raw-image stages are rejected on point input…
+        assert!(Analysis::of(pts.clone())
+            .storage(approx.clone())
+            .keep_matrix(true)
+            .plan()
+            .is_err());
+        assert!(Analysis::of(pts.clone())
+            .storage(approx.clone())
+            .detect_blocks(BlockDetector::default())
+            .insight(true)
+            .plan()
+            .is_err());
+        assert!(Analysis::of(pts.clone())
+            .storage(approx.clone())
+            .render(true)
+            .plan()
+            .is_err());
+        assert!(Analysis::of(pts.clone())
+            .storage(approx.clone())
+            .detect_blocks(BlockDetector::default())
+            .plan()
+            .is_err());
+        // …but run fine over the iVAT transform, and point-only stages
+        // that never touch distances stay available
+        assert!(Analysis::of(pts.clone())
+            .storage(approx.clone())
+            .ivat(true)
+            .render(true)
+            .detect_blocks(BlockDetector::default())
+            .plan()
+            .is_ok());
+        assert!(Analysis::of(pts.clone())
+            .storage(approx.clone())
+            .hopkins(1)
+            .plan()
+            .is_ok());
+        assert!(Analysis::of(pts).storage(approx).plan().is_ok());
+    }
+
+    #[test]
+    fn approx_tier_runs_matrix_free_on_points() {
+        let ds = blobs(120, 3, 3, 0.5, 22);
+        let report = Analysis::of(ds.points.clone())
+            .storage(StoragePolicy::Approx { k: 10 })
+            .ivat(true)
+            .render(true)
+            .hopkins(1)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        // no distance storage was ever materialized
+        assert!(report.storage.is_none());
+        assert_eq!(report.plan.engine, "approx");
+        assert_eq!(report.plan.ordering, "approx");
+        assert_eq!(report.plan.storage, StorageKind::Condensed);
+        let a = report.approx.as_ref().unwrap();
+        assert_eq!((a.n, a.requested_k, a.k), (120, 10, 10));
+        assert!(!a.complete);
+        assert!(a.neighbor_recall > 0.0 && a.neighbor_recall <= 1.0);
+        assert!(a.mst_weight_ratio.unwrap() >= 1.0 - 1e-12);
+        assert!(a.order_agreement.is_some());
+        // a full permutation, a spanning tree, and the MST-rendered image
+        let mut sorted = report.vat.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..120).collect::<Vec<_>>());
+        assert_eq!(report.vat.mst.len(), 119);
+        let img = report.image.as_ref().unwrap();
+        assert_eq!((img.width, img.height), (120, 120));
+        // image-only fast path: the transform matrix was skipped
+        assert!(report.ivat.is_none());
+        assert!(report.hopkins.is_some());
+    }
+
+    #[test]
+    fn auto_policy_escalates_to_approx_below_budget_cutover() {
+        let ds = blobs(100, 2, 3, 0.4, 23);
+        // budget below one square row (8·100 bytes): approx fires for
+        // compatible stage sets
+        let tiny = StoragePolicy::Auto {
+            memory_budget_bytes: 799,
+        };
+        let r = Analysis::of(ds.points.clone())
+            .storage(tiny.clone())
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert!(r.storage.is_none());
+        assert_eq!(r.plan.engine, "approx");
+        assert_eq!(r.approx.as_ref().unwrap().k, policy::auto_knn_k(100));
+        // an incompatible stage set falls through to the exact resolver
+        let exact = Analysis::of(ds.points)
+            .storage(tiny)
+            .keep_matrix(true)
+            .plan()
+            .unwrap()
+            .execute(&BlockedEngine)
+            .unwrap();
+        assert!(exact.storage.is_some());
+        assert!(exact.reordered.is_some());
+    }
+
+    #[test]
+    fn approx_policy_over_storage_keeps_the_store_and_all_stages() {
+        let ds = blobs(80, 2, 3, 0.4, 24);
+        let store = Arc::new(
+            BlockedEngine
+                .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+                .unwrap(),
+        );
+        let report = Analysis::over(store.clone())
+            .storage(StoragePolicy::Approx { k: 79 })
+            .detect_blocks(BlockDetector::default())
+            .render(true)
+            .plan()
+            .unwrap()
+            .execute_precomputed()
+            .unwrap();
+        // k = n−1: the complete graph — bitwise the exact sweep over
+        // this very store
+        let expect = vat(store.as_ref());
+        assert_eq!(report.vat.order, expect.order);
+        assert_eq!(report.vat.mst, expect.mst);
+        let a = report.approx.as_ref().unwrap();
+        assert!(a.complete && !a.fell_back);
+        assert_eq!(a.neighbor_recall, 1.0);
+        assert_eq!(report.plan.ordering, "approx");
+        // the store is kept, so raw-image stages stayed available
+        assert!(report.storage.is_some());
+        assert!(report.blocks.is_some());
+        assert!(report.image.is_some());
     }
 
     #[test]

@@ -60,6 +60,17 @@ pub enum StoragePolicy {
         /// Resident distance-byte budget for the request.
         memory_budget_bytes: usize,
     },
+    /// Sub-quadratic approximate tier: assess via a deterministic
+    /// k-nearest-neighbor graph ([`crate::vat::knn`]) instead of the full
+    /// n(n−1)/2 distance set — ~O(n·k·log n) time, O(n·k) bytes, no
+    /// distance matrix materialized. At `k ≥ n−1` the graph is complete
+    /// and the output is bitwise identical to the exact tiers; for
+    /// smaller k the run reports measured fidelity metrics
+    /// ([`crate::vat::knn::ApproxOutcome`]) instead of silently degrading.
+    Approx {
+        /// Neighbors per point (clamped to `1..=n−1` at resolve time).
+        k: usize,
+    },
 }
 
 impl Default for StoragePolicy {
@@ -76,6 +87,18 @@ pub fn dense_bytes(n: usize) -> usize {
 /// Resident bytes of the condensed n(n−1)/2 layout.
 pub fn condensed_bytes(n: usize) -> usize {
     n * n.saturating_sub(1) / 2 * 8
+}
+
+/// The neighbor count `Auto` uses when it escalates to the approximate
+/// tier: `min(n−1, max(8, 2·⌈log₂ n⌉))`. Grows with the log of the point
+/// count (connectivity of random kNN graphs needs Θ(log n) neighbors),
+/// floors at 8 for small n, and never exceeds the complete graph.
+pub fn auto_knn_k(n: usize) -> usize {
+    let ceil_log2 = match n {
+        0 | 1 => 0,
+        _ => (usize::BITS - (n - 1).leading_zeros()) as usize,
+    };
+    n.saturating_sub(1).min((2 * ceil_log2).max(8))
 }
 
 /// How a request will *read* its distance storage after the build — the
@@ -159,6 +182,18 @@ impl StoragePolicy {
                 shard: base.clone(),
                 reorder_spill: access.wants_reorder_spill(*kind),
             },
+            // The approximate tier never materializes a distance store, so
+            // there is nothing to lay out; executors consult
+            // [`StoragePolicy::approx_k`] first and skip this resolver.
+            // When a caller resolves anyway (documented fallback — e.g. a
+            // precomputed-matrix run under an Approx policy), the answer is
+            // the condensed triangle: the layout the approximate tier's
+            // iVAT emission uses for its transform output.
+            StoragePolicy::Approx { .. } => StorageDecision {
+                kind: StorageKind::Condensed,
+                shard: base.clone(),
+                reorder_spill: false,
+            },
             StoragePolicy::Auto {
                 memory_budget_bytes,
             } => {
@@ -203,6 +238,36 @@ impl StoragePolicy {
                         reorder_spill: access
                             .wants_reorder_spill(StorageKind::ShardedSquare),
                     }
+                }
+            }
+        }
+    }
+
+    /// Whether an n-point **points-input** request should take the
+    /// sub-quadratic approximate path, and with how many neighbors.
+    ///
+    /// * `Fixed(_)` — never; exact tiers were pinned explicitly.
+    /// * `Approx { k }` — always, with `k` clamped to `1..=n−1`.
+    /// * `Auto { budget }` — only when even the cheapest exact layout
+    ///   cannot hold a single square row (`budget < 8·n`): at that point
+    ///   every sharded geometry degenerates to sub-row bands and the
+    ///   request escapes the quadratic wall via [`auto_knn_k`] neighbors
+    ///   instead. This sits *ahead* of sVAT sampling in the executor: the
+    ///   approximate tier assesses every point, sampling only assesses
+    ///   `cap` of them.
+    ///
+    /// Returns `None` when the exact path should run.
+    pub fn approx_k(&self, n: usize) -> Option<usize> {
+        match self {
+            StoragePolicy::Fixed(_) => None,
+            StoragePolicy::Approx { k } => Some((*k).clamp(1, n.saturating_sub(1).max(1))),
+            StoragePolicy::Auto {
+                memory_budget_bytes,
+            } => {
+                if *memory_budget_bytes < 8 * n.max(1) {
+                    Some(auto_knn_k(n).max(1))
+                } else {
+                    None
                 }
             }
         }
@@ -385,6 +450,67 @@ mod tests {
             }
             .resolve(n, &base);
             assert_eq!(kind, StorageKind::Dense, "n={n}");
+        }
+    }
+
+    #[test]
+    fn approx_policy_resolves_to_the_condensed_emission_layout() {
+        // the documented fallback: resolving an Approx policy (instead of
+        // consulting approx_k) yields the condensed layout the tier's iVAT
+        // emission uses, with the caller's shard knobs passed through
+        let base = ShardOptions {
+            shard_rows: 13,
+            cache_shards: 3,
+            spill_dir: None,
+        };
+        let d = StoragePolicy::Approx { k: 16 }.resolve_for(
+            500,
+            AccessProfile::permuted(),
+            &base,
+        );
+        assert_eq!(d.kind, StorageKind::Condensed);
+        assert_eq!(d.shard, base);
+        assert!(!d.reorder_spill);
+    }
+
+    #[test]
+    fn approx_k_cutover_sits_below_one_square_row() {
+        // Fixed tiers never go approximate
+        assert_eq!(StoragePolicy::Fixed(StorageKind::Dense).approx_k(100), None);
+        assert_eq!(
+            StoragePolicy::Fixed(StorageKind::ShardedSquare).approx_k(1_000_000),
+            None
+        );
+        // Approx always does, with k clamped into 1..=n−1
+        assert_eq!(StoragePolicy::Approx { k: 16 }.approx_k(100), Some(16));
+        assert_eq!(StoragePolicy::Approx { k: 500 }.approx_k(100), Some(99));
+        assert_eq!(StoragePolicy::Approx { k: 0 }.approx_k(100), Some(1));
+        // Auto escalates exactly when one 8·n-byte square row cannot fit:
+        // n = 100 → the cutover is at 800 bytes
+        let auto = |budget: usize| {
+            StoragePolicy::Auto {
+                memory_budget_bytes: budget,
+            }
+            .approx_k(100)
+        };
+        assert_eq!(auto(800), None); // one row fits: stay exact (sharded)
+        assert_eq!(auto(799), Some(auto_knn_k(100))); // sub-row: go approx
+    }
+
+    #[test]
+    fn auto_knn_k_grows_with_log_n_and_respects_the_complete_graph() {
+        assert_eq!(auto_knn_k(1024), 20); // 2·⌈log₂ 1024⌉ = 20 > floor 8
+        assert_eq!(auto_knn_k(10), 8); // 2·⌈log₂ 10⌉ = 8 = floor
+        assert_eq!(auto_knn_k(5), 4); // clamped to n−1
+        assert_eq!(auto_knn_k(1), 0);
+        assert_eq!(auto_knn_k(0), 0);
+        // monotone non-decreasing in n over a broad sweep
+        let mut prev = 0;
+        for n in 0..3000 {
+            let k = auto_knn_k(n);
+            assert!(k >= prev, "n={n}: {k} < {prev}");
+            assert!(k <= n.saturating_sub(1));
+            prev = k;
         }
     }
 

@@ -13,6 +13,7 @@ use crate::dissimilarity::{
 };
 use crate::vat::blocks::Block;
 use crate::vat::ivat::IvatResult;
+use crate::vat::knn::ApproxOutcome;
 use crate::vat::VatResult;
 use crate::viz::GrayImage;
 
@@ -36,11 +37,14 @@ pub struct ResolvedPlan {
     /// Points actually assessed (equals `n_input` unless sVAT escalated).
     pub n_assessed: usize,
     /// Engine that built the distances (`"precomputed"` for storage-input
-    /// plans executed without an engine).
+    /// plans executed without an engine, `"approx"` when the matrix-free
+    /// kNN tier ran — no engine builds distances there).
     pub engine: &'static str,
     /// The MST ordering strategy the VAT stage ran (`"prim"` or
-    /// `"boruvka"` — an `Auto` request echoes its resolution). Output is
-    /// bitwise identical either way; the echo records the wall-clock path.
+    /// `"boruvka"` — an `Auto` request echoes its resolution; `"approx"`
+    /// when the kNN tier supplied the ordering). Prim and Borůvka are
+    /// bitwise identical; the approx tier's fidelity is recorded in
+    /// [`AnalysisReport::approx`].
     pub ordering: &'static str,
 }
 
@@ -90,9 +94,18 @@ pub struct AnalysisReport {
     /// VAT permutation + MST (always computed; O(n) resident).
     pub vat: VatResult,
     /// The distance storage the stages ran over — shared, so retaining the
-    /// report never copies the distance buffer.
-    pub storage: Arc<DistanceStore>,
+    /// report never copies the distance buffer. `None` only for the
+    /// matrix-free approx tier, which never materializes distances.
+    pub storage: Option<Arc<DistanceStore>>,
+    /// Approx-tier record: effective `k`, graph/repair edge counts, and
+    /// the measured fidelity metrics (neighbor recall, MST weight ratio,
+    /// order agreement). `None` when the exact path ran.
+    pub approx: Option<ApproxOutcome>,
     /// iVAT transform in the resolved storage layout (when requested).
+    /// `None` when the stage was not in the plan — and also when the
+    /// executor took the image-only fast path (iVAT + render with no
+    /// detection/insight), where the image is rendered straight from the
+    /// MST and the transform matrix is never materialized.
     pub ivat: Option<IvatResult>,
     /// Detected diagonal blocks (when requested; over the iVAT transform
     /// when the plan ran iVAT, else over the raw VAT image).
@@ -120,7 +133,14 @@ impl AnalysisReport {
     }
 
     /// Zero-copy view of the VAT image `R*` over the report's storage.
+    ///
+    /// # Panics
+    /// For approx-tier reports, which carry no distance storage.
     pub fn view(&self) -> PermutedView<'_, DistanceStore> {
-        self.vat.view(self.storage.as_ref())
+        self.vat.view(
+            self.storage
+                .as_deref()
+                .expect("no distance storage: the approx tier never materializes distances"),
+        )
     }
 }

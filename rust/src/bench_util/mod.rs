@@ -10,7 +10,7 @@ use crate::data::generators;
 use crate::dissimilarity::engine::{DistanceEngine, ParallelEngine};
 use crate::dissimilarity::{Metric, StorageKind};
 use crate::error::Result;
-use crate::vat::{boruvka, prim};
+use crate::vat::{boruvka, knn, prim};
 
 /// Timing summary of repeated runs.
 #[derive(Debug, Clone)]
@@ -274,6 +274,171 @@ pub fn run_ordering_bench(
     })
 }
 
+/// One measured cell of the approx benchmark grid: an arm over one size.
+#[derive(Debug, Clone)]
+pub struct ApproxBenchRow {
+    /// Points in the dataset.
+    pub n: usize,
+    /// `"exact"` (matrix-free Prim over the points oracle) or `"approx"`
+    /// (the sub-quadratic kNN-graph tier).
+    pub arm: &'static str,
+    /// Effective neighbor count of the approx arm (0 for exact rows).
+    pub k: usize,
+    /// Wall-clock statistics over the repeated end-to-end orderings
+    /// (distance evaluations included — both arms are matrix-free, so the
+    /// metric evaluations ARE the work being compared).
+    pub timing: Timing,
+    /// Measured sampled neighbor recall (1.0 for exact rows).
+    pub neighbor_recall: f64,
+    /// Approx MST weight over the exact MST weight (≥ 1.0; only reported
+    /// at sizes small enough to afford the exact reference tree).
+    pub mst_weight_ratio: Option<f64>,
+    /// Adjacent-pair agreement with the exact VAT order (same gating).
+    pub order_agreement: Option<f64>,
+}
+
+/// The approx-tier benchmark: the sub-quadratic kNN-graph ordering against
+/// the exact matrix-free Prim sweep over a grid of dataset sizes.
+/// Serializes to the `BENCH_approx.json` schema the CI bench leg validates.
+#[derive(Debug, Clone)]
+pub struct ApproxBenchReport {
+    /// Measured cells, grid order: per size, `exact` then `approx`.
+    pub rows: Vec<ApproxBenchRow>,
+    /// `available_parallelism` on the measuring host.
+    pub threads_available: usize,
+    /// Where the numbers came from (host/harness description).
+    pub provenance: String,
+}
+
+impl ApproxBenchReport {
+    /// Hand-written JSON in the checked-in `BENCH_approx.json` schema
+    /// (the registry carries no serde).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"fast-vat/bench-approx/v1\",\n");
+        out.push_str(&format!(
+            "  \"provenance\": \"{}\",\n",
+            self.provenance.replace('"', "'")
+        ));
+        out.push_str(&format!(
+            "  \"threads_available\": {},\n",
+            self.threads_available
+        ));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let ratio = r
+                .mst_weight_ratio
+                .map_or("null".to_string(), |v| format!("{v:.6}"));
+            let agree = r
+                .order_agreement
+                .map_or("null".to_string(), |v| format!("{v:.6}"));
+            out.push_str(&format!(
+                "    {{\"n\": {}, \"arm\": \"{}\", \"k\": {}, \"mean_s\": {:.6}, \
+                 \"min_s\": {:.6}, \"max_s\": {:.6}, \"samples\": {}, \
+                 \"neighbor_recall\": {:.6}, \"mst_weight_ratio\": {}, \
+                 \"order_agreement\": {}}}{}\n",
+                r.n,
+                r.arm,
+                r.k,
+                r.timing.mean_s,
+                r.timing.min_s,
+                r.timing.max_s,
+                r.timing.samples,
+                r.neighbor_recall,
+                ratio,
+                agree,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Aligned human-readable table with per-size speedups.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["n", "arm", "k", "mean (s)", "speedup vs exact", "recall"]);
+        for r in &self.rows {
+            let base = self
+                .rows
+                .iter()
+                .find(|b| b.n == r.n && b.arm == "exact")
+                .map(|b| b.timing.mean_s);
+            let speedup = match base {
+                Some(b) if r.timing.mean_s > 0.0 => format!("{:.2}x", b / r.timing.mean_s),
+                _ => "-".into(),
+            };
+            t.row(&[
+                r.n.to_string(),
+                r.arm.to_string(),
+                r.k.to_string(),
+                r.timing.secs(),
+                speedup,
+                format!("{:.3}", r.neighbor_recall),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Run the deterministic approx benchmark: for each `n` in `sizes`, build a
+/// seeded GMM dataset, then time the exact matrix-free Prim sweep
+/// ([`knn::exact_vat_points`] — O(n²) metric evaluations, O(n) resident
+/// bytes, so the 50k cell needs no 20 GB matrix) against the sub-quadratic
+/// approx tier at the `Auto` policy's neighbor count. Fidelity metrics come
+/// from the approx run itself (recall is always measured; the exact-tree
+/// ratio/agreement only at sizes where the reference sweep is affordable).
+pub fn run_approx_bench(
+    sizes: &[usize],
+    budget_s: f64,
+    seed: u64,
+) -> Result<ApproxBenchReport> {
+    let threads_all = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let ds = generators::gmm(n, 2, 3, seed);
+        let timing = time_auto(budget_s, || {
+            let (order, mst) = knn::exact_vat_points(&ds.points, Metric::Euclidean);
+            observe(&order);
+            observe(&mst);
+        });
+        rows.push(ApproxBenchRow {
+            n,
+            arm: "exact",
+            k: 0,
+            timing,
+            neighbor_recall: 1.0,
+            mst_weight_ratio: None,
+            order_agreement: None,
+        });
+        let k = crate::analysis::auto_knn_k(n);
+        let probe = knn::approx_vat_points(&ds.points, Metric::Euclidean, k, knn::DEFAULT_SEED);
+        let timing = time_auto(budget_s, || {
+            let av = knn::approx_vat_points(&ds.points, Metric::Euclidean, k, knn::DEFAULT_SEED);
+            observe(&av.order);
+            observe(&av.mst);
+        });
+        rows.push(ApproxBenchRow {
+            n,
+            arm: "approx",
+            k: probe.outcome.k,
+            timing,
+            neighbor_recall: probe.outcome.neighbor_recall,
+            mst_weight_ratio: probe.outcome.mst_weight_ratio,
+            order_agreement: probe.outcome.order_agreement,
+        });
+    }
+    Ok(ApproxBenchReport {
+        rows,
+        threads_available: threads_all,
+        provenance: format!(
+            "native: fast-vat bench-approx (gmm seed {seed}, auto knn_k, \
+             {threads_all} threads available)"
+        ),
+    })
+}
+
 /// Simple fixed-width table printer (paper-style benchmark output).
 pub struct Table {
     headers: Vec<String>,
@@ -392,6 +557,28 @@ mod tests {
         assert!(json.contains("}\n  ]\n}"));
         let table = r.table();
         assert!(table.contains("speedup vs prim"));
+    }
+
+    #[test]
+    fn approx_bench_emits_schema_and_both_arms() {
+        let r = run_approx_bench(&[90, 140], 0.0, 7).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        for n in [90usize, 140] {
+            let exact = r.rows.iter().find(|x| x.n == n && x.arm == "exact").unwrap();
+            let approx = r.rows.iter().find(|x| x.n == n && x.arm == "approx").unwrap();
+            assert_eq!(exact.neighbor_recall, 1.0);
+            assert!(approx.k >= 1 && approx.k < n - 1, "sparse mode expected");
+            assert!(approx.neighbor_recall > 0.0 && approx.neighbor_recall <= 1.0);
+            // small n: the exact reference comparison is affordable
+            assert!(approx.mst_weight_ratio.unwrap() >= 1.0 - 1e-12);
+            assert!(approx.order_agreement.is_some());
+        }
+        let json = r.to_json();
+        assert!(json.contains("\"schema\": \"fast-vat/bench-approx/v1\""));
+        assert!(json.contains("\"arm\": \"approx\""));
+        assert!(json.contains("}\n  ]\n}"));
+        let table = r.table();
+        assert!(table.contains("speedup vs exact"));
     }
 
     #[test]

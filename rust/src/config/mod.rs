@@ -232,6 +232,11 @@ pub struct ServiceConfig {
     /// "prim" | "boruvka" | "auto"). `auto` picks the parallel Borůvka
     /// sweep above the size cutoff; output is bitwise identical either way.
     pub ordering: OrderingStrategy,
+    /// Neighbor count for the matrix-free approx tier (the `knn_k` key,
+    /// int ≥ 1; also selected by `storage = "approx"`, which then requires
+    /// `knn_k`). When set, jobs run the sub-quadratic kNN-graph sweep and
+    /// the `storage` layout is ignored.
+    pub knn_k: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -245,6 +250,7 @@ impl Default for ServiceConfig {
             shard: ShardOptions::default(),
             metric: Metric::Euclidean,
             ordering: OrderingStrategy::Auto,
+            knn_k: None,
         }
     }
 }
@@ -253,6 +259,10 @@ impl ServiceConfig {
     /// Read from a document's `[service]` section; unknown keys error.
     pub fn from_document(doc: &Document) -> Result<Self> {
         let mut cfg = ServiceConfig::default();
+        // `storage = "approx"` is a tier request, not a layout — it needs
+        // the `knn_k` neighbor count (checked after the key sweep, since
+        // document keys arrive in sorted order, not file order)
+        let mut approx_storage = false;
         for key in doc.keys("service") {
             let v = doc.get("service", key).unwrap();
             match key {
@@ -289,8 +299,20 @@ impl ServiceConfig {
                     let s = v
                         .as_str()
                         .ok_or_else(|| Error::Config("storage must be a string".into()))?;
-                    cfg.storage = StorageKind::parse(s)
-                        .map_err(|_| Error::Config(format!("unknown storage {s}")))?;
+                    if s == "approx" {
+                        approx_storage = true;
+                    } else {
+                        cfg.storage = StorageKind::parse(s)
+                            .map_err(|_| Error::Config(format!("unknown storage {s}")))?;
+                    }
+                }
+                "knn_k" => {
+                    cfg.knn_k = Some(
+                        v.as_int()
+                            .filter(|&i| i > 0)
+                            .ok_or_else(|| Error::Config("knn_k must be int > 0".into()))?
+                            as usize,
+                    )
                 }
                 "shard_rows" => {
                     cfg.shard.shard_rows = v
@@ -333,6 +355,11 @@ impl ServiceConfig {
                 }
             }
         }
+        if approx_storage && cfg.knn_k.is_none() {
+            return Err(Error::Config(
+                "storage = \"approx\" needs a knn_k neighbor count".into(),
+            ));
+        }
         Ok(cfg)
     }
 
@@ -347,6 +374,7 @@ impl ServiceConfig {
             shard: self.shard.clone(),
             metric: self.metric,
             ordering: self.ordering,
+            knn_k: self.knn_k,
             ..Default::default()
         }
     }
@@ -500,6 +528,26 @@ mod tests {
             "[service]\nordering = \"kruskal\"\n",
             "[service]\nordering = 1\n",
         ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn service_config_approx_knobs() {
+        let doc =
+            Document::parse("[service]\nstorage = \"approx\"\nknn_k = 12\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.knn_k, Some(12));
+        assert_eq!(cfg.plan_template().knn_k, Some(12));
+        // knn_k alone selects the approx tier too
+        let doc = Document::parse("[service]\nknn_k = 6\n").unwrap();
+        assert_eq!(ServiceConfig::from_document(&doc).unwrap().knn_k, Some(6));
+        // storage = "approx" without a neighbor count fails loudly, as do
+        // zero / non-int counts
+        let doc = Document::parse("[service]\nstorage = \"approx\"\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).is_err());
+        for bad in ["[service]\nknn_k = 0\n", "[service]\nknn_k = \"lots\"\n"] {
             let doc = Document::parse(bad).unwrap();
             assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
         }

@@ -56,6 +56,12 @@ pub struct JobOptions {
     /// MST ordering strategy for the VAT stage (default `Auto`: parallel
     /// Borůvka above the size cutoff; output bitwise identical either way).
     pub ordering: OrderingStrategy,
+    /// Run the matrix-free approx tier with this neighbor count instead of
+    /// the `storage` layout. Approx jobs detect blocks over the iVAT
+    /// transform and skip the insight string and `keep_matrix` (both read
+    /// the raw distance image, which the tier never materializes); the
+    /// job's `AnalysisReport::approx` carries the fidelity record.
+    pub knn_k: Option<usize>,
 }
 
 impl Default for JobOptions {
@@ -69,6 +75,7 @@ impl Default for JobOptions {
             shard: ShardOptions::default(),
             metric: Metric::Euclidean,
             ordering: OrderingStrategy::Auto,
+            knn_k: None,
         }
     }
 }
@@ -81,13 +88,22 @@ impl JobOptions {
         let mut request = Analysis::of(points)
             .metric(self.metric)
             .standardize(self.standardize)
-            .storage(StoragePolicy::Fixed(self.storage))
             .shard(self.shard)
             .ordering(self.ordering)
-            .ivat(self.ivat)
-            .detect_blocks(BlockDetector::default())
-            .insight(true)
-            .keep_matrix(self.keep_matrix);
+            .detect_blocks(BlockDetector::default());
+        request = match self.knn_k {
+            // approx jobs: detection runs over the iVAT transform; the
+            // raw-image outputs (insight, keep_matrix) are unavailable
+            Some(k) => request
+                .storage(StoragePolicy::Approx { k })
+                .ivat(true)
+                .insight(false),
+            None => request
+                .storage(StoragePolicy::Fixed(self.storage))
+                .ivat(self.ivat)
+                .insight(true)
+                .keep_matrix(self.keep_matrix),
+        };
         if self.hopkins {
             request = request.hopkins(1).hopkins_params(HopkinsParams {
                 seed: job_id,
@@ -148,6 +164,26 @@ mod tests {
         assert!(!o.keep_matrix, "default must not retain O(n^2) buffers");
         assert_eq!(o.storage, StorageKind::Dense);
         assert_eq!(o.metric, Metric::Euclidean);
+    }
+
+    #[test]
+    fn job_options_knn_k_builds_an_approx_plan() {
+        let ds = crate::data::generators::blobs(60, 2, 3, 0.4, 2);
+        let plan = JobOptions {
+            knn_k: Some(8),
+            ..Default::default()
+        }
+        .into_plan(ds.points, 9)
+        .unwrap();
+        let report = plan
+            .execute(&crate::dissimilarity::engine::BlockedEngine)
+            .unwrap();
+        // matrix-free: no storage, fidelity record present, blocks over iVAT
+        assert!(report.storage.is_none());
+        assert_eq!(report.approx.as_ref().unwrap().k, 8);
+        assert!(report.blocks.is_some());
+        assert!(report.insight.is_none());
+        assert!(report.hopkins.is_some());
     }
 
     #[test]

@@ -52,6 +52,13 @@ pub struct PipelineConfig {
     /// MST ordering strategy for the tendency stage (default `Auto`; the
     /// decision output is identical under every strategy).
     pub ordering: OrderingStrategy,
+    /// Run the tendency stage on the matrix-free approx tier with this
+    /// neighbor count (the `storage` layout is then ignored). Silhouette
+    /// diagnostics are skipped — they read the distance image, which the
+    /// tier never materializes — and the insight string is synthesized
+    /// from the block count; the routing decision (ARI vs the iVAT block
+    /// partition) is unchanged.
+    pub knn_k: Option<usize>,
 }
 
 impl Default for PipelineConfig {
@@ -64,6 +71,7 @@ impl Default for PipelineConfig {
             storage: StorageKind::Dense,
             shard: ShardOptions::default(),
             ordering: OrderingStrategy::Auto,
+            knn_k: None,
         }
     }
 }
@@ -151,21 +159,31 @@ pub fn auto_cluster(
     // re-scale). The whole tendency stage runs on the configured storage
     // layout; silhouettes below read the report's storage, so condensed
     // never expands to dense and sharded stays inside its LRU budget
-    let report = Analysis::of(z.clone())
+    let mut request = Analysis::of(z.clone())
         .standardize(false)
         .metric(Metric::Euclidean)
-        .storage(StoragePolicy::Fixed(config.storage))
         .shard(config.shard.clone())
         .ordering(config.ordering)
         .ivat(true)
-        .detect_blocks(BlockDetector::default())
-        .insight(true)
-        .plan()?
-        .execute(engine.as_ref())?;
-    let d = report.storage.as_ref();
+        .detect_blocks(BlockDetector::default());
+    request = match config.knn_k {
+        // matrix-free tier: no insight stage (it scans the raw distance
+        // image) — synthesized from the block count below
+        Some(k) => request.storage(StoragePolicy::Approx { k }),
+        None => request
+            .storage(StoragePolicy::Fixed(config.storage))
+            .insight(true),
+    };
+    let report = request.plan()?.execute(engine.as_ref())?;
+    let d = report.storage.as_deref();
     let blocks = report.blocks.as_deref().expect("detection was requested");
     let k = blocks.len().max(2);
-    let insight = report.insight.clone().expect("insight was requested");
+    let insight = report.insight.clone().unwrap_or_else(|| {
+        format!(
+            "iVAT (approx kNN tier) suggests {} dark diagonal block(s)",
+            blocks.len()
+        )
+    });
     let vat_reference = block_labels(blocks, &report.vat.order, z.n());
 
     // 3. both candidates
@@ -187,9 +205,10 @@ pub fn auto_cluster(
         },
     )?;
 
-    // 4. the VAT image referees (see module docs)
-    let km_sil = silhouette(d, &km_labels);
-    let db_sil = silhouette(d, &db.labels);
+    // 4. the VAT image referees (see module docs); silhouette diagnostics
+    // need the distance image, so the approx tier skips them
+    let km_sil = d.map(|d| silhouette(d, &km_labels));
+    let db_sil = d.map(|d| silhouette(d, &db.labels));
     let km_agreement = ari(&vat_reference, &km_labels);
     let db_agreement = ari(&vat_reference, &db.labels);
     let db_noise_frac = db.noise as f64 / z.n().max(1) as f64;
@@ -206,8 +225,8 @@ pub fn auto_cluster(
         k_estimate: k,
         choice,
         labels,
-        kmeans_silhouette: Some(km_sil),
-        dbscan_silhouette: Some(db_sil),
+        kmeans_silhouette: km_sil,
+        dbscan_silhouette: db_sil,
         insight,
     })
 }
@@ -297,6 +316,24 @@ mod tests {
         assert_eq!(a.insight, c.insight);
         assert_eq!(a.kmeans_silhouette, c.kmeans_silhouette);
         assert_eq!(a.dbscan_silhouette, c.dbscan_silhouette);
+    }
+
+    #[test]
+    fn approx_tier_reaches_a_good_decision_on_blobs() {
+        // the matrix-free tendency stage must still route blobs to a
+        // partition that matches ground truth; distance-image diagnostics
+        // are skipped by design
+        let ds = blobs(300, 2, 3, 0.2, 146);
+        let cfg = PipelineConfig {
+            knn_k: Some(16),
+            ..Default::default()
+        };
+        let r = auto_cluster(&engine(), &ds.points, &cfg).unwrap();
+        assert_ne!(r.choice, Choice::NoStructure);
+        let truth = to_isize(ds.labels.as_ref().unwrap());
+        assert!(ari(&truth, &r.labels) > 0.9, "approx blobs ARI");
+        assert!(r.kmeans_silhouette.is_none() && r.dbscan_silhouette.is_none());
+        assert!(!r.insight.is_empty());
     }
 
     #[test]

@@ -18,10 +18,10 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::analysis::Analysis;
-#[cfg(test)]
+use crate::analysis::{Analysis, StoragePolicy};
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
+use crate::dissimilarity::engine::BlockedEngine;
 use crate::dissimilarity::shard::{ShardedTriangle, SquareBands};
 use crate::dissimilarity::{
     DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
@@ -51,6 +51,14 @@ pub struct StreamingConfig {
     /// windows above the cutoff reorder with the parallel Borůvka sweep;
     /// the snapshot is bitwise identical either way).
     pub ordering: OrderingStrategy,
+    /// Run the matrix-free approx kNN tier on snapshots with this neighbor
+    /// count instead of materializing the window's distance storage
+    /// (`snapshot_storage`/`shard`/`ordering` are then ignored). Approx
+    /// snapshots carry `storage: None` — [`StreamSnapshot::view`] panics —
+    /// and detect blocks over the iVAT transform; at `knn_k >= n - 1` the
+    /// reorder is bitwise identical to the exact snapshot over the same
+    /// window (complete-mode contract).
+    pub knn_k: Option<usize>,
 }
 
 impl Default for StreamingConfig {
@@ -61,6 +69,7 @@ impl Default for StreamingConfig {
             snapshot_storage: StorageKind::Dense,
             shard: ShardOptions::default(),
             ordering: OrderingStrategy::Auto,
+            knn_k: None,
         }
     }
 }
@@ -75,7 +84,9 @@ pub struct StreamSnapshot {
     /// The window's distances at snapshot time, in the configured layout —
     /// what `vat` was computed over. Shared (`Arc`) with the monitor's
     /// cache, so polling a clean window never copies the distance buffer.
-    pub storage: Arc<DistanceStore>,
+    /// `None` for approx (`knn_k`) snapshots, which never materialize the
+    /// window's distance storage.
+    pub storage: Option<Arc<DistanceStore>>,
     /// Detected blocks.
     pub blocks: Vec<Block>,
     /// Total points ever pushed.
@@ -84,8 +95,15 @@ pub struct StreamSnapshot {
 
 impl StreamSnapshot {
     /// Zero-copy view of the snapshot's VAT image.
+    ///
+    /// # Panics
+    /// For approx (`knn_k`) snapshots, which carry no distance storage.
     pub fn view(&self) -> PermutedView<'_, DistanceStore> {
-        self.vat.view(self.storage.as_ref())
+        self.vat.view(
+            self.storage
+                .as_deref()
+                .expect("no distance storage: approx streaming snapshots never materialize it"),
+        )
     }
 }
 
@@ -98,7 +116,7 @@ pub struct StreamingVat {
     /// Flat (w x w) distance matrix over `rows`, kept in sync by push/evict.
     dist: Vec<f64>,
     dirty: bool,
-    cached: Option<(VatResult, Arc<DistanceStore>, Vec<Block>)>,
+    cached: Option<(VatResult, Option<Arc<DistanceStore>>, Vec<Block>)>,
     total_seen: u64,
 }
 
@@ -110,6 +128,9 @@ impl StreamingVat {
         }
         if config.window < 2 {
             return Err(Error::InvalidArg("window must be >= 2".into()));
+        }
+        if config.knn_k == Some(0) {
+            return Err(Error::InvalidArg("knn_k must be >= 1".into()));
         }
         Ok(Self {
             config,
@@ -202,6 +223,33 @@ impl StreamingVat {
             )));
         }
         if self.dirty || self.cached.is_none() {
+            if let Some(k) = self.config.knn_k {
+                // matrix-free tier: reorder the window straight off the
+                // points (the incremental window buffer is not consulted),
+                // detect blocks over the iVAT transform, and carry no
+                // distance storage in the snapshot
+                let points = Points::from_rows(self.rows.make_contiguous())?;
+                let report = Analysis::of(points)
+                    .metric(self.config.metric)
+                    .standardize(false)
+                    .storage(StoragePolicy::Approx { k })
+                    .ivat(true)
+                    .insight(false)
+                    .detect_blocks(BlockDetector::default())
+                    .plan()?
+                    .execute(&BlockedEngine)?;
+                let blocks = report.blocks.unwrap_or_default();
+                self.cached = Some((report.vat, None, blocks));
+                self.dirty = false;
+                let (v, store, blocks) = self.cached.clone().expect("cached above");
+                return Ok(StreamSnapshot {
+                    n,
+                    vat: v,
+                    storage: store,
+                    blocks,
+                    total_seen: self.total_seen,
+                });
+            }
             let store = Arc::new(match self.config.snapshot_storage {
                 StorageKind::Dense => DistanceStore::Dense(self.distance_matrix()?),
                 StorageKind::Condensed => {
@@ -241,7 +289,7 @@ impl StreamingVat {
                 .plan()?
                 .execute_precomputed()?;
             let blocks = report.blocks.unwrap_or_default();
-            self.cached = Some((report.vat, store, blocks));
+            self.cached = Some((report.vat, Some(store), blocks));
             self.dirty = false;
         }
         let (v, store, blocks) = self.cached.clone().expect("cached above");
@@ -361,9 +409,11 @@ mod tests {
         let b = cond.snapshot().unwrap();
         assert_eq!(a.vat.order, b.vat.order);
         assert_eq!(a.blocks, b.blocks);
-        assert_eq!(a.storage.kind(), StorageKind::Dense);
-        assert_eq!(b.storage.kind(), StorageKind::Condensed);
-        assert!(b.storage.distance_bytes() * 2 < a.storage.distance_bytes() + 100 * 8);
+        let a_store = a.storage.as_ref().unwrap();
+        let b_store = b.storage.as_ref().unwrap();
+        assert_eq!(a_store.kind(), StorageKind::Dense);
+        assert_eq!(b_store.kind(), StorageKind::Condensed);
+        assert!(b_store.distance_bytes() * 2 < a_store.distance_bytes() + 100 * 8);
     }
 
     #[test]
@@ -398,15 +448,15 @@ mod tests {
             let a = sv.snapshot().unwrap();
             let b = sv.snapshot().unwrap();
             assert!(
-                Arc::ptr_eq(&a.storage, &b.storage),
+                Arc::ptr_eq(a.storage.as_ref().unwrap(), b.storage.as_ref().unwrap()),
                 "{kind:?}: clean-window poll must reuse the cached storage"
             );
             assert_eq!(a.vat.order, b.vat.order, "{kind:?}");
-            assert_eq!(a.storage.kind(), kind);
+            assert_eq!(a.storage.as_ref().unwrap().kind(), kind);
             sv.push(&[50.0, 50.0]).unwrap();
             let c = sv.snapshot().unwrap();
             assert!(
-                !Arc::ptr_eq(&a.storage, &c.storage),
+                !Arc::ptr_eq(a.storage.as_ref().unwrap(), c.storage.as_ref().unwrap()),
                 "{kind:?}: a push must invalidate the cached snapshot"
             );
             assert_eq!(c.n, 41, "{kind:?}");
@@ -497,11 +547,14 @@ mod tests {
         assert_eq!(a.vat.order, b.vat.order);
         assert_eq!(a.vat.mst, b.vat.mst);
         assert_eq!(a.blocks, b.blocks);
-        assert_eq!(b.storage.kind(), StorageKind::Sharded);
+        assert_eq!(b.storage.as_ref().unwrap().kind(), StorageKind::Sharded);
         assert_eq!(a.vat.order, q.vat.order);
         assert_eq!(a.vat.mst, q.vat.mst);
         assert_eq!(a.blocks, q.blocks);
-        assert_eq!(q.storage.kind(), StorageKind::ShardedSquare);
+        assert_eq!(
+            q.storage.as_ref().unwrap().kind(),
+            StorageKind::ShardedSquare
+        );
         for x in 0..70 {
             for y in 0..70 {
                 assert_eq!(a.view().get(x, y), b.view().get(x, y), "({x},{y})");
@@ -509,11 +562,11 @@ mod tests {
             }
         }
         // sharded snapshots keep only the LRU budget resident
-        let s = b.storage.as_sharded().unwrap();
+        let s = b.storage.as_ref().unwrap().as_sharded().unwrap();
         assert!(s.resident_bytes() <= 2 * 9 * 70 * 8);
         assert_eq!(s.file_bytes(), 70 * 69 / 2 * 8);
         // the square layout pays 2× disk for its contiguous rows
-        let sq = q.storage.as_sharded_square().unwrap();
+        let sq = q.storage.as_ref().unwrap().as_sharded_square().unwrap();
         assert!(sq.resident_bytes() <= 2 * 9 * 70 * 8);
         assert_eq!(sq.file_bytes(), 70 * 70 * 8);
     }
@@ -522,8 +575,76 @@ mod tests {
     fn shape_and_arg_validation() {
         assert!(StreamingVat::new(0, cfg(10)).is_err());
         assert!(StreamingVat::new(2, cfg(1)).is_err());
+        assert!(StreamingVat::new(
+            2,
+            StreamingConfig {
+                knn_k: Some(0),
+                ..Default::default()
+            }
+        )
+        .is_err());
         let mut sv = StreamingVat::new(2, cfg(8)).unwrap();
         assert!(sv.push(&[1.0]).is_err());
         assert!(sv.snapshot().is_err()); // too few points
+    }
+
+    #[test]
+    fn approx_snapshots_are_matrix_free_and_exact_at_full_k() {
+        // the window metric evals and the kNN points oracle make the same
+        // metric.eval calls, so the complete-mode contract (k >= n-1) makes
+        // the approx reorder bitwise identical to the exact snapshot
+        let ds = blobs(50, 2, 3, 0.35, 137);
+        let mut exact = StreamingVat::new(2, cfg(64)).unwrap();
+        let mut approx = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 64,
+                knn_k: Some(49),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..50 {
+            exact.push(ds.points.row(i)).unwrap();
+            approx.push(ds.points.row(i)).unwrap();
+        }
+        let e = exact.snapshot().unwrap();
+        let a = approx.snapshot().unwrap();
+        assert_eq!(e.vat.order, a.vat.order);
+        assert_eq!(e.vat.mst, a.vat.mst);
+        assert!(a.storage.is_none(), "approx snapshots carry no storage");
+        assert!(e.storage.is_some());
+    }
+
+    #[test]
+    fn approx_snapshots_cache_and_detect_structure() {
+        let mut rng = Pcg32::new(138);
+        let mut sv = StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 128,
+                knn_k: Some(10),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for _ in 0..60 {
+            sv.push(&[rng.normal() * 0.2, rng.normal() * 0.2]).unwrap();
+        }
+        for _ in 0..60 {
+            sv.push(&[9.0 + rng.normal() * 0.2, 9.0 + rng.normal() * 0.2])
+                .unwrap();
+        }
+        let a = sv.snapshot().unwrap();
+        assert_eq!(a.n, 120);
+        let mut seen = a.vat.order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..120).collect::<Vec<_>>());
+        assert_eq!(a.vat.mst.len(), 119);
+        assert!(a.storage.is_none());
+        assert_eq!(a.blocks.len(), 2, "two well-separated clusters");
+        let b = sv.snapshot().unwrap(); // clean window: cached clone
+        assert_eq!(a.vat.order, b.vat.order);
+        assert_eq!(a.blocks, b.blocks);
     }
 }

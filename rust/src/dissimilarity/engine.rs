@@ -359,6 +359,36 @@ impl DistanceEngine for CondensedEngine {
     }
 }
 
+/// Opt-in f32 fast path: the Euclidean dot-trick sweep run entirely in f32
+/// (half the memory traffic and twice the SIMD lanes of the f64 blocked
+/// build) via [`super::blocked::build_euclidean_f32`]. Deterministic, and
+/// bitwise identical to the simulated XLA engine's artifact contract on
+/// admissible inputs, but NOT bitwise compatible with the f64 engines —
+/// expect ~1e-3 relative error — so it is excluded from the cross-engine
+/// bitwise-parity suites and supports Euclidean only.
+pub struct BlockedF32Engine;
+
+impl DistanceEngine for BlockedF32Engine {
+    fn name(&self) -> &'static str {
+        "blocked-f32"
+    }
+
+    fn supports(&self, metric: Metric) -> bool {
+        matches!(metric, Metric::Euclidean)
+    }
+
+    fn build(&self, points: &Points, metric: Metric) -> Result<DistanceMatrix> {
+        if !matches!(metric, Metric::Euclidean) {
+            return Err(Error::InvalidArg(format!(
+                "{} implements Euclidean only (the f32 dot-trick contract); \
+                 pick a native f64 engine for other metrics",
+                self.name()
+            )));
+        }
+        Ok(super::blocked::build_euclidean_f32(points))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,6 +412,32 @@ mod tests {
         assert_eq!(BlockedEngine.name(), "blocked");
         assert_eq!(ParallelEngine::default().name(), "parallel");
         assert_eq!(CondensedEngine.name(), "condensed");
+        assert_eq!(BlockedF32Engine.name(), "blocked-f32");
+    }
+
+    #[test]
+    fn blocked_f32_matches_the_simulated_xla_contract_bitwise() {
+        // both paths narrow to f32 and run the identical norm/dot folds, so
+        // on inputs the simulated artifact admits (n within a bucket, d
+        // within the padded feature width) the outputs are bit-for-bit equal
+        let ds = blobs(150, 4, 3, 0.7, 95);
+        let z = crate::data::scale::Scaler::standardized(&ds.points);
+        let sim = crate::runtime::SimulatedXlaEngine::new(true)
+            .pdist(&z)
+            .unwrap();
+        let f32_native = BlockedF32Engine.pdist(&z).unwrap();
+        assert_eq!(sim, f32_native);
+    }
+
+    #[test]
+    fn blocked_f32_rejects_non_euclidean() {
+        let ds = blobs(20, 2, 2, 0.4, 97);
+        assert!(BlockedF32Engine.supports(Metric::Euclidean));
+        assert!(!BlockedF32Engine.supports(Metric::Manhattan));
+        match BlockedF32Engine.build(&ds.points, Metric::Manhattan) {
+            Err(Error::InvalidArg(_)) => {}
+            other => panic!("expected InvalidArg, got {other:?}"),
+        }
     }
 
     #[test]

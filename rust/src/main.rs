@@ -34,24 +34,27 @@ fn usage() -> ! {
 
 USAGE:
   fast-vat vat      [--input data.csv | --dataset NAME]
-                    [--engine naive|blocked|parallel|condensed|xla|xla-mm]
+                    [--engine naive|blocked|parallel|condensed|blocked-f32|xla|xla-mm]
                     [--metric euclidean|l1|linf|cosine|minkowski:P|...]
-                    [--storage dense|condensed|sharded|sharded-square | --budget-mb N]
-                    [--ordering prim|boruvka|auto] [--sample N] [--ivat]
+                    [--storage dense|condensed|sharded|sharded-square|approx | --budget-mb N]
+                    [--knn-k N] [--ordering prim|boruvka|auto] [--sample N] [--ivat]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
   fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
                     [--k N | --eps F] [--min-pts N]
   fast-vat pipeline [--input data.csv | --dataset NAME] [--engine ...]
-                    [--storage dense|condensed|sharded|sharded-square] [--shard-rows N]
-                    [--cache-shards N] [--spill-dir DIR] [--ordering prim|boruvka|auto]
+                    [--storage dense|condensed|sharded|sharded-square] [--knn-k N]
+                    [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
+                    [--ordering prim|boruvka|auto]
   fast-vat serve    [--workers N] [--queue N] [--jobs N] [--engine ...]
                     [--metric NAME] [--storage dense|condensed|sharded|sharded-square]
-                    [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
+                    [--knn-k N] [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--ordering prim|boruvka|auto]
   fast-vat bench-ordering [--sizes N,N,...] [--budget-s F] [--seed N]
                     [--out BENCH_ordering.json]
+  fast-vat bench-approx [--sizes N,N,...] [--budget-s F] [--seed N]
+                    [--out BENCH_approx.json]
   fast-vat info     [--artifacts DIR]
 
 STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
@@ -65,6 +68,15 @@ STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
   distance bytes fit the budget is picked per request (spills resolve to
   square bands, plus a reorder-then-spill pass when the image is re-read).
   --sample N escalates to sVAT (maximin sampling) above N points.
+
+APPROX: --storage approx (or --knn-k alone) runs the matrix-free kNN tier:
+  a deterministic k-nearest-neighbor graph replaces the n^2 distance image,
+  the MST-based reorder runs over the sparse graph, and the iVAT image
+  renders straight from the tree — ~O(n k log n) time and O(n k) memory.
+  --knn-k n-1 is bitwise identical to the exact tiers; smaller k trades
+  fidelity for speed and the report prints the measured neighbor recall.
+  bench-approx times the approx tier against the exact matrix-free sweep
+  and writes the checked-in BENCH_approx.json baseline.
 
 ORDERING: prim is the sequential O(n^2) sweep; boruvka reorders with a
   parallel Borůvka/merge MST build whose output is verified bitwise
@@ -110,6 +122,16 @@ fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Resu
             .parse()
             .map_err(|_| Error::InvalidArg(format!("--{key} must be an integer"))),
     }
+}
+
+fn get_opt_usize(flags: &HashMap<String, String>, key: &str) -> Result<Option<usize>> {
+    flags
+        .get(key)
+        .map(|v| {
+            v.parse()
+                .map_err(|_| Error::InvalidArg(format!("--{key} must be an integer")))
+        })
+        .transpose()
 }
 
 fn load_dataset(flags: &HashMap<String, String>) -> Result<Dataset> {
@@ -164,10 +186,18 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         flags.get("metric").map(String::as_str).unwrap_or("euclidean"),
     )?;
     let shard = shard_options(&flags)?;
+    // --storage approx / --knn-k selects the matrix-free kNN tier;
     // --budget-mb hands the layout choice to the storage policy; --storage
     // pins it explicitly (the pre-policy behavior)
-    let policy = match flags.get("budget-mb") {
-        Some(v) => {
+    let knn_k = get_opt_usize(&flags, "knn-k")?;
+    if flags.get("storage").map(String::as_str) == Some("approx") && knn_k.is_none() {
+        return Err(Error::InvalidArg(
+            "--storage approx needs a --knn-k neighbor count".into(),
+        ));
+    }
+    let policy = match (knn_k, flags.get("budget-mb")) {
+        (Some(k), _) => StoragePolicy::Approx { k },
+        (None, Some(v)) => {
             let mb: usize = v
                 .parse()
                 .map_err(|_| Error::InvalidArg("--budget-mb must be an integer".into()))?;
@@ -178,7 +208,7 @@ fn cmd_vat(args: &[String]) -> Result<()> {
                 memory_budget_bytes,
             }
         }
-        None => StoragePolicy::Fixed(storage_kind(&flags)?),
+        (None, None) => StoragePolicy::Fixed(storage_kind(&flags)?),
     };
 
     // the whole request is one plan: distance → VAT → iVAT → detection →
@@ -189,9 +219,11 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         .storage(policy)
         .shard(shard)
         .ordering(ordering_strategy(&flags)?)
-        .ivat(flags.contains_key("ivat"))
+        // the approx tier never materializes the raw distance image, so it
+        // always goes through iVAT and skips the insight string
+        .ivat(knn_k.is_some() || flags.contains_key("ivat"))
         .detect_blocks(BlockDetector::default())
-        .insight(true)
+        .insight(knn_k.is_none())
         .render(true);
     if let Some(cap) = flags.get("sample") {
         let cap: usize = cap
@@ -221,6 +253,16 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         report.insight.as_deref().unwrap_or("-"),
         report.k_estimate().unwrap_or(0)
     );
+    if let Some(a) = &report.approx {
+        println!(
+            "approx: k={} graph_edges={} repair_edges={} recall={:.3}{}",
+            a.k,
+            a.graph_edges,
+            a.repair_edges,
+            a.neighbor_recall,
+            if a.complete { " (complete: exact)" } else { "" }
+        );
+    }
 
     let img = report.image.as_ref().expect("render was requested");
     if let Some(out) = flags.get("out") {
@@ -323,6 +365,7 @@ fn cmd_pipeline(args: &[String]) -> Result<()> {
         storage: storage_kind(&flags)?,
         shard: shard_options(&flags)?,
         ordering: ordering_strategy(&flags)?,
+        knn_k: get_opt_usize(&flags, "knn-k")?,
         ..Default::default()
     };
     let report = auto_cluster(&engine, &ds.points, &config)?;
@@ -356,6 +399,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             flags.get("metric").map(String::as_str).unwrap_or("euclidean"),
         )?,
         ordering: ordering_strategy(&flags)?,
+        knn_k: get_opt_usize(&flags, "knn-k")?,
     };
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
@@ -434,6 +478,35 @@ fn cmd_bench_ordering(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_approx(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let sizes: Vec<usize> = flags
+        .get("sizes")
+        .map(String::as_str)
+        .unwrap_or("1000,10000,50000")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--sizes: bad size {s}")))
+        })
+        .collect::<Result<_>>()?;
+    let budget_s: f64 = match flags.get("budget-s") {
+        None => 1.0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::InvalidArg("--budget-s must be a float".into()))?,
+    };
+    let seed = get_usize(&flags, "seed", 42)? as u64;
+    let report = fast_vat::bench_util::run_approx_bench(&sizes, budget_s, seed)?;
+    print!("{}", report.table());
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &[])?;
     let dir = flags
@@ -459,8 +532,9 @@ fn cmd_info(args: &[String]) -> Result<()> {
     }
     println!(
         "engines: naive (python-tier), blocked (numba-tier), parallel, \
-         condensed, xla / xla-mm (cython-tier; simulated unless built with \
-         --features xla and artifacts present)"
+         condensed, blocked-f32 (opt-in f32 dot-trick euclidean), xla / \
+         xla-mm (cython-tier; simulated unless built with --features xla \
+         and artifacts present)"
     );
     Ok(())
 }
@@ -476,6 +550,7 @@ fn main() {
         "pipeline" => cmd_pipeline(rest),
         "serve" => cmd_serve(rest),
         "bench-ordering" => cmd_bench_ordering(rest),
+        "bench-approx" => cmd_bench_approx(rest),
         "info" => cmd_info(rest),
         _ => usage(),
     };

@@ -35,14 +35,22 @@ use crate::error::{Error, Result};
 use crate::hopkins::HopkinsProbes;
 
 pub use crate::dissimilarity::engine::{
-    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+    BlockedEngine, BlockedF32Engine, CondensedEngine, DistanceEngine, NaiveEngine,
+    ParallelEngine,
 };
 
 /// Every name [`engine_by_name`] accepts — the single source of truth for
 /// config validation and CLI docs (`known_engine_names_all_resolve` keeps
 /// it in sync with the selector).
-pub const ENGINE_NAMES: [&str; 6] =
-    ["naive", "blocked", "parallel", "condensed", "xla", "xla-mm"];
+pub const ENGINE_NAMES: [&str; 7] = [
+    "naive",
+    "blocked",
+    "parallel",
+    "condensed",
+    "blocked-f32",
+    "xla",
+    "xla-mm",
+];
 
 /// Deterministic in-crate emulation of the XLA artifact path.
 ///
@@ -435,6 +443,7 @@ pub fn engine_by_name(
         "blocked" => Arc::new(BlockedEngine),
         "parallel" => Arc::new(ParallelEngine::default()),
         "condensed" => Arc::new(CondensedEngine),
+        "blocked-f32" => Arc::new(BlockedF32Engine),
         "xla" => xla_engine(artifacts_dir, true),
         "xla-mm" => xla_engine(artifacts_dir, false),
         other => return Err(Error::InvalidArg(format!("unknown engine {other}"))),
@@ -454,7 +463,7 @@ mod tests {
 
     #[test]
     fn known_engines_resolve() {
-        for name in ["naive", "blocked", "parallel", "condensed"] {
+        for name in ["naive", "blocked", "parallel", "condensed", "blocked-f32"] {
             assert_eq!(engine_by_name(name, "artifacts").unwrap().name(), name);
         }
         // "xla" resolves in every build configuration (sim fallback)

@@ -59,27 +59,29 @@ use crate::dissimilarity::DistanceStorage;
 
 /// Edge candidate with the pinned deterministic key `(w, a, b)`, `a < b`
 /// original indices. `NONE` (a == u32::MAX) never beats a real edge.
+/// Shared with the sparse kNN-graph tier ([`super::knn`]), which keys its
+/// Borůvka rounds with the identical total order.
 #[derive(Clone, Copy)]
-struct EdgeKey {
-    w: f64,
-    a: u32,
-    b: u32,
+pub(crate) struct EdgeKey {
+    pub(crate) w: f64,
+    pub(crate) a: u32,
+    pub(crate) b: u32,
 }
 
 impl EdgeKey {
-    const NONE: EdgeKey = EdgeKey {
+    pub(crate) const NONE: EdgeKey = EdgeKey {
         w: f64::INFINITY,
         a: u32::MAX,
         b: u32::MAX,
     };
 
-    fn is_some(&self) -> bool {
+    pub(crate) fn is_some(&self) -> bool {
         self.a != u32::MAX
     }
 
     /// Pinned strict total order on real edges: lexicographic
     /// `(w, a, b)`. NaN weights never win (all comparisons false).
-    fn beats(&self, other: &EdgeKey) -> bool {
+    pub(crate) fn beats(&self, other: &EdgeKey) -> bool {
         self.w < other.w || (self.w == other.w && (self.a, self.b) < (other.a, other.b))
     }
 }
@@ -87,18 +89,18 @@ impl EdgeKey {
 /// Union-find with path-halving; union keeps the LOWER root, so component
 /// labels are the minimum original index — deterministic regardless of
 /// union order.
-struct Dsu {
+pub(crate) struct Dsu {
     parent: Vec<u32>,
 }
 
 impl Dsu {
-    fn new(n: usize) -> Self {
+    pub(crate) fn new(n: usize) -> Self {
         Dsu {
             parent: (0..n as u32).collect(),
         }
     }
 
-    fn find(&mut self, mut x: u32) -> u32 {
+    pub(crate) fn find(&mut self, mut x: u32) -> u32 {
         while self.parent[x as usize] != x {
             let grand = self.parent[self.parent[x as usize] as usize];
             self.parent[x as usize] = grand;
@@ -107,7 +109,7 @@ impl Dsu {
         x
     }
 
-    fn union(&mut self, a: u32, b: u32) -> bool {
+    pub(crate) fn union(&mut self, a: u32, b: u32) -> bool {
         let mut ra = self.find(a);
         let mut rb = self.find(b);
         if ra == rb {
@@ -379,7 +381,7 @@ fn boruvka_tree<S: DistanceStorage + Sync>(
 }
 
 /// Deterministic compact component labels (0..m in ascending root order).
-fn component_labels(dsu: &mut Dsu, n: usize) -> (Vec<u32>, usize) {
+pub(crate) fn component_labels(dsu: &mut Dsu, n: usize) -> (Vec<u32>, usize) {
     let mut label_of_root = vec![u32::MAX; n];
     let mut m = 0u32;
     let mut labels = vec![0u32; n];
@@ -397,7 +399,7 @@ fn component_labels(dsu: &mut Dsu, n: usize) -> (Vec<u32>, usize) {
 
 /// Monotone order-preserving f64 → u64 map for heap keys (finite values
 /// only; −0.0 normalized so tied zero weights compare equal).
-fn key_bits(w: f64) -> u64 {
+pub(crate) fn key_bits(w: f64) -> u64 {
     let w = if w == 0.0 { 0.0 } else { w };
     let b = w.to_bits();
     if b >> 63 == 1 {

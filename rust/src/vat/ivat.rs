@@ -22,6 +22,7 @@ use crate::dissimilarity::{
     DistanceMatrix, DistanceStore, ShardOptions, StorageKind,
 };
 use crate::error::Result;
+use crate::viz::GrayImage;
 
 /// Result of an iVAT transform.
 #[derive(Debug, Clone)]
@@ -197,6 +198,54 @@ pub(crate) fn transform(
     })
 }
 
+/// Render the iVAT image straight from the MST — no transform matrix is
+/// ever materialized. Two path-max DFS sweeps over the tree: the first
+/// finds the normalization maximum, the second emits pixels row-major with
+/// [`crate::viz::render`]'s exact arithmetic. O(n²) time like the
+/// transform, but O(n) working memory beyond the n² pixel bytes — this is
+/// how image-only requests (and the matrix-free approx tier) render iVAT.
+///
+/// Pixel-for-pixel identical to `viz::render` over [`ivat_with`]'s output
+/// in any layout: the DFS produces the same exact values, and `f64::max`
+/// folds are order-independent (NaN entries are skipped by `max` from
+/// either side), so the scale factor — and therefore every quantized
+/// pixel — is bitwise the same.
+pub fn image_from_mst(v: &VatResult) -> GrayImage {
+    let n = v.order.len();
+    let a = mst_adjacency(n, &v.mst);
+    let mut stack: Vec<u32> = Vec::with_capacity(n);
+    let mut seen: Vec<u32> = vec![u32::MAX; n];
+    let mut row_buf = vec![0.0f64; n];
+
+    // pass 1: the render normalization maximum (matches
+    // DistanceStorage::max_value over the emitted transform)
+    let mut max = f64::NEG_INFINITY;
+    for row in 0..n {
+        path_max_row(row, &a, &mut stack, &mut seen, &mut row_buf);
+        for &val in row_buf.iter() {
+            max = max.max(val);
+        }
+    }
+    // pass 2: quantize — viz::render's formula, verbatim. Re-running each
+    // row's DFS is safe with the shared generation stamps: sweep two's
+    // epoch for row r never collides with the last stamp written (row r-1
+    // of this sweep, or n-1 of sweep one), and untouched nodes keep
+    // exactly the stale values the transform-then-render path would read.
+    let scale = if max > 0.0 { 255.0 / max } else { 0.0 };
+    let mut pixels = Vec::with_capacity(n * n);
+    for row in 0..n {
+        path_max_row(row, &a, &mut stack, &mut seen, &mut row_buf);
+        for &val in row_buf.iter() {
+            pixels.push((val * scale).round().clamp(0.0, 255.0) as u8);
+        }
+    }
+    GrayImage {
+        pixels,
+        width: n,
+        height: n,
+    }
+}
+
 /// Brute-force minimax path distance via Floyd–Warshall-style relaxation —
 /// O(n³), test oracle only.
 #[doc(hidden)]
@@ -341,6 +390,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn image_from_mst_is_bitwise_render_of_the_transform() {
+        // the matrix-free renderer must be pixel-for-pixel the same as
+        // materializing the transform and rendering it
+        for ds in [blobs(70, 3, 3, 0.6, 17), moons(80, 0.06, 18)] {
+            let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let v = vat(&d);
+            let direct = image_from_mst(&v);
+            let via_transform = crate::viz::render(&ivat(&v).transformed);
+            assert_eq!(direct, via_transform, "{}", ds.name);
+        }
+    }
+
+    #[test]
+    fn image_from_mst_handles_degenerate_sizes() {
+        // n = 0 and n = 1 have no edges and an all-zero (black) image
+        let empty = VatResult {
+            order: vec![],
+            mst: vec![],
+        };
+        let img = image_from_mst(&empty);
+        assert_eq!((img.width, img.height, img.pixels.len()), (0, 0, 0));
+        let one = VatResult {
+            order: vec![0],
+            mst: vec![],
+        };
+        let img = image_from_mst(&one);
+        assert_eq!((img.width, img.height), (1, 1));
+        assert_eq!(img.pixels, vec![0]);
     }
 
     #[test]

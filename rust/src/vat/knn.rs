@@ -1,0 +1,969 @@
+//! Sub-quadratic approximate VAT: kNN-graph ordering with an
+//! exact-parity contract.
+//!
+//! Every exact tier — dense, condensed, and both sharded layouts —
+//! evaluates all n(n−1)/2 pairwise dissimilarities before the Prim sweep
+//! even starts, so the pipeline is Ω(n²) however the bytes are laid out.
+//! VAT and iVAT, though, only consume the **minimum spanning tree**: the
+//! order is a root-down replay of the MST and the iVAT image is the
+//! path-maxima over it. This module exploits that: build a deterministic
+//! k-nearest-neighbor graph (~O(n·k·log n) dissimilarity evaluations),
+//! run the Borůvka machinery of [`super::boruvka`] over the **sparse**
+//! graph (reusing its pinned [`EdgeKey`] total order and lower-root
+//! [`Dsu`]), repair cross-component connectivity when the kNN graph is
+//! disconnected, and replay the tree into a display order — no distance
+//! matrix is ever materialized (O(n·k) resident bytes).
+//!
+//! ## Fidelity contract
+//!
+//! * **`k = n−1` (complete mode)**: the graph is complete, the sparse
+//!   Borůvka tree is an exact MST, and the replay is verified against the
+//!   Prim greedy invariant exactly like [`super::boruvka`] — any
+//!   violation (or NaN anywhere in the input) falls back to the
+//!   sequential [`super::prim::vat_order_on`]. The returned order and
+//!   MST are therefore **bitwise identical** to the exact tiers, on every
+//!   engine and metric (`tests/approx_parity.rs` pins this).
+//! * **`k < n−1` (sparse mode)**: the output is approximate, and the run
+//!   reports *measured* fidelity instead of silently degrading:
+//!   [`ApproxOutcome`] carries the neighbor recall over a seeded query
+//!   sample (always), plus the MST weight ratio and order agreement
+//!   against the exact Prim reference when n is small enough to afford
+//!   computing it.
+//!
+//! Determinism: the candidate search is seeded by the crate PRNG
+//! ([`crate::prng::Pcg32`]) and runs sequentially with pinned tie-breaks,
+//! so the same `(points, metric, k, seed)` produce the same graph, tree,
+//! and order on every run and thread count.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::boruvka::{component_labels, key_bits, Dsu, EdgeKey};
+use super::ivat::mst_adjacency;
+use super::prim;
+use crate::data::Points;
+use crate::dissimilarity::{DistanceStorage, Metric};
+use crate::prng::Pcg32;
+
+/// Default PRNG seed for the approximate tier's candidate search — used
+/// by every spine surface that has no seed knob of its own, so two runs
+/// of the same plan agree bit for bit.
+pub const DEFAULT_SEED: u64 = 0xFA57_0A7A;
+
+/// Random-projection sweeps used to seed the candidate graph.
+const PROJECTION_ROUNDS: usize = 3;
+/// Neighbor-of-neighbor refinement passes (NN-descent style).
+const DESCENT_ROUNDS: usize = 2;
+/// Per-side vertex sample cap for cross-component repair edges.
+const REPAIR_SAMPLE: usize = 256;
+/// Query sample size for the measured neighbor-recall metric.
+const RECALL_QUERIES: usize = 64;
+/// Largest n for which sparse mode computes the exact Prim reference
+/// (O(n²) dissimilarity evaluations) to report MST weight ratio and
+/// order agreement; above it those fields are `None`.
+const EXACT_COMPARE_MAX: usize = 2048;
+
+/// A dissimilarity **oracle** over raw points: implements
+/// [`DistanceStorage`] by evaluating the metric on demand, owning zero
+/// distance bytes. Each `get(i, j)` is exactly `metric.eval(row_i,
+/// row_j)` — bitwise the values the naive/condensed builder family
+/// produces — so the generic sweeps ([`prim::vat_order_on`], seed argmax)
+/// run unchanged and bit-identically, just without the n² buffer.
+pub struct PointsOracle<'a> {
+    points: &'a Points,
+    metric: Metric,
+}
+
+impl<'a> PointsOracle<'a> {
+    /// Wrap a point set and metric as an on-demand distance storage.
+    pub fn new(points: &'a Points, metric: Metric) -> Self {
+        PointsOracle { points, metric }
+    }
+}
+
+impl DistanceStorage for PointsOracle<'_> {
+    fn n(&self) -> usize {
+        self.points.n()
+    }
+
+    fn get(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            0.0
+        } else {
+            self.metric.eval(self.points.row(i), self.points.row(j))
+        }
+    }
+
+    fn distance_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Exact VAT ordering computed directly from points through a
+/// [`PointsOracle`] — O(n) resident distance bytes, O(n²) metric
+/// evaluations. This is the exact-reference arm of `bench-approx` and the
+/// k = n−1 brute-force baseline; its output is bitwise identical to the
+/// condensed tier's Prim sweep (the oracle serves the same bits).
+pub fn exact_vat_points(
+    points: &Points,
+    metric: Metric,
+) -> (Vec<usize>, Vec<(usize, usize, f64)>) {
+    prim::vat_order_on(&PointsOracle::new(points, metric))
+}
+
+/// Fidelity and provenance report for an approximate-tier run, surfaced
+/// through `AnalysisReport::approx`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApproxOutcome {
+    /// Points assessed.
+    pub n: usize,
+    /// The k the caller asked for (before clamping).
+    pub requested_k: usize,
+    /// Effective neighbors per point after clamping to `1..=n−1`.
+    pub k: usize,
+    /// True when `k = n−1`: the graph was complete and the output is
+    /// bitwise identical to the exact tiers (the parity contract).
+    pub complete: bool,
+    /// Unique undirected edges in the kNN graph (before repair).
+    pub graph_edges: usize,
+    /// Cross-component edges added to make the graph spanning (0 when the
+    /// kNN graph was already connected, always 0 in complete mode).
+    pub repair_edges: usize,
+    /// Complete mode only: the verified replay was rejected (tie-induced
+    /// alternative minimal tree, or NaN input) and the run routed through
+    /// the sequential Prim fallback — output still exact.
+    pub fell_back: bool,
+    /// Sum of the finite MST edge weights of the returned tree.
+    pub mst_weight: f64,
+    /// Measured fraction of true k-nearest neighbors present in the
+    /// graph, averaged over a [`DEFAULT_SEED`]-derived query sample
+    /// (1.0 in complete mode and for store-backed exact-kNN builds).
+    pub neighbor_recall: f64,
+    /// `approx MST weight / exact MST weight` (≥ 1.0 up to rounding) —
+    /// computed when n ≤ 2048 affords the exact reference, else `None`.
+    pub mst_weight_ratio: Option<f64>,
+    /// Fraction of adjacent display-order pairs that are also adjacent
+    /// (either orientation) in the exact VAT order — same availability
+    /// rule as `mst_weight_ratio`.
+    pub order_agreement: Option<f64>,
+}
+
+/// An approximate-tier ordering: the display permutation, the MST in
+/// display coordinates (`(parent_pos, child_pos, weight)`, same shape as
+/// [`prim::vat_order_on`]), and the fidelity report.
+pub struct ApproxVat {
+    /// The (approximate) VAT permutation.
+    pub order: Vec<usize>,
+    /// Display-coordinate spanning-tree edges; in complete mode bitwise
+    /// identical to the exact Prim sweep's MST.
+    pub mst: Vec<(usize, usize, f64)>,
+    /// Fidelity and provenance of the run.
+    pub outcome: ApproxOutcome,
+}
+
+/// Approximate VAT directly from points: deterministic projected kNN
+/// candidate search (seeded by `seed`), sparse Borůvka, repair, replay.
+/// `k ≥ n−1` routes through complete mode and is bitwise exact.
+pub fn approx_vat_points(points: &Points, metric: Metric, k: usize, seed: u64) -> ApproxVat {
+    let oracle = PointsOracle::new(points, metric);
+    let n = points.n();
+    let k_eff = effective_k(n, k);
+    if n <= 2 || k_eff >= n.saturating_sub(1) {
+        return complete_mode(&oracle, k, k_eff);
+    }
+    let nbrs = knn_projected(points, metric, k_eff, seed);
+    sparse_mode(&oracle, &nbrs, k, k_eff, seed)
+}
+
+/// Approximate VAT over an existing distance storage. With `k < n−1` the
+/// per-point neighbor lists are the *exact* k nearest (one row scan per
+/// point — O(n²) reads but only O(n·k) resident graph bytes), so
+/// `neighbor_recall` is 1.0 by construction; with `k ≥ n−1` this is the
+/// complete-mode parity path the `FAST_VAT_TEST_FORCE_APPROX` suite
+/// drives, bitwise equal to [`prim::vat_order_on`] on the same storage.
+pub fn approx_vat_on<S: DistanceStorage>(d: &S, k: usize, seed: u64) -> ApproxVat {
+    let n = d.n();
+    let k_eff = effective_k(n, k);
+    if n <= 2 || k_eff >= n.saturating_sub(1) {
+        return complete_mode(d, k, k_eff);
+    }
+    let (nbrs, _nan_seen) = knn_exact_rows(d, k_eff);
+    sparse_mode(d, &nbrs, k, k_eff, seed)
+}
+
+/// Clamp a requested k into the valid `1..=n−1` band (n ≤ 1 pins 1).
+fn effective_k(n: usize, k: usize) -> usize {
+    k.clamp(1, n.saturating_sub(1).max(1))
+}
+
+fn finite_weight(mst: &[(usize, usize, f64)]) -> f64 {
+    mst.iter().map(|e| e.2).filter(|w| w.is_finite()).sum()
+}
+
+/// Complete mode (`k = n−1`): enumerate the full graph through the
+/// oracle, run the sparse machinery, then verify-and-fallback exactly
+/// like [`super::boruvka`] — the output is always bitwise identical to
+/// [`prim::vat_order_on`] on the same storage.
+fn complete_mode<S: DistanceStorage>(d: &S, requested_k: usize, k_eff: usize) -> ApproxVat {
+    let n = d.n();
+    let mut graph_edges = 0usize;
+    if n > 2 {
+        let (nbrs, nan_seen) = knn_exact_rows(d, n - 1);
+        if !nan_seen {
+            let edges = collect_edges(&nbrs);
+            graph_edges = edges.len();
+            let mut dsu = Dsu::new(n);
+            let mut tree = Vec::with_capacity(n - 1);
+            let m = sparse_mst_rounds(n, &edges, &mut dsu, &mut tree);
+            if m == 1 && tree.len() == n - 1 {
+                if let Some((order, attach_w, _)) = replay_from(n, d.seed_row(), &tree) {
+                    if let Some(mst) = verify_and_rebuild(d, &order, &attach_w) {
+                        let mst_weight = finite_weight(&mst);
+                        return ApproxVat {
+                            order,
+                            mst,
+                            outcome: ApproxOutcome {
+                                n,
+                                requested_k,
+                                k: k_eff,
+                                complete: true,
+                                graph_edges,
+                                repair_edges: 0,
+                                fell_back: false,
+                                mst_weight,
+                                neighbor_recall: 1.0,
+                                mst_weight_ratio: Some(1.0),
+                                order_agreement: Some(1.0),
+                            },
+                        };
+                    }
+                }
+            }
+        }
+    }
+    let (order, mst) = prim::vat_order_on(d);
+    let mst_weight = finite_weight(&mst);
+    ApproxVat {
+        order,
+        mst,
+        outcome: ApproxOutcome {
+            n,
+            requested_k,
+            k: k_eff,
+            complete: true,
+            graph_edges,
+            repair_edges: 0,
+            fell_back: n > 2,
+            mst_weight,
+            neighbor_recall: 1.0,
+            mst_weight_ratio: Some(1.0),
+            order_agreement: Some(1.0),
+        },
+    }
+}
+
+/// Sparse mode (`k < n−1`): MST over the kNN graph + repair edges,
+/// root-down replay from the sparse seed rule, measured fidelity report.
+fn sparse_mode<S: DistanceStorage>(
+    d: &S,
+    nbrs: &[Vec<(f64, u32)>],
+    requested_k: usize,
+    k_eff: usize,
+    seed: u64,
+) -> ApproxVat {
+    let n = d.n();
+    let edges = collect_edges(nbrs);
+    let graph_edges = edges.len();
+    let mut dsu = Dsu::new(n);
+    let mut tree = Vec::with_capacity(n.saturating_sub(1));
+    sparse_mst_rounds(n, &edges, &mut dsu, &mut tree);
+    let repair_edges = repair_connectivity(d, &mut dsu, &mut tree);
+    let seed_row = sparse_seed(nbrs);
+
+    let (order, attach_w, parent_pos) = match replay_from(n, seed_row, &tree) {
+        Some(r) => r,
+        None => {
+            // unreachable after repair (the tree spans), but never panic:
+            // serve the exact order and say so
+            let (order, mst) = prim::vat_order_on(d);
+            let mst_weight = finite_weight(&mst);
+            return ApproxVat {
+                order,
+                mst,
+                outcome: ApproxOutcome {
+                    n,
+                    requested_k,
+                    k: k_eff,
+                    complete: false,
+                    graph_edges,
+                    repair_edges,
+                    fell_back: true,
+                    mst_weight,
+                    neighbor_recall: 1.0,
+                    mst_weight_ratio: Some(1.0),
+                    order_agreement: Some(1.0),
+                },
+            };
+        }
+    };
+    let mst: Vec<(usize, usize, f64)> = (1..n)
+        .map(|t| (parent_pos[t] as usize, t, attach_w[t]))
+        .collect();
+    let mst_weight = finite_weight(&mst);
+    let neighbor_recall = measure_recall(d, nbrs, k_eff, seed);
+    let (mst_weight_ratio, order_agreement) = if n <= EXACT_COMPARE_MAX {
+        let (exact_order, exact_mst) = prim::vat_order_on(d);
+        let exact_weight = finite_weight(&exact_mst);
+        let ratio = if exact_weight > 0.0 {
+            mst_weight / exact_weight
+        } else if mst_weight == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        };
+        (Some(ratio), Some(order_agreement(&order, &exact_order)))
+    } else {
+        (None, None)
+    };
+    ApproxVat {
+        order,
+        mst,
+        outcome: ApproxOutcome {
+            n,
+            requested_k,
+            k: k_eff,
+            complete: false,
+            graph_edges,
+            repair_edges,
+            fell_back: false,
+            mst_weight,
+            neighbor_recall,
+            mst_weight_ratio,
+            order_agreement,
+        },
+    }
+}
+
+/// Exact per-row kNN lists read straight off a storage: for each point,
+/// the k nearest others by the pinned `(distance, index)` order, NaN
+/// entries skipped (and reported). Used for the complete-mode full graph
+/// (`k = n−1`) and the store-backed sparse build.
+fn knn_exact_rows<S: DistanceStorage>(d: &S, k: usize) -> (Vec<Vec<(f64, u32)>>, bool) {
+    let n = d.n();
+    let mut nan_seen = false;
+    let mut out = Vec::with_capacity(n);
+    let mut scratch = vec![0.0f64; n];
+    for i in 0..n {
+        let row: &[f64] = match d.row_slice(i) {
+            Some(r) => r,
+            None => {
+                d.fill_row(i, &mut scratch);
+                &scratch
+            }
+        };
+        let mut pairs: Vec<(f64, u32)> = Vec::with_capacity(n.saturating_sub(1));
+        for (j, &w) in row.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            if w.is_nan() {
+                nan_seen = true;
+                continue;
+            }
+            pairs.push((w, j as u32));
+        }
+        pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        pairs.truncate(k);
+        out.push(pairs);
+    }
+    (out, nan_seen)
+}
+
+/// Deterministic projected kNN candidate search over raw points:
+/// [`PROJECTION_ROUNDS`] random directions (Pcg32-seeded), each sorting
+/// the points by projection key and joining a sliding window, then
+/// [`DESCENT_ROUNDS`] neighbor-of-neighbor refinement passes. Sequential
+/// with pinned `(distance, index)` tie-breaks throughout, so the graph is
+/// a pure function of `(points, metric, k, seed)`.
+fn knn_projected(points: &Points, metric: Metric, k: usize, seed: u64) -> Vec<Vec<(f64, u32)>> {
+    let n = points.n();
+    let dim = points.d();
+    let mut nbrs: Vec<Vec<(f64, u32)>> = vec![Vec::with_capacity(k + 1); n];
+    let mut rng = Pcg32::new(seed);
+    let window = (k / 2).max(4);
+    for _ in 0..PROJECTION_ROUNDS {
+        let dir: Vec<f64> = (0..dim.max(1)).map(|_| rng.normal()).collect();
+        let mut keys: Vec<(u64, u32)> = (0..n)
+            .map(|i| {
+                let mut s = 0.0f64;
+                for (x, w) in points.row(i).iter().zip(&dir) {
+                    s += x * w;
+                }
+                // key_bits gives a deterministic total order even when a
+                // NaN coordinate poisons the projection
+                (key_bits(s), i as u32)
+            })
+            .collect();
+        keys.sort_unstable();
+        for (p, &(_, ip)) in keys.iter().enumerate() {
+            for &(_, jq) in keys.iter().skip(p + 1).take(window) {
+                try_pair(&mut nbrs, points, metric, k, ip, jq);
+            }
+        }
+    }
+    for _ in 0..DESCENT_ROUNDS {
+        for i in 0..n {
+            let snapshot: Vec<u32> = nbrs[i].iter().map(|&(_, j)| j).collect();
+            for &j in &snapshot {
+                let hops: Vec<u32> = nbrs[j as usize].iter().map(|&(_, l)| l).collect();
+                for &l in &hops {
+                    if l as usize != i {
+                        try_pair(&mut nbrs, points, metric, k, i as u32, l);
+                    }
+                }
+            }
+        }
+    }
+    nbrs
+}
+
+/// Evaluate one candidate pair and insert it (symmetrically) into both
+/// bounded neighbor lists. NaN dissimilarities never enter a list.
+fn try_pair(
+    nbrs: &mut [Vec<(f64, u32)>],
+    points: &Points,
+    metric: Metric,
+    k: usize,
+    i: u32,
+    j: u32,
+) {
+    if i == j {
+        return;
+    }
+    let w = metric.eval(points.row(i as usize), points.row(j as usize));
+    if w.is_nan() {
+        return;
+    }
+    insert_bounded(&mut nbrs[i as usize], k, w, j);
+    insert_bounded(&mut nbrs[j as usize], k, w, i);
+}
+
+/// Insert `(w, j)` into a list kept sorted ascending by `(w, j)`, capped
+/// at k entries; duplicates (same j) are skipped.
+fn insert_bounded(list: &mut Vec<(f64, u32)>, k: usize, w: f64, j: u32) {
+    if list.iter().any(|&(_, x)| x == j) {
+        return;
+    }
+    if list.len() == k {
+        let &(lw, lj) = list.last().expect("k >= 1");
+        if !(w < lw || (w == lw && j < lj)) {
+            return;
+        }
+        list.pop();
+    }
+    let pos = list.partition_point(|&(pw, pj)| pw < w || (pw == w && pj < j));
+    list.insert(pos, (w, j));
+}
+
+/// Flatten per-vertex neighbor lists into a deduplicated undirected edge
+/// list sorted by `(a, b)` — both directions of a pair carry the same
+/// oracle value, so keeping the first is lossless.
+fn collect_edges(nbrs: &[Vec<(f64, u32)>]) -> Vec<(u32, u32, f64)> {
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    for (i, list) in nbrs.iter().enumerate() {
+        let i = i as u32;
+        for &(w, j) in list {
+            let (a, b) = if i < j { (i, j) } else { (j, i) };
+            edges.push((a, b, w));
+        }
+    }
+    edges.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+    edges.dedup_by(|x, y| x.0 == y.0 && x.1 == y.1);
+    edges
+}
+
+/// Borůvka rounds over a sparse edge list with the pinned [`EdgeKey`]
+/// total order: each round scans every edge once, keeps the best crossing
+/// edge per component, and unions them. Returns the number of components
+/// remaining (1 when the edge set spans; > 1 when the graph is
+/// disconnected and [`repair_connectivity`] must finish the job).
+fn sparse_mst_rounds(
+    n: usize,
+    edges: &[(u32, u32, f64)],
+    dsu: &mut Dsu,
+    tree: &mut Vec<(usize, usize, f64)>,
+) -> usize {
+    let mut m = n;
+    while m > 1 {
+        let (labels, mm) = component_labels(dsu, n);
+        debug_assert_eq!(mm, m);
+        let mut best = vec![EdgeKey::NONE; m];
+        for &(a, b, w) in edges {
+            if w.is_nan() {
+                continue;
+            }
+            let ca = labels[a as usize] as usize;
+            let cb = labels[b as usize] as usize;
+            if ca == cb {
+                continue;
+            }
+            let key = EdgeKey { w, a, b };
+            if key.beats(&best[ca]) {
+                best[ca] = key;
+            }
+            if key.beats(&best[cb]) {
+                best[cb] = key;
+            }
+        }
+        let before = m;
+        for key in best.iter().filter(|k| k.is_some()) {
+            if dsu.union(key.a, key.b) {
+                tree.push((key.a as usize, key.b as usize, key.w));
+                m -= 1;
+            }
+        }
+        if m >= before {
+            break; // no crossing edges left: disconnected graph
+        }
+    }
+    m
+}
+
+/// Evenly strided sample of at most `cap` vertices (always includes the
+/// first) — deterministic without consuming PRNG state.
+fn strided(v: &[u32], cap: usize) -> Vec<u32> {
+    if v.len() <= cap {
+        return v.to_vec();
+    }
+    (0..cap).map(|i| v[i * v.len() / cap]).collect()
+}
+
+/// Connect the remaining components into one tree: components merge into
+/// the growing core in ascending label order, each via the best sampled
+/// `(w, a, b)` cross edge (up to [`REPAIR_SAMPLE`] vertices per side).
+/// Returns the number of repair edges added.
+fn repair_connectivity<S: DistanceStorage>(
+    d: &S,
+    dsu: &mut Dsu,
+    tree: &mut Vec<(usize, usize, f64)>,
+) -> usize {
+    let n = d.n();
+    let (labels, m) = component_labels(dsu, n);
+    if m <= 1 {
+        return 0;
+    }
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); m];
+    for (i, &c) in labels.iter().enumerate() {
+        members[c as usize].push(i as u32);
+    }
+    let mut core = members[0].clone();
+    let mut repairs = 0usize;
+    for comp in members.iter().skip(1) {
+        let core_s = strided(&core, REPAIR_SAMPLE);
+        let comp_s = strided(comp, REPAIR_SAMPLE);
+        let mut best = EdgeKey::NONE;
+        for &a in &core_s {
+            for &b in &comp_s {
+                let (x, y) = if a < b { (a, b) } else { (b, a) };
+                let key = EdgeKey {
+                    w: d.get(x as usize, y as usize),
+                    a: x,
+                    b: y,
+                };
+                if key.beats(&best) {
+                    best = key;
+                }
+            }
+        }
+        if !best.is_some() {
+            // every sampled distance was NaN: join deterministically by
+            // the lowest member pair anyway (weight stays NaN)
+            let a = core[0].min(comp[0]);
+            let b = core[0].max(comp[0]);
+            best = EdgeKey {
+                w: d.get(a as usize, b as usize),
+                a,
+                b,
+            };
+        }
+        tree.push((best.a as usize, best.b as usize, best.w));
+        dsu.union(best.a, best.b);
+        core.extend_from_slice(comp);
+        repairs += 1;
+    }
+    repairs
+}
+
+/// Sparse-mode seed rule: the first vertex (ascending index) whose
+/// neighbor list holds the largest graph edge weight — the kNN-graph
+/// analogue of the exact tiers' first-row-major argmax (strict `>`, NaN
+/// never wins, the zero diagonal floors the accumulator at 0).
+fn sparse_seed(nbrs: &[Vec<(f64, u32)>]) -> usize {
+    let mut best_i = 0usize;
+    let mut best_v = 0.0f64;
+    for (i, list) in nbrs.iter().enumerate() {
+        for &(w, _) in list {
+            if w > best_v {
+                best_v = w;
+                best_i = i;
+            }
+        }
+    }
+    best_i
+}
+
+/// Root-down replay of a spanning tree from the seed row, popping the
+/// frontier vertex with minimal `(attach weight, child index)` — the same
+/// heap discipline as `boruvka::replay_tree`, additionally tracking each
+/// vertex's tree-parent **display position** so sparse mode can emit the
+/// display-coordinate MST without any matrix reads. Returns `(order,
+/// attach weights, parent positions)`, or `None` if the edges don't span.
+fn replay_from(
+    n: usize,
+    seed: usize,
+    edges: &[(usize, usize, f64)],
+) -> Option<(Vec<usize>, Vec<f64>, Vec<u32>)> {
+    if n == 0 {
+        return Some((Vec::new(), Vec::new(), Vec::new()));
+    }
+    let adj = mst_adjacency(n, edges);
+    let mut order = Vec::with_capacity(n);
+    let mut attach_w = Vec::with_capacity(n);
+    let mut parent_pos = Vec::with_capacity(n);
+    let mut selected = vec![false; n];
+    let mut pending_w = vec![0.0f64; n];
+    let mut pending_from = vec![0u32; n];
+    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::with_capacity(n);
+    order.push(seed);
+    attach_w.push(0.0);
+    parent_pos.push(0);
+    selected[seed] = true;
+    for &(nb, w) in &adj.adj[adj.start[seed]..adj.start[seed + 1]] {
+        pending_w[nb as usize] = w;
+        pending_from[nb as usize] = 0;
+        heap.push(Reverse((key_bits(w), nb)));
+    }
+    while let Some(Reverse((_, c))) = heap.pop() {
+        let c = c as usize;
+        if selected[c] {
+            // unreachable for a tree (each vertex is pushed only by its
+            // unique parent), kept for safety
+            continue;
+        }
+        selected[c] = true;
+        order.push(c);
+        attach_w.push(pending_w[c]);
+        parent_pos.push(pending_from[c]);
+        let pos = (order.len() - 1) as u32;
+        for &(nb, w) in &adj.adj[adj.start[c]..adj.start[c + 1]] {
+            if !selected[nb as usize] {
+                pending_w[nb as usize] = w;
+                pending_from[nb as usize] = pos;
+                heap.push(Reverse((key_bits(w), nb)));
+            }
+        }
+    }
+    (order.len() == n).then_some((order, attach_w, parent_pos))
+}
+
+/// Fused sequential pass, mirroring `boruvka::mst_and_verify` bit for
+/// bit: rebuild the display MST with the pinned `mst_from_order` parent
+/// rule while verifying the Prim greedy invariant at every step. `None`
+/// means the replayed order is not Prim's (tie-induced) — fall back.
+fn verify_and_rebuild<S: DistanceStorage>(
+    d: &S,
+    order: &[usize],
+    attach_w: &[f64],
+) -> Option<Vec<(usize, usize, f64)>> {
+    let n = order.len();
+    let mut scratch = vec![0.0f64; n];
+    let mut mst = Vec::with_capacity(n.saturating_sub(1));
+    for t in 1..n {
+        let c = order[t];
+        let row: &[f64] = match d.row_slice(c) {
+            Some(r) => r,
+            None => {
+                d.fill_row(c, &mut scratch);
+                &scratch
+            }
+        };
+        let mut best_p = 0usize;
+        let mut best_v = row[order[0]];
+        for s in 1..t {
+            let ws = attach_w[s];
+            if !(ws < best_v || (ws == best_v && order[s] < c)) {
+                return None;
+            }
+            let v = row[order[s]];
+            if v < best_v {
+                best_v = v;
+                best_p = s;
+            }
+        }
+        mst.push((best_p, t, best_v));
+    }
+    Some(mst)
+}
+
+/// Measured neighbor recall: over a [`Pcg32`]-chosen query sample, the
+/// fraction of each query's true k nearest (by `(distance, index)`) that
+/// its graph list holds, averaged. O(sample·n) oracle reads.
+fn measure_recall<S: DistanceStorage>(
+    d: &S,
+    nbrs: &[Vec<(f64, u32)>],
+    k: usize,
+    seed: u64,
+) -> f64 {
+    let n = d.n();
+    if n <= 1 || k == 0 {
+        return 1.0;
+    }
+    let m = n.min(RECALL_QUERIES);
+    let mut rng = Pcg32::new(seed ^ 0x5EED_CA11);
+    let queries = rng.choose_indices(n, m);
+    let mut scratch = vec![0.0f64; n];
+    let mut total = 0.0f64;
+    for &q in &queries {
+        let row: &[f64] = match d.row_slice(q) {
+            Some(r) => r,
+            None => {
+                d.fill_row(q, &mut scratch);
+                &scratch
+            }
+        };
+        let mut pairs: Vec<(f64, u32)> = Vec::with_capacity(n - 1);
+        for (j, &w) in row.iter().enumerate() {
+            if j != q && !w.is_nan() {
+                pairs.push((w, j as u32));
+            }
+        }
+        pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        pairs.truncate(k);
+        let mut exact: Vec<u32> = pairs.iter().map(|&(_, j)| j).collect();
+        exact.sort_unstable();
+        let hits = nbrs[q]
+            .iter()
+            .filter(|&&(_, j)| exact.binary_search(&j).is_ok())
+            .count();
+        total += hits as f64 / exact.len().max(1) as f64;
+    }
+    total / m.max(1) as f64
+}
+
+/// Fraction of adjacent pairs in `a` that are also adjacent (either
+/// orientation) in `b` — a shift-tolerant order-similarity measure.
+fn order_agreement(a: &[usize], b: &[usize]) -> f64 {
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut pos = vec![0usize; n];
+    for (p, &v) in b.iter().enumerate() {
+        pos[v] = p;
+    }
+    let hits = a
+        .windows(2)
+        .filter(|w| pos[w[0]].abs_diff(pos[w[1]]) == 1)
+        .count();
+    hits as f64 / (n - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{blobs, gmm, moons};
+    use crate::dissimilarity::condensed::CondensedMatrix;
+    use crate::dissimilarity::DistanceMatrix;
+
+    fn assert_mst_eq_nan(a: &[(usize, usize, f64)], b: &[(usize, usize, f64)]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!((x.0, x.1), (y.0, y.1), "{x:?} vs {y:?}");
+            assert!(
+                x.2 == y.2 || (x.2.is_nan() && y.2.is_nan()),
+                "{x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn complete_mode_is_bitwise_prim_on_storage() {
+        for seed in 0..6 {
+            let ds = gmm(80, 3, 3, seed);
+            let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+            let (ref_order, ref_mst) = prim::vat_order_on(&d);
+            let out = approx_vat_on(&d, 79, DEFAULT_SEED);
+            assert_eq!(out.order, ref_order, "seed {seed}");
+            assert_eq!(out.mst, ref_mst, "seed {seed}");
+            assert!(out.outcome.complete);
+            assert!(!out.outcome.fell_back, "float data stays native");
+            assert_eq!(out.outcome.k, 79);
+            assert_eq!(out.outcome.repair_edges, 0);
+            assert_eq!(out.outcome.neighbor_recall, 1.0);
+            assert_eq!(out.outcome.mst_weight_ratio, Some(1.0));
+            assert_eq!(out.outcome.order_agreement, Some(1.0));
+        }
+    }
+
+    #[test]
+    fn requested_k_clamps_into_complete_mode() {
+        let ds = blobs(50, 2, 3, 0.5, 21);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let (ref_order, ref_mst) = prim::vat_order_on(&d);
+        for k in [49usize, 50, 10_000] {
+            let out = approx_vat_on(&d, k, DEFAULT_SEED);
+            assert_eq!(out.order, ref_order, "k {k}");
+            assert_eq!(out.mst, ref_mst, "k {k}");
+            assert!(out.outcome.complete, "k {k}");
+            assert_eq!(out.outcome.k, 49);
+            assert_eq!(out.outcome.requested_k, k);
+        }
+    }
+
+    #[test]
+    fn points_complete_mode_matches_the_metric_direct_family() {
+        // the points oracle serves metric.eval bits, so at k = n−1 the
+        // approx order/MST equal the condensed (metric-direct) tier's
+        let ds = moons(90, 0.06, 33);
+        let cond = CondensedMatrix::build(&ds.points, Metric::Euclidean);
+        let (ref_order, ref_mst) = prim::vat_order_on(&cond);
+        let out = approx_vat_points(&ds.points, Metric::Euclidean, 89, DEFAULT_SEED);
+        assert_eq!(out.order, ref_order);
+        assert_eq!(out.mst, ref_mst);
+        assert!(!out.outcome.fell_back);
+        // and the O(n)-memory exact sweep agrees too
+        let (eo, em) = exact_vat_points(&ds.points, Metric::Euclidean);
+        assert_eq!(eo, ref_order);
+        assert_eq!(em, ref_mst);
+    }
+
+    #[test]
+    fn sparse_mode_is_deterministic_and_reports_fidelity() {
+        let ds = blobs(200, 3, 4, 0.5, 11);
+        let a = approx_vat_points(&ds.points, Metric::Euclidean, 12, 7);
+        let b = approx_vat_points(&ds.points, Metric::Euclidean, 12, 7);
+        assert_eq!(a.order, b.order, "same seed, same order");
+        assert_mst_eq_nan(&a.mst, &b.mst);
+        assert_eq!(a.outcome, b.outcome);
+        // a permutation of 0..n
+        let mut sorted = a.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..200).collect::<Vec<_>>());
+        assert!(!a.outcome.complete);
+        assert_eq!(a.outcome.k, 12);
+        // non-placeholder fidelity: measured, in range, exact ref computed
+        assert!(a.outcome.neighbor_recall > 0.0 && a.outcome.neighbor_recall <= 1.0);
+        let ratio = a.outcome.mst_weight_ratio.expect("n <= 2048");
+        assert!(ratio >= 1.0 - 1e-12, "approx MST cannot beat exact: {ratio}");
+        let agree = a.outcome.order_agreement.expect("n <= 2048");
+        assert!((0.0..=1.0).contains(&agree));
+        assert!(a.outcome.graph_edges > 0);
+    }
+
+    #[test]
+    fn store_backed_sparse_has_exact_neighbor_lists() {
+        // per-row scans give the true kNN, so recall is exactly 1.0
+        let ds = gmm(120, 2, 3, 5);
+        let d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        let out = approx_vat_on(&d, 10, DEFAULT_SEED);
+        assert!(!out.outcome.complete);
+        assert_eq!(out.outcome.neighbor_recall, 1.0);
+        let mut sorted = out.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..120).collect::<Vec<_>>());
+        // the display MST is a valid spanning structure: parent position
+        // strictly precedes the child position
+        for &(p, t, _) in &out.mst {
+            assert!(p < t, "parent display position precedes child: {p} {t}");
+        }
+    }
+
+    #[test]
+    fn nan_poisoned_complete_mode_falls_back_and_stays_exact() {
+        let ds = gmm(36, 2, 2, 11);
+        let mut d = DistanceMatrix::build_blocked(&ds.points, Metric::Euclidean);
+        for j in 0..36 {
+            if j != 20 {
+                d.set(20, j, f64::NAN);
+                d.set(j, 20, f64::NAN);
+            }
+        }
+        let (ref_order, ref_mst) = prim::vat_order_on(&d);
+        let out = approx_vat_on(&d, 35, DEFAULT_SEED);
+        assert!(out.outcome.fell_back, "NaN must route through the fallback");
+        assert_eq!(out.order, ref_order);
+        assert_mst_eq_nan(&out.mst, &ref_mst);
+    }
+
+    #[test]
+    fn nan_poisoned_sparse_mode_still_yields_a_permutation() {
+        // one point with all-NaN coordinates: its distances are NaN, its
+        // neighbor list stays empty, and a repair edge reattaches it
+        let ds = blobs(60, 2, 2, 0.5, 3);
+        let mut rows: Vec<Vec<f64>> = (0..60).map(|i| ds.points.row(i).to_vec()).collect();
+        rows[30] = vec![f64::NAN, f64::NAN];
+        let points = Points::from_rows(&rows).unwrap();
+        let out = approx_vat_points(&points, Metric::Euclidean, 8, 1);
+        let mut sorted = out.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..60).collect::<Vec<_>>());
+        assert!(out.outcome.repair_edges >= 1, "isolated point needs repair");
+    }
+
+    #[test]
+    fn duplicate_points_sparse_mode_handles_zero_distances() {
+        let ds = blobs(30, 2, 2, 0.4, 55);
+        let mut rows = Vec::new();
+        for i in 0..30 {
+            rows.push(ds.points.row(i).to_vec());
+            rows.push(ds.points.row(i).to_vec());
+        }
+        let points = Points::from_rows(&rows).unwrap();
+        let out = approx_vat_points(&points, Metric::Euclidean, 6, 2);
+        let mut sorted = out.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..60).collect::<Vec<_>>());
+        assert!(!out.outcome.complete);
+        // sixty points in thirty duplicate pairs: every point's true
+        // nearest neighbor is at distance zero and the sparse MST must
+        // pick those edges up, so at least 30 tree edges weigh 0.0
+        let zero_edges = out.mst.iter().filter(|e| e.2 == 0.0).count();
+        assert!(zero_edges >= 30, "zero-distance duplicates: {zero_edges}");
+    }
+
+    #[test]
+    fn degenerate_sizes_route_through_the_exact_path() {
+        // n = 0 via an empty dense matrix, tiny n via points
+        let empty = DistanceMatrix::zeros(0);
+        let out = approx_vat_on(&empty, 4, 0);
+        assert!(out.order.is_empty() && out.mst.is_empty());
+        assert!(out.outcome.complete && !out.outcome.fell_back);
+        for n in [1usize, 2, 3] {
+            let ds = blobs(n, 2, 1, 0.3, 9);
+            let out = approx_vat_points(&ds.points, Metric::Euclidean, 4, 0);
+            let (ref_order, ref_mst) = exact_vat_points(&ds.points, Metric::Euclidean);
+            assert_eq!(out.order, ref_order, "n {n}");
+            assert_mst_eq_nan(&out.mst, &ref_mst);
+            assert!(out.outcome.complete, "n {n} is complete by clamping");
+        }
+    }
+
+    #[test]
+    fn order_agreement_bounds() {
+        assert_eq!(order_agreement(&[0, 1, 2, 3], &[0, 1, 2, 3]), 1.0);
+        assert_eq!(order_agreement(&[3, 2, 1, 0], &[0, 1, 2, 3]), 1.0);
+        assert_eq!(order_agreement(&[0, 2, 1, 3], &[0, 1, 2, 3]), 1.0 / 3.0);
+        assert_eq!(order_agreement(&[0], &[0]), 1.0);
+    }
+
+    #[test]
+    fn strided_sampling_is_bounded_and_deterministic() {
+        let v: Vec<u32> = (0..1000).collect();
+        let s = strided(&v, 256);
+        assert_eq!(s.len(), 256);
+        assert_eq!(s[0], 0);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        let small: Vec<u32> = (0..10).collect();
+        assert_eq!(strided(&small, 256), small);
+    }
+}

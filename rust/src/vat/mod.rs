@@ -33,6 +33,7 @@ pub mod blocks;
 pub mod boruvka;
 pub mod dendrogram;
 pub mod ivat;
+pub mod knn;
 pub mod prim;
 pub mod svat;
 

@@ -1,0 +1,311 @@
+//! Approximate-tier parity — the sub-quadratic kNN-graph tier's two-sided
+//! contract, pinned end to end:
+//!
+//! * **Exactness at `k = n−1`** (complete mode): for every engine × metric
+//!   × storage layout, `knn::approx_vat_on` must reproduce the exact Prim
+//!   sweep's permutation and MST **bitwise** — the approximate machinery is
+//!   a strict superset of the exact tiers, never a near miss. The same
+//!   holds for the engine-less points path against the metric-direct
+//!   condensed build, and for whole `AnalysisPlan` runs down to the
+//!   rendered iVAT bytes.
+//! * **Honesty at `k < n−1`** (sparse mode): the output is a genuine
+//!   permutation plus a spanning tree, the run is deterministic under
+//!   [`knn::DEFAULT_SEED`], and the fidelity report carries *measured*
+//!   numbers — neighbor recall in `(0, 1]`, MST weight ratio ≥ 1, order
+//!   agreement present whenever `n` affords the exact reference.
+//!
+//! Adversarial inputs (a NaN-poisoned column, mass duplicates) go through
+//! the same gates: complete mode still matches Prim bit for bit (via the
+//! verified fallback), sparse mode still emits a deterministic permutation.
+
+use fast_vat::analysis::{auto_knn_k, Analysis, StoragePolicy};
+use fast_vat::data::generators::{blobs, gmm, moons};
+use fast_vat::data::Points;
+use fast_vat::dissimilarity::engine::{
+    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+};
+use fast_vat::dissimilarity::{DistanceStorage, Metric, ShardOptions, StorageKind};
+use fast_vat::vat::knn;
+use fast_vat::vat::vat;
+
+fn engines() -> Vec<Box<dyn DistanceEngine>> {
+    vec![
+        Box::new(NaiveEngine),
+        Box::new(BlockedEngine),
+        Box::new(ParallelEngine { threads: 4 }),
+        Box::new(CondensedEngine),
+    ]
+}
+
+fn metrics() -> Vec<Metric> {
+    vec![
+        Metric::Euclidean,
+        Metric::SqEuclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Minkowski(3.0),
+        Metric::Cosine,
+    ]
+}
+
+fn storage_kinds() -> [StorageKind; 4] {
+    [
+        StorageKind::Dense,
+        StorageKind::Condensed,
+        StorageKind::Sharded,
+        StorageKind::ShardedSquare,
+    ]
+}
+
+fn shard_opts() -> ShardOptions {
+    ShardOptions {
+        shard_rows: 17,
+        cache_shards: 2,
+        spill_dir: None,
+    }
+}
+
+/// MST edges with the weight viewed as raw bits, so NaN-weighted edges
+/// still compare (NaN ≠ NaN under `==`, but the parity contract is
+/// *bitwise*, and `to_bits` says exactly that).
+fn mst_bits(mst: &[(usize, usize, f64)]) -> Vec<(usize, usize, u64)> {
+    mst.iter().map(|&(a, b, w)| (a, b, w.to_bits())).collect()
+}
+
+fn assert_permutation(order: &[usize], n: usize, ctx: &str) {
+    let mut sorted = order.to_vec();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "not a permutation: {ctx}");
+}
+
+#[test]
+fn complete_mode_is_bitwise_exact_across_engines_metrics_and_storages() {
+    let ds = blobs(90, 3, 3, 0.6, 7301);
+    let opts = shard_opts();
+    for e in engines() {
+        for metric in metrics() {
+            if !e.supports(metric) {
+                continue;
+            }
+            for kind in storage_kinds() {
+                let store = e
+                    .build_storage_with(&ds.points, metric, kind, &opts)
+                    .unwrap();
+                let exact = vat(&store);
+                let n = store.n();
+                let got = knn::approx_vat_on(&store, n - 1, knn::DEFAULT_SEED);
+                let ctx = format!("{} / {metric:?} / {kind:?}", e.name());
+                assert_eq!(got.order, exact.order, "order diverged: {ctx}");
+                assert_eq!(got.mst, exact.mst, "mst diverged: {ctx}");
+                let a = &got.outcome;
+                assert!(a.complete, "complete flag: {ctx}");
+                assert_eq!(a.repair_edges, 0, "repair in complete mode: {ctx}");
+                assert_eq!(a.neighbor_recall, 1.0, "recall: {ctx}");
+                assert_eq!(a.mst_weight_ratio, Some(1.0), "ratio: {ctx}");
+                assert_eq!(a.order_agreement, Some(1.0), "agreement: {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn points_path_at_full_k_matches_the_condensed_tier_bitwise() {
+    // the engine-less oracle serves metric.eval bits — the same values the
+    // metric-direct condensed builder stores — so at k = n−1 the matrix-free
+    // path must land on the condensed tier's exact output, bit for bit
+    let ds = moons(110, 0.06, 7302);
+    let n = ds.points.n();
+    for metric in metrics() {
+        let store = CondensedEngine
+            .build_storage(&ds.points, metric, StorageKind::Condensed)
+            .unwrap();
+        let exact = vat(&store);
+        let got = knn::approx_vat_points(&ds.points, metric, n - 1, knn::DEFAULT_SEED);
+        assert_eq!(got.order, exact.order, "order diverged: {metric:?}");
+        assert_eq!(got.mst, exact.mst, "mst diverged: {metric:?}");
+        assert!(got.outcome.complete);
+        // and the dedicated exact-reference arm is the same sweep
+        let (ref_order, ref_mst) = knn::exact_vat_points(&ds.points, metric);
+        assert_eq!(ref_order, exact.order, "exact_vat_points order: {metric:?}");
+        assert_eq!(ref_mst, exact.mst, "exact_vat_points mst: {metric:?}");
+    }
+}
+
+#[test]
+fn sparse_mode_reports_measured_fidelity_and_is_deterministic() {
+    let ds = gmm(200, 3, 3, 7303);
+    let n = ds.points.n();
+    let k = 12;
+    let a = knn::approx_vat_points(&ds.points, Metric::Euclidean, k, knn::DEFAULT_SEED);
+    assert_permutation(&a.order, n, "sparse points run");
+    assert_eq!(a.mst.len(), n - 1, "spanning tree size");
+    for &(p, c, w) in &a.mst {
+        assert!(p < n && c < n && c > 0, "edge positions in range");
+        assert!(w.is_finite() && w >= 0.0, "finite non-negative weight");
+    }
+    let o = &a.outcome;
+    assert!(!o.complete);
+    assert_eq!((o.n, o.requested_k, o.k), (n, k, k));
+    assert!(o.graph_edges > 0);
+    assert!(
+        o.neighbor_recall > 0.0 && o.neighbor_recall <= 1.0,
+        "recall must be measured, got {}",
+        o.neighbor_recall
+    );
+    // the approximate tree can never beat the true MST
+    assert!(
+        o.mst_weight_ratio.unwrap() >= 1.0 - 1e-12,
+        "ratio {} < 1",
+        o.mst_weight_ratio.unwrap()
+    );
+    let agree = o.order_agreement.unwrap();
+    assert!((0.0..=1.0).contains(&agree), "agreement {agree} out of range");
+
+    // bitwise determinism: same points, same seed, same everything
+    let b = knn::approx_vat_points(&ds.points, Metric::Euclidean, k, knn::DEFAULT_SEED);
+    assert_eq!(a.order, b.order);
+    assert_eq!(a.mst, b.mst);
+    assert_eq!(a.outcome, b.outcome);
+}
+
+#[test]
+fn store_backed_sparse_mode_has_exact_neighbor_lists() {
+    // over materialized storage the per-point lists are the true k nearest
+    // (one row scan each), so recall is 1.0 by construction — the sparse
+    // approximation is then *only* in the graph topology, not the lists
+    let ds = blobs(150, 2, 4, 0.5, 7304);
+    let store = BlockedEngine
+        .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+        .unwrap();
+    let a = knn::approx_vat_on(&store, 10, knn::DEFAULT_SEED);
+    assert_permutation(&a.order, store.n(), "store-backed sparse run");
+    let o = &a.outcome;
+    assert!(!o.complete);
+    assert_eq!(o.neighbor_recall, 1.0);
+    assert!(o.mst_weight_ratio.unwrap() >= 1.0 - 1e-12);
+}
+
+#[test]
+fn nan_poisoned_input_still_matches_prim_bitwise_at_full_k() {
+    // one poisoned coordinate makes a whole distance column NaN; complete
+    // mode must detect it, take the verified Prim fallback, and still be
+    // bitwise identical to the exact sweep (NaN weights compared as bits)
+    let mut rows: Vec<Vec<f64>> = (0..40)
+        .map(|i| {
+            let t = i as f64;
+            vec![t * 0.37, (t * 0.11).sin() * 3.0]
+        })
+        .collect();
+    rows[7][1] = f64::NAN;
+    let points = Points::from_rows(&rows).unwrap();
+    let n = points.n();
+    let got = knn::approx_vat_points(&points, Metric::Euclidean, n - 1, knn::DEFAULT_SEED);
+    let (exact_order, exact_mst) = knn::exact_vat_points(&points, Metric::Euclidean);
+    assert_eq!(got.order, exact_order);
+    assert_eq!(mst_bits(&got.mst), mst_bits(&exact_mst));
+    assert!(got.outcome.complete);
+    assert!(
+        got.outcome.fell_back,
+        "NaN input must route through the verified fallback"
+    );
+    // sparse mode on the same poisoned input: no panic, deterministic
+    // permutation with the NaN point still placed
+    let s1 = knn::approx_vat_points(&points, Metric::Euclidean, 5, knn::DEFAULT_SEED);
+    let s2 = knn::approx_vat_points(&points, Metric::Euclidean, 5, knn::DEFAULT_SEED);
+    assert_permutation(&s1.order, n, "sparse NaN run");
+    assert_eq!(s1.order, s2.order);
+    assert_eq!(mst_bits(&s1.mst), mst_bits(&s2.mst));
+}
+
+#[test]
+fn duplicate_heavy_input_stays_deterministic_in_sparse_mode() {
+    // 48 bitwise-identical points + a small distinct cluster: every
+    // duplicate pair ties at distance zero, so this exercises the pinned
+    // (distance, index) tie order end to end
+    let mut rows: Vec<Vec<f64>> = vec![vec![1.25, -0.5]; 48];
+    for i in 0..12 {
+        let t = i as f64;
+        rows.push(vec![9.0 + t * 0.01, 9.0 - t * 0.02]);
+    }
+    let points = Points::from_rows(&rows).unwrap();
+    let n = points.n();
+    let a = knn::approx_vat_points(&points, Metric::Euclidean, 3, knn::DEFAULT_SEED);
+    let b = knn::approx_vat_points(&points, Metric::Euclidean, 3, knn::DEFAULT_SEED);
+    assert_permutation(&a.order, n, "duplicate-heavy sparse run");
+    assert_eq!(a.mst.len(), n - 1);
+    assert_eq!(a.order, b.order);
+    assert_eq!(a.mst, b.mst);
+    assert_eq!(a.outcome, b.outcome);
+    for &(_, _, w) in &a.mst {
+        assert!(w.is_finite() && w >= 0.0);
+    }
+    // complete mode on the same input: exact, as everywhere else
+    let full = knn::approx_vat_points(&points, Metric::Euclidean, n - 1, knn::DEFAULT_SEED);
+    let (exact_order, exact_mst) = knn::exact_vat_points(&points, Metric::Euclidean);
+    assert_eq!(full.order, exact_order);
+    assert_eq!(full.mst, exact_mst);
+}
+
+#[test]
+fn plan_level_complete_mode_matches_the_exact_plan_down_to_ivat_bytes() {
+    // whole-spine parity: an Approx{k = n−1} plan (matrix-free, engine
+    // ignored) against the exact dense plan on a metric-direct engine —
+    // same permutation, same MST, same rendered iVAT bytes
+    let ds = blobs(100, 2, 3, 0.5, 7305);
+    let n = ds.points.n();
+    let approx = Analysis::of(ds.points.clone())
+        .storage(StoragePolicy::Approx { k: n - 1 })
+        .ivat(true)
+        .render(true)
+        .plan()
+        .unwrap()
+        .execute(&NaiveEngine)
+        .unwrap();
+    let exact = Analysis::of(ds.points.clone())
+        .ivat(true)
+        .render(true)
+        .plan()
+        .unwrap()
+        .execute(&NaiveEngine)
+        .unwrap();
+    assert_eq!(approx.vat.order, exact.vat.order);
+    assert_eq!(approx.vat.mst, exact.vat.mst);
+    assert_eq!(
+        approx.image.as_ref().unwrap().pixels,
+        exact.image.as_ref().unwrap().pixels,
+        "rendered iVAT bytes diverged"
+    );
+    assert!(approx.storage.is_none(), "approx tier must stay matrix-free");
+    assert!(exact.storage.is_some());
+    let a = approx.approx.as_ref().unwrap();
+    assert!(a.complete && a.k == n - 1);
+}
+
+#[test]
+fn auto_policy_cutover_is_pinned_at_one_square_row() {
+    // the Auto escalation boundary is byte-exact: budget < 8·n goes approx
+    // (no exact layout can hold even one square row), budget = 8·n stays
+    // on the exact resolver ladder
+    let ds = blobs(100, 2, 3, 0.4, 7306);
+    let below = Analysis::of(ds.points.clone())
+        .storage(StoragePolicy::Auto {
+            memory_budget_bytes: 799,
+        })
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    assert!(below.storage.is_none());
+    assert_eq!(below.plan.engine, "approx");
+    assert_eq!(below.approx.as_ref().unwrap().k, auto_knn_k(100));
+    let at = Analysis::of(ds.points)
+        .storage(StoragePolicy::Auto {
+            memory_budget_bytes: 800,
+        })
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    assert!(at.storage.is_some(), "8·n bytes must stay on the exact ladder");
+    assert_ne!(at.plan.engine, "approx");
+}

@@ -173,6 +173,58 @@ fn csv_roundtrip_through_cli() {
 }
 
 #[test]
+fn approx_storage_at_full_k_writes_the_exact_pgm_bytes() {
+    // the CLI half of the k = n−1 parity contract: the matrix-free approx
+    // tier against the metric-direct naive engine produces byte-identical
+    // iVAT images on disk
+    let exact = std::env::temp_dir().join("fastvat_cli_exact_ivat.pgm");
+    let approx = std::env::temp_dir().join("fastvat_cli_approx.pgm");
+    let out_e = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--engine", "naive",
+        "--ivat", "--out", exact.to_str().unwrap(),
+    ]);
+    let out_a = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "120", "--engine", "naive",
+        "--storage", "approx", "--knn-k", "119",
+        "--out", approx.to_str().unwrap(),
+    ]);
+    assert!(out_e.contains("engine=naive"), "{out_e}");
+    assert!(out_a.contains("engine=approx"), "{out_a}");
+    assert!(out_a.contains("approx: k=119"), "{out_a}");
+    assert!(out_a.contains("(complete: exact)"), "{out_a}");
+    let bytes_e = std::fs::read(&exact).unwrap();
+    let bytes_a = std::fs::read(&approx).unwrap();
+    assert_eq!(bytes_e, bytes_a, "approx tier at full k changed the image");
+}
+
+#[test]
+fn knn_k_alone_selects_the_sparse_approx_tier() {
+    let out = run_ok(&["vat", "--dataset", "blobs", "--n", "150", "--knn-k", "16"]);
+    assert!(out.contains("engine=approx"), "{out}");
+    assert!(out.contains("approx: k=16"), "{out}");
+    assert!(out.contains("recall="), "{out}");
+    assert!(!out.contains("(complete"), "sparse run must not claim exactness: {out}");
+}
+
+#[test]
+fn approx_storage_without_knn_k_fails_cleanly() {
+    let out = bin()
+        .args(["vat", "--dataset", "blobs", "--storage", "approx"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("knn-k"));
+}
+
+#[test]
+fn bench_approx_prints_both_arms() {
+    let out = run_ok(&["bench-approx", "--sizes", "120,200", "--budget-s", "0"]);
+    assert!(out.contains("speedup vs exact"), "{out}");
+    assert!(out.contains("exact"), "{out}");
+    assert!(out.contains("approx"), "{out}");
+}
+
+#[test]
 fn unknown_dataset_fails_cleanly() {
     let out = bin()
         .args(["vat", "--dataset", "nonexistent"])

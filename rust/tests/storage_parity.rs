@@ -706,6 +706,95 @@ fn boruvka_all_tied_fixture_stays_native_and_exact_on_all_storages() {
 }
 
 #[test]
+#[allow(deprecated)] // pins the deprecated shim's sharded emission bitwise
+fn ivat_image_from_mst_matches_the_transform_render_on_all_storages() {
+    // the image-only fast path's contract: rendering straight off the MST
+    // must produce the exact bytes of rendering the materialized transform.
+    // The MST is storage-invariant, so ONE direct render must equal the
+    // transform render of every layout.
+    let shard_opts = test_shard_opts();
+    for ds in datasets() {
+        let e = BlockedEngine;
+        let dense = e
+            .build_storage(&ds.points, Metric::Euclidean, StorageKind::Dense)
+            .unwrap();
+        let cond = e
+            .build_storage(&ds.points, Metric::Euclidean, StorageKind::Condensed)
+            .unwrap();
+        let shard = e
+            .build_sharded(&ds.points, Metric::Euclidean, &shard_opts)
+            .unwrap();
+        let square = e
+            .build_sharded_square(&ds.points, Metric::Euclidean, &shard_opts)
+            .unwrap();
+        let vd = vat(&dense);
+        let direct = fast_vat::vat::ivat::image_from_mst(&vd);
+        let ctx = &ds.name;
+        assert_eq!(
+            direct.pixels,
+            render(&ivat_with(&vd, StorageKind::Dense).unwrap().transformed).pixels,
+            "dense transform render diverged: {ctx}"
+        );
+        assert_eq!(
+            direct.pixels,
+            render(&ivat_with(&vat(&cond), StorageKind::Condensed).unwrap().transformed)
+                .pixels,
+            "condensed transform render diverged: {ctx}"
+        );
+        assert_eq!(
+            direct.pixels,
+            render(
+                &ivat_with_opts(&vat(&shard), StorageKind::Sharded, &shard_opts)
+                    .unwrap()
+                    .transformed
+            )
+            .pixels,
+            "sharded transform render diverged: {ctx}"
+        );
+        assert_eq!(
+            direct.pixels,
+            render(
+                &ivat_with_opts(&vat(&square), StorageKind::ShardedSquare, &shard_opts)
+                    .unwrap()
+                    .transformed
+            )
+            .pixels,
+            "square-band transform render diverged: {ctx}"
+        );
+    }
+}
+
+#[test]
+fn image_only_fast_path_renders_identical_bytes_without_the_transform() {
+    // executor half of the same contract: an iVAT + render plan with no
+    // detection/insight skips the transform matrix entirely (report.ivat is
+    // None) yet the rendered bytes equal the full-transform plan's
+    let ds = blobs(120, 2, 3, 0.5, 7502);
+    let fast = Analysis::of(ds.points.clone())
+        .ivat(true)
+        .render(true)
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    assert!(fast.ivat.is_none(), "fast path must skip the transform");
+    let full = Analysis::of(ds.points.clone())
+        .ivat(true)
+        .render(true)
+        .detect_blocks(BlockDetector::default())
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    assert!(full.ivat.is_some(), "detection forces the transform");
+    assert_eq!(
+        fast.image.as_ref().unwrap().pixels,
+        full.image.as_ref().unwrap().pixels,
+        "image-only fast path changed the rendered bytes"
+    );
+}
+
+#[test]
 fn auto_policy_resolves_square_plus_respill_and_matches_pinned_tiers() {
     // no per-surface knob anywhere: a RAM budget plus the requested stages
     // resolve to square bands + reorder-then-spill, and the report is
