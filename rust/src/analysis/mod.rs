@@ -50,12 +50,14 @@
 
 pub mod policy;
 pub mod report;
+pub mod wire;
 
 pub use policy::{
-    auto_knn_k, condensed_bytes, dense_bytes, AccessProfile, SamplePolicy, StorageDecision,
-    StoragePolicy,
+    approx_resident_bytes, auto_knn_k, condensed_bytes, dense_bytes, AccessProfile, SamplePolicy,
+    StorageDecision, StoragePolicy,
 };
 pub use report::{AnalysisReport, ResolvedPlan, SampleInfo, StageTimings};
+pub use wire::{PlanWire, ReplayManifest, ReportWire};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -68,7 +70,7 @@ use crate::error::{Error, Result};
 use crate::hopkins::{hopkins_mean, HopkinsParams};
 use crate::vat::blocks::BlockDetector;
 use crate::vat::svat::{assign_nearest, maximin_sample};
-use crate::vat::{ivat, knn, vat_with, OrderingStrategy, VatResult};
+use crate::vat::{ivat, knn, vat_with_stats, OrderingStrategy, VatResult};
 use crate::viz::render;
 
 /// Test-only escape hatch: when `FAST_VAT_TEST_FORCE_APPROX` is set (and
@@ -78,6 +80,16 @@ use crate::viz::render;
 /// whole suite this way.
 fn force_approx() -> bool {
     std::env::var_os("FAST_VAT_TEST_FORCE_APPROX").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Test-only escape hatch: when `FAST_VAT_TEST_ROUNDTRIP_PLANS` is set (and
+/// not `"0"` / empty), every `execute` first round-trips its plan through
+/// the wire codec (serialize → parse → re-apply → re-validate) and runs the
+/// deserialized plan instead. The codec's totality contract makes the
+/// reroute bitwise invisible; CI's roundtrip leg runs the whole suite this
+/// way, pinning `fast-vat/plan/v1` against the entire parity corpus.
+fn roundtrip_plans() -> bool {
+    std::env::var_os("FAST_VAT_TEST_ROUNDTRIP_PLANS").is_some_and(|v| !v.is_empty() && v != "0")
 }
 
 /// What the plan assesses: raw points (the engine builds distances) or
@@ -109,6 +121,12 @@ pub struct Analysis {
     render: bool,
     keep_matrix: bool,
     ordering: OrderingStrategy,
+    /// Cache injection (coordinator-only, not a wire knob): a distance
+    /// store a previous identical request already built. The executor
+    /// reuses it — skipping the distance stage — only when it matches the
+    /// resolved decision exactly (same n, same layout, no sampling);
+    /// anything else falls through to a fresh build.
+    prebuilt: Option<Arc<DistanceStore>>,
 }
 
 impl Analysis {
@@ -129,6 +147,7 @@ impl Analysis {
             render: false,
             keep_matrix: false,
             ordering: OrderingStrategy::Auto,
+            prebuilt: None,
         }
     }
 
@@ -351,6 +370,9 @@ impl AnalysisPlan {
     /// Run every requested stage exactly once — distance → VAT → iVAT →
     /// detection → Hopkins → render — and return the typed report.
     pub fn execute(&self, engine: &dyn DistanceEngine) -> Result<AnalysisReport> {
+        if roundtrip_plans() {
+            return wire::roundtrip_plan(self)?.run(Some(engine));
+        }
         self.run(Some(engine))
     }
 
@@ -358,11 +380,35 @@ impl AnalysisPlan {
     /// is already done). Errors on point-input plans.
     pub fn execute_precomputed(&self) -> Result<AnalysisReport> {
         match self.spec.input {
-            PlanInput::Storage(_) => self.run(None),
+            PlanInput::Storage(_) => {
+                if roundtrip_plans() {
+                    return wire::roundtrip_plan(self)?.run(None);
+                }
+                self.run(None)
+            }
             PlanInput::Points(_) => Err(Error::InvalidArg(
                 "this plan assesses points; call execute(engine)".into(),
             )),
         }
+    }
+
+    /// Coordinator-only cache injection: seed the executor with a distance
+    /// store an identical prior request built (see `Analysis::prebuilt`).
+    pub(crate) fn with_prebuilt(mut self, store: Arc<DistanceStore>) -> AnalysisPlan {
+        self.spec.prebuilt = Some(store);
+        self
+    }
+
+    /// Coordinator-only admission hook: rewrite the plan's storage policy
+    /// (e.g. `Fixed(Dense)` → `Auto { budget }`) and revalidate. Exact
+    /// tiers produce bitwise-identical output whatever the layout, so a
+    /// degraded job differs only in footprint — and a plan that reads the
+    /// raw distance image (the service always does, for insight) keeps the
+    /// `Auto` resolver off the approximate tier.
+    pub(crate) fn degrade_storage(self, policy: StoragePolicy) -> Result<AnalysisPlan> {
+        let mut spec = self.spec;
+        spec.storage = policy;
+        spec.plan()
     }
 
     fn run(&self, engine: Option<&dyn DistanceEngine>) -> Result<AnalysisReport> {
@@ -379,6 +425,14 @@ impl AnalysisPlan {
                 || (spec.detector.is_some() && !spec.ivat)
                 || spec.insight
                 || spec.keep_matrix,
+        };
+
+        // the dataset's content identity, for the replay manifest: raw
+        // points hashed as provided (a CSV reload hashes the same), a
+        // precomputed store hashed row-sequentially
+        let dataset = match &spec.input {
+            PlanInput::Points(p) => wire::DatasetStamp::of_points(p),
+            PlanInput::Storage(s) => wire::DatasetStamp::of_storage(s.as_ref()),
         };
 
         // stage 1: input → distance storage (+ resolved plan, sVAT record).
@@ -491,14 +545,28 @@ impl AnalysisPlan {
                         )
                     })?;
                     let decision = spec.storage.resolve_for(n_assessed, access, &spec.shard);
-                    let t = Instant::now();
-                    let built = engine.build_storage_with(
-                        &assess,
-                        spec.metric,
-                        decision.kind,
-                        &decision.shard,
-                    )?;
-                    timings.distance_s = t.elapsed().as_secs_f64();
+                    // content-cache injection: a store a prior identical
+                    // request built skips the distance stage, but only
+                    // when it matches the decision exactly — same point
+                    // count, same layout, and no sampling in between
+                    // (sampled requests assess different points)
+                    let reusable = spec.prebuilt.as_ref().filter(|s| {
+                        info.is_none() && s.n() == n_assessed && s.kind() == decision.kind
+                    });
+                    let built = match reusable {
+                        Some(s) => s.clone(),
+                        None => {
+                            let t = Instant::now();
+                            let b = engine.build_storage_with(
+                                &assess,
+                                spec.metric,
+                                decision.kind,
+                                &decision.shard,
+                            )?;
+                            timings.distance_s = t.elapsed().as_secs_f64();
+                            Arc::new(b)
+                        }
+                    };
                     let resolved = ResolvedPlan {
                         metric: spec.metric,
                         standardize: spec.standardize,
@@ -510,14 +578,7 @@ impl AnalysisPlan {
                         engine: engine.name(),
                         ordering: spec.ordering.resolve(n_assessed).as_str(),
                     };
-                    (
-                        Some(Arc::new(built)),
-                        None,
-                        None,
-                        resolved,
-                        info,
-                        Some(z),
-                    )
+                    (Some(built), None, None, resolved, info, Some(z))
                 }
             }
         };
@@ -527,14 +588,14 @@ impl AnalysisPlan {
         // sweep arrives pre-computed from stage 1; a storage-backed approx
         // request — or the FAST_VAT_TEST_FORCE_APPROX parity harness —
         // runs `knn::approx_vat_on` here instead.
-        let (v, approx) = match pre_vat {
-            Some((v, outcome)) => (v, Some(outcome)),
+        let (v, approx, ordering_fell_back) = match pre_vat {
+            Some((v, outcome)) => (v, Some(outcome), None),
             None => {
                 let s = store
                     .as_deref()
                     .expect("exact tiers always build distance storage");
                 let t = Instant::now();
-                let (v, outcome) = if let Some(k) = store_approx_k {
+                let (v, outcome, fell_back) = if let Some(k) = store_approx_k {
                     let av = knn::approx_vat_on(s, k, spec.seed);
                     (
                         VatResult {
@@ -542,6 +603,7 @@ impl AnalysisPlan {
                             mst: av.mst,
                         },
                         Some(av.outcome),
+                        None,
                     )
                 } else if force_approx() {
                     let av = knn::approx_vat_on(s, s.n().saturating_sub(1), spec.seed);
@@ -551,12 +613,14 @@ impl AnalysisPlan {
                             mst: av.mst,
                         },
                         Some(av.outcome),
+                        None,
                     )
                 } else {
-                    (vat_with(s, spec.ordering), None)
+                    let (v, fell_back) = vat_with_stats(s, spec.ordering);
+                    (v, None, fell_back)
                 };
                 timings.vat_s = t.elapsed().as_secs_f64();
-                (v, outcome)
+                (v, outcome, fell_back)
             }
         };
 
@@ -695,6 +759,9 @@ impl AnalysisPlan {
         });
         timings.total_s = t_total.elapsed().as_secs_f64();
 
+        let manifest =
+            wire::manifest_for(spec, &resolved, dataset, ordering_fell_back, approx.as_ref());
+
         Ok(AnalysisReport {
             plan: resolved,
             vat: v,
@@ -708,6 +775,7 @@ impl AnalysisPlan {
             reordered,
             sample: sample_info,
             timings,
+            manifest,
         })
     }
 }

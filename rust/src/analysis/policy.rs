@@ -150,6 +150,48 @@ pub struct StorageDecision {
     pub reorder_spill: bool,
 }
 
+impl StorageDecision {
+    /// Estimated resident distance bytes for an n-point request under this
+    /// decision — the quantity the admission ledger charges and the
+    /// `fast-vat plan` dry-run prints. Dense/condensed hold the whole
+    /// layout in RAM; the sharded tiers hold at most the audited LRU peak
+    /// (`cache_shards · shard_rows · n · 8`, never more than dense).
+    pub fn resident_bytes(&self, n: usize) -> usize {
+        match self.kind {
+            StorageKind::Dense => dense_bytes(n),
+            StorageKind::Condensed => condensed_bytes(n),
+            StorageKind::Sharded | StorageKind::ShardedSquare => {
+                (self.shard.cache_shards.max(1) * self.shard.shard_rows.max(1) * n.max(1) * 8)
+                    .min(dense_bytes(n))
+            }
+        }
+    }
+
+    /// Estimated spill-file bytes on disk (0 for the in-RAM layouts).
+    /// Condensed bands write the triangle once; square-form bands write
+    /// the full n×n; a scheduled reorder-then-spill pass doubles the
+    /// square file while the display-ordered rewrite coexists with it.
+    pub fn disk_bytes(&self, n: usize) -> usize {
+        let file = match self.kind {
+            StorageKind::Dense | StorageKind::Condensed => 0,
+            StorageKind::Sharded => condensed_bytes(n),
+            StorageKind::ShardedSquare => dense_bytes(n),
+        };
+        if self.reorder_spill {
+            file * 2
+        } else {
+            file
+        }
+    }
+}
+
+/// Estimated resident bytes of the matrix-free approximate tier: the kNN
+/// graph holds ~k (index, distance) pairs per point both forward and
+/// mirrored — ≈ `2 · n · k · 16` bytes, no distance matrix.
+pub fn approx_resident_bytes(n: usize, k: usize) -> usize {
+    2 * n.max(1) * k.max(1) * 16
+}
+
 impl StoragePolicy {
     /// [`StoragePolicy::resolve_for`] with a sweep-only access profile,
     /// flattened to the historical `(kind, shard)` pair — kept for callers
@@ -512,6 +554,62 @@ mod tests {
             assert!(k <= n.saturating_sub(1));
             prev = k;
         }
+    }
+
+    #[test]
+    fn footprint_estimates_track_the_resolved_layout() {
+        let base = ShardOptions::default();
+        // in-RAM tiers: resident = layout bytes, nothing on disk
+        let d = StoragePolicy::Fixed(StorageKind::Dense).resolve_for(
+            100,
+            AccessProfile::sweep_only(),
+            &base,
+        );
+        assert_eq!(d.resident_bytes(100), 80_000);
+        assert_eq!(d.disk_bytes(100), 0);
+        let d = StoragePolicy::Fixed(StorageKind::Condensed).resolve_for(
+            100,
+            AccessProfile::sweep_only(),
+            &base,
+        );
+        assert_eq!(d.resident_bytes(100), 39_600);
+        assert_eq!(d.disk_bytes(100), 0);
+        // auto-spilled: resident = the derived LRU peak, which stays
+        // inside the budget; disk = the square file
+        let d = StoragePolicy::Auto {
+            memory_budget_bytes: 10_000,
+        }
+        .resolve_for(100, AccessProfile::sweep_only(), &base);
+        assert_eq!(d.kind, StorageKind::ShardedSquare);
+        assert!(d.resident_bytes(100) <= 10_000);
+        assert_eq!(d.disk_bytes(100), 80_000);
+        // the respill pass doubles the disk footprint
+        let d = StoragePolicy::Auto {
+            memory_budget_bytes: 10_000,
+        }
+        .resolve_for(100, AccessProfile::permuted(), &base);
+        assert!(d.reorder_spill);
+        assert_eq!(d.disk_bytes(100), 160_000);
+        // condensed bands spill the triangle once
+        let d = StoragePolicy::Fixed(StorageKind::Sharded).resolve_for(
+            100,
+            AccessProfile::sweep_only(),
+            &base,
+        );
+        assert_eq!(d.disk_bytes(100), 39_600);
+        // a huge pinned LRU never claims more than dense
+        let d = StoragePolicy::Fixed(StorageKind::ShardedSquare).resolve_for(
+            10,
+            AccessProfile::sweep_only(),
+            &ShardOptions {
+                shard_rows: 1_000,
+                cache_shards: 1_000,
+                spill_dir: None,
+            },
+        );
+        assert_eq!(d.resident_bytes(10), dense_bytes(10));
+        // the approx tier's O(n·k) estimate is far below the triangle
+        assert!(approx_resident_bytes(10_000, 20) < condensed_bytes(10_000) / 100);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 
+use super::wire::ReplayManifest;
 use crate::dissimilarity::{
     DistanceMatrix, DistanceStore, Metric, PermutedView, ShardOptions, StorageKind,
 };
@@ -124,6 +125,10 @@ pub struct AnalysisReport {
     pub sample: Option<SampleInfo>,
     /// Per-stage wall timings.
     pub timings: StageTimings,
+    /// Bit-exact replay provenance: the plan echo, the dataset's content
+    /// hash, and the route taken ([`crate::analysis::wire`]). Serialize
+    /// with [`ReplayManifest::to_json`]; `fast-vat replay` re-executes it.
+    pub manifest: ReplayManifest,
 }
 
 impl AnalysisReport {

@@ -1,0 +1,1478 @@
+//! The wire-format spine: versioned, serializable plans and bit-exact
+//! replay manifests.
+//!
+//! Everything a request *is* — every knob on [`Analysis`] — round-trips
+//! through [`PlanWire`] as schema-tagged JSON (`fast-vat/plan/v1`), with
+//! **unknown-field rejection** (a plan written by a newer build never
+//! half-parses) and **version negotiation** (a `fast-vat/plan/v2` document
+//! fails with "upgrade", not "unknown field"). The codec is hand-rolled on
+//! [`crate::json`] — no serde, the crate stays dependency-free.
+//!
+//! Every executed [`AnalysisReport`] carries a [`ReplayManifest`]: the
+//! original plan echo, a deterministic FNV-1a content hash of the dataset,
+//! the resolved tier, the engine, and the route actually taken (exact
+//! sweep, Borůvka with/without fallback, or the approximate tier's
+//! [`ApproxOutcome`]). [`ReplayManifest::replay`] re-executes the manifest
+//! against a dataset and reproduces order / MST / iVAT / rendered PGM
+//! bytes bit-for-bit — verified across engines × metrics × storage kinds
+//! by `tests/wire_roundtrip.rs`, and re-checkable at any time because the
+//! re-executed report carries its own manifest to compare
+//! ([`ReplayManifest::verify_replay`]).
+//!
+//! ```
+//! use fast_vat::analysis::{wire::PlanWire, Analysis};
+//! use fast_vat::data::generators::blobs;
+//!
+//! let plan = Analysis::of(blobs(30, 2, 2, 0.4, 7).points)
+//!     .ivat(true)
+//!     .render(true)
+//!     .plan()
+//!     .unwrap();
+//! let json = PlanWire::from_plan(&plan).to_json();
+//! let back = PlanWire::from_json(&json).unwrap();
+//! assert_eq!(back.to_json(), json); // canonical bytes are a fixed point
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::Points;
+use crate::dissimilarity::engine::BlockedEngine;
+use crate::dissimilarity::{
+    DistanceStorage, DistanceStore, Metric, ShardOptions, StorageKind,
+};
+use crate::error::{Error, Result};
+use crate::hopkins::{Exponent, HopkinsParams};
+use crate::json::Json;
+use crate::vat::blocks::BlockDetector;
+use crate::vat::knn::ApproxOutcome;
+use crate::vat::OrderingStrategy;
+
+use super::policy::{SamplePolicy, StoragePolicy};
+use super::report::{AnalysisReport, ResolvedPlan};
+use super::{Analysis, AnalysisPlan, PlanInput};
+
+/// The plan schema this build reads and writes.
+pub const PLAN_SCHEMA: &str = "fast-vat/plan/v1";
+/// The replay-manifest schema this build reads and writes.
+pub const MANIFEST_SCHEMA: &str = "fast-vat/manifest/v1";
+/// The report schema this build reads and writes.
+pub const REPORT_SCHEMA: &str = "fast-vat/report/v1";
+
+fn wire_err(msg: impl Into<String>) -> Error {
+    Error::Config(format!("wire: {}", msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// content hashing
+// ---------------------------------------------------------------------------
+
+/// Incremental FNV-1a 64-bit hasher — the crate's deterministic content
+/// address (no std `Hasher` randomness, no platform dependence).
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// Start a fresh hash at the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv1a(Self::OFFSET)
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    /// Absorb a `u64` (little-endian bytes).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Absorb an `f64` by bit pattern (distinguishes -0.0/0.0 and every
+    /// NaN payload — content addressing must be bit-exact).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Content hash of a point set: shape (n, d) plus every coordinate's bit
+/// pattern, in row-major order. This is the replay contract's dataset
+/// identity — computed over the points *as provided* (before
+/// standardization), which is exactly what a CSV reload yields.
+pub fn hash_points(p: &Points) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(b"fast-vat/points");
+    h.write_u64(p.n() as u64);
+    h.write_u64(p.d() as u64);
+    for v in p.flat() {
+        h.write_f64(*v);
+    }
+    h.finish()
+}
+
+/// Content hash of precomputed distance storage: n plus every row's
+/// entries (row-sequential `fill_row`, so sharded stores stream their
+/// spill file instead of thrashing the LRU).
+pub fn hash_store(s: &DistanceStore) -> u64 {
+    let n = s.n();
+    let mut h = Fnv1a::new();
+    h.write(b"fast-vat/store");
+    h.write_u64(n as u64);
+    let mut row = vec![0.0; n];
+    for i in 0..n {
+        s.fill_row(i, &mut row);
+        for v in &row {
+            h.write_f64(*v);
+        }
+    }
+    h.finish()
+}
+
+/// Canonical hex form of a content hash (`0x` + 16 lowercase digits).
+pub fn hash_hex(h: u64) -> String {
+    format!("{h:#018x}")
+}
+
+fn parse_hash_hex(s: &str, ctx: &str) -> Result<u64> {
+    s.strip_prefix("0x")
+        .and_then(|hex| u64::from_str_radix(hex, 16).ok())
+        .ok_or_else(|| wire_err(format!("{ctx}: bad content hash `{s}` (expected 0x…)")))
+}
+
+// ---------------------------------------------------------------------------
+// schema negotiation + field helpers
+// ---------------------------------------------------------------------------
+
+fn schema_parts(s: &str) -> Option<(&str, u32)> {
+    let idx = s.rfind("/v")?;
+    let ver: u32 = s[idx + 2..].parse().ok()?;
+    Some((&s[..idx], ver))
+}
+
+fn check_schema(doc: &Json, expect: &'static str) -> Result<()> {
+    let got = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| wire_err(format!("missing `schema` field (expected `{expect}`)")))?;
+    if got == expect {
+        return Ok(());
+    }
+    let (fam_exp, ver_exp) = schema_parts(expect).expect("wire schema constants are versioned");
+    if let Some((fam, ver)) = schema_parts(got) {
+        if fam == fam_exp {
+            if ver > ver_exp {
+                return Err(wire_err(format!(
+                    "schema `{got}` is newer than this build supports (`{expect}`); \
+                     upgrade fast-vat or re-emit the document at v{ver_exp}"
+                )));
+            }
+            return Err(wire_err(format!(
+                "schema `{got}` is older than this build reads (`{expect}`) \
+                 and no migration is defined"
+            )));
+        }
+    }
+    Err(wire_err(format!(
+        "unrecognized schema `{got}` (expected `{expect}`)"
+    )))
+}
+
+/// Unknown-field rejection: every key in `obj` must be in `allowed`.
+fn known_fields(doc: &Json, ctx: &str, allowed: &[&str]) -> Result<()> {
+    let obj = doc
+        .as_obj()
+        .ok_or_else(|| wire_err(format!("`{ctx}` must be an object")))?;
+    for (k, _) in obj {
+        if !allowed.contains(&k.as_str()) {
+            return Err(wire_err(format!(
+                "unknown field `{k}` in `{ctx}` (this build understands: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn req<'a>(doc: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    doc.get(key)
+        .ok_or_else(|| wire_err(format!("`{ctx}` is missing required field `{key}`")))
+}
+
+fn req_str<'a>(doc: &'a Json, key: &str, ctx: &str) -> Result<&'a str> {
+    req(doc, key, ctx)?
+        .as_str()
+        .ok_or_else(|| wire_err(format!("`{ctx}.{key}` must be a string")))
+}
+
+fn req_bool(doc: &Json, key: &str, ctx: &str) -> Result<bool> {
+    req(doc, key, ctx)?
+        .as_bool()
+        .ok_or_else(|| wire_err(format!("`{ctx}.{key}` must be a boolean")))
+}
+
+fn req_usize(doc: &Json, key: &str, ctx: &str) -> Result<usize> {
+    req(doc, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| wire_err(format!("`{ctx}.{key}` must be a non-negative integer")))
+}
+
+fn req_u64(doc: &Json, key: &str, ctx: &str) -> Result<u64> {
+    req(doc, key, ctx)?
+        .as_u64()
+        .ok_or_else(|| wire_err(format!("`{ctx}.{key}` must be a non-negative integer")))
+}
+
+fn req_f64(doc: &Json, key: &str, ctx: &str) -> Result<f64> {
+    req(doc, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| wire_err(format!("`{ctx}.{key}` must be a number")))
+}
+
+fn opt_f64(doc: &Json, key: &str, ctx: &str) -> Result<Option<f64>> {
+    match req(doc, key, ctx)? {
+        Json::Null => Ok(None),
+        v => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| wire_err(format!("`{ctx}.{key}` must be a number or null"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// metric token
+// ---------------------------------------------------------------------------
+
+/// Canonical wire token for a metric — the exact strings
+/// [`Metric::parse`] accepts, with `minkowski:p` carrying `p` in shortest
+/// round-trip form so the exponent survives bit-exactly.
+pub fn metric_token(m: Metric) -> String {
+    match m {
+        Metric::Euclidean => "euclidean".to_string(),
+        Metric::SqEuclidean => "sqeuclidean".to_string(),
+        Metric::Manhattan => "manhattan".to_string(),
+        Metric::Chebyshev => "chebyshev".to_string(),
+        Metric::Minkowski(p) => format!("minkowski:{p}"),
+        Metric::Cosine => "cosine".to_string(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PlanWire
+// ---------------------------------------------------------------------------
+
+/// The serializable form of an [`Analysis`] request: every knob, no input
+/// data. Attach a dataset with [`PlanWire::analysis_of`] (points) or
+/// [`PlanWire::analysis_over`] (precomputed storage) and validate as
+/// usual with [`Analysis::plan`].
+#[derive(Debug, Clone)]
+pub struct PlanWire {
+    /// Distance metric.
+    pub metric: Metric,
+    /// Standardize features before distances.
+    pub standardize: bool,
+    /// Storage policy (fixed tier, RAM budget, or approximate-k).
+    pub storage: StoragePolicy,
+    /// Shard knobs for the sharded tiers.
+    pub shard: ShardOptions,
+    /// sVAT escalation policy.
+    pub sample: SamplePolicy,
+    /// VAT ordering strategy.
+    pub ordering: OrderingStrategy,
+    /// Seed for sampling and the approximate tier.
+    pub seed: u64,
+    /// Run the iVAT transform.
+    pub ivat: bool,
+    /// Render the grayscale image.
+    pub render: bool,
+    /// Materialize the reordered matrix into the report.
+    pub keep_matrix: bool,
+    /// Emit the natural-language insight line (requires a detector).
+    pub insight: bool,
+    /// Diagonal block detection, with tunables.
+    pub detector: Option<BlockDetector>,
+    /// Hopkins statistic runs (0 = skip the stage).
+    pub hopkins_runs: usize,
+    /// Hopkins tunables (probes, exponent convention, seed).
+    pub hopkins_params: HopkinsParams,
+}
+
+impl PlanWire {
+    /// Capture every knob of a validated plan.
+    pub fn from_plan(plan: &AnalysisPlan) -> Self {
+        Self::from_analysis(&plan.spec)
+    }
+
+    pub(crate) fn from_analysis(a: &Analysis) -> Self {
+        PlanWire {
+            metric: a.metric,
+            standardize: a.standardize,
+            storage: a.storage.clone(),
+            shard: a.shard.clone(),
+            sample: a.sample,
+            ordering: a.ordering,
+            seed: a.seed,
+            ivat: a.ivat,
+            render: a.render,
+            keep_matrix: a.keep_matrix,
+            insight: a.insight,
+            detector: a.detector.clone(),
+            hopkins_runs: a.hopkins_runs,
+            hopkins_params: a.hopkins_params.clone(),
+        }
+    }
+
+    /// Apply these knobs to a points input (revalidate with
+    /// [`Analysis::plan`]).
+    pub fn analysis_of(&self, points: Points) -> Analysis {
+        self.apply(Analysis::of(points))
+    }
+
+    /// Apply these knobs to precomputed distance storage.
+    pub fn analysis_over(&self, storage: Arc<DistanceStore>) -> Analysis {
+        self.apply(Analysis::over(storage))
+    }
+
+    fn apply(&self, mut a: Analysis) -> Analysis {
+        a.metric = self.metric;
+        a.standardize = self.standardize;
+        a.storage = self.storage.clone();
+        a.shard = self.shard.clone();
+        a.sample = self.sample;
+        a.ordering = self.ordering;
+        a.seed = self.seed;
+        a.ivat = self.ivat;
+        a.render = self.render;
+        a.keep_matrix = self.keep_matrix;
+        a.insight = self.insight;
+        a.detector = self.detector.clone();
+        a.hopkins_runs = self.hopkins_runs;
+        a.hopkins_params = self.hopkins_params.clone();
+        a
+    }
+
+    /// Canonical JSON emission (2-space pretty, trailing newline). The
+    /// byte sequence is deterministic — the content-addressed cache uses
+    /// it as the plan fingerprint, and `tests/golden/plan_v1.json` pins it.
+    pub fn to_json(&self) -> String {
+        let mut s = self.to_value().to_pretty(2);
+        s.push('\n');
+        s
+    }
+
+    pub(crate) fn to_value(&self) -> Json {
+        let storage = match &self.storage {
+            StoragePolicy::Fixed(kind) => Json::Obj(vec![
+                ("policy".into(), Json::str("fixed")),
+                ("kind".into(), Json::str(kind.as_str())),
+            ]),
+            StoragePolicy::Auto {
+                memory_budget_bytes,
+            } => Json::Obj(vec![
+                ("policy".into(), Json::str("auto")),
+                (
+                    "memory_budget_bytes".into(),
+                    Json::usize(*memory_budget_bytes),
+                ),
+            ]),
+            StoragePolicy::Approx { k } => Json::Obj(vec![
+                ("policy".into(), Json::str("approx")),
+                ("k".into(), Json::usize(*k)),
+            ]),
+        };
+        let sample = match self.sample {
+            SamplePolicy::Never => Json::Obj(vec![("policy".into(), Json::str("never"))]),
+            SamplePolicy::Above(cap) => Json::Obj(vec![
+                ("policy".into(), Json::str("above")),
+                ("cap".into(), Json::usize(cap)),
+            ]),
+        };
+        let detector = match &self.detector {
+            None => Json::Null,
+            Some(d) => Json::Obj(vec![
+                ("threshold_sigmas".into(), Json::f64(d.threshold_sigmas)),
+                ("min_block".into(), Json::usize(d.min_block)),
+                ("merge_ratio".into(), Json::f64(d.merge_ratio)),
+            ]),
+        };
+        let hopkins = Json::Obj(vec![
+            ("runs".into(), Json::usize(self.hopkins_runs)),
+            ("probes".into(), Json::usize(self.hopkins_params.probes)),
+            (
+                "exponent".into(),
+                Json::str(match self.hopkins_params.exponent {
+                    Exponent::One => "one",
+                    Exponent::Dim => "dim",
+                }),
+            ),
+            ("seed".into(), Json::u64(self.hopkins_params.seed)),
+        ]);
+        Json::Obj(vec![
+            ("schema".into(), Json::str(PLAN_SCHEMA)),
+            ("metric".into(), Json::str(metric_token(self.metric))),
+            ("standardize".into(), Json::Bool(self.standardize)),
+            ("storage".into(), storage),
+            ("shard".into(), shard_to_value(&self.shard)),
+            ("sample".into(), sample),
+            ("ordering".into(), Json::str(self.ordering.as_str())),
+            ("seed".into(), Json::u64(self.seed)),
+            (
+                "stages".into(),
+                Json::Obj(vec![
+                    ("ivat".into(), Json::Bool(self.ivat)),
+                    ("render".into(), Json::Bool(self.render)),
+                    ("keep_matrix".into(), Json::Bool(self.keep_matrix)),
+                    ("insight".into(), Json::Bool(self.insight)),
+                ]),
+            ),
+            ("detector".into(), detector),
+            ("hopkins".into(), hopkins),
+        ])
+    }
+
+    /// Parse a `fast-vat/plan/v1` document. Unknown fields, missing
+    /// fields, type mismatches, and other schema versions are all hard
+    /// errors — a plan either parses completely or not at all.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| wire_err(format!("invalid JSON: {e}")))?;
+        Self::from_value(&doc)
+    }
+
+    pub(crate) fn from_value(doc: &Json) -> Result<Self> {
+        known_fields(
+            doc,
+            "plan",
+            &[
+                "schema",
+                "metric",
+                "standardize",
+                "storage",
+                "shard",
+                "sample",
+                "ordering",
+                "seed",
+                "stages",
+                "detector",
+                "hopkins",
+            ],
+        )?;
+        check_schema(doc, PLAN_SCHEMA)?;
+
+        let metric = Metric::parse(req_str(doc, "metric", "plan")?)?;
+        let standardize = req_bool(doc, "standardize", "plan")?;
+
+        let storage_doc = req(doc, "storage", "plan")?;
+        known_fields(
+            storage_doc,
+            "plan.storage",
+            &["policy", "kind", "memory_budget_bytes", "k"],
+        )?;
+        let storage = match req_str(storage_doc, "policy", "plan.storage")? {
+            "fixed" => StoragePolicy::Fixed(StorageKind::parse(req_str(
+                storage_doc,
+                "kind",
+                "plan.storage",
+            )?)?),
+            "auto" => StoragePolicy::Auto {
+                memory_budget_bytes: req_usize(storage_doc, "memory_budget_bytes", "plan.storage")?,
+            },
+            "approx" => StoragePolicy::Approx {
+                k: req_usize(storage_doc, "k", "plan.storage")?,
+            },
+            other => {
+                return Err(wire_err(format!(
+                    "unknown storage policy `{other}` (expected fixed|auto|approx)"
+                )))
+            }
+        };
+
+        let shard = shard_from_value(req(doc, "shard", "plan")?, "plan.shard")?;
+
+        let sample_doc = req(doc, "sample", "plan")?;
+        known_fields(sample_doc, "plan.sample", &["policy", "cap"])?;
+        let sample = match req_str(sample_doc, "policy", "plan.sample")? {
+            "never" => SamplePolicy::Never,
+            "above" => SamplePolicy::Above(req_usize(sample_doc, "cap", "plan.sample")?),
+            other => {
+                return Err(wire_err(format!(
+                    "unknown sample policy `{other}` (expected never|above)"
+                )))
+            }
+        };
+
+        let ordering = OrderingStrategy::parse(req_str(doc, "ordering", "plan")?)?;
+        let seed = req_u64(doc, "seed", "plan")?;
+
+        let stages = req(doc, "stages", "plan")?;
+        known_fields(
+            stages,
+            "plan.stages",
+            &["ivat", "render", "keep_matrix", "insight"],
+        )?;
+        let ivat = req_bool(stages, "ivat", "plan.stages")?;
+        let render = req_bool(stages, "render", "plan.stages")?;
+        let keep_matrix = req_bool(stages, "keep_matrix", "plan.stages")?;
+        let insight = req_bool(stages, "insight", "plan.stages")?;
+
+        let detector = match req(doc, "detector", "plan")? {
+            Json::Null => None,
+            det => {
+                known_fields(
+                    det,
+                    "plan.detector",
+                    &["threshold_sigmas", "min_block", "merge_ratio"],
+                )?;
+                Some(BlockDetector {
+                    threshold_sigmas: req_f64(det, "threshold_sigmas", "plan.detector")?,
+                    min_block: req_usize(det, "min_block", "plan.detector")?,
+                    merge_ratio: req_f64(det, "merge_ratio", "plan.detector")?,
+                })
+            }
+        };
+
+        let hop = req(doc, "hopkins", "plan")?;
+        known_fields(hop, "plan.hopkins", &["runs", "probes", "exponent", "seed"])?;
+        let hopkins_runs = req_usize(hop, "runs", "plan.hopkins")?;
+        let hopkins_params = HopkinsParams {
+            probes: req_usize(hop, "probes", "plan.hopkins")?,
+            exponent: match req_str(hop, "exponent", "plan.hopkins")? {
+                "one" => Exponent::One,
+                "dim" => Exponent::Dim,
+                other => {
+                    return Err(wire_err(format!(
+                        "unknown hopkins exponent `{other}` (expected one|dim)"
+                    )))
+                }
+            },
+            seed: req_u64(hop, "seed", "plan.hopkins")?,
+        };
+
+        Ok(PlanWire {
+            metric,
+            standardize,
+            storage,
+            shard,
+            sample,
+            ordering,
+            seed,
+            ivat,
+            render,
+            keep_matrix,
+            insight,
+            detector,
+            hopkins_runs,
+            hopkins_params,
+        })
+    }
+}
+
+fn shard_to_value(s: &ShardOptions) -> Json {
+    Json::Obj(vec![
+        ("shard_rows".into(), Json::usize(s.shard_rows)),
+        ("cache_shards".into(), Json::usize(s.cache_shards)),
+        (
+            "spill_dir".into(),
+            match &s.spill_dir {
+                None => Json::Null,
+                Some(p) => Json::str(p.to_string_lossy().into_owned()),
+            },
+        ),
+    ])
+}
+
+fn shard_from_value(doc: &Json, ctx: &str) -> Result<ShardOptions> {
+    known_fields(doc, ctx, &["shard_rows", "cache_shards", "spill_dir"])?;
+    Ok(ShardOptions {
+        shard_rows: req_usize(doc, "shard_rows", ctx)?,
+        cache_shards: req_usize(doc, "cache_shards", ctx)?,
+        spill_dir: match req(doc, "spill_dir", ctx)? {
+            Json::Null => None,
+            v => Some(PathBuf::from(v.as_str().ok_or_else(|| {
+                wire_err(format!("`{ctx}.spill_dir` must be a string or null"))
+            })?)),
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// resolved / route / dataset / versions
+// ---------------------------------------------------------------------------
+
+/// Owned, parseable form of the executor's [`ResolvedPlan`] echo.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResolvedWire {
+    /// Metric the distances were computed with.
+    pub metric: Metric,
+    /// Whether features were standardized.
+    pub standardize: bool,
+    /// The storage layout that actually ran.
+    pub storage: StorageKind,
+    /// Shard geometry that actually ran.
+    pub shard: ShardOptions,
+    /// Whether the display-ordered respill pass ran.
+    pub reorder_spill: bool,
+    /// Points in the input.
+    pub n_input: usize,
+    /// Points assessed (differs under sVAT sampling).
+    pub n_assessed: usize,
+    /// Engine name (`"approx"` for the matrix-free tier,
+    /// `"precomputed"` for storage input).
+    pub engine: String,
+    /// Ordering that ran: `"prim"`, `"boruvka"`, or `"approx"`.
+    pub ordering: String,
+}
+
+impl ResolvedWire {
+    /// Capture a report's resolved echo.
+    pub fn from_resolved(r: &ResolvedPlan) -> Self {
+        ResolvedWire {
+            metric: r.metric,
+            standardize: r.standardize,
+            storage: r.storage,
+            shard: r.shard.clone(),
+            reorder_spill: r.reorder_spill,
+            n_input: r.n_input,
+            n_assessed: r.n_assessed,
+            engine: r.engine.to_string(),
+            ordering: r.ordering.to_string(),
+        }
+    }
+
+    fn to_value(&self) -> Json {
+        Json::Obj(vec![
+            ("metric".into(), Json::str(metric_token(self.metric))),
+            ("standardize".into(), Json::Bool(self.standardize)),
+            ("storage".into(), Json::str(self.storage.as_str())),
+            ("shard".into(), shard_to_value(&self.shard)),
+            ("reorder_spill".into(), Json::Bool(self.reorder_spill)),
+            ("n_input".into(), Json::usize(self.n_input)),
+            ("n_assessed".into(), Json::usize(self.n_assessed)),
+            ("engine".into(), Json::str(self.engine.clone())),
+            ("ordering".into(), Json::str(self.ordering.clone())),
+        ])
+    }
+
+    fn from_value(doc: &Json, ctx: &str) -> Result<Self> {
+        known_fields(
+            doc,
+            ctx,
+            &[
+                "metric",
+                "standardize",
+                "storage",
+                "shard",
+                "reorder_spill",
+                "n_input",
+                "n_assessed",
+                "engine",
+                "ordering",
+            ],
+        )?;
+        Ok(ResolvedWire {
+            metric: Metric::parse(req_str(doc, "metric", ctx)?)?,
+            standardize: req_bool(doc, "standardize", ctx)?,
+            storage: StorageKind::parse(req_str(doc, "storage", ctx)?)?,
+            shard: shard_from_value(req(doc, "shard", ctx)?, "resolved.shard")?,
+            reorder_spill: req_bool(doc, "reorder_spill", ctx)?,
+            n_input: req_usize(doc, "n_input", ctx)?,
+            n_assessed: req_usize(doc, "n_assessed", ctx)?,
+            engine: req_str(doc, "engine", ctx)?.to_string(),
+            ordering: req_str(doc, "ordering", ctx)?.to_string(),
+        })
+    }
+}
+
+/// The approximate tier's full [`ApproxOutcome`] on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApproxWire {
+    /// Points assessed.
+    pub n: usize,
+    /// Requested k before clamping.
+    pub requested_k: usize,
+    /// Effective k.
+    pub k: usize,
+    /// Complete-graph mode (bitwise-exact contract).
+    pub complete: bool,
+    /// Unique kNN-graph edges before repair.
+    pub graph_edges: usize,
+    /// Cross-component repair edges added.
+    pub repair_edges: usize,
+    /// Complete mode routed through the sequential fallback.
+    pub fell_back: bool,
+    /// Sum of finite MST edge weights.
+    pub mst_weight: f64,
+    /// Measured neighbor recall.
+    pub neighbor_recall: f64,
+    /// approx/exact MST weight ratio (small n only).
+    pub mst_weight_ratio: Option<f64>,
+    /// Adjacent-pair order agreement (small n only).
+    pub order_agreement: Option<f64>,
+}
+
+impl ApproxWire {
+    /// Capture a report's approx-tier outcome.
+    pub fn from_outcome(o: &ApproxOutcome) -> Self {
+        ApproxWire {
+            n: o.n,
+            requested_k: o.requested_k,
+            k: o.k,
+            complete: o.complete,
+            graph_edges: o.graph_edges,
+            repair_edges: o.repair_edges,
+            fell_back: o.fell_back,
+            mst_weight: o.mst_weight,
+            neighbor_recall: o.neighbor_recall,
+            mst_weight_ratio: o.mst_weight_ratio,
+            order_agreement: o.order_agreement,
+        }
+    }
+
+    fn to_value(&self) -> Json {
+        Json::Obj(vec![
+            ("n".into(), Json::usize(self.n)),
+            ("requested_k".into(), Json::usize(self.requested_k)),
+            ("k".into(), Json::usize(self.k)),
+            ("complete".into(), Json::Bool(self.complete)),
+            ("graph_edges".into(), Json::usize(self.graph_edges)),
+            ("repair_edges".into(), Json::usize(self.repair_edges)),
+            ("fell_back".into(), Json::Bool(self.fell_back)),
+            ("mst_weight".into(), Json::f64(self.mst_weight)),
+            ("neighbor_recall".into(), Json::f64(self.neighbor_recall)),
+            (
+                "mst_weight_ratio".into(),
+                self.mst_weight_ratio.map_or(Json::Null, Json::f64),
+            ),
+            (
+                "order_agreement".into(),
+                self.order_agreement.map_or(Json::Null, Json::f64),
+            ),
+        ])
+    }
+
+    fn from_value(doc: &Json, ctx: &str) -> Result<Self> {
+        known_fields(
+            doc,
+            ctx,
+            &[
+                "n",
+                "requested_k",
+                "k",
+                "complete",
+                "graph_edges",
+                "repair_edges",
+                "fell_back",
+                "mst_weight",
+                "neighbor_recall",
+                "mst_weight_ratio",
+                "order_agreement",
+            ],
+        )?;
+        Ok(ApproxWire {
+            n: req_usize(doc, "n", ctx)?,
+            requested_k: req_usize(doc, "requested_k", ctx)?,
+            k: req_usize(doc, "k", ctx)?,
+            complete: req_bool(doc, "complete", ctx)?,
+            graph_edges: req_usize(doc, "graph_edges", ctx)?,
+            repair_edges: req_usize(doc, "repair_edges", ctx)?,
+            fell_back: req_bool(doc, "fell_back", ctx)?,
+            mst_weight: req_f64(doc, "mst_weight", ctx)?,
+            neighbor_recall: req_f64(doc, "neighbor_recall", ctx)?,
+            mst_weight_ratio: opt_f64(doc, "mst_weight_ratio", ctx)?,
+            order_agreement: opt_f64(doc, "order_agreement", ctx)?,
+        })
+    }
+}
+
+/// The execution route a report actually took — the part of provenance a
+/// resolved echo alone cannot tell you.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteWire {
+    /// `"exact"` (full distance set) or `"approx"` (kNN tier).
+    pub tier: String,
+    /// `Some(fell_back)` when the Borůvka strategy ran the sweep;
+    /// `None` when Prim or the approx tier did.
+    pub ordering_fell_back: Option<bool>,
+    /// The approx tier's outcome, when that tier ran.
+    pub approx: Option<ApproxWire>,
+}
+
+impl RouteWire {
+    fn to_value(&self) -> Json {
+        Json::Obj(vec![
+            ("tier".into(), Json::str(self.tier.clone())),
+            (
+                "ordering_fell_back".into(),
+                self.ordering_fell_back.map_or(Json::Null, Json::Bool),
+            ),
+            (
+                "approx".into(),
+                match &self.approx {
+                    None => Json::Null,
+                    Some(a) => a.to_value(),
+                },
+            ),
+        ])
+    }
+
+    fn from_value(doc: &Json, ctx: &str) -> Result<Self> {
+        known_fields(doc, ctx, &["tier", "ordering_fell_back", "approx"])?;
+        let tier = req_str(doc, "tier", ctx)?.to_string();
+        if tier != "exact" && tier != "approx" {
+            return Err(wire_err(format!(
+                "`{ctx}.tier` must be exact|approx, got `{tier}`"
+            )));
+        }
+        let ordering_fell_back = match req(doc, "ordering_fell_back", ctx)? {
+            Json::Null => None,
+            v => Some(v.as_bool().ok_or_else(|| {
+                wire_err(format!("`{ctx}.ordering_fell_back` must be a boolean or null"))
+            })?),
+        };
+        let approx = match req(doc, "approx", ctx)? {
+            Json::Null => None,
+            v => Some(ApproxWire::from_value(v, "route.approx")?),
+        };
+        Ok(RouteWire {
+            tier,
+            ordering_fell_back,
+            approx,
+        })
+    }
+}
+
+/// Content identity of the dataset a report assessed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStamp {
+    /// `"points"` (raw coordinates) or `"storage"` (precomputed distances).
+    pub kind: String,
+    /// FNV-1a 64 content hash ([`hash_points`] / [`hash_store`]).
+    pub hash: u64,
+    /// Points (or matrix side, for storage input).
+    pub n: usize,
+    /// Feature dimension (`None` for storage input).
+    pub d: Option<usize>,
+}
+
+impl DatasetStamp {
+    /// Stamp a point set (hash over the raw coordinates, pre-standardize).
+    pub fn of_points(p: &Points) -> Self {
+        DatasetStamp {
+            kind: "points".to_string(),
+            hash: hash_points(p),
+            n: p.n(),
+            d: Some(p.d()),
+        }
+    }
+
+    /// Stamp precomputed distance storage.
+    pub fn of_storage(s: &DistanceStore) -> Self {
+        DatasetStamp {
+            kind: "storage".to_string(),
+            hash: hash_store(s),
+            n: s.n(),
+            d: None,
+        }
+    }
+
+    fn to_value(&self) -> Json {
+        Json::Obj(vec![
+            ("kind".into(), Json::str(self.kind.clone())),
+            ("fnv1a64".into(), Json::str(hash_hex(self.hash))),
+            ("n".into(), Json::usize(self.n)),
+            (
+                "d".into(),
+                self.d.map_or(Json::Null, Json::usize),
+            ),
+        ])
+    }
+
+    fn from_value(doc: &Json, ctx: &str) -> Result<Self> {
+        known_fields(doc, ctx, &["kind", "fnv1a64", "n", "d"])?;
+        let kind = req_str(doc, "kind", ctx)?.to_string();
+        if kind != "points" && kind != "storage" {
+            return Err(wire_err(format!(
+                "`{ctx}.kind` must be points|storage, got `{kind}`"
+            )));
+        }
+        Ok(DatasetStamp {
+            kind,
+            hash: parse_hash_hex(req_str(doc, "fnv1a64", ctx)?, ctx)?,
+            n: req_usize(doc, "n", ctx)?,
+            d: match req(doc, "d", ctx)? {
+                Json::Null => None,
+                v => Some(v.as_usize().ok_or_else(|| {
+                    wire_err(format!("`{ctx}.d` must be an integer or null"))
+                })?),
+            },
+        })
+    }
+}
+
+/// Build + schema provenance carried by every manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VersionStamp {
+    /// The crate version that produced the document.
+    pub crate_version: String,
+    /// Plan schema in force at emission.
+    pub plan_schema: String,
+    /// Manifest schema in force at emission.
+    pub manifest_schema: String,
+}
+
+impl Default for VersionStamp {
+    fn default() -> Self {
+        VersionStamp {
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            plan_schema: PLAN_SCHEMA.to_string(),
+            manifest_schema: MANIFEST_SCHEMA.to_string(),
+        }
+    }
+}
+
+impl VersionStamp {
+    fn to_value(&self) -> Json {
+        Json::Obj(vec![
+            ("crate".into(), Json::str(self.crate_version.clone())),
+            ("plan_schema".into(), Json::str(self.plan_schema.clone())),
+            (
+                "manifest_schema".into(),
+                Json::str(self.manifest_schema.clone()),
+            ),
+        ])
+    }
+
+    fn from_value(doc: &Json, ctx: &str) -> Result<Self> {
+        known_fields(doc, ctx, &["crate", "plan_schema", "manifest_schema"])?;
+        Ok(VersionStamp {
+            crate_version: req_str(doc, "crate", ctx)?.to_string(),
+            plan_schema: req_str(doc, "plan_schema", ctx)?.to_string(),
+            manifest_schema: req_str(doc, "manifest_schema", ctx)?.to_string(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReplayManifest
+// ---------------------------------------------------------------------------
+
+/// Everything needed to reproduce a report bit-for-bit: the plan echo, the
+/// dataset's content hash, the resolved tier, the engine, and the route
+/// taken. Attached to every [`AnalysisReport`]; `fast-vat replay
+/// manifest.json data.csv` re-executes it.
+#[derive(Debug, Clone)]
+pub struct ReplayManifest {
+    /// The original request, knob for knob.
+    pub plan: PlanWire,
+    /// Content identity of the assessed dataset.
+    pub dataset: DatasetStamp,
+    /// The tier/engine/geometry that actually ran.
+    pub resolved: ResolvedWire,
+    /// The execution route (exact vs approx, fallbacks).
+    pub route: RouteWire,
+    /// Crate + schema versions at emission.
+    pub versions: VersionStamp,
+}
+
+impl ReplayManifest {
+    /// Canonical JSON emission (2-space pretty, trailing newline).
+    pub fn to_json(&self) -> String {
+        let v = Json::Obj(vec![
+            ("schema".into(), Json::str(MANIFEST_SCHEMA)),
+            ("plan".into(), self.plan.to_value()),
+            ("dataset".into(), self.dataset.to_value()),
+            ("resolved".into(), self.resolved.to_value()),
+            ("route".into(), self.route.to_value()),
+            ("versions".into(), self.versions.to_value()),
+        ]);
+        let mut s = v.to_pretty(2);
+        s.push('\n');
+        s
+    }
+
+    /// Parse a `fast-vat/manifest/v1` document (same strictness as
+    /// [`PlanWire::from_json`]).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| wire_err(format!("invalid JSON: {e}")))?;
+        known_fields(
+            &doc,
+            "manifest",
+            &["schema", "plan", "dataset", "resolved", "route", "versions"],
+        )?;
+        check_schema(&doc, MANIFEST_SCHEMA)?;
+        Ok(ReplayManifest {
+            plan: PlanWire::from_value(req(&doc, "plan", "manifest")?)?,
+            dataset: DatasetStamp::from_value(req(&doc, "dataset", "manifest")?, "dataset")?,
+            resolved: ResolvedWire::from_value(req(&doc, "resolved", "manifest")?, "resolved")?,
+            route: RouteWire::from_value(req(&doc, "route", "manifest")?, "route")?,
+            versions: VersionStamp::from_value(req(&doc, "versions", "manifest")?, "versions")?,
+        })
+    }
+
+    /// Re-execute this manifest against a dataset. The points must hash to
+    /// the manifest's content stamp (anything else is a hard error — a
+    /// replay against the wrong data is not a replay), and the original
+    /// engine is resolved by name. The deterministic pipeline then
+    /// reproduces order / MST / iVAT / rendered bytes bit-for-bit; check
+    /// with [`ReplayManifest::verify_replay`].
+    pub fn replay(&self, points: Points, artifacts_dir: &str) -> Result<AnalysisReport> {
+        if self.dataset.kind != "points" {
+            return Err(wire_err(
+                "this manifest assessed precomputed storage; replay needs the original \
+                 store, not a CSV",
+            ));
+        }
+        let got = hash_points(&points);
+        if got != self.dataset.hash {
+            return Err(wire_err(format!(
+                "dataset content hash mismatch: manifest has {}, these points hash to {} \
+                 — not the same data",
+                hash_hex(self.dataset.hash),
+                hash_hex(got)
+            )));
+        }
+        let plan = self.plan.analysis_of(points).plan()?;
+        if self.resolved.engine == "approx" {
+            // matrix-free route: no engine is consulted, but the executor
+            // API wants one — the blocked engine is the carrier
+            plan.execute(&BlockedEngine)
+        } else {
+            let engine = crate::runtime::engine_by_name(&self.resolved.engine, artifacts_dir)?;
+            plan.execute(engine.as_ref())
+        }
+    }
+
+    /// Check a re-executed report against this manifest: dataset stamp,
+    /// resolved tier, and route must all match (the report's own manifest
+    /// carries them). Output equality is the caller's assertion — this
+    /// verifies the provenance chain.
+    pub fn verify_replay(&self, report: &AnalysisReport) -> Result<()> {
+        let m = &report.manifest;
+        if m.dataset != self.dataset {
+            return Err(wire_err(format!(
+                "replay diverged: dataset stamp {} vs manifest {}",
+                hash_hex(m.dataset.hash),
+                hash_hex(self.dataset.hash)
+            )));
+        }
+        if m.resolved != self.resolved {
+            return Err(wire_err(format!(
+                "replay diverged: resolved {:?} vs manifest {:?}",
+                m.resolved, self.resolved
+            )));
+        }
+        if m.route != self.route {
+            return Err(wire_err(format!(
+                "replay diverged: route {:?} vs manifest {:?}",
+                m.route, self.route
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Executor hook: assemble the manifest for a finished run.
+pub(crate) fn manifest_for(
+    spec: &Analysis,
+    resolved: &ResolvedPlan,
+    dataset: DatasetStamp,
+    ordering_fell_back: Option<bool>,
+    approx: Option<&ApproxOutcome>,
+) -> ReplayManifest {
+    ReplayManifest {
+        plan: PlanWire::from_analysis(spec),
+        dataset,
+        resolved: ResolvedWire::from_resolved(resolved),
+        route: RouteWire {
+            tier: if approx.is_some() { "approx" } else { "exact" }.to_string(),
+            ordering_fell_back,
+            approx: approx.map(ApproxWire::from_outcome),
+        },
+        versions: VersionStamp::default(),
+    }
+}
+
+/// Round-trip a validated plan through the wire codec (serialize → parse →
+/// re-apply to the same input → re-validate). The
+/// `FAST_VAT_TEST_ROUNDTRIP_PLANS` harness reroutes every `execute`
+/// through this, so the whole parity corpus pins the codec bitwise.
+pub(crate) fn roundtrip_plan(plan: &AnalysisPlan) -> Result<AnalysisPlan> {
+    let parsed = PlanWire::from_json(&PlanWire::from_plan(plan).to_json())?;
+    let analysis = match &plan.spec.input {
+        PlanInput::Points(p) => parsed.analysis_of(p.clone()),
+        PlanInput::Storage(s) => parsed.analysis_over(s.clone()),
+    };
+    let mut rt = analysis.plan()?;
+    // cache injection is executor state, not a wire knob: carry it across
+    // so store reuse stays observable under the roundtrip harness
+    rt.spec.prebuilt = plan.spec.prebuilt.clone();
+    Ok(rt)
+}
+
+// ---------------------------------------------------------------------------
+// ReportWire
+// ---------------------------------------------------------------------------
+
+/// The transport summary of an [`AnalysisReport`]: resolved echo, VAT
+/// order, MST, blocks, scalar diagnostics, and the embedded replay
+/// manifest. Bulk artifacts (images, matrices) ship in their own formats
+/// (PGM/CSV) — the wire report carries everything a service client needs
+/// to consume or replay a result.
+#[derive(Debug, Clone)]
+pub struct ReportWire {
+    /// The tier/engine/geometry that ran.
+    pub resolved: ResolvedWire,
+    /// The VAT permutation.
+    pub order: Vec<usize>,
+    /// MST edges `(a, b, weight)` — weights in shortest round-trip form,
+    /// so they parse back bit-identical.
+    pub mst: Vec<(usize, usize, f64)>,
+    /// Detected diagonal blocks as `[start, end)` display ranges.
+    pub blocks: Option<Vec<(usize, usize)>>,
+    /// Cluster-count estimate (block count), when detection ran.
+    pub k_estimate: Option<usize>,
+    /// Hopkins statistic, when that stage ran.
+    pub hopkins: Option<f64>,
+    /// Natural-language insight line, when requested.
+    pub insight: Option<String>,
+    /// Approx-tier fidelity record, when that tier ran.
+    pub approx: Option<ApproxWire>,
+    /// The replay manifest.
+    pub manifest: ReplayManifest,
+}
+
+impl ReportWire {
+    /// Capture a report.
+    pub fn from_report(r: &AnalysisReport) -> Self {
+        ReportWire {
+            resolved: ResolvedWire::from_resolved(&r.plan),
+            order: r.vat.order.clone(),
+            mst: r.vat.mst.clone(),
+            blocks: r
+                .blocks
+                .as_ref()
+                .map(|bs| bs.iter().map(|b| (b.start, b.end)).collect()),
+            k_estimate: r.k_estimate(),
+            hopkins: r.hopkins,
+            insight: r.insight.clone(),
+            approx: r.approx.as_ref().map(ApproxWire::from_outcome),
+            manifest: r.manifest.clone(),
+        }
+    }
+
+    /// Canonical JSON emission (2-space pretty, trailing newline).
+    pub fn to_json(&self) -> String {
+        let mst = Json::Arr(
+            self.mst
+                .iter()
+                .map(|&(a, b, w)| {
+                    Json::Arr(vec![Json::usize(a), Json::usize(b), Json::f64(w)])
+                })
+                .collect(),
+        );
+        let order = Json::Arr(self.order.iter().map(|&i| Json::usize(i)).collect());
+        let blocks = match &self.blocks {
+            None => Json::Null,
+            Some(bs) => Json::Arr(
+                bs.iter()
+                    .map(|&(s, e)| Json::Arr(vec![Json::usize(s), Json::usize(e)]))
+                    .collect(),
+            ),
+        };
+        let v = Json::Obj(vec![
+            ("schema".into(), Json::str(REPORT_SCHEMA)),
+            ("resolved".into(), self.resolved.to_value()),
+            ("order".into(), order),
+            ("mst".into(), mst),
+            ("blocks".into(), blocks),
+            (
+                "k_estimate".into(),
+                self.k_estimate.map_or(Json::Null, Json::usize),
+            ),
+            ("hopkins".into(), self.hopkins.map_or(Json::Null, Json::f64)),
+            (
+                "insight".into(),
+                match &self.insight {
+                    None => Json::Null,
+                    Some(s) => Json::str(s.clone()),
+                },
+            ),
+            (
+                "approx".into(),
+                match &self.approx {
+                    None => Json::Null,
+                    Some(a) => a.to_value(),
+                },
+            ),
+            (
+                "manifest".into(),
+                Json::parse(&self.manifest.to_json()).expect("manifest emission is valid JSON"),
+            ),
+        ]);
+        let mut s = v.to_pretty(2);
+        s.push('\n');
+        s
+    }
+
+    /// Parse a `fast-vat/report/v1` document.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| wire_err(format!("invalid JSON: {e}")))?;
+        known_fields(
+            &doc,
+            "report",
+            &[
+                "schema",
+                "resolved",
+                "order",
+                "mst",
+                "blocks",
+                "k_estimate",
+                "hopkins",
+                "insight",
+                "approx",
+                "manifest",
+            ],
+        )?;
+        check_schema(&doc, REPORT_SCHEMA)?;
+        let order = req(&doc, "order", "report")?
+            .as_arr()
+            .ok_or_else(|| wire_err("`report.order` must be an array"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| wire_err("`report.order` entries must be integers"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mst = req(&doc, "mst", "report")?
+            .as_arr()
+            .ok_or_else(|| wire_err("`report.mst` must be an array"))?
+            .iter()
+            .map(|e| {
+                let t = e
+                    .as_arr()
+                    .filter(|t| t.len() == 3)
+                    .ok_or_else(|| wire_err("`report.mst` entries must be [a, b, weight]"))?;
+                Ok((
+                    t[0].as_usize()
+                        .ok_or_else(|| wire_err("`report.mst` endpoints must be integers"))?,
+                    t[1].as_usize()
+                        .ok_or_else(|| wire_err("`report.mst` endpoints must be integers"))?,
+                    t[2].as_f64()
+                        .ok_or_else(|| wire_err("`report.mst` weights must be numbers"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let blocks = match req(&doc, "blocks", "report")? {
+            Json::Null => None,
+            v => Some(
+                v.as_arr()
+                    .ok_or_else(|| wire_err("`report.blocks` must be an array or null"))?
+                    .iter()
+                    .map(|b| {
+                        let t = b
+                            .as_arr()
+                            .filter(|t| t.len() == 2)
+                            .ok_or_else(|| wire_err("`report.blocks` entries must be [start, end]"))?;
+                        Ok((
+                            t[0].as_usize()
+                                .ok_or_else(|| wire_err("block bounds must be integers"))?,
+                            t[1].as_usize()
+                                .ok_or_else(|| wire_err("block bounds must be integers"))?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        };
+        let k_estimate = match req(&doc, "k_estimate", "report")? {
+            Json::Null => None,
+            v => Some(v.as_usize().ok_or_else(|| {
+                wire_err("`report.k_estimate` must be an integer or null")
+            })?),
+        };
+        let insight = match req(&doc, "insight", "report")? {
+            Json::Null => None,
+            v => Some(
+                v.as_str()
+                    .ok_or_else(|| wire_err("`report.insight` must be a string or null"))?
+                    .to_string(),
+            ),
+        };
+        let approx = match req(&doc, "approx", "report")? {
+            Json::Null => None,
+            v => Some(ApproxWire::from_value(v, "report.approx")?),
+        };
+        let manifest_doc = req(&doc, "manifest", "report")?;
+        let manifest = ReplayManifest::from_json(&{
+            let mut s = manifest_doc.to_pretty(2);
+            s.push('\n');
+            s
+        })?;
+        Ok(ReportWire {
+            resolved: ResolvedWire::from_value(req(&doc, "resolved", "report")?, "resolved")?,
+            order,
+            mst,
+            blocks,
+            k_estimate,
+            hopkins: opt_f64(&doc, "hopkins", "report")?,
+            insight,
+            approx,
+            manifest,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::engine::BlockedEngine;
+
+    fn exotic_plan() -> AnalysisPlan {
+        Analysis::of(blobs(40, 3, 2, 0.4, 9).points)
+            .metric(Metric::Minkowski(2.5))
+            .standardize(false)
+            .storage(StoragePolicy::Auto {
+                memory_budget_bytes: 64 * 1024,
+            })
+            .shard(ShardOptions {
+                shard_rows: 7,
+                cache_shards: 3,
+                spill_dir: Some(PathBuf::from("spill/tmp")),
+            })
+            .sample(SamplePolicy::Above(32))
+            .ordering(OrderingStrategy::Boruvka)
+            .seed(0xDEAD_BEEF_CAFE_F00D)
+            .ivat(true)
+            .detect_blocks(BlockDetector {
+                threshold_sigmas: 2.25,
+                min_block: 4,
+                merge_ratio: 1.5,
+            })
+            .insight(true)
+            .hopkins(3)
+            .hopkins_params(HopkinsParams {
+                probes: 11,
+                exponent: Exponent::Dim,
+                seed: 42,
+            })
+            .render(true)
+            .plan()
+            .unwrap()
+    }
+
+    #[test]
+    fn plan_json_is_a_fixed_point() {
+        let wire = PlanWire::from_plan(&exotic_plan());
+        let json = wire.to_json();
+        let back = PlanWire::from_json(&json).unwrap();
+        assert_eq!(back.to_json(), json);
+        // and the large seed survived without an f64 round-trip
+        assert_eq!(back.seed, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(back.hopkins_params.probes, 11);
+        assert!(matches!(back.metric, Metric::Minkowski(p) if p == 2.5));
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_at_every_level() {
+        let wire = PlanWire::from_plan(&exotic_plan());
+        let json = wire.to_json();
+        // top level
+        let bad = json.replacen("\"metric\"", "\"metricx\"", 1);
+        let err = PlanWire::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown field `metricx`"), "{err}");
+        // nested (shard object)
+        let bad = json.replacen("\"cache_shards\"", "\"cache_shardz\"", 1);
+        let err = PlanWire::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown field `cache_shardz`"), "{err}");
+    }
+
+    #[test]
+    fn version_negotiation_messages_are_directional() {
+        let json = PlanWire::from_plan(&exotic_plan()).to_json();
+        let newer = json.replacen("fast-vat/plan/v1", "fast-vat/plan/v2", 1);
+        let err = PlanWire::from_json(&newer).unwrap_err().to_string();
+        assert!(err.contains("newer than this build"), "{err}");
+        let foreign = json.replacen("fast-vat/plan/v1", "someone-else/plan/v1", 1);
+        let err = PlanWire::from_json(&foreign).unwrap_err().to_string();
+        assert!(err.contains("unrecognized schema"), "{err}");
+    }
+
+    #[test]
+    fn missing_fields_and_bad_types_are_rejected() {
+        let json = PlanWire::from_plan(&exotic_plan()).to_json();
+        let no_seed = json.replacen("\"seed\"", "\"seed_gone\"", 1);
+        assert!(PlanWire::from_json(&no_seed).is_err());
+        let bad_type = json.replacen("\"standardize\": false", "\"standardize\": 1", 1);
+        let err = PlanWire::from_json(&bad_type).unwrap_err().to_string();
+        assert!(err.contains("must be a boolean"), "{err}");
+        assert!(PlanWire::from_json("{not json").is_err());
+    }
+
+    #[test]
+    fn manifest_round_trips_and_verifies() {
+        let report = exotic_plan().execute(&BlockedEngine).unwrap();
+        let m = &report.manifest;
+        let back = ReplayManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.dataset, m.dataset);
+        assert_eq!(back.resolved, m.resolved);
+        assert_eq!(back.route, m.route);
+        assert_eq!(back.to_json(), m.to_json());
+        back.verify_replay(&report).unwrap();
+    }
+
+    #[test]
+    fn replay_rejects_the_wrong_dataset() {
+        let report = exotic_plan().execute(&BlockedEngine).unwrap();
+        let other = blobs(40, 3, 2, 0.4, 10).points; // different seed
+        let err = report
+            .manifest
+            .replay(other, "artifacts-not-present")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("content hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn report_wire_round_trips_order_and_mst_bitwise() {
+        let report = exotic_plan().execute(&BlockedEngine).unwrap();
+        let wire = ReportWire::from_report(&report);
+        let back = ReportWire::from_json(&wire.to_json()).unwrap();
+        assert_eq!(back.order, wire.order);
+        assert_eq!(back.mst.len(), wire.mst.len());
+        for (a, b) in back.mst.iter().zip(wire.mst.iter()) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+            assert_eq!(a.2.to_bits(), b.2.to_bits());
+        }
+        assert_eq!(back.blocks, wire.blocks);
+        assert_eq!(back.resolved, wire.resolved);
+    }
+
+    #[test]
+    fn fnv_hash_is_stable_and_input_sensitive() {
+        let a = blobs(12, 2, 2, 0.4, 1).points;
+        let b = blobs(12, 2, 2, 0.4, 2).points;
+        assert_eq!(hash_points(&a), hash_points(&a));
+        assert_ne!(hash_points(&a), hash_points(&b));
+        // FNV-1a reference vector: empty input = offset basis
+        assert_eq!(Fnv1a::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -10,6 +10,7 @@ use crate::data::generators;
 use crate::dissimilarity::engine::{DistanceEngine, ParallelEngine};
 use crate::dissimilarity::{Metric, StorageKind};
 use crate::error::Result;
+use crate::json;
 use crate::vat::{boruvka, knn, prim};
 
 /// Timing summary of repeated runs.
@@ -154,14 +155,15 @@ pub struct OrderingBenchReport {
 }
 
 impl OrderingBenchReport {
-    /// Hand-written JSON in the checked-in `BENCH_ordering.json` schema
-    /// (the registry carries no serde).
+    /// JSON in the checked-in `BENCH_ordering.json` schema, built on the
+    /// shared [`crate::json`] escaping/number discipline (same bytes as
+    /// the old hand-rolled writer for every finite input).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str("  \"schema\": \"fast-vat/bench-ordering/v1\",\n");
         out.push_str(&format!(
-            "  \"provenance\": \"{}\",\n",
-            self.provenance.replace('"', "'")
+            "  \"provenance\": {},\n",
+            json::quote(&self.provenance)
         ));
         out.push_str(&format!(
             "  \"threads_available\": {},\n",
@@ -170,15 +172,15 @@ impl OrderingBenchReport {
         out.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"n\": {}, \"strategy\": \"{}\", \"threads\": {}, \
-                 \"mean_s\": {:.6}, \"min_s\": {:.6}, \"max_s\": {:.6}, \
+                "    {{\"n\": {}, \"strategy\": {}, \"threads\": {}, \
+                 \"mean_s\": {}, \"min_s\": {}, \"max_s\": {}, \
                  \"samples\": {}, \"fell_back\": {}}}{}\n",
                 r.n,
-                r.strategy,
+                json::quote(r.strategy),
                 r.threads,
-                r.timing.mean_s,
-                r.timing.min_s,
-                r.timing.max_s,
+                json::fmt_fixed(r.timing.mean_s, 6),
+                json::fmt_fixed(r.timing.min_s, 6),
+                json::fmt_fixed(r.timing.max_s, 6),
                 r.timing.samples,
                 r.fell_back,
                 if i + 1 < self.rows.len() { "," } else { "" }
@@ -311,14 +313,15 @@ pub struct ApproxBenchReport {
 }
 
 impl ApproxBenchReport {
-    /// Hand-written JSON in the checked-in `BENCH_approx.json` schema
-    /// (the registry carries no serde).
+    /// JSON in the checked-in `BENCH_approx.json` schema, built on the
+    /// shared [`crate::json`] escaping/number discipline (same bytes as
+    /// the old hand-rolled writer for every finite input).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str("  \"schema\": \"fast-vat/bench-approx/v1\",\n");
         out.push_str(&format!(
-            "  \"provenance\": \"{}\",\n",
-            self.provenance.replace('"', "'")
+            "  \"provenance\": {},\n",
+            json::quote(&self.provenance)
         ));
         out.push_str(&format!(
             "  \"threads_available\": {},\n",
@@ -326,27 +329,21 @@ impl ApproxBenchReport {
         ));
         out.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
-            let ratio = r
-                .mst_weight_ratio
-                .map_or("null".to_string(), |v| format!("{v:.6}"));
-            let agree = r
-                .order_agreement
-                .map_or("null".to_string(), |v| format!("{v:.6}"));
             out.push_str(&format!(
-                "    {{\"n\": {}, \"arm\": \"{}\", \"k\": {}, \"mean_s\": {:.6}, \
-                 \"min_s\": {:.6}, \"max_s\": {:.6}, \"samples\": {}, \
-                 \"neighbor_recall\": {:.6}, \"mst_weight_ratio\": {}, \
+                "    {{\"n\": {}, \"arm\": {}, \"k\": {}, \"mean_s\": {}, \
+                 \"min_s\": {}, \"max_s\": {}, \"samples\": {}, \
+                 \"neighbor_recall\": {}, \"mst_weight_ratio\": {}, \
                  \"order_agreement\": {}}}{}\n",
                 r.n,
-                r.arm,
+                json::quote(r.arm),
                 r.k,
-                r.timing.mean_s,
-                r.timing.min_s,
-                r.timing.max_s,
+                json::fmt_fixed(r.timing.mean_s, 6),
+                json::fmt_fixed(r.timing.min_s, 6),
+                json::fmt_fixed(r.timing.max_s, 6),
                 r.timing.samples,
-                r.neighbor_recall,
-                ratio,
-                agree,
+                json::fmt_fixed(r.neighbor_recall, 6),
+                json::fmt_opt_fixed(r.mst_weight_ratio, 6),
+                json::fmt_opt_fixed(r.order_agreement, 6),
                 if i + 1 < self.rows.len() { "," } else { "" }
             ));
         }
@@ -579,6 +576,56 @@ mod tests {
         assert!(json.contains("}\n  ]\n}"));
         let table = r.table();
         assert!(table.contains("speedup vs exact"));
+    }
+
+    #[test]
+    fn bench_emitters_share_the_json_module_discipline() {
+        // both writers now route strings through json::quote (real escaping,
+        // not the old quote-to-apostrophe mangling) and floats through the
+        // fixed-6 discipline — pinned here byte for byte
+        let r = OrderingBenchReport {
+            rows: vec![OrderingBenchRow {
+                n: 5,
+                strategy: "prim",
+                threads: 1,
+                timing: Timing {
+                    mean_s: 0.5,
+                    min_s: 0.25,
+                    max_s: 1.0,
+                    samples: 3,
+                },
+                fell_back: false,
+            }],
+            threads_available: 2,
+            provenance: "host \"x\"".into(),
+        };
+        let json = r.to_json();
+        assert!(json.contains(r#""provenance": "host \"x\"","#));
+        assert!(json.contains(
+            r#"{"n": 5, "strategy": "prim", "threads": 1, "mean_s": 0.500000, "min_s": 0.250000, "max_s": 1.000000, "samples": 3, "fell_back": false}"#
+        ));
+        let a = ApproxBenchReport {
+            rows: vec![ApproxBenchRow {
+                n: 5,
+                arm: "approx",
+                k: 2,
+                timing: Timing {
+                    mean_s: 0.5,
+                    min_s: 0.25,
+                    max_s: 1.0,
+                    samples: 3,
+                },
+                neighbor_recall: 0.875,
+                mst_weight_ratio: None,
+                order_agreement: Some(1.0),
+            }],
+            threads_available: 2,
+            provenance: "p".into(),
+        };
+        let json = a.to_json();
+        assert!(json.contains(
+            r#""neighbor_recall": 0.875000, "mst_weight_ratio": null, "order_agreement": 1.000000}"#
+        ));
     }
 
     #[test]

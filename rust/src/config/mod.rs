@@ -188,6 +188,16 @@ impl Document {
     }
 }
 
+/// Parse a megabyte-valued config key into bytes (int ≥ 0; 0 passes
+/// through as "unlimited"/"disabled").
+fn mb_key(v: &Value, key: &str) -> Result<usize> {
+    let mb = v
+        .as_int()
+        .filter(|&i| i >= 0)
+        .ok_or_else(|| Error::Config(format!("{key} must be int >= 0")))?;
+    Ok(mb as usize * 1_048_576)
+}
+
 fn strip_comment(line: &str) -> &str {
     // a '#' outside quotes starts a comment
     let mut in_str = false;
@@ -237,6 +247,24 @@ pub struct ServiceConfig {
     /// `knn_k`). When set, jobs run the sub-quadratic kNN-graph sweep and
     /// the `storage` layout is ignored.
     pub knn_k: Option<usize>,
+    /// Process-wide resident-byte budget for the admission ledger, in
+    /// bytes (the `ram_budget_mb` config key, megabytes). 0 = unlimited.
+    /// When set, concurrent jobs are charged their resolved storage
+    /// footprint at admission and queue rather than oversubscribe, and a
+    /// pinned layout that alone exceeds the budget is degraded through
+    /// `StoragePolicy::Auto` (bitwise-identical output, smaller footprint).
+    pub ram_budget_bytes: usize,
+    /// Process-wide spill-file budget for the admission ledger, in bytes
+    /// (the `disk_budget_mb` config key, megabytes). 0 = unlimited.
+    pub disk_budget_bytes: usize,
+    /// Whole-report cache capacity, in reports (the `cache_reports` key).
+    /// Keyed by dataset content hash + plan wire fingerprint + engine;
+    /// 0 disables report caching.
+    pub cache_reports: usize,
+    /// Distance-store cache budget, in bytes (the `cache_store_mb` config
+    /// key, megabytes). Holds built in-RAM distance stores keyed by
+    /// dataset hash + standardize + metric + layout; 0 disables.
+    pub cache_store_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -251,6 +279,10 @@ impl Default for ServiceConfig {
             metric: Metric::Euclidean,
             ordering: OrderingStrategy::Auto,
             knn_k: None,
+            ram_budget_bytes: 0,
+            disk_budget_bytes: 0,
+            cache_reports: 8,
+            cache_store_bytes: 32 * 1_048_576,
         }
     }
 }
@@ -349,6 +381,25 @@ impl ServiceConfig {
                         .ok_or_else(|| Error::Config("ordering must be a string".into()))?;
                     cfg.ordering = OrderingStrategy::parse(o)
                         .map_err(|e| Error::Config(format!("bad ordering: {e}")))?;
+                }
+                // budget/cache byte knobs take megabytes in the file
+                // (human-scale units); 0 means unlimited / disabled
+                "ram_budget_mb" => {
+                    cfg.ram_budget_bytes = mb_key(v, "ram_budget_mb")?;
+                }
+                "disk_budget_mb" => {
+                    cfg.disk_budget_bytes = mb_key(v, "disk_budget_mb")?;
+                }
+                "cache_store_mb" => {
+                    cfg.cache_store_bytes = mb_key(v, "cache_store_mb")?;
+                }
+                "cache_reports" => {
+                    cfg.cache_reports = v
+                        .as_int()
+                        .filter(|&i| i >= 0)
+                        .ok_or_else(|| {
+                            Error::Config("cache_reports must be int >= 0".into())
+                        })? as usize
                 }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
@@ -548,6 +599,45 @@ mod tests {
         let doc = Document::parse("[service]\nstorage = \"approx\"\n").unwrap();
         assert!(ServiceConfig::from_document(&doc).is_err());
         for bad in ["[service]\nknn_k = 0\n", "[service]\nknn_k = \"lots\"\n"] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn service_config_budget_and_cache_knobs() {
+        let doc = Document::parse(
+            "[service]\nram_budget_mb = 512\ndisk_budget_mb = 2048\n\
+             cache_reports = 3\ncache_store_mb = 16\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.ram_budget_bytes, 512 * 1_048_576);
+        assert_eq!(cfg.disk_budget_bytes, 2048 * 1_048_576);
+        assert_eq!(cfg.cache_reports, 3);
+        assert_eq!(cfg.cache_store_bytes, 16 * 1_048_576);
+        // defaults: unlimited budgets, caching on
+        let d = ServiceConfig::default();
+        assert_eq!(d.ram_budget_bytes, 0);
+        assert_eq!(d.disk_budget_bytes, 0);
+        assert_eq!(d.cache_reports, 8);
+        assert_eq!(d.cache_store_bytes, 32 * 1_048_576);
+        // 0 is a valid "off switch" for every knob
+        let doc = Document::parse(
+            "[service]\nram_budget_mb = 0\ncache_reports = 0\ncache_store_mb = 0\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.ram_budget_bytes, 0);
+        assert_eq!(cfg.cache_reports, 0);
+        assert_eq!(cfg.cache_store_bytes, 0);
+        // negatives and non-ints fail loudly
+        for bad in [
+            "[service]\nram_budget_mb = -1\n",
+            "[service]\ndisk_budget_mb = \"big\"\n",
+            "[service]\ncache_reports = -2\n",
+            "[service]\ncache_store_mb = 1.5\n",
+        ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
         }

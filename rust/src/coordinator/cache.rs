@@ -1,0 +1,381 @@
+//! Content-addressed analysis cache: whole reports and distance stores,
+//! keyed by dataset content hash.
+//!
+//! The wire spine gives every dataset a deterministic identity
+//! ([`crate::analysis::wire::hash_points`]) and every plan a canonical
+//! byte fingerprint ([`PlanWire::to_json`](crate::analysis::PlanWire) — the
+//! emission is a fixed point, so equal knobs produce equal bytes). This
+//! module turns those into a two-level cache the coordinator consults
+//! before doing any O(n²) work:
+//!
+//! * **Report cache** — keyed `(dataset hash, plan fingerprint, engine)`.
+//!   A hit returns the previously executed [`AnalysisReport`] behind the
+//!   same `Arc` — byte-identical outputs for free, no stage re-runs.
+//!   Entries are LRU-bounded by *count* (reports are O(n) resident unless
+//!   `keep_matrix` was requested).
+//! * **Store cache** — keyed `(dataset hash, standardize, metric, layout)`.
+//!   A hit lets a *different* plan over the same data (say, iVAT on where
+//!   the first request skipped it) reuse the built distance buffer via
+//!   prebuilt-store injection, skipping the distance stage but re-running
+//!   the cheaper downstream stages. Entries are LRU-bounded by *resident
+//!   bytes* ([`DistanceStorage::distance_bytes`]) and restricted to the
+//!   in-RAM layouts (dense / condensed): those are immutable buffers,
+//!   safely shared across worker threads, while the sharded tiers carry a
+//!   contended LRU and spill-file lifetimes that make cross-job sharing a
+//!   pessimization.
+//!
+//! Shard geometry is deliberately **not** part of the store key: the
+//! in-RAM layouts ignore it, and the executor's injection guard re-checks
+//! `n` and layout before reuse. Plans whose fingerprints differ only in
+//! stages still share a store entry — that is the point.
+
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::AnalysisReport;
+use crate::dissimilarity::{DistanceStorage, DistanceStore, StorageKind};
+
+/// Hit/miss/eviction counters for both cache levels.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Report-cache hits (whole executed report reused).
+    pub report_hits: u64,
+    /// Report-cache misses.
+    pub report_misses: u64,
+    /// Report entries evicted by the count bound.
+    pub report_evictions: u64,
+    /// Store-cache hits (distance buffer reused via injection).
+    pub store_hits: u64,
+    /// Store-cache misses.
+    pub store_misses: u64,
+    /// Store entries evicted by the byte bound.
+    pub store_evictions: u64,
+}
+
+#[derive(Debug)]
+struct ReportEntry {
+    dataset_hash: u64,
+    fingerprint: String,
+    engine: String,
+    report: Arc<AnalysisReport>,
+    tick: u64,
+}
+
+#[derive(Debug)]
+struct StoreEntry {
+    dataset_hash: u64,
+    standardize: bool,
+    metric: String,
+    kind: StorageKind,
+    store: Arc<DistanceStore>,
+    bytes: usize,
+    tick: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    tick: u64,
+    reports: Vec<ReportEntry>,
+    stores: Vec<StoreEntry>,
+    store_bytes: usize,
+    stats: CacheStats,
+}
+
+/// The coordinator's content-addressed cache. Capacity 0 on either level
+/// disables that level. Cheap to share behind an `Arc`; all methods take
+/// `&self`.
+#[derive(Debug)]
+pub struct AnalysisCache {
+    report_capacity: usize,
+    store_budget_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl AnalysisCache {
+    /// A cache holding up to `report_capacity` reports and up to
+    /// `store_budget_bytes` of resident distance buffers.
+    pub fn new(report_capacity: usize, store_budget_bytes: usize) -> Self {
+        AnalysisCache {
+            report_capacity,
+            store_budget_bytes,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Look up an executed report by `(dataset hash, plan fingerprint,
+    /// engine)`. A hit returns the same `Arc` that was inserted.
+    pub fn get_report(
+        &self,
+        dataset_hash: u64,
+        fingerprint: &str,
+        engine: &str,
+    ) -> Option<Arc<AnalysisReport>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let pos = inner.reports.iter().position(|e| {
+            e.dataset_hash == dataset_hash && e.engine == engine && e.fingerprint == fingerprint
+        });
+        match pos {
+            Some(i) => {
+                inner.reports[i].tick = tick;
+                inner.stats.report_hits += 1;
+                Some(inner.reports[i].report.clone())
+            }
+            None => {
+                inner.stats.report_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an executed report. Evicts least-recently-used
+    /// entries past the count bound.
+    pub fn put_report(
+        &self,
+        dataset_hash: u64,
+        fingerprint: &str,
+        engine: &str,
+        report: Arc<AnalysisReport>,
+    ) {
+        if self.report_capacity == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let pos = inner.reports.iter().position(|e| {
+            e.dataset_hash == dataset_hash && e.engine == engine && e.fingerprint == fingerprint
+        });
+        if let Some(i) = pos {
+            inner.reports[i].report = report;
+            inner.reports[i].tick = tick;
+            return;
+        }
+        inner.reports.push(ReportEntry {
+            dataset_hash,
+            fingerprint: fingerprint.to_string(),
+            engine: engine.to_string(),
+            report,
+            tick,
+        });
+        while inner.reports.len() > self.report_capacity {
+            let oldest = inner
+                .reports
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(i, _)| i)
+                .expect("non-empty by the loop guard");
+            inner.reports.remove(oldest);
+            inner.stats.report_evictions += 1;
+        }
+    }
+
+    /// Look up a built distance store by `(dataset hash, standardize,
+    /// metric token, layout)`. A hit returns the same `Arc` that was
+    /// inserted.
+    pub fn get_store(
+        &self,
+        dataset_hash: u64,
+        standardize: bool,
+        metric: &str,
+        kind: StorageKind,
+    ) -> Option<Arc<DistanceStore>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let pos = inner.stores.iter().position(|e| {
+            e.dataset_hash == dataset_hash
+                && e.standardize == standardize
+                && e.kind == kind
+                && e.metric == metric
+        });
+        match pos {
+            Some(i) => {
+                inner.stores[i].tick = tick;
+                inner.stats.store_hits += 1;
+                Some(inner.stores[i].store.clone())
+            }
+            None => {
+                inner.stats.store_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a built distance store. Only the in-RAM layouts are
+    /// accepted (see the module docs); an entry larger than the whole
+    /// byte budget is not inserted; least-recently-used entries are
+    /// evicted until the budget holds.
+    pub fn put_store(
+        &self,
+        dataset_hash: u64,
+        standardize: bool,
+        metric: &str,
+        store: Arc<DistanceStore>,
+    ) {
+        let kind = store.kind();
+        if !matches!(kind, StorageKind::Dense | StorageKind::Condensed) {
+            return;
+        }
+        let bytes = store.distance_bytes();
+        if self.store_budget_bytes == 0 || bytes > self.store_budget_bytes {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let pos = inner.stores.iter().position(|e| {
+            e.dataset_hash == dataset_hash
+                && e.standardize == standardize
+                && e.kind == kind
+                && e.metric == metric
+        });
+        if let Some(i) = pos {
+            inner.stores[i].store = store;
+            inner.stores[i].tick = tick;
+            return;
+        }
+        inner.stores.push(StoreEntry {
+            dataset_hash,
+            standardize,
+            metric: metric.to_string(),
+            kind,
+            store,
+            bytes,
+            tick,
+        });
+        inner.store_bytes += bytes;
+        while inner.store_bytes > self.store_budget_bytes {
+            let oldest = inner
+                .stores
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(i, _)| i)
+                .expect("budget exceeded implies entries exist");
+            let gone = inner.stores.remove(oldest);
+            inner.store_bytes -= gone.bytes;
+            inner.stats.store_evictions += 1;
+        }
+    }
+
+    /// Hit/miss/eviction counters so far.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{wire, Analysis};
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::engine::{BlockedEngine, DistanceEngine};
+    use crate::dissimilarity::Metric;
+
+    fn small_report() -> Arc<AnalysisReport> {
+        Arc::new(
+            Analysis::of(blobs(20, 2, 2, 0.4, 3).points)
+                .plan()
+                .unwrap()
+                .execute(&BlockedEngine)
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn report_hits_return_the_identical_arc() {
+        let cache = AnalysisCache::new(4, 0);
+        let report = small_report();
+        assert!(cache.get_report(1, "fp", "blocked").is_none());
+        cache.put_report(1, "fp", "blocked", report.clone());
+        let hit = cache.get_report(1, "fp", "blocked").unwrap();
+        assert!(Arc::ptr_eq(&hit, &report));
+        // any key component mismatch is a miss
+        assert!(cache.get_report(2, "fp", "blocked").is_none());
+        assert!(cache.get_report(1, "fp2", "blocked").is_none());
+        assert!(cache.get_report(1, "fp", "naive").is_none());
+        let stats = cache.stats();
+        assert_eq!(stats.report_hits, 1);
+        assert_eq!(stats.report_misses, 4);
+    }
+
+    #[test]
+    fn report_lru_evicts_the_least_recently_used() {
+        let cache = AnalysisCache::new(2, 0);
+        let report = small_report();
+        cache.put_report(1, "fp", "e", report.clone());
+        cache.put_report(2, "fp", "e", report.clone());
+        // touch 1 so 2 is the LRU when 3 arrives
+        assert!(cache.get_report(1, "fp", "e").is_some());
+        cache.put_report(3, "fp", "e", report);
+        assert!(cache.get_report(1, "fp", "e").is_some());
+        assert!(cache.get_report(2, "fp", "e").is_none());
+        assert!(cache.get_report(3, "fp", "e").is_some());
+        assert_eq!(cache.stats().report_evictions, 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_report_level() {
+        let cache = AnalysisCache::new(0, 0);
+        cache.put_report(1, "fp", "e", small_report());
+        assert!(cache.get_report(1, "fp", "e").is_none());
+    }
+
+    #[test]
+    fn store_hits_key_on_content_metric_and_layout() {
+        let pts = blobs(30, 2, 2, 0.4, 5).points;
+        let h = wire::hash_points(&pts);
+        let dense = Arc::new(
+            BlockedEngine
+                .build_storage(&pts, Metric::Euclidean, StorageKind::Dense)
+                .unwrap(),
+        );
+        let cache = AnalysisCache::new(0, 1 << 20);
+        cache.put_store(h, true, "euclidean", dense.clone());
+        let hit = cache.get_store(h, true, "euclidean", StorageKind::Dense).unwrap();
+        assert!(Arc::ptr_eq(&hit, &dense));
+        // layout, metric, flag, and content are all part of the key
+        assert!(cache.get_store(h, true, "euclidean", StorageKind::Condensed).is_none());
+        assert!(cache.get_store(h, true, "manhattan", StorageKind::Dense).is_none());
+        assert!(cache.get_store(h, false, "euclidean", StorageKind::Dense).is_none());
+        assert!(cache.get_store(h ^ 1, true, "euclidean", StorageKind::Dense).is_none());
+    }
+
+    #[test]
+    fn store_level_bounds_resident_bytes_and_rejects_spilled_layouts() {
+        let pts = blobs(30, 2, 2, 0.4, 6).points;
+        let dense = Arc::new(
+            BlockedEngine
+                .build_storage(&pts, Metric::Euclidean, StorageKind::Dense)
+                .unwrap(),
+        );
+        let bytes = dense.distance_bytes();
+        assert_eq!(bytes, 30 * 30 * 8);
+        // a budget of exactly two dense stores holds two, then evicts
+        let cache = AnalysisCache::new(0, 2 * bytes);
+        cache.put_store(1, true, "euclidean", dense.clone());
+        cache.put_store(2, true, "euclidean", dense.clone());
+        cache.put_store(3, true, "euclidean", dense.clone());
+        assert!(cache.get_store(1, true, "euclidean", StorageKind::Dense).is_none());
+        assert!(cache.get_store(2, true, "euclidean", StorageKind::Dense).is_some());
+        assert!(cache.get_store(3, true, "euclidean", StorageKind::Dense).is_some());
+        assert_eq!(cache.stats().store_evictions, 1);
+        // an entry over the whole budget is not inserted at all
+        let tiny = AnalysisCache::new(0, bytes - 1);
+        tiny.put_store(9, true, "euclidean", dense.clone());
+        assert!(tiny.get_store(9, true, "euclidean", StorageKind::Dense).is_none());
+        assert_eq!(tiny.stats().store_evictions, 0);
+        // spilled layouts are never cached (contended LRU + file lifetime)
+        let sharded = Arc::new(
+            BlockedEngine
+                .build_storage(&pts, Metric::Euclidean, StorageKind::ShardedSquare)
+                .unwrap(),
+        );
+        cache.put_store(4, true, "euclidean", sharded);
+        assert!(cache
+            .get_store(4, true, "euclidean", StorageKind::ShardedSquare)
+            .is_none());
+    }
+}

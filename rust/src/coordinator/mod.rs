@@ -9,12 +9,20 @@
 //!   (backpressure: a full queue rejects or blocks, never grows unbounded);
 //! * [`service`] — worker pool executing VAT jobs against a shared
 //!   [`crate::dissimilarity::engine::DistanceEngine`];
+//! * [`admission`] — process-wide RAM/disk budget ledger: jobs are charged
+//!   their resolved storage footprint at admission and released on
+//!   completion, so concurrent workers can never oversubscribe the host;
+//! * [`cache`] — content-addressed cache over the wire spine's dataset
+//!   hashes and plan fingerprints: whole reports and built distance
+//!   stores are reused across identical requests;
 //! * [`streaming`] — incremental VAT over an arriving point stream with
 //!   windowed eviction (paper §5.2 "Streaming VAT" future work);
 //! * [`pipeline`] — the tendency-informed auto-clustering pipeline (paper
 //!   §5.2 "Pipeline Integration": VAT/Hopkins decide *whether* and *how*
 //!   to cluster).
 
+pub mod admission;
+pub mod cache;
 pub mod pipeline;
 pub mod queue;
 pub mod service;

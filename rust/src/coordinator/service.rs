@@ -6,16 +6,36 @@
 //! threads themselves, so the O(n²) Prim sweeps parallelize across jobs
 //! while the distance stage is funneled through whichever engine the
 //! deployment chose.
+//!
+//! Two coordinator-wide facilities sit in front of every job
+//! ([`execute_job_with`]):
+//!
+//! * the **content-addressed cache** ([`AnalysisCache`]) — keyed by the
+//!   wire spine's dataset hash + canonical plan fingerprint, it returns a
+//!   previously executed report outright, or reuses a previously built
+//!   distance store for a different plan over the same data;
+//! * the **admission ledger** ([`BudgetLedger`]) — each job is charged its
+//!   resolved storage footprint before executing and released after, so N
+//!   workers can never oversubscribe the configured RAM/disk budgets. A
+//!   job whose pinned layout exceeds the RAM budget is first *degraded* to
+//!   `StoragePolicy::Auto` under that budget (exact tiers only — output
+//!   stays bitwise identical), then queued until it fits.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
+use crate::analysis::{
+    approx_resident_bytes, wire, AccessProfile, AnalysisReport, StoragePolicy,
+};
 use crate::config::ServiceConfig;
+use crate::coordinator::admission::BudgetLedger;
+use crate::coordinator::cache::AnalysisCache;
 use crate::coordinator::queue::{BoundedQueue, PushError};
 use crate::coordinator::stats::ServiceStats;
 use crate::coordinator::{JobOptions, VatJob, VatJobOutput};
 use crate::data::Points;
 use crate::dissimilarity::engine::DistanceEngine;
+use crate::dissimilarity::StorageKind;
 use crate::error::{Error, Result};
 
 /// A submitted job's completion channel.
@@ -34,6 +54,8 @@ pub struct VatService {
     next_id: AtomicU64,
     engine_name: &'static str,
     stats: ServiceStats,
+    cache: Arc<AnalysisCache>,
+    ledger: Arc<BudgetLedger>,
 }
 
 impl VatService {
@@ -42,16 +64,31 @@ impl VatService {
         let queue: Arc<BoundedQueue<WorkItem>> = BoundedQueue::new(config.queue_depth);
         let engine_name = engine.name();
         let stats = ServiceStats::new();
+        let cache = Arc::new(AnalysisCache::new(
+            config.cache_reports,
+            config.cache_store_bytes,
+        ));
+        let ledger = Arc::new(BudgetLedger::new(
+            config.ram_budget_bytes,
+            config.disk_budget_bytes,
+        ));
         let workers = (0..config.workers.max(1))
             .map(|w| {
                 let queue = queue.clone();
                 let engine = engine.clone();
                 let stats = stats.clone();
+                let cache = cache.clone();
+                let ledger = ledger.clone();
                 std::thread::Builder::new()
                     .name(format!("vat-worker-{w}"))
                     .spawn(move || {
                         while let Some(item) = queue.pop() {
-                            let out = execute_job(engine.as_ref(), item.job);
+                            let out = execute_job_with(
+                                engine.as_ref(),
+                                item.job,
+                                Some(&cache),
+                                Some(&ledger),
+                            );
                             match &out {
                                 Ok(o) => stats.on_complete(o.t_distance_s, o.t_order_s),
                                 Err(_) => stats.on_fail(),
@@ -68,12 +105,24 @@ impl VatService {
             next_id: AtomicU64::new(1),
             engine_name,
             stats,
+            cache,
+            ledger,
         }
     }
 
     /// Live service metrics (counters + latency histograms).
     pub fn stats(&self) -> &ServiceStats {
         &self.stats
+    }
+
+    /// The pool's content-addressed cache (hit/miss stats, shared reuse).
+    pub fn cache(&self) -> &AnalysisCache {
+        &self.cache
+    }
+
+    /// The pool's admission ledger (budget gauges and counters).
+    pub fn ledger(&self) -> &BudgetLedger {
+        &self.ledger
     }
 
     /// Engine the pool runs on.
@@ -173,26 +222,140 @@ pub enum SubmitError {
 /// distance → VAT → iVAT → detection → Hopkins exactly once per requested
 /// stage on the job's storage layout (zero-copy views throughout; only
 /// `keep_matrix` materializes `R*`), and the typed report maps back onto
-/// the wire-stable [`VatJobOutput`].
+/// the wire-stable [`VatJobOutput`]. Equivalent to [`execute_job_with`]
+/// with no cache and no ledger.
 ///
 /// [`AnalysisPlan::execute`]: crate::analysis::AnalysisPlan::execute
 pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOutput> {
-    let report = job.options.into_plan(job.points, job.id)?.execute(engine)?;
+    execute_job_with(engine, job, None, None)
+}
+
+/// Execute one job through the coordinator facilities: report-cache
+/// lookup, store reuse, budget-driven degradation, and ledger admission
+/// (each optional). The service workers run every job through here.
+pub fn execute_job_with(
+    engine: &dyn DistanceEngine,
+    job: VatJob,
+    cache: Option<&AnalysisCache>,
+    ledger: Option<&BudgetLedger>,
+) -> Result<VatJobOutput> {
+    let job_id = job.id;
+    let n = job.points.n();
+    let knn_k = job.options.knn_k;
+    let standardize = job.options.standardize;
+    let metric_token = wire::metric_token(job.options.metric);
+    let base_shard = job.options.shard.clone();
+    let mut policy = StoragePolicy::Fixed(job.options.storage);
+    let dataset_hash = wire::hash_points(&job.points);
+
+    let mut plan = job.options.into_plan(job.points, job_id)?;
+
+    // every non-approx service job re-reads the permuted raw image (the
+    // insight darkness scan), so footprint estimates use the permuted
+    // profile — the same one the executor derives for these stages
+    let access = AccessProfile::permuted();
+    let ram_budget = ledger.map_or(0, BudgetLedger::ram_budget);
+
+    // degrade-instead-of-OOM: a pinned layout that exceeds the global RAM
+    // budget is rewritten to `Auto` under that budget before admission.
+    // Exact tiers are bitwise-identical, and these plans always read the
+    // raw image (insight), which keeps `Auto` off the approximate tier —
+    // only the footprint changes.
+    if knn_k.is_none() && ram_budget > 0 {
+        let resident = policy
+            .resolve_for(n, access, &base_shard)
+            .resident_bytes(n);
+        if resident > ram_budget {
+            policy = StoragePolicy::Auto {
+                memory_budget_bytes: ram_budget,
+            };
+            plan = plan.degrade_storage(policy.clone())?;
+            if let Some(l) = ledger {
+                l.note_degraded();
+            }
+        }
+    }
+
+    // the canonical plan fingerprint + dataset content hash address both
+    // cache levels (hopkins jobs seed by job id, so their fingerprints
+    // never falsely collide across jobs)
+    let fingerprint = wire::PlanWire::from_plan(&plan).to_json();
+    if let Some(c) = cache {
+        if let Some(hit) = c.get_report(dataset_hash, &fingerprint, engine.name()) {
+            return Ok(output_of(job_id, &hit));
+        }
+        // a different plan over the same data can still reuse the built
+        // distance buffer (in-RAM layouts only; the executor re-checks
+        // n and layout before accepting the injection)
+        if knn_k.is_none() {
+            let kind = policy.resolve_for(n, access, &base_shard).kind;
+            if matches!(kind, StorageKind::Dense | StorageKind::Condensed) {
+                if let Some(store) =
+                    c.get_store(dataset_hash, standardize, &metric_token, kind)
+                {
+                    plan = plan.with_prebuilt(store);
+                }
+            }
+        }
+    }
+
+    // charge the resolved footprint for the whole execution; the ticket
+    // releases it (and wakes queued admissions) when the job finishes
+    let (ram_bytes, disk_bytes) = match knn_k {
+        Some(k) => {
+            let k_eff = StoragePolicy::Approx { k }.approx_k(n).unwrap_or(1);
+            (approx_resident_bytes(n, k_eff), 0)
+        }
+        None => {
+            let d = policy.resolve_for(n, access, &base_shard);
+            (d.resident_bytes(n), d.disk_bytes(n))
+        }
+    };
+    let ticket = ledger.map(|l| l.admit(ram_bytes, disk_bytes));
+    let report = plan.execute(engine);
+    drop(ticket);
+    let report = report?;
+
+    match cache {
+        Some(c) => {
+            if knn_k.is_none() {
+                if let Some(store) = &report.storage {
+                    // put_store itself rejects the spilled layouts
+                    c.put_store(
+                        dataset_hash,
+                        report.plan.standardize,
+                        &wire::metric_token(report.plan.metric),
+                        store.clone(),
+                    );
+                }
+            }
+            let report = Arc::new(report);
+            c.put_report(dataset_hash, &fingerprint, engine.name(), report.clone());
+            Ok(output_of(job_id, &report))
+        }
+        None => Ok(output_of(job_id, &report)),
+    }
+}
+
+/// Map a report onto the wire-stable [`VatJobOutput`], echoing the
+/// submitting job's id (a cached report may have been produced by an
+/// earlier job).
+fn output_of(id: u64, report: &AnalysisReport) -> VatJobOutput {
     let blocks = report.blocks.clone().unwrap_or_default();
     let k_estimate = blocks.len();
-    Ok(VatJobOutput {
-        id: job.id,
+    VatJobOutput {
+        id,
         order: report.vat.order.clone(),
         blocks,
         k_estimate,
         hopkins: report.hopkins,
-        insight: report.insight.unwrap_or_default(),
-        reordered: report.reordered,
+        insight: report.insight.clone().unwrap_or_default(),
+        reordered: report.reordered.clone(),
         t_distance_s: report.timings.distance_s,
         t_order_s: report.timings.vat_s + report.timings.ivat_s + report.timings.detect_s,
         engine: report.plan.engine,
         storage: report.plan.storage,
-    })
+    }
 }
 
 #[cfg(test)]
@@ -364,6 +527,113 @@ mod tests {
             .unwrap());
         assert_eq!(out_l2.order, ref_l2.order);
         assert_eq!(out_l1.order, ref_l1.order);
+    }
+
+    #[test]
+    fn identical_jobs_hit_the_report_cache() {
+        // hopkins stays off: its probe seed is the job id, which
+        // (correctly) gives every hopkins job a distinct fingerprint
+        let service = svc(1, 8);
+        let ds = blobs(60, 2, 3, 0.35, 130);
+        let opts = JobOptions {
+            hopkins: false,
+            ivat: true,
+            ..Default::default()
+        };
+        let (_, t1) = service.submit(ds.points.clone(), opts.clone()).unwrap();
+        let a = t1.recv().unwrap().unwrap();
+        let (_, t2) = service.submit(ds.points, opts).unwrap();
+        let b = t2.recv().unwrap().unwrap();
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(a.insight, b.insight);
+        let stats = service.cache().stats();
+        assert!(stats.report_hits >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn store_cache_reuses_distance_buffers_across_different_plans() {
+        let service = svc(1, 8);
+        let ds = blobs(50, 2, 2, 0.4, 131);
+        // same data + metric + layout, different stage sets: distinct plan
+        // fingerprints (no report hit), same store key (buffer reused)
+        let first = JobOptions {
+            hopkins: false,
+            ..Default::default()
+        };
+        let second = JobOptions {
+            hopkins: false,
+            ivat: true,
+            ..Default::default()
+        };
+        let (_, t1) = service.submit(ds.points.clone(), first).unwrap();
+        t1.recv().unwrap().unwrap();
+        let (_, t2) = service.submit(ds.points, second).unwrap();
+        let out = t2.recv().unwrap().unwrap();
+        assert_eq!(out.order.len(), 50);
+        let stats = service.cache().stats();
+        assert_eq!(stats.report_hits, 0, "{stats:?}");
+        assert!(stats.store_hits >= 1, "{stats:?}");
+        // the reused build skipped the distance stage wholesale
+        assert_eq!(out.t_distance_s, 0.0);
+    }
+
+    #[test]
+    fn ram_budget_degrades_pinned_layouts_bitwise_identically() {
+        let ds = blobs(120, 2, 3, 0.35, 132);
+        let opts = JobOptions {
+            hopkins: false,
+            ..Default::default()
+        };
+        // reference: unbudgeted pool runs the pinned dense layout
+        let unbudgeted = svc(1, 4);
+        let (_, t) = unbudgeted.submit(ds.points.clone(), opts.clone()).unwrap();
+        let want = t.recv().unwrap().unwrap();
+        assert_eq!(want.storage, StorageKind::Dense);
+        // 60_000 B cannot hold dense 120² (115_200 B) but holds the
+        // condensed triangle (57_120 B): the job degrades, not OOMs
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            ram_budget_bytes: 60_000,
+            ..Default::default()
+        };
+        let budgeted = VatService::start(&cfg, Arc::new(BlockedEngine));
+        let (_, t) = budgeted.submit(ds.points, opts).unwrap();
+        let got = t.recv().unwrap().unwrap();
+        assert_eq!(got.storage, StorageKind::Condensed);
+        // the exact tiers are bitwise identical — only the footprint moved
+        assert_eq!(got.order, want.order);
+        assert_eq!(got.blocks, want.blocks);
+        assert_eq!(got.insight, want.insight);
+        let snap = budgeted.ledger().snapshot();
+        assert_eq!(snap.degraded, 1);
+        assert!(snap.ram_peak <= 60_000, "{snap:?}");
+    }
+
+    #[test]
+    fn ledger_peak_never_exceeds_the_global_budget() {
+        // two workers, two dense 80-point jobs (51_200 B resident each)
+        // against a 60_000 B budget: each fits alone, both together do
+        // not — the ledger must serialize them, whatever the timing
+        let cfg = ServiceConfig {
+            workers: 2,
+            queue_depth: 8,
+            ram_budget_bytes: 60_000,
+            ..Default::default()
+        };
+        let service = VatService::start(&cfg, Arc::new(BlockedEngine));
+        let a = blobs(80, 2, 3, 0.3, 133);
+        let b = blobs(80, 2, 3, 0.3, 134);
+        let (_, ta) = service.submit(a.points, JobOptions::default()).unwrap();
+        let (_, tb) = service.submit(b.points, JobOptions::default()).unwrap();
+        ta.recv().unwrap().unwrap();
+        tb.recv().unwrap().unwrap();
+        let snap = service.ledger().snapshot();
+        assert!(snap.ram_peak <= 60_000, "oversubscribed: {snap:?}");
+        assert!(snap.ram_peak >= 51_200, "nothing was ever charged: {snap:?}");
+        assert_eq!(snap.ram_used, 0);
+        assert_eq!(snap.degraded, 0);
     }
 
     #[test]

@@ -18,7 +18,8 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::analysis::{Analysis, StoragePolicy};
+use crate::analysis::{wire, Analysis, AnalysisReport, StoragePolicy};
+use crate::coordinator::cache::AnalysisCache;
 use crate::data::Points;
 use crate::dissimilarity::condensed::CondensedMatrix;
 use crate::dissimilarity::engine::BlockedEngine;
@@ -115,8 +116,17 @@ pub struct StreamingVat {
     rows: VecDeque<Vec<f64>>,
     /// Flat (w x w) distance matrix over `rows`, kept in sync by push/evict.
     dist: Vec<f64>,
-    dirty: bool,
-    cached: Option<(VatResult, Option<Arc<DistanceStore>>, Vec<Block>)>,
+    /// Content-addressed snapshot cache: reports keyed by the window hash,
+    /// so a clean-window poll (or a window whose *contents* match a recent
+    /// one) reuses the cached report — same `Arc`s, no rebuild. Capacity 2
+    /// keeps the previous window warm for monitors that oscillate.
+    cache: AnalysisCache,
+    /// FNV-1a hash of the current window contents, lazily computed and
+    /// invalidated (`None`) by every push/evict.
+    window_hash: Option<u64>,
+    /// Config-derived cache key component: snapshots from different
+    /// metric/layout/ordering/tier configs must never alias.
+    fingerprint: String,
     total_seen: u64,
 }
 
@@ -132,13 +142,26 @@ impl StreamingVat {
         if config.knn_k == Some(0) {
             return Err(Error::InvalidArg("knn_k must be >= 1".into()));
         }
+        let fingerprint = match config.knn_k {
+            Some(k) => format!(
+                "approx:k={k};metric={}",
+                wire::metric_token(config.metric)
+            ),
+            None => format!(
+                "exact:kind={:?};ordering={:?};metric={}",
+                config.snapshot_storage,
+                config.ordering,
+                wire::metric_token(config.metric)
+            ),
+        };
         Ok(Self {
             config,
             d,
             rows: VecDeque::new(),
             dist: Vec::new(),
-            dirty: true,
-            cached: None,
+            cache: AnalysisCache::new(2, 0),
+            window_hash: None,
+            fingerprint,
             total_seen: 0,
         })
     }
@@ -186,7 +209,7 @@ impl StreamingVat {
         self.dist = next;
         self.rows.push_back(point.to_vec());
         self.total_seen += 1;
-        self.dirty = true;
+        self.window_hash = None;
         Ok(())
     }
 
@@ -202,7 +225,7 @@ impl StreamingVat {
         }
         self.dist = next;
         self.rows.pop_front();
-        self.dirty = true;
+        self.window_hash = None;
     }
 
     /// Current distance matrix (clone).
@@ -210,11 +233,35 @@ impl StreamingVat {
         DistanceMatrix::from_flat(self.dist.clone(), self.rows.len())
     }
 
-    /// Lazily reorder and summarize the window. O(w²) when dirty; when the
-    /// window is unchanged since the last call the snapshot is an O(w)
-    /// clone of the cached permutation/MST/blocks plus an `Arc` handle to
-    /// the storage — the distance buffer is never copied and no reordered
-    /// matrix is ever materialized.
+    /// FNV-1a content hash of the current window (lazily computed; every
+    /// push/evict invalidates it). This is the snapshot cache key, so two
+    /// windows with identical contents — not merely "unchanged since last
+    /// poll" — share one reorder.
+    fn window_hash_now(&mut self) -> u64 {
+        if let Some(h) = self.window_hash {
+            return h;
+        }
+        let mut h = wire::Fnv1a::new();
+        h.write(b"fast-vat/stream-window");
+        h.write_u64(self.rows.len() as u64);
+        h.write_u64(self.d as u64);
+        for row in &self.rows {
+            for &v in row {
+                h.write_f64(v);
+            }
+        }
+        let h = h.finish();
+        self.window_hash = Some(h);
+        h
+    }
+
+    /// Lazily reorder and summarize the window. O(w²) on a cache miss;
+    /// when the window's *content hash* matches a cached snapshot the
+    /// result is an O(w) clone of the cached permutation/MST/blocks plus
+    /// an `Arc` handle to the same storage — the distance buffer is never
+    /// copied and no reordered matrix is ever materialized. Reuse goes
+    /// through the same content-addressed [`AnalysisCache`] the service
+    /// uses, keyed by window hash + config fingerprint.
     pub fn snapshot(&mut self) -> Result<StreamSnapshot> {
         let n = self.rows.len();
         if n < 2 {
@@ -222,34 +269,26 @@ impl StreamingVat {
                 "snapshot needs >= 2 points, have {n}"
             )));
         }
-        if self.dirty || self.cached.is_none() {
-            if let Some(k) = self.config.knn_k {
-                // matrix-free tier: reorder the window straight off the
-                // points (the incremental window buffer is not consulted),
-                // detect blocks over the iVAT transform, and carry no
-                // distance storage in the snapshot
-                let points = Points::from_rows(self.rows.make_contiguous())?;
-                let report = Analysis::of(points)
-                    .metric(self.config.metric)
-                    .standardize(false)
-                    .storage(StoragePolicy::Approx { k })
-                    .ivat(true)
-                    .insight(false)
-                    .detect_blocks(BlockDetector::default())
-                    .plan()?
-                    .execute(&BlockedEngine)?;
-                let blocks = report.blocks.unwrap_or_default();
-                self.cached = Some((report.vat, None, blocks));
-                self.dirty = false;
-                let (v, store, blocks) = self.cached.clone().expect("cached above");
-                return Ok(StreamSnapshot {
-                    n,
-                    vat: v,
-                    storage: store,
-                    blocks,
-                    total_seen: self.total_seen,
-                });
-            }
+        let hash = self.window_hash_now();
+        if let Some(report) = self.cache.get_report(hash, &self.fingerprint, "streaming") {
+            return Ok(snapshot_of(n, self.total_seen, &report));
+        }
+        let report = if let Some(k) = self.config.knn_k {
+            // matrix-free tier: reorder the window straight off the
+            // points (the incremental window buffer is not consulted),
+            // detect blocks over the iVAT transform, and carry no
+            // distance storage in the snapshot
+            let points = Points::from_rows(self.rows.make_contiguous())?;
+            Analysis::of(points)
+                .metric(self.config.metric)
+                .standardize(false)
+                .storage(StoragePolicy::Approx { k })
+                .ivat(true)
+                .insight(false)
+                .detect_blocks(BlockDetector::default())
+                .plan()?
+                .execute(&BlockedEngine)?
+        } else {
             let store = Arc::new(match self.config.snapshot_storage {
                 StorageKind::Dense => DistanceStore::Dense(self.distance_matrix()?),
                 StorageKind::Condensed => {
@@ -282,24 +321,29 @@ impl StreamingVat {
             });
             // the reorder + detection stages run through the one request
             // API over the already-built window storage (`Analysis::over`
-            // skips the distance stage and echoes back the same Arc)
-            let report = Analysis::over(store.clone())
+            // skips the distance stage and echoes back the same Arc, which
+            // the cached report then shares with every clean-window poll)
+            Analysis::over(store)
                 .ordering(self.config.ordering)
                 .detect_blocks(BlockDetector::default())
                 .plan()?
-                .execute_precomputed()?;
-            let blocks = report.blocks.unwrap_or_default();
-            self.cached = Some((report.vat, Some(store), blocks));
-            self.dirty = false;
-        }
-        let (v, store, blocks) = self.cached.clone().expect("cached above");
-        Ok(StreamSnapshot {
-            n,
-            vat: v,
-            storage: store,
-            blocks,
-            total_seen: self.total_seen,
-        })
+                .execute_precomputed()?
+        };
+        let report = Arc::new(report);
+        self.cache
+            .put_report(hash, &self.fingerprint, "streaming", report.clone());
+        Ok(snapshot_of(n, self.total_seen, &report))
+    }
+}
+
+/// Project a cached [`AnalysisReport`] onto the streaming snapshot shape.
+fn snapshot_of(n: usize, total_seen: u64, report: &AnalysisReport) -> StreamSnapshot {
+    StreamSnapshot {
+        n,
+        vat: report.vat.clone(),
+        storage: report.storage.clone(),
+        blocks: report.blocks.clone().unwrap_or_default(),
+        total_seen,
     }
 }
 

@@ -1,0 +1,593 @@
+//! Minimal hand-rolled JSON: one escaping and number-formatting discipline
+//! for every JSON surface in the crate.
+//!
+//! Before this module the crate had three independent JSON emitters — the
+//! `bench-ordering` writer, the `bench-approx` writer, and ad-hoc string
+//! pasting — each with its own quoting and float-formatting rules. They now
+//! all route through here, as does the [`crate::analysis::wire`] codec
+//! (versioned plans, replay manifests), which additionally needs the
+//! parser. No serde: the crate is dependency-free by policy, and the JSON
+//! subset we speak (RFC 8259, no extensions) fits in a few hundred lines.
+//!
+//! Numbers are stored as their **raw token** ([`Json::Num`]) rather than an
+//! `f64`: `u64` seeds above 2⁵³ survive a round-trip losslessly, and what
+//! you emit is byte-for-byte what you built. Use the typed constructors
+//! ([`Json::u64`], [`Json::f64`], [`Json::f64_fixed`]) — `Json::f64` uses
+//! Rust's shortest round-trip `Display`, so every finite `f64` parses back
+//! bit-identical.
+
+use std::fmt::Write as _;
+
+/// A parsed or under-construction JSON value.
+///
+/// Objects preserve insertion order (`Vec`, not a map): emission is
+/// deterministic, which the wire codec's canonical-bytes contract and the
+/// golden fixtures rely on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A number, kept as its raw token (always a valid JSON number).
+    Num(String),
+    /// A string (unescaped content).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object: ordered key → value pairs.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// A string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// A `u64` number — lossless for the full range (no f64 round-trip).
+    pub fn u64(v: u64) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    /// A `usize` number.
+    pub fn usize(v: usize) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    /// An `f64` in shortest round-trip form (`Display`): every finite
+    /// value parses back bit-identical. Non-finite values become `null`
+    /// (JSON has no NaN/inf).
+    pub fn f64(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(format!("{v}"))
+        } else {
+            Json::Null
+        }
+    }
+
+    /// An `f64` with fixed decimals (the benchmark writers' `{:.6}`
+    /// discipline). Non-finite values become `null`.
+    pub fn f64_fixed(v: f64, decimals: usize) -> Json {
+        if v.is_finite() {
+            Json::Num(format!("{v:.decimals$}"))
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Borrow the string content, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The boolean, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The number as `f64`, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(t) => t.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// The number as `u64` — only for integer tokens (no `.`/exponent),
+    /// so large seeds never round-trip through f64.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(t) => t.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// The number as `usize` (integer tokens only).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(t) => t.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Borrow the elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Borrow the fields, if this is an object.
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Look up a field by key, if this is an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(v) => v.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Pretty-print with `indent` spaces per level (no trailing newline).
+    pub fn to_pretty(&self, indent: usize) -> String {
+        let mut out = String::new();
+        self.write(&mut out, indent, 0);
+        out
+    }
+
+    /// Single-line emission (no whitespace beyond string content).
+    pub fn to_compact(&self) -> String {
+        self.to_pretty(0)
+    }
+
+    fn write(&self, out: &mut String, indent: usize, level: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(t) => out.push_str(t),
+            Json::Str(s) => out.push_str(&quote(s)),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, level + 1);
+                    item.write(out, indent, level + 1);
+                }
+                newline_indent(out, indent, level);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, level + 1);
+                    out.push_str(&quote(k));
+                    out.push(':');
+                    if indent > 0 {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, level + 1);
+                }
+                newline_indent(out, indent, level);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document (rejects trailing garbage and
+    /// duplicate object keys). Errors carry the byte offset.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing characters at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+}
+
+fn newline_indent(out: &mut String, indent: usize, level: usize) {
+    if indent > 0 {
+        out.push('\n');
+        for _ in 0..indent * level {
+            out.push(' ');
+        }
+    }
+}
+
+/// Escape and quote a string as a JSON string token (quotes included).
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Fixed-decimal float token (the benchmark writers' discipline): `{:.N}`
+/// for finite values, `null` for NaN/±inf.
+pub fn fmt_fixed(v: f64, decimals: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.decimals$}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// [`fmt_fixed`] lifted over `Option`: `None` emits `null`.
+pub fn fmt_opt_fixed(v: Option<f64>, decimals: usize) -> String {
+    match v {
+        Some(v) => fmt_fixed(v, decimals),
+        None => "null".to_string(),
+    }
+}
+
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(format!("unexpected '{}' at byte {}", c as char, self.pos)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            if fields.iter().any(|(k, _)| *k == key) {
+                return Err(format!("duplicate key \"{key}\" at byte {}", self.pos));
+            }
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        let mut run = self.pos; // start of the current raw (escape-free) run
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    out.push_str(self.raw_run(run)?);
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    out.push_str(self.raw_run(run)?);
+                    self.pos += 1;
+                    out.push(self.escape()?);
+                    run = self.pos;
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(format!("raw control byte in string at {}", self.pos));
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    fn raw_run(&self, from: usize) -> Result<&str, String> {
+        std::str::from_utf8(&self.bytes[from..self.pos])
+            .map_err(|_| format!("invalid UTF-8 in string at byte {from}"))
+    }
+
+    fn escape(&mut self) -> Result<char, String> {
+        let c = self
+            .peek()
+            .ok_or_else(|| "unterminated escape".to_string())?;
+        self.pos += 1;
+        Ok(match c {
+            b'"' => '"',
+            b'\\' => '\\',
+            b'/' => '/',
+            b'b' => '\u{08}',
+            b'f' => '\u{0c}',
+            b'n' => '\n',
+            b'r' => '\r',
+            b't' => '\t',
+            b'u' => {
+                let hi = self.hex4()?;
+                let code = if (0xD800..0xDC00).contains(&hi) {
+                    // surrogate pair: a low surrogate must follow
+                    if self.bytes[self.pos..].starts_with(b"\\u") {
+                        self.pos += 2;
+                        let lo = self.hex4()?;
+                        if !(0xDC00..0xE000).contains(&lo) {
+                            return Err(format!("invalid low surrogate at byte {}", self.pos));
+                        }
+                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                    } else {
+                        return Err(format!("lone surrogate at byte {}", self.pos));
+                    }
+                } else if (0xDC00..0xE000).contains(&hi) {
+                    return Err(format!("lone low surrogate at byte {}", self.pos));
+                } else {
+                    hi
+                };
+                char::from_u32(code)
+                    .ok_or_else(|| format!("invalid codepoint at byte {}", self.pos))?
+            }
+            c => return Err(format!("invalid escape '\\{}' at byte {}", c as char, self.pos)),
+        })
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self
+                .peek()
+                .ok_or_else(|| "unterminated \\u escape".to_string())?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| format!("invalid hex digit at byte {}", self.pos))?;
+            v = v * 16 + d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // int part: 0 | [1-9][0-9]*
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => self.digits(),
+            _ => return Err(format!("invalid number at byte {start}")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(format!("invalid number at byte {start}"));
+            }
+            self.digits();
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(format!("invalid number at byte {start}"));
+            }
+            self.digits();
+        }
+        let token = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("number tokens are ASCII")
+            .to_string();
+        Ok(Json::Num(token))
+    }
+
+    fn digits(&mut self) {
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_scalars() {
+        for text in ["null", "true", "false", "0", "-1", "3.5", "1e3", "\"hi\""] {
+            let v = Json::parse(text).unwrap();
+            assert_eq!(v.to_compact(), text, "{text}");
+        }
+    }
+
+    #[test]
+    fn u64_seeds_survive_above_f64_precision() {
+        let seed = u64::MAX - 1;
+        let v = Json::u64(seed);
+        let back = Json::parse(&v.to_compact()).unwrap();
+        assert_eq!(back.as_u64(), Some(seed));
+    }
+
+    #[test]
+    fn f64_shortest_roundtrip_is_bitexact() {
+        for v in [0.1, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -0.0, 2.5] {
+            let j = Json::f64(v);
+            let back = Json::parse(&j.to_compact()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+        assert_eq!(Json::f64(f64::NAN), Json::Null);
+    }
+
+    #[test]
+    fn pretty_layout_is_stable() {
+        let v = Json::Obj(vec![
+            ("a".into(), Json::usize(1)),
+            ("b".into(), Json::Arr(vec![Json::Bool(true), Json::Null])),
+            ("c".into(), Json::Obj(vec![])),
+        ]);
+        assert_eq!(
+            v.to_pretty(2),
+            "{\n  \"a\": 1,\n  \"b\": [\n    true,\n    null\n  ],\n  \"c\": {}\n}"
+        );
+    }
+
+    #[test]
+    fn escaping_and_unicode() {
+        let s = "q\"uo\\te\n\tπ\u{1}";
+        let q = quote(s);
+        assert_eq!(q, "\"q\\\"uo\\\\te\\n\\t\u{3c0}\\u0001\"");
+        let back = Json::parse(&q).unwrap();
+        assert_eq!(back.as_str(), Some(s));
+        // surrogate-pair escapes decode
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for text in [
+            "",
+            "{",
+            "{]",
+            "[1,]",
+            "{\"a\":1,}",
+            "{\"a\":1 \"b\":2}",
+            "01",
+            "1.",
+            "+1",
+            "nul",
+            "\"\\x\"",
+            "\"\\ud800\"",
+            "\"unterminated",
+            "{\"a\":1}x",
+            "{\"a\":1,\"a\":2}",
+        ] {
+            assert!(Json::parse(text).is_err(), "accepted: {text:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_formatting_matches_bench_discipline() {
+        assert_eq!(fmt_fixed(0.1234567, 6), "0.123457");
+        assert_eq!(fmt_fixed(f64::NAN, 6), "null");
+        assert_eq!(fmt_opt_fixed(None, 6), "null");
+        assert_eq!(fmt_opt_fixed(Some(2.0), 6), "2.000000");
+    }
+}

@@ -71,6 +71,7 @@ pub mod data;
 pub mod dissimilarity;
 pub mod error;
 pub mod hopkins;
+pub mod json;
 pub mod metrics;
 pub mod prng;
 pub mod runtime;

@@ -12,7 +12,10 @@
 
 use std::collections::HashMap;
 
-use fast_vat::analysis::{Analysis, SamplePolicy, StoragePolicy};
+use fast_vat::analysis::{
+    approx_resident_bytes, AccessProfile, Analysis, PlanWire, ReplayManifest, ReportWire,
+    SamplePolicy, StoragePolicy,
+};
 use fast_vat::config::ServiceConfig;
 use fast_vat::coordinator::pipeline::{auto_cluster, PipelineConfig};
 use fast_vat::coordinator::service::VatService;
@@ -39,7 +42,13 @@ USAGE:
                     [--storage dense|condensed|sharded|sharded-square|approx | --budget-mb N]
                     [--knn-k N] [--ordering prim|boruvka|auto] [--sample N] [--ivat]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
+                    [--plan-in plan.json] [--plan-out plan.json]
+                    [--manifest-out manifest.json]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
+  fast-vat plan     [same dataset/plan flags as vat | --plan-in plan.json]
+                    [--plan-out plan.json] [--json]
+  fast-vat replay   MANIFEST.json [DATA.csv | --input data.csv | --dataset NAME]
+                    [--out image.pgm] [--report-out report.json] [--artifacts DIR]
   fast-vat hopkins  [--input data.csv | --dataset NAME] [--runs N]
   fast-vat cluster  [--input data.csv | --dataset NAME] [--algo kmeans|dbscan|single-link]
                     [--k N | --eps F] [--min-pts N]
@@ -51,6 +60,8 @@ USAGE:
                     [--metric NAME] [--storage dense|condensed|sharded|sharded-square]
                     [--knn-k N] [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--ordering prim|boruvka|auto]
+                    [--ram-budget-mb N] [--disk-budget-mb N]
+                    [--cache-reports N] [--cache-store-mb N]
   fast-vat bench-ordering [--sizes N,N,...] [--budget-s F] [--seed N]
                     [--out BENCH_ordering.json]
   fast-vat bench-approx [--sizes N,N,...] [--budget-s F] [--seed N]
@@ -77,6 +88,20 @@ APPROX: --storage approx (or --knn-k alone) runs the matrix-free kNN tier:
   fidelity for speed and the report prints the measured neighbor recall.
   bench-approx times the approx tier against the exact matrix-free sweep
   and writes the checked-in BENCH_approx.json baseline.
+
+WIRE: every executed request is a versioned, serializable plan. --plan-out
+  writes the plan's canonical JSON (schema fast-vat/plan/v1); --plan-in
+  executes a plan file verbatim against the chosen dataset; --manifest-out
+  writes the finished run's replay manifest (plan + dataset content hash +
+  resolved tier + route + versions). `fast-vat replay manifest.json
+  data.csv` re-executes a manifest against the original data and verifies
+  the provenance chain — the deterministic pipeline reproduces order, MST,
+  iVAT, and rendered bytes bit-for-bit. `fast-vat plan` validates and
+  prints a plan (resolved tier, estimated bytes, stages) without executing.
+  serve keeps a content-addressed cache over the same hashes (--cache-reports
+  whole reports, --cache-store-mb built distance stores) and a global
+  admission ledger (--ram-budget-mb / --disk-budget-mb) that queues or
+  degrades jobs instead of oversubscribing the host.
 
 ORDERING: prim is the sequential O(n^2) sweep; boruvka reorders with a
   parallel Borůvka/merge MST build whose output is verified bitwise
@@ -171,25 +196,23 @@ fn shard_options(flags: &HashMap<String, String>) -> Result<ShardOptions> {
     })
 }
 
-fn cmd_vat(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["ivat"])?;
-    let ds = load_dataset(&flags)?;
-    let artifacts = flags
-        .get("artifacts")
-        .cloned()
-        .unwrap_or_else(|| "artifacts".into());
-    let engine = engine_by_name(
-        flags.get("engine").map(String::as_str).unwrap_or("blocked"),
-        &artifacts,
-    )?;
+/// Build the `vat` request from CLI flags (shared with `plan`, which
+/// validates and prints without executing). When `--plan-in` is given the
+/// plan file supplies every knob instead and the other plan-shaping flags
+/// are ignored — the wire format is the source of truth.
+fn vat_request(flags: &HashMap<String, String>, points: fast_vat::data::Points) -> Result<Analysis> {
+    if let Some(path) = flags.get("plan-in") {
+        let wire = PlanWire::from_json(&std::fs::read_to_string(path)?)?;
+        return Ok(wire.analysis_of(points));
+    }
     let metric = Metric::parse(
         flags.get("metric").map(String::as_str).unwrap_or("euclidean"),
     )?;
-    let shard = shard_options(&flags)?;
+    let shard = shard_options(flags)?;
     // --storage approx / --knn-k selects the matrix-free kNN tier;
     // --budget-mb hands the layout choice to the storage policy; --storage
     // pins it explicitly (the pre-policy behavior)
-    let knn_k = get_opt_usize(&flags, "knn-k")?;
+    let knn_k = get_opt_usize(flags, "knn-k")?;
     if flags.get("storage").map(String::as_str) == Some("approx") && knn_k.is_none() {
         return Err(Error::InvalidArg(
             "--storage approx needs a --knn-k neighbor count".into(),
@@ -208,17 +231,16 @@ fn cmd_vat(args: &[String]) -> Result<()> {
                 memory_budget_bytes,
             }
         }
-        (None, None) => StoragePolicy::Fixed(storage_kind(&flags)?),
+        (None, None) => StoragePolicy::Fixed(storage_kind(flags)?),
     };
 
     // the whole request is one plan: distance → VAT → iVAT → detection →
     // render, each stage exactly once, on the resolved storage tier
-    let (name, n, dim) = (ds.name, ds.points.n(), ds.points.d());
-    let mut request = Analysis::of(ds.points)
+    let mut request = Analysis::of(points)
         .metric(metric)
         .storage(policy)
         .shard(shard)
-        .ordering(ordering_strategy(&flags)?)
+        .ordering(ordering_strategy(flags)?)
         // the approx tier never materializes the raw distance image, so it
         // always goes through iVAT and skips the insight string
         .ivat(knn_k.is_some() || flags.contains_key("ivat"))
@@ -231,7 +253,22 @@ fn cmd_vat(args: &[String]) -> Result<()> {
             .map_err(|_| Error::InvalidArg("--sample must be an integer".into()))?;
         request = request.sample(SamplePolicy::Above(cap));
     }
-    let report = request.plan()?.execute(engine.as_ref())?;
+    Ok(request)
+}
+
+fn cmd_vat(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["ivat"])?;
+    let ds = load_dataset(&flags)?;
+    let artifacts = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let engine = engine_by_name(
+        flags.get("engine").map(String::as_str).unwrap_or("blocked"),
+        &artifacts,
+    )?;
+    let (name, n, dim) = (ds.name.clone(), ds.points.n(), ds.points.d());
+    let report = vat_request(&flags, ds.points)?.plan()?.execute(engine.as_ref())?;
 
     println!(
         "{name}: n={n} d={dim} engine={} storage={} ordering={} distance={:.4}s reorder={:.4}s",
@@ -264,14 +301,155 @@ fn cmd_vat(args: &[String]) -> Result<()> {
         );
     }
 
-    let img = report.image.as_ref().expect("render was requested");
+    // flag-built requests always render; a --plan-in plan may not
     if let Some(out) = flags.get("out") {
+        let img = report.image.as_ref().ok_or_else(|| {
+            Error::InvalidArg("--out: the plan did not render (stages.render=false)".into())
+        })?;
         write_pgm(img, out)?;
         println!("wrote {out}");
     }
     let ascii_side = get_usize(&flags, "ascii", 0)?;
     if ascii_side > 0 {
+        let img = report.image.as_ref().ok_or_else(|| {
+            Error::InvalidArg("--ascii: the plan did not render (stages.render=false)".into())
+        })?;
         println!("{}", to_ascii(img, ascii_side));
+    }
+    // wire spine: the executed plan and its replay manifest are both
+    // canonical JSON — `fast-vat replay` reproduces the run bit-for-bit
+    if let Some(out) = flags.get("plan-out") {
+        std::fs::write(out, report.manifest.plan.to_json())?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = flags.get("manifest-out") {
+        std::fs::write(out, report.manifest.to_json())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["ivat", "json"])?;
+    let ds = load_dataset(&flags)?;
+    let (name, n) = (ds.name.clone(), ds.points.n());
+    // validation IS the command: `.plan()` rejects bad knob combinations
+    // exactly as execution would
+    let plan = vat_request(&flags, ds.points)?.plan()?;
+    let wire = PlanWire::from_plan(&plan);
+    println!("{}: valid plan for {name} (n={n})", fast_vat::analysis::wire::PLAN_SCHEMA);
+    println!(
+        "  metric={} standardize={} ordering={:?} seed={}",
+        fast_vat::analysis::wire::metric_token(wire.metric),
+        wire.standardize,
+        wire.ordering,
+        wire.seed
+    );
+    let n_assessed = match wire.sample {
+        SamplePolicy::Above(cap) if n > cap => {
+            println!("  sample: sVAT maximin, {cap} of {n} points assessed");
+            cap
+        }
+        _ => n,
+    };
+    // mirror the executor's routing: the approx cutover only fires when
+    // the requested stages avoid the raw distance image, and the access
+    // profile decides whether spills pay the reorder-then-spill pass
+    let stages_ok = !wire.insight
+        && !wire.keep_matrix
+        && (wire.ivat || (!wire.render && wire.detector.is_none()));
+    match wire.storage.approx_k(n_assessed).filter(|_| stages_ok) {
+        Some(k) => println!(
+            "  resolved: approx kNN tier, k={k}, ~{} resident bytes, 0 disk",
+            approx_resident_bytes(n_assessed, k)
+        ),
+        None => {
+            let permuted = (wire.render && !wire.ivat)
+                || (wire.detector.is_some() && !wire.ivat)
+                || wire.insight
+                || wire.keep_matrix;
+            let profile = if permuted {
+                AccessProfile::permuted()
+            } else {
+                AccessProfile::sweep_only()
+            };
+            let d = wire.storage.resolve_for(n_assessed, profile, &wire.shard);
+            println!(
+                "  resolved: {} (reorder_spill={}), ~{} resident bytes, ~{} disk bytes",
+                d.kind.as_str(),
+                d.reorder_spill,
+                d.resident_bytes(n_assessed),
+                d.disk_bytes(n_assessed)
+            );
+        }
+    }
+    println!(
+        "  stages: ivat={} render={} keep_matrix={} insight={} detector={} hopkins_runs={}",
+        wire.ivat,
+        wire.render,
+        wire.keep_matrix,
+        wire.insight,
+        wire.detector.is_some(),
+        wire.hopkins_runs
+    );
+    if flags.contains_key("json") {
+        print!("{}", wire.to_json());
+    }
+    if let Some(out) = flags.get("plan-out") {
+        std::fs::write(out, wire.to_json())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_replay(args: &[String]) -> Result<()> {
+    // positionals first: `fast-vat replay manifest.json [data.csv]`
+    let split = args
+        .iter()
+        .position(|a| a.starts_with("--"))
+        .unwrap_or(args.len());
+    let (positional, rest) = args.split_at(split);
+    let flags = parse_flags(rest, &[])?;
+    let manifest_path = positional.first().ok_or_else(|| {
+        Error::InvalidArg("replay needs a manifest: fast-vat replay manifest.json data.csv".into())
+    })?;
+    let manifest = ReplayManifest::from_json(&std::fs::read_to_string(manifest_path)?)?;
+    let ds = match positional.get(1) {
+        Some(csv) => load_csv(csv, &CsvOptions::default())?,
+        None => load_dataset(&flags)?,
+    };
+    let artifacts = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    // replay checks the dataset content hash, re-executes the embedded
+    // plan on the recorded engine, and verifies the provenance chain; the
+    // deterministic pipeline makes order/MST/iVAT/PGM bytes bit-identical
+    let report = manifest.replay(ds.points, &artifacts)?;
+    manifest.verify_replay(&report)?;
+    println!(
+        "replay ok: dataset {} n={} engine={} storage={} ordering={}",
+        fast_vat::analysis::wire::hash_hex(manifest.dataset.hash),
+        report.plan.n_assessed,
+        report.plan.engine,
+        report.plan.storage.as_str(),
+        report.plan.ordering
+    );
+    println!(
+        "insight: {} | blocks: {}",
+        report.insight.as_deref().unwrap_or("-"),
+        report.k_estimate().unwrap_or(0)
+    );
+    if let Some(out) = flags.get("out") {
+        let img = report.image.as_ref().ok_or_else(|| {
+            Error::InvalidArg("--out: the replayed plan did not render".into())
+        })?;
+        write_pgm(img, out)?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = flags.get("report-out") {
+        std::fs::write(out, ReportWire::from_report(&report).to_json())?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -400,6 +578,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         )?,
         ordering: ordering_strategy(&flags)?,
         knn_k: get_opt_usize(&flags, "knn-k")?,
+        ram_budget_bytes: get_usize(&flags, "ram-budget-mb", 0)? * 1_048_576,
+        disk_budget_bytes: get_usize(&flags, "disk-budget-mb", 0)? * 1_048_576,
+        cache_reports: get_usize(&flags, "cache-reports", ServiceConfig::default().cache_reports)?,
+        cache_store_bytes: get_usize(&flags, "cache-store-mb", 32)? * 1_048_576,
     };
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
@@ -446,6 +628,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "{done} jobs in {dt:.2}s -> {:.1} jobs/s",
         done as f64 / dt.max(1e-9)
     );
+    let cs = service.cache().stats();
+    println!(
+        "cache: reports {}/{} hit, stores {}/{} hit",
+        cs.report_hits,
+        cs.report_hits + cs.report_misses,
+        cs.store_hits,
+        cs.store_hits + cs.store_misses
+    );
+    if service.ledger().is_limited() {
+        let ls = service.ledger().snapshot();
+        println!(
+            "ledger: ram peak {} B, disk peak {} B, waited {}, degraded {}",
+            ls.ram_peak, ls.disk_peak, ls.waited, ls.degraded
+        );
+    }
     Ok(())
 }
 
@@ -545,6 +742,8 @@ fn main() {
     let rest = &args[1..];
     let result = match cmd.as_str() {
         "vat" => cmd_vat(rest),
+        "plan" => cmd_plan(rest),
+        "replay" => cmd_replay(rest),
         "hopkins" => cmd_hopkins(rest),
         "cluster" => cmd_cluster(rest),
         "pipeline" => cmd_pipeline(rest),

@@ -159,12 +159,29 @@ pub fn vat<S: DistanceStorage>(d: &S) -> VatResult {
 /// parity suite in `tests/storage_parity.rs` pins order, MST, iVAT entries
 /// and rendered bytes across strategies, storages and engines.
 pub fn vat_with<S: DistanceStorage + Sync>(d: &S, strategy: OrderingStrategy) -> VatResult {
+    vat_with_stats(d, strategy).0
+}
+
+/// [`vat_with`] plus the route taken: `Some(fell_back)` when the Borůvka
+/// strategy ran (true if it routed through its sequential fallback), `None`
+/// when Prim did. Replay manifests record this so a replayed run can be
+/// checked against the original's route, not just its output.
+pub fn vat_with_stats<S: DistanceStorage + Sync>(
+    d: &S,
+    strategy: OrderingStrategy,
+) -> (VatResult, Option<bool>) {
     match strategy.resolve(d.n()) {
         OrderingStrategy::Boruvka => {
-            let (order, mst) = boruvka::vat_order_boruvka_on(d, 0);
-            VatResult { order, mst }
+            let outcome = boruvka::vat_order_boruvka_stats(d, 0);
+            (
+                VatResult {
+                    order: outcome.order,
+                    mst: outcome.mst,
+                },
+                Some(outcome.fell_back),
+            )
         }
-        _ => vat(d),
+        _ => (vat(d), None),
     }
 }
 

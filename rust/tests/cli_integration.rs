@@ -225,6 +225,116 @@ fn bench_approx_prints_both_arms() {
 }
 
 #[test]
+fn plan_dry_run_prints_resolution_without_executing() {
+    let out = run_ok(&["plan", "--dataset", "blobs", "--n", "150"]);
+    assert!(out.contains("fast-vat/plan/v1: valid plan"), "{out}");
+    assert!(out.contains("resolved: dense"), "{out}");
+    assert!(out.contains("stages:"), "{out}");
+}
+
+#[test]
+fn plan_json_flag_emits_the_canonical_document() {
+    let out = run_ok(&["plan", "--dataset", "blobs", "--n", "100", "--json"]);
+    assert!(out.contains("\"schema\": \"fast-vat/plan/v1\""), "{out}");
+    assert!(out.contains("\"stages\": {"), "{out}");
+}
+
+#[test]
+fn plan_out_then_plan_in_reproduces_the_flag_built_run() {
+    // serialize the plan without executing, feed it back through
+    // --plan-in, and demand the same PGM bytes as the flag-built run
+    let plan = std::env::temp_dir().join("fastvat_cli_plan.json");
+    let direct = std::env::temp_dir().join("fastvat_cli_plan_direct.pgm");
+    let viaplan = std::env::temp_dir().join("fastvat_cli_plan_replayed.pgm");
+    run_ok(&[
+        "plan", "--dataset", "blobs", "--n", "100", "--ivat",
+        "--plan-out", plan.to_str().unwrap(),
+    ]);
+    run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "100", "--ivat",
+        "--out", direct.to_str().unwrap(),
+    ]);
+    let out = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "100",
+        "--plan-in", plan.to_str().unwrap(),
+        "--out", viaplan.to_str().unwrap(),
+    ]);
+    assert!(out.contains("n=100"), "{out}");
+    let bytes_d = std::fs::read(&direct).unwrap();
+    let bytes_p = std::fs::read(&viaplan).unwrap();
+    assert_eq!(bytes_d, bytes_p, "plan round-trip changed the rendered image");
+}
+
+#[test]
+fn replay_reproduces_the_same_pgm_bytes() {
+    // vat --manifest-out, then replay the manifest against the same CSV:
+    // the PGM bytes on disk must be identical
+    let csv = std::env::temp_dir().join("fastvat_cli_replay.csv");
+    let mut text = String::new();
+    for i in 0..50 {
+        let (x, y) = if i % 2 == 0 {
+            (i as f64 * 0.01, 0.0)
+        } else {
+            (5.0 + i as f64 * 0.01, 5.0)
+        };
+        text.push_str(&format!("{x},{y}\n"));
+    }
+    std::fs::write(&csv, text).unwrap();
+    let manifest = std::env::temp_dir().join("fastvat_cli_replay_manifest.json");
+    let first = std::env::temp_dir().join("fastvat_cli_replay_first.pgm");
+    let second = std::env::temp_dir().join("fastvat_cli_replay_second.pgm");
+    run_ok(&[
+        "vat", "--input", csv.to_str().unwrap(), "--ivat",
+        "--out", first.to_str().unwrap(),
+        "--manifest-out", manifest.to_str().unwrap(),
+    ]);
+    let out = run_ok(&[
+        "replay", manifest.to_str().unwrap(), csv.to_str().unwrap(),
+        "--out", second.to_str().unwrap(),
+    ]);
+    assert!(out.contains("replay ok: dataset 0x"), "{out}");
+    let bytes_1 = std::fs::read(&first).unwrap();
+    let bytes_2 = std::fs::read(&second).unwrap();
+    assert_eq!(bytes_1, bytes_2, "replay changed the rendered image");
+}
+
+#[test]
+fn replay_rejects_a_different_dataset() {
+    let csv = std::env::temp_dir().join("fastvat_cli_replay2.csv");
+    let other = std::env::temp_dir().join("fastvat_cli_replay2_other.csv");
+    let mut a = String::new();
+    let mut b = String::new();
+    for i in 0..30 {
+        a.push_str(&format!("{},{}\n", i as f64 * 0.1, 0.0));
+        b.push_str(&format!("{},{}\n", i as f64 * 0.1, 1.0));
+    }
+    std::fs::write(&csv, a).unwrap();
+    std::fs::write(&other, b).unwrap();
+    let manifest = std::env::temp_dir().join("fastvat_cli_replay2_manifest.json");
+    run_ok(&[
+        "vat", "--input", csv.to_str().unwrap(),
+        "--manifest-out", manifest.to_str().unwrap(),
+    ]);
+    let out = bin()
+        .args(["replay", manifest.to_str().unwrap(), other.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("hash mismatch"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn serve_prints_cache_counters() {
+    let out = run_ok(&["serve", "--workers", "2", "--jobs", "8"]);
+    assert!(out.contains("cache:"), "{out}");
+    assert!(out.contains("hit"), "{out}");
+}
+
+#[test]
 fn unknown_dataset_fails_cleanly() {
     let out = bin()
         .args(["vat", "--dataset", "nonexistent"])

@@ -1,0 +1,311 @@
+//! Wire-format spine, pinned end to end:
+//!
+//! * **Golden fixtures** (`tests/golden/plan_v1.json`,
+//!   `tests/golden/manifest_v1.json`): the canonical JSON emission is a
+//!   *byte* contract — 2-space pretty-print, fixed key order, shortest
+//!   round-trip floats, trailing newline. The content-addressed cache uses
+//!   the plan emission as its fingerprint and `fast-vat replay` consumes
+//!   manifests from disk, so any drift here is a compatibility break the
+//!   fixtures must catch.
+//! * **Strict parsing**: unknown fields, newer schema versions, foreign
+//!   schema families, bad tiers, and malformed content hashes are hard
+//!   errors — a document parses completely or not at all.
+//! * **Bit-exact replay**: for every engine × metric × storage kind, a
+//!   report's manifest must re-execute to the same permutation, the same
+//!   MST weights *bitwise*, and the same rendered iVAT pixels. The same
+//!   contract covers the approximate kNN tier (seeded) and sVAT sampling
+//!   (seeded), and `ReplayManifest::verify_replay` must accept each
+//!   replay's provenance chain.
+
+use fast_vat::analysis::{
+    Analysis, AnalysisReport, PlanWire, ReplayManifest, ReportWire, SamplePolicy, StoragePolicy,
+};
+use fast_vat::data::generators::blobs;
+use fast_vat::data::Points;
+use fast_vat::dissimilarity::engine::{
+    BlockedEngine, CondensedEngine, DistanceEngine, NaiveEngine, ParallelEngine,
+};
+use fast_vat::dissimilarity::{Metric, ShardOptions, StorageKind};
+use fast_vat::hopkins::{Exponent, HopkinsParams};
+use fast_vat::vat::blocks::BlockDetector;
+use fast_vat::vat::OrderingStrategy;
+
+const PLAN_GOLDEN: &str = include_str!("golden/plan_v1.json");
+const MANIFEST_GOLDEN: &str = include_str!("golden/manifest_v1.json");
+
+/// The request the plan golden encodes, knob for knob.
+fn golden_plan_wire() -> PlanWire {
+    PlanWire {
+        metric: Metric::Manhattan,
+        standardize: true,
+        storage: StoragePolicy::Auto {
+            memory_budget_bytes: 1_048_576,
+        },
+        shard: ShardOptions {
+            shard_rows: 7,
+            cache_shards: 3,
+            spill_dir: Some("spill/tmp".into()),
+        },
+        sample: SamplePolicy::Above(64),
+        ordering: OrderingStrategy::Boruvka,
+        seed: 12345,
+        ivat: true,
+        render: false,
+        keep_matrix: false,
+        insight: false,
+        detector: Some(BlockDetector {
+            threshold_sigmas: 2.25,
+            min_block: 4,
+            merge_ratio: 1.5,
+        }),
+        hopkins_runs: 2,
+        hopkins_params: HopkinsParams {
+            probes: 11,
+            exponent: Exponent::Dim,
+            seed: 42,
+        },
+    }
+}
+
+fn mst_bits(mst: &[(usize, usize, f64)]) -> Vec<(usize, usize, u64)> {
+    mst.iter().map(|&(a, b, w)| (a, b, w.to_bits())).collect()
+}
+
+// ---------------------------------------------------------------------------
+// golden fixtures
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plan_emission_matches_golden_byte_for_byte() {
+    assert_eq!(golden_plan_wire().to_json(), PLAN_GOLDEN);
+}
+
+#[test]
+fn plan_golden_parses_and_reemits_identically() {
+    let wire = PlanWire::from_json(PLAN_GOLDEN).unwrap();
+    assert_eq!(wire.to_json(), PLAN_GOLDEN);
+    // spot-check the decoded knobs, not just the echo
+    let expect = golden_plan_wire();
+    assert_eq!(wire.metric, expect.metric);
+    assert_eq!(wire.storage, expect.storage);
+    assert_eq!(wire.shard, expect.shard);
+    assert_eq!(wire.sample, expect.sample);
+    assert_eq!(wire.ordering, expect.ordering);
+    assert_eq!(wire.seed, expect.seed);
+    assert!(wire.ivat && !wire.render && !wire.keep_matrix && !wire.insight);
+    let det = wire.detector.as_ref().unwrap();
+    assert_eq!(det.threshold_sigmas, 2.25);
+    assert_eq!(det.min_block, 4);
+    assert_eq!(det.merge_ratio, 1.5);
+    assert_eq!(wire.hopkins_runs, 2);
+    assert_eq!(wire.hopkins_params.probes, 11);
+    assert_eq!(wire.hopkins_params.exponent, Exponent::Dim);
+    assert_eq!(wire.hopkins_params.seed, 42);
+}
+
+#[test]
+fn manifest_golden_parses_and_reemits_identically() {
+    let m = ReplayManifest::from_json(MANIFEST_GOLDEN).unwrap();
+    assert_eq!(m.to_json(), MANIFEST_GOLDEN);
+    assert_eq!(m.dataset.kind, "points");
+    assert_eq!(m.dataset.hash, 0xdead_beef);
+    assert_eq!(m.dataset.n, 100);
+    assert_eq!(m.dataset.d, Some(2));
+    assert_eq!(m.resolved.storage, StorageKind::Condensed);
+    assert_eq!(m.resolved.engine, "blocked");
+    assert_eq!(m.resolved.n_assessed, 64);
+    assert_eq!(m.route.tier, "exact");
+    assert_eq!(m.route.ordering_fell_back, Some(false));
+    assert!(m.route.approx.is_none());
+    assert_eq!(m.versions.plan_schema, "fast-vat/plan/v1");
+}
+
+// ---------------------------------------------------------------------------
+// strict parsing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plan_rejects_unknown_fields() {
+    let doc = PLAN_GOLDEN.replace("\"seed\": 12345", "\"sede\": 12345");
+    let err = PlanWire::from_json(&doc).unwrap_err().to_string();
+    assert!(err.contains("sede") || err.contains("seed"), "got: {err}");
+}
+
+#[test]
+fn plan_rejects_newer_schema_versions() {
+    let doc = PLAN_GOLDEN.replace("fast-vat/plan/v1", "fast-vat/plan/v2");
+    let err = PlanWire::from_json(&doc).unwrap_err().to_string();
+    assert!(err.contains("newer"), "got: {err}");
+}
+
+#[test]
+fn plan_rejects_foreign_schema_families() {
+    let doc = PLAN_GOLDEN.replace("fast-vat/plan/v1", "other/plan/v1");
+    assert!(PlanWire::from_json(&doc).is_err());
+}
+
+#[test]
+fn manifest_rejects_bad_tier_and_bad_hash() {
+    let bad_tier = MANIFEST_GOLDEN.replace("\"tier\": \"exact\"", "\"tier\": \"warp\"");
+    let err = ReplayManifest::from_json(&bad_tier).unwrap_err().to_string();
+    assert!(err.contains("exact|approx"), "got: {err}");
+
+    let bad_hash = MANIFEST_GOLDEN.replace("0x00000000deadbeef", "deadbeef");
+    let err = ReplayManifest::from_json(&bad_hash).unwrap_err().to_string();
+    assert!(err.contains("hash"), "got: {err}");
+}
+
+#[test]
+fn manifest_rejects_unknown_fields() {
+    let doc = MANIFEST_GOLDEN.replace("\"route\":", "\"rout\":");
+    assert!(ReplayManifest::from_json(&doc).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// bit-exact replay across the parity corpus
+// ---------------------------------------------------------------------------
+
+fn engines() -> Vec<Box<dyn DistanceEngine>> {
+    vec![
+        Box::new(NaiveEngine) as Box<dyn DistanceEngine>,
+        Box::new(BlockedEngine),
+        Box::new(ParallelEngine { threads: 4 }),
+        Box::new(CondensedEngine),
+    ]
+}
+
+fn metrics() -> Vec<Metric> {
+    vec![
+        Metric::Euclidean,
+        Metric::SqEuclidean,
+        Metric::Manhattan,
+        Metric::Chebyshev,
+        Metric::Minkowski(3.0),
+        Metric::Cosine,
+    ]
+}
+
+fn storage_kinds() -> [StorageKind; 4] {
+    [
+        StorageKind::Dense,
+        StorageKind::Condensed,
+        StorageKind::Sharded,
+        StorageKind::ShardedSquare,
+    ]
+}
+
+/// Serialize a finished report's manifest, parse it back, re-execute, and
+/// demand bitwise equality on order / MST / iVAT pixels plus a clean
+/// provenance check.
+fn assert_replays_bitwise(report: &AnalysisReport, points: Points, ctx: &str) {
+    let manifest = ReplayManifest::from_json(&report.manifest.to_json()).unwrap();
+    let replayed = manifest.replay(points, "artifacts").unwrap();
+    manifest.verify_replay(&replayed).unwrap();
+    assert_eq!(replayed.vat.order, report.vat.order, "order diverged: {ctx}");
+    let (mst_r, mst_o) = (mst_bits(&replayed.vat.mst), mst_bits(&report.vat.mst));
+    assert_eq!(mst_r, mst_o, "mst diverged: {ctx}");
+    assert_eq!(
+        replayed.image.as_ref().map(|i| &i.pixels),
+        report.image.as_ref().map(|i| &i.pixels),
+        "pixels diverged: {ctx}"
+    );
+}
+
+#[test]
+fn manifest_replay_is_bitwise_for_every_engine_metric_and_storage_kind() {
+    let ds = blobs(36, 2, 3, 0.6, 9001);
+    let shard = ShardOptions {
+        shard_rows: 11,
+        cache_shards: 2,
+        spill_dir: None,
+    };
+    for engine in engines() {
+        for metric in metrics() {
+            for kind in storage_kinds() {
+                let ctx = format!("{} × {:?} × {:?}", engine.name(), metric, kind);
+                let report = Analysis::of(ds.points.clone())
+                    .metric(metric)
+                    .storage(StoragePolicy::Fixed(kind))
+                    .shard(shard.clone())
+                    .ivat(true)
+                    .render(true)
+                    .plan()
+                    .unwrap()
+                    .execute(engine.as_ref())
+                    .unwrap();
+                assert_eq!(report.manifest.route.tier, "exact", "{ctx}");
+                assert_replays_bitwise(&report, ds.points.clone(), &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn approx_tier_manifest_replays_bitwise() {
+    let ds = blobs(60, 2, 3, 0.5, 31337);
+    let report = Analysis::of(ds.points.clone())
+        .storage(StoragePolicy::Approx { k: 12 })
+        .ivat(true)
+        .render(true)
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    assert_eq!(report.manifest.route.tier, "approx");
+    assert!(report.manifest.route.approx.is_some());
+    assert_replays_bitwise(&report, ds.points.clone(), "approx k=12");
+}
+
+#[test]
+fn svat_sampled_run_replays_bitwise() {
+    let ds = blobs(80, 2, 3, 0.5, 5150);
+    let report = Analysis::of(ds.points.clone())
+        .sample(SamplePolicy::Above(40))
+        .seed(77)
+        .ivat(true)
+        .render(true)
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    assert_eq!(report.plan.n_assessed, 40, "sVAT must have sampled");
+    assert_replays_bitwise(&report, ds.points.clone(), "svat above(40) seed 77");
+}
+
+#[test]
+fn replay_rejects_the_wrong_dataset() {
+    let ds = blobs(30, 2, 2, 0.5, 11);
+    let other = blobs(30, 2, 2, 0.5, 12);
+    let report = Analysis::of(ds.points.clone())
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    let manifest = ReplayManifest::from_json(&report.manifest.to_json()).unwrap();
+    let err = manifest.replay(other.points, "artifacts").unwrap_err();
+    assert!(err.to_string().contains("hash mismatch"), "got: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// report wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn report_wire_roundtrips_byte_identically() {
+    let ds = blobs(30, 2, 2, 0.5, 424);
+    let report = Analysis::of(ds.points)
+        .ivat(true)
+        .detect_blocks(BlockDetector::default())
+        .hopkins(1)
+        .plan()
+        .unwrap()
+        .execute(&BlockedEngine)
+        .unwrap();
+    let json = ReportWire::from_report(&report).to_json();
+    let rt = ReportWire::from_json(&json).unwrap();
+    assert_eq!(rt.to_json(), json);
+    assert_eq!(rt.order, report.vat.order);
+    assert_eq!(mst_bits(&rt.mst), mst_bits(&report.vat.mst));
+    assert!(rt.hopkins.is_some());
+    assert!(rt.blocks.is_some());
+}
