@@ -57,7 +57,7 @@ pub use policy::{
     StorageDecision, StoragePolicy,
 };
 pub use report::{AnalysisReport, ResolvedPlan, SampleInfo, StageTimings};
-pub use wire::{PlanWire, ReplayManifest, ReportWire};
+pub use wire::{ErrorWire, PlanWire, Priority, ReplayManifest, ReportWire};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -121,6 +121,7 @@ pub struct Analysis {
     render: bool,
     keep_matrix: bool,
     ordering: OrderingStrategy,
+    priority: Priority,
     /// Cache injection (coordinator-only, not a wire knob): a distance
     /// store a previous identical request already built. The executor
     /// reuses it — skipping the distance stage — only when it matches the
@@ -147,6 +148,7 @@ impl Analysis {
             render: false,
             keep_matrix: false,
             ordering: OrderingStrategy::Auto,
+            priority: Priority::Interactive,
             prebuilt: None,
         }
     }
@@ -266,6 +268,15 @@ impl Analysis {
     /// [`ResolvedPlan::ordering`].
     pub fn ordering(mut self, strategy: OrderingStrategy) -> Self {
         self.ordering = strategy;
+        self
+    }
+
+    /// Scheduling lane for service submissions (default
+    /// [`Priority::Interactive`]). Pure queue metadata: it decides when
+    /// the plan runs under load, never what it computes — reports are
+    /// identical across lanes and share cache entries.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
         self
     }
 
@@ -390,6 +401,40 @@ impl AnalysisPlan {
                 "this plan assesses points; call execute(engine)".into(),
             )),
         }
+    }
+
+    /// Number of points (or matrix side, for storage input) this plan
+    /// assesses.
+    pub fn n_input(&self) -> usize {
+        match &self.spec.input {
+            PlanInput::Points(p) => p.n(),
+            PlanInput::Storage(s) => s.n(),
+        }
+    }
+
+    /// The plan's serializable knob set.
+    pub fn wire(&self) -> PlanWire {
+        PlanWire::from_plan(self)
+    }
+
+    /// Deterministic FNV-1a content hash of the plan's input — the same
+    /// identity the replay manifest stamps.
+    pub fn dataset_hash(&self) -> u64 {
+        match &self.spec.input {
+            PlanInput::Points(p) => wire::hash_points(p),
+            PlanInput::Storage(s) => wire::hash_store(s),
+        }
+    }
+
+    /// The plan's scheduling lane.
+    pub fn priority(&self) -> Priority {
+        self.spec.priority
+    }
+
+    /// Whether the plan assesses raw points (as opposed to precomputed
+    /// distance storage).
+    pub fn is_points_input(&self) -> bool {
+        matches!(self.spec.input, PlanInput::Points(_))
     }
 
     /// Coordinator-only cache injection: seed the executor with a distance

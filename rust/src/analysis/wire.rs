@@ -58,6 +58,8 @@ pub const PLAN_SCHEMA: &str = "fast-vat/plan/v1";
 pub const MANIFEST_SCHEMA: &str = "fast-vat/manifest/v1";
 /// The report schema this build reads and writes.
 pub const REPORT_SCHEMA: &str = "fast-vat/report/v1";
+/// The error-document schema this build reads and writes.
+pub const ERROR_SCHEMA: &str = "fast-vat/error/v1";
 
 fn wire_err(msg: impl Into<String>) -> Error {
     Error::Config(format!("wire: {}", msg.into()))
@@ -274,6 +276,48 @@ pub fn metric_token(m: Metric) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Priority
+// ---------------------------------------------------------------------------
+
+/// Scheduling lane for a plan submitted to the service. Pure queue
+/// metadata: priority decides *when* a plan runs (interactive requests
+/// jump the batch lane, with aging so batch never starves), never *what*
+/// it computes — two plans differing only in priority produce identical
+/// reports and share cache entries ([`PlanWire::fingerprint`] normalizes
+/// it away).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive lane (the default): served first.
+    #[default]
+    Interactive,
+    /// Throughput lane: served when interactive is idle, plus an aged
+    /// slot every few pops so a saturating interactive stream cannot
+    /// starve it.
+    Batch,
+}
+
+impl Priority {
+    /// Canonical wire token.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(wire_err(format!(
+                "unknown priority `{other}` (expected interactive|batch)"
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PlanWire
 // ---------------------------------------------------------------------------
 
@@ -295,6 +339,8 @@ pub struct PlanWire {
     pub sample: SamplePolicy,
     /// VAT ordering strategy.
     pub ordering: OrderingStrategy,
+    /// Scheduling lane (queue metadata only — never affects output).
+    pub priority: Priority,
     /// Seed for sampling and the approximate tier.
     pub seed: u64,
     /// Run the iVAT transform.
@@ -327,6 +373,7 @@ impl PlanWire {
             shard: a.shard.clone(),
             sample: a.sample,
             ordering: a.ordering,
+            priority: a.priority,
             seed: a.seed,
             ivat: a.ivat,
             render: a.render,
@@ -356,6 +403,7 @@ impl PlanWire {
         a.shard = self.shard.clone();
         a.sample = self.sample;
         a.ordering = self.ordering;
+        a.priority = self.priority;
         a.seed = self.seed;
         a.ivat = self.ivat;
         a.render = self.render;
@@ -374,6 +422,16 @@ impl PlanWire {
         let mut s = self.to_value().to_pretty(2);
         s.push('\n');
         s
+    }
+
+    /// Cache-addressing form: canonical JSON with the scheduling lane
+    /// normalized away, because priority never affects the computed
+    /// report — an interactive and a batch submission of the same plan
+    /// must share one cache entry.
+    pub fn fingerprint(&self) -> String {
+        let mut p = self.clone();
+        p.priority = Priority::default();
+        p.to_json()
     }
 
     pub(crate) fn to_value(&self) -> Json {
@@ -431,6 +489,7 @@ impl PlanWire {
             ("shard".into(), shard_to_value(&self.shard)),
             ("sample".into(), sample),
             ("ordering".into(), Json::str(self.ordering.as_str())),
+            ("priority".into(), Json::str(self.priority.as_str())),
             ("seed".into(), Json::u64(self.seed)),
             (
                 "stages".into(),
@@ -466,6 +525,7 @@ impl PlanWire {
                 "shard",
                 "sample",
                 "ordering",
+                "priority",
                 "seed",
                 "stages",
                 "detector",
@@ -517,6 +577,15 @@ impl PlanWire {
         };
 
         let ordering = OrderingStrategy::parse(req_str(doc, "ordering", "plan")?)?;
+        // optional for backward compatibility: v1 documents written before
+        // the scheduling lane existed parse as the default
+        let priority = match doc.get("priority") {
+            None => Priority::default(),
+            Some(v) => Priority::parse(
+                v.as_str()
+                    .ok_or_else(|| wire_err("`plan.priority` must be a string"))?,
+            )?,
+        };
         let seed = req_u64(doc, "seed", "plan")?;
 
         let stages = req(doc, "stages", "plan")?;
@@ -570,6 +639,7 @@ impl PlanWire {
             shard,
             sample,
             ordering,
+            priority,
             seed,
             ivat,
             render,
@@ -1336,6 +1406,60 @@ impl ReportWire {
     }
 }
 
+// ---------------------------------------------------------------------------
+// ErrorWire
+// ---------------------------------------------------------------------------
+
+/// The service's machine-readable error document (`fast-vat/error/v1`):
+/// what an HTTP client receives on any 4xx/5xx, so failures are as
+/// parseable as successes. Same canonical emission and strict parse
+/// rules as every other wire document.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorWire {
+    /// HTTP status code the document accompanied.
+    pub status: u16,
+    /// Human-readable description of what went wrong.
+    pub error: String,
+}
+
+impl ErrorWire {
+    /// Build an error document.
+    pub fn new(status: u16, error: impl Into<String>) -> Self {
+        ErrorWire {
+            status,
+            error: error.into(),
+        }
+    }
+
+    /// Canonical JSON emission (2-space pretty, trailing newline).
+    pub fn to_json(&self) -> String {
+        let v = Json::Obj(vec![
+            ("schema".into(), Json::str(ERROR_SCHEMA)),
+            ("status".into(), Json::u64(u64::from(self.status))),
+            ("error".into(), Json::str(self.error.clone())),
+        ]);
+        let mut s = v.to_pretty(2);
+        s.push('\n');
+        s
+    }
+
+    /// Parse a `fast-vat/error/v1` document.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| wire_err(format!("invalid JSON: {e}")))?;
+        known_fields(&doc, "error", &["schema", "status", "error"])?;
+        check_schema(&doc, ERROR_SCHEMA)?;
+        let status = req_u64(&doc, "status", "error")?;
+        let status = u16::try_from(status)
+            .ok()
+            .filter(|s| (100..=599).contains(s))
+            .ok_or_else(|| wire_err(format!("`error.status` {status} is not an HTTP status")))?;
+        Ok(ErrorWire {
+            status,
+            error: req_str(&doc, "error", "error")?.to_string(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1356,6 +1480,7 @@ mod tests {
             })
             .sample(SamplePolicy::Above(32))
             .ordering(OrderingStrategy::Boruvka)
+            .priority(Priority::Batch)
             .seed(0xDEAD_BEEF_CAFE_F00D)
             .ivat(true)
             .detect_blocks(BlockDetector {
@@ -1385,6 +1510,41 @@ mod tests {
         assert_eq!(back.seed, 0xDEAD_BEEF_CAFE_F00D);
         assert_eq!(back.hopkins_params.probes, 11);
         assert!(matches!(back.metric, Metric::Minkowski(p) if p == 2.5));
+        assert_eq!(back.priority, Priority::Batch);
+    }
+
+    #[test]
+    fn priority_is_optional_on_parse_and_normalized_in_fingerprints() {
+        let wire = PlanWire::from_plan(&exotic_plan());
+        let json = wire.to_json();
+        // pre-priority v1 documents (no `priority` key) parse as the default
+        let legacy = json.replacen("  \"priority\": \"batch\",\n", "", 1);
+        assert_ne!(legacy, json, "test must actually strip the key");
+        let back = PlanWire::from_json(&legacy).unwrap();
+        assert_eq!(back.priority, Priority::Interactive);
+        // a bad token is still a hard error
+        let bad = json.replacen("\"batch\"", "\"urgent\"", 1);
+        let err = PlanWire::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown priority"), "{err}");
+        // fingerprints ignore the lane: batch and interactive submissions
+        // of the same plan share one cache address
+        let mut interactive = wire.clone();
+        interactive.priority = Priority::Interactive;
+        assert_ne!(wire.to_json(), interactive.to_json());
+        assert_eq!(wire.fingerprint(), interactive.fingerprint());
+    }
+
+    #[test]
+    fn error_wire_round_trips_and_rejects_nonsense() {
+        let e = ErrorWire::new(413, "body exceeds 8 MiB cap");
+        let back = ErrorWire::from_json(&e.to_json()).unwrap();
+        assert_eq!(back, e);
+        assert_eq!(back.to_json(), e.to_json());
+        let bad_status = e.to_json().replacen("413", "9000", 1);
+        let err = ErrorWire::from_json(&bad_status).unwrap_err().to_string();
+        assert!(err.contains("not an HTTP status"), "{err}");
+        let unknown = e.to_json().replacen("\"error\"", "\"detail\"", 1);
+        assert!(ErrorWire::from_json(&unknown).is_err());
     }
 
     #[test]

@@ -265,6 +265,19 @@ pub struct ServiceConfig {
     /// key, megabytes). Holds built in-RAM distance stores keyed by
     /// dataset hash + standardize + metric + layout; 0 disables.
     pub cache_store_bytes: usize,
+    /// Bind address for the HTTP front end (the `http_addr` key, e.g.
+    /// `"127.0.0.1:8080"`). `None` (the default) keeps `serve` in its
+    /// in-process demo mode; the CLI `--http` flag sets it too.
+    pub http_addr: Option<String>,
+    /// HTTP request-body cap, in bytes (the `max_body_mb` key, megabytes,
+    /// int ≥ 1). Larger declared bodies are refused with `413`.
+    pub max_body_bytes: usize,
+    /// Per-connection read/write deadline, in seconds (the
+    /// `request_timeout_s` key, int ≥ 1). Expired sockets get `408`.
+    pub request_timeout_s: u64,
+    /// Concurrent HTTP connection cap (the `accept_queue` key, int ≥ 1).
+    /// Connections beyond it are shed with `429 Retry-After`.
+    pub accept_queue: usize,
 }
 
 impl Default for ServiceConfig {
@@ -283,6 +296,10 @@ impl Default for ServiceConfig {
             disk_budget_bytes: 0,
             cache_reports: 8,
             cache_store_bytes: 32 * 1_048_576,
+            http_addr: None,
+            max_body_bytes: 8 * 1_048_576,
+            request_timeout_s: 30,
+            accept_queue: 64,
         }
     }
 }
@@ -400,6 +417,35 @@ impl ServiceConfig {
                         .ok_or_else(|| {
                             Error::Config("cache_reports must be int >= 0".into())
                         })? as usize
+                }
+                "http_addr" => {
+                    cfg.http_addr = Some(
+                        v.as_str()
+                            .ok_or_else(|| Error::Config("http_addr must be a string".into()))?
+                            .to_string(),
+                    )
+                }
+                "max_body_mb" => {
+                    let bytes = mb_key(v, "max_body_mb")?;
+                    if bytes == 0 {
+                        return Err(Error::Config("max_body_mb must be int > 0".into()));
+                    }
+                    cfg.max_body_bytes = bytes;
+                }
+                "request_timeout_s" => {
+                    cfg.request_timeout_s = v
+                        .as_int()
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| {
+                            Error::Config("request_timeout_s must be int > 0".into())
+                        })? as u64
+                }
+                "accept_queue" => {
+                    cfg.accept_queue = v
+                        .as_int()
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| Error::Config("accept_queue must be int > 0".into()))?
+                        as usize
                 }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
@@ -637,6 +683,38 @@ mod tests {
             "[service]\ndisk_budget_mb = \"big\"\n",
             "[service]\ncache_reports = -2\n",
             "[service]\ncache_store_mb = 1.5\n",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn service_config_http_knobs() {
+        let doc = Document::parse(
+            "[service]\nhttp_addr = \"127.0.0.1:9090\"\nmax_body_mb = 2\n\
+             request_timeout_s = 5\naccept_queue = 16\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.http_addr.as_deref(), Some("127.0.0.1:9090"));
+        assert_eq!(cfg.max_body_bytes, 2 * 1_048_576);
+        assert_eq!(cfg.request_timeout_s, 5);
+        assert_eq!(cfg.accept_queue, 16);
+        // defaults: no listener, 8 MiB bodies, 30 s deadline, 64 conns
+        let d = ServiceConfig::default();
+        assert_eq!(d.http_addr, None);
+        assert_eq!(d.max_body_bytes, 8 * 1_048_576);
+        assert_eq!(d.request_timeout_s, 30);
+        assert_eq!(d.accept_queue, 64);
+        // bad shapes fail loudly
+        for bad in [
+            "[service]\nhttp_addr = 8080\n",
+            "[service]\nmax_body_mb = 0\n",
+            "[service]\nmax_body_mb = -1\n",
+            "[service]\nrequest_timeout_s = 0\n",
+            "[service]\naccept_queue = 0\n",
+            "[service]\naccept_queue = \"all\"\n",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");

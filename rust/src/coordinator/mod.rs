@@ -29,7 +29,7 @@ pub mod service;
 pub mod stats;
 pub mod streaming;
 
-use crate::analysis::{Analysis, AnalysisPlan, StoragePolicy};
+use crate::analysis::{Analysis, AnalysisPlan, Priority, StoragePolicy};
 use crate::data::Points;
 use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
 use crate::error::Result;
@@ -70,6 +70,10 @@ pub struct JobOptions {
     /// the raw distance image, which the tier never materializes); the
     /// job's `AnalysisReport::approx` carries the fidelity record.
     pub knn_k: Option<usize>,
+    /// Scheduling lane (default [`Priority::Interactive`]): which queue
+    /// lane the job waits in under load. Never affects the computed
+    /// output.
+    pub priority: Priority,
 }
 
 impl Default for JobOptions {
@@ -84,6 +88,7 @@ impl Default for JobOptions {
             metric: Metric::Euclidean,
             ordering: OrderingStrategy::Auto,
             knn_k: None,
+            priority: Priority::Interactive,
         }
     }
 }
@@ -98,6 +103,7 @@ impl JobOptions {
             .standardize(self.standardize)
             .shard(self.shard)
             .ordering(self.ordering)
+            .priority(self.priority)
             .detect_blocks(BlockDetector::default());
         request = match self.knn_k {
             // approx jobs: detection runs over the iVAT transform; the

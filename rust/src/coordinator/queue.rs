@@ -1,12 +1,19 @@
-//! Bounded MPMC queue with blocking push/pop and backpressure semantics.
+//! Bounded MPMC queues with blocking push/pop and backpressure semantics.
 //!
 //! std::sync::mpsc has no bounded MPMC receiver sharing, so the service uses
-//! this small Mutex+Condvar queue: producers block (or fail fast with
+//! these small Mutex+Condvar queues: producers block (or fail fast with
 //! [`PushError::Full`]) when the queue is at capacity; consumers block until
 //! an item or close. Closing wakes everyone; pending items still drain.
+//!
+//! [`BoundedQueue`] is the single-lane FIFO. [`PriorityQueue`] adds two
+//! scheduling lanes ([`Priority::Interactive`] served first,
+//! [`Priority::Batch`] aged in so it never starves) behind the same
+//! push/pop/close contract and one shared capacity.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+
+use crate::analysis::Priority;
 
 /// Why a push was refused.
 #[derive(Debug, PartialEq, Eq)]
@@ -108,6 +115,146 @@ impl<T> BoundedQueue<T> {
     }
 }
 
+/// Serve one aged batch item after this many consecutive interactive pops
+/// while batch work is waiting — the anti-starvation guarantee: under a
+/// saturating interactive stream, batch still gets every `N`th worker slot.
+const BATCH_AGING_EVERY: usize = 4;
+
+struct PriorityInner<T> {
+    interactive: VecDeque<T>,
+    batch: VecDeque<T>,
+    closed: bool,
+    capacity: usize,
+    /// Consecutive interactive pops since batch was last served, counted
+    /// only while batch work is actually waiting.
+    skipped_batch: usize,
+}
+
+impl<T> PriorityInner<T> {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+}
+
+/// A bounded MPMC queue with two scheduling lanes sharing one capacity.
+///
+/// Pop order: interactive first, except that once [`BATCH_AGING_EVERY`]
+/// consecutive interactive items have been served while batch waited, the
+/// next pop takes from batch. Each lane is FIFO internally, so the
+/// single-lane behavior degenerates to [`BoundedQueue`] exactly.
+pub struct PriorityQueue<T> {
+    inner: Mutex<PriorityInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> PriorityQueue<T> {
+    /// Create with a shared capacity >= 1 across both lanes.
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(PriorityInner {
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+                capacity: capacity.max(1),
+                skipped_batch: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        })
+    }
+
+    fn enqueue(g: &mut PriorityInner<T>, value: T, priority: Priority) {
+        match priority {
+            Priority::Interactive => g.interactive.push_back(value),
+            Priority::Batch => g.batch.push_back(value),
+        }
+    }
+
+    /// Blocking push into the given lane; waits while full. Errors only if
+    /// closed.
+    pub fn push(&self, value: T, priority: Priority) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(value));
+            }
+            if g.len() < g.capacity {
+                Self::enqueue(&mut g, value, priority);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push; fails fast when full (backpressure signal).
+    pub fn try_push(&self, value: T, priority: Priority) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(value));
+        }
+        if g.len() >= g.capacity {
+            return Err(PushError::Full(value));
+        }
+        Self::enqueue(&mut g, value, priority);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` when closed AND both lanes drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.len() > 0 {
+                let serve_batch = !g.batch.is_empty()
+                    && (g.interactive.is_empty() || g.skipped_batch + 1 >= BATCH_AGING_EVERY);
+                let v = if serve_batch {
+                    g.skipped_batch = 0;
+                    g.batch.pop_front().expect("batch lane checked non-empty")
+                } else {
+                    let v = g
+                        .interactive
+                        .pop_front()
+                        .expect("interactive lane non-empty when batch not served");
+                    // age only against work actually waiting; an idle batch
+                    // lane must not bank credit for later
+                    if g.batch.is_empty() {
+                        g.skipped_batch = 0;
+                    } else {
+                        g.skipped_batch += 1;
+                    }
+                    v
+                };
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue; wakes all waiters. Pending items still drain.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current depth across both lanes (diagnostic).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when both lanes are empty (diagnostic).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +297,107 @@ mod tests {
         let t = std::thread::spawn(move || q2.push(2).unwrap());
         std::thread::sleep(Duration::from_millis(20));
         assert_eq!(q.pop(), Some(1)); // unblocks the producer
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn priority_queue_serves_interactive_first_within_fifo_lanes() {
+        let q = PriorityQueue::new(8);
+        q.push(10, Priority::Batch).unwrap();
+        q.push(11, Priority::Batch).unwrap();
+        q.push(1, Priority::Interactive).unwrap();
+        q.push(2, Priority::Interactive).unwrap();
+        // interactive jumps the earlier-enqueued batch work, FIFO per lane
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+    }
+
+    #[test]
+    fn priority_queue_ages_batch_under_interactive_saturation() {
+        // keep a batch item waiting while interactive work streams in: the
+        // batch item must be served after BATCH_AGING_EVERY - 1 interactive
+        // pops, not starve indefinitely
+        let q = PriorityQueue::new(32);
+        q.push(100, Priority::Batch).unwrap();
+        for i in 1..=8 {
+            q.push(i, Priority::Interactive).unwrap();
+        }
+        let mut order = Vec::new();
+        for _ in 0..9 {
+            order.push(q.pop().unwrap());
+        }
+        let batch_pos = order.iter().position(|&v| v == 100).unwrap();
+        assert_eq!(
+            batch_pos,
+            BATCH_AGING_EVERY - 1,
+            "batch must be served on the aged slot, got order {order:?}"
+        );
+        // the interactive stream stayed FIFO around the aged slot
+        let inter: Vec<_> = order.iter().filter(|&&v| v != 100).copied().collect();
+        assert_eq!(inter, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn priority_queue_aging_credit_resets_when_batch_lane_empties() {
+        let q = PriorityQueue::new(32);
+        // no batch waiting: interactive pops bank no credit
+        for i in 1..=BATCH_AGING_EVERY {
+            q.push(i, Priority::Interactive).unwrap();
+        }
+        for _ in 0..BATCH_AGING_EVERY {
+            q.pop().unwrap();
+        }
+        // a batch item arriving now must still wait out a fresh aging
+        // window behind new interactive work
+        q.push(100, Priority::Batch).unwrap();
+        for i in 1..=BATCH_AGING_EVERY {
+            q.push(10 + i, Priority::Interactive).unwrap();
+        }
+        let mut order = Vec::new();
+        for _ in 0..=BATCH_AGING_EVERY {
+            order.push(q.pop().unwrap());
+        }
+        assert_eq!(
+            order.iter().position(|&v| v == 100),
+            Some(BATCH_AGING_EVERY - 1),
+            "{order:?}"
+        );
+    }
+
+    #[test]
+    fn priority_queue_shares_capacity_and_signals_backpressure() {
+        let q = PriorityQueue::new(2);
+        q.try_push(1, Priority::Interactive).unwrap();
+        q.try_push(2, Priority::Batch).unwrap();
+        // both lanes count against the one capacity
+        assert_eq!(q.try_push(3, Priority::Interactive), Err(PushError::Full(3)));
+        assert_eq!(q.try_push(3, Priority::Batch), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn priority_queue_close_drains_both_lanes_then_none() {
+        let q = PriorityQueue::new(4);
+        q.push(7, Priority::Batch).unwrap();
+        q.push(8, Priority::Interactive).unwrap();
+        q.close();
+        assert_eq!(q.push(9, Priority::Interactive), Err(PushError::Closed(9)));
+        assert_eq!(q.pop(), Some(8));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn priority_queue_blocking_push_resumes_after_pop() {
+        let q = PriorityQueue::new(1);
+        q.push(1, Priority::Interactive).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(2, Priority::Batch).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
         t.join().unwrap();
         assert_eq!(q.pop(), Some(2));
     }

@@ -25,12 +25,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
 use crate::analysis::{
-    approx_resident_bytes, wire, AccessProfile, AnalysisReport, StoragePolicy,
+    approx_resident_bytes, wire, AccessProfile, AnalysisPlan, AnalysisReport, Priority,
+    StoragePolicy,
 };
 use crate::config::ServiceConfig;
 use crate::coordinator::admission::BudgetLedger;
 use crate::coordinator::cache::AnalysisCache;
-use crate::coordinator::queue::{BoundedQueue, PushError};
+use crate::coordinator::queue::{PriorityQueue, PushError};
 use crate::coordinator::stats::ServiceStats;
 use crate::coordinator::{JobOptions, VatJob, VatJobOutput};
 use crate::data::Points;
@@ -41,15 +42,25 @@ use crate::error::{Error, Result};
 /// A submitted job's completion channel.
 pub type Ticket = mpsc::Receiver<Result<VatJobOutput>>;
 
-struct WorkItem {
-    job: VatJob,
-    reply: mpsc::Sender<Result<VatJobOutput>>,
+/// A submitted plan's completion channel (the HTTP front end's shape:
+/// the full typed report, shared so cache hits stay zero-copy).
+pub type ReportTicket = mpsc::Receiver<Result<Arc<AnalysisReport>>>;
+
+enum Work {
+    Job {
+        job: VatJob,
+        reply: mpsc::Sender<Result<VatJobOutput>>,
+    },
+    Plan {
+        plan: AnalysisPlan,
+        reply: mpsc::Sender<Result<Arc<AnalysisReport>>>,
+    },
 }
 
 /// The running service. Dropping it shuts the pool down (pending jobs
 /// drain first).
 pub struct VatService {
-    queue: Arc<BoundedQueue<WorkItem>>,
+    queue: Arc<PriorityQueue<Work>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     engine_name: &'static str,
@@ -61,7 +72,7 @@ pub struct VatService {
 impl VatService {
     /// Start `config.workers` workers over `engine`.
     pub fn start(config: &ServiceConfig, engine: Arc<dyn DistanceEngine>) -> Self {
-        let queue: Arc<BoundedQueue<WorkItem>> = BoundedQueue::new(config.queue_depth);
+        let queue: Arc<PriorityQueue<Work>> = PriorityQueue::new(config.queue_depth);
         let engine_name = engine.name();
         let stats = ServiceStats::new();
         let cache = Arc::new(AnalysisCache::new(
@@ -83,17 +94,41 @@ impl VatService {
                     .name(format!("vat-worker-{w}"))
                     .spawn(move || {
                         while let Some(item) = queue.pop() {
-                            let out = execute_job_with(
-                                engine.as_ref(),
-                                item.job,
-                                Some(&cache),
-                                Some(&ledger),
-                            );
-                            match &out {
-                                Ok(o) => stats.on_complete(o.t_distance_s, o.t_order_s),
-                                Err(_) => stats.on_fail(),
+                            match item {
+                                Work::Job { job, reply } => {
+                                    let out = execute_job_with(
+                                        engine.as_ref(),
+                                        job,
+                                        Some(&cache),
+                                        Some(&ledger),
+                                    );
+                                    match &out {
+                                        Ok(o) => stats.on_complete(o.t_distance_s, o.t_order_s),
+                                        Err(_) => stats.on_fail(),
+                                    }
+                                    let _ = reply.send(out);
+                                }
+                                Work::Plan { plan, reply } => {
+                                    let out = execute_plan_with(
+                                        engine.as_ref(),
+                                        plan,
+                                        Some(&cache),
+                                        Some(&ledger),
+                                    );
+                                    match &out {
+                                        // the same distance/order split the
+                                        // job path reports
+                                        Ok(r) => stats.on_complete(
+                                            r.timings.distance_s,
+                                            r.timings.vat_s
+                                                + r.timings.ivat_s
+                                                + r.timings.detect_s,
+                                        ),
+                                        Err(_) => stats.on_fail(),
+                                    }
+                                    let _ = reply.send(out);
+                                }
                             }
-                            let _ = item.reply.send(out);
                         }
                     })
                     .expect("spawn worker")
@@ -134,8 +169,9 @@ impl VatService {
     /// await the result on.
     pub fn submit(&self, points: Points, options: JobOptions) -> Result<(u64, Ticket)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let priority = options.priority;
         let (reply, ticket) = mpsc::channel();
-        let item = WorkItem {
+        let item = Work::Job {
             job: VatJob {
                 id,
                 points,
@@ -143,7 +179,7 @@ impl VatService {
             },
             reply,
         };
-        match self.queue.push(item) {
+        match self.queue.push(item, priority) {
             Ok(()) => {
                 self.stats.on_submit();
                 Ok((id, ticket))
@@ -169,8 +205,9 @@ impl VatService {
         options: JobOptions,
     ) -> std::result::Result<(u64, Ticket), SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let priority = options.priority;
         let (reply, ticket) = mpsc::channel();
-        let item = WorkItem {
+        let item = Work::Job {
             job: VatJob {
                 id,
                 points,
@@ -178,7 +215,48 @@ impl VatService {
             },
             reply,
         };
-        match self.queue.try_push(item) {
+        match self.queue.try_push(item, priority) {
+            Ok(()) => {
+                self.stats.on_submit();
+                Ok((id, ticket))
+            }
+            Err(PushError::Full(_)) => {
+                self.stats.on_shed();
+                Err(SubmitError::Backpressure)
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit a validated plan (the HTTP front end's path), blocking if
+    /// the queue is full. The plan's own [`Priority`] picks its lane.
+    pub fn submit_plan(&self, plan: AnalysisPlan) -> Result<(u64, ReportTicket)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let priority = plan.priority();
+        let (reply, ticket) = mpsc::channel();
+        match self.queue.push(Work::Plan { plan, reply }, priority) {
+            Ok(()) => {
+                self.stats.on_submit();
+                Ok((id, ticket))
+            }
+            Err(PushError::Closed(_)) => Err(Error::Coordinator("service shut down".into())),
+            Err(PushError::Full(_)) => {
+                self.stats.on_shed();
+                Err(Error::Coordinator("queue full (backpressure)".into()))
+            }
+        }
+    }
+
+    /// Non-blocking plan submit; `Err(Backpressure)` is the signal the
+    /// HTTP layer turns into `429 Retry-After`.
+    pub fn try_submit_plan(
+        &self,
+        plan: AnalysisPlan,
+    ) -> std::result::Result<(u64, ReportTicket), SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let priority = plan.priority();
+        let (reply, ticket) = mpsc::channel();
+        match self.queue.try_push(Work::Plan { plan, reply }, priority) {
             Ok(()) => {
                 self.stats.on_submit();
                 Ok((id, ticket))
@@ -232,7 +310,9 @@ pub fn execute_job(engine: &dyn DistanceEngine, job: VatJob) -> Result<VatJobOut
 
 /// Execute one job through the coordinator facilities: report-cache
 /// lookup, store reuse, budget-driven degradation, and ledger admission
-/// (each optional). The service workers run every job through here.
+/// (each optional). The service workers run every job through here — a
+/// thin adapter over [`execute_plan_with`], so the job and HTTP plan
+/// paths share one code path and stay byte-identical by construction.
 pub fn execute_job_with(
     engine: &dyn DistanceEngine,
     job: VatJob,
@@ -240,28 +320,47 @@ pub fn execute_job_with(
     ledger: Option<&BudgetLedger>,
 ) -> Result<VatJobOutput> {
     let job_id = job.id;
-    let n = job.points.n();
-    let knn_k = job.options.knn_k;
-    let standardize = job.options.standardize;
-    let metric_token = wire::metric_token(job.options.metric);
-    let base_shard = job.options.shard.clone();
-    let mut policy = StoragePolicy::Fixed(job.options.storage);
-    let dataset_hash = wire::hash_points(&job.points);
+    let plan = job.options.into_plan(job.points, job_id)?;
+    let report = execute_plan_with(engine, plan, cache, ledger)?;
+    Ok(output_of(job_id, &report))
+}
 
-    let mut plan = job.options.into_plan(job.points, job_id)?;
+/// Execute one validated plan through the coordinator facilities:
+/// report-cache lookup, store reuse, budget-driven degradation, and
+/// ledger admission (each optional). Every service execution — job or
+/// networked plan — funnels through here, driven entirely by the plan's
+/// own wire knobs.
+pub fn execute_plan_with(
+    engine: &dyn DistanceEngine,
+    mut plan: AnalysisPlan,
+    cache: Option<&AnalysisCache>,
+    ledger: Option<&BudgetLedger>,
+) -> Result<Arc<AnalysisReport>> {
+    let n = plan.n_input();
+    let knobs = plan.wire();
+    let standardize = knobs.standardize;
+    let metric_token = wire::metric_token(knobs.metric);
+    let base_shard = knobs.shard.clone();
+    let mut policy = knobs.storage.clone();
+    let dataset_hash = plan.dataset_hash();
 
-    // every non-approx service job re-reads the permuted raw image (the
-    // insight darkness scan), so footprint estimates use the permuted
-    // profile — the same one the executor derives for these stages
-    let access = AccessProfile::permuted();
+    // how the post-sweep stages will re-read the storage — the same
+    // derivation the executor makes, so footprint estimates match what
+    // actually runs (job-built plans always request insight, so this is
+    // the permuted profile the job path has always charged)
+    let access = AccessProfile {
+        permuted: (knobs.render && !knobs.ivat)
+            || (knobs.detector.is_some() && !knobs.ivat)
+            || knobs.insight
+            || knobs.keep_matrix,
+    };
     let ram_budget = ledger.map_or(0, BudgetLedger::ram_budget);
 
     // degrade-instead-of-OOM: a pinned layout that exceeds the global RAM
     // budget is rewritten to `Auto` under that budget before admission.
-    // Exact tiers are bitwise-identical, and these plans always read the
-    // raw image (insight), which keeps `Auto` off the approximate tier —
-    // only the footprint changes.
-    if knn_k.is_none() && ram_budget > 0 {
+    // Exact tiers are bitwise-identical, so only the footprint changes;
+    // Auto and Approx policies already size themselves.
+    if matches!(policy, StoragePolicy::Fixed(_)) && ram_budget > 0 {
         let resident = policy
             .resolve_for(n, access, &base_shard)
             .resident_bytes(n);
@@ -277,17 +376,19 @@ pub fn execute_job_with(
     }
 
     // the canonical plan fingerprint + dataset content hash address both
-    // cache levels (hopkins jobs seed by job id, so their fingerprints
-    // never falsely collide across jobs)
-    let fingerprint = wire::PlanWire::from_plan(&plan).to_json();
+    // cache levels. The fingerprint normalizes the scheduling lane away
+    // (priority never affects output), and hopkins jobs seed by job id,
+    // so their fingerprints never falsely collide across jobs.
+    let fingerprint = wire::PlanWire::from_plan(&plan).fingerprint();
+    let approx_tier = matches!(policy, StoragePolicy::Approx { .. });
     if let Some(c) = cache {
         if let Some(hit) = c.get_report(dataset_hash, &fingerprint, engine.name()) {
-            return Ok(output_of(job_id, &hit));
+            return Ok(hit);
         }
         // a different plan over the same data can still reuse the built
         // distance buffer (in-RAM layouts only; the executor re-checks
         // n and layout before accepting the injection)
-        if knn_k.is_none() {
+        if !approx_tier {
             let kind = policy.resolve_for(n, access, &base_shard).kind;
             if matches!(kind, StorageKind::Dense | StorageKind::Condensed) {
                 if let Some(store) =
@@ -301,12 +402,12 @@ pub fn execute_job_with(
 
     // charge the resolved footprint for the whole execution; the ticket
     // releases it (and wakes queued admissions) when the job finishes
-    let (ram_bytes, disk_bytes) = match knn_k {
-        Some(k) => {
-            let k_eff = StoragePolicy::Approx { k }.approx_k(n).unwrap_or(1);
+    let (ram_bytes, disk_bytes) = match &policy {
+        StoragePolicy::Approx { .. } => {
+            let k_eff = policy.approx_k(n).unwrap_or(1);
             (approx_resident_bytes(n, k_eff), 0)
         }
-        None => {
+        _ => {
             let d = policy.resolve_for(n, access, &base_shard);
             (d.resident_bytes(n), d.disk_bytes(n))
         }
@@ -318,7 +419,7 @@ pub fn execute_job_with(
 
     match cache {
         Some(c) => {
-            if knn_k.is_none() {
+            if !approx_tier {
                 if let Some(store) = &report.storage {
                     // put_store itself rejects the spilled layouts
                     c.put_store(
@@ -331,9 +432,9 @@ pub fn execute_job_with(
             }
             let report = Arc::new(report);
             c.put_report(dataset_hash, &fingerprint, engine.name(), report.clone());
-            Ok(output_of(job_id, &report))
+            Ok(report)
         }
-        None => Ok(output_of(job_id, &report)),
+        None => Ok(Arc::new(report)),
     }
 }
 
@@ -634,6 +735,44 @@ mod tests {
         assert!(snap.ram_peak >= 51_200, "nothing was ever charged: {snap:?}");
         assert_eq!(snap.ram_used, 0);
         assert_eq!(snap.degraded, 0);
+    }
+
+    #[test]
+    fn plan_submissions_execute_and_share_the_report_cache_across_lanes() {
+        use crate::analysis::{Analysis, Priority};
+        let service = svc(2, 8);
+        let ds = blobs(70, 2, 3, 0.35, 140);
+        let mk = |p: Priority| {
+            Analysis::of(ds.points.clone())
+                .ivat(true)
+                .render(true)
+                .priority(p)
+                .plan()
+                .unwrap()
+        };
+        let (_, t1) = service.submit_plan(mk(Priority::Interactive)).unwrap();
+        let a = t1.recv().unwrap().unwrap();
+        let (_, t2) = service.submit_plan(mk(Priority::Batch)).unwrap();
+        let b = t2.recv().unwrap().unwrap();
+        // identical output across lanes, and the batch submission hit the
+        // cache entry the interactive one populated (the fingerprint
+        // normalizes the lane away)
+        assert_eq!(a.vat.order, b.vat.order);
+        assert_eq!(
+            a.image.as_ref().unwrap().pixels,
+            b.image.as_ref().unwrap().pixels
+        );
+        assert!(service.cache().stats().report_hits >= 1);
+        // and byte-identical to direct in-process execution
+        let direct = mk(Priority::Interactive).execute(&BlockedEngine).unwrap();
+        assert_eq!(a.vat.order, direct.vat.order);
+        assert_eq!(
+            a.image.as_ref().unwrap().pixels,
+            direct.image.as_ref().unwrap().pixels
+        );
+        let snap = service.stats().snapshot();
+        assert_eq!(snap.submitted, 2);
+        assert_eq!(snap.completed, 2);
     }
 
     #[test]

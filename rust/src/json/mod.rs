@@ -15,6 +15,14 @@
 //! ([`Json::u64`], [`Json::f64`], [`Json::f64_fixed`]) — `Json::f64` uses
 //! Rust's shortest round-trip `Display`, so every finite `f64` parses back
 //! bit-identical.
+//!
+//! The parser is recursive-descent, so untrusted input (the HTTP front
+//! end feeds request bodies straight into it) could otherwise drive the
+//! recursion — and the thread's stack — as deep as it likes with a run of
+//! `[` bytes. Nesting is therefore capped at [`MAX_DEPTH`] containers:
+//! deeper documents fail with a clean `nesting deeper than …` error, never
+//! a stack overflow. Emission has no such limit (values are built in
+//! code, not parsed).
 
 use std::fmt::Write as _;
 
@@ -267,7 +275,11 @@ pub fn fmt_opt_fixed(v: Option<f64>, decimals: usize) -> String {
     }
 }
 
-const MAX_DEPTH: usize = 128;
+/// Maximum container nesting [`Json::parse`] accepts. Deeper documents are
+/// rejected with a `nesting deeper than …` parse error before the
+/// recursive-descent parser can exhaust the stack on adversarial input
+/// (e.g. a body of ten thousand `[` bytes over HTTP).
+pub const MAX_DEPTH: usize = 128;
 
 struct Parser<'a> {
     bytes: &'a [u8],
@@ -581,6 +593,33 @@ mod tests {
         ] {
             assert!(Json::parse(text).is_err(), "accepted: {text:?}");
         }
+    }
+
+    #[test]
+    fn nesting_at_the_documented_limit_parses() {
+        let text = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        let mut v = &Json::parse(&text).unwrap();
+        for _ in 0..MAX_DEPTH - 1 {
+            v = &v.as_arr().unwrap()[0];
+        }
+        assert_eq!(v.as_arr(), Some(&[][..]));
+    }
+
+    #[test]
+    fn nesting_beyond_the_limit_is_a_clean_error() {
+        // balanced but too deep
+        let text = format!("{}{}", "[".repeat(2 * MAX_DEPTH), "]".repeat(2 * MAX_DEPTH));
+        let err = Json::parse(&text).unwrap_err();
+        assert!(err.contains("nesting deeper than"), "{err}");
+        // adversarial: a long unclosed run must die at the depth check,
+        // not recurse once per byte until the stack runs out
+        let bomb = "[".repeat(1_000_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting deeper than"), "{err}");
+        // objects count toward the same limit
+        let obj_bomb = "{\"k\":".repeat(2 * MAX_DEPTH);
+        let err = Json::parse(&obj_bomb).unwrap_err();
+        assert!(err.contains("nesting deeper than"), "{err}");
     }
 
     #[test]

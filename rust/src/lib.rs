@@ -75,6 +75,7 @@ pub mod json;
 pub mod metrics;
 pub mod prng;
 pub mod runtime;
+pub mod server;
 pub mod vat;
 pub mod viz;
 

@@ -27,6 +27,7 @@ use fast_vat::dissimilarity::{Metric, ShardOptions, StorageKind};
 use fast_vat::error::{Error, Result};
 use fast_vat::hopkins::{hopkins_mean, HopkinsParams};
 use fast_vat::runtime::engine_by_name;
+use fast_vat::server::{HttpServer, ServerConfig};
 use fast_vat::vat::blocks::BlockDetector;
 use fast_vat::vat::{vat, OrderingStrategy};
 use fast_vat::viz::{ascii::to_ascii, pgm::write_pgm};
@@ -43,7 +44,7 @@ USAGE:
                     [--knn-k N] [--ordering prim|boruvka|auto] [--sample N] [--ivat]
                     [--shard-rows N] [--cache-shards N] [--spill-dir DIR]
                     [--plan-in plan.json] [--plan-out plan.json]
-                    [--manifest-out manifest.json]
+                    [--manifest-out manifest.json] [--report-out report.json]
                     [--out image.pgm] [--ascii N] [--artifacts DIR]
   fast-vat plan     [same dataset/plan flags as vat | --plan-in plan.json]
                     [--plan-out plan.json] [--json]
@@ -62,6 +63,8 @@ USAGE:
                     [--ordering prim|boruvka|auto]
                     [--ram-budget-mb N] [--disk-budget-mb N]
                     [--cache-reports N] [--cache-store-mb N]
+                    [--http ADDR] [--max-body-mb N]
+                    [--request-timeout-s N] [--accept-queue N]
   fast-vat bench-ordering [--sizes N,N,...] [--budget-s F] [--seed N]
                     [--out BENCH_ordering.json]
   fast-vat bench-approx [--sizes N,N,...] [--budget-s F] [--seed N]
@@ -101,7 +104,20 @@ WIRE: every executed request is a versioned, serializable plan. --plan-out
   serve keeps a content-addressed cache over the same hashes (--cache-reports
   whole reports, --cache-store-mb built distance stores) and a global
   admission ledger (--ram-budget-mb / --disk-budget-mb) that queues or
-  degrades jobs instead of oversubscribing the host.
+  degrades jobs instead of oversubscribing the host. --report-out writes
+  the run's canonical report document (schema fast-vat/report/v1).
+
+HTTP: serve --http ADDR skips the demo job mix and exposes the wire spine
+  over HTTP/1.1 instead: POST /v1/analyze, /v1/plan and /v1/replay take a
+  JSON envelope (plan or manifest plus an inline dataset) and answer with
+  the same canonical documents the CLI writes — byte-identical — or the
+  rendered PGM under `Accept: image/x-portable-graymap`; GET /v1/metrics
+  and /v1/healthz observe the server; POST /v1/shutdown drains it
+  (in-flight jobs finish, new ones get 503). --max-body-mb caps request
+  bodies (413), --request-timeout-s bounds slow peers (408), and
+  --accept-queue caps concurrent connections (429 + Retry-After). A
+  plan's `priority` field picks its queue lane (interactive before
+  batch, with aging so batch work is never starved).
 
 ORDERING: prim is the sequential O(n^2) sweep; boruvka reorders with a
   parallel Borůvka/merge MST build whose output is verified bitwise
@@ -324,6 +340,10 @@ fn cmd_vat(args: &[String]) -> Result<()> {
     }
     if let Some(out) = flags.get("manifest-out") {
         std::fs::write(out, report.manifest.to_json())?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = flags.get("report-out") {
+        std::fs::write(out, ReportWire::from_report(&report).to_json())?;
         println!("wrote {out}");
     }
     Ok(())
@@ -582,7 +602,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         disk_budget_bytes: get_usize(&flags, "disk-budget-mb", 0)? * 1_048_576,
         cache_reports: get_usize(&flags, "cache-reports", ServiceConfig::default().cache_reports)?,
         cache_store_bytes: get_usize(&flags, "cache-store-mb", 32)? * 1_048_576,
+        http_addr: flags.get("http").cloned(),
+        max_body_bytes: get_usize(&flags, "max-body-mb", 8)? * 1_048_576,
+        request_timeout_s: get_usize(&flags, "request-timeout-s", 30)? as u64,
+        accept_queue: get_usize(&flags, "accept-queue", 64)?,
     };
+    // --http switches serve from the synthetic demo mix to the networked
+    // front end; everything below (the demo path) is untouched otherwise
+    if cfg.http_addr.is_some() {
+        return serve_http(&cfg);
+    }
     let jobs = get_usize(&flags, "jobs", 16)?;
     let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
     let service = VatService::start(&cfg, engine);
@@ -638,6 +667,51 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     if service.ledger().is_limited() {
         let ls = service.ledger().snapshot();
+        println!(
+            "ledger: ram peak {} B, disk peak {} B, waited {}, degraded {}",
+            ls.ram_peak, ls.disk_peak, ls.waited, ls.degraded
+        );
+    }
+    Ok(())
+}
+
+/// `serve --http`: run the HTTP/1.1 front end until `POST /v1/shutdown`
+/// drains it, then print the same summary lines the demo path prints.
+fn serve_http(cfg: &ServiceConfig) -> Result<()> {
+    let addr = cfg.http_addr.clone().expect("serve_http needs http_addr");
+    let engine = engine_by_name(&cfg.engine, &cfg.artifacts_dir)?;
+    let service = VatService::start(cfg, engine);
+    let server = HttpServer::bind(
+        &ServerConfig {
+            addr,
+            max_body_bytes: cfg.max_body_bytes,
+            request_timeout: std::time::Duration::from_secs(cfg.request_timeout_s.max(1)),
+            accept_queue: cfg.accept_queue,
+        },
+        service,
+        &cfg.artifacts_dir,
+    )?;
+    println!(
+        "http service up: listening on {}, {} workers, queue {}, engine {}, storage {}",
+        server.local_addr(),
+        cfg.workers,
+        cfg.queue_depth,
+        server.context().service.engine_name(),
+        cfg.storage.as_str()
+    );
+    println!("endpoints: /v1/analyze /v1/plan /v1/replay /v1/metrics /v1/healthz /v1/shutdown");
+    let ctx = server.wait();
+    println!("drained: {} requests served", ctx.metrics.requests());
+    let cs = ctx.service.cache().stats();
+    println!(
+        "cache: reports {}/{} hit, stores {}/{} hit",
+        cs.report_hits,
+        cs.report_hits + cs.report_misses,
+        cs.store_hits,
+        cs.store_hits + cs.store_misses
+    );
+    if ctx.service.ledger().is_limited() {
+        let ls = ctx.service.ledger().snapshot();
         println!(
             "ledger: ram peak {} B, disk peak {} B, waited {}, degraded {}",
             ls.ram_peak, ls.disk_peak, ls.waited, ls.degraded

@@ -1,0 +1,389 @@
+//! HTTP/1.1 wire layer: request parsing and response serialization over
+//! any `Read`/`Write` pair — dependency-free, like every other byte-level
+//! codec in the crate.
+//!
+//! The parser is deliberately strict and bounded, because it faces
+//! untrusted bytes: the header section is capped at [`MAX_HEAD_BYTES`],
+//! bodies at the server's configured limit, and every malformed shape maps
+//! to a typed [`HttpError`] the connection handler turns into a 4xx — the
+//! server never panics or hangs on garbage input. Only what the service
+//! front end needs is implemented: one request per connection
+//! (`Connection: close`), `Content-Length` bodies (no chunked transfer
+//! coding), HTTP/1.0 and 1.1 request lines.
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Cap on the request line + headers, bytes. A header section larger than
+/// this is rejected as malformed before anything else is read.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// A parsed request. Header names are lowercased at parse time; values
+/// keep their bytes (trimmed of surrounding whitespace).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request method, verbatim (e.g. `GET`).
+    pub method: String,
+    /// Request target, verbatim (e.g. `/v1/analyze`).
+    pub path: String,
+    /// `(lowercased-name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// The body, exactly `Content-Length` bytes (empty when absent).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read. The connection handler maps each
+/// variant to a status code; [`HttpError::Closed`] gets no response (the
+/// peer is gone).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Syntactically invalid HTTP — status 400.
+    Malformed(String),
+    /// A body-bearing method without `Content-Length` — status 411.
+    LengthRequired,
+    /// Declared body exceeds the server's cap — status 413.
+    TooLarge {
+        /// The configured cap, bytes.
+        limit: usize,
+    },
+    /// The socket deadline expired mid-request — status 408.
+    Timeout,
+    /// The peer closed before sending a single byte.
+    Closed,
+}
+
+impl HttpError {
+    /// The status code this error maps to (`Closed` has none).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Malformed(_) => Some(400),
+            HttpError::LengthRequired => Some(411),
+            HttpError::TooLarge { .. } => Some(413),
+            HttpError::Timeout => Some(408),
+            HttpError::Closed => None,
+        }
+    }
+
+    /// Human-readable detail for the error document.
+    pub fn detail(&self) -> String {
+        match self {
+            HttpError::Malformed(m) => format!("malformed request: {m}"),
+            HttpError::LengthRequired => "Content-Length is required".to_string(),
+            HttpError::TooLarge { limit } => {
+                format!("request body exceeds the {limit}-byte limit")
+            }
+            HttpError::Timeout => "request timed out".to_string(),
+            HttpError::Closed => "connection closed".to_string(),
+        }
+    }
+}
+
+fn read_err(e: std::io::Error) -> HttpError {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Malformed(format!("read failed: {e}")),
+    }
+}
+
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read and parse one request. `max_body` caps the declared
+/// `Content-Length`; the header section is capped at [`MAX_HEAD_BYTES`].
+pub fn read_request<R: Read>(
+    stream: &mut R,
+    max_body: usize,
+) -> std::result::Result<Request, HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_len = loop {
+        if let Some(pos) = head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::Malformed(format!(
+                "header section exceeds {MAX_HEAD_BYTES} bytes"
+            )));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) if buf.is_empty() => return Err(HttpError::Closed),
+            Ok(0) => {
+                return Err(HttpError::Malformed(
+                    "connection closed mid-header".to_string(),
+                ))
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(read_err(e)),
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| HttpError::Malformed("header section is not UTF-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => (m, p, v),
+        _ => {
+            return Err(HttpError::Malformed(format!(
+                "bad request line {request_line:?}"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!(
+            "unsupported protocol {version:?}"
+        )));
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line {line:?}")))?;
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(HttpError::Malformed(format!("bad header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req_header = |n: &str| {
+        headers
+            .iter()
+            .find(|(k, _)| k == n)
+            .map(|(_, v)| v.as_str())
+    };
+    if req_header("transfer-encoding").is_some() {
+        return Err(HttpError::Malformed(
+            "chunked transfer coding is not supported; send Content-Length".to_string(),
+        ));
+    }
+    let body_len = match req_header("content-length") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            HttpError::Malformed(format!("invalid Content-Length {v:?}"))
+        })?),
+        None => None,
+    };
+
+    let mut body = buf.split_off(head_len + 4);
+    match body_len {
+        None => {
+            // body-bearing methods must declare their length up front —
+            // there is no other framing on a close-delimited connection
+            if method == "POST" || method == "PUT" || method == "PATCH" {
+                return Err(HttpError::LengthRequired);
+            }
+            body.clear();
+        }
+        Some(len) => {
+            if len > max_body {
+                return Err(HttpError::TooLarge { limit: max_body });
+            }
+            while body.len() < len {
+                match stream.read(&mut chunk) {
+                    Ok(0) => {
+                        return Err(HttpError::Malformed(format!(
+                            "connection closed mid-body ({} of {len} bytes)",
+                            body.len()
+                        )))
+                    }
+                    Ok(n) => body.extend_from_slice(&chunk[..n]),
+                    Err(e) => return Err(read_err(e)),
+                }
+            }
+            body.truncate(len);
+        }
+    }
+
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    })
+}
+
+/// A response ready to serialize. Every response closes the connection.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+    /// Additional headers (e.g. `Retry-After`).
+    pub extra_headers: Vec<(&'static str, String)>,
+}
+
+impl Response {
+    /// A JSON response (the body is already-serialized JSON text).
+    pub fn json(status: u16, body: String) -> Self {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    /// A binary PGM response.
+    pub fn pgm(body: Vec<u8>) -> Self {
+        Response {
+            status: 200,
+            content_type: "image/x-portable-graymap",
+            body,
+            extra_headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra header.
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.extra_headers.push((name, value.into()));
+        self
+    }
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+/// Serialize one response. The connection is single-use
+/// (`Connection: close`), so the peer can read to EOF.
+pub fn write_response<W: Write>(stream: &mut W, resp: &Response) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    for (name, value) in &resp.extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(bytes: &[u8]) -> std::result::Result<Request, HttpError> {
+        read_request(&mut std::io::Cursor::new(bytes.to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(
+            b"POST /v1/plan HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\
+              Accept: application/json\r\n\r\nhello",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/plan");
+        assert_eq!(req.header("accept"), Some("application/json"));
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn parses_a_get_without_body() {
+        let req = parse(b"GET /v1/healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_shapes() {
+        for (bytes, what) in [
+            (&b"whatever\r\n\r\n"[..], "no spaces"),
+            (b"GET /x HTTP/1.1 extra\r\n\r\n", "four-part request line"),
+            (b"GET /x HTTP/9.9\r\n\r\n", "wrong protocol"),
+            (b"GET /x SPDY/1\r\n\r\n", "not http"),
+            (b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", "bad header"),
+            (b"GET /x HTTP/1.1\r\nbad name: v\r\n\r\n", "space in name"),
+            (
+                b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+                "unparseable length",
+            ),
+            (
+                b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                "chunked",
+            ),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort", "truncated body"),
+            (b"GET /x HTTP", "truncated head"),
+        ] {
+            match parse(bytes) {
+                Err(HttpError::Malformed(_)) => {}
+                other => panic!("{what}: wanted Malformed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn post_without_length_is_411_and_oversized_is_413() {
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\n\r\n"),
+            Err(HttpError::LengthRequired)
+        ));
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\nContent-Length: 4096\r\n\r\n"),
+            Err(HttpError::TooLarge { limit: 1024 })
+        ));
+    }
+
+    #[test]
+    fn empty_connection_is_closed_not_malformed() {
+        assert!(matches!(parse(b""), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn oversized_header_section_is_rejected() {
+        let mut bytes = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..2048 {
+            bytes.extend_from_slice(format!("x-h{i}: {}\r\n", "v".repeat(16)).as_bytes());
+        }
+        bytes.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&bytes), Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn response_serialization_is_exact() {
+        let mut out = Vec::new();
+        let resp = Response::json(429, "{}".to_string()).with_header("Retry-After", "1");
+        write_response(&mut out, &resp).unwrap();
+        assert_eq!(
+            out,
+            b"HTTP/1.1 429 Too Many Requests\r\nContent-Type: application/json\r\n\
+              Content-Length: 2\r\nConnection: close\r\nRetry-After: 1\r\n\r\n{}"
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! HTTP front-end observability: request counters and per-endpoint latency
+//! histograms, the same lock-free log-bucket design as
+//! [`crate::coordinator::stats`] (bucket i covers `[2^i, 2^(i+1))` µs) so
+//! the two metric surfaces read the same way in `/v1/metrics`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::json::Json;
+
+const BUCKETS: usize = 24; // up to ~16.7 s
+
+/// Endpoint labels, in emission order. Requests that never resolve to a
+/// route (parse failures, 404s, connection-cap rejections) land in
+/// `other`.
+pub const ENDPOINTS: [&str; 7] = [
+    "analyze", "plan", "replay", "metrics", "healthz", "shutdown", "other",
+];
+
+#[derive(Default)]
+struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    fn record(&self, us: u64) {
+        let bucket = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    fn quantile(&self, q: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1); // bucket upper bound
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    fn mean(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct EndpointStats {
+    count: AtomicU64,
+    latency_us: Histogram,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_draining: AtomicU64,
+    endpoints: [EndpointStats; ENDPOINTS.len()],
+}
+
+/// Shared request metrics. Cheap to clone (Arc inside).
+#[derive(Clone, Default)]
+pub struct HttpMetrics {
+    inner: Arc<Inner>,
+}
+
+impl HttpMetrics {
+    /// New zeroed registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed exchange: the endpoint label (any
+    /// [`ENDPOINTS`] entry; unknown labels count as `other`), the status
+    /// written, and wall time from first byte read to response written.
+    pub fn record(&self, endpoint: &str, status: u16, elapsed_us: u64) {
+        let m = &self.inner;
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        match status {
+            200..=299 => {
+                m.responses_2xx.fetch_add(1, Ordering::Relaxed);
+            }
+            429 => {
+                m.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                m.responses_4xx.fetch_add(1, Ordering::Relaxed);
+            }
+            300..=499 => {
+                m.responses_4xx.fetch_add(1, Ordering::Relaxed);
+            }
+            503 => {
+                m.rejected_draining.fetch_add(1, Ordering::Relaxed);
+                m.responses_5xx.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                m.responses_5xx.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let i = ENDPOINTS
+            .iter()
+            .position(|e| *e == endpoint)
+            .unwrap_or(ENDPOINTS.len() - 1);
+        m.endpoints[i].count.fetch_add(1, Ordering::Relaxed);
+        m.endpoints[i].latency_us.record(elapsed_us);
+    }
+
+    /// Total requests observed.
+    pub fn requests(&self) -> u64 {
+        self.inner.requests.load(Ordering::Relaxed)
+    }
+
+    /// The `/v1/metrics` fragment: class counters plus per-endpoint
+    /// `{count, mean/p50/p99 µs}` rows (endpoints with no traffic are
+    /// still emitted, zeroed, so the document shape is stable).
+    pub fn to_value(&self) -> Json {
+        let m = &self.inner;
+        let load = |a: &AtomicU64| Json::u64(a.load(Ordering::Relaxed));
+        let endpoints = ENDPOINTS
+            .iter()
+            .zip(m.endpoints.iter())
+            .map(|(name, ep)| {
+                let h = &ep.latency_us;
+                (
+                    (*name).to_string(),
+                    Json::Obj(vec![
+                        ("count".into(), load(&ep.count)),
+                        ("mean_us".into(), Json::f64_fixed(h.mean(), 1)),
+                        ("p50_us".into(), Json::u64(h.quantile(0.5))),
+                        ("p99_us".into(), Json::u64(h.quantile(0.99))),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(vec![
+            ("requests".into(), load(&m.requests)),
+            ("responses_2xx".into(), load(&m.responses_2xx)),
+            ("responses_4xx".into(), load(&m.responses_4xx)),
+            ("responses_5xx".into(), load(&m.responses_5xx)),
+            ("rejected_busy".into(), load(&m.rejected_busy)),
+            ("rejected_draining".into(), load(&m.rejected_draining)),
+            ("endpoints".into(), Json::Obj(endpoints)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_statuses_and_labels_endpoints() {
+        let m = HttpMetrics::new();
+        m.record("analyze", 200, 1_500);
+        m.record("analyze", 429, 10);
+        m.record("plan", 400, 20);
+        m.record("healthz", 503, 5);
+        m.record("nonsense", 500, 7);
+        let v = m.to_value();
+        let get = |k: &str| v.get(k).and_then(Json::as_u64).unwrap();
+        assert_eq!(get("requests"), 5);
+        assert_eq!(get("responses_2xx"), 1);
+        assert_eq!(get("responses_4xx"), 2);
+        assert_eq!(get("responses_5xx"), 2);
+        assert_eq!(get("rejected_busy"), 1);
+        assert_eq!(get("rejected_draining"), 1);
+        let eps = v.get("endpoints").unwrap();
+        let count = |ep: &str| {
+            eps.get(ep)
+                .and_then(|e| e.get("count"))
+                .and_then(Json::as_u64)
+                .unwrap()
+        };
+        assert_eq!(count("analyze"), 2);
+        assert_eq!(count("plan"), 1);
+        assert_eq!(count("other"), 1); // the unknown label fell through
+        assert_eq!(count("replay"), 0); // untraveled endpoints stay present
+    }
+
+    #[test]
+    fn latency_quantiles_are_ordered_and_cover_the_mean() {
+        let m = HttpMetrics::new();
+        for us in [100u64, 200, 400, 800, 100_000] {
+            m.record("metrics", 200, us);
+        }
+        let v = m.to_value();
+        let ep = v.get("endpoints").unwrap().get("metrics").unwrap();
+        let p50 = ep.get("p50_us").and_then(Json::as_u64).unwrap();
+        let p99 = ep.get("p99_us").and_then(Json::as_u64).unwrap();
+        let mean = ep.get("mean_us").and_then(Json::as_f64).unwrap();
+        assert!(p50 <= p99);
+        assert!(p99 >= 100_000, "p99 bucket bound covers the max");
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let a = HttpMetrics::new();
+        let b = a.clone();
+        a.record("plan", 200, 1);
+        b.record("plan", 200, 1);
+        assert_eq!(a.requests(), 2);
+    }
+}

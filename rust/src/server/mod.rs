@@ -1,0 +1,242 @@
+//! HTTP/1.1 front end: networked plan execution over `std::net`.
+//!
+//! A dependency-free server (no async runtime, no HTTP crate — the same
+//! offline-safe policy as the rest of the crate) that exposes the wire
+//! spine over a TCP listener:
+//!
+//! | endpoint            | method | body → response |
+//! |---------------------|--------|-----------------|
+//! | `/v1/analyze`       | POST   | plan + inline dataset → canonical report JSON, or PGM via `Accept` |
+//! | `/v1/plan`          | POST   | plan + inline dataset → dry-run resolution (tier, bytes) |
+//! | `/v1/replay`        | POST   | manifest + inline dataset → bit-exact re-execution |
+//! | `/v1/metrics`       | GET    | request/service/cache/ledger counters |
+//! | `/v1/healthz`       | GET    | `200 ok` / `503 draining` |
+//! | `/v1/shutdown`      | POST   | start draining: finish in-flight, `503` new work |
+//!
+//! One thread per connection, one request per connection
+//! (`Connection: close`): connections beyond
+//! [`ServerConfig::accept_queue`] are shed with `429 Retry-After`,
+//! per-socket deadlines bound slow peers, bodies are capped, and every
+//! malformed request maps to a strict 4xx — the accept loop survives
+//! anything a client sends. Analyze submissions ride the service's
+//! priority queue (interactive before batch, with aging), its
+//! content-addressed cache, and its admission ledger, so the HTTP surface
+//! and the in-process API produce byte-identical artifacts.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use fast_vat::config::ServiceConfig;
+//! use fast_vat::coordinator::service::VatService;
+//! use fast_vat::dissimilarity::engine::BlockedEngine;
+//! use fast_vat::server::{HttpServer, ServerConfig};
+//!
+//! let service = VatService::start(&ServiceConfig::default(), Arc::new(BlockedEngine));
+//! let server = HttpServer::bind(
+//!     &ServerConfig { addr: "127.0.0.1:8080".into(), ..Default::default() },
+//!     service,
+//!     "artifacts",
+//! ).unwrap();
+//! let ctx = server.wait(); // blocks until POST /v1/shutdown drains the pool
+//! println!("served {} requests", ctx.metrics.requests());
+//! ```
+
+pub mod http;
+pub mod metrics;
+pub mod router;
+
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::service::VatService;
+use crate::error::Result;
+use http::HttpError;
+use router::ServerContext;
+
+/// Listener configuration (the CLI's `serve --http` flags).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral port).
+    pub addr: String,
+    /// Request body cap, bytes; larger declared bodies get `413`.
+    pub max_body_bytes: usize,
+    /// Per-connection read/write deadline; expiry gets `408`.
+    pub request_timeout: Duration,
+    /// Concurrent-connection cap; excess connections get `429`.
+    pub accept_queue: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            max_body_bytes: 8 * 1024 * 1024,
+            request_timeout: Duration::from_secs(30),
+            accept_queue: 64,
+        }
+    }
+}
+
+/// The running listener. [`HttpServer::wait`] blocks until a
+/// `POST /v1/shutdown` drains it; dropping it instead shuts down as soon
+/// as in-flight connections finish.
+pub struct HttpServer {
+    ctx: Arc<ServerContext>,
+    local_addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and start accepting. The service moves into the shared
+    /// [`ServerContext`], which [`HttpServer::wait`] hands back.
+    pub fn bind(
+        config: &ServerConfig,
+        service: VatService,
+        artifacts_dir: &str,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        // non-blocking accept so the loop can notice the drain flag
+        listener.set_nonblocking(true)?;
+        let ctx = Arc::new(ServerContext::new(service, artifacts_dir));
+        let active = Arc::new(AtomicUsize::new(0));
+        let accept = {
+            let ctx = ctx.clone();
+            let timeout = config.request_timeout;
+            let max_body = config.max_body_bytes;
+            let cap = config.accept_queue.max(1);
+            std::thread::Builder::new()
+                .name("http-accept".to_string())
+                .spawn(move || accept_loop(&listener, &ctx, &active, timeout, max_body, cap))?
+        };
+        Ok(HttpServer {
+            ctx,
+            local_addr,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The shared context (service, metrics, drain flag).
+    pub fn context(&self) -> &ServerContext {
+        &self.ctx
+    }
+
+    /// Block until the server drains: `POST /v1/shutdown` flips the flag,
+    /// in-flight requests complete, new ones are refused with `503`, and
+    /// the accept loop exits. Returns the context so the caller can print
+    /// final counters (the service shuts down when the last `Arc` drops).
+    pub fn wait(mut self) -> Arc<ServerContext> {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.ctx.clone()
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.ctx.draining.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    ctx: &Arc<ServerContext>,
+    active: &Arc<AtomicUsize>,
+    timeout: Duration,
+    max_body: usize,
+    cap: usize,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(timeout));
+                let _ = stream.set_write_timeout(Some(timeout));
+                // charge the connection before the handler exists so the
+                // cap can never be raced past
+                let in_flight = active.fetch_add(1, Ordering::SeqCst) + 1;
+                let over_capacity = in_flight > cap;
+                let conn_ctx = ctx.clone();
+                let conn_active = active.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("http-conn".to_string())
+                    .spawn(move || {
+                        handle_connection(&conn_ctx, stream, max_body, over_capacity);
+                        conn_active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    // thread exhaustion: shed silently rather than die
+                    active.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if ctx.is_draining() && active.load(Ordering::SeqCst) == 0 {
+                    break; // drained: nothing in flight, refuse-by-exit
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn elapsed_us(start: Instant) -> u64 {
+    u64::try_from(start.elapsed().as_micros()).unwrap_or(u64::MAX)
+}
+
+/// Serve exactly one request on this socket, then close it.
+fn handle_connection(ctx: &ServerContext, mut stream: TcpStream, max_body: usize, shed: bool) {
+    let start = Instant::now();
+    if shed {
+        // over the connection cap: consume the request (so the close is a
+        // clean FIN the peer can read the response through), answer 429
+        let _ = http::read_request(&mut stream, max_body);
+        let resp = router::error_response(429, "connection cap reached; retry shortly")
+            .with_header("Retry-After", "1");
+        let _ = http::write_response(&mut stream, &resp);
+        ctx.metrics.record("other", 429, elapsed_us(start));
+        return;
+    }
+    match http::read_request(&mut stream, max_body) {
+        Ok(req) => {
+            let endpoint = router::endpoint_of(&req.path);
+            let resp = router::handle(ctx, &req);
+            let _ = http::write_response(&mut stream, &resp);
+            ctx.metrics.record(endpoint, resp.status, elapsed_us(start));
+        }
+        // the peer vanished before sending anything: nothing to answer
+        Err(HttpError::Closed) => {}
+        Err(e) => {
+            let status = e.status().unwrap_or(400);
+            let resp = router::error_response(status, e.detail());
+            let _ = http::write_response(&mut stream, &resp);
+            // bytes may still be streaming in (oversized body, truncated
+            // frame): drain briefly so closing sends FIN, not an RST that
+            // could destroy the unread error response on the peer's side
+            drain(&mut stream);
+            ctx.metrics.record("other", status, elapsed_us(start));
+        }
+    }
+}
+
+fn drain(stream: &mut TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut sink = [0u8; 4096];
+    for _ in 0..256 {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}

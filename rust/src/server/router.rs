@@ -1,0 +1,558 @@
+//! Request routing: maps parsed HTTP requests onto the service layer.
+//!
+//! Every endpoint speaks the wire spine's canonical documents — plans,
+//! manifests and reports cross the socket byte-for-byte as their
+//! `to_json` emission, and every 4xx/5xx body is a `fast-vat/error/v1`
+//! document — so an HTTP client sees exactly what an in-process caller
+//! sees. `POST` bodies are strict envelopes (unknown fields rejected):
+//!
+//! * `/v1/analyze`, `/v1/plan` — `{"plan": <fast-vat/plan/v1>,
+//!   "dataset": {"points": [[..], ..]}}`
+//! * `/v1/replay` — `{"manifest": <fast-vat/manifest/v1>,
+//!   "dataset": {"points": [[..], ..]}}`
+//!
+//! Analyze submissions run through the service's priority queue (the
+//! plan's own `priority` field picks the lane) and its cache/admission
+//! facilities; replays re-execute inline on the connection thread, like
+//! the `fast-vat replay` CLI, so a drained pool can still be audited.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::analysis::{
+    approx_resident_bytes, AccessProfile, AnalysisReport, ErrorWire, PlanWire, ReplayManifest,
+    ReportWire, StoragePolicy,
+};
+use crate::coordinator::service::{SubmitError, VatService};
+use crate::data::Points;
+use crate::error::Error;
+use crate::json::Json;
+use crate::server::http::{Request, Response};
+use crate::server::metrics::HttpMetrics;
+use crate::viz::pgm::pgm_bytes;
+
+/// The PGM content type `/v1/analyze` and `/v1/replay` negotiate on.
+pub const PGM_CONTENT_TYPE: &str = "image/x-portable-graymap";
+
+/// Everything a connection handler needs, shared across all of them.
+pub struct ServerContext {
+    /// The worker pool requests execute on.
+    pub service: VatService,
+    /// Where replay resolves XLA engines from.
+    pub artifacts_dir: String,
+    /// Set by `/v1/shutdown`: refuse new work, drain in-flight.
+    pub draining: AtomicBool,
+    /// Request counters and latency histograms.
+    pub metrics: HttpMetrics,
+}
+
+impl ServerContext {
+    /// New context around a running service.
+    pub fn new(service: VatService, artifacts_dir: impl Into<String>) -> Self {
+        ServerContext {
+            service,
+            artifacts_dir: artifacts_dir.into(),
+            draining: AtomicBool::new(false),
+            metrics: HttpMetrics::new(),
+        }
+    }
+
+    /// Whether `/v1/shutdown` has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// Metrics label for a request path.
+pub fn endpoint_of(path: &str) -> &'static str {
+    match path {
+        "/v1/analyze" => "analyze",
+        "/v1/plan" => "plan",
+        "/v1/replay" => "replay",
+        "/v1/metrics" => "metrics",
+        "/v1/healthz" => "healthz",
+        "/v1/shutdown" => "shutdown",
+        _ => "other",
+    }
+}
+
+/// A `fast-vat/error/v1` response.
+pub fn error_response(status: u16, detail: impl Into<String>) -> Response {
+    Response::json(status, ErrorWire::new(status, detail).to_json())
+}
+
+/// Status for a service-layer error: wire/validation/data problems are the
+/// client's fault, everything else is the server's.
+fn status_for(e: &Error) -> u16 {
+    match e {
+        Error::Config(_) | Error::InvalidArg(_) | Error::Data(_) => 400,
+        _ => 500,
+    }
+}
+
+fn json_doc(status: u16, value: Json) -> Response {
+    let mut s = value.to_pretty(2);
+    s.push('\n');
+    Response::json(status, s)
+}
+
+/// Dispatch one request. Never panics: every failure path is a status.
+pub fn handle(ctx: &ServerContext, req: &Request) -> Response {
+    let draining = ctx.is_draining();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/healthz") => {
+            let (status, state) = if draining { (503, "draining") } else { (200, "ok") };
+            json_doc(status, Json::Obj(vec![("status".into(), Json::str(state))]))
+        }
+        ("GET", "/v1/metrics") => metrics_doc(ctx),
+        ("POST", "/v1/shutdown") => {
+            ctx.draining.store(true, Ordering::SeqCst);
+            json_doc(200, Json::Obj(vec![("status".into(), Json::str("draining"))]))
+        }
+        ("POST", "/v1/analyze" | "/v1/plan" | "/v1/replay") if draining => {
+            error_response(503, "service is draining; no new work accepted")
+        }
+        ("POST", "/v1/analyze") => analyze(ctx, req),
+        ("POST", "/v1/plan") => plan_check(ctx, req),
+        ("POST", "/v1/replay") => replay(ctx, req),
+        (
+            _,
+            path @ ("/v1/analyze" | "/v1/plan" | "/v1/replay" | "/v1/metrics" | "/v1/healthz"
+            | "/v1/shutdown"),
+        ) => {
+            let allow = if matches!(path, "/v1/metrics" | "/v1/healthz") {
+                "GET"
+            } else {
+                "POST"
+            };
+            error_response(
+                405,
+                format!("method {} not allowed for {path} (use {allow})", req.method),
+            )
+            .with_header("Allow", allow)
+        }
+        (_, path) => error_response(404, format!("no such endpoint {path}")),
+    }
+}
+
+/// Parse a request body as a strict JSON object envelope.
+fn parse_envelope(body: &[u8], allowed: &[&str], ctx: &str) -> Result<Json, Response> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| error_response(400, format!("{ctx} body is not UTF-8")))?;
+    let doc = Json::parse(text)
+        .map_err(|e| error_response(400, format!("{ctx} body is invalid JSON: {e}")))?;
+    let fields = doc
+        .as_obj()
+        .ok_or_else(|| error_response(400, format!("{ctx} body must be a JSON object")))?;
+    for (key, _) in fields {
+        if !allowed.contains(&key.as_str()) {
+            return Err(error_response(
+                400,
+                format!("unknown {ctx} field `{key}` (expected {})", allowed.join(", ")),
+            ));
+        }
+    }
+    for need in allowed {
+        if doc.get(need).is_none() {
+            return Err(error_response(400, format!("{ctx} body is missing `{need}`")));
+        }
+    }
+    Ok(doc)
+}
+
+/// Parse the inline dataset: `{"points": [[f64, ..], ..]}`.
+fn parse_points(doc: &Json) -> Result<Points, Response> {
+    let ds = doc
+        .get("dataset")
+        .ok_or_else(|| error_response(400, "missing `dataset`"))?;
+    let fields = ds
+        .as_obj()
+        .ok_or_else(|| error_response(400, "`dataset` must be an object"))?;
+    for (key, _) in fields {
+        if key != "points" {
+            return Err(error_response(
+                400,
+                format!("unknown dataset field `{key}` (expected points)"),
+            ));
+        }
+    }
+    let rows = ds
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| error_response(400, "`dataset.points` must be an array of rows"))?;
+    let mut data = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let cells = row.as_arr().ok_or_else(|| {
+            error_response(400, format!("`dataset.points[{i}]` must be an array of numbers"))
+        })?;
+        let mut out = Vec::with_capacity(cells.len());
+        for cell in cells {
+            out.push(cell.as_f64().ok_or_else(|| {
+                error_response(400, format!("`dataset.points[{i}]` must contain only numbers"))
+            })?);
+        }
+        data.push(out);
+    }
+    Points::from_rows(&data).map_err(|e| error_response(400, format!("invalid dataset: {e}")))
+}
+
+fn parse_plan(doc: &Json) -> Result<PlanWire, Response> {
+    let plan = doc
+        .get("plan")
+        .ok_or_else(|| error_response(400, "missing `plan`"))?;
+    PlanWire::from_json(&plan.to_compact()).map_err(|e| error_response(400, e.to_string()))
+}
+
+fn wants_pgm(req: &Request) -> bool {
+    req.header("accept").is_some_and(|v| v.contains(PGM_CONTENT_TYPE))
+}
+
+/// Report → response: canonical JSON, or the rendered PGM bytes under
+/// `Accept: image/x-portable-graymap`.
+fn respond_report(report: &AnalysisReport, pgm: bool) -> Response {
+    if pgm {
+        match &report.image {
+            Some(img) => Response::pgm(pgm_bytes(img)),
+            None => error_response(500, "execution produced no image despite render"),
+        }
+    } else {
+        Response::json(200, ReportWire::from_report(report).to_json())
+    }
+}
+
+fn analyze(ctx: &ServerContext, req: &Request) -> Response {
+    let doc = match parse_envelope(&req.body, &["plan", "dataset"], "analyze") {
+        Ok(d) => d,
+        Err(r) => return r,
+    };
+    let wire = match parse_plan(&doc) {
+        Ok(w) => w,
+        Err(r) => return r,
+    };
+    let points = match parse_points(&doc) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    let pgm = wants_pgm(req);
+    if pgm && !wire.render {
+        return error_response(400, "PGM output needs `plan.render: true`");
+    }
+    let plan = match wire.analysis_of(points).plan() {
+        Ok(p) => p,
+        Err(e) => return error_response(400, format!("invalid plan: {e}")),
+    };
+    let ticket = match ctx.service.try_submit_plan(plan) {
+        Ok((_, t)) => t,
+        Err(SubmitError::Backpressure) => {
+            return error_response(429, "queue full; retry later").with_header("Retry-After", "1")
+        }
+        Err(SubmitError::Closed) => return error_response(503, "service is shut down"),
+    };
+    match ticket.recv() {
+        Ok(Ok(report)) => respond_report(&report, pgm),
+        Ok(Err(e)) => error_response(status_for(&e), e.to_string()),
+        Err(_) => error_response(500, "worker disappeared mid-job"),
+    }
+}
+
+/// Dry-run validation: resolve the plan against the inline dataset and
+/// report the tier and footprint it would run with — nothing executes.
+fn plan_check(ctx: &ServerContext, req: &Request) -> Response {
+    let doc = match parse_envelope(&req.body, &["plan", "dataset"], "plan") {
+        Ok(d) => d,
+        Err(r) => return r,
+    };
+    let wire = match parse_plan(&doc) {
+        Ok(w) => w,
+        Err(r) => return r,
+    };
+    let points = match parse_points(&doc) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    let n = points.n();
+    if let Err(e) = wire.analysis_of(points).plan() {
+        return error_response(400, format!("invalid plan: {e}"));
+    }
+    // mirror the admission charge the service would make (see
+    // `execute_plan_with`): the post-sweep access profile drives the
+    // exact tiers; the approx tier is charged its kNN working set
+    let access = AccessProfile {
+        permuted: (wire.render && !wire.ivat)
+            || (wire.detector.is_some() && !wire.ivat)
+            || wire.insight
+            || wire.keep_matrix,
+    };
+    let (tier, storage, resident, disk) = match &wire.storage {
+        StoragePolicy::Approx { .. } => {
+            let k_eff = wire.storage.approx_k(n).unwrap_or(1);
+            ("approx", Json::Null, approx_resident_bytes(n, k_eff), 0)
+        }
+        policy => {
+            let d = policy.resolve_for(n, access, &wire.shard);
+            (
+                "exact",
+                Json::str(d.kind.as_str()),
+                d.resident_bytes(n),
+                d.disk_bytes(n),
+            )
+        }
+    };
+    let ram_budget = ctx.service.ledger().ram_budget();
+    let would_degrade = matches!(wire.storage, StoragePolicy::Fixed(_))
+        && ram_budget > 0
+        && resident > ram_budget;
+    json_doc(
+        200,
+        Json::Obj(vec![
+            ("schema".into(), Json::str("fast-vat/plan-check/v1")),
+            ("valid".into(), Json::Bool(true)),
+            ("n".into(), Json::usize(n)),
+            ("priority".into(), Json::str(wire.priority.as_str())),
+            ("engine".into(), Json::str(ctx.service.engine_name())),
+            ("tier".into(), Json::str(tier)),
+            ("storage".into(), storage),
+            ("resident_bytes".into(), Json::usize(resident)),
+            ("disk_bytes".into(), Json::usize(disk)),
+            ("would_degrade".into(), Json::Bool(would_degrade)),
+        ]),
+    )
+}
+
+fn replay(ctx: &ServerContext, req: &Request) -> Response {
+    let doc = match parse_envelope(&req.body, &["manifest", "dataset"], "replay") {
+        Ok(d) => d,
+        Err(r) => return r,
+    };
+    let manifest = match doc
+        .get("manifest")
+        .ok_or_else(|| error_response(400, "missing `manifest`"))
+        .and_then(|m| {
+            ReplayManifest::from_json(&m.to_compact())
+                .map_err(|e| error_response(400, e.to_string()))
+        }) {
+        Ok(m) => m,
+        Err(r) => return r,
+    };
+    let points = match parse_points(&doc) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    let pgm = wants_pgm(req);
+    if pgm && !manifest.plan.render {
+        return error_response(400, "PGM output needs a manifest whose plan rendered");
+    }
+    let report = match manifest.replay(points, &ctx.artifacts_dir) {
+        Ok(r) => r,
+        Err(e) => return error_response(status_for(&e), e.to_string()),
+    };
+    if let Err(e) = manifest.verify_replay(&report) {
+        // divergence after a hash-verified input is an integrity failure,
+        // not a client mistake
+        return error_response(500, e.to_string());
+    }
+    respond_report(&report, pgm)
+}
+
+fn metrics_doc(ctx: &ServerContext) -> Response {
+    let s = ctx.service.stats().snapshot();
+    let c = ctx.service.cache().stats();
+    let l = ctx.service.ledger().snapshot();
+    let stage = |(mean, p50, p99): (f64, u64, u64)| {
+        Json::Obj(vec![
+            ("mean_us".into(), Json::f64_fixed(mean, 1)),
+            ("p50_us".into(), Json::u64(p50)),
+            ("p99_us".into(), Json::u64(p99)),
+        ])
+    };
+    let service = Json::Obj(vec![
+        ("submitted".into(), Json::u64(s.submitted)),
+        ("completed".into(), Json::u64(s.completed)),
+        ("failed".into(), Json::u64(s.failed)),
+        ("shed".into(), Json::u64(s.shed)),
+        ("queue_depth".into(), Json::usize(ctx.service.queue_depth())),
+        ("distance_us".into(), stage(s.distance_us)),
+        ("order_us".into(), stage(s.order_us)),
+        ("total_us".into(), stage(s.total_us)),
+    ]);
+    let cache = Json::Obj(vec![
+        ("report_hits".into(), Json::u64(c.report_hits)),
+        ("report_misses".into(), Json::u64(c.report_misses)),
+        ("report_evictions".into(), Json::u64(c.report_evictions)),
+        ("store_hits".into(), Json::u64(c.store_hits)),
+        ("store_misses".into(), Json::u64(c.store_misses)),
+        ("store_evictions".into(), Json::u64(c.store_evictions)),
+    ]);
+    let ledger = Json::Obj(vec![
+        ("ram_used".into(), Json::usize(l.ram_used)),
+        ("disk_used".into(), Json::usize(l.disk_used)),
+        ("ram_peak".into(), Json::usize(l.ram_peak)),
+        ("disk_peak".into(), Json::usize(l.disk_peak)),
+        ("waited".into(), Json::u64(l.waited)),
+        ("degraded".into(), Json::u64(l.degraded)),
+    ]);
+    json_doc(
+        200,
+        Json::Obj(vec![
+            ("schema".into(), Json::str("fast-vat/metrics/v1")),
+            ("engine".into(), Json::str(ctx.service.engine_name())),
+            ("draining".into(), Json::Bool(ctx.is_draining())),
+            ("http".into(), ctx.metrics.to_value()),
+            ("service".into(), service),
+            ("cache".into(), cache),
+            ("ledger".into(), ledger),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+    use crate::data::generators::blobs;
+    use crate::dissimilarity::engine::BlockedEngine;
+    use std::sync::Arc;
+
+    fn ctx() -> ServerContext {
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..Default::default()
+        };
+        ServerContext::new(
+            VatService::start(&cfg, Arc::new(BlockedEngine)),
+            "artifacts",
+        )
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn points_json(points: &Points) -> String {
+        let rows: Vec<Json> = (0..points.n())
+            .map(|i| Json::Arr(points.row(i).iter().map(|&v| Json::f64(v)).collect()))
+            .collect();
+        Json::Arr(rows).to_compact()
+    }
+
+    fn plan_doc(points: &Points, render: bool) -> String {
+        use crate::analysis::Analysis;
+        let plan = Analysis::of(points.clone()).ivat(true).render(render).plan().unwrap();
+        format!(
+            "{{\"plan\": {}, \"dataset\": {{\"points\": {}}}}}",
+            PlanWire::from_plan(&plan).to_json(),
+            points_json(points)
+        )
+    }
+
+    #[test]
+    fn healthz_flips_on_shutdown_and_posts_get_503() {
+        let ctx = ctx();
+        assert_eq!(handle(&ctx, &get("/v1/healthz")).status, 200);
+        assert_eq!(handle(&ctx, &post("/v1/shutdown", "")).status, 200);
+        assert_eq!(handle(&ctx, &get("/v1/healthz")).status, 503);
+        let refused = handle(&ctx, &post("/v1/analyze", "{}"));
+        assert_eq!(refused.status, 503);
+        // the error body is a parseable error document
+        let err = ErrorWire::from_json(std::str::from_utf8(&refused.body).unwrap()).unwrap();
+        assert_eq!(err.status, 503);
+        // metrics stay readable while draining
+        assert_eq!(handle(&ctx, &get("/v1/metrics")).status, 200);
+    }
+
+    #[test]
+    fn analyze_matches_in_process_execution_bytes() {
+        let ctx = ctx();
+        let ds = blobs(40, 2, 2, 0.4, 150);
+        let resp = handle(&ctx, &post("/v1/analyze", &plan_doc(&ds.points, false)));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let direct = {
+            use crate::analysis::Analysis;
+            let report = Analysis::of(ds.points.clone())
+                .ivat(true)
+                .render(false)
+                .plan()
+                .unwrap()
+                .execute(&BlockedEngine)
+                .unwrap();
+            ReportWire::from_report(&report).to_json()
+        };
+        assert_eq!(resp.body, direct.into_bytes());
+    }
+
+    #[test]
+    fn plan_check_resolves_without_executing() {
+        let ctx = ctx();
+        let ds = blobs(30, 2, 2, 0.4, 151);
+        let resp = handle(&ctx, &post("/v1/plan", &plan_doc(&ds.points, false)));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let doc = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(doc.get("valid").and_then(Json::as_bool), Some(true));
+        assert_eq!(doc.get("storage").and_then(Json::as_str), Some("dense"));
+        assert_eq!(
+            doc.get("resident_bytes").and_then(Json::as_usize),
+            Some(30 * 30 * 8)
+        );
+        // nothing ran
+        assert_eq!(ctx.service.stats().snapshot().submitted, 0);
+    }
+
+    #[test]
+    fn malformed_bodies_are_400_error_documents() {
+        let ctx = ctx();
+        for body in [
+            "not json at all",
+            "{\"plan\": {}}",                       // missing dataset
+            "{\"plan\": {}, \"dataset\": {}, \"x\": 1}", // unknown field
+            "[1, 2, 3]",                           // not an object
+        ] {
+            let resp = handle(&ctx, &post("/v1/analyze", body));
+            assert_eq!(resp.status, 400, "{body}");
+            let err = ErrorWire::from_json(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(err.status, 400);
+        }
+    }
+
+    #[test]
+    fn unknown_paths_and_wrong_methods() {
+        let ctx = ctx();
+        assert_eq!(handle(&ctx, &get("/nope")).status, 404);
+        let resp = handle(&ctx, &get("/v1/analyze"));
+        assert_eq!(resp.status, 405);
+        assert!(resp
+            .extra_headers
+            .iter()
+            .any(|(k, v)| *k == "Allow" && v == "POST"));
+    }
+
+    #[test]
+    fn metrics_document_carries_all_sections() {
+        let ctx = ctx();
+        ctx.metrics.record("healthz", 200, 10);
+        let resp = handle(&ctx, &get("/v1/metrics"));
+        let doc = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        for key in ["schema", "engine", "draining", "http", "service", "cache", "ledger"] {
+            assert!(doc.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(
+            doc.get("http")
+                .and_then(|h| h.get("requests"))
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+    }
+}

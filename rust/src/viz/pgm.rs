@@ -6,12 +6,21 @@ use std::path::Path;
 use super::GrayImage;
 use crate::error::{Error, Result};
 
+/// The binary PGM (P5) byte stream for an image — what [`write_pgm`]
+/// puts on disk and the HTTP front end puts on the wire, byte for byte.
+pub fn pgm_bytes(img: &GrayImage) -> Vec<u8> {
+    let header = format!("P5\n{} {}\n255\n", img.width, img.height);
+    let mut bytes = Vec::with_capacity(header.len() + img.pixels.len());
+    bytes.extend_from_slice(header.as_bytes());
+    bytes.extend_from_slice(&img.pixels);
+    bytes
+}
+
 /// Write a binary PGM (P5).
 pub fn write_pgm(img: &GrayImage, path: impl AsRef<Path>) -> Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
-    write!(w, "P5\n{} {}\n255\n", img.width, img.height)?;
-    w.write_all(&img.pixels)?;
+    w.write_all(&pgm_bytes(img))?;
     Ok(())
 }
 
@@ -92,6 +101,21 @@ mod tests {
         write_pgm(&img, &p).unwrap();
         let back = read_pgm(&p).unwrap();
         assert_eq!(back, img);
+    }
+
+    #[test]
+    fn pgm_bytes_matches_file_output_and_reparses() {
+        let img = GrayImage {
+            pixels: vec![0, 64, 128, 255, 3, 9],
+            width: 3,
+            height: 2,
+        };
+        let bytes = pgm_bytes(&img);
+        assert!(bytes.starts_with(b"P5\n3 2\n255\n"));
+        let p = std::env::temp_dir().join("fastvat_bytes.pgm");
+        write_pgm(&img, &p).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), bytes);
+        assert_eq!(parse_pgm(&bytes).unwrap(), img);
     }
 
     #[test]

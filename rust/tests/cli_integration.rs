@@ -299,6 +299,24 @@ fn replay_reproduces_the_same_pgm_bytes() {
 }
 
 #[test]
+fn vat_report_out_round_trips_through_the_codec() {
+    use fast_vat::analysis::ReportWire;
+
+    // --report-out writes the run's canonical report document, and the
+    // codec reads it back losslessly (parse -> emit is a fixed point)
+    let report = std::env::temp_dir().join("fastvat_cli_report.json");
+    let out = run_ok(&[
+        "vat", "--dataset", "blobs", "--n", "100", "--ivat",
+        "--report-out", report.to_str().unwrap(),
+    ]);
+    assert!(out.contains("wrote"), "{out}");
+    let text = std::fs::read_to_string(&report).unwrap();
+    assert!(text.contains("\"schema\": \"fast-vat/report/v1\""), "{text}");
+    let wire = ReportWire::from_json(&text).expect("report parses back");
+    assert_eq!(wire.to_json(), text, "canonical emission is stable");
+}
+
+#[test]
 fn replay_rejects_a_different_dataset() {
     let csv = std::env::temp_dir().join("fastvat_cli_replay2.csv");
     let other = std::env::temp_dir().join("fastvat_cli_replay2_other.csv");

@@ -1,0 +1,344 @@
+//! End-to-end tests for the HTTP/1.1 front end: a real listener on a
+//! loopback socket, raw `TcpStream` clients, and byte-level comparison
+//! against in-process execution. The wire spine is transport-invariant —
+//! a report fetched over HTTP must be the same bytes `execute()` emits —
+//! and the server must survive anything a client throws at it.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+use fast_vat::analysis::{Analysis, ErrorWire, PlanWire, Priority, ReportWire, StoragePolicy};
+use fast_vat::config::ServiceConfig;
+use fast_vat::coordinator::service::VatService;
+use fast_vat::data::generators::blobs;
+use fast_vat::data::Points;
+use fast_vat::dissimilarity::StorageKind;
+use fast_vat::json::Json;
+use fast_vat::runtime::engine_by_name;
+use fast_vat::server::{HttpServer, ServerConfig};
+use fast_vat::viz::pgm::pgm_bytes;
+
+fn server(engine: &str, accept_queue: usize, timeout: Duration) -> HttpServer {
+    let cfg = ServiceConfig {
+        workers: 2,
+        queue_depth: 32,
+        engine: engine.to_string(),
+        ..Default::default()
+    };
+    let service = VatService::start(&cfg, engine_by_name(engine, "artifacts").unwrap());
+    HttpServer::bind(
+        &ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            request_timeout: timeout,
+            accept_queue,
+            ..Default::default()
+        },
+        service,
+        "artifacts",
+    )
+    .unwrap()
+}
+
+/// One request, one connection: write the frame, read to EOF.
+fn exchange(addr: SocketAddr, frame: &[u8]) -> (u16, String, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(frame).unwrap();
+    read_response(&mut stream)
+}
+
+fn read_response(stream: &mut TcpStream) -> (u16, String, Vec<u8>) {
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).unwrap();
+    let pos = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header end in {:?}", String::from_utf8_lossy(&buf)));
+    let head = String::from_utf8(buf[..pos].to_vec()).unwrap();
+    let status = head
+        .split(' ')
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    (status, head, buf[pos + 4..].to_vec())
+}
+
+fn get_frame(path: &str) -> Vec<u8> {
+    format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").into_bytes()
+}
+
+fn post_frame(path: &str, body: &str, accept: Option<&str>) -> Vec<u8> {
+    let mut head = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    if let Some(a) = accept {
+        head.push_str(&format!("Accept: {a}\r\n"));
+    }
+    head.push_str("\r\n");
+    let mut frame = head.into_bytes();
+    frame.extend_from_slice(body.as_bytes());
+    frame
+}
+
+fn points_json(points: &Points) -> String {
+    let rows: Vec<Json> = (0..points.n())
+        .map(|i| Json::Arr(points.row(i).iter().map(|&v| Json::f64(v)).collect()))
+        .collect();
+    Json::Arr(rows).to_compact()
+}
+
+fn envelope(key: &str, doc: &str, points: &Points) -> String {
+    format!(
+        "{{\"{key}\": {doc}, \"dataset\": {{\"points\": {}}}}}",
+        points_json(points)
+    )
+}
+
+#[test]
+fn healthz_and_metrics_respond_over_the_wire() {
+    let server = server("blocked", 64, Duration::from_secs(10));
+    let addr = server.local_addr();
+    let (status, head, body) = exchange(addr, &get_frame("/v1/healthz"));
+    assert_eq!(status, 200);
+    assert!(head.contains("application/json"));
+    assert!(String::from_utf8(body).unwrap().contains("\"ok\""));
+    let (status, _, body) = exchange(addr, &get_frame("/v1/metrics"));
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some("fast-vat/metrics/v1")
+    );
+}
+
+#[test]
+fn analyze_and_replay_match_in_process_bytes_across_engines_and_storage() {
+    for engine_name in ["naive", "blocked"] {
+        let server = server(engine_name, 64, Duration::from_secs(30));
+        let addr = server.local_addr();
+        for storage in ["dense", "condensed"] {
+            let ds = blobs(42, 2, 2, 0.4, 7);
+            let request = Analysis::of(ds.points.clone())
+                .storage(StoragePolicy::Fixed(StorageKind::parse(storage).unwrap()))
+                .ivat(true)
+                .render(true);
+            let plan = request.plan().unwrap();
+            let plan_json = PlanWire::from_plan(&plan).to_json();
+            let engine = engine_by_name(engine_name, "artifacts").unwrap();
+            let report = plan.execute(engine.as_ref()).unwrap();
+            let expect = ReportWire::from_report(&report).to_json().into_bytes();
+
+            let body = envelope("plan", &plan_json, &ds.points);
+            let (status, _, got) = exchange(addr, &post_frame("/v1/analyze", &body, None));
+            assert_eq!(
+                status,
+                200,
+                "{engine_name}/{storage}: {:?}",
+                String::from_utf8_lossy(&got)
+            );
+            assert_eq!(got, expect, "{engine_name}/{storage} JSON parity");
+
+            // the rendered image crosses the wire bit-for-bit too
+            let (status, head, img) = exchange(
+                addr,
+                &post_frame("/v1/analyze", &body, Some("image/x-portable-graymap")),
+            );
+            assert_eq!(status, 200);
+            assert!(head.contains("image/x-portable-graymap"));
+            assert_eq!(img, pgm_bytes(report.image.as_ref().unwrap()));
+
+            // replaying the run's manifest over HTTP reproduces the report
+            let replay_body = envelope("manifest", &report.manifest.to_json(), &ds.points);
+            let (status, _, got) = exchange(addr, &post_frame("/v1/replay", &replay_body, None));
+            assert_eq!(status, 200, "{engine_name}/{storage} replay");
+            assert_eq!(got, expect, "{engine_name}/{storage} replay parity");
+        }
+    }
+}
+
+#[test]
+fn concurrent_mixed_priority_clients_get_in_process_bytes() {
+    let server = server("blocked", 64, Duration::from_secs(30));
+    let addr = server.local_addr();
+    let handles: Vec<_> = (0..8usize)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let ds = blobs(30 + i, 2, 2, 0.4, 300 + i as u64);
+                let priority = if i % 2 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Batch
+                };
+                let request = Analysis::of(ds.points.clone())
+                    .ivat(true)
+                    .render(false)
+                    .priority(priority);
+                let plan = request.plan().unwrap();
+                let plan_json = PlanWire::from_plan(&plan).to_json();
+                let engine = engine_by_name("blocked", "artifacts").unwrap();
+                let report = plan.execute(engine.as_ref()).unwrap();
+                let expect = ReportWire::from_report(&report).to_json().into_bytes();
+                let body = envelope("plan", &plan_json, &ds.points);
+                let (status, _, got) = exchange(addr, &post_frame("/v1/analyze", &body, None));
+                assert_eq!(
+                    status,
+                    200,
+                    "client {i}: {:?}",
+                    String::from_utf8_lossy(&got)
+                );
+                assert_eq!(got, expect, "client {i} parity");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // every exchange was counted on the analyze endpoint
+    let (_, _, body) = exchange(addr, &get_frame("/v1/metrics"));
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let analyze_count = doc
+        .get("http")
+        .and_then(|h| h.get("endpoints"))
+        .and_then(|e| e.get("analyze"))
+        .and_then(|a| a.get("count"))
+        .and_then(Json::as_u64);
+    assert_eq!(analyze_count, Some(8));
+}
+
+#[test]
+fn malformed_requests_get_4xx_and_the_server_survives() {
+    let server = server("blocked", 64, Duration::from_secs(5));
+    let addr = server.local_addr();
+
+    let cases: &[(&[u8], u16)] = &[
+        (b"GARBAGE\r\n\r\n", 400),
+        (b"GET /v1/healthz HTTP/9.9\r\n\r\n", 400),
+        (b"POST /v1/analyze HTTP/1.1\r\nHost: t\r\n\r\n", 411),
+        (
+            b"POST /v1/analyze HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n",
+            413,
+        ),
+        (b"BREW /v1/analyze HTTP/1.1\r\nContent-Length: 0\r\n\r\n", 405),
+        (
+            b"POST /v1/analyze HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            400,
+        ),
+    ];
+    for (frame, want) in cases {
+        let (status, _, body) = exchange(addr, frame);
+        assert_eq!(status, *want, "{:?}", String::from_utf8_lossy(frame));
+        // every refusal is a parseable fast-vat/error/v1 document
+        let err = ErrorWire::from_json(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(err.status, *want);
+    }
+
+    // truncated frames: close the write side mid-request
+    let truncated: &[&[u8]] = &[
+        b"GET /v1/healthz HT",
+        b"POST /v1/analyze HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc",
+    ];
+    for frame in truncated {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(frame).unwrap();
+        stream.shutdown(Shutdown::Write).unwrap();
+        let (status, _, _) = read_response(&mut stream);
+        assert_eq!(status, 400, "{:?}", String::from_utf8_lossy(frame));
+    }
+
+    // garbage JSON through a well-formed frame is a clean 400 document
+    let (status, _, body) = exchange(addr, &post_frame("/v1/analyze", "not json", None));
+    assert_eq!(status, 400);
+    let err = ErrorWire::from_json(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(err.status, 400);
+
+    // and the server is still alive after all of it
+    let (status, _, _) = exchange(addr, &get_frame("/v1/healthz"));
+    assert_eq!(status, 200);
+}
+
+#[test]
+fn shutdown_drains_in_flight_work_and_refuses_new_posts() {
+    let server = server("blocked", 64, Duration::from_secs(10));
+    let addr = server.local_addr();
+
+    // a parked connection keeps the accept loop alive until we are done
+    let holder = TcpStream::connect(addr).unwrap();
+
+    let worker = std::thread::spawn(move || {
+        let ds = blobs(80, 2, 2, 0.4, 900);
+        let plan = Analysis::of(ds.points.clone())
+            .ivat(true)
+            .render(false)
+            .plan()
+            .unwrap();
+        let body = envelope("plan", &PlanWire::from_plan(&plan).to_json(), &ds.points);
+        exchange(addr, &post_frame("/v1/analyze", &body, None))
+    });
+
+    // wait until the job is past the drain gate (already in the queue)
+    let mut submitted = 0;
+    for _ in 0..2000 {
+        let (_, _, body) = exchange(addr, &get_frame("/v1/metrics"));
+        let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        submitted = doc
+            .get("service")
+            .and_then(|s| s.get("submitted"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        if submitted >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(submitted >= 1, "analyze never reached the queue");
+
+    let (status, _, _) = exchange(addr, &post_frame("/v1/shutdown", "", None));
+    assert_eq!(status, 200);
+    let (status, _, _) = exchange(addr, &get_frame("/v1/healthz"));
+    assert_eq!(status, 503);
+    let ds = blobs(10, 2, 2, 0.4, 901);
+    let plan = Analysis::of(ds.points.clone())
+        .ivat(true)
+        .render(false)
+        .plan()
+        .unwrap();
+    let body = envelope("plan", &PlanWire::from_plan(&plan).to_json(), &ds.points);
+    let (status, _, _) = exchange(addr, &post_frame("/v1/analyze", &body, None));
+    assert_eq!(status, 503, "new work is refused while draining");
+
+    // the in-flight job still completed with a full report
+    let (status, _, body) = worker.join().unwrap();
+    assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&body));
+    assert!(String::from_utf8(body).unwrap().contains("fast-vat/report/v1"));
+
+    // release the parked connection; the drained server exits
+    drop(holder);
+    let ctx = server.wait();
+    assert!(ctx.is_draining());
+    assert!(ctx.metrics.requests() >= 4);
+}
+
+#[test]
+fn connections_over_the_cap_are_shed_with_429() {
+    let server = server("blocked", 1, Duration::from_secs(5));
+    let addr = server.local_addr();
+    let holder = TcpStream::connect(addr).unwrap();
+    // give the listener time to accept (and charge) the parked connection
+    std::thread::sleep(Duration::from_millis(50));
+    let (status, head, _) = exchange(addr, &get_frame("/v1/healthz"));
+    assert_eq!(status, 429);
+    assert!(head.contains("Retry-After"));
+    drop(holder);
+    // the slot frees up once the parked connection is reaped
+    let mut last = 0;
+    for _ in 0..200 {
+        let (status, _, _) = exchange(addr, &get_frame("/v1/healthz"));
+        last = status;
+        if status == 200 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(last, 200);
+}

@@ -18,7 +18,8 @@
 //!   replay's provenance chain.
 
 use fast_vat::analysis::{
-    Analysis, AnalysisReport, PlanWire, ReplayManifest, ReportWire, SamplePolicy, StoragePolicy,
+    Analysis, AnalysisReport, PlanWire, Priority, ReplayManifest, ReportWire, SamplePolicy,
+    StoragePolicy,
 };
 use fast_vat::data::generators::blobs;
 use fast_vat::data::Points;
@@ -48,6 +49,7 @@ fn golden_plan_wire() -> PlanWire {
         },
         sample: SamplePolicy::Above(64),
         ordering: OrderingStrategy::Boruvka,
+        priority: Priority::Batch,
         seed: 12345,
         ivat: true,
         render: false,
@@ -91,6 +93,7 @@ fn plan_golden_parses_and_reemits_identically() {
     assert_eq!(wire.shard, expect.shard);
     assert_eq!(wire.sample, expect.sample);
     assert_eq!(wire.ordering, expect.ordering);
+    assert_eq!(wire.priority, Priority::Batch);
     assert_eq!(wire.seed, expect.seed);
     assert!(wire.ivat && !wire.render && !wire.keep_matrix && !wire.insight);
     let det = wire.detector.as_ref().unwrap();
