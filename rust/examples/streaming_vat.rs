@@ -66,7 +66,7 @@ fn main() -> fast_vat::Result<()> {
             }
         }
         let snap = sv.snapshot()?;
-        println!("{}", to_ascii(&render(&snap.view()), 28));
+        println!("{}", to_ascii(&render(&snap.view()?), 28));
     }
     println!("final verdict: {} block(s) in the live window", sv.snapshot()?.blocks.len());
     Ok(())

@@ -128,6 +128,16 @@ pub struct Analysis {
     /// resolved decision exactly (same n, same layout, no sampling);
     /// anything else falls through to a fresh build.
     prebuilt: Option<Arc<DistanceStore>>,
+    /// Incremental injection (coordinator-only, not a wire knob): a VAT
+    /// result the streaming coordinator's maintained [`IncrementalVat`]
+    /// state already materialized for this exact window. The executor
+    /// adopts it — skipping the ordering sweep — only on the exact
+    /// storage-backed route (no approx tier, no forced-approx reroute)
+    /// and only when it covers every point; anything else falls through
+    /// to the normal sweep, so injection can never change output.
+    ///
+    /// [`IncrementalVat`]: crate::vat::incremental::IncrementalVat
+    injected_vat: Option<VatResult>,
 }
 
 impl Analysis {
@@ -150,6 +160,7 @@ impl Analysis {
             ordering: OrderingStrategy::Auto,
             priority: Priority::Interactive,
             prebuilt: None,
+            injected_vat: None,
         }
     }
 
@@ -444,6 +455,18 @@ impl AnalysisPlan {
         self
     }
 
+    /// Coordinator-only incremental injection: seed the executor with the
+    /// VAT result the streaming coordinator's maintained state already
+    /// produced for this window (see `Analysis::injected_vat`). The
+    /// incremental contract — pinned by `tests/streaming_incremental.rs` —
+    /// is that the injected result is bitwise equal to what the sweep
+    /// would compute, so downstream stages (iVAT, blocks, render, wire)
+    /// cannot observe the difference.
+    pub(crate) fn with_injected_vat(mut self, v: VatResult) -> AnalysisPlan {
+        self.spec.injected_vat = Some(v);
+        self
+    }
+
     /// Coordinator-only admission hook: rewrite the plan's storage policy
     /// (e.g. `Fixed(Dense)` → `Auto { budget }`) and revalidate. Exact
     /// tiers produce bitwise-identical output whatever the layout, so a
@@ -633,14 +656,31 @@ impl AnalysisPlan {
         // sweep arrives pre-computed from stage 1; a storage-backed approx
         // request — or the FAST_VAT_TEST_FORCE_APPROX parity harness —
         // runs `knn::approx_vat_on` here instead.
+        let mut incremental_used = false;
         let (v, approx, ordering_fell_back) = match pre_vat {
             Some((v, outcome)) => (v, Some(outcome), None),
             None => {
                 let s = store
                     .as_deref()
                     .expect("exact tiers always build distance storage");
+                // incremental injection (streaming coordinator): adopt the
+                // maintained-state result instead of sweeping — exact
+                // storage-backed route only, and only when it covers the
+                // window. The FAST_VAT_TEST_FORCE_APPROX harness keeps
+                // its reroute (whose k = n−1 contract is itself bitwise),
+                // so the parity legs still exercise the sweep.
+                let injected = spec
+                    .injected_vat
+                    .as_ref()
+                    .filter(|iv| {
+                        store_approx_k.is_none() && !force_approx() && iv.order.len() == s.n()
+                    })
+                    .cloned();
                 let t = Instant::now();
-                let (v, outcome, fell_back) = if let Some(k) = store_approx_k {
+                let (v, outcome, fell_back) = if let Some(iv) = injected {
+                    incremental_used = true;
+                    (iv, None, None)
+                } else if let Some(k) = store_approx_k {
                     let av = knn::approx_vat_on(s, k, spec.seed);
                     (
                         VatResult {
@@ -821,6 +861,7 @@ impl AnalysisPlan {
             sample: sample_info,
             timings,
             manifest,
+            incremental: incremental_used,
         })
     }
 }

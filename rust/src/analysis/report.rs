@@ -123,6 +123,12 @@ pub struct AnalysisReport {
     pub reordered: Option<DistanceMatrix>,
     /// sVAT escalation record (when the sample policy fired).
     pub sample: Option<SampleInfo>,
+    /// Whether the ordering came from the streaming coordinator's
+    /// maintained incremental state instead of a from-scratch sweep. The
+    /// incremental contract makes the two bitwise identical; this flag
+    /// only records the route (it is excluded from replay manifests,
+    /// which always re-run the sweep).
+    pub incremental: bool,
     /// Per-stage wall timings.
     pub timings: StageTimings,
     /// Bit-exact replay provenance: the plan echo, the dataset's content

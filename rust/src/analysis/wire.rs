@@ -1191,6 +1191,9 @@ pub(crate) fn roundtrip_plan(plan: &AnalysisPlan) -> Result<AnalysisPlan> {
     // cache injection is executor state, not a wire knob: carry it across
     // so store reuse stays observable under the roundtrip harness
     rt.spec.prebuilt = plan.spec.prebuilt.clone();
+    // likewise incremental injection: the streaming route must survive the
+    // reroute so the roundtrip leg exercises the same code paths
+    rt.spec.injected_vat = plan.spec.injected_vat.clone();
     Ok(rt)
 }
 

@@ -436,6 +436,161 @@ pub fn run_approx_bench(
     })
 }
 
+/// One measured cell of the streaming benchmark grid: an arm over one
+/// window size.
+#[derive(Debug, Clone)]
+pub struct StreamingBenchRow {
+    /// Window size (points resident while ticking).
+    pub window: usize,
+    /// `"incremental"` (policy `Always`: maintained MST + replay) or
+    /// `"recompute"` (policy `Never`: full Prim sweep per changed window).
+    pub arm: &'static str,
+    /// Wall-clock statistics over repeated ticks (one push + one
+    /// changed-window snapshot — the monitor's steady-state unit of work).
+    pub timing: Timing,
+    /// Fallbacks to the full sweep the arm recorded while measuring
+    /// (expected 0 on the clean generator stream; nonzero would mean the
+    /// incremental arm partly timed recompute ticks, so it is reported
+    /// rather than hidden).
+    pub fallbacks: u64,
+}
+
+/// The streaming benchmark: per-tick incremental vs recompute cost over a
+/// grid of window sizes. Serializes to the `BENCH_streaming.json` schema
+/// the `bench-baseline` CI leg validates (gate: incremental ≤ recompute at
+/// the top window).
+#[derive(Debug, Clone)]
+pub struct StreamingBenchReport {
+    /// Measured cells, grid order: per window, `incremental` then
+    /// `recompute`.
+    pub rows: Vec<StreamingBenchRow>,
+    /// `available_parallelism` on the measuring host.
+    pub threads_available: usize,
+    /// Where the numbers came from (host/harness description).
+    pub provenance: String,
+}
+
+impl StreamingBenchReport {
+    /// JSON in the checked-in `BENCH_streaming.json` schema, on the shared
+    /// [`crate::json`] escaping/number discipline.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"fast-vat/bench-streaming/v1\",\n");
+        out.push_str(&format!(
+            "  \"provenance\": {},\n",
+            json::quote(&self.provenance)
+        ));
+        out.push_str(&format!(
+            "  \"threads_available\": {},\n",
+            self.threads_available
+        ));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"window\": {}, \"arm\": {}, \
+                 \"mean_s\": {}, \"min_s\": {}, \"max_s\": {}, \
+                 \"samples\": {}, \"fallbacks\": {}}}{}\n",
+                r.window,
+                json::quote(r.arm),
+                json::fmt_fixed(r.timing.mean_s, 6),
+                json::fmt_fixed(r.timing.min_s, 6),
+                json::fmt_fixed(r.timing.max_s, 6),
+                r.timing.samples,
+                r.fallbacks,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Aligned human-readable table with per-window speedups.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["window", "arm", "mean tick (s)", "speedup vs recompute"]);
+        for r in &self.rows {
+            let base = self
+                .rows
+                .iter()
+                .find(|b| b.window == r.window && b.arm == "recompute")
+                .map(|b| b.timing.mean_s);
+            let speedup = match base {
+                Some(b) if r.timing.mean_s > 0.0 => format!("{:.2}x", b / r.timing.mean_s),
+                _ => "-".into(),
+            };
+            t.row(&[
+                r.window.to_string(),
+                r.arm.to_string(),
+                r.timing.secs(),
+                speedup,
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Run the deterministic streaming benchmark: for each window size, fill a
+/// [`StreamingVat`] from a seeded GMM pool, then time the monitor's
+/// steady-state tick — one push (evicting the oldest point) plus one
+/// changed-window snapshot — under the incremental route (policy `Always`)
+/// and the from-scratch route (policy `Never`). The pool is 4× the window,
+/// cycled, so no point is ever resident twice (the tie-free certificate
+/// stays clean and the incremental arm times the replay, not fallbacks).
+/// Both arms include the same window gather + block detection; the delta
+/// is the O(w²) Prim sweep the incremental route replaces with an
+/// O(w log w) replay.
+pub fn run_streaming_bench(
+    windows: &[usize],
+    budget_s: f64,
+    seed: u64,
+) -> Result<StreamingBenchReport> {
+    use crate::coordinator::streaming::{IncrementalPolicy, StreamingConfig, StreamingVat};
+    let threads_all = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let mut rows = Vec::new();
+    for &w in windows {
+        let pool = generators::gmm(4 * w.max(1), 2, 3, seed);
+        for (arm, policy) in [
+            ("incremental", IncrementalPolicy::Always),
+            ("recompute", IncrementalPolicy::Never),
+        ] {
+            let mut sv = StreamingVat::new(
+                2,
+                StreamingConfig {
+                    window: w,
+                    incremental: policy,
+                    ..Default::default()
+                },
+            )?;
+            for i in 0..w {
+                sv.push(pool.points.row(i))?;
+            }
+            let mut next = w;
+            let timing = time_auto(budget_s, || {
+                // the generator stream cannot fail shape/arity checks
+                sv.push(pool.points.row(next % (4 * w))).expect("bench push");
+                next += 1;
+                let snap = sv.snapshot().expect("bench snapshot");
+                observe(&snap.vat.order);
+            });
+            rows.push(StreamingBenchRow {
+                window: w,
+                arm,
+                timing,
+                fallbacks: sv.stats().fallbacks(),
+            });
+        }
+    }
+    Ok(StreamingBenchReport {
+        rows,
+        threads_available: threads_all,
+        provenance: format!(
+            "native: fast-vat bench-streaming (gmm seed {seed}, dense snapshots, \
+             pool 4x window, {threads_all} threads available)"
+        ),
+    })
+}
+
 /// Simple fixed-width table printer (paper-style benchmark output).
 pub struct Table {
     headers: Vec<String>,

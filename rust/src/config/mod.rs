@@ -10,6 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::coordinator::streaming::IncrementalPolicy;
 use crate::dissimilarity::{Metric, ShardOptions, StorageKind};
 use crate::error::{Error, Result};
 use crate::vat::OrderingStrategy;
@@ -278,6 +279,13 @@ pub struct ServiceConfig {
     /// Concurrent HTTP connection cap (the `accept_queue` key, int ≥ 1).
     /// Connections beyond it are shed with `429 Retry-After`.
     pub accept_queue: usize,
+    /// Default incremental-route policy for streams the process hosts
+    /// (the `streaming_incremental` key: "always" | "never" | "auto").
+    /// Serve installs it as the process-wide
+    /// [`crate::coordinator::streaming::default_policy`]; snapshots are
+    /// bitwise identical under every setting — the knob only trades
+    /// per-push maintenance against per-poll sweep cost.
+    pub streaming_incremental: IncrementalPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -300,6 +308,7 @@ impl Default for ServiceConfig {
             max_body_bytes: 8 * 1_048_576,
             request_timeout_s: 30,
             accept_queue: 64,
+            streaming_incremental: IncrementalPolicy::Auto,
         }
     }
 }
@@ -446,6 +455,13 @@ impl ServiceConfig {
                         .filter(|&i| i > 0)
                         .ok_or_else(|| Error::Config("accept_queue must be int > 0".into()))?
                         as usize
+                }
+                "streaming_incremental" => {
+                    let p = v.as_str().ok_or_else(|| {
+                        Error::Config("streaming_incremental must be a string".into())
+                    })?;
+                    cfg.streaming_incremental = IncrementalPolicy::parse(p)
+                        .map_err(|e| Error::Config(format!("bad streaming_incremental: {e}")))?;
                 }
                 other => {
                     return Err(Error::Config(format!("unknown [service] key: {other}")))
@@ -624,6 +640,29 @@ mod tests {
         for bad in [
             "[service]\nordering = \"kruskal\"\n",
             "[service]\nordering = 1\n",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn service_config_streaming_incremental_key() {
+        let doc = Document::parse("[service]\nstreaming_incremental = \"always\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.streaming_incremental, IncrementalPolicy::Always);
+        let doc = Document::parse("[service]\nstreaming_incremental = \"never\"\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.streaming_incremental, IncrementalPolicy::Never);
+        // default is auto; bad values fail loudly
+        let doc = Document::parse("[service]\n").unwrap();
+        assert_eq!(
+            ServiceConfig::from_document(&doc).unwrap().streaming_incremental,
+            IncrementalPolicy::Auto
+        );
+        for bad in [
+            "[service]\nstreaming_incremental = \"sometimes\"\n",
+            "[service]\nstreaming_incremental = 1\n",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ServiceConfig::from_document(&doc).is_err(), "{bad}");

@@ -19,6 +19,7 @@ use fast_vat::analysis::{
 use fast_vat::config::ServiceConfig;
 use fast_vat::coordinator::pipeline::{auto_cluster, PipelineConfig};
 use fast_vat::coordinator::service::VatService;
+use fast_vat::coordinator::streaming::{self, IncrementalPolicy};
 use fast_vat::data::csv::{load_csv, CsvOptions};
 use fast_vat::data::generators;
 use fast_vat::data::scale::Scaler;
@@ -65,10 +66,13 @@ USAGE:
                     [--cache-reports N] [--cache-store-mb N]
                     [--http ADDR] [--max-body-mb N]
                     [--request-timeout-s N] [--accept-queue N]
+                    [--streaming-incremental always|never|auto]
   fast-vat bench-ordering [--sizes N,N,...] [--budget-s F] [--seed N]
                     [--out BENCH_ordering.json]
   fast-vat bench-approx [--sizes N,N,...] [--budget-s F] [--seed N]
                     [--out BENCH_approx.json]
+  fast-vat bench-streaming [--windows N,N,...] [--budget-s F] [--seed N]
+                    [--out BENCH_streaming.json]
   fast-vat info     [--artifacts DIR]
 
 STORAGE: condensed keeps the n(n-1)/2 upper triangle resident (~half the
@@ -118,6 +122,17 @@ HTTP: serve --http ADDR skips the demo job mix and exposes the wire spine
   --accept-queue caps concurrent connections (429 + Retry-After). A
   plan's `priority` field picks its queue lane (interactive before
   batch, with aging so batch work is never starved).
+
+STREAMING: sliding-window monitors (`coordinator::streaming`) maintain an
+  incremental MST + seed over the window, so a changed-window snapshot is
+  an O(w log w) replay instead of the O(w^2) sweep — bitwise identical by
+  the verify-and-fallback contract (NaNs, duplicate distances, or a stale
+  tree fall back to the full sweep and are counted in /v1/metrics'
+  `streaming` section). --streaming-incremental (or the
+  `streaming_incremental` config key) sets the process default policy:
+  always, never, or auto (incremental at windows >= 128). bench-streaming
+  times incremental vs recompute per tick and writes the checked-in
+  BENCH_streaming.json baseline.
 
 ORDERING: prim is the sequential O(n^2) sweep; boruvka reorders with a
   parallel Borůvka/merge MST build whose output is verified bitwise
@@ -606,7 +621,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_body_bytes: get_usize(&flags, "max-body-mb", 8)? * 1_048_576,
         request_timeout_s: get_usize(&flags, "request-timeout-s", 30)? as u64,
         accept_queue: get_usize(&flags, "accept-queue", 64)?,
+        streaming_incremental: IncrementalPolicy::parse(
+            flags
+                .get("streaming-incremental")
+                .map(String::as_str)
+                .unwrap_or("auto"),
+        )?,
     };
+    // install the process-wide default policy: every stream this process
+    // hosts follows the operator's knob unless its config pins one
+    streaming::set_default_policy(cfg.streaming_incremental);
     // --http switches serve from the synthetic demo mix to the networked
     // front end; everything below (the demo path) is untouched otherwise
     if cfg.http_addr.is_some() {
@@ -672,7 +696,30 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             ls.ram_peak, ls.disk_peak, ls.waited, ls.degraded
         );
     }
+    print_streaming_summary(cfg.streaming_incremental);
     Ok(())
+}
+
+/// Serve-summary line for the incremental-streaming counters (policy
+/// always; counters only once a stream has seen traffic).
+fn print_streaming_summary(policy: IncrementalPolicy) {
+    let st = streaming::global_stats();
+    if st.pushes() == 0 {
+        println!("streaming: policy {}, no streams hosted", policy.as_str());
+        return;
+    }
+    println!(
+        "streaming: policy {}, {} pushes, {} incremental updates, snapshots {} \
+         ({} cached / {} incremental / {} full), {} fallbacks",
+        policy.as_str(),
+        st.pushes(),
+        st.incremental_updates(),
+        st.snapshots(),
+        st.snapshots_cached(),
+        st.snapshots_incremental(),
+        st.snapshots_full(),
+        st.fallbacks()
+    );
 }
 
 /// `serve --http`: run the HTTP/1.1 front end until `POST /v1/shutdown`
@@ -717,6 +764,7 @@ fn serve_http(cfg: &ServiceConfig) -> Result<()> {
             ls.ram_peak, ls.disk_peak, ls.waited, ls.degraded
         );
     }
+    print_streaming_summary(cfg.streaming_incremental);
     Ok(())
 }
 
@@ -778,6 +826,35 @@ fn cmd_bench_approx(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_streaming(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let windows: Vec<usize> = flags
+        .get("windows")
+        .map(String::as_str)
+        .unwrap_or("512,2048,8192")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--windows: bad window {s}")))
+        })
+        .collect::<Result<_>>()?;
+    let budget_s: f64 = match flags.get("budget-s") {
+        None => 1.0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::InvalidArg("--budget-s must be a float".into()))?,
+    };
+    let seed = get_usize(&flags, "seed", 42)? as u64;
+    let report = fast_vat::bench_util::run_streaming_bench(&windows, budget_s, seed)?;
+    print!("{}", report.table());
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &[])?;
     let dir = flags
@@ -824,6 +901,7 @@ fn main() {
         "serve" => cmd_serve(rest),
         "bench-ordering" => cmd_bench_ordering(rest),
         "bench-approx" => cmd_bench_approx(rest),
+        "bench-streaming" => cmd_bench_streaming(rest),
         "info" => cmd_info(rest),
         _ => usage(),
     };

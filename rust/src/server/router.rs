@@ -390,6 +390,30 @@ fn metrics_doc(ctx: &ServerContext) -> Response {
         ("waited".into(), Json::u64(l.waited)),
         ("degraded".into(), Json::u64(l.degraded)),
     ]);
+    // process-wide incremental-streaming counters (every StreamingVat the
+    // process hosts mirrors into the global stats)
+    let st = crate::coordinator::streaming::global_stats();
+    let streaming = Json::Obj(vec![
+        ("pushes".into(), Json::u64(st.pushes())),
+        ("evictions".into(), Json::u64(st.evictions())),
+        ("incremental_updates".into(), Json::u64(st.incremental_updates())),
+        ("reconnect_scanned".into(), Json::u64(st.reconnect_scanned())),
+        ("reconnect_max".into(), Json::u64(st.reconnect_max())),
+        ("snapshots".into(), Json::u64(st.snapshots())),
+        ("snapshots_cached".into(), Json::u64(st.snapshots_cached())),
+        (
+            "snapshots_incremental".into(),
+            Json::u64(st.snapshots_incremental()),
+        ),
+        ("snapshots_full".into(), Json::u64(st.snapshots_full())),
+        ("fallbacks_ties".into(), Json::u64(st.fallbacks_ties())),
+        ("fallbacks_nan".into(), Json::u64(st.fallbacks_nan())),
+        ("fallbacks_invalid".into(), Json::u64(st.fallbacks_invalid())),
+        (
+            "policy_default".into(),
+            Json::str(crate::coordinator::streaming::default_policy().as_str()),
+        ),
+    ]);
     json_doc(
         200,
         Json::Obj(vec![
@@ -400,6 +424,7 @@ fn metrics_doc(ctx: &ServerContext) -> Response {
             ("service".into(), service),
             ("cache".into(), cache),
             ("ledger".into(), ledger),
+            ("streaming".into(), streaming),
         ]),
     )
 }
@@ -545,8 +570,26 @@ mod tests {
         ctx.metrics.record("healthz", 200, 10);
         let resp = handle(&ctx, &get("/v1/metrics"));
         let doc = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
-        for key in ["schema", "engine", "draining", "http", "service", "cache", "ledger"] {
+        let sections = [
+            "schema",
+            "engine",
+            "draining",
+            "http",
+            "service",
+            "cache",
+            "ledger",
+            "streaming",
+        ];
+        for key in sections {
             assert!(doc.get(key).is_some(), "missing {key}");
+        }
+        // the streaming section always carries the route counters, even
+        // before any stream exists in the process
+        for key in ["incremental_updates", "snapshots_incremental", "fallbacks_nan"] {
+            assert!(
+                doc.get("streaming").and_then(|s| s.get(key)).is_some(),
+                "missing streaming.{key}"
+            );
         }
         assert_eq!(
             doc.get("http")

@@ -1,0 +1,832 @@
+//! Incremental VAT — a persistent, updatable MST + seed + replay state for
+//! the streaming coordinator (ROADMAP: "update, don't recompute").
+//!
+//! [`IncrementalVat`] owns a ring-buffered window distance matrix and, when
+//! structure maintenance is on, three incremental facts about it:
+//!
+//! * the window's **minimum spanning tree** — spliced on insert via the
+//!   cycle property (the new MST is a subset of the old tree plus the new
+//!   vertex's star: a 2w−1-candidate Kruskal, O(w log w)) and stitched on
+//!   eviction via Borůvka-style replacement-edge rounds restricted to the
+//!   cut (each round's minimum outgoing edges are MST edges by the cut
+//!   property);
+//! * the **VAT seed** — per-row maxima maintained per slot, so the global
+//!   row-major argmax falls out of an O(w) row scan per snapshot;
+//! * a **tie-free certificate** — an exact multiset of the off-diagonal
+//!   distance bit patterns. While every pair value is distinct and finite
+//!   the window's MST is *unique*, and a root-down replay of the
+//!   maintained tree provably reproduces the full Prim sweep bit for bit
+//!   (order, display MST, and therefore the iVAT image). The moment a
+//!   duplicate or NaN appears, [`IncrementalVat::try_snapshot`] declines
+//!   and the caller falls back to the from-scratch build — mirroring the
+//!   Borůvka tier's verify-and-fallback contract, so the incremental route
+//!   can never change output.
+//!
+//! Why the certificate is sufficient: with all off-diagonal values
+//! distinct, (1) the MST is unique, so the maintained tree *is* Prim's
+//! tree; (2) at every Prim step the frontier minima are distinct matrix
+//! entries, so the argmin tie-break never fires and the replay's
+//! `(weight, index)` heap pops in exactly Prim's selection order; (3) each
+//! selected vertex's unique nearest prefix element is its tree parent, so
+//! the display-MST parents match `prim::mst_from_order`'s pinned rule.
+//! Duplicate *points* (distance 0.0 twice) and NaN-poisoned windows are
+//! exactly the inputs that violate this, and they take the fallback route.
+//!
+//! The coordinator stays the metric owner: [`IncrementalVat::push`] takes
+//! the new point's distance row, so this layer never sees points.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::boruvka::{component_labels, key_bits, Dsu, EdgeKey};
+use super::ivat::mst_adjacency;
+use super::VatResult;
+
+/// Why [`IncrementalVat::try_snapshot`] would (or did) decline the
+/// incremental route. The streaming stats surface counts these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IncStatus {
+    /// Tie-free window with a maintained spanning tree: the next snapshot
+    /// is an O(w log w) replay instead of an O(w²) sweep.
+    Ready,
+    /// Structure maintenance is disabled (approx tier, or the streaming
+    /// policy resolved to from-scratch snapshots).
+    Off,
+    /// NaN distances are resident: Prim's sticky-NaN semantics need the
+    /// full sweep.
+    Nan,
+    /// Duplicate off-diagonal distances are resident: the MST may not be
+    /// unique, so the replay proof does not apply.
+    Ties,
+    /// The maintained tree went stale (an update arrived while the window
+    /// was dirty, or an internal invariant check failed); it awaits
+    /// re-adoption from the next full build via [`IncrementalVat::adopt`].
+    Stale,
+}
+
+/// What an eviction did to the maintained tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictInfo {
+    /// The tree was reconnected incrementally (replacement-edge search).
+    pub spliced: bool,
+    /// Row entries scanned by the reconnect rounds — the stats surface
+    /// reports the total and the per-eviction maximum.
+    pub scanned: u64,
+}
+
+/// Ring-buffered window distance matrix with incrementally maintained
+/// MST / seed / tie-free-certificate state. See the module docs for the
+/// exactness argument; `tests/streaming_incremental.rs` pins it.
+pub struct IncrementalVat {
+    /// Window capacity; the ring matrix is `cap × cap`, slot-indexed.
+    cap: usize,
+    /// Resident points. Logical index `i` lives in slot `(start + i) % cap`
+    /// and keeps its slot for its whole residency.
+    n: usize,
+    start: usize,
+    /// Slot-indexed symmetric matrix, allocated lazily on first push.
+    dist: Vec<f64>,
+    /// Structure maintenance on/off (off = plain ring matrix, every
+    /// incremental query declines).
+    maintain: bool,
+    /// Tie-free certificate: count per off-diagonal unordered-pair value
+    /// bit pattern (−0.0 normalized; diagonal zeros excluded — they are
+    /// never edges and never win a strict-`>` argmax over a row that
+    /// starts from the diagonal's own row scan).
+    counts: HashMap<u64, u32>,
+    /// Number of bit patterns currently resident with multiplicity ≥ 2.
+    dup_values: usize,
+    /// Number of resident unordered pairs with NaN distance.
+    nan_pairs: usize,
+    /// Maintained spanning tree, slot endpoints. Valid iff `tree_valid`.
+    edges: Vec<(u32, u32, f64)>,
+    tree_valid: bool,
+    /// Per-slot row maximum over the resident logical columns (diagonal
+    /// included) and the slot of its first logical occurrence.
+    row_max: Vec<f64>,
+    row_argmax: Vec<u32>,
+}
+
+impl IncrementalVat {
+    /// A window of capacity `cap` (≥ 1). With `maintain` off only the ring
+    /// matrix is kept — pushes and evictions are pure matrix updates and
+    /// [`IncrementalVat::try_snapshot`] always declines.
+    pub fn new(cap: usize, maintain: bool) -> Self {
+        assert!(cap >= 1, "window capacity must be >= 1");
+        Self {
+            cap,
+            n: 0,
+            start: 0,
+            dist: Vec::new(),
+            maintain,
+            counts: HashMap::new(),
+            dup_values: 0,
+            nan_pairs: 0,
+            edges: Vec::new(),
+            tree_valid: true,
+            row_max: Vec::new(),
+            row_argmax: Vec::new(),
+        }
+    }
+
+    /// Resident points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when no points are resident.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Window capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Whether every resident off-diagonal distance is distinct and finite
+    /// (the precondition for the incremental route).
+    pub fn tie_free(&self) -> bool {
+        self.dup_values == 0 && self.nan_pairs == 0
+    }
+
+    /// Current incremental-route status (see [`IncStatus`]).
+    pub fn status(&self) -> IncStatus {
+        if !self.maintain {
+            IncStatus::Off
+        } else if self.nan_pairs > 0 {
+            IncStatus::Nan
+        } else if self.dup_values > 0 {
+            IncStatus::Ties
+        } else if !self.tree_valid {
+            IncStatus::Stale
+        } else {
+            IncStatus::Ready
+        }
+    }
+
+    #[inline]
+    fn slot(&self, i: usize) -> usize {
+        (self.start + i) % self.cap
+    }
+
+    #[inline]
+    fn logical(&self, slot: usize) -> usize {
+        (slot + self.cap - self.start) % self.cap
+    }
+
+    /// Distance between logical residents `i` and `j`.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.n && j < self.n);
+        self.dist[self.slot(i) * self.cap + self.slot(j)]
+    }
+
+    /// Gather the window into a logical-order row-major `n × n` buffer —
+    /// the bridge to the snapshot storage builders. Entries are verbatim
+    /// slot-matrix copies, so any storage built from this buffer is
+    /// bitwise interchangeable with one built from per-push metric evals.
+    pub fn to_logical_flat(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            let si = self.slot(i);
+            let row = &self.dist[si * self.cap..si * self.cap + self.cap];
+            for (j, dst) in out[i * n..(i + 1) * n].iter_mut().enumerate() {
+                *dst = row[self.slot(j)];
+            }
+        }
+        out
+    }
+
+    fn value_bits(v: f64) -> u64 {
+        // normalize −0.0 so a mirror-written pair can never self-collide
+        let v = if v == 0.0 { 0.0 } else { v };
+        v.to_bits()
+    }
+
+    fn add_value(&mut self, v: f64) {
+        if v.is_nan() {
+            self.nan_pairs += 1;
+            return;
+        }
+        let c = self.counts.entry(Self::value_bits(v)).or_insert(0);
+        *c += 1;
+        if *c == 2 {
+            self.dup_values += 1;
+        }
+    }
+
+    fn remove_value(&mut self, v: f64) {
+        if v.is_nan() {
+            self.nan_pairs -= 1;
+            return;
+        }
+        let bits = Self::value_bits(v);
+        match self.counts.get_mut(&bits) {
+            Some(c) if *c > 1 => {
+                *c -= 1;
+                if *c == 1 {
+                    self.dup_values -= 1;
+                }
+            }
+            Some(_) => {
+                self.counts.remove(&bits);
+            }
+            None => debug_assert!(false, "certificate underflow"),
+        }
+    }
+
+    /// Fold one arriving point into the window. `dists[i]` must be the
+    /// distance from the new point to logical resident `i` — the caller
+    /// owns the metric; this layer never sees points. Returns `true` when
+    /// the maintained tree was spliced incrementally (the "updates
+    /// applied" stat).
+    ///
+    /// # Panics
+    /// When the window is full (evict first) or `dists.len() != len()`.
+    pub fn push(&mut self, dists: &[f64]) -> bool {
+        assert!(self.n < self.cap, "push into a full window: evict first");
+        assert_eq!(dists.len(), self.n, "one distance per resident point");
+        if self.dist.is_empty() {
+            self.dist = vec![0.0; self.cap * self.cap];
+            self.row_max = vec![f64::NEG_INFINITY; self.cap];
+            self.row_argmax = vec![0; self.cap];
+        }
+        let s_new = self.slot(self.n);
+        for (i, &v) in dists.iter().enumerate() {
+            let si = self.slot(i);
+            self.dist[si * self.cap + s_new] = v;
+            self.dist[s_new * self.cap + si] = v;
+        }
+        self.dist[s_new * self.cap + s_new] = 0.0;
+        if !self.maintain {
+            self.n += 1;
+            return false;
+        }
+        for &v in dists {
+            self.add_value(v);
+        }
+        // existing rows gain one trailing logical column: strict `>` keeps
+        // an earlier tied argmax, matching row-major first-occurrence
+        for (i, &v) in dists.iter().enumerate() {
+            let si = self.slot(i);
+            if v > self.row_max[si] {
+                self.row_max[si] = v;
+                self.row_argmax[si] = s_new as u32;
+            }
+        }
+        // the new row scans its logical columns in order, diagonal last
+        // (its logical position) — NaNs never win a strict `>`
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = s_new as u32;
+        for (j, &v) in dists.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = self.slot(j) as u32;
+            }
+        }
+        if 0.0 > best {
+            best = 0.0;
+            arg = s_new as u32;
+        }
+        self.row_max[s_new] = best;
+        self.row_argmax[s_new] = arg;
+
+        let spliced = self.tree_valid && self.tie_free() && self.splice_insert(s_new, dists);
+        if !spliced {
+            self.tree_valid = false;
+        }
+        self.n += 1;
+        spliced
+    }
+
+    /// Insert splice (cycle property): under distinct weights the grown
+    /// window's MST is a subset of the old tree plus the new vertex's star
+    /// — Kruskal over those 2·w−1 candidates, O(w log w). Any edge outside
+    /// the candidate set closes a cycle whose old-tree path is strictly
+    /// lighter edge-for-edge, so it cannot be in the new MST.
+    fn splice_insert(&mut self, s_new: usize, dists: &[f64]) -> bool {
+        let n_old = self.n;
+        debug_assert_eq!(self.edges.len(), n_old.saturating_sub(1));
+        let mut cand: Vec<(u32, u32, f64)> = Vec::with_capacity(self.edges.len() + n_old);
+        cand.extend_from_slice(&self.edges);
+        for (i, &v) in dists.iter().enumerate() {
+            cand.push((self.slot(i) as u32, s_new as u32, v));
+        }
+        // tie-free certificate ⇒ distinct finite weights: weight alone is
+        // a total order, no endpoint tie-break can ever be consulted
+        cand.sort_unstable_by_key(|&(_, _, w)| key_bits(w));
+        let mut dsu = Dsu::new(n_old + 1);
+        let mut next: Vec<(u32, u32, f64)> = Vec::with_capacity(n_old);
+        for &(a, b, w) in &cand {
+            let la = self.logical(a as usize) as u32;
+            let lb = self.logical(b as usize) as u32;
+            if dsu.union(la, lb) {
+                next.push((a, b, w));
+                if next.len() == n_old {
+                    break;
+                }
+            }
+        }
+        if next.len() != n_old {
+            // the candidate set always spans; reachable only through
+            // bookkeeping corruption — decline and let the caller rebuild
+            return false;
+        }
+        self.edges = next;
+        true
+    }
+
+    /// Drop the oldest resident point. Certificate and row-max state stay
+    /// exact; when the tree is maintained the orphaned components are
+    /// stitched back with replacement edges restricted to the cut.
+    ///
+    /// # Panics
+    /// When the window is empty.
+    pub fn evict(&mut self) -> EvictInfo {
+        assert!(self.n > 0, "evict from an empty window");
+        let s0 = self.slot(0);
+        let mut info = EvictInfo {
+            spliced: false,
+            scanned: 0,
+        };
+        if !self.maintain {
+            self.start = (self.start + 1) % self.cap;
+            self.n -= 1;
+            return info;
+        }
+        for i in 1..self.n {
+            let v = self.dist[s0 * self.cap + self.slot(i)];
+            self.remove_value(v);
+        }
+        // the evicted point is logical column 0 — the earliest — so only
+        // rows whose stored argmax lived there can change (an equal value
+        // elsewhere was never the first occurrence)
+        let rescan: Vec<usize> = (1..self.n)
+            .map(|i| self.slot(i))
+            .filter(|&si| self.row_argmax[si] == s0 as u32)
+            .collect();
+        if self.tree_valid {
+            info = self.reconnect(s0);
+            if !info.spliced {
+                self.tree_valid = false;
+            }
+        }
+        self.start = (self.start + 1) % self.cap;
+        self.n -= 1;
+        for si in rescan {
+            self.rescan_row(si);
+        }
+        info
+    }
+
+    /// Recompute a slot's row max over the (already shrunken) window in
+    /// logical column order, diagonal included.
+    fn rescan_row(&mut self, si: usize) {
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = si as u32;
+        for j in 0..self.n {
+            let sj = self.slot(j);
+            let v = self.dist[si * self.cap + sj];
+            if v > best {
+                best = v;
+                arg = sj as u32;
+            }
+        }
+        self.row_max[si] = best;
+        self.row_argmax[si] = arg;
+    }
+
+    /// Evict reconnect: drop the evicted vertex's tree edges, then stitch
+    /// the orphaned components with Borůvka-style rounds — each round
+    /// scans every vertex outside the largest component for its minimum
+    /// outgoing edge. Under the tie-free certificate each such edge
+    /// crosses a cut with distinct weights, so it belongs to the unique
+    /// MST of the shrunken window; the surviving old edges do too (their
+    /// defining cuts only lose candidate edges). Worst case O(w²) when
+    /// the evicted vertex was a high-degree hub; typically the oldest
+    /// point is a leaf or near-leaf and one short round suffices.
+    fn reconnect(&mut self, s0: usize) -> EvictInfo {
+        let n_after = self.n - 1;
+        let mut edges: Vec<(u32, u32, f64)> = self
+            .edges
+            .iter()
+            .copied()
+            .filter(|&(a, b, _)| a != s0 as u32 && b != s0 as u32)
+            .collect();
+        if n_after <= 1 {
+            self.edges = edges;
+            return EvictInfo {
+                spliced: true,
+                scanned: 0,
+            };
+        }
+        // survivor logical ids in the shrunken window: old logical − 1
+        // (start has not advanced yet); slot of shrunken id u is slot(1+u)
+        let mut dsu = Dsu::new(n_after);
+        for &(a, b, _) in &edges {
+            let la = (self.logical(a as usize) - 1) as u32;
+            let lb = (self.logical(b as usize) - 1) as u32;
+            dsu.union(la, lb);
+        }
+        let mut scanned = 0u64;
+        loop {
+            let (labels, m) = component_labels(&mut dsu, n_after);
+            if m == 1 {
+                break;
+            }
+            let mut sizes = vec![0u32; m];
+            for &l in &labels {
+                sizes[l as usize] += 1;
+            }
+            let mut largest = 0usize;
+            for (l, &sz) in sizes.iter().enumerate() {
+                if sz > sizes[largest] {
+                    largest = l;
+                }
+            }
+            // min outgoing edge per non-largest component (the largest is
+            // reached through its partners' searches)
+            let mut best = vec![EdgeKey::NONE; m];
+            for (u, &lu) in labels.iter().enumerate() {
+                if lu as usize == largest {
+                    continue;
+                }
+                let su = self.slot(1 + u);
+                let row = &self.dist[su * self.cap..su * self.cap + self.cap];
+                for (v, &lv) in labels.iter().enumerate() {
+                    if lv == lu {
+                        continue;
+                    }
+                    let cand = EdgeKey {
+                        w: row[self.slot(1 + v)],
+                        a: u as u32,
+                        b: v as u32,
+                    };
+                    if cand.beats(&best[lu as usize]) {
+                        best[lu as usize] = cand;
+                    }
+                }
+                scanned += n_after as u64;
+            }
+            let mut merged = false;
+            for (l, e) in best.iter().enumerate() {
+                if l == largest || !e.is_some() {
+                    continue;
+                }
+                if dsu.union(e.a, e.b) {
+                    let sa = self.slot(1 + e.a as usize) as u32;
+                    let sb = self.slot(1 + e.b as usize) as u32;
+                    edges.push((sa, sb, e.w));
+                    merged = true;
+                }
+                // union == false is the mutual-best case: two components
+                // picked the same unordered edge, already recorded when its
+                // partner was processed. With distinct weights the
+                // best-edge graph on components is a forest, so no true
+                // cycle can arrive here; the edge-count check below still
+                // declines if the invariant is somehow violated.
+            }
+            if !merged {
+                return EvictInfo {
+                    spliced: false,
+                    scanned,
+                };
+            }
+        }
+        if edges.len() != n_after.saturating_sub(1) {
+            return EvictInfo {
+                spliced: false,
+                scanned,
+            };
+        }
+        self.edges = edges;
+        EvictInfo {
+            spliced: true,
+            scanned,
+        }
+    }
+
+    /// Materialize the window's VAT result from the maintained state:
+    /// O(w) seed scan + O(w log w) root-down replay. Returns `None` — and
+    /// the caller must run the from-scratch build — unless
+    /// [`IncrementalVat::status`] is `Ready`. When it returns `Some`, the
+    /// result is bitwise equal to the full Prim sweep over
+    /// [`IncrementalVat::to_logical_flat`] (see the module docs; pinned by
+    /// `tests/streaming_incremental.rs`).
+    pub fn try_snapshot(&mut self) -> Option<VatResult> {
+        if self.status() != IncStatus::Ready || self.n == 0 {
+            return None;
+        }
+        let n = self.n;
+        // seed: first logical row (strict `>`) whose maintained maximum
+        // beats the running best — exactly `DistanceStorage::seed_row`'s
+        // row-major first-argmax (the within-row position only matters for
+        // eviction bookkeeping; mirror duplicates resolve to the lower row
+        // under either scan)
+        let mut seed = 0usize;
+        let mut best = f64::NEG_INFINITY;
+        for i in 0..n {
+            let v = self.row_max[self.slot(i)];
+            if v > best {
+                best = v;
+                seed = i;
+            }
+        }
+        // root-down replay of the maintained tree in logical coordinates:
+        // Prim restricted to tree edges, heap-keyed by (weight, child) —
+        // under the certificate this is the full sweep's selection order
+        let edges_logical: Vec<(usize, usize, f64)> = self
+            .edges
+            .iter()
+            .map(|&(a, b, w)| (self.logical(a as usize), self.logical(b as usize), w))
+            .collect();
+        let adj = mst_adjacency(n, &edges_logical);
+        let mut order = Vec::with_capacity(n);
+        let mut mst = Vec::with_capacity(n - 1);
+        let mut selected = vec![false; n];
+        let mut pending_w = vec![f64::INFINITY; n];
+        let mut pending_from = vec![0u32; n];
+        let mut pos_of = vec![0u32; n];
+        let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::with_capacity(n);
+        selected[seed] = true;
+        order.push(seed);
+        for &(nb, w) in &adj.adj[adj.start[seed]..adj.start[seed + 1]] {
+            let nb = nb as usize;
+            pending_w[nb] = w;
+            pending_from[nb] = seed as u32;
+            heap.push(Reverse((key_bits(w), nb as u32)));
+        }
+        while order.len() < n {
+            let Some(Reverse((_, c))) = heap.pop() else {
+                // the tree did not span — stale bookkeeping; rebuild
+                self.tree_valid = false;
+                return None;
+            };
+            let c = c as usize;
+            if selected[c] {
+                continue;
+            }
+            selected[c] = true;
+            let t = order.len();
+            pos_of[c] = t as u32;
+            // the attach edge is the unique nearest prefix element, which
+            // is also `mst_from_order`'s pinned display parent
+            mst.push((pos_of[pending_from[c] as usize] as usize, t, pending_w[c]));
+            order.push(c);
+            for &(nb, w) in &adj.adj[adj.start[c]..adj.start[c + 1]] {
+                let nb = nb as usize;
+                if !selected[nb] && w < pending_w[nb] {
+                    pending_w[nb] = w;
+                    pending_from[nb] = c as u32;
+                    heap.push(Reverse((key_bits(w), nb as u32)));
+                }
+            }
+        }
+        Some(VatResult { order, mst })
+    }
+
+    /// Re-seed the maintained tree from a full build over the same window
+    /// (the verify-and-fallback recovery path): display-MST edges map
+    /// straight back to window slots. Declines — returning `false` — when
+    /// maintenance is off, the result does not cover the window, or the
+    /// certificate is dirty (a tree adopted under ties could be silently
+    /// non-unique after the next splice).
+    pub fn adopt(&mut self, v: &VatResult) -> bool {
+        if !self.maintain || v.order.len() != self.n || !self.tie_free() {
+            return false;
+        }
+        self.edges = v
+            .mst
+            .iter()
+            .map(|&(p, t, w)| (self.slot(v.order[p]) as u32, self.slot(v.order[t]) as u32, w))
+            .collect();
+        self.tree_valid = true;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::gmm;
+    use crate::dissimilarity::{DistanceMatrix, Metric};
+    use crate::vat::vat;
+
+    /// Test driver mirroring the streaming coordinator: owns the window's
+    /// points and feeds metric-evaluated distance rows.
+    struct Driver {
+        inc: IncrementalVat,
+        rows: Vec<Vec<f64>>,
+    }
+
+    impl Driver {
+        fn new(cap: usize) -> Self {
+            Self {
+                inc: IncrementalVat::new(cap, true),
+                rows: Vec::new(),
+            }
+        }
+
+        fn push(&mut self, point: &[f64]) -> bool {
+            if self.rows.len() == self.inc.capacity() {
+                self.inc.evict();
+                self.rows.remove(0);
+            }
+            let dists: Vec<f64> = self
+                .rows
+                .iter()
+                .map(|r| Metric::Euclidean.eval(r, point))
+                .collect();
+            self.rows.push(point.to_vec());
+            self.inc.push(&dists)
+        }
+
+        fn reference(&self) -> VatResult {
+            let n = self.inc.len();
+            let d = DistanceMatrix::from_flat(self.inc.to_logical_flat(), n).unwrap();
+            vat(&d)
+        }
+
+        fn assert_matches_reference(&mut self) {
+            let want = self.reference();
+            let got = self
+                .inc
+                .try_snapshot()
+                .expect("tie-free window must take the incremental route");
+            assert_eq!(got.order, want.order);
+            assert_eq!(got.mst, want.mst);
+        }
+    }
+
+    #[test]
+    fn push_only_matches_full_prim() {
+        let ds = gmm(50, 3, 3, 41);
+        let mut dr = Driver::new(64);
+        for i in 0..50 {
+            assert!(dr.push(ds.points.row(i)), "clean insert must splice");
+            if i >= 1 && i % 7 == 0 {
+                dr.assert_matches_reference();
+            }
+        }
+        dr.assert_matches_reference();
+    }
+
+    #[test]
+    fn sliding_window_matches_full_prim() {
+        let ds = gmm(90, 2, 3, 42);
+        let mut dr = Driver::new(24);
+        for i in 0..90 {
+            dr.push(ds.points.row(i));
+            if i >= 3 && i % 5 == 0 {
+                dr.assert_matches_reference();
+            }
+        }
+        assert_eq!(dr.inc.len(), 24);
+        dr.assert_matches_reference();
+    }
+
+    #[test]
+    fn matrix_ring_matches_logical_contents() {
+        let ds = gmm(40, 2, 2, 43);
+        let mut dr = Driver::new(16);
+        for i in 0..40 {
+            dr.push(ds.points.row(i));
+        }
+        let n = dr.inc.len();
+        let flat = dr.inc.to_logical_flat();
+        for i in 0..n {
+            for j in 0..n {
+                let want = Metric::Euclidean.eval(&dr.rows[i], &dr.rows[j]);
+                assert_eq!(dr.inc.get(i, j), want, "({i},{j})");
+                assert_eq!(flat[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_distances_decline_then_recover() {
+        let ds = gmm(30, 2, 2, 44);
+        let mut dr = Driver::new(8);
+        for i in 0..8 {
+            dr.push(ds.points.row(i));
+        }
+        assert_eq!(dr.inc.status(), IncStatus::Ready);
+        // a duplicate point makes mirror distances collide pairwise with
+        // the original's rows — the certificate must catch it
+        let dup = ds.points.row(7).to_vec();
+        dr.push(&dup);
+        assert_eq!(dr.inc.status(), IncStatus::Ties);
+        assert!(dr.inc.try_snapshot().is_none());
+        // slide the duplicate pair out of the window: the certificate
+        // cleans up, the tree is stale until a full build re-seeds it
+        for i in 8..16 {
+            dr.push(ds.points.row(i));
+        }
+        assert_eq!(dr.inc.status(), IncStatus::Stale);
+        let full = dr.reference();
+        assert!(dr.inc.adopt(&full));
+        assert_eq!(dr.inc.status(), IncStatus::Ready);
+        dr.assert_matches_reference();
+        // and the re-adopted tree keeps splicing on further updates
+        for i in 16..24 {
+            assert!(dr.push(ds.points.row(i)));
+        }
+        dr.assert_matches_reference();
+    }
+
+    #[test]
+    fn nan_distances_decline_then_recover() {
+        let ds = gmm(30, 2, 2, 45);
+        let mut dr = Driver::new(8);
+        for i in 0..8 {
+            dr.push(ds.points.row(i));
+        }
+        dr.push(&[f64::NAN, 0.0]);
+        assert_eq!(dr.inc.status(), IncStatus::Nan);
+        assert!(dr.inc.try_snapshot().is_none());
+        let dirty_ref = dr.reference();
+        assert!(!dr.inc.adopt(&dirty_ref), "dirty adopt must decline");
+        for i in 8..16 {
+            dr.push(ds.points.row(i));
+        }
+        assert_eq!(dr.inc.status(), IncStatus::Stale, "NaN slid out, tree stale");
+        let full = dr.reference();
+        assert!(dr.inc.adopt(&full));
+        dr.assert_matches_reference();
+    }
+
+    #[test]
+    fn evictions_report_reconnect_work() {
+        let ds = gmm(40, 2, 3, 46);
+        let mut dr = Driver::new(12);
+        for i in 0..12 {
+            dr.push(ds.points.row(i));
+        }
+        // drive evictions directly and watch the stitched tree stay exact
+        for i in 12..40 {
+            let info = dr.inc.evict();
+            dr.rows.remove(0);
+            assert!(info.spliced, "clean eviction must splice");
+            let dists: Vec<f64> = dr
+                .rows
+                .iter()
+                .map(|r| Metric::Euclidean.eval(r, ds.points.row(i)))
+                .collect();
+            dr.rows.push(ds.points.row(i).to_vec());
+            dr.inc.push(&dists);
+            dr.assert_matches_reference();
+        }
+    }
+
+    #[test]
+    fn tiny_windows_and_validation() {
+        let mut inc = IncrementalVat::new(4, true);
+        assert!(inc.is_empty());
+        assert!(inc.push(&[]), "first insert is a trivial splice");
+        let one = inc.try_snapshot().unwrap();
+        assert_eq!(one.order, vec![0]);
+        assert!(one.mst.is_empty());
+        // a zero-distance pair is a single off-diagonal value: still
+        // tie-free, and bitwise equal to the reference sweep
+        assert!(inc.push(&[0.0]));
+        assert_eq!(inc.status(), IncStatus::Ready);
+        let two = inc.try_snapshot().unwrap();
+        assert_eq!(two.order, vec![0, 1]);
+        assert_eq!(two.mst, vec![(0, 1, 0.0)]);
+        let d = DistanceMatrix::from_flat(inc.to_logical_flat(), 2).unwrap();
+        let want = vat(&d);
+        assert_eq!(two.order, want.order);
+        assert_eq!(two.mst, want.mst);
+        inc.evict();
+        inc.evict();
+        assert!(inc.is_empty());
+    }
+
+    #[test]
+    fn maintenance_off_is_a_plain_ring_matrix() {
+        let ds = gmm(20, 2, 2, 47);
+        let mut inc = IncrementalVat::new(8, false);
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for i in 0..20 {
+            if rows.len() == 8 {
+                let info = inc.evict();
+                assert!(!info.spliced);
+                rows.remove(0);
+            }
+            let p = ds.points.row(i);
+            let dists: Vec<f64> = rows.iter().map(|r| Metric::Euclidean.eval(r, p)).collect();
+            assert!(!inc.push(&dists));
+            rows.push(p.to_vec());
+        }
+        assert_eq!(inc.status(), IncStatus::Off);
+        assert!(inc.try_snapshot().is_none());
+        let n = inc.len();
+        let d = DistanceMatrix::from_flat(inc.to_logical_flat(), n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(d.get(i, j), Metric::Euclidean.eval(&rows[i], &rows[j]));
+            }
+        }
+    }
+}

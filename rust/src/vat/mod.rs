@@ -32,6 +32,7 @@
 pub mod blocks;
 pub mod boruvka;
 pub mod dendrogram;
+pub mod incremental;
 pub mod ivat;
 pub mod knn;
 pub mod prim;

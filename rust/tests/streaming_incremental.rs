@@ -1,0 +1,378 @@
+//! The incremental streaming contract, pinned as properties: after ANY
+//! sequence of pushes, evictions, and snapshots, an incremental snapshot's
+//! `(order, MST, iVAT image)` is **bitwise equal** to a from-scratch build
+//! over the same window. Every check below runs a policy-`Always` monitor
+//! and a policy-`Never` reference monitor through identical op sequences
+//! and compares snapshots bit for bit — across metrics × storage kinds ×
+//! ordering strategies × the approx tier, including NaN-poisoned and
+//! duplicate-point windows (which must fall back, not diverge). The two
+//! big generators together drive 232 randomized sequences (72 matrix +
+//! 160 free-form), each asserted in-test so shrinking the corpus fails
+//! loudly.
+
+use fast_vat::coordinator::streaming::{IncrementalPolicy, StreamingConfig, StreamingVat};
+use fast_vat::data::generators::gmm;
+use fast_vat::dissimilarity::{DistanceStorage, Metric, ShardOptions, StorageKind};
+use fast_vat::prng::Pcg32;
+use fast_vat::vat::ivat::ivat;
+use fast_vat::vat::OrderingStrategy;
+
+/// Route-positive assertions skip under the FORCE_APPROX harness (the kNN
+/// reroute has no incremental route; snapshots stay bitwise identical but
+/// the flag reads `false`).
+fn forced_approx() -> bool {
+    std::env::var_os("FAST_VAT_TEST_FORCE_APPROX").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Route-negative assertions skip under the FORCE_INCREMENTAL harness
+/// (CI's incremental leg maintains state regardless of policy).
+fn force_incremental() -> bool {
+    std::env::var_os("FAST_VAT_TEST_FORCE_INCREMENTAL").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// An `Always` monitor and its `Never` reference, driven in lock-step.
+struct Pair {
+    inc: StreamingVat,
+    full: StreamingVat,
+    checks: usize,
+}
+
+impl Pair {
+    fn new(d: usize, base: StreamingConfig) -> Pair {
+        let mk = |policy| {
+            StreamingVat::new(
+                d,
+                StreamingConfig {
+                    incremental: policy,
+                    ..base.clone()
+                },
+            )
+            .unwrap()
+        };
+        Pair {
+            inc: mk(IncrementalPolicy::Always),
+            full: mk(IncrementalPolicy::Never),
+            checks: 0,
+        }
+    }
+
+    fn push(&mut self, p: &[f64]) {
+        self.inc.push(p).unwrap();
+        self.full.push(p).unwrap();
+    }
+
+    /// Snapshot both monitors and assert the full bitwise contract.
+    fn check(&mut self, ctx: &str) {
+        if self.inc.len() < 2 {
+            return;
+        }
+        let a = self.inc.snapshot().unwrap();
+        let b = self.full.snapshot().unwrap();
+        self.checks += 1;
+        assert_eq!(a.vat.order, b.vat.order, "{ctx}: order");
+        assert_eq!(a.vat.mst.len(), b.vat.mst.len(), "{ctx}: mst arity");
+        for (e, (ea, eb)) in a.vat.mst.iter().zip(&b.vat.mst).enumerate() {
+            // bitwise, not `==`: NaN-poisoned windows must still agree
+            assert_eq!(
+                (ea.0, ea.1, ea.2.to_bits()),
+                (eb.0, eb.1, eb.2.to_bits()),
+                "{ctx}: mst edge {e}"
+            );
+        }
+        assert_eq!(a.blocks, b.blocks, "{ctx}: blocks");
+        // the iVAT image is a pure function of the MST — pin it bitwise too
+        let (ia, ib) = (ivat(&a.vat), ivat(&b.vat));
+        let n = a.vat.order.len();
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(
+                    ia.transformed.get(i, j).to_bits(),
+                    ib.transformed.get(i, j).to_bits(),
+                    "{ctx}: ivat ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+/// 3 metrics × 4 storage kinds × 2 ordering strategies, 3 randomized
+/// sequences each = 72 sequences, every one mixing pushes, evictions
+/// (window 18 ≪ stream length), and mid-stream snapshots.
+#[test]
+fn bitwise_parity_across_metrics_storages_and_orderings() {
+    let metrics = [Metric::Euclidean, Metric::Manhattan, Metric::Chebyshev];
+    let kinds = [
+        StorageKind::Dense,
+        StorageKind::Condensed,
+        StorageKind::Sharded,
+        StorageKind::ShardedSquare,
+    ];
+    let orderings = [OrderingStrategy::Prim, OrderingStrategy::Boruvka];
+    let mut sequences = 0usize;
+    let mut checks = 0usize;
+    for (mi, &metric) in metrics.iter().enumerate() {
+        for (ki, &kind) in kinds.iter().enumerate() {
+            for (oi, &ordering) in orderings.iter().enumerate() {
+                for rep in 0..3u64 {
+                    let seed = 9000 + (mi * 24 + ki * 6 + oi * 3) as u64 + rep;
+                    let ds = gmm(48, 2, 3, seed);
+                    let mut rng = Pcg32::new(seed ^ 0x5eed);
+                    let mut pair = Pair::new(
+                        2,
+                        StreamingConfig {
+                            window: 18,
+                            metric,
+                            snapshot_storage: kind,
+                            shard: ShardOptions {
+                                shard_rows: 5,
+                                cache_shards: 2,
+                                spill_dir: None,
+                            },
+                            ordering,
+                            ..Default::default()
+                        },
+                    );
+                    let ctx = format!("{metric:?}/{kind:?}/{ordering:?}/rep{rep}");
+                    for i in 0..48 {
+                        pair.push(ds.points.row(i));
+                        if rng.below(6) == 0 {
+                            pair.check(&ctx);
+                        }
+                    }
+                    pair.check(&ctx);
+                    sequences += 1;
+                    checks += pair.checks;
+                }
+            }
+        }
+    }
+    assert_eq!(sequences, 72, "matrix corpus must not shrink");
+    assert!(checks >= 400, "only {checks} snapshot comparisons ran");
+}
+
+/// 160 free-form sequences under the default (dense, `Auto`-ordering)
+/// config: random window sizes, random op mix (push-heavy with interleaved
+/// snapshot polls), streams long enough that every sequence evicts.
+#[test]
+fn randomized_mixed_sequences_stay_bitwise_equal() {
+    let mut sequences = 0usize;
+    let mut checks = 0usize;
+    for seq in 0..160u64 {
+        let mut rng = Pcg32::new(7000 + seq);
+        let window = 8 + rng.below(25) as usize;
+        let mut pair = Pair::new(
+            2,
+            StreamingConfig {
+                window,
+                ..Default::default()
+            },
+        );
+        let ops = 2 * window + rng.below(20) as usize;
+        let ctx = format!("seq{seq}/w{window}");
+        for _ in 0..ops {
+            // drifting two-cluster stream: real block structure, no
+            // duplicate points (tie-free windows exercise the incremental
+            // route rather than the fallback)
+            let c = if rng.below(3) == 0 { 6.0 } else { 0.0 };
+            pair.push(&[c + rng.normal() * 0.5, c + rng.normal() * 0.5]);
+            if rng.below(8) == 0 {
+                pair.check(&ctx);
+            }
+        }
+        pair.check(&ctx);
+        assert!(
+            pair.inc.total_seen() > window as u64,
+            "{ctx}: sequence must evict"
+        );
+        sequences += 1;
+        checks += pair.checks;
+    }
+    assert_eq!(sequences, 160, "free-form corpus must not shrink");
+    assert!(checks >= 300, "only {checks} snapshot comparisons ran");
+}
+
+/// Duplicate-point windows: resident tied distances force the ties
+/// fallback — which must be invisible in the output, recorded in the
+/// stats, and fully recovered from once the duplicates evict.
+#[test]
+fn duplicate_point_windows_fall_back_and_recover() {
+    let ds = gmm(64, 2, 2, 2026);
+    let mut pair = Pair::new(
+        2,
+        StreamingConfig {
+            window: 16,
+            ..Default::default()
+        },
+    );
+    for i in 0..20 {
+        pair.push(ds.points.row(i));
+    }
+    pair.check("pre-dup");
+    // push the same point twice in a row → an exactly-duplicated distance
+    // row is resident; also re-push an existing window member
+    let dup = ds.points.row(19).to_vec();
+    pair.push(&dup);
+    pair.check("dup resident");
+    pair.push(ds.points.row(12));
+    pair.check("two dups resident");
+    if !forced_approx() {
+        assert!(
+            pair.inc.stats().fallbacks_ties() > 0,
+            "tied windows must be recorded as ties fallbacks"
+        );
+    }
+    // slide every duplicate out, keep checking: the stale tree re-seeds
+    // through a recorded full build, then the route comes back
+    for i in 20..56 {
+        pair.push(ds.points.row(i));
+        pair.check("sliding dups out");
+    }
+    if !forced_approx() {
+        assert!(pair.inc.stats().snapshots_incremental() > 0);
+        assert!(pair.inc.stats().fallbacks_invalid() > 0, "re-seed is recorded");
+    }
+    if !force_incremental() {
+        assert_eq!(pair.full.stats().incremental_updates(), 0);
+    }
+}
+
+/// NaN-poisoned windows: a NaN coordinate poisons a full distance row; the
+/// incremental route must decline (recorded as a NaN fallback) while the
+/// snapshots stay bitwise equal to the reference — through poisoning AND
+/// after the NaN point evicts.
+#[test]
+fn nan_poisoned_windows_fall_back_and_recover() {
+    let ds = gmm(48, 2, 2, 2027);
+    let mut pair = Pair::new(
+        2,
+        StreamingConfig {
+            window: 12,
+            ..Default::default()
+        },
+    );
+    for i in 0..14 {
+        pair.push(ds.points.row(i));
+    }
+    pair.check("clean");
+    pair.push(&[f64::NAN, 0.25]);
+    pair.check("nan resident");
+    if !forced_approx() {
+        assert!(pair.inc.stats().fallbacks_nan() > 0, "NaN fallback recorded");
+    }
+    // keep streaming while poisoned, then past the eviction horizon
+    for i in 14..40 {
+        pair.push(ds.points.row(i));
+        pair.check("nan then recovery");
+    }
+    if !forced_approx() {
+        assert!(
+            pair.inc.stats().snapshots_incremental() > 0,
+            "route must recover after the NaN evicts"
+        );
+    }
+}
+
+/// The approx (`knn_k`) tier has no incremental route: the policy must be
+/// completely inert there — identical snapshots, `incremental: false`, no
+/// maintained state, and `view()` erroring on both arms.
+#[test]
+fn approx_tier_is_policy_inert() {
+    let ds = gmm(40, 2, 3, 2028);
+    let mk = |policy| {
+        StreamingVat::new(
+            2,
+            StreamingConfig {
+                window: 32,
+                knn_k: Some(31),
+                incremental: policy,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let mut a = mk(IncrementalPolicy::Always);
+    let mut b = mk(IncrementalPolicy::Never);
+    assert!(!a.incremental_route() && !b.incremental_route());
+    for i in 0..40 {
+        a.push(ds.points.row(i)).unwrap();
+        b.push(ds.points.row(i)).unwrap();
+    }
+    let (sa, sb) = (a.snapshot().unwrap(), b.snapshot().unwrap());
+    assert_eq!(sa.vat.order, sb.vat.order);
+    assert_eq!(sa.vat.mst, sb.vat.mst);
+    assert!(!sa.incremental && !sb.incremental);
+    assert!(sa.view().is_err() && sb.view().is_err());
+    assert_eq!(a.stats().incremental_updates(), 0);
+    assert_eq!(a.stats().snapshots_incremental(), 0);
+}
+
+/// Exact snapshots still hand out a working `view()` (the satellite that
+/// turned the approx panic into a `Result` must not regress the exact
+/// path), and the view shows the window's VAT image.
+#[test]
+fn exact_snapshot_views_still_work() {
+    let ds = gmm(30, 2, 2, 2029);
+    let mut sv = StreamingVat::new(
+        2,
+        StreamingConfig {
+            window: 24,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for i in 0..30 {
+        sv.push(ds.points.row(i)).unwrap();
+    }
+    let snap = sv.snapshot().unwrap();
+    let view = snap.view().unwrap();
+    let m = sv.distance_matrix().unwrap();
+    for i in 0..24 {
+        for j in 0..24 {
+            assert_eq!(
+                view.get(i, j).to_bits(),
+                m.get(snap.vat.order[i], snap.vat.order[j]).to_bits()
+            );
+        }
+    }
+}
+
+/// Counter coherence over a mixed run: totals partition exactly
+/// (cached + incremental + full = snapshots; updates ≤ pushes + evictions)
+/// and both route arms account for every poll.
+#[test]
+fn stats_partition_snapshot_routes() {
+    let ds = gmm(80, 2, 3, 2030);
+    let mut pair = Pair::new(
+        2,
+        StreamingConfig {
+            window: 20,
+            ..Default::default()
+        },
+    );
+    for i in 0..80 {
+        pair.push(ds.points.row(i));
+        if i % 7 == 0 {
+            pair.check("stats run");
+        }
+    }
+    pair.check("stats run");
+    for sv in [&pair.inc, &pair.full] {
+        let st = sv.stats();
+        assert_eq!(
+            st.snapshots(),
+            st.snapshots_cached() + st.snapshots_incremental() + st.snapshots_full(),
+            "snapshot routes must partition"
+        );
+        assert!(st.fallbacks() <= st.snapshots_full());
+        assert!(st.incremental_updates() <= st.pushes() + st.evictions());
+        assert_eq!(st.pushes(), 80);
+        assert_eq!(st.evictions(), 60);
+    }
+    if !forced_approx() {
+        assert!(pair.inc.stats().snapshots_incremental() > 0);
+        assert_eq!(pair.inc.stats().fallbacks(), 0, "clean stream: no fallbacks");
+    }
+    if !force_incremental() {
+        assert_eq!(pair.full.stats().snapshots_incremental(), 0);
+    }
+}
